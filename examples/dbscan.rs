@@ -1,0 +1,77 @@
+//! DBSCAN clustering on top of the distributed ε-graph — one of the
+//! downstream algorithms the paper's introduction motivates.
+//!
+//! DBSCAN with parameters (ε, minPts) is: core points are vertices of the
+//! ε-graph with degree ≥ minPts−1; clusters are connected components of
+//! the core-point subgraph; border points attach to any adjacent core
+//! cluster; everything else is noise.
+//!
+//! ```text
+//! cargo run --release --example dbscan
+//! ```
+
+use neargraph::dist::run_epsilon_graph;
+use neargraph::prelude::*;
+
+fn main() {
+    // Three well-separated blobs plus scattered uniform noise.
+    let mut rng = Rng::new(9);
+    let mut points = neargraph::data::synthetic::gaussian_mixture(&mut rng, 900, 3, 3, 0.02);
+    let noise = neargraph::data::synthetic::uniform(&mut rng, 100, 3, 1.0);
+    points.extend_from(&noise);
+    let n = points.len();
+
+    let eps = 0.08;
+    let min_pts = 5usize;
+
+    // Distributed ε-graph (the expensive step DBSCAN delegates to us).
+    let cfg = RunConfig { ranks: 8, algorithm: Algorithm::LandmarkColl, ..Default::default() };
+    let result = run_epsilon_graph(&points, Euclidean, eps, &cfg);
+    let g = &result.graph;
+
+    // Core points: degree ≥ minPts − 1 (the point itself counts).
+    let core: Vec<bool> = (0..n).map(|v| g.degree(v) + 1 >= min_pts).collect();
+
+    // Clusters = connected components over core-core edges.
+    let mut cluster = vec![usize::MAX; n];
+    let mut next = 0usize;
+    let mut stack = Vec::new();
+    for s in 0..n {
+        if !core[s] || cluster[s] != usize::MAX {
+            continue;
+        }
+        cluster[s] = next;
+        stack.push(s);
+        while let Some(u) = stack.pop() {
+            for &w in g.neighbors(u) {
+                let w = w as usize;
+                if core[w] && cluster[w] == usize::MAX {
+                    cluster[w] = next;
+                    stack.push(w);
+                }
+            }
+        }
+        next += 1;
+    }
+    // Border points: adopt any adjacent core point's cluster.
+    for v in 0..n {
+        if core[v] || cluster[v] != usize::MAX {
+            continue;
+        }
+        if let Some(&c) = g.neighbors(v).iter().find(|&&w| core[w as usize]) {
+            cluster[v] = cluster[c as usize];
+        }
+    }
+
+    let noise_count = cluster.iter().filter(|&&c| c == usize::MAX).count();
+    println!("DBSCAN(eps={eps}, minPts={min_pts}) over {n} points:");
+    println!("  clusters found: {next}");
+    for c in 0..next {
+        let size = cluster.iter().filter(|&&x| x == c).count();
+        println!("  cluster {c}: {size} points");
+    }
+    println!("  noise: {noise_count} points");
+    assert_eq!(next, 3, "expected the three planted blobs");
+    assert!(noise_count >= 40, "most uniform noise should be labeled noise");
+    println!("OK: recovered the planted structure");
+}

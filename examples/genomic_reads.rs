@@ -1,0 +1,71 @@
+//! Edit-distance near-neighbor graph over synthetic sequencing reads —
+//! the non-Euclidean, expensive-metric use case (genomic overlap
+//! detection) that motivates general metric support. SNN-style methods
+//! cannot run here (no coordinates, no principal components); cover trees
+//! only need the triangle inequality.
+//!
+//! ```text
+//! cargo run --release --example genomic_reads
+//! ```
+
+use neargraph::dist::run_epsilon_graph;
+use neargraph::prelude::*;
+use neargraph::util::fmt_secs;
+
+fn main() {
+    // 640 reads of length ~60 from 6 ancestor sequences, 4% mutation rate;
+    // the last 40 are held out as a "fresh batch" for the bipartite demo.
+    let mut rng = Rng::new(11);
+    let all_reads = neargraph::data::synthetic::reads(&mut rng, 640, 60, 6, 0.04);
+    let reads = all_reads.slice(0, 600);
+    let fresh = all_reads.slice(600, 640);
+    println!("{} reads, lengths {}..{}",
+        reads.len(),
+        (0..reads.len()).map(|i| reads.str_len(i)).min().unwrap(),
+        (0..reads.len()).map(|i| reads.str_len(i)).max().unwrap());
+
+    // Reads from the same ancestor differ by ~2·0.04·60 ≈ 5 edits;
+    // different ancestors are ~45 edits apart. eps = 12 separates cleanly.
+    let eps = 12.0;
+    let metric = Counted::new(Levenshtein);
+    let cfg = RunConfig { ranks: 6, algorithm: Algorithm::LandmarkRing, ..Default::default() };
+    let result = run_epsilon_graph(&reads, metric.clone(), eps, &cfg);
+
+    println!(
+        "eps-graph: {} edges, avg degree {:.1}, makespan {} ({} distance evaluations)",
+        result.graph.num_edges(),
+        result.graph.avg_degree(),
+        fmt_secs(result.makespan),
+        metric.count()
+    );
+
+    // The connected components should recover the ancestor families.
+    let (comp, ncomp) = result.graph.components();
+    let mut sizes = vec![0usize; ncomp];
+    for &c in &comp {
+        sizes[c] += 1;
+    }
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    println!("components: {ncomp}; largest: {:?}", &sizes[..sizes.len().min(8)]);
+
+    // Compare with the quadratic baseline's distance-call budget.
+    let n = reads.len() as u64;
+    let brute_calls = n * (n - 1) / 2;
+    println!(
+        "distance calls: {} vs brute-force {} ({}x saved)",
+        metric.count(),
+        brute_calls,
+        brute_calls / metric.count().max(1)
+    );
+    assert!(ncomp >= 6, "ancestor families should not merge at eps=12");
+
+    // Bonus: bipartite mode — match the held-out batch against the corpus
+    // without recomputing the corpus self-join (the serving shape).
+    let hits = neargraph::dist::run_bipartite_join(&reads, &fresh, Levenshtein, eps, &cfg);
+    println!(
+        "bipartite: {} held-out reads matched into {} (read, corpus) pairs in {}",
+        fresh.len(),
+        hits.pairs.len(),
+        fmt_secs(hits.makespan)
+    );
+}

@@ -1,0 +1,12 @@
+// standalone perf driver: heavy landmark run
+use neargraph::dist::{run_epsilon_graph, Algorithm, RunConfig};
+use neargraph::prelude::*;
+fn main() {
+    let mut rng = Rng::new(7);
+    let pts = neargraph::data::synthetic::manifold_mixture(&mut rng, 20_000, 64, 8, 20, 0.07);
+    let eps = neargraph::data::calibrate_eps(&pts, &Euclidean, 60.0, 60_000, &mut rng);
+    let cfg = RunConfig { ranks: 16, algorithm: Algorithm::LandmarkColl, ..Default::default() };
+    let t = std::time::Instant::now();
+    let res = run_epsilon_graph(&pts, Euclidean, eps, &cfg);
+    println!("edges={} makespan={:.3} wall={:.3}", res.graph.num_edges(), res.makespan, t.elapsed().as_secs_f64());
+}

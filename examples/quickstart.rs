@@ -1,0 +1,59 @@
+//! Quickstart: build an ε-graph with each of the three distributed
+//! algorithms and inspect the result.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use neargraph::dist::run_epsilon_graph;
+use neargraph::graph::DegreeStats;
+use neargraph::prelude::*;
+use neargraph::util::fmt_secs;
+
+fn main() {
+    // 1. Some clustered data: 2 000 points on a 4-dimensional manifold
+    //    embedded in 16 ambient dimensions.
+    let mut rng = Rng::new(42);
+    let points = neargraph::data::synthetic::manifold_mixture(&mut rng, 2_000, 16, 4, 8, 0.08);
+
+    // 2. Pick ε for ~25 neighbors per vertex on average.
+    let eps = neargraph::data::calibrate_eps(&points, &Euclidean, 25.0, 40_000, &mut rng);
+    println!("calibrated eps = {eps:.4}");
+
+    // 3. Build the ε-graph with each algorithm on 8 simulated MPI ranks.
+    for algorithm in Algorithm::ALL {
+        let cfg = RunConfig { ranks: 8, algorithm, ..Default::default() };
+        let result = run_epsilon_graph(&points, Euclidean, eps, &cfg);
+        let stats = DegreeStats::of(&result.graph);
+        println!(
+            "{:<14} edges={:<6} avg_degree={:<6.2} makespan={}",
+            algorithm.name(),
+            stats.num_edges,
+            stats.avg_degree,
+            fmt_secs(result.makespan)
+        );
+    }
+
+    // 4. The graph is a plain CSR: walk a neighborhood.
+    let cfg = RunConfig { ranks: 4, ..Default::default() };
+    let result = run_epsilon_graph(&points, Euclidean, eps, &cfg);
+    let v = 0;
+    println!(
+        "vertex {v} has {} neighbors; first few: {:?}",
+        result.graph.degree(v),
+        &result.graph.neighbors(v)[..result.graph.degree(v).min(8)]
+    );
+
+    // 5. Single-node usage: the cover tree directly.
+    let tree = CoverTree::build(&points, &Euclidean, &Default::default());
+    let hits = tree.query_vec(&Euclidean, points.row(0), eps);
+    println!("cover-tree query of point 0: {} hits (incl. itself)", hits.len());
+
+    // 6. The same index answers k-NN queries (extension beyond the paper's
+    //    fixed-radius scope).
+    let knn = tree.knn(&Euclidean, points.row(0), 6);
+    println!(
+        "6-NN of point 0: {:?}",
+        knn.iter().map(|&(id, d)| (id, (d * 1000.0).round() / 1000.0)).collect::<Vec<_>>()
+    );
+}

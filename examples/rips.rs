@@ -1,0 +1,79 @@
+//! Vietoris–Rips complex construction — the topological-data-analysis
+//! workload from the paper's introduction (the ε-graph is the 1-skeleton;
+//! higher simplices are cliques).
+//!
+//! Builds the ε-graph at a sweep of scales over a noisy circle and counts
+//! simplices + Betti-0 (components) per scale, watching the circle's
+//! connectivity appear.
+//!
+//! ```text
+//! cargo run --release --example rips
+//! ```
+
+use neargraph::dist::run_epsilon_graph;
+use neargraph::prelude::*;
+
+fn main() {
+    // A noisy circle in the plane.
+    let mut rng = Rng::new(5);
+    let n = 400usize;
+    let mut points = DenseMatrix::new(2);
+    for _ in 0..n {
+        let t = rng.f64() * std::f64::consts::TAU;
+        let r = 1.0 + rng.normal() * 0.03;
+        points.push(&[(r * t.cos()) as f32, (r * t.sin()) as f32]);
+    }
+
+    println!("{:<8} {:>7} {:>9} {:>11} {:>6}", "eps", "edges", "triangles", "tetrahedra", "b0");
+    for eps in [0.05f64, 0.1, 0.2, 0.4] {
+        let cfg = RunConfig { ranks: 4, algorithm: Algorithm::LandmarkRing, ..Default::default() };
+        let result = run_epsilon_graph(&points, Euclidean, eps, &cfg);
+        let g = &result.graph;
+
+        // 2-simplices: triangles = edges (u,v) with common neighbors w>v.
+        let mut triangles = 0u64;
+        let mut tetrahedra = 0u64;
+        for (u, v) in result.edges.edges().iter().copied() {
+            let common: Vec<u32> = intersect(g.neighbors(u as usize), g.neighbors(v as usize))
+                .into_iter()
+                .filter(|&w| w > v)
+                .collect();
+            triangles += common.len() as u64;
+            // 3-simplices: pairs (w1, w2) in `common` that are adjacent.
+            for (i, &w1) in common.iter().enumerate() {
+                for &w2 in &common[i + 1..] {
+                    if g.neighbors(w1 as usize).binary_search(&w2).is_ok() {
+                        tetrahedra += 1;
+                    }
+                }
+            }
+        }
+        let (_, b0) = g.components();
+        println!(
+            "{:<8} {:>7} {:>9} {:>11} {:>6}",
+            eps,
+            g.num_edges(),
+            triangles,
+            tetrahedra,
+            b0
+        );
+    }
+    println!("\nAs eps grows the noisy circle connects into a single component (b0 -> 1).");
+}
+
+fn intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}

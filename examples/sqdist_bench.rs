@@ -1,0 +1,73 @@
+// microbench for sq_dist variants
+use neargraph::util::Rng;
+use std::time::Instant;
+
+#[inline(never)]
+fn v_current(a: &[f32], b: &[f32]) -> f32 { neargraph::metric::euclidean::sq_dist(a, b) }
+
+#[inline(never)]
+fn v_8acc(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let c = n / 8;
+    let mut acc = [0.0f32; 8];
+    for k in 0..c {
+        let i = k * 8;
+        for j in 0..8 {
+            let d = a[i + j] - b[i + j];
+            acc[j] += d * d;
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in c * 8..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+#[inline(never)]
+fn v_chunks(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for j in 0..8 {
+            let d = xa[j] - xb[j];
+            acc[j] += d * d;
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+fn bench(name: &str, f: fn(&[f32], &[f32]) -> f32, a: &[Vec<f32>], iters: usize) {
+    let t = Instant::now();
+    let mut acc = 0.0f32;
+    for _ in 0..iters {
+        for i in 0..a.len() {
+            acc += f(&a[i], &a[(i + 7) % a.len()]);
+        }
+    }
+    std::hint::black_box(acc);
+    let dt = t.elapsed().as_secs_f64();
+    let dists = (iters * a.len()) as f64;
+    println!("{name:<10} {:>8.1} Mdist/s ({dt:.3}s)", dists / dt / 1e6);
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    for dim in [20usize, 55, 128, 800] {
+        println!("--- dim={dim}");
+        let pts: Vec<Vec<f32>> =
+            (0..256).map(|_| (0..dim).map(|_| rng.normal_f32()).collect()).collect();
+        let iters = (40_000_000 / (dim * 256)).max(1);
+        bench("current", v_current, &pts, iters);
+        bench("8acc", v_8acc, &pts, iters);
+        bench("chunks8", v_chunks, &pts, iters);
+    }
+}

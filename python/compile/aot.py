@@ -1,0 +1,115 @@
+"""AOT compilation driver: lower the Layer-2 graphs to HLO text artifacts.
+
+Run once by ``make artifacts``; the Rust runtime
+(`rust/src/runtime/`) loads the HLO text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+Python never runs on the request path.
+
+Artifact set (see the manifest written next to them):
+
+* ``pairwise_{metric}_d{D}``      — (TQ, D) x (TR, D) -> (TQ, TR) distance
+  tile for each supported padded dimension D;
+* ``voronoi_assign_d{D}_m{M}``   — (NB, D) x (M, D) -> cell idx + d(p, C).
+
+Shapes are fixed at lowering time; the Rust side pads queries up to the
+tile and dimension grid (zero padding is exact for both distance
+formulations).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--report]
+"""
+
+import argparse
+import os
+
+from . import model
+
+# Padded dimension grid: covers every Table-I dataset dimension
+# (20, 32, 40, 55, 78, 96, 128, 256, 800) with zero-pad to the next entry.
+DIMS = [32, 64, 128, 256, 800]
+TILE_Q = 64
+TILE_R = 64
+# Voronoi assignment block: NB points against M centers.
+VOR_BLOCK = 256
+VOR_CENTERS = 64
+
+
+def _spec(shape):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts(out_dir: str, report: bool = False) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []  # (name, kind, tq, tr, d, extra, filename)
+
+    for metric in ("euclidean", "hamming", "manhattan"):
+        fn = model.distance_tile(metric)
+        # l1 is a VPU kernel with a (TQ, TR, D) working set — smaller tiles.
+        tq = tr = TILE_Q if metric != "manhattan" else 32
+        for d in DIMS:
+            name = f"pairwise_{metric}_d{d}"
+            text = model.lower_to_hlo_text(
+                fn, (_spec((tq, d)), _spec((tr, d)))
+            )
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append((name, f"pairwise_{metric}", tq, tr, d, 0, f"{name}.hlo.txt"))
+            if report:
+                _report(name, text, tq, tr, d)
+
+    for d in DIMS:
+        name = f"voronoi_assign_d{d}_m{VOR_CENTERS}"
+        text = model.lower_to_hlo_text(
+            model.voronoi_assign, (_spec((VOR_BLOCK, d)), _spec((VOR_CENTERS, d)))
+        )
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append((name, "voronoi_assign", VOR_BLOCK, VOR_CENTERS, d, 0, f"{name}.hlo.txt"))
+
+    # Manifest: one line per artifact, whitespace-delimited.
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# name kind tile_q tile_r dim extra file\n")
+        for e in entries:
+            f.write(" ".join(str(x) for x in e) + "\n")
+    return entries
+
+
+def _report(name: str, hlo_text: str, tq: int, tr: int, d: int) -> None:
+    """L2 profile: op census of the lowered module (fusion sanity) plus the
+    L1 VMEM/MXU estimates. Used by the §Perf pass."""
+    from .kernels import pairwise
+
+    ops = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" in line and not line.startswith(("HloModule", "ENTRY", "}", "//")):
+            rhs = line.split("=", 1)[1].strip()
+            head = rhs.split("(")[0].split()
+            if not head:
+                continue
+            ops[head[-1]] = ops.get(head[-1], 0) + 1
+    dots = sum(v for k, v in ops.items() if "dot" in k)
+    print(f"[{name}] ops={sum(ops.values())} dot={dots} "
+          f"vmem={pairwise.vmem_bytes(tq, tr, d)/1024:.1f}KiB "
+          f"mxu_flop_frac={pairwise.mxu_flops_fraction(tq, tr, d):.4f}")
+    top = sorted(ops.items(), key=lambda kv: -kv[1])[:8]
+    print(f"  top ops: {top}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--report", action="store_true",
+                    help="print per-artifact op census + VMEM/MXU estimates")
+    args = ap.parse_args()
+    entries = build_artifacts(args.out_dir, report=args.report)
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernels: tiled pairwise-distance computation.
+
+The compute hot-spot of every dense phase (brute-force tiles, Voronoi
+assignment, SNN block filtering) is a ``|Q| x |R|`` distance tile. Both
+metrics reduce to one matmul plus rank-1 corrections, which is the
+MXU-friendly formulation (DESIGN.md §Hardware-Adaptation):
+
+* Euclidean:  D² = ‖q‖² + ‖r‖² − 2·QRᵀ
+* Hamming (on 0/1 float encodings): D = ‖q‖₁ + ‖r‖₁ − 2·QRᵀ
+
+The kernel grid walks (num_q_tiles, num_r_tiles); each program instance
+loads a ``(TQ, D)`` query block and a ``(TR, D)`` reference block into VMEM
+(BlockSpec), runs the ``(TQ, D) x (D, TR)`` contraction on the MXU, and
+writes one ``(TQ, TR)`` output tile. For the Table-I dimensions
+(D ≤ 800) the working set is ≤ 0.9 MB — far inside the ~16 MB VMEM.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and the interpreted lowering emits plain HLO that the
+Rust runtime's PJRT CPU client runs directly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the 8x128 TPU vector lane layout, and a
+# good MXU shape; small enough that (2·T·D + T²) floats stay in VMEM at
+# D = 800.
+TILE_Q = 64
+TILE_R = 64
+
+
+def _euclidean_kernel(q_ref, r_ref, o_ref):
+    """One (TQ, TR) Euclidean tile: norms + MXU contraction, then sqrt."""
+    q = q_ref[...]
+    r = r_ref[...]
+    qn = jnp.sum(q * q, axis=1, keepdims=True)        # (TQ, 1)
+    rn = jnp.sum(r * r, axis=1, keepdims=True).T       # (1, TR)
+    dot = jax.lax.dot_general(
+        q, r,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (TQ, TR) on the MXU
+    d2 = jnp.maximum(qn + rn - 2.0 * dot, 0.0)
+    o_ref[...] = jnp.sqrt(d2)
+
+
+def _hamming_kernel(q_ref, r_ref, o_ref):
+    """One (TQ, TR) Hamming tile on 0/1 float encodings."""
+    q = q_ref[...]
+    r = r_ref[...]
+    qn = jnp.sum(q, axis=1, keepdims=True)
+    rn = jnp.sum(r, axis=1, keepdims=True).T
+    dot = jax.lax.dot_general(
+        q, r,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = qn + rn - 2.0 * dot
+
+
+def _pairwise(kernel, q, r, tile_q, tile_r):
+    """Tiled pallas_call over the (query, reference) grid."""
+    nq, d = q.shape
+    nr, _ = r.shape
+    assert nq % tile_q == 0 and nr % tile_r == 0, (
+        f"caller must pad: got ({nq}, {nr}) for tiles ({tile_q}, {tile_r})"
+    )
+    grid = (nq // tile_q, nr // tile_r)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Query block: row-tile i, all of D (the HBM->VMEM schedule).
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            # Reference block: row-tile j, all of D.
+            pl.BlockSpec((tile_r, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_r), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, nr), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(q, r)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_r"))
+def euclidean_pairwise(q, r, tile_q=TILE_Q, tile_r=TILE_R):
+    """``(nq, nr)`` Euclidean distance matrix (inputs padded to tiles)."""
+    return _pairwise(_euclidean_kernel, q, r, tile_q, tile_r)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_r"))
+def hamming_pairwise(q, r, tile_q=TILE_Q, tile_r=TILE_R):
+    """``(nq, nr)`` Hamming distance matrix over 0/1 float encodings."""
+    return _pairwise(_hamming_kernel, q, r, tile_q, tile_r)
+
+
+def vmem_bytes(tile_q: int, tile_r: int, d: int) -> int:
+    """Estimated VMEM working set of one program instance (f32 bytes):
+    query block + reference block + output tile (+ norms)."""
+    return 4 * (tile_q * d + tile_r * d + tile_q * tile_r + tile_q + tile_r)
+
+
+def mxu_flops_fraction(tile_q: int, tile_r: int, d: int) -> float:
+    """Fraction of the tile's FLOPs that land on the MXU (the matmul)
+    versus the VPU (norms, broadcast adds, sqrt)."""
+    matmul = 2.0 * tile_q * tile_r * d
+    vpu = 2.0 * (tile_q + tile_r) * d + 4.0 * tile_q * tile_r
+    return matmul / (matmul + vpu)
+
+
+def _manhattan_kernel(q_ref, r_ref, o_ref):
+    """One (TQ, TR) Manhattan (l1) tile.
+
+    Unlike the Euclidean/Hamming kernels there is no matmul form — this is
+    a VPU (vector-unit) kernel: the (TQ, TR, D) broadcast difference is
+    reduced along D. VMEM budget forces smaller tiles (see
+    MANHATTAN_TILE): 32·32·800·4 B ≈ 3.3 MB at the largest Table-I
+    dimension, still inside the ~16 MB VMEM.
+    """
+    q = q_ref[...]
+    r = r_ref[...]
+    o_ref[...] = jnp.sum(jnp.abs(q[:, None, :] - r[None, :, :]), axis=-1)
+
+
+# l1 tiles are VPU-bound and materialize (TQ, TR, D); keep them small.
+MANHATTAN_TILE = 32
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_r"))
+def manhattan_pairwise(q, r, tile_q=MANHATTAN_TILE, tile_r=MANHATTAN_TILE):
+    """``(nq, nr)`` Manhattan distance matrix (inputs padded to tiles)."""
+    return _pairwise(_manhattan_kernel, q, r, tile_q, tile_r)

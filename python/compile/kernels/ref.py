@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Deliberately the most naive formulation (explicit broadcast differences)
+so that a bug in the matmul-form kernels cannot be mirrored here.
+"""
+
+import jax.numpy as jnp
+
+
+def euclidean_pairwise_ref(q, r):
+    """Naive ``(nq, nr)`` Euclidean distances via broadcasting."""
+    diff = q[:, None, :] - r[None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def hamming_pairwise_ref(q, r):
+    """Naive Hamming distances over 0/1 encodings (count of mismatches)."""
+    neq = jnp.abs(q[:, None, :] - r[None, :, :])
+    return jnp.sum(neq, axis=-1)
+
+
+def voronoi_assign_ref(x, c):
+    """Nearest-center index and distance for every point of ``x``."""
+    d = euclidean_pairwise_ref(x, c)
+    idx = jnp.argmin(d, axis=1)
+    return idx.astype(jnp.float32), jnp.min(d, axis=1)
+
+
+def manhattan_pairwise_ref(q, r):
+    """Naive Manhattan distances via broadcasting."""
+    return jnp.sum(jnp.abs(q[:, None, :] - r[None, :, :]), axis=-1)

@@ -1,0 +1,78 @@
+"""Layer-2 JAX compute graphs.
+
+These are the dense-phase computations the Rust coordinator offloads
+through PJRT. Each function composes the Layer-1 Pallas kernel
+(`kernels.pairwise`) with the surrounding jnp glue, and is lowered ONCE by
+`aot.py` to HLO text. Python never runs on the request path.
+
+Entry points (all shapes fixed at AOT time, callers pad):
+
+* ``distance_tile``       — the raw pairwise tile (euclidean | hamming);
+* ``neighbor_count_tile`` — distance tile + per-query ε-neighbor counts
+  (the degree histogram primitive of Table I);
+* ``voronoi_assign``      — nearest-center index and distance for a block
+  of points against the landmark set (phase 1 of Algorithm 5).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise
+
+
+def distance_tile(metric: str):
+    """Return the raw pairwise-distance function for ``metric``."""
+    if metric == "euclidean":
+        kernel = pairwise.euclidean_pairwise
+    elif metric == "hamming":
+        kernel = pairwise.hamming_pairwise
+    elif metric == "manhattan":
+        kernel = pairwise.manhattan_pairwise
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+
+    def fn(q, r):
+        return (kernel(q, r),)
+
+    return fn
+
+
+def neighbor_count_tile(metric: str):
+    """Distance tile plus per-query count of entries ≤ ε."""
+    dist = distance_tile(metric)
+
+    def fn(q, r, eps):
+        (d,) = dist(q, r)
+        counts = jnp.sum((d <= eps).astype(jnp.float32), axis=1)
+        return d, counts
+
+    return fn
+
+
+def voronoi_assign(x, c):
+    """Nearest-center assignment of points ``x`` against centers ``c``.
+
+    Returns (cell index as f32 — avoids cross-runtime i32 literal
+    handling — and the distance d(p, C)). Composes the L1 kernel.
+    """
+    d = pairwise.euclidean_pairwise(x, c)
+    idx = jnp.argmin(d, axis=1).astype(jnp.float32)
+    return idx, jnp.min(d, axis=1)
+
+
+def lower_to_hlo_text(fn, example_args):
+    """Lower a jitted function to HLO **text** — the interchange format.
+
+    jax ≥ 0.5 serializes HloModuleProto with 64-bit instruction ids which
+    the Rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+    the text parser reassigns ids and round-trips cleanly
+    (see /opt/xla-example/README.md).
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,41 @@
+"""AOT driver: artifact generation, manifest format, HLO content."""
+
+import os
+
+from compile import aot
+
+
+def test_build_artifacts_writes_manifest_and_hlo(tmp_path):
+    out = str(tmp_path / "artifacts")
+    entries = aot.build_artifacts(out)
+    # 3 metrics × 5 dims pairwise + 5 voronoi = 20 artifacts.
+    assert len(entries) == 20
+    manifest = os.path.join(out, "manifest.txt")
+    assert os.path.exists(manifest)
+
+    with open(manifest) as f:
+        lines = [l for l in f if l.strip() and not l.startswith("#")]
+    assert len(lines) == 20
+    for line in lines:
+        name, kind, tq, tr, dim, extra, fname = line.split()
+        assert kind in (
+            "pairwise_euclidean", "pairwise_hamming", "pairwise_manhattan", "voronoi_assign",
+        )
+        assert int(tq) > 0 and int(tr) > 0 and int(dim) > 0
+        path = os.path.join(out, fname)
+        assert os.path.exists(path), fname
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{fname} is not HLO text"
+        # MXU-path modules carry exactly one dot (the L2 no-recompute
+        # invariant); the Manhattan kernel is VPU-only — no dot at all.
+        dots = sum(1 for l in text.splitlines() if " dot(" in l)
+        if kind == "pairwise_manhattan":
+            assert dots == 0, f"{fname}: l1 should have no dot, found {dots}"
+        else:
+            assert dots == 1, f"{fname}: expected 1 dot, found {dots}"
+
+
+def test_dimension_grid_covers_table1():
+    table1_dims = [20, 32, 40, 55, 78, 96, 128, 256, 800]
+    for d in table1_dims:
+        assert any(pd >= d for pd in aot.DIMS), f"no padded dim for {d}"

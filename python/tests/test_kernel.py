@@ -1,0 +1,155 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps tile counts, dimensions and value distributions;
+assert_allclose against ref.py per the repo's correctness strategy.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise, ref
+
+RNG = np.random.default_rng(0xC0DE)
+
+
+def _rand(nq, nr, d, scale=1.0):
+    q = RNG.normal(size=(nq, d)).astype(np.float32) * scale
+    r = RNG.normal(size=(nr, d)).astype(np.float32) * scale
+    return q, r
+
+
+# ---------------------------------------------------------------------------
+# Euclidean kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    qt=st.integers(min_value=1, max_value=3),
+    rt=st.integers(min_value=1, max_value=3),
+    d=st.sampled_from([1, 3, 8, 32, 100]),
+    tile=st.sampled_from([8, 16, 64]),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_euclidean_matches_ref(qt, rt, d, tile, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(qt * tile, d)).astype(np.float32)
+    r = rng.normal(size=(rt * tile, d)).astype(np.float32)
+    got = np.asarray(pairwise.euclidean_pairwise(q, r, tile_q=tile, tile_r=tile))
+    want = np.asarray(ref.euclidean_pairwise_ref(q, r))
+    # atol accounts for the matmul-form cancellation on near-zero
+    # distances: |d̂² − d²| ≲ ε·(‖q‖² + ‖r‖²) ⇒ |d̂ − d| ≲ √(ε·norms).
+    norms = float(np.sqrt((q * q).sum(1).max() + (r * r).sum(1).max()))
+    atol = max(2e-4, 4.0 * np.sqrt(1.2e-7) * norms)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=atol)
+
+
+def test_euclidean_zero_distance_diagonal():
+    # The matmul formulation cancels ‖x‖² + ‖x‖² − 2‖x‖²; float32
+    # cancellation leaves O(√(ε·‖x‖²)) residue on the diagonal, so the
+    # tolerance is scaled, not exact (the Rust coordinator never relies on
+    # exact zeros — the ε filter uses the same formulation on both sides).
+    q, _ = _rand(64, 64, 16)
+    got = np.asarray(pairwise.euclidean_pairwise(q, q))
+    assert np.all(np.diag(got) <= 2e-2)
+
+
+def test_euclidean_large_values_stable():
+    q, r = _rand(64, 64, 32, scale=1e3)
+    got = np.asarray(pairwise.euclidean_pairwise(q, r))
+    want = np.asarray(ref.euclidean_pairwise_ref(q, r))
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+    assert np.all(got >= 0.0)
+
+
+def test_euclidean_zero_padding_is_exact():
+    # Zero columns (dimension padding) must not change distances.
+    q, r = _rand(64, 64, 24)
+    qp = np.zeros((64, 32), np.float32)
+    rp = np.zeros((64, 32), np.float32)
+    qp[:, :24], rp[:, :24] = q, r
+    a = np.asarray(pairwise.euclidean_pairwise(q, r))
+    b = np.asarray(pairwise.euclidean_pairwise(qp, rp))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_euclidean_rejects_unpadded_rows():
+    q, r = _rand(65, 64, 8)
+    with pytest.raises(AssertionError):
+        pairwise.euclidean_pairwise(q, r)
+
+
+# ---------------------------------------------------------------------------
+# Hamming kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    qt=st.integers(min_value=1, max_value=3),
+    rt=st.integers(min_value=1, max_value=2),
+    d=st.sampled_from([1, 16, 64, 256]),
+    tile=st.sampled_from([8, 64]),
+)
+def test_hamming_matches_ref(qt, rt, d, tile):
+    q = RNG.integers(0, 2, size=(qt * tile, d)).astype(np.float32)
+    r = RNG.integers(0, 2, size=(rt * tile, d)).astype(np.float32)
+    got = np.asarray(pairwise.hamming_pairwise(q, r, tile_q=tile, tile_r=tile))
+    want = np.asarray(ref.hamming_pairwise_ref(q, r))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-3)
+
+
+def test_hamming_is_integer_valued():
+    q = RNG.integers(0, 2, size=(64, 128)).astype(np.float32)
+    got = np.asarray(pairwise.hamming_pairwise(q, q))
+    np.testing.assert_allclose(got, np.round(got), atol=1e-3)
+    assert np.allclose(np.diag(got), 0.0, atol=1e-3)
+
+
+def test_hamming_complement_is_full_distance():
+    q = np.zeros((64, 32), np.float32)
+    r = np.ones((64, 32), np.float32)
+    got = np.asarray(pairwise.hamming_pairwise(q, r))
+    np.testing.assert_allclose(got, 32.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# VMEM / MXU estimates (DESIGN.md §Hardware-Adaptation invariants)
+# ---------------------------------------------------------------------------
+
+def test_vmem_budget_within_16mb_for_all_table1_dims():
+    for d in [20, 32, 40, 55, 78, 96, 128, 256, 800]:
+        assert pairwise.vmem_bytes(64, 64, d) < 16 * 2**20
+
+
+def test_mxu_fraction_dominates_at_realistic_dims():
+    # At D >= 32 the matmul should carry >= 90% of the FLOPs.
+    for d in [32, 128, 800]:
+        assert pairwise.mxu_flops_fraction(64, 64, d) >= 0.90
+
+
+# ---------------------------------------------------------------------------
+# Manhattan kernel (VPU path, no matmul form)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    qt=st.integers(min_value=1, max_value=3),
+    rt=st.integers(min_value=1, max_value=3),
+    d=st.sampled_from([1, 8, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_manhattan_matches_ref(qt, rt, d, seed):
+    rng = np.random.default_rng(seed)
+    tile = 32
+    q = rng.normal(size=(qt * tile, d)).astype(np.float32)
+    r = rng.normal(size=(rt * tile, d)).astype(np.float32)
+    got = np.asarray(pairwise.manhattan_pairwise(q, r))
+    want = np.asarray(ref.manhattan_pairwise_ref(q, r))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * d)
+
+
+def test_manhattan_zero_diagonal_exact():
+    # l1 has no cancellation: the diagonal is exactly zero.
+    q, _ = _rand(32, 32, 16)
+    got = np.asarray(pairwise.manhattan_pairwise(q, q))
+    assert np.all(np.diag(got) == 0.0)

@@ -1,0 +1,238 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! 1. cover-tree leaf size ζ (build vs query trade-off);
+//! 2. random vs greedy landmark selection (cell balance + makespan) —
+//!    the paper's §IV-D observation that random wins on skewed data;
+//! 3. multiway (LPT) vs cyclic cell→rank assignment (load imbalance);
+//! 4. native vs PJRT tile backend throughput on dense distance tiles;
+//! 5. batch construction (Algorithms 1–2) vs classic consecutive
+//!    insertion — the paper's §IV-A motivation;
+//! 6. batched self-join vs dual-tree self-join (extension).
+//!
+//! `NEARGRAPH_BENCH_N` (default 3000).
+
+use neargraph::bench::{fmt, timed, Table};
+use neargraph::covertree::{BuildParams, CoverTree};
+use neargraph::data::synthetic;
+use neargraph::dist::{run_epsilon_graph, Algorithm, AssignStrategy, CenterStrategy, RunConfig};
+use neargraph::graph::EdgeList;
+use neargraph::metric::engine::{NativeBackend, TileBackend};
+use neargraph::metric::Euclidean;
+use neargraph::points::PointSet;
+use neargraph::util::Rng;
+
+fn main() {
+    let n: usize = std::env::var("NEARGRAPH_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3000);
+    let mut rng = Rng::new(77);
+    let pts = synthetic::manifold_mixture(&mut rng, n, 32, 6, 12, 0.08);
+    let eps = neargraph::data::calibrate_eps(&pts, &Euclidean, 40.0, 60_000, &mut rng);
+    println!("workload: n={n}, dim=32, eps={eps:.4}");
+
+    // ------------------------------------------------------- ζ leaf size
+    let mut t1 = Table::new("Ablation 1: cover-tree leaf size ζ", &[
+        "leaf_size", "build_s", "selfjoin_s", "total_s", "nodes",
+    ]);
+    for leaf_size in [1usize, 2, 4, 8, 16, 32, 128] {
+        let params = BuildParams { leaf_size, root: 0 };
+        let (tree, build_s) = timed(|| CoverTree::build(&pts, &Euclidean, &params));
+        let (_e, join_s) = timed(|| {
+            let mut e = EdgeList::new();
+            tree.eps_self_join(&Euclidean, eps, |a, b| e.push(a, b));
+            e
+        });
+        t1.row(&[
+            leaf_size.to_string(),
+            format!("{build_s:.3}"),
+            format!("{join_s:.3}"),
+            format!("{:.3}", build_s + join_s),
+            tree.num_nodes().to_string(),
+        ]);
+    }
+    t1.print();
+    t1.write_csv("ablation_leaf_size.csv").ok();
+
+    // -------------------------------------- random vs greedy landmarks
+    // Include a heavily duplicated dataset — the case the paper says
+    // breaks greedy permutations.
+    let dup_pts = synthetic::with_duplicates(&mut rng, &pts.slice(0, n / 2), n / 2);
+    let mut t2 = Table::new("Ablation 2: landmark selection (makespan s, 8 ranks)", &[
+        "dataset", "strategy", "makespan_s", "max_cell_share",
+    ]);
+    for (dname, data) in [("clustered", &pts), ("duplicated", &dup_pts)] {
+        for (sname, strategy) in
+            [("random", CenterStrategy::Random), ("greedy", CenterStrategy::Greedy)]
+        {
+            let cfg = RunConfig {
+                ranks: 8,
+                algorithm: Algorithm::LandmarkColl,
+                centers: strategy,
+                ..Default::default()
+            };
+            let res = run_epsilon_graph(data, Euclidean, eps, &cfg);
+            // Cell-size skew proxy: the most loaded rank's share of points.
+            let max_share = max_rank_share(data, &cfg);
+            t2.row(&[
+                dname.into(),
+                sname.into(),
+                format!("{:.4}", res.makespan),
+                format!("{:.2}", max_share),
+            ]);
+            eprintln!("[ablation2] {dname}/{sname} done");
+        }
+    }
+    t2.print();
+    t2.write_csv("ablation_centers.csv").ok();
+
+    // ------------------------------------ multiway vs cyclic assignment
+    let mut t3 = Table::new("Ablation 3: cell→rank assignment (8 ranks)", &[
+        "strategy", "makespan_s",
+    ]);
+    for (sname, strategy) in
+        [("multiway(LPT)", AssignStrategy::Multiway), ("cyclic", AssignStrategy::Cyclic)]
+    {
+        let cfg = RunConfig {
+            ranks: 8,
+            algorithm: Algorithm::LandmarkColl,
+            assignment: strategy,
+            ..Default::default()
+        };
+        let res = run_epsilon_graph(&dup_pts, Euclidean, eps, &cfg);
+        t3.row(&[sname.into(), format!("{:.4}", res.makespan)]);
+    }
+    t3.print();
+    t3.write_csv("ablation_assignment.csv").ok();
+
+    // --------------------------------------- native vs PJRT tile engine
+    let mut t4 = Table::new("Ablation 4: dense tile backend (512x512x32d tiles)", &[
+        "kernel", "backend", "tile_s", "Mdists/s",
+    ]);
+    let q = pts.slice(0, 512);
+    let r = pts.slice(512, 1024);
+    let (_, native_s) = timed(|| NativeBackend.euclidean_tile(&q, &r));
+    t4.row(&[
+        "euclidean".into(),
+        "native".into(),
+        format!("{native_s:.4}"),
+        fmt(512.0 * 512.0 / native_s / 1e6),
+    ]);
+    let (_, l1_native_s) = timed(|| NativeBackend.manhattan_tile(&q, &r));
+    t4.row(&[
+        "manhattan".into(),
+        "native".into(),
+        format!("{l1_native_s:.4}"),
+        fmt(512.0 * 512.0 / l1_native_s / 1e6),
+    ]);
+    match neargraph::runtime::PjrtEngine::load_default() {
+        Some(engine) => {
+            let _ = engine.euclidean_tile(&q, &r); // warm the compile cache
+            let (_, pjrt_s) = timed(|| engine.euclidean_tile(&q, &r));
+            t4.row(&[
+                "euclidean".into(),
+                "pjrt (interpret)".into(),
+                format!("{pjrt_s:.4}"),
+                fmt(512.0 * 512.0 / pjrt_s / 1e6),
+            ]);
+            let _ = engine.manhattan_tile(&q, &r);
+            let (_, l1_pjrt_s) = timed(|| engine.manhattan_tile(&q, &r));
+            t4.row(&[
+                "manhattan".into(),
+                "pjrt (interpret)".into(),
+                format!("{l1_pjrt_s:.4}"),
+                fmt(512.0 * 512.0 / l1_pjrt_s / 1e6),
+            ]);
+        }
+        None => eprintln!("[ablation4] PJRT skipped: artifacts missing"),
+    }
+    t4.print();
+    t4.write_csv("ablation_backend.csv").ok();
+
+    // ------------------------- batch vs insertion construction (§IV-A)
+    use neargraph::covertree::InsertCoverTree;
+    use neargraph::metric::Counted;
+    let mut t5 = Table::new("Ablation 5: batch vs consecutive-insertion cover tree", &[
+        "builder", "build_s", "query50_s", "query_dists",
+    ]);
+    {
+        let counted = Counted::new(Euclidean);
+        let (batch, bs) = timed(|| {
+            CoverTree::build(&pts, &counted, &BuildParams::default())
+        });
+        counted.counter().reset();
+        let (_, qs) = timed(|| {
+            let mut out = Vec::new();
+            for qi in 0..50 {
+                out.clear();
+                batch.query(&counted, pts.row(qi), eps, &mut out);
+            }
+        });
+        t5.row(&["batch (Alg 1-2)".into(), format!("{bs:.3}"), format!("{qs:.4}"),
+                 counted.count().to_string()]);
+    }
+    {
+        let counted = Counted::new(Euclidean);
+        let (ins, bs) = timed(|| InsertCoverTree::build(&pts, &counted));
+        counted.counter().reset();
+        let (_, qs) = timed(|| {
+            let mut out = Vec::new();
+            for qi in 0..50 {
+                out.clear();
+                ins.query(&counted, pts.row(qi), eps, &mut out);
+            }
+        });
+        t5.row(&["insertion (BKL'06)".into(), format!("{bs:.3}"), format!("{qs:.4}"),
+                 counted.count().to_string()]);
+    }
+    t5.print();
+    t5.write_csv("ablation_builder.csv").ok();
+
+    // ----------------------------- batched vs dual-tree self-join
+    let mut t6 = Table::new("Ablation 6: self-join strategy", &[
+        "strategy", "selfjoin_s", "dists",
+    ]);
+    let tree = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+    {
+        let counted = Counted::new(Euclidean);
+        let (_n, s) = timed(|| {
+            let mut n = 0u64;
+            tree.eps_self_join(&counted, eps, |_, _| n += 1);
+            n
+        });
+        t6.row(&["batched queries".into(), format!("{s:.3}"), counted.count().to_string()]);
+    }
+    {
+        let counted = Counted::new(Euclidean);
+        let (_n, s) = timed(|| {
+            let mut n = 0u64;
+            tree.eps_self_join_dual(&counted, eps, |_, _| n += 1);
+            n
+        });
+        t6.row(&["dual-tree".into(), format!("{s:.3}"), counted.count().to_string()]);
+    }
+    t6.print();
+    t6.write_csv("ablation_selfjoin.csv").ok();
+}
+
+/// Share of all points landing on the most-loaded rank under the
+/// config's landmark partitioning (recomputed sequentially for clarity).
+fn max_rank_share(pts: &neargraph::points::DenseMatrix, cfg: &RunConfig) -> f64 {
+    use neargraph::voronoi;
+    let n = pts.len();
+    let m = cfg.resolved_centers(n);
+    let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+    let centers_idx = match cfg.centers {
+        CenterStrategy::Random => rng.sample_indices(n, m),
+        CenterStrategy::Greedy => voronoi::greedy_permutation(pts, &Euclidean, m, 0),
+    };
+    let centers = pts.gather(&centers_idx);
+    let assignment = voronoi::assign_to_centers(pts, &centers, &Euclidean);
+    let sizes = voronoi::cell_sizes(&assignment, centers.len());
+    let f = voronoi::multiway_partition(&sizes, cfg.ranks);
+    let mut loads = vec![0u64; cfg.ranks];
+    for (c, &rank) in f.iter().enumerate() {
+        loads[rank] += sizes[c];
+    }
+    *loads.iter().max().unwrap() as f64 / n as f64
+}

@@ -1,0 +1,75 @@
+//! Cover-tree microbenchmark — the paper's §V-D claim that the
+//! shared-memory batch cover tree is competitive with state-of-the-art
+//! fixed-radius search.
+//!
+//! Reports, per dataset analog: batch build time, batch self-join query
+//! time, distance evaluations per point for build and query, and the
+//! distance-call saving versus brute force (the n²/2 floor).
+//!
+//! `NEARGRAPH_BENCH_N` (default 4000).
+
+use neargraph::bench::{build_workload, fmt, timed, Table, Workload};
+use neargraph::covertree::{BuildParams, CoverTree};
+use neargraph::data::registry::TABLE1;
+use neargraph::graph::EdgeList;
+use neargraph::metric::{Counted, Euclidean, Hamming};
+
+fn main() {
+    let n: usize = std::env::var("NEARGRAPH_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4000);
+    let params = BuildParams::default();
+
+    let mut table = Table::new(
+        &format!("Cover tree micro (n={n})"),
+        &[
+            "dataset", "eps", "build_s", "selfjoin_s", "build_dists/pt", "query_dists/pt",
+            "brute_saving",
+        ],
+    );
+    for spec in &TABLE1 {
+        let w = build_workload(spec, n, 6);
+        let eps = w.eps_sweep()[1];
+        let (build_s, join_s, build_d, query_d) = match &w {
+            Workload::Dense { pts, .. } => {
+                let counted = Counted::new(Euclidean);
+                let (tree, build_s) = timed(|| CoverTree::build(pts, &counted, &params));
+                let build_d = counted.count();
+                counted.counter().reset();
+                let (_edges, join_s) = timed(|| {
+                    let mut e = EdgeList::new();
+                    tree.eps_self_join(&counted, eps, |a, b| e.push(a, b));
+                    e
+                });
+                (build_s, join_s, build_d, counted.count())
+            }
+            Workload::Hamming { codes, .. } => {
+                let counted = Counted::new(Hamming);
+                let (tree, build_s) = timed(|| CoverTree::build(codes, &counted, &params));
+                let build_d = counted.count();
+                counted.counter().reset();
+                let (_edges, join_s) = timed(|| {
+                    let mut e = EdgeList::new();
+                    tree.eps_self_join(&counted, eps, |a, b| e.push(a, b));
+                    e
+                });
+                (build_s, join_s, build_d, counted.count())
+            }
+        };
+        let total = build_d + query_d;
+        let brute = (n as u64) * (n as u64 - 1) / 2;
+        table.row(&[
+            spec.name.into(),
+            fmt(eps),
+            format!("{build_s:.3}"),
+            format!("{join_s:.3}"),
+            format!("{:.1}", build_d as f64 / n as f64),
+            format!("{:.1}", query_d as f64 / n as f64),
+            format!("{:.1}x", brute as f64 / total as f64),
+        ]);
+        eprintln!("[covertree] {} done", spec.name);
+    }
+    table.print();
+    table.write_csv("covertree_micro.csv").ok();
+}

@@ -1,0 +1,62 @@
+//! Figure 2 — strong scaling of the three algorithms across datasets.
+//!
+//! For every Table-I analog and the middle ε of its sweep, run all three
+//! algorithms over a power-of-two rank sweep and report the simulated
+//! makespan. Shapes to match the paper: all algorithms scale; landmark-coll
+//! is strong at low/medium ranks but its alltoallv α·(P−1) term bends the
+//! curve upward at high ranks; landmark-ring flattens that; systolic
+//! catches up as P grows.
+//!
+//! Env knobs: `NEARGRAPH_BENCH_N` (default 4000 points),
+//! `NEARGRAPH_BENCH_MAXRANKS` (default 128),
+//! `NEARGRAPH_BENCH_DATASETS` (comma list; default all nine).
+
+use neargraph::bench::{build_workload, rank_sweep, Table, Workload};
+use neargraph::data::registry::TABLE1;
+use neargraph::dist::{run_epsilon_graph, Algorithm, RunConfig};
+use neargraph::metric::{Euclidean, Hamming};
+
+fn main() {
+    let n: usize = env_usize("NEARGRAPH_BENCH_N", 4000);
+    let max_ranks: usize = env_usize("NEARGRAPH_BENCH_MAXRANKS", 128);
+    let filter: Option<Vec<String>> = std::env::var("NEARGRAPH_BENCH_DATASETS")
+        .ok()
+        .map(|v| v.split(',').map(str::to_string).collect());
+
+    let mut table = Table::new(
+        &format!("Figure 2 analog: strong scaling (n={n}, makespan seconds)"),
+        &["dataset", "eps", "ranks", "systolic-ring", "landmark-coll", "landmark-ring"],
+    );
+    for spec in &TABLE1 {
+        if let Some(f) = &filter {
+            if !f.iter().any(|x| x == spec.name) {
+                continue;
+            }
+        }
+        let w = build_workload(spec, n, 2);
+        let eps = w.eps_sweep()[1];
+        for ranks in rank_sweep(max_ranks) {
+            let mut cells = vec![spec.name.to_string(), format!("{eps:.4}"), ranks.to_string()];
+            for algorithm in Algorithm::ALL {
+                let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+                let makespan = match &w {
+                    Workload::Dense { pts, .. } => {
+                        run_epsilon_graph(pts, Euclidean, eps, &cfg).makespan
+                    }
+                    Workload::Hamming { codes, .. } => {
+                        run_epsilon_graph(codes, Hamming, eps, &cfg).makespan
+                    }
+                };
+                cells.push(format!("{makespan:.6}"));
+            }
+            table.row(&cells);
+            eprintln!("[fig2] {} ranks={ranks} done", spec.name);
+        }
+    }
+    table.print();
+    table.write_csv("fig2_strong_scaling.csv").ok();
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}

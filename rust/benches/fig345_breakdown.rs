@@ -1,0 +1,101 @@
+//! Figures 3, 4, 5 — landmark algorithm phase breakdowns (covtype,
+//! twitter, sift analogs).
+//!
+//! For each dataset and rank count, report per-phase compute and
+//! communication time for landmark-coll (top rows of the paper's figures)
+//! and landmark-ring (bottom rows). The shape to match: the ghost phase's
+//! *communication* share grows with rank count under the collective
+//! regime and stays flat under the ring regime. Also reports per-rank
+//! imbalance (max/mean of total time), visible in the paper as ragged
+//! bars.
+//!
+//! Env knobs: `NEARGRAPH_BENCH_N` (default 2500),
+//! `NEARGRAPH_BENCH_RANKSETS` (default "8,32,128").
+
+use neargraph::bench::{build_workload, Table, Workload};
+use neargraph::data::registry::DatasetSpec;
+use neargraph::dist::{run_epsilon_graph, Algorithm, RunConfig, RunResult};
+use neargraph::metric::Euclidean;
+
+const PHASES: [&str; 3] = ["partition", "tree", "ghost"];
+
+fn main() {
+    let n: usize = std::env::var("NEARGRAPH_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2500);
+    let ranksets: Vec<usize> = std::env::var("NEARGRAPH_BENCH_RANKSETS")
+        .unwrap_or_else(|_| "8,32,128".into())
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+
+    let mut table = Table::new(
+        &format!("Figures 3-5 analog: landmark phase breakdown (n={n}, seconds)"),
+        &[
+            "dataset",
+            "algorithm",
+            "ranks",
+            "partition(comp+comm)",
+            "tree(comp+comm)",
+            "ghost(comp+comm)",
+            "ghost_comm_share",
+            "imbalance(max/mean)",
+        ],
+    );
+
+    for name in ["covtype", "twitter", "sift"] {
+        let spec = DatasetSpec::by_name(name).unwrap();
+        let w = build_workload(spec, n, 3);
+        let Workload::Dense { pts, eps, .. } = &w else { unreachable!() };
+        let eps = eps[1];
+        for &ranks in &ranksets {
+            for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
+                let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+                let res = run_epsilon_graph(pts, Euclidean, eps, &cfg);
+                let mut cells =
+                    vec![name.to_string(), algorithm.name().into(), ranks.to_string()];
+                let mut ghost_comm = 0.0;
+                let mut ghost_total = 0.0;
+                for phase in PHASES {
+                    let (c, m) = phase_avg(&res, phase);
+                    cells.push(format!("{c:.4}+{m:.4}"));
+                    if phase == "ghost" {
+                        ghost_comm = m;
+                        ghost_total = c + m;
+                    }
+                }
+                cells.push(format!("{:.1}%", 100.0 * ghost_comm / ghost_total.max(1e-12)));
+                cells.push(format!("{:.2}", imbalance(&res)));
+                table.row(&cells);
+                eprintln!("[fig345] {name} {} ranks={ranks} done", algorithm.name());
+            }
+        }
+    }
+    table.print();
+    table.write_csv("fig345_breakdown.csv").ok();
+    println!("\nShape check: ghost_comm_share grows with ranks for landmark-coll");
+    println!("(the alltoallv α·(P−1) term) and stays flat for landmark-ring.");
+}
+
+/// Mean over ranks of a phase's (compute, comm).
+fn phase_avg(res: &RunResult, phase: &str) -> (f64, f64) {
+    let mut c = 0.0;
+    let mut m = 0.0;
+    for r in &res.ranks {
+        if let Some(p) = r.stats.phases().get(phase) {
+            c += p.compute;
+            m += p.comm;
+        }
+    }
+    let k = res.ranks.len() as f64;
+    (c / k, m / k)
+}
+
+/// Max/mean of per-rank total virtual time (load imbalance).
+fn imbalance(res: &RunResult) -> f64 {
+    let times: Vec<f64> = res.ranks.iter().map(|r| r.virtual_time).collect();
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    max / mean.max(1e-12)
+}

@@ -1,0 +1,100 @@
+//! Comparator baselines: brute-force all-pairs and SNN (Chen & Güttel
+//! 2024), the state-of-the-art exact fixed-radius method the paper's
+//! Tables II–III compare against.
+
+pub mod snn;
+
+pub use snn::{Snn, SnnParams};
+
+use crate::graph::EdgeList;
+use crate::metric::engine::{tile_neighbors, TileBackend};
+use crate::metric::Metric;
+use crate::points::{DenseMatrix, PointSet};
+
+/// Brute-force ε-graph: all `n(n−1)/2` distances through the scalar metric.
+/// The ground truth for every correctness test.
+pub fn brute_force_edges<P: PointSet, M: Metric<P>>(pts: &P, metric: &M, eps: f64) -> EdgeList {
+    let n = pts.len();
+    let mut edges = EdgeList::new();
+    for i in 0..n {
+        let pi = pts.point(i);
+        for j in i + 1..n {
+            if metric.dist(pi, pts.point(j)) <= eps {
+                edges.push(i as u32, j as u32);
+            }
+        }
+    }
+    edges.canonicalize();
+    edges
+}
+
+/// Brute-force ε-graph through a dense tile backend (native loops or the
+/// AOT-compiled PJRT kernel), processing `tile × tile` blocks — the
+/// compute-bound regime where "one can do no better than parallelizing all
+/// pairwise distances".
+pub fn brute_force_tiled(
+    pts: &DenseMatrix,
+    backend: &dyn TileBackend,
+    eps: f64,
+    tile: usize,
+) -> EdgeList {
+    assert!(tile > 0);
+    let n = pts.len();
+    let mut edges = EdgeList::new();
+    let mut bi = 0;
+    while bi < n {
+        let qi_hi = (bi + tile).min(n);
+        let q = pts.slice(bi, qi_hi);
+        let mut bj = bi;
+        while bj < n {
+            let rj_hi = (bj + tile).min(n);
+            let r = pts.slice(bj, rj_hi);
+            let t = backend.euclidean_tile(&q, &r);
+            for (qi, rj) in tile_neighbors(&t, q.len(), r.len(), eps) {
+                let u = (bi + qi) as u32;
+                let v = (bj + rj) as u32;
+                if u < v {
+                    edges.push(u, v);
+                }
+            }
+            bj = rj_hi;
+        }
+        bi = qi_hi;
+    }
+    edges.canonicalize();
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::engine::NativeBackend;
+    use crate::metric::Euclidean;
+    use crate::util::Rng;
+
+    #[test]
+    fn brute_force_simple_triangle() {
+        let pts = DenseMatrix::from_flat(1, vec![0.0, 1.0, 3.0]);
+        let e = brute_force_edges(&pts, &Euclidean, 1.5);
+        assert_eq!(e.edges(), &[(0, 1)]);
+        let e2 = brute_force_edges(&pts, &Euclidean, 2.0);
+        assert_eq!(e2.edges(), &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn tiled_matches_scalar_across_tile_sizes() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(110), 90, 4, 4, 0.2);
+        let want = brute_force_edges(&pts, &Euclidean, 0.4);
+        for tile in [1usize, 7, 32, 200] {
+            let got = brute_force_tiled(&pts, &NativeBackend, 0.4, tile);
+            assert_eq!(got.edges(), want.edges(), "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let pts = DenseMatrix::new(3);
+        assert!(brute_force_edges(&pts, &Euclidean, 1.0).is_empty());
+        assert!(brute_force_tiled(&pts, &NativeBackend, 1.0, 16).is_empty());
+    }
+}

@@ -1,0 +1,306 @@
+//! SNN — "fast and exact fixed-radius nearest neighbor search based on
+//! sorting" (Chen & Güttel, 2024), reimplemented in Rust as the paper's
+//! SOTA sequential comparator (Tables II–III).
+//!
+//! Indexing: project every point onto the first principal component
+//! (computed by power iteration on the centered data — the "thin SVD" of
+//! the original in O(n·d) per iteration), sort by score. Querying: since
+//! `|s_p − s_q| = |⟨p − q, v⟩| ≤ ‖p − q‖`, any ε-neighbor of `q` lies in
+//! the score window `[s_q − ε, s_q + ε]`; binary-search the window and
+//! filter it with exact (blocked, matmul-form) distance evaluations.
+//! SNN requires Euclidean geometry — exactly the flexibility gap versus
+//! cover trees that the paper highlights.
+
+use crate::graph::EdgeList;
+use crate::points::{DenseMatrix, PointSet};
+use crate::util::Rng;
+
+/// SNN build parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SnnParams {
+    /// Power-iteration sweeps for the principal component.
+    pub power_iters: usize,
+    /// Convergence tolerance on the Rayleigh quotient.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for SnnParams {
+    fn default() -> Self {
+        SnnParams { power_iters: 64, tol: 1e-9, seed: 1 }
+    }
+}
+
+/// SNN index over a Euclidean point set.
+pub struct Snn {
+    pts: DenseMatrix,
+    /// Point indices sorted by principal score.
+    order: Vec<u32>,
+    /// Scores aligned with `order` (ascending).
+    scores: Vec<f32>,
+    /// Squared norms aligned with `order`.
+    sq_norms: Vec<f32>,
+    /// The principal direction (unit vector).
+    component: Vec<f32>,
+    /// Data mean (scores are computed on centered data).
+    mean: Vec<f32>,
+}
+
+impl Snn {
+    /// Build the index (the paper's "indexing phase").
+    pub fn build(pts: &DenseMatrix, params: &SnnParams) -> Self {
+        let n = pts.len();
+        let d = pts.dim();
+        // Mean.
+        let mut mean = vec![0.0f32; d];
+        for row in pts.rows() {
+            for (m, &x) in mean.iter_mut().zip(row) {
+                *m += x;
+            }
+        }
+        if n > 0 {
+            for m in mean.iter_mut() {
+                *m /= n as f32;
+            }
+        }
+        // Power iteration for the top principal direction:
+        // v ← normalize(Xᶜᵀ (Xᶜ v)), Xᶜ the centered data.
+        let mut rng = Rng::new(params.seed);
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut prev_lambda = f64::NEG_INFINITY;
+        for _ in 0..params.power_iters {
+            let mut w = vec![0.0f64; d];
+            for row in pts.rows() {
+                // t = ⟨xᶜ, v⟩
+                let mut t = 0.0f64;
+                for k in 0..d {
+                    t += (row[k] - mean[k]) as f64 * v[k];
+                }
+                for k in 0..d {
+                    w[k] += t * (row[k] - mean[k]) as f64;
+                }
+            }
+            let lambda = normalize(&mut w);
+            v = w;
+            if (lambda - prev_lambda).abs() <= params.tol * lambda.abs().max(1.0) {
+                break;
+            }
+            prev_lambda = lambda;
+        }
+        let component: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+
+        // Scores, sort order.
+        let mut scored: Vec<(f32, u32)> = (0..n)
+            .map(|i| {
+                let row = pts.row(i);
+                let mut s = 0.0f32;
+                for k in 0..d {
+                    s += (row[k] - mean[k]) * component[k];
+                }
+                (s, i as u32)
+            })
+            .collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let order: Vec<u32> = scored.iter().map(|&(_, i)| i).collect();
+        let scores: Vec<f32> = scored.iter().map(|&(s, _)| s).collect();
+        let sorted_pts = pts.gather(&order.iter().map(|&i| i as usize).collect::<Vec<_>>());
+        let sq_norms = sorted_pts.row_sq_norms();
+        Snn { pts: sorted_pts, order, scores, sq_norms, component, mean }
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Principal score of an arbitrary query vector.
+    pub fn score(&self, q: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for k in 0..q.len() {
+            s += (q[k] - self.mean[k]) * self.component[k];
+        }
+        s
+    }
+
+    /// All indexed points within `eps` of `q` (original point indices).
+    pub fn query(&self, q: &[f32], eps: f64) -> Vec<u32> {
+        let eps = eps as f32;
+        let s = self.score(q);
+        let lo = lower_bound(&self.scores, s - eps);
+        let hi = upper_bound(&self.scores, s + eps);
+        let qn: f32 = q.iter().map(|x| x * x).sum();
+        let eps2 = eps * eps;
+        let mut out = Vec::new();
+        for k in lo..hi {
+            let row = self.pts.row(k);
+            let mut dot = 0.0f32;
+            for j in 0..row.len() {
+                dot += row[j] * q[j];
+            }
+            let d2 = (qn + self.sq_norms[k] - 2.0 * dot).max(0.0);
+            if d2 <= eps2 {
+                out.push(self.order[k]);
+            }
+        }
+        out
+    }
+
+    /// Build the full ε-graph by the sorted-window sweep (the paper's
+    /// "batch query mode"): for each point, scan forward while the score
+    /// gap is ≤ ε and filter exactly.
+    pub fn self_join(&self, eps: f64) -> EdgeList {
+        let eps = eps as f32;
+        let eps2 = eps * eps;
+        let n = self.len();
+        let d = if n > 0 { self.pts.dim() } else { 0 };
+        let mut edges = EdgeList::with_capacity(n);
+        for i in 0..n {
+            let si = self.scores[i];
+            let ri = self.pts.row(i);
+            let ni = self.sq_norms[i];
+            for j in i + 1..n {
+                if self.scores[j] - si > eps {
+                    break;
+                }
+                let rj = self.pts.row(j);
+                let mut dot = 0.0f32;
+                for k in 0..d {
+                    dot += ri[k] * rj[k];
+                }
+                let d2 = (ni + self.sq_norms[j] - 2.0 * dot).max(0.0);
+                if d2 <= eps2 {
+                    edges.push(self.order[i], self.order[j]);
+                }
+            }
+        }
+        edges.canonicalize();
+        edges
+    }
+
+    /// Fraction of the dataset a query at `q` must exactly check — the
+    /// filter's selectivity (diagnostics for the bench tables).
+    pub fn window_fraction(&self, q: &[f32], eps: f64) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let s = self.score(q);
+        let lo = lower_bound(&self.scores, s - eps as f32);
+        let hi = upper_bound(&self.scores, s + eps as f32);
+        (hi - lo) as f64 / self.len() as f64
+    }
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+fn lower_bound(xs: &[f32], v: f32) -> usize {
+    xs.partition_point(|&x| x < v)
+}
+
+fn upper_bound(xs: &[f32], v: f32) -> usize {
+    xs.partition_point(|&x| x <= v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::brute_force_edges;
+    use crate::metric::{Euclidean, Metric};
+    use crate::util::Rng;
+
+    fn random_pts(seed: u64, n: usize, d: usize) -> DenseMatrix {
+        crate::data::synthetic::gaussian_mixture(&mut Rng::new(seed), n, d, 4, 0.15)
+    }
+
+    #[test]
+    fn query_matches_brute_force() {
+        let pts = random_pts(120, 150, 6);
+        let snn = Snn::build(&pts, &SnnParams::default());
+        for eps in [0.05, 0.2, 0.6] {
+            for qi in 0..20 {
+                let mut got = snn.query(pts.row(qi), eps);
+                got.sort_unstable();
+                let want: Vec<u32> = (0..pts.len() as u32)
+                    .filter(|&j| Euclidean.dist_ij(&pts, qi, j as usize) <= eps)
+                    .collect();
+                assert_eq!(got, want, "eps={eps} qi={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn self_join_matches_brute_force() {
+        let pts = random_pts(121, 180, 5);
+        let snn = Snn::build(&pts, &SnnParams::default());
+        for eps in [0.1, 0.3] {
+            let got = snn.self_join(eps);
+            let want = brute_force_edges(&pts, &Euclidean, eps);
+            assert_eq!(got.edges(), want.edges(), "eps={eps}");
+        }
+    }
+
+    #[test]
+    fn window_is_selective_on_elongated_data() {
+        // Data stretched along one axis: the principal component captures
+        // it and windows should be narrow.
+        let mut pts = DenseMatrix::new(3);
+        let mut rng = Rng::new(122);
+        for _ in 0..500 {
+            pts.push(&[rng.normal_f32() * 50.0, rng.normal_f32(), rng.normal_f32()]);
+        }
+        let snn = Snn::build(&pts, &SnnParams::default());
+        let frac = snn.window_fraction(pts.row(0), 0.5);
+        assert!(frac < 0.2, "window fraction {frac} not selective");
+    }
+
+    #[test]
+    fn principal_component_is_dominant_axis() {
+        let mut pts = DenseMatrix::new(2);
+        let mut rng = Rng::new(123);
+        for _ in 0..300 {
+            pts.push(&[rng.normal_f32() * 10.0, rng.normal_f32() * 0.1]);
+        }
+        let snn = Snn::build(&pts, &SnnParams::default());
+        assert!(
+            snn.component[0].abs() > 0.99,
+            "component {:?} should align with x-axis",
+            snn.component
+        );
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty = DenseMatrix::new(4);
+        let snn = Snn::build(&empty, &SnnParams::default());
+        assert!(snn.is_empty());
+        assert!(snn.self_join(1.0).is_empty());
+
+        let one = DenseMatrix::from_flat(2, vec![1.0, 2.0]);
+        let snn1 = Snn::build(&one, &SnnParams::default());
+        assert_eq!(snn1.query(&[1.0, 2.0], 0.1), vec![0]);
+        assert!(snn1.self_join(1.0).is_empty());
+    }
+
+    #[test]
+    fn duplicates_all_reported() {
+        let mut pts = DenseMatrix::new(2);
+        for _ in 0..5 {
+            pts.push(&[3.0, 4.0]);
+        }
+        let snn = Snn::build(&pts, &SnnParams::default());
+        let got = snn.self_join(0.0);
+        assert_eq!(got.edges().len(), 10); // C(5,2) zero-distance pairs
+    }
+}

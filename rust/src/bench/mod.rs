@@ -1,0 +1,206 @@
+//! Shared bench harness: workload construction from the Table-I registry,
+//! ε calibration, timing helpers, and table/CSV emitters used by every
+//! `cargo bench` target (the benches are plain `harness = false` binaries —
+//! no criterion offline).
+
+use crate::data::registry::{DatasetSpec, Generated};
+use crate::data::{calibrate_eps, registry};
+use crate::metric::{Euclidean, Hamming};
+use crate::points::{DenseMatrix, HammingCodes};
+use crate::util::{Rng, Stopwatch};
+use std::io::Write;
+
+/// A materialized workload: a dataset analog plus its calibrated ε sweep.
+pub enum Workload {
+    Dense { spec: &'static DatasetSpec, pts: DenseMatrix, eps: Vec<f64> },
+    Hamming { spec: &'static DatasetSpec, codes: HammingCodes, eps: Vec<f64> },
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Dense { spec, .. } | Workload::Hamming { spec, .. } => spec.name,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Workload::Dense { pts, .. } => crate::points::PointSet::len(pts),
+            Workload::Hamming { codes, .. } => crate::points::PointSet::len(codes),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn eps_sweep(&self) -> &[f64] {
+        match self {
+            Workload::Dense { eps, .. } | Workload::Hamming { eps, .. } => eps,
+        }
+    }
+}
+
+/// Build the workload for a Table-I dataset analog at `n` points, with ε
+/// calibrated to the paper's sparse→dense degree sweep.
+pub fn build_workload(spec: &'static DatasetSpec, n: usize, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed ^ 0xBE7C4);
+    let samples = (n * 20).clamp(10_000, 200_000);
+    match spec.generate(n, seed) {
+        Generated::Dense(pts) => {
+            let eps = registry::DEGREE_SWEEP
+                .iter()
+                .map(|&deg| {
+                    calibrate_eps(&pts, &Euclidean, deg.min(n as f64 - 1.0), samples, &mut rng)
+                })
+                .collect();
+            Workload::Dense { spec, pts, eps }
+        }
+        Generated::Hamming(codes) => {
+            let eps = registry::DEGREE_SWEEP
+                .iter()
+                .map(|&deg| {
+                    calibrate_eps(&codes, &Hamming, deg.min(n as f64 - 1.0), samples, &mut rng)
+                })
+                .collect();
+            Workload::Hamming { spec, codes, eps }
+        }
+    }
+}
+
+/// Time a closure (wall clock), returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.wall())
+}
+
+/// Fixed-width table printer + CSV sink for bench outputs.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout with aligned columns.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let header: Vec<String> =
+            self.columns.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}")).collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}")).collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// Write as CSV under `bench_out/<file>`.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = std::path::Path::new("bench_out").join(file);
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        eprintln!("[bench] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Format a float with sensible precision for tables.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+/// Standard rank sweep for the scaling experiments (powers of two, capped
+/// so the full sweep stays within the bench budget on one core).
+pub fn rank_sweep(max: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut r = 1;
+    while r <= max {
+        v.push(r);
+        r *= 2;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_builds_with_calibrated_sweep() {
+        let spec = DatasetSpec::by_name("corel").unwrap();
+        let w = build_workload(spec, 200, 1);
+        assert_eq!(w.len(), 200);
+        let eps = w.eps_sweep();
+        assert_eq!(eps.len(), 3);
+        assert!(eps[0] <= eps[1] && eps[1] <= eps[2], "sweep must be nondecreasing: {eps:?}");
+        assert!(eps[0] > 0.0);
+    }
+
+    #[test]
+    fn hamming_workload_builds() {
+        let spec = DatasetSpec::by_name("sift-hamming").unwrap();
+        let w = build_workload(spec, 100, 2);
+        assert_eq!(w.name(), "sift-hamming");
+        assert!(matches!(w, Workload::Hamming { .. }));
+    }
+
+    #[test]
+    fn table_rendering_and_csv() {
+        let mut t = Table::new("test", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+        // CSV write exercised via temp cwd-independent check: write then read.
+        t.write_csv("test_table.csv").unwrap();
+        let text = std::fs::read_to_string("bench_out/test_table.csv").unwrap();
+        assert!(text.starts_with("a,b\n1,2"));
+        std::fs::remove_file("bench_out/test_table.csv").ok();
+    }
+
+    #[test]
+    fn rank_sweep_powers_of_two() {
+        assert_eq!(rank_sweep(8), vec![1, 2, 4, 8]);
+        assert_eq!(rank_sweep(1), vec![1]);
+        assert_eq!(rank_sweep(6), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, s) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; typed accessors validate on retrieval and unknown-flag
+//! checking is available after all expected flags are declared.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
+    /// Flags the program has asked about (for unknown-flag detection).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates flags.
+                    out.positionals.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    fn note(&self, key: &str) {
+        self.known.borrow_mut().push(key.to_string());
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.note(key);
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed accessors (error on malformed values).
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.note(key);
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.note(key);
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool, String> {
+        self.note(key);
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("--{key} expects a boolean, got {v:?}")),
+        }
+    }
+
+    /// Error if any provided flag was never queried (typo protection).
+    /// Call after all `get_*` calls.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let known = self.known.borrow();
+        for k in self.flags.keys() {
+            if !known.iter().any(|q| q == k) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn flag_styles() {
+        let a = parse("run --ranks 8 --eps=0.5 --verbose --name sift");
+        assert_eq!(a.positional(0), Some("run"));
+        assert_eq!(a.get_usize("ranks").unwrap(), Some(8));
+        assert_eq!(a.get_f64("eps").unwrap(), Some(0.5));
+        assert!(a.get_bool("verbose").unwrap());
+        assert_eq!(a.get("name"), Some("sift"));
+    }
+
+    #[test]
+    fn missing_flags_default() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("ranks").unwrap(), None);
+        assert!(!a.get_bool("verbose").unwrap());
+        assert_eq!(a.get_or("algo", "landmark-coll"), "landmark-coll");
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse("--ranks eight");
+        assert!(a.get_usize("ranks").is_err());
+        let b = parse("--eps very-small");
+        assert!(b.get_f64("eps").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("--ranks 4 --typo 1");
+        let _ = a.get_usize("ranks");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("typo");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn double_dash_stops_flag_parsing() {
+        let a = parse("cmd -- --not-a-flag");
+        assert_eq!(a.positional(0), Some("cmd"));
+        assert_eq!(a.positional(1), Some("--not-a-flag"));
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse("--check");
+        assert!(a.get_bool("check").unwrap());
+    }
+}

@@ -1,0 +1,608 @@
+//! Simulated MPI runtime.
+//!
+//! The paper runs on NERSC Perlmutter with Cray MPICH over Slingshot-11;
+//! this box has one physical core and no MPI. The substitution (DESIGN.md
+//! §3) keeps the *algorithms* bit-for-bit identical — same SPMD structure,
+//! same message patterns, same collectives — and replaces physical time
+//! with **virtual time**:
+//!
+//! * each MPI rank is an OS thread running the same SPMD closure;
+//! * compute segments are charged at the rank's own thread-CPU time
+//!   (`CLOCK_THREAD_CPUTIME_ID`), so ranks that time-share one core are
+//!   still charged only for their own work;
+//! * communication is charged by an α-β (latency–bandwidth) model with
+//!   standard per-collective cost formulas (see [`CostModel`]), which
+//!   exposes exactly the effects the paper reports — the `α·(P−1)`
+//!   alltoallv term that degrades `landmark-coll` at scale, the linear ring
+//!   latency of the systolic algorithm, and compute/comm overlap.
+//!
+//! Message payloads really move between threads (over channels), so the
+//! distributed algorithms are tested end-to-end, not just cost-modeled.
+
+mod stats;
+mod world;
+
+pub use stats::{CommStats, PhaseTimes};
+pub use world::{makespan, run_world, RankOutput};
+
+use std::sync::mpsc::{Receiver, Sender};
+
+/// α-β communication cost model (plus per-collective formulas).
+///
+/// Defaults approximate a Slingshot-class interconnect as seen from one
+/// rank: ~2 µs small-message latency, ~25 GB/s effective per-rank
+/// bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-message latency in seconds.
+    pub alpha: f64,
+    /// Seconds per byte (inverse bandwidth).
+    pub beta_inv: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { alpha: 2e-6, beta_inv: 1.0 / 25e9 }
+    }
+}
+
+impl CostModel {
+    /// Point-to-point transfer cost for `b` payload bytes.
+    #[inline]
+    pub fn p2p(&self, b: u64) -> f64 {
+        self.alpha + b as f64 * self.beta_inv
+    }
+
+    /// Barrier / small allreduce: logarithmic latency term.
+    #[inline]
+    pub fn barrier(&self, p: usize) -> f64 {
+        self.alpha * (p.max(2) as f64).log2().ceil()
+    }
+
+    /// Allgather: log α term + all remote bytes through one NIC.
+    #[inline]
+    pub fn allgather(&self, p: usize, remote_bytes: u64) -> f64 {
+        self.barrier(p) + remote_bytes as f64 * self.beta_inv
+    }
+
+    /// Alltoallv as implemented by pairwise exchanges: the `α·(P−1)` term
+    /// is the scaling bottleneck the paper's Figures 3–5 highlight.
+    #[inline]
+    pub fn alltoallv(&self, p: usize, send_bytes: u64, recv_bytes: u64) -> f64 {
+        self.alpha * (p.saturating_sub(1)) as f64
+            + send_bytes.max(recv_bytes) as f64 * self.beta_inv
+    }
+}
+
+/// In-flight message.
+struct Msg {
+    from: usize,
+    tag: u64,
+    payload: Vec<u8>,
+    /// Virtual time at which the message is fully delivered at the
+    /// receiver (sender's clock at send + α + bytes/β). Internal collective
+    /// traffic uses 0.0 (cost charged analytically by the collective).
+    arrival_vt: f64,
+}
+
+/// Per-rank communicator handle (the `MPI_Comm` analog).
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    txs: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Out-of-order messages awaiting a matching recv.
+    pending: Vec<Msg>,
+    cost: CostModel,
+    /// Virtual clock (seconds).
+    vt: f64,
+    /// Thread-CPU reading at the end of the last accounted segment.
+    cpu_mark: f64,
+    /// Monotone sequence number for collective operations (tag namespace).
+    coll_seq: u64,
+    stats: CommStats,
+}
+
+/// Tag bit reserved for internal collective traffic.
+const COLL_BIT: u64 = 1 << 63;
+
+impl Comm {
+    fn new(rank: usize, size: usize, txs: Vec<Sender<Msg>>, rx: Receiver<Msg>, cost: CostModel) -> Self {
+        Comm {
+            rank,
+            size,
+            txs,
+            rx,
+            pending: Vec::new(),
+            cost,
+            vt: 0.0,
+            cpu_mark: crate::util::thread_cpu_time(),
+            coll_seq: 0,
+            stats: CommStats::new(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Current virtual time in seconds.
+    pub fn virtual_time(&self) -> f64 {
+        self.vt
+    }
+
+    /// Borrow the accumulated statistics.
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    /// Switch the accounting bucket for subsequent compute/comm time
+    /// (Fig 3–5 phase breakdowns). Charges any outstanding compute to the
+    /// previous phase first.
+    pub fn set_phase(&mut self, name: &str) {
+        self.absorb_compute();
+        self.stats.set_phase(name);
+    }
+
+    /// Charge CPU time since the last mark to the current phase as compute.
+    fn absorb_compute(&mut self) {
+        let now = crate::util::thread_cpu_time();
+        let dt = (now - self.cpu_mark).max(0.0);
+        self.cpu_mark = now;
+        self.vt += dt;
+        self.stats.add_compute(dt);
+    }
+
+    /// Charge `dt` seconds of modeled communication time.
+    fn charge_comm(&mut self, dt: f64) {
+        let dt = dt.max(0.0);
+        self.vt += dt;
+        self.stats.add_comm(dt);
+    }
+
+    // ------------------------------------------------------------------
+    // point-to-point
+    // ------------------------------------------------------------------
+
+    /// Send `payload` to `to` with `tag`. Non-blocking (channels are
+    /// unbounded); the sender is charged the α overhead.
+    pub fn send(&mut self, to: usize, tag: u32, payload: Vec<u8>) {
+        self.absorb_compute();
+        let bytes = payload.len() as u64;
+        self.charge_comm(self.cost.alpha);
+        let arrival = self.vt + bytes as f64 * self.cost.beta_inv;
+        self.stats.count_send(bytes);
+        self.txs[to]
+            .send(Msg { from: self.rank, tag: tag as u64, payload, arrival_vt: arrival })
+            .expect("receiver hung up");
+    }
+
+    /// Blocking receive of a message from `from` with `tag`.
+    pub fn recv(&mut self, from: usize, tag: u32) -> Vec<u8> {
+        self.absorb_compute();
+        let msg = self.take_matching(from, tag as u64);
+        // Wait until the message is delivered in virtual time.
+        let wait = msg.arrival_vt - self.vt;
+        self.charge_comm(wait);
+        msg.payload
+    }
+
+    /// Simultaneous send+recv (the ring primitive), with the communication
+    /// *overlapped* against `compute`: the step's virtual duration is
+    /// `max(compute_cpu, comm_cost)`, mirroring how the paper's systolic
+    /// algorithm hides the ring transfer behind the query step.
+    ///
+    /// Returns `(compute_result, received_payload)`.
+    pub fn sendrecv_overlapped<R>(
+        &mut self,
+        to: usize,
+        from: usize,
+        tag: u32,
+        payload: Vec<u8>,
+        compute: impl FnOnce() -> R,
+    ) -> (R, Vec<u8>) {
+        self.absorb_compute();
+        let start = self.vt;
+        let bytes = payload.len() as u64;
+        let arrival = start + self.cost.p2p(bytes);
+        self.stats.count_send(bytes);
+        self.txs[to]
+            .send(Msg { from: self.rank, tag: tag as u64, payload, arrival_vt: arrival })
+            .expect("receiver hung up");
+
+        // Run the overlapped compute and measure its CPU cost.
+        let cpu0 = crate::util::thread_cpu_time();
+        let out = compute();
+        let cpu1 = crate::util::thread_cpu_time();
+        let c = (cpu1 - cpu0).max(0.0);
+        self.cpu_mark = cpu1;
+        self.stats.add_compute(c);
+
+        let msg = self.take_matching(from, tag as u64);
+        // Step ends when both the compute and the incoming transfer finish.
+        let end = (start + c).max(msg.arrival_vt).max(start + self.cost.p2p(bytes));
+        self.stats.add_comm((end - start - c).max(0.0));
+        self.vt = end;
+        (out, msg.payload)
+    }
+
+    /// Pull the next message matching `(from, tag)`, buffering others.
+    fn take_matching(&mut self, from: usize, tag: u64) -> Msg {
+        if let Some(pos) = self.pending.iter().position(|m| m.from == from && m.tag == tag) {
+            return self.pending.swap_remove(pos);
+        }
+        loop {
+            let msg = self.rx.recv().expect("world shut down while receiving");
+            if msg.from == from && msg.tag == tag {
+                return msg;
+            }
+            self.pending.push(msg);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // collectives (SPMD: every rank must call in the same order)
+    // ------------------------------------------------------------------
+
+    fn next_coll_tag(&mut self) -> u64 {
+        self.coll_seq += 1;
+        COLL_BIT | self.coll_seq
+    }
+
+    fn raw_send(&mut self, to: usize, tag: u64, payload: Vec<u8>) {
+        self.txs[to]
+            .send(Msg { from: self.rank, tag, payload, arrival_vt: 0.0 })
+            .expect("receiver hung up");
+    }
+
+    fn raw_recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
+        self.take_matching(from, tag).payload
+    }
+
+    /// Synchronize virtual clocks to the world maximum and return it.
+    /// This is the entry barrier implicit in every collective.
+    fn sync_vt_max(&mut self, tag: u64) -> f64 {
+        if self.size == 1 {
+            return self.vt;
+        }
+        // Rank 0 gathers all clocks, computes the max, broadcasts it.
+        if self.rank == 0 {
+            let mut mx = self.vt;
+            for r in 1..self.size {
+                let b = self.raw_recv(r, tag);
+                mx = mx.max(f64::from_le_bytes(b[..8].try_into().unwrap()));
+            }
+            for r in 1..self.size {
+                self.raw_send(r, tag, mx.to_le_bytes().to_vec());
+            }
+            mx
+        } else {
+            self.raw_send(0, tag, self.vt.to_le_bytes().to_vec());
+            let b = self.raw_recv(0, tag);
+            f64::from_le_bytes(b[..8].try_into().unwrap())
+        }
+    }
+
+    /// Barrier: clocks jump to `max + α·⌈log₂P⌉`.
+    pub fn barrier(&mut self) {
+        self.absorb_compute();
+        let tag = self.next_coll_tag();
+        let mx = self.sync_vt_max(tag);
+        let end = mx + self.cost.barrier(self.size);
+        self.charge_comm(end - self.vt);
+    }
+
+    /// Allgather: every rank contributes `payload`; returns all payloads
+    /// indexed by rank.
+    pub fn allgather(&mut self, payload: Vec<u8>) -> Vec<Vec<u8>> {
+        self.absorb_compute();
+        let tag = self.next_coll_tag();
+        let own_bytes = payload.len() as u64;
+        self.stats.count_send(own_bytes * (self.size as u64 - 1));
+        for r in 0..self.size {
+            if r != self.rank {
+                self.raw_send(r, tag, payload.clone());
+            }
+        }
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.size];
+        let mut remote_bytes = 0u64;
+        for r in 0..self.size {
+            if r == self.rank {
+                out[r] = payload.clone();
+            } else {
+                let b = self.raw_recv(r, tag);
+                remote_bytes += b.len() as u64;
+                out[r] = b;
+            }
+        }
+        let tag2 = self.next_coll_tag();
+        let mx = self.sync_vt_max(tag2);
+        let end = mx + self.cost.allgather(self.size, remote_bytes);
+        self.charge_comm(end - self.vt);
+        out
+    }
+
+    /// Alltoallv: `bufs[r]` is sent to rank `r`; returns what each rank
+    /// sent to us, indexed by source. Cost includes the `α·(P−1)` term.
+    pub fn alltoallv(&mut self, bufs: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(bufs.len(), self.size, "alltoallv needs one buffer per rank");
+        self.absorb_compute();
+        let tag = self.next_coll_tag();
+        let send_bytes: u64 = bufs
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| *r != self.rank)
+            .map(|(_, b)| b.len() as u64)
+            .sum();
+        self.stats.count_send(send_bytes);
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.size];
+        for (r, buf) in bufs.into_iter().enumerate() {
+            if r == self.rank {
+                out[r] = buf;
+            } else {
+                self.raw_send(r, tag, buf);
+            }
+        }
+        let mut recv_bytes = 0u64;
+        for r in 0..self.size {
+            if r != self.rank {
+                let b = self.raw_recv(r, tag);
+                recv_bytes += b.len() as u64;
+                out[r] = b;
+            }
+        }
+        let tag2 = self.next_coll_tag();
+        let mx = self.sync_vt_max(tag2);
+        let end = mx + self.cost.alltoallv(self.size, send_bytes, recv_bytes);
+        self.charge_comm(end - self.vt);
+        out
+    }
+
+    /// Broadcast from `root`.
+    pub fn bcast(&mut self, root: usize, payload: Vec<u8>) -> Vec<u8> {
+        self.absorb_compute();
+        let tag = self.next_coll_tag();
+        let out = if self.rank == root {
+            self.stats.count_send(payload.len() as u64 * (self.size as u64 - 1));
+            for r in 0..self.size {
+                if r != root {
+                    self.raw_send(r, tag, payload.clone());
+                }
+            }
+            payload
+        } else {
+            self.raw_recv(root, tag)
+        };
+        let tag2 = self.next_coll_tag();
+        let mx = self.sync_vt_max(tag2);
+        let end = mx
+            + self.cost.barrier(self.size)
+            + out.len() as f64 * self.cost.beta_inv;
+        self.charge_comm(end - self.vt);
+        out
+    }
+
+    /// Allreduce for a single f64.
+    pub fn allreduce_f64(&mut self, x: f64, op: ReduceOp) -> f64 {
+        let all = self.allgather(x.to_le_bytes().to_vec());
+        let vals = all.iter().map(|b| f64::from_le_bytes(b[..8].try_into().unwrap()));
+        match op {
+            ReduceOp::Sum => vals.sum(),
+            ReduceOp::Max => vals.fold(f64::NEG_INFINITY, f64::max),
+            ReduceOp::Min => vals.fold(f64::INFINITY, f64::min),
+        }
+    }
+
+    /// Allreduce for a single u64.
+    pub fn allreduce_u64(&mut self, x: u64, op: ReduceOp) -> u64 {
+        let all = self.allgather(x.to_le_bytes().to_vec());
+        let vals = all.iter().map(|b| u64::from_le_bytes(b[..8].try_into().unwrap()));
+        match op {
+            ReduceOp::Sum => vals.sum(),
+            ReduceOp::Max => vals.max().unwrap(),
+            ReduceOp::Min => vals.min().unwrap(),
+        }
+    }
+
+    /// Flush outstanding compute into the stats (call at the end of an
+    /// algorithm so the last segment is attributed).
+    pub fn finish(&mut self) {
+        self.absorb_compute();
+    }
+
+    #[cfg(test)]
+    pub(crate) fn new_loopback() -> Comm {
+        let (tx, rx) = std::sync::mpsc::channel();
+        Comm::new(0, 1, vec![tx], rx, CostModel::default())
+    }
+}
+
+/// Reduction operators for the scalar allreduce helpers.
+#[derive(Clone, Copy, Debug)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_collectives() {
+        let mut c = Comm::new_loopback();
+        let all = c.allgather(vec![1, 2, 3]);
+        assert_eq!(all, vec![vec![1, 2, 3]]);
+        let back = c.alltoallv(vec![vec![9]]);
+        assert_eq!(back, vec![vec![9]]);
+        assert_eq!(c.allreduce_f64(4.0, ReduceOp::Sum), 4.0);
+        c.barrier();
+        assert_eq!(c.bcast(0, vec![7]), vec![7]);
+    }
+
+    #[test]
+    fn p2p_roundtrip_two_ranks() {
+        let outs = run_world(2, CostModel::default(), |c| {
+            if c.rank() == 0 {
+                c.send(1, 5, vec![42]);
+                c.recv(1, 6)
+            } else {
+                let got = c.recv(0, 5);
+                c.send(0, 6, vec![got[0] + 1]);
+                got
+            }
+        });
+        assert_eq!(outs[0].result, vec![43]);
+        assert_eq!(outs[1].result, vec![42]);
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let outs = run_world(2, CostModel::default(), |c| {
+            if c.rank() == 0 {
+                // Send tag 2 first, then tag 1; receiver asks for 1 first.
+                c.send(1, 2, vec![2]);
+                c.send(1, 1, vec![1]);
+                Vec::new()
+            } else {
+                let first = c.recv(0, 1);
+                let second = c.recv(0, 2);
+                vec![first[0], second[0]]
+            }
+        });
+        assert_eq!(outs[1].result, vec![1, 2]);
+    }
+
+    #[test]
+    fn allgather_four_ranks() {
+        let outs = run_world(4, CostModel::default(), |c| {
+            let all = c.allgather(vec![c.rank() as u8]);
+            all.iter().map(|b| b[0]).collect::<Vec<u8>>()
+        });
+        for o in &outs {
+            assert_eq!(o.result, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn alltoallv_contents() {
+        let outs = run_world(3, CostModel::default(), |c| {
+            // rank r sends [r*10 + dest] to each dest
+            let bufs: Vec<Vec<u8>> =
+                (0..3).map(|d| vec![(c.rank() * 10 + d) as u8]).collect();
+            let got = c.alltoallv(bufs);
+            got.iter().map(|b| b[0]).collect::<Vec<u8>>()
+        });
+        // rank d receives from each src: src*10 + d
+        for (d, o) in outs.iter().enumerate() {
+            let want: Vec<u8> = (0..3).map(|s| (s * 10 + d) as u8).collect();
+            assert_eq!(o.result, want, "rank {d}");
+        }
+    }
+
+    #[test]
+    fn bcast_from_nonzero_root() {
+        let outs = run_world(3, CostModel::default(), |c| {
+            let payload = if c.rank() == 2 { vec![99] } else { Vec::new() };
+            c.bcast(2, payload)
+        });
+        for o in &outs {
+            assert_eq!(o.result, vec![99]);
+        }
+    }
+
+    #[test]
+    fn allreduce_ops() {
+        let outs = run_world(4, CostModel::default(), |c| {
+            let s = c.allreduce_u64(c.rank() as u64, ReduceOp::Sum);
+            let mx = c.allreduce_f64(c.rank() as f64, ReduceOp::Max);
+            let mn = c.allreduce_f64(c.rank() as f64, ReduceOp::Min);
+            (s, mx, mn)
+        });
+        for o in &outs {
+            assert_eq!(o.result, (6, 3.0, 0.0));
+        }
+    }
+
+    #[test]
+    fn virtual_time_advances_with_comm() {
+        let outs = run_world(2, CostModel { alpha: 1e-3, beta_inv: 1e-9 }, |c| {
+            c.barrier();
+            c.virtual_time()
+        });
+        for o in &outs {
+            // one barrier = α·⌈log₂2⌉ = 1 ms minimum
+            assert!(o.result >= 1e-3, "vt={} too small", o.result);
+        }
+    }
+
+    #[test]
+    fn alltoallv_alpha_scales_with_ranks() {
+        // The modeled alltoallv cost must grow linearly in P (the paper's
+        // landmark-coll bottleneck).
+        let cost = CostModel { alpha: 1e-3, beta_inv: 0.0 };
+        let t4 = run_world(4, cost, |c| {
+            let bufs = vec![Vec::new(); c.size()];
+            c.alltoallv(bufs);
+            c.virtual_time()
+        })[0]
+            .result;
+        let t8 = run_world(8, cost, |c| {
+            let bufs = vec![Vec::new(); c.size()];
+            c.alltoallv(bufs);
+            c.virtual_time()
+        })[0]
+            .result;
+        assert!(t8 > t4 * 1.5, "t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn sendrecv_overlapped_moves_payload_and_overlaps() {
+        let cost = CostModel { alpha: 5e-3, beta_inv: 0.0 };
+        let outs = run_world(2, cost, |c| {
+            let to = (c.rank() + 1) % 2;
+            let from = (c.rank() + 1) % 2;
+            let (busy, got) = c.sendrecv_overlapped(to, from, 9, vec![c.rank() as u8], || {
+                // trivial compute, far below the 5ms α
+                1 + 1
+            });
+            assert_eq!(busy, 2);
+            (got, c.virtual_time())
+        });
+        assert_eq!(outs[0].result.0, vec![1]);
+        assert_eq!(outs[1].result.0, vec![0]);
+        // Step cost should be ≈ α (comm dominated), not α + compute.
+        for o in &outs {
+            assert!(o.result.1 >= 5e-3 && o.result.1 < 50e-3, "vt={}", o.result.1);
+        }
+    }
+
+    #[test]
+    fn phase_accounting_splits_compute_and_comm() {
+        let outs = run_world(2, CostModel { alpha: 1e-3, beta_inv: 0.0 }, |c| {
+            c.set_phase("work");
+            let mut acc = 0u64;
+            for i in 0..2_000_000u64 {
+                acc = acc.wrapping_add(i.wrapping_mul(0x9E3779B9));
+            }
+            std::hint::black_box(acc);
+            c.set_phase("sync");
+            c.barrier();
+            c.finish();
+            c.stats().clone()
+        });
+        for o in &outs {
+            let phases = o.result.phases();
+            let work = &phases["work"];
+            let sync = &phases["sync"];
+            assert!(work.compute > 0.0, "work compute missing");
+            assert!(sync.comm >= 0.9e-3, "sync comm missing: {}", sync.comm);
+        }
+    }
+}

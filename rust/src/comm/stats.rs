@@ -1,0 +1,122 @@
+//! Per-rank communication/computation statistics with named phases —
+//! the data behind the paper's Figure 3–5 breakdowns.
+
+use std::collections::BTreeMap;
+
+/// Compute vs (modeled) communication seconds inside one phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTimes {
+    pub compute: f64,
+    pub comm: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm
+    }
+}
+
+/// Statistics accumulated by a [`super::Comm`] handle.
+#[derive(Clone, Debug)]
+pub struct CommStats {
+    phases: BTreeMap<String, PhaseTimes>,
+    phase_order: Vec<String>,
+    current: String,
+    bytes_sent: u64,
+    msgs_sent: u64,
+}
+
+impl CommStats {
+    pub(crate) fn new() -> Self {
+        let current = "default".to_string();
+        let mut phases = BTreeMap::new();
+        phases.insert(current.clone(), PhaseTimes::default());
+        CommStats { phases, phase_order: vec![current.clone()], current, bytes_sent: 0, msgs_sent: 0 }
+    }
+
+    pub(crate) fn set_phase(&mut self, name: &str) {
+        if !self.phases.contains_key(name) {
+            self.phases.insert(name.to_string(), PhaseTimes::default());
+            self.phase_order.push(name.to_string());
+        }
+        self.current = name.to_string();
+    }
+
+    pub(crate) fn add_compute(&mut self, dt: f64) {
+        self.phases.get_mut(&self.current).unwrap().compute += dt;
+    }
+
+    pub(crate) fn add_comm(&mut self, dt: f64) {
+        self.phases.get_mut(&self.current).unwrap().comm += dt;
+    }
+
+    pub(crate) fn count_send(&mut self, bytes: u64) {
+        self.bytes_sent += bytes;
+        self.msgs_sent += 1;
+    }
+
+    /// Phase name → times.
+    pub fn phases(&self) -> &BTreeMap<String, PhaseTimes> {
+        &self.phases
+    }
+
+    /// Phases in first-use order (for stable breakdown tables).
+    pub fn phase_order(&self) -> &[String] {
+        &self.phase_order
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    pub fn msgs_sent(&self) -> u64 {
+        self.msgs_sent
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> PhaseTimes {
+        let mut t = PhaseTimes::default();
+        for p in self.phases.values() {
+            t.compute += p.compute;
+            t.comm += p.comm;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_independently() {
+        let mut s = CommStats::new();
+        s.add_compute(1.0);
+        s.set_phase("a");
+        s.add_compute(2.0);
+        s.add_comm(0.5);
+        s.set_phase("b");
+        s.add_comm(0.25);
+        // revisiting an existing phase continues accumulation
+        s.set_phase("a");
+        s.add_compute(1.0);
+
+        assert_eq!(s.phases()["default"].compute, 1.0);
+        assert_eq!(s.phases()["a"].compute, 3.0);
+        assert_eq!(s.phases()["a"].comm, 0.5);
+        assert_eq!(s.phases()["b"].comm, 0.25);
+        assert_eq!(s.phase_order(), &["default", "a", "b"]);
+        let t = s.total();
+        assert!((t.compute - 4.0).abs() < 1e-12);
+        assert!((t.comm - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn send_counters() {
+        let mut s = CommStats::new();
+        s.count_send(100);
+        s.count_send(50);
+        assert_eq!(s.bytes_sent(), 150);
+        assert_eq!(s.msgs_sent(), 2);
+    }
+}

@@ -1,0 +1,113 @@
+//! World launcher: spawns one OS thread per rank and runs the SPMD closure.
+
+use super::{Comm, CommStats, CostModel, Msg};
+use std::sync::mpsc;
+
+/// Result of one rank's execution.
+#[derive(Clone, Debug)]
+pub struct RankOutput<T> {
+    pub rank: usize,
+    pub result: T,
+    /// Final virtual clock (the rank's makespan contribution).
+    pub virtual_time: f64,
+    pub stats: CommStats,
+}
+
+/// Build the fully-connected channel mesh for `n` ranks.
+pub(crate) fn spawn_comms(n: usize, cost: CostModel) -> Vec<Comm> {
+    let mut txs: Vec<mpsc::Sender<Msg>> = Vec::with_capacity(n);
+    let mut rxs: Vec<mpsc::Receiver<Msg>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = mpsc::channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| Comm::new(rank, n, txs.clone(), rx, cost))
+        .collect()
+}
+
+/// Run `f` as an SPMD program on `n` simulated ranks (one thread each) and
+/// collect every rank's result, final virtual time and statistics.
+///
+/// The returned vector is indexed by rank. The *makespan* of the simulated
+/// job is `outputs.iter().map(|o| o.virtual_time).fold(0.0, f64::max)`.
+pub fn run_world<T, F>(n: usize, cost: CostModel, f: F) -> Vec<RankOutput<T>>
+where
+    T: Send,
+    F: Fn(&mut Comm) -> T + Sync,
+{
+    assert!(n >= 1, "need at least one rank");
+    let comms = spawn_comms(n, cost);
+    let f = &f;
+    let mut outputs: Vec<Option<RankOutput<T>>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        for (rank, mut comm) in comms.into_iter().enumerate() {
+            handles.push((
+                rank,
+                scope.spawn(move || {
+                    // Reset the CPU mark *inside* the rank thread: the handle
+                    // was created on the spawner thread whose clock differs.
+                    comm.cpu_mark = crate::util::thread_cpu_time();
+                    let result = f(&mut comm);
+                    comm.finish();
+                    RankOutput {
+                        rank: comm.rank,
+                        result,
+                        virtual_time: comm.vt,
+                        stats: comm.stats.clone(),
+                    }
+                }),
+            ));
+        }
+        for (rank, h) in handles {
+            outputs[rank] = Some(h.join().expect("rank thread panicked"));
+        }
+    });
+    outputs.into_iter().map(Option::unwrap).collect()
+}
+
+/// Makespan of a finished world (max rank virtual time).
+pub fn makespan<T>(outputs: &[RankOutput<T>]) -> f64 {
+    outputs.iter().map(|o| o.virtual_time).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_world() {
+        let outs = run_world(1, CostModel::default(), |c| c.rank() * 10);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].result, 0);
+    }
+
+    #[test]
+    fn results_indexed_by_rank() {
+        let outs = run_world(5, CostModel::default(), |c| c.rank());
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.rank, i);
+            assert_eq!(o.result, i);
+        }
+    }
+
+    #[test]
+    fn makespan_is_max() {
+        let outs = run_world(3, CostModel::default(), |c| {
+            if c.rank() == 1 {
+                let mut acc = 0u64;
+                for i in 0..4_000_000u64 {
+                    acc = acc.wrapping_add(i.wrapping_mul(31));
+                }
+                std::hint::black_box(acc);
+            }
+            c.virtual_time()
+        });
+        let ms = makespan(&outs);
+        assert!(ms >= outs[0].virtual_time);
+        assert!(ms >= outs[2].virtual_time);
+    }
+}

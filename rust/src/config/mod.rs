@@ -1,0 +1,167 @@
+//! Configuration: a TOML-subset parser (the offline build has no `serde`/
+//! `toml`) plus the typed experiment schema the launcher consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), integer, float and boolean values, `#` comments. That covers
+//! every config this project ships; anything fancier is a parse error, not
+//! silent misbehaviour.
+
+mod toml;
+
+pub use toml::{ParseError, TomlDoc, Value};
+
+use crate::comm::CostModel;
+use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, RunConfig};
+
+/// A fully-resolved experiment configuration (CLI and config files both
+/// funnel into this).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Table-I dataset analog name (see `data::registry`).
+    pub dataset: String,
+    /// Fraction of the paper's point count to generate.
+    pub scale: f64,
+    /// Explicit point count (overrides `scale` when nonzero).
+    pub points: usize,
+    /// Explicit ε (0 ⇒ calibrate from `target_degree`).
+    pub eps: f64,
+    /// Average-degree target for ε calibration.
+    pub target_degree: f64,
+    pub seed: u64,
+    pub run: RunConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "corel".into(),
+            scale: 0.01,
+            points: 0,
+            eps: 0.0,
+            target_degree: 30.0,
+            seed: 42,
+            run: RunConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text. Unknown keys are errors (catch typos early).
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = ExperimentConfig::default();
+        for (section, key, value) in doc.entries() {
+            let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            match path.as_str() {
+                "dataset" => cfg.dataset = value.as_str().ok_or("dataset must be a string")?.into(),
+                "scale" => cfg.scale = value.as_f64().ok_or("scale must be a number")?,
+                "points" => cfg.points = value.as_usize().ok_or("points must be an integer")?,
+                "eps" => cfg.eps = value.as_f64().ok_or("eps must be a number")?,
+                "target_degree" => {
+                    cfg.target_degree = value.as_f64().ok_or("target_degree must be a number")?
+                }
+                "seed" => cfg.seed = value.as_usize().ok_or("seed must be an integer")? as u64,
+                "run.ranks" => cfg.run.ranks = value.as_usize().ok_or("ranks must be an integer")?,
+                "run.algorithm" => {
+                    let s = value.as_str().ok_or("algorithm must be a string")?;
+                    cfg.run.algorithm =
+                        Algorithm::parse(s).ok_or_else(|| format!("unknown algorithm {s:?}"))?;
+                }
+                "run.leaf_size" => {
+                    cfg.run.leaf_size = value.as_usize().ok_or("leaf_size must be an integer")?
+                }
+                "run.num_centers" => {
+                    cfg.run.num_centers = value.as_usize().ok_or("num_centers must be an integer")?
+                }
+                "run.centers" => {
+                    cfg.run.centers = match value.as_str().ok_or("centers must be a string")? {
+                        "random" => CenterStrategy::Random,
+                        "greedy" => CenterStrategy::Greedy,
+                        s => return Err(format!("unknown center strategy {s:?}")),
+                    }
+                }
+                "run.assignment" => {
+                    cfg.run.assignment = match value.as_str().ok_or("assignment must be a string")? {
+                        "multiway" => AssignStrategy::Multiway,
+                        "cyclic" => AssignStrategy::Cyclic,
+                        s => return Err(format!("unknown assignment strategy {s:?}")),
+                    }
+                }
+                "run.alpha" => {
+                    cfg.run.cost.alpha = value.as_f64().ok_or("alpha must be a number")?
+                }
+                "run.beta_inv" => {
+                    cfg.run.cost.beta_inv = value.as_f64().ok_or("beta_inv must be a number")?
+                }
+                "run.seed" => cfg.run.seed = value.as_usize().ok_or("seed must be an integer")? as u64,
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Re-exported so callers can build cost models from config fragments.
+pub fn default_cost_model() -> CostModel {
+    CostModel::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment
+dataset = "sift"
+scale = 0.005
+eps = 0.0
+target_degree = 70.0
+seed = 7
+
+[run]
+ranks = 16
+algorithm = "landmark-ring"
+leaf_size = 4
+num_centers = 64
+centers = "random"
+assignment = "multiway"
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.dataset, "sift");
+        assert_eq!(cfg.scale, 0.005);
+        assert_eq!(cfg.target_degree, 70.0);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.run.ranks, 16);
+        assert_eq!(cfg.run.algorithm, Algorithm::LandmarkRing);
+        assert_eq!(cfg.run.leaf_size, 4);
+        assert_eq!(cfg.run.num_centers, 64);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
+        assert_eq!(cfg.dataset, "deep");
+        assert_eq!(cfg.run.ranks, RunConfig::default().ranks);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        assert!(ExperimentConfig::from_toml("bogus = 1\n").is_err());
+        assert!(ExperimentConfig::from_toml("[run]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn bad_enum_values_are_errors() {
+        assert!(ExperimentConfig::from_toml("[run]\nalgorithm = \"quantum\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[run]\ncenters = \"psychic\"\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        assert!(ExperimentConfig::from_toml("scale = \"big\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[run]\nranks = 1.5\n").is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Minimal TOML-subset parser: sections, scalar key/values, comments.
+
+use std::fmt;
+
+/// A scalar TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Clone, Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: ordered `(section, key, value)` triples (the root
+/// section is the empty string).
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln0, raw) in text.lines().enumerate() {
+            let ln = ln0 + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(ln, "unterminated section header"))?;
+                if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                    return Err(err(ln, "invalid section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(ln, "expected `key = value`"))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+                return Err(err(ln, "invalid key"));
+            }
+            let value = parse_value(value.trim()).map_err(|m| err(ln, &m))?;
+            doc.entries.push((section.clone(), key.to_string(), value));
+        }
+        Ok(doc)
+    }
+
+    /// Ordered `(section, key, value)` triples.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.iter().find(|(s, k, _)| s == section && k == key).map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn err(line: usize, message: &str) -> ParseError {
+    ParseError { line, message: message.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = -7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Float(2.5)));
+        assert_eq!(doc.get("", "c"), Some(&Value::Str("hi".into())));
+        assert_eq!(doc.get("", "d"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("", "e"), Some(&Value::Int(-7)));
+    }
+
+    #[test]
+    fn sections_and_comments() {
+        let doc = TomlDoc::parse(
+            "# top\nx = 1 # trailing\n[sec]\ny = \"a # not comment\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "x"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("sec", "y"), Some(&Value::Str("a # not comment".into())));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = TomlDoc::parse("k = \"open\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Int(-1).as_usize(), None);
+        assert_eq!(Value::Float(1.5).as_usize(), None);
+        assert_eq!(Value::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,318 @@
+//! Batch construction — Algorithms 1 (SplitVertex) and 2 (BuildLevel).
+
+use super::{CoverTree, Node, NIL};
+use crate::metric::Metric;
+use crate::points::PointSet;
+
+/// Construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BuildParams {
+    /// Leaf-size threshold ζ: a vertex triple with at most this many points
+    /// stops splitting and attaches its points as leaves.
+    pub leaf_size: usize,
+    /// Index of the point used as the tree root (the paper selects one
+    /// arbitrarily; fixed to 0 by default for determinism).
+    pub root: usize,
+}
+
+impl Default for BuildParams {
+    fn default() -> Self {
+        BuildParams { leaf_size: 8, root: 0 }
+    }
+}
+
+/// A vertex triple `(H, π₁, r)` awaiting a split, together with its distance
+/// array `D[p] = d(p, π₁)` and the index (within `members`) of the farthest
+/// point `π₂` — exactly the state Algorithm 1 requires on entry.
+struct Hub {
+    /// Tree node already created for π₁ at the parent level.
+    node: u32,
+    /// Local point indices of H. `members[0]` is always π₁.
+    members: Vec<u32>,
+    /// `dist[k] = d(members[k], π₁)`.
+    dist: Vec<f64>,
+    /// Index into `members` of the farthest point (argmax of `dist`).
+    farthest: usize,
+    /// Radius `r = dist[farthest]`.
+    radius: f64,
+    level: i32,
+}
+
+pub(super) fn build<P: PointSet, M: Metric<P>>(
+    points: P,
+    ids: Vec<u32>,
+    metric: &M,
+    params: &BuildParams,
+) -> CoverTree<P> {
+    let n = points.len();
+    let mut tree = CoverTree { points, ids, nodes: Vec::new(), children: Vec::new(), root: NIL };
+    if n == 0 {
+        return tree;
+    }
+    assert!(params.root < n, "root index out of range");
+    assert!(params.leaf_size >= 1, "leaf size must be ≥ 1");
+
+    // Root triple: H = all points, π₁ = params.root.
+    let root_pt = params.root as u32;
+    let mut members: Vec<u32> = Vec::with_capacity(n);
+    members.push(root_pt);
+    members.extend((0..n as u32).filter(|&i| i != root_pt));
+    let mut dist = vec![0.0f64; n];
+    let mut farthest = 0usize;
+    let mut radius = 0.0f64;
+    for k in 1..n {
+        let d = metric.dist_ij(&tree.points, members[k] as usize, root_pt as usize);
+        dist[k] = d;
+        if d > radius {
+            radius = d;
+            farthest = k;
+        }
+    }
+    // Root level from the radius so that 2^level ≥ radius.
+    let level = if radius > 0.0 { radius.log2().ceil() as i32 } else { 0 };
+    let root_node = push_node(&mut tree, root_pt, radius, level);
+    tree.root = root_node;
+
+    let mut queue = vec![Hub { node: root_node, members, dist, farthest, radius, level }];
+
+    // Level-by-level expansion (Algorithm 2). A simple LIFO worklist gives
+    // the same tree as strict level order because hubs are independent.
+    while let Some(hub) = queue.pop() {
+        if hub.members.len() <= params.leaf_size || hub.radius == 0.0 {
+            attach_leaves(&mut tree, &hub);
+            continue;
+        }
+        split_vertex(&mut tree, metric, params, hub, &mut queue);
+    }
+    tree
+}
+
+fn push_node<P: PointSet>(tree: &mut CoverTree<P>, point: u32, radius: f64, level: i32) -> u32 {
+    tree.nodes.push(Node { point, radius, level, child_off: 0, child_len: 0 });
+    (tree.nodes.len() - 1) as u32
+}
+
+/// Attach every member of `hub` as a leaf child of `hub.node`.
+///
+/// This handles both the ζ cutoff and the duplicate-point case
+/// (`radius == 0` with several members ⇒ all coincide with π₁): every point
+/// becomes a `B(p, 0)` leaf so queries report each graph vertex separately.
+fn attach_leaves<P: PointSet>(tree: &mut CoverTree<P>, hub: &Hub) {
+    let off = tree.children.len() as u32;
+    let node_pt = tree.nodes[hub.node as usize].point;
+    let mut len = 0u32;
+    for &p in &hub.members {
+        // If the hub is a singleton of its own root point, the existing
+        // vertex *is* the leaf — don't create a duplicate child.
+        if hub.members.len() == 1 && p == node_pt {
+            tree.nodes[hub.node as usize].radius = 0.0;
+            return;
+        }
+        let leaf = push_node(tree, p, 0.0, hub.level - 1);
+        tree.children.push(leaf);
+        len += 1;
+    }
+    let node = &mut tree.nodes[hub.node as usize];
+    node.child_off = off;
+    node.child_len = len;
+}
+
+/// Algorithm 1: split `hub` into child triples whose centers form an
+/// `r/2`-net of its members, then enqueue the children.
+fn split_vertex<P: PointSet, M: Metric<P>>(
+    tree: &mut CoverTree<P>,
+    metric: &M,
+    _params: &BuildParams,
+    hub: Hub,
+    queue: &mut Vec<Hub>,
+) {
+    let Hub { node, members, mut dist, mut farthest, radius, level } = hub;
+    let m = members.len();
+    // Center list; labels[k] = index into `centers` of the closest center.
+    let mut centers: Vec<u32> = vec![members[0]];
+    let mut labels: Vec<u32> = vec![0; m];
+
+    // Greedy farthest-point selection until the members are covered by
+    // balls of radius r/2 (covering invariant). Each chosen center was at
+    // distance > r/2 from all previous ones (separating invariant).
+    let half = radius / 2.0;
+    let mut r_star = radius;
+    while r_star > half {
+        let c = members[farthest];
+        let ci = centers.len() as u32;
+        centers.push(c);
+        // Update D and L against the new center; track the next farthest.
+        r_star = 0.0;
+        let mut next_far = 0usize;
+        for k in 0..m {
+            let d_new = metric.dist_ij(&tree.points, members[k] as usize, c as usize);
+            if d_new < dist[k] {
+                dist[k] = d_new;
+                labels[k] = ci;
+            }
+            if dist[k] > r_star {
+                r_star = dist[k];
+                next_far = k;
+            }
+        }
+        farthest = next_far;
+    }
+
+    // Partition members by label into child triples, tracking each child's
+    // radius and farthest point (the π₂ of the next split).
+    let nc = centers.len();
+    let mut child_members: Vec<Vec<u32>> = vec![Vec::new(); nc];
+    let mut child_dist: Vec<Vec<f64>> = vec![Vec::new(); nc];
+    let mut child_far: Vec<usize> = vec![0; nc];
+    let mut child_rad: Vec<f64> = vec![0.0; nc];
+    // Seed each child with its center (distance 0) so members[0] == π₁.
+    for (ci, &c) in centers.iter().enumerate() {
+        child_members[ci].push(c);
+        child_dist[ci].push(0.0);
+    }
+    for k in 0..m {
+        let ci = labels[k] as usize;
+        let p = members[k];
+        if p == centers[ci] {
+            continue; // already seeded
+        }
+        child_members[ci].push(p);
+        child_dist[ci].push(dist[k]);
+        if dist[k] > child_rad[ci] {
+            child_rad[ci] = dist[k];
+            child_far[ci] = child_members[ci].len() - 1;
+        }
+    }
+
+    // Create the child vertices (nesting: centers[0] == the hub's own point)
+    // and enqueue their triples.
+    let off = tree.children.len() as u32;
+    // Reserve the contiguous child slots first.
+    for _ in 0..nc {
+        tree.children.push(NIL);
+    }
+    for ci in 0..nc {
+        let child_node = push_node(tree, centers[ci], child_rad[ci], level - 1);
+        tree.children[(off as usize) + ci] = child_node;
+        queue.push(Hub {
+            node: child_node,
+            members: std::mem::take(&mut child_members[ci]),
+            dist: std::mem::take(&mut child_dist[ci]),
+            farthest: child_far[ci],
+            radius: child_rad[ci],
+            level: level - 1,
+        });
+    }
+    let nref = &mut tree.nodes[node as usize];
+    nref.child_off = off;
+    nref.child_len = nc as u32;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covertree::check_invariants;
+    use crate::metric::{Counted, Euclidean, Hamming, Levenshtein};
+    use crate::points::{DenseMatrix, HammingCodes, StringSet};
+    use crate::util::Rng;
+
+    fn random_dense(seed: u64, n: usize, d: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::new(d);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn invariants_hold_across_leaf_sizes() {
+        let pts = random_dense(40, 200, 3);
+        for leaf_size in [1usize, 2, 8, 32, 500] {
+            let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size, root: 0 });
+            check_invariants(&t, &Euclidean);
+        }
+    }
+
+    #[test]
+    fn invariants_hold_with_duplicates() {
+        let mut pts = random_dense(41, 50, 3);
+        // Duplicate some rows heavily.
+        let dup = pts.row(7).to_vec();
+        for _ in 0..20 {
+            pts.push(&dup);
+        }
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        check_invariants(&t, &Euclidean);
+        assert_eq!(t.num_points(), 70);
+    }
+
+    #[test]
+    fn all_identical_points() {
+        let mut pts = DenseMatrix::new(2);
+        for _ in 0..10 {
+            pts.push(&[1.0, 1.0]);
+        }
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        check_invariants(&t, &Euclidean);
+        // One internal vertex with 10 duplicate leaves.
+        assert_eq!(t.node(t.root()).radius, 0.0);
+    }
+
+    #[test]
+    fn invariants_hold_hamming() {
+        let mut rng = Rng::new(42);
+        let mut codes = HammingCodes::new(64);
+        for _ in 0..120 {
+            codes.push_bits(&(0..64).map(|_| rng.bool(0.5)).collect::<Vec<_>>());
+        }
+        let t = CoverTree::build(&codes, &Hamming, &BuildParams { leaf_size: 4, root: 0 });
+        check_invariants(&t, &Hamming);
+    }
+
+    #[test]
+    fn invariants_hold_edit_distance() {
+        let mut rng = Rng::new(43);
+        let alphabet = b"ACGT";
+        let strs: Vec<Vec<u8>> = (0..60)
+            .map(|_| (0..10 + rng.below(15)).map(|_| alphabet[rng.below(4)]).collect())
+            .collect();
+        let set = StringSet::from_strs(&strs);
+        let t = CoverTree::build(&set, &Levenshtein, &BuildParams { leaf_size: 2, root: 0 });
+        check_invariants(&t, &Levenshtein);
+    }
+
+    #[test]
+    fn build_distance_calls_subquadratic_on_clustered_data() {
+        // On well-clustered data the batch build should need far fewer than
+        // n² distance calls.
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(44), 1000, 8, 10, 0.05);
+        let counted = Counted::new(Euclidean);
+        let _t = CoverTree::build(&pts, &counted, &BuildParams { leaf_size: 8, root: 0 });
+        let n = 1000u64;
+        assert!(
+            counted.count() < n * n / 4,
+            "build used {} distance calls (n²={})",
+            counted.count(),
+            n * n
+        );
+    }
+
+    #[test]
+    fn custom_root_respected() {
+        let pts = random_dense(45, 30, 2);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 1, root: 17 });
+        assert_eq!(t.node(t.root()).point, 17);
+        check_invariants(&t, &Euclidean);
+    }
+
+    #[test]
+    fn ids_mapping_preserved() {
+        let pts = random_dense(46, 20, 2);
+        let ids: Vec<u32> = (100..120).collect();
+        let t = CoverTree::build_with_ids(pts, ids, &Euclidean, &BuildParams::default());
+        assert_eq!(t.global_id(0), 100);
+        assert_eq!(t.global_id(19), 119);
+    }
+}

@@ -1,0 +1,186 @@
+//! Dual-tree ε self-join — an extension beyond the paper's batched
+//! single-point queries (Algorithm 3): traverse *pairs* of cover-tree
+//! nodes and prune whole subtree pairs at once with
+//! `d(p_u, p_v) > r_u + r_v + ε`.
+//!
+//! For self-joins this does strictly less work than querying every point
+//! against the tree whenever sibling subtrees are far apart; the
+//! `ablation` bench compares it against the batched self-join. The
+//! distributed algorithms keep the paper-faithful batched form as their
+//! default; `eps_self_join_dual` is opt-in.
+
+use super::CoverTree;
+use crate::metric::Metric;
+use crate::points::PointSet;
+
+impl<P: PointSet> CoverTree<P> {
+    /// All unordered pairs of tree points within `eps`, via dual-tree
+    /// traversal. Emits `(gid_a, gid_b)` with `gid_a < gid_b` exactly
+    /// once per pair.
+    pub fn eps_self_join_dual<M, F>(&self, metric: &M, eps: f64, mut emit: F)
+    where
+        M: Metric<P>,
+        F: FnMut(u32, u32),
+    {
+        if self.is_empty() {
+            return;
+        }
+        // Work stack of node pairs (u ≤ v by construction for self pairs).
+        let mut stack: Vec<(u32, u32)> = vec![(self.root(), self.root())];
+        while let Some((u, v)) = stack.pop() {
+            let (nu, nv) = (self.node(u), self.node(v));
+            if u == v {
+                // Self pair: all unordered child pairs + leaf handling.
+                if nu.is_leaf() {
+                    continue; // one point, no pair
+                }
+                let children = self.node_children(u);
+                for (i, &a) in children.iter().enumerate() {
+                    for &b in &children[i..] {
+                        stack.push((a, b));
+                    }
+                }
+                continue;
+            }
+            let pu = self.points().point(nu.point as usize);
+            let pv = self.points().point(nv.point as usize);
+            let d = metric.dist(pu, pv);
+            // Prune: no descendant pair can be within eps.
+            if d > nu.radius + nv.radius + eps {
+                continue;
+            }
+            match (nu.is_leaf(), nv.is_leaf()) {
+                (true, true) => {
+                    if d <= eps {
+                        let (ga, gb) = (self.global_id(nu.point as usize), self.global_id(nv.point as usize));
+                        if ga < gb {
+                            emit(ga, gb);
+                        } else if gb < ga {
+                            emit(gb, ga);
+                        }
+                        // ga == gb impossible: distinct leaves have distinct
+                        // local points, and ids are unique per point.
+                    }
+                }
+                (false, true) => {
+                    for &c in self.node_children(u) {
+                        stack.push((c, v));
+                    }
+                }
+                (true, false) => {
+                    for &c in self.node_children(v) {
+                        stack.push((u, c));
+                    }
+                }
+                (false, false) => {
+                    // Expand the larger-radius side (standard dual-tree
+                    // heuristic: shrinks the pruning bound fastest).
+                    if nu.radius >= nv.radius {
+                        for &c in self.node_children(u) {
+                            stack.push((c, v));
+                        }
+                    } else {
+                        for &c in self.node_children(v) {
+                            stack.push((u, c));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covertree::BuildParams;
+    use crate::metric::{Counted, Euclidean, Hamming, Levenshtein, Metric};
+    use crate::points::{DenseMatrix, PointSet};
+    use crate::util::Rng;
+
+    fn check_matches_batched<P: PointSet, M: Metric<P>>(pts: &P, metric: &M, eps: f64, leaf: usize) {
+        let tree = CoverTree::build(pts, metric, &BuildParams { leaf_size: leaf, root: 0 });
+        let mut dual: Vec<(u32, u32)> = Vec::new();
+        tree.eps_self_join_dual(metric, eps, |a, b| dual.push((a, b)));
+        dual.sort_unstable();
+        dual.dedup();
+        let mut batched: Vec<(u32, u32)> = Vec::new();
+        tree.eps_self_join(metric, eps, |a, b| batched.push((a, b)));
+        batched.sort_unstable();
+        batched.dedup();
+        assert_eq!(dual, batched, "eps={eps} leaf={leaf}");
+    }
+
+    #[test]
+    fn dual_matches_batched_euclidean() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(140), 250, 4, 5, 0.15);
+        for leaf in [1usize, 4, 16] {
+            for eps in [0.05, 0.3, 1.0] {
+                check_matches_batched(&pts, &Euclidean, eps, leaf);
+            }
+        }
+    }
+
+    #[test]
+    fn dual_matches_batched_hamming_and_edit() {
+        let codes = crate::data::synthetic::hamming_clusters(&mut Rng::new(141), 150, 64, 3, 0.08);
+        check_matches_batched(&codes, &Hamming, 12.0, 4);
+        let reads = crate::data::synthetic::reads(&mut Rng::new(142), 80, 24, 4, 0.05);
+        check_matches_batched(&reads, &Levenshtein, 4.0, 2);
+    }
+
+    #[test]
+    fn dual_handles_duplicates() {
+        let mut rng = Rng::new(143);
+        let base = crate::data::synthetic::uniform(&mut rng, 40, 2, 1.0);
+        let pts = crate::data::synthetic::with_duplicates(&mut rng, &base, 30);
+        check_matches_batched(&pts, &Euclidean, 0.2, 8);
+        check_matches_batched(&pts, &Euclidean, 0.0, 8); // dup-only pairs
+    }
+
+    #[test]
+    fn dual_prunes_on_separated_clusters() {
+        // Two far-apart blobs: the dual traversal should evaluate far
+        // fewer distances than the batched per-point queries.
+        let mut pts = DenseMatrix::new(2);
+        let mut rng = Rng::new(144);
+        for _ in 0..200 {
+            pts.push(&[rng.normal_f32() * 0.1, rng.normal_f32() * 0.1]);
+        }
+        for _ in 0..200 {
+            pts.push(&[100.0 + rng.normal_f32() * 0.1, rng.normal_f32() * 0.1]);
+        }
+        let eps = 0.15;
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+
+        let dual_counted = Counted::new(Euclidean);
+        let mut n_dual = 0u64;
+        tree.eps_self_join_dual(&dual_counted, eps, |_, _| n_dual += 1);
+
+        let batch_counted = Counted::new(Euclidean);
+        let mut n_batch = 0u64;
+        tree.eps_self_join(&batch_counted, eps, |_, _| n_batch += 1);
+
+        assert_eq!(n_dual, n_batch, "result sets must agree");
+        assert!(
+            dual_counted.count() < batch_counted.count(),
+            "dual ({}) should beat batched ({}) on separated clusters",
+            dual_counted.count(),
+            batch_counted.count()
+        );
+    }
+
+    #[test]
+    fn dual_empty_and_singleton() {
+        let empty = DenseMatrix::new(2);
+        let t = CoverTree::build(&empty, &Euclidean, &BuildParams::default());
+        let mut called = false;
+        t.eps_self_join_dual(&Euclidean, 1.0, |_, _| called = true);
+        assert!(!called);
+
+        let one = DenseMatrix::from_flat(2, vec![1.0, 1.0]);
+        let t1 = CoverTree::build(&one, &Euclidean, &BuildParams::default());
+        t1.eps_self_join_dual(&Euclidean, 1.0, |_, _| called = true);
+        assert!(!called);
+    }
+}

@@ -1,0 +1,284 @@
+//! Classic consecutive-insertion cover tree (Beygelzimer–Kakade–Langford
+//! 2006) — the construction the paper's *batch* algorithm is designed to
+//! avoid ("a batch construction algorithm that avoids making n
+//! consecutive point insertions").
+//!
+//! Kept as a faithful comparator: the `ablation` bench builds both trees
+//! on the same data and shows where batch construction wins. This
+//! variant uses the textbook explicit `2^level` covers (children of a
+//! level-`l` vertex lie within `2^l`; subtrees span at most `2^{l+1}`),
+//! not the tighter triple radii of the batch tree, so its queries prune
+//! less — one of the two effects the paper's design exploits (the other
+//! being cache-friendly level-by-level partitioning).
+
+use crate::metric::Metric;
+use crate::points::PointSet;
+
+/// A node of the insertion-built tree.
+#[derive(Clone, Debug)]
+struct INode {
+    point: u32,
+    level: i32,
+    children: Vec<u32>,
+}
+
+/// Cover tree built by consecutive single-point insertions.
+pub struct InsertCoverTree<P: PointSet> {
+    points: P,
+    nodes: Vec<INode>,
+    root: Option<u32>,
+}
+
+impl<P: PointSet> InsertCoverTree<P> {
+    /// Build by inserting `points` one at a time, in order.
+    pub fn build<M: Metric<P>>(points: &P, metric: &M) -> Self {
+        let mut t =
+            InsertCoverTree { points: points.clone(), nodes: Vec::new(), root: None };
+        for i in 0..points.len() {
+            t.insert(metric, i as u32);
+        }
+        t
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn push_node(&mut self, point: u32, level: i32) -> u32 {
+        self.nodes.push(INode { point, level, children: Vec::new() });
+        (self.nodes.len() - 1) as u32
+    }
+
+    /// Insert point `p` (index into the owned set).
+    fn insert<M: Metric<P>>(&mut self, metric: &M, p: u32) {
+        let Some(root) = self.root else {
+            self.root = Some(self.push_node(p, 0));
+            return;
+        };
+        let d_root = metric.dist_ij(&self.points, p as usize, self.nodes[root as usize].point as usize);
+        if d_root == 0.0 {
+            // Duplicate of the root point: attach directly beneath it.
+            let lvl = self.nodes[root as usize].level - 1;
+            let leaf = self.push_node(p, lvl);
+            self.nodes[root as usize].children.push(leaf);
+            return;
+        }
+        // Raise the root level until 2^level covers the new point.
+        while pow2(self.nodes[root as usize].level) < d_root {
+            let l = self.nodes[root as usize].level;
+            self.nodes[root as usize].level = l + 1;
+        }
+
+        // Descend with candidate cover sets Q_i = {q : d(p, q) ≤ 2^i}.
+        // Track the deepest level at which some candidate still covers p;
+        // insert as a child there (textbook "any parent works").
+        let mut level = self.nodes[root as usize].level;
+        let mut cover: Vec<(u32, f64)> = vec![(root, d_root)];
+        let mut parent: (u32, f64, i32) = (root, d_root, level); // last valid parent
+        loop {
+            // Children of the cover set at the next level down, including
+            // the implicit self-children (the nodes themselves).
+            let mut next: Vec<(u32, f64)> = Vec::new();
+            let bound = pow2(level - 1);
+            for &(q, dq) in &cover {
+                if dq <= bound {
+                    next.push((q, dq));
+                }
+                for &c in self.nodes[q as usize].children.clone().iter() {
+                    let cn = &self.nodes[c as usize];
+                    if cn.level != level - 1 {
+                        continue;
+                    }
+                    let dc = metric.dist_ij(&self.points, p as usize, cn.point as usize);
+                    if dc == 0.0 {
+                        // Duplicate point: attach beneath the twin.
+                        let leaf = self.push_node(p, cn.level - 1);
+                        self.nodes[c as usize].children.push(leaf);
+                        return;
+                    }
+                    if dc <= bound {
+                        next.push((c, dc));
+                    }
+                }
+            }
+            if next.is_empty() {
+                break;
+            }
+            level -= 1;
+            // The separation constraint needs d(p, parent) ≤ 2^{level};
+            // every member of `next` qualifies. Prefer the closest.
+            let &(best, bd) = next
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            parent = (best, bd, level);
+            cover = next;
+        }
+        // Attach p as a child of `parent` one level below it. The parent's
+        // stored level may sit higher than the level we found it at (an
+        // implicit self-chain); materialize at `found_level - 1`.
+        let (q, _dq, found_level) = parent;
+        let leaf = self.push_node(p, found_level - 1);
+        self.nodes[q as usize].children.push(leaf);
+    }
+
+    /// Fixed-radius query (Algorithm 3 with the `2^{l+1}` subtree bound in
+    /// place of the batch tree's measured triple radius).
+    pub fn query<M: Metric<P>>(&self, metric: &M, q: P::Point<'_>, eps: f64, out: &mut Vec<u32>) {
+        let Some(root) = self.root else { return };
+        let mut stack = vec![root];
+        while let Some(u) = stack.pop() {
+            let n = &self.nodes[u as usize];
+            let d = metric.dist(q, self.points.point(n.point as usize));
+            if d <= eps {
+                out.push(n.point);
+            }
+            // Descendants of a level-l node lie within 2^l + 2^{l-1} + …
+            // < 2^{l+1} of it.
+            if !n.children.is_empty() && d <= pow2(n.level + 1) + eps {
+                stack.extend_from_slice(&n.children);
+            }
+        }
+    }
+
+    /// Structural sanity: every point appears exactly once; children obey
+    /// the 2^level covering bound relative to their parent.
+    pub fn check_invariants<M: Metric<P>>(&self, metric: &M) {
+        let Some(root) = self.root else {
+            assert_eq!(self.points.len(), 0);
+            return;
+        };
+        let mut seen = vec![false; self.points.len()];
+        let mut stack = vec![root];
+        while let Some(u) = stack.pop() {
+            let n = &self.nodes[u as usize];
+            assert!(!seen[n.point as usize], "point {} appears twice", n.point);
+            seen[n.point as usize] = true;
+            for &c in &n.children {
+                let cn = &self.nodes[c as usize];
+                assert!(cn.level < n.level, "child level must drop");
+                let d = metric.dist_ij(&self.points, n.point as usize, cn.point as usize);
+                assert!(
+                    d <= pow2(cn.level + 1) + 1e-9,
+                    "covering violated: child {} at distance {d} from parent (child level {})",
+                    cn.point,
+                    cn.level
+                );
+                stack.push(c);
+            }
+        }
+        assert!(seen.into_iter().all(|s| s), "some point never inserted");
+    }
+}
+
+#[inline]
+fn pow2(l: i32) -> f64 {
+    (l as f64).exp2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::{Counted, Euclidean, Hamming, Metric};
+    use crate::points::{DenseMatrix, PointSet};
+    use crate::util::Rng;
+
+    fn brute<P: PointSet, M: Metric<P>>(pts: &P, metric: &M, q: P::Point<'_>, eps: f64) -> Vec<u32> {
+        let mut out: Vec<u32> = (0..pts.len())
+            .filter(|&i| metric.dist(q, pts.point(i)) <= eps)
+            .map(|i| i as u32)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn insertion_tree_queries_match_brute_force() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(160), 200, 4, 4, 0.2);
+        let t = InsertCoverTree::build(&pts, &Euclidean);
+        t.check_invariants(&Euclidean);
+        for eps in [0.05, 0.3, 1.0] {
+            for qi in 0..15 {
+                let mut got = Vec::new();
+                t.query(&Euclidean, pts.row(qi), eps, &mut got);
+                got.sort_unstable();
+                assert_eq!(got, brute(&pts, &Euclidean, pts.row(qi), eps), "eps={eps} qi={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn insertion_tree_handles_duplicates() {
+        let mut rng = Rng::new(161);
+        let base = crate::data::synthetic::uniform(&mut rng, 30, 2, 1.0);
+        let pts = crate::data::synthetic::with_duplicates(&mut rng, &base, 25);
+        let t = InsertCoverTree::build(&pts, &Euclidean);
+        t.check_invariants(&Euclidean);
+        let mut got = Vec::new();
+        t.query(&Euclidean, pts.row(0), 0.0, &mut got);
+        assert!(!got.is_empty());
+    }
+
+    #[test]
+    fn insertion_tree_hamming() {
+        let codes = crate::data::synthetic::hamming_clusters(&mut Rng::new(162), 120, 64, 3, 0.1);
+        let t = InsertCoverTree::build(&codes, &Hamming);
+        t.check_invariants(&Hamming);
+        let mut got = Vec::new();
+        t.query(&Hamming, codes.code(5), 12.0, &mut got);
+        got.sort_unstable();
+        assert_eq!(got, brute(&codes, &Hamming, codes.code(5), 12.0));
+    }
+
+    #[test]
+    fn batch_tree_prunes_better_than_insertion_tree() {
+        // The motivating comparison: the batch tree's measured triple
+        // radii give tighter pruning than the insertion tree's 2^{l+1}
+        // bound on the same query.
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(163), 1000, 5, 8, 0.05);
+        let eps = 0.15;
+        let ins = InsertCoverTree::build(&pts, &Euclidean);
+        let batch = crate::covertree::CoverTree::build(
+            &pts,
+            &Euclidean,
+            &crate::covertree::BuildParams::default(),
+        );
+        let ci = Counted::new(Euclidean);
+        let cb = Counted::new(Euclidean);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for qi in 0..50 {
+            ins.query(&ci, pts.row(qi), eps, &mut a);
+            batch.query(&cb, pts.row(qi), eps, &mut b);
+        }
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "result sets must agree");
+        assert!(
+            cb.count() < ci.count(),
+            "batch tree ({}) should out-prune insertion tree ({})",
+            cb.count(),
+            ci.count()
+        );
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty = DenseMatrix::new(2);
+        let t = InsertCoverTree::build(&empty, &Euclidean);
+        t.check_invariants(&Euclidean);
+        let mut out = Vec::new();
+        t.query(&Euclidean, &[0.0, 0.0], 1.0, &mut out);
+        assert!(out.is_empty());
+
+        let one = DenseMatrix::from_flat(2, vec![3.0, 4.0]);
+        let t1 = InsertCoverTree::build(&one, &Euclidean);
+        t1.check_invariants(&Euclidean);
+        t1.query(&Euclidean, &[3.0, 4.0], 0.1, &mut out);
+        assert_eq!(out, vec![0]);
+    }
+}

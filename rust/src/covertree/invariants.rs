@@ -1,0 +1,110 @@
+//! Cover-tree invariant checker, used by unit tests and the property suite.
+//!
+//! Checks, for every vertex:
+//! 1. **Nesting** — every internal vertex has a child associated with the
+//!    same point;
+//! 2. **Covering (triple form)** — every descendant leaf point lies within
+//!    `radius(v)` of `point(v)` (this is the bound queries prune with, so it
+//!    is the invariant correctness actually depends on);
+//! 3. **Separating** — siblings under a parent with radius `r` are pairwise
+//!    more than `r/2` apart (vacuous for leaf-only sibling groups created by
+//!    the ζ cutoff and duplicate collapse, matching the relaxed definition);
+//! 4. **Leaf partition** — the multiset of leaf points equals the input
+//!    point multiset (every point appears in exactly one leaf).
+
+use super::CoverTree;
+use crate::metric::Metric;
+use crate::points::PointSet;
+
+/// Panic with a descriptive message if any invariant is violated.
+pub fn check_invariants<P: PointSet, M: Metric<P>>(tree: &CoverTree<P>, metric: &M) {
+    if tree.is_empty() {
+        assert_eq!(tree.num_points(), 0, "non-empty point set but empty tree");
+        return;
+    }
+    let slack = 1e-9;
+    let mut leaf_points: Vec<u32> = Vec::new();
+    let mut stack = vec![tree.root()];
+    while let Some(u) = stack.pop() {
+        let node = tree.node(u);
+        let children = tree.node_children(u);
+        if node.is_leaf() {
+            leaf_points.push(node.point);
+            assert_eq!(node.radius, 0.0, "leaf {u} has nonzero radius");
+            continue;
+        }
+
+        // (1) nesting: some child shares the parent's point, unless all
+        // children are leaves (the ζ cutoff attaches every member of the
+        // hub, including the center, as leaves — nesting still holds
+        // because the center appears among them).
+        assert!(
+            children.iter().any(|&c| tree.node(c).point == node.point),
+            "nesting violated at node {u}"
+        );
+
+        // (2) covering: every descendant leaf within radius of this point.
+        let p = tree.points().point(node.point as usize);
+        let mut sub = vec![u];
+        while let Some(w) = sub.pop() {
+            let wn = tree.node(w);
+            if wn.is_leaf() {
+                let d = metric.dist(p, tree.points().point(wn.point as usize));
+                assert!(
+                    d <= node.radius + slack + 1e-6 * node.radius.abs(),
+                    "covering violated: leaf point {} at distance {d} > radius {} of node {u}",
+                    wn.point,
+                    node.radius
+                );
+            } else {
+                sub.extend_from_slice(tree.node_children(w));
+            }
+        }
+
+        // (3) separating: internal siblings pairwise > r/2 apart.
+        let internal: Vec<u32> =
+            children.iter().copied().filter(|&c| !tree.node(c).is_leaf()).collect();
+        // The separating bound applies to the centers chosen by SplitVertex;
+        // all children (internal or since-collapsed leaves of singleton
+        // hubs) were centers, but ζ-cutoff leaf fans were *members*, not
+        // centers. Distinguish: a leaf fan exists iff every child is a leaf.
+        let all_leaves = children.iter().all(|&c| tree.node(c).is_leaf());
+        if !all_leaves {
+            let r = node.radius;
+            let pts: Vec<u32> = if internal.len() == children.len() {
+                children.iter().map(|&c| tree.node(c).point).collect()
+            } else {
+                // Mixed fan: centers are exactly the children (each child
+                // was created by SplitVertex as a center; singleton hubs
+                // collapse to leaves but were still centers).
+                children.iter().map(|&c| tree.node(c).point).collect()
+            };
+            for i in 0..pts.len() {
+                for j in i + 1..pts.len() {
+                    if pts[i] == pts[j] {
+                        continue; // duplicate points can both be centers only via nesting
+                    }
+                    let d = metric.dist_ij(tree.points(), pts[i] as usize, pts[j] as usize);
+                    assert!(
+                        d > r / 2.0 - slack - 1e-6 * r.abs(),
+                        "separating violated under node {u}: centers {} and {} at distance {d} ≤ r/2 = {}",
+                        pts[i],
+                        pts[j],
+                        r / 2.0
+                    );
+                }
+            }
+        }
+
+        stack.extend_from_slice(children);
+    }
+
+    // (4) leaf partition = input multiset.
+    leaf_points.sort_unstable();
+    let mut want: Vec<u32> = (0..tree.num_points() as u32).collect();
+    want.sort_unstable();
+    assert_eq!(
+        leaf_points, want,
+        "leaf points do not partition the input (every point must appear in exactly one leaf)"
+    );
+}

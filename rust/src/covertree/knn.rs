@@ -1,0 +1,217 @@
+//! k-nearest-neighbor queries — the problem's second formulation from the
+//! paper's introduction ("the k nearest neighbors of every point"),
+//! provided as an extension so downstream users (UMAP/Isomap-style
+//! pipelines) don't need a second index.
+//!
+//! Best-first branch-and-bound over the cover tree: nodes are visited in
+//! order of their lower bound `max(d(q, p_v) − radius_v, 0)`; a node is
+//! pruned once k candidates closer than its bound are known.
+
+use super::CoverTree;
+use crate::metric::Metric;
+use crate::points::PointSet;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Max-heap entry of current k-best candidates.
+#[derive(PartialEq)]
+struct Cand {
+    dist: f64,
+    gid: u32,
+}
+
+impl Eq for Cand {}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap by distance; ties by gid for determinism.
+        self.dist.partial_cmp(&other.dist).unwrap().then(self.gid.cmp(&other.gid))
+    }
+}
+
+/// Min-heap frontier entry (lower bound, node, exact distance to point).
+#[derive(PartialEq)]
+struct Frontier {
+    bound: f64,
+    node: u32,
+    dist: f64,
+}
+
+impl Eq for Frontier {}
+
+impl PartialOrd for Frontier {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Frontier {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for a min-heap on the bound.
+        other.bound.partial_cmp(&self.bound).unwrap().then(other.node.cmp(&self.node))
+    }
+}
+
+impl<P: PointSet> CoverTree<P> {
+    /// The `k` nearest tree points to `query`, as `(global_id, distance)`
+    /// sorted by ascending distance (ties by id). Returns fewer than `k`
+    /// only when the tree holds fewer points. The query point itself is
+    /// *not* excluded — callers joining a set against itself typically
+    /// ask for `k + 1` and drop the self match.
+    pub fn knn<M: Metric<P>>(&self, metric: &M, query: P::Point<'_>, k: usize) -> Vec<(u32, f64)> {
+        if self.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let mut best: BinaryHeap<Cand> = BinaryHeap::with_capacity(k + 1);
+        let mut frontier: BinaryHeap<Frontier> = BinaryHeap::new();
+        let root = self.node(self.root());
+        let d = metric.dist(query, self.points().point(root.point as usize));
+        frontier.push(Frontier { bound: (d - root.radius).max(0.0), node: self.root(), dist: d });
+
+        while let Some(Frontier { bound, node, dist }) = frontier.pop() {
+            // Prune: k candidates at least as close as this bound exist.
+            if best.len() == k && bound >= best.peek().unwrap().dist {
+                break; // the frontier is bound-ordered — nothing better left
+            }
+            let n = self.node(node);
+            if n.is_leaf() {
+                push_cand(&mut best, k, Cand { dist, gid: self.global_id(n.point as usize) });
+                continue;
+            }
+            for &c in self.node_children(node) {
+                let cn = self.node(c);
+                // Nesting reuse: same point as parent ⇒ same distance.
+                let dc = if cn.point == n.point {
+                    dist
+                } else {
+                    metric.dist(query, self.points().point(cn.point as usize))
+                };
+                let cb = (dc - cn.radius).max(0.0);
+                if best.len() < k || cb < best.peek().unwrap().dist {
+                    frontier.push(Frontier { bound: cb, node: c, dist: dc });
+                }
+            }
+        }
+        let mut out: Vec<(u32, f64)> =
+            best.into_sorted_vec().into_iter().map(|c| (c.gid, c.dist)).collect();
+        // into_sorted_vec gives ascending by our Ord (distance, gid).
+        out.truncate(k);
+        out
+    }
+}
+
+fn push_cand(best: &mut BinaryHeap<Cand>, k: usize, c: Cand) {
+    if best.len() < k {
+        best.push(c);
+    } else if let Some(top) = best.peek() {
+        if c.dist < top.dist || (c.dist == top.dist && c.gid < top.gid) {
+            best.pop();
+            best.push(c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covertree::BuildParams;
+    use crate::metric::{Counted, Euclidean, Hamming, Metric};
+    use crate::points::{DenseMatrix, PointSet};
+    use crate::util::Rng;
+
+    fn brute_knn<P: PointSet, M: Metric<P>>(
+        pts: &P,
+        metric: &M,
+        q: P::Point<'_>,
+        k: usize,
+    ) -> Vec<(u32, f64)> {
+        let mut all: Vec<(u32, f64)> =
+            (0..pts.len()).map(|i| (i as u32, metric.dist(q, pts.point(i)))).collect();
+        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all
+    }
+
+    fn assert_knn_equal(got: &[(u32, f64)], want: &[(u32, f64)]) {
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            // Distances must match exactly; ids may differ only on exact ties.
+            assert_eq!(g.1, w.1, "distance mismatch: {g:?} vs {w:?}");
+        }
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(150), 300, 5, 4, 0.2);
+        let queries = crate::data::synthetic::uniform(&mut Rng::new(151), 15, 5, 1.0);
+        for leaf in [1usize, 8] {
+            let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: leaf, root: 0 });
+            for k in [1usize, 5, 17] {
+                for qi in 0..queries.len() {
+                    let got = tree.knn(&Euclidean, queries.row(qi), k);
+                    let want = brute_knn(&pts, &Euclidean, queries.row(qi), k);
+                    assert_knn_equal(&got, &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn knn_hamming() {
+        let codes = crate::data::synthetic::hamming_clusters(&mut Rng::new(152), 200, 64, 4, 0.1);
+        let tree = CoverTree::build(&codes, &Hamming, &BuildParams::default());
+        for qi in [0usize, 50, 199] {
+            let got = tree.knn(&Hamming, codes.code(qi), 8);
+            let want = brute_knn(&codes, &Hamming, codes.code(qi), 8);
+            assert_knn_equal(&got, &want);
+            assert_eq!(got[0].1, 0.0, "self must be the nearest");
+        }
+    }
+
+    #[test]
+    fn knn_edge_cases() {
+        let pts = DenseMatrix::from_flat(1, vec![0.0, 1.0, 2.0]);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        assert!(tree.knn(&Euclidean, &[0.5], 0).is_empty());
+        // k larger than the tree: everything returned, sorted.
+        let all = tree.knn(&Euclidean, &[0.9], 10);
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].0, 1);
+        // empty tree
+        let empty = CoverTree::build(&DenseMatrix::new(1), &Euclidean, &BuildParams::default());
+        assert!(empty.knn(&Euclidean, &[0.0], 3).is_empty());
+    }
+
+    #[test]
+    fn knn_with_duplicates_returns_each_id() {
+        let mut pts = DenseMatrix::new(1);
+        pts.push(&[5.0]);
+        pts.push(&[5.0]);
+        pts.push(&[9.0]);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        let got = tree.knn(&Euclidean, &[5.0], 2);
+        let ids: Vec<u32> = got.iter().map(|&(g, _)| g).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn knn_prunes_versus_linear_scan() {
+        let pts =
+            crate::data::synthetic::gaussian_mixture(&mut Rng::new(153), 3000, 6, 15, 0.02);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 8, root: 0 });
+        let counted = Counted::new(Euclidean);
+        let got = tree.knn(&counted, pts.row(0), 10);
+        assert_eq!(got.len(), 10);
+        assert!(
+            counted.count() < 3000 / 2,
+            "knn used {} distance calls on clustered n=3000",
+            counted.count()
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Shared-memory cover tree with batch construction and batch fixed-radius
+//! queries — Algorithms 1–3 of the paper.
+//!
+//! The tree is built top-down by repeatedly *splitting* vertex triples
+//! `(H, π₁, r)` — a point subset `H`, its root point `π₁`, and the radius
+//! `r = max_{q∈H} d(π₁, q)` — into child triples whose centers form an
+//! `r/2`-net of `H` (covering + separating invariants of Algorithm 1).
+//! Splitting proceeds level by level (Algorithm 2) until every triple is
+//! smaller than the leaf-size parameter `ζ`, at which point its points are
+//! attached as leaf vertices. Duplicate points (distance 0 from their
+//! center) collapse into sibling leaves of a common parent, which keeps the
+//! metric axiom (ii) escape hatch the paper describes.
+//!
+//! Queries (Algorithm 3) walk the tree with the triple radii as the pruning
+//! bound (`d(q, v) ≤ radius(v) + ε` ⇒ descend), which is tighter than the
+//! textbook `2^level` bound. Batch queries amortize traversal state across
+//! a whole query set.
+
+mod build;
+mod dualtree;
+mod incremental;
+mod invariants;
+mod knn;
+mod query;
+
+pub use build::BuildParams;
+pub use incremental::InsertCoverTree;
+pub use invariants::check_invariants;
+
+use crate::metric::Metric;
+use crate::points::PointSet;
+
+/// Sentinel for "no node".
+pub(crate) const NIL: u32 = u32::MAX;
+
+/// A vertex of the cover tree.
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    /// Index of the associated point in the *owned* point set.
+    pub point: u32,
+    /// Upper bound on the distance from `point` to any descendant leaf
+    /// (the vertex-triple radius; 0 for leaves).
+    pub radius: f64,
+    /// Tree level (root highest; each split decrements by one).
+    pub level: i32,
+    /// Offset into the child-index arena.
+    pub(crate) child_off: u32,
+    /// Number of children (0 ⇒ leaf).
+    pub(crate) child_len: u32,
+}
+
+impl Node {
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.child_len == 0
+    }
+}
+
+/// A cover tree over an owned point set.
+///
+/// The tree owns a copy of its points (`P: PointSet`), mirroring the
+/// distributed setting where each rank builds trees over points it received
+/// from other ranks. `ids` maps local point indices back to global vertex
+/// ids so query results can be reported in graph coordinates.
+#[derive(Clone, Debug)]
+pub struct CoverTree<P: PointSet> {
+    points: P,
+    /// Global vertex id of each local point (identity when built standalone).
+    ids: Vec<u32>,
+    nodes: Vec<Node>,
+    children: Vec<u32>,
+    root: u32,
+}
+
+impl<P: PointSet> CoverTree<P> {
+    /// Build over `points` with global ids `0..n`.
+    pub fn build<M: Metric<P>>(points: &P, metric: &M, params: &BuildParams) -> Self {
+        let ids = (0..points.len() as u32).collect();
+        Self::build_with_ids(points.clone(), ids, metric, params)
+    }
+
+    /// Build over an owned point set whose `i`-th point has global id
+    /// `ids[i]`.
+    pub fn build_with_ids<M: Metric<P>>(
+        points: P,
+        ids: Vec<u32>,
+        metric: &M,
+        params: &BuildParams,
+    ) -> Self {
+        assert_eq!(points.len(), ids.len());
+        build::build(points, ids, metric, params)
+    }
+
+    /// The owned point set.
+    pub fn points(&self) -> &P {
+        &self.points
+    }
+
+    /// Global id of local point `i`.
+    #[inline]
+    pub fn global_id(&self, i: usize) -> u32 {
+        self.ids[i]
+    }
+
+    /// All global ids (parallel to `points()`).
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// Number of points in the tree.
+    pub fn num_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Number of tree vertices (internal + leaves).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Root node index ([`NIL`] if the tree is empty).
+    pub fn root(&self) -> u32 {
+        self.root
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.root == NIL
+    }
+
+    #[inline]
+    pub(crate) fn node(&self, i: u32) -> &Node {
+        &self.nodes[i as usize]
+    }
+
+    #[inline]
+    pub(crate) fn node_children(&self, i: u32) -> &[u32] {
+        let n = self.node(i);
+        &self.children[n.child_off as usize..(n.child_off + n.child_len) as usize]
+    }
+
+    /// Iterate over all nodes (index, node).
+    pub fn nodes(&self) -> impl Iterator<Item = (u32, &Node)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (i as u32, n))
+    }
+
+    /// Depth of the tree (number of levels; 0 for empty).
+    pub fn depth(&self) -> usize {
+        if self.is_empty() {
+            return 0;
+        }
+        let mut depth = 0usize;
+        let mut stack = vec![(self.root, 1usize)];
+        while let Some((u, d)) = stack.pop() {
+            depth = depth.max(d);
+            for &c in self.node_children(u) {
+                stack.push((c, d + 1));
+            }
+        }
+        depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::Euclidean;
+    use crate::points::DenseMatrix;
+    use crate::util::Rng;
+
+    fn random_points(seed: u64, n: usize, d: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::new(d);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn empty_tree() {
+        let pts = DenseMatrix::new(3);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        assert!(t.is_empty());
+        assert_eq!(t.num_nodes(), 0);
+        assert_eq!(t.depth(), 0);
+    }
+
+    #[test]
+    fn singleton_tree() {
+        let pts = DenseMatrix::from_flat(2, vec![1.0, 2.0]);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        assert_eq!(t.num_points(), 1);
+        assert!(!t.is_empty());
+        let root = t.node(t.root());
+        assert_eq!(root.radius, 0.0);
+    }
+
+    #[test]
+    fn depth_reasonable_for_random_data() {
+        let pts = random_points(31, 256, 4);
+        let t =
+            CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 1, ..Default::default() });
+        // log-ish depth for low intrinsic dimension; generous bound.
+        assert!(t.depth() <= 40, "depth {} too large", t.depth());
+        assert!(t.num_nodes() >= 256);
+    }
+}

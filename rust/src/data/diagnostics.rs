@@ -1,0 +1,143 @@
+//! Dataset diagnostics: estimators for the quantities the paper's theory
+//! is parameterized by — the **spread** Δ(P) (max/min pairwise distance)
+//! and the **expansion constant** c (smallest c ≥ 2 with
+//! `|B(p, 2r)| ≤ c·|B(p, r)|` for all p, r — we follow the KR'02
+//! doubling form; the paper's displayed inequality is the growth bound).
+//!
+//! Exact computation is Θ(n²·log) — fine at bench scale; both estimators
+//! also take a sample size for larger inputs. Benches use these to report
+//! the intrinsic difficulty of each Table-I analog.
+
+use crate::metric::Metric;
+use crate::points::PointSet;
+use crate::util::Rng;
+
+/// Estimate the spread Δ(P) from `samples` random pairs (exact when
+/// `samples ≥ n(n−1)/2`, in which case all pairs are scanned).
+pub fn estimate_spread<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: &M,
+    samples: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let n = pts.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let all_pairs = n * (n - 1) / 2;
+    let mut min_d = f64::INFINITY;
+    let mut max_d: f64 = 0.0;
+    let mut saw_zero = false;
+    let mut consider = |d: f64| {
+        if d > 0.0 {
+            min_d = min_d.min(d);
+        } else {
+            saw_zero = true; // duplicate pair ⇒ unbounded spread
+        }
+        max_d = max_d.max(d);
+    };
+    if samples >= all_pairs {
+        for i in 0..n {
+            for j in i + 1..n {
+                consider(metric.dist_ij(pts, i, j));
+            }
+        }
+    } else {
+        for _ in 0..samples {
+            let i = rng.below(n);
+            let mut j = rng.below(n - 1);
+            if j >= i {
+                j += 1;
+            }
+            consider(metric.dist_ij(pts, i, j));
+        }
+    }
+    if saw_zero || !min_d.is_finite() {
+        return f64::INFINITY; // duplicates present (or no finite pair)
+    }
+    max_d / min_d
+}
+
+/// Estimate the expansion (doubling growth) constant: sample anchor points
+/// and radii, measure `|B(p, 2r)| / |B(p, r)|`, report the maximum over
+/// samples (a lower bound on the true constant).
+pub fn estimate_expansion_constant<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: &M,
+    anchors: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let n = pts.len();
+    if n < 4 {
+        return 2.0;
+    }
+    let mut worst: f64 = 2.0;
+    let mut dists: Vec<f64> = Vec::with_capacity(n);
+    for _ in 0..anchors {
+        let p = rng.below(n);
+        dists.clear();
+        for j in 0..n {
+            dists.push(metric.dist_ij(pts, p, j));
+        }
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Radii at a few quantiles of the anchor's distance distribution.
+        for q in [0.05f64, 0.1, 0.25, 0.5] {
+            let r = dists[((n as f64 - 1.0) * q) as usize];
+            if r <= 0.0 {
+                continue;
+            }
+            let inner = dists.partition_point(|&d| d <= r);
+            let outer = dists.partition_point(|&d| d <= 2.0 * r);
+            if inner > 0 {
+                worst = worst.max(outer as f64 / inner as f64);
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::Euclidean;
+    use crate::points::DenseMatrix;
+
+    #[test]
+    fn spread_exact_on_small_sets() {
+        let pts = DenseMatrix::from_flat(1, vec![0.0, 1.0, 10.0]);
+        let mut rng = Rng::new(180);
+        let s = estimate_spread(&pts, &Euclidean, 1_000_000, &mut rng);
+        assert!((s - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spread_infinite_with_duplicates() {
+        let pts = DenseMatrix::from_flat(1, vec![0.0, 0.0, 5.0]);
+        let mut rng = Rng::new(181);
+        let s = estimate_spread(&pts, &Euclidean, 1_000_000, &mut rng);
+        assert!(s.is_infinite());
+    }
+
+    #[test]
+    fn expansion_low_for_uniform_line_high_for_clusters() {
+        let mut rng = Rng::new(182);
+        // 1-D uniform grid: doubling a radius roughly doubles the ball.
+        let line = DenseMatrix::from_flat(1, (0..400).map(|i| i as f32).collect());
+        let c_line = estimate_expansion_constant(&line, &Euclidean, 12, &mut rng);
+        assert!((2.0..=4.0).contains(&c_line), "line expansion {c_line}");
+
+        // Tight, well-separated clusters: at r ≈ cluster scale, 2r jumps
+        // across clusters ⇒ large growth ratio.
+        let clustered = crate::data::synthetic::gaussian_mixture(&mut rng, 400, 2, 4, 0.005);
+        let c_cl = estimate_expansion_constant(&clustered, &Euclidean, 12, &mut rng);
+        assert!(c_cl > c_line, "clusters ({c_cl}) should exceed line ({c_line})");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let empty = DenseMatrix::new(2);
+        let mut rng = Rng::new(183);
+        assert_eq!(estimate_spread(&empty, &Euclidean, 10, &mut rng), 1.0);
+        assert_eq!(estimate_expansion_constant(&empty, &Euclidean, 4, &mut rng), 2.0);
+    }
+}

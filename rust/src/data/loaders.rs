@@ -1,0 +1,217 @@
+//! Loaders for the standard nearest-neighbor benchmark interchange formats:
+//! `.fvecs` (f32 vectors), `.bvecs` (u8 vectors), `.ivecs` (i32 vectors),
+//! and a simple whitespace-delimited ASCII matrix. Users with the real
+//! Table-I files (sift, deep, ...) can run the full-size experiments.
+//!
+//! Format: each vector is `[d: i32 little-endian][d elements]`, repeated.
+
+use crate::points::DenseMatrix;
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+/// Read an `.fvecs` file into a [`DenseMatrix`]. `limit` truncates (None =
+/// all vectors).
+pub fn read_fvecs(path: &Path, limit: Option<usize>) -> std::io::Result<DenseMatrix> {
+    let mut f = BufReader::new(File::open(path)?);
+    read_fvecs_from(&mut f, limit)
+}
+
+/// Reader-based variant (unit-testable without touching the filesystem).
+pub fn read_fvecs_from<R: Read>(r: &mut R, limit: Option<usize>) -> std::io::Result<DenseMatrix> {
+    let mut out: Option<DenseMatrix> = None;
+    let mut count = 0usize;
+    loop {
+        if let Some(l) = limit {
+            if count >= l {
+                break;
+            }
+        }
+        let mut dim_buf = [0u8; 4];
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        }
+        let d = i32::from_le_bytes(dim_buf);
+        if d <= 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad fvecs dimension {d}"),
+            ));
+        }
+        let d = d as usize;
+        let mut payload = vec![0u8; d * 4];
+        r.read_exact(&mut payload)?;
+        let row: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let m = out.get_or_insert_with(|| DenseMatrix::new(d));
+        if m.dim() != d {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("inconsistent fvecs dimension: {} then {d}", m.dim()),
+            ));
+        }
+        m.push(&row);
+        count += 1;
+    }
+    Ok(out.unwrap_or_else(|| DenseMatrix::new(1)))
+}
+
+/// Read a `.bvecs` file (u8 elements) into f32s.
+pub fn read_bvecs(path: &Path, limit: Option<usize>) -> std::io::Result<DenseMatrix> {
+    let mut f = BufReader::new(File::open(path)?);
+    read_bvecs_from(&mut f, limit)
+}
+
+pub fn read_bvecs_from<R: Read>(r: &mut R, limit: Option<usize>) -> std::io::Result<DenseMatrix> {
+    let mut out: Option<DenseMatrix> = None;
+    let mut count = 0usize;
+    loop {
+        if let Some(l) = limit {
+            if count >= l {
+                break;
+            }
+        }
+        let mut dim_buf = [0u8; 4];
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        }
+        let d = i32::from_le_bytes(dim_buf);
+        if d <= 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad bvecs dimension {d}"),
+            ));
+        }
+        let d = d as usize;
+        let mut payload = vec![0u8; d];
+        r.read_exact(&mut payload)?;
+        let row: Vec<f32> = payload.iter().map(|&b| b as f32).collect();
+        let m = out.get_or_insert_with(|| DenseMatrix::new(d));
+        if m.dim() != d {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "inconsistent bvecs dimension",
+            ));
+        }
+        m.push(&row);
+        count += 1;
+    }
+    Ok(out.unwrap_or_else(|| DenseMatrix::new(1)))
+}
+
+/// Whitespace-delimited ASCII matrix (one point per line).
+pub fn read_ascii(path: &Path, limit: Option<usize>) -> std::io::Result<DenseMatrix> {
+    let f = BufReader::new(File::open(path)?);
+    let mut out: Option<DenseMatrix> = None;
+    for (ln, line) in f.lines().enumerate() {
+        if let Some(l) = limit {
+            if ln >= l {
+                break;
+            }
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f32>, _> = line.split_whitespace().map(str::parse::<f32>).collect();
+        let row = row.map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {ln}: {e}"))
+        })?;
+        let m = out.get_or_insert_with(|| DenseMatrix::new(row.len()));
+        if m.dim() != row.len() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {ln}: inconsistent dimension"),
+            ));
+        }
+        m.push(&row);
+    }
+    Ok(out.unwrap_or_else(|| DenseMatrix::new(1)))
+}
+
+/// Write a [`DenseMatrix`] in fvecs format (round-trip/testing helper).
+pub fn write_fvecs_to(m: &DenseMatrix, w: &mut impl std::io::Write) -> std::io::Result<()> {
+    use crate::points::PointSet;
+    for i in 0..m.len() {
+        w.write_all(&(m.dim() as i32).to_le_bytes())?;
+        for &x in m.row(i) {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::PointSet;
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let m = DenseMatrix::from_flat(3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut buf = Vec::new();
+        write_fvecs_to(&m, &mut buf).unwrap();
+        let m2 = read_fvecs_from(&mut buf.as_slice(), None).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn fvecs_limit_respected() {
+        let m = DenseMatrix::from_flat(2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut buf = Vec::new();
+        write_fvecs_to(&m, &mut buf).unwrap();
+        let m2 = read_fvecs_from(&mut buf.as_slice(), Some(2)).unwrap();
+        assert_eq!(m2.len(), 2);
+    }
+
+    #[test]
+    fn fvecs_rejects_bad_dim() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(-1i32).to_le_bytes());
+        assert!(read_fvecs_from(&mut buf.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn fvecs_rejects_inconsistent_dim() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2i32.to_le_bytes());
+        buf.extend_from_slice(&1.0f32.to_le_bytes());
+        buf.extend_from_slice(&2.0f32.to_le_bytes());
+        buf.extend_from_slice(&3i32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 12]);
+        assert!(read_fvecs_from(&mut buf.as_slice(), None).is_err());
+    }
+
+    #[test]
+    fn bvecs_reads_bytes_as_f32() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3i32.to_le_bytes());
+        buf.extend_from_slice(&[10u8, 20, 255]);
+        let m = read_bvecs_from(&mut buf.as_slice(), None).unwrap();
+        assert_eq!(m.row(0), &[10.0, 20.0, 255.0]);
+    }
+
+    #[test]
+    fn ascii_loader() {
+        let dir = std::env::temp_dir().join("neargraph_test_ascii");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pts.txt");
+        std::fs::write(&path, "1.0 2.0\n3.5 -4.0\n\n5 6\n").unwrap();
+        let m = read_ascii(&path, None).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.row(1), &[3.5, -4.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_input_gives_empty_matrix() {
+        let m = read_fvecs_from(&mut (&[] as &[u8]), None).unwrap();
+        assert_eq!(m.len(), 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Table-I dataset registry: each paper dataset mapped to a synthetic
+//! analog with the same metric, ambient dimension and a matching sparsity
+//! sweep (three ε values spanning sparse → dense average degree).
+//!
+//! Sizes default to a laptop-scale fraction of the paper's (controlled by
+//! `scale`); benches can request larger instances.
+
+use super::synthetic;
+use crate::points::{DenseMatrix, HammingCodes};
+use crate::util::Rng;
+
+/// Which metric family a dataset uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Euclidean,
+    Hamming,
+}
+
+/// Three target average degrees, mirroring the paper's sparse→dense sweep
+/// for each dataset (Table I's "Avg. neighbors" column).
+pub const DEGREE_SWEEP: [f64; 3] = [15.0, 70.0, 300.0];
+
+/// A Table-I dataset analog.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetSpec {
+    /// Paper dataset name.
+    pub name: &'static str,
+    pub metric: MetricKind,
+    /// Ambient dimension (bits for Hamming).
+    pub dim: usize,
+    /// Paper's point count.
+    pub paper_points: usize,
+    /// Intrinsic (latent) dimension used by the generator.
+    pub intrinsic: usize,
+    /// Number of generator clusters.
+    pub clusters: usize,
+    /// Cluster noise level.
+    pub sigma: f64,
+    /// Paper's three ε values (for EXPERIMENTS.md cross-reference only;
+    /// synthetic runs calibrate their own ε from [`DEGREE_SWEEP`]).
+    pub paper_eps: [f64; 3],
+    /// Paper's three average-degree figures.
+    pub paper_avg_neighbors: [f64; 3],
+}
+
+/// All nine Table-I datasets.
+pub const TABLE1: [DatasetSpec; 9] = [
+    DatasetSpec {
+        name: "faces",
+        metric: MetricKind::Euclidean,
+        dim: 20,
+        paper_points: 10_304,
+        intrinsic: 5,
+        clusters: 20,
+        sigma: 0.08,
+        paper_eps: [50.0, 100.0, 150.0],
+        paper_avg_neighbors: [30.34, 436.09, 1666.84],
+    },
+    DatasetSpec {
+        name: "artificial40",
+        metric: MetricKind::Euclidean,
+        dim: 40,
+        paper_points: 10_000,
+        intrinsic: 8,
+        clusters: 10,
+        sigma: 0.1,
+        paper_eps: [6.0, 7.0, 8.0],
+        paper_avg_neighbors: [11.26, 254.59, 1880.145],
+    },
+    DatasetSpec {
+        name: "corel",
+        metric: MetricKind::Euclidean,
+        dim: 32,
+        paper_points: 68_040,
+        intrinsic: 6,
+        clusters: 30,
+        sigma: 0.08,
+        paper_eps: [0.1, 0.125, 0.15],
+        paper_avg_neighbors: [24.04, 57.37, 132.44],
+    },
+    DatasetSpec {
+        name: "deep",
+        metric: MetricKind::Euclidean,
+        dim: 96,
+        paper_points: 10_000,
+        intrinsic: 10,
+        clusters: 15,
+        sigma: 0.1,
+        paper_eps: [0.8, 1.0, 1.2],
+        paper_avg_neighbors: [16.41, 136.74, 962.09],
+    },
+    DatasetSpec {
+        name: "covtype",
+        metric: MetricKind::Euclidean,
+        dim: 55,
+        paper_points: 581_012,
+        intrinsic: 8,
+        clusters: 40,
+        sigma: 0.06,
+        paper_eps: [150.0, 200.0, 250.0],
+        paper_avg_neighbors: [96.70, 270.85, 641.845],
+    },
+    DatasetSpec {
+        name: "twitter",
+        metric: MetricKind::Euclidean,
+        dim: 78,
+        paper_points: 583_250,
+        intrinsic: 10,
+        clusters: 60,
+        sigma: 0.05,
+        paper_eps: [2.0, 4.0, 6.0],
+        paper_avg_neighbors: [6.73, 59.29, 436.04],
+    },
+    DatasetSpec {
+        name: "sift",
+        metric: MetricKind::Euclidean,
+        dim: 128,
+        paper_points: 1_000_000,
+        intrinsic: 12,
+        clusters: 50,
+        sigma: 0.07,
+        paper_eps: [125.0, 175.0, 225.0],
+        paper_avg_neighbors: [10.24, 71.41, 479.86],
+    },
+    DatasetSpec {
+        name: "sift-hamming",
+        metric: MetricKind::Hamming,
+        dim: 256,
+        paper_points: 988_258,
+        intrinsic: 0, // unused for Hamming
+        clusters: 50,
+        sigma: 0.04, // bit-flip probability
+        paper_eps: [20.0, 30.0, 40.0],
+        paper_avg_neighbors: [26.77, 164.92, 656.29],
+    },
+    DatasetSpec {
+        name: "word2bits",
+        metric: MetricKind::Hamming,
+        dim: 800,
+        paper_points: 399_000,
+        intrinsic: 0,
+        clusters: 40,
+        sigma: 0.05,
+        paper_eps: [200.0, 250.0, 300.0],
+        paper_avg_neighbors: [19.38, 320.68, 5186.16],
+    },
+];
+
+/// Materialized analog data (one of the two containers).
+pub enum Generated {
+    Dense(DenseMatrix),
+    Hamming(HammingCodes),
+}
+
+impl DatasetSpec {
+    /// Look up a spec by paper name.
+    pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+        TABLE1.iter().find(|s| s.name == name)
+    }
+
+    /// Number of points at a given scale factor (≥ 16 regardless).
+    pub fn scaled_points(&self, scale: f64) -> usize {
+        ((self.paper_points as f64 * scale) as usize).max(16)
+    }
+
+    /// Generate the synthetic analog with `n` points.
+    pub fn generate(&self, n: usize, seed: u64) -> Generated {
+        let mut rng = Rng::new(seed ^ fxhash(self.name));
+        match self.metric {
+            MetricKind::Euclidean => Generated::Dense(synthetic::manifold_mixture(
+                &mut rng,
+                n,
+                self.dim,
+                self.intrinsic.max(2),
+                self.clusters,
+                self.sigma,
+            )),
+            MetricKind::Hamming => Generated::Hamming(synthetic::hamming_clusters(
+                &mut rng,
+                n,
+                self.dim,
+                self.clusters,
+                self.sigma,
+            )),
+        }
+    }
+}
+
+/// Tiny FNV-style string hash so each dataset gets an independent stream
+/// from the same user seed.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::PointSet;
+
+    #[test]
+    fn registry_complete() {
+        assert_eq!(TABLE1.len(), 9);
+        for spec in &TABLE1 {
+            assert!(spec.dim > 0);
+            assert!(spec.paper_points > 0);
+            assert!(spec.paper_eps[0] < spec.paper_eps[2]);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(DatasetSpec::by_name("sift").is_some());
+        assert!(DatasetSpec::by_name("word2bits").is_some());
+        assert!(DatasetSpec::by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn generation_matches_spec() {
+        for spec in &TABLE1 {
+            let n = 64;
+            match spec.generate(n, 7) {
+                Generated::Dense(m) => {
+                    assert_eq!(m.len(), n, "{}", spec.name);
+                    assert_eq!(m.dim(), spec.dim, "{}", spec.name);
+                    assert_eq!(spec.metric, MetricKind::Euclidean);
+                }
+                Generated::Hamming(h) => {
+                    assert_eq!(h.len(), n, "{}", spec.name);
+                    assert_eq!(h.bits(), spec.dim, "{}", spec.name);
+                    assert_eq!(spec.metric, MetricKind::Hamming);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_points_floor() {
+        let s = DatasetSpec::by_name("sift").unwrap();
+        assert_eq!(s.scaled_points(1e-9), 16);
+        assert_eq!(s.scaled_points(0.01), 10_000);
+    }
+
+    #[test]
+    fn seeds_give_distinct_datasets() {
+        let s = DatasetSpec::by_name("faces").unwrap();
+        let (a, b) = match (s.generate(32, 1), s.generate(32, 2)) {
+            (Generated::Dense(a), Generated::Dense(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,249 @@
+//! Synthetic point-cloud generators.
+//!
+//! Each generator controls the property that drives the paper's algorithms:
+//! *intrinsic* dimensionality (via a low-dimensional latent space embedded
+//! in the ambient space) and cluster structure (which determines how well
+//! landmark/Voronoi partitioning localizes neighbors).
+
+use crate::points::{DenseMatrix, HammingCodes, PointSet, StringSet};
+use crate::util::Rng;
+
+/// `k` isotropic Gaussian clusters in `dim` dimensions. Cluster centers are
+/// uniform in `[0,1]^dim`; points get noise `N(0, sigma²)` per coordinate.
+pub fn gaussian_mixture(rng: &mut Rng, n: usize, dim: usize, k: usize, sigma: f64) -> DenseMatrix {
+    assert!(k >= 1);
+    let centers: Vec<Vec<f32>> =
+        (0..k).map(|_| (0..dim).map(|_| rng.f32()).collect()).collect();
+    let mut m = DenseMatrix::with_capacity(dim, n);
+    let mut row = vec![0.0f32; dim];
+    for _ in 0..n {
+        let c = &centers[rng.below(k)];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = c[j] + (rng.normal() * sigma) as f32;
+        }
+        m.push(&row);
+    }
+    m
+}
+
+/// Clustered data with *intrinsic* dimension `intrinsic` embedded in
+/// `ambient` dimensions by a fixed random linear map — the "data manifold"
+/// hypothesis that makes the output graph sparse and the cover tree
+/// effective. This is the generator used for the high-dimensional Table-I
+/// analogs (deep/96, sift/128, twitter/78...).
+pub fn manifold_mixture(
+    rng: &mut Rng,
+    n: usize,
+    ambient: usize,
+    intrinsic: usize,
+    k: usize,
+    sigma: f64,
+) -> DenseMatrix {
+    assert!(intrinsic <= ambient);
+    // Random embedding matrix (ambient × intrinsic), entries N(0, 1/√intrinsic).
+    let scale = 1.0 / (intrinsic as f64).sqrt();
+    let embed: Vec<f32> =
+        (0..ambient * intrinsic).map(|_| (rng.normal() * scale) as f32).collect();
+    let latent = gaussian_mixture(rng, n, intrinsic, k, sigma);
+    let mut m = DenseMatrix::with_capacity(ambient, n);
+    let mut row = vec![0.0f32; ambient];
+    for i in 0..n {
+        let z = latent.row(i);
+        for a in 0..ambient {
+            let mut acc = 0.0f32;
+            for b in 0..intrinsic {
+                acc += embed[a * intrinsic + b] * z[b];
+            }
+            // tiny ambient noise so points are not exactly on the manifold
+            row[a] = acc + (rng.normal() * sigma * 0.01) as f32;
+        }
+        m.push(&row);
+    }
+    m
+}
+
+/// Uniform points in `[0, scale]^dim` — the worst case for landmarking
+/// (no cluster structure to exploit).
+pub fn uniform(rng: &mut Rng, n: usize, dim: usize, scale: f64) -> DenseMatrix {
+    let mut m = DenseMatrix::with_capacity(dim, n);
+    let mut row = vec![0.0f32; dim];
+    for _ in 0..n {
+        for slot in row.iter_mut() {
+            *slot = (rng.f64() * scale) as f32;
+        }
+        m.push(&row);
+    }
+    m
+}
+
+/// Copy of `base` with `extra` additional rows duplicated from random
+/// existing rows — stresses the duplicate-point handling in the cover tree
+/// (metric axiom (ii) relaxation) and skews Voronoi cell sizes.
+pub fn with_duplicates(rng: &mut Rng, base: &DenseMatrix, extra: usize) -> DenseMatrix {
+    let mut m = base.clone();
+    for _ in 0..extra {
+        let i = rng.below(base.len());
+        m.push(base.row(i));
+    }
+    m
+}
+
+/// `k` Hamming-space clusters: random ancestor codes, descendants flip each
+/// bit with probability `flip_p` (binary-symmetric-channel noise). Analog of
+/// sift-hamming / word2bits.
+pub fn hamming_clusters(rng: &mut Rng, n: usize, bits: usize, k: usize, flip_p: f64) -> HammingCodes {
+    assert!(k >= 1);
+    let ancestors: Vec<Vec<bool>> =
+        (0..k).map(|_| (0..bits).map(|_| rng.bool(0.5)).collect()).collect();
+    let mut codes = HammingCodes::new(bits);
+    let mut buf = vec![false; bits];
+    for _ in 0..n {
+        let a = &ancestors[rng.below(k)];
+        for (j, slot) in buf.iter_mut().enumerate() {
+            *slot = a[j] ^ rng.bool(flip_p);
+        }
+        codes.push_bits(&buf);
+    }
+    codes
+}
+
+/// Synthetic sequencing reads: `k` random ancestor strings over ACGT of
+/// length `len`, descendants mutated with per-base substitution/indel rate
+/// `mutation_rate`. The edit-distance workload from the paper's intro.
+pub fn reads(rng: &mut Rng, n: usize, len: usize, k: usize, mutation_rate: f64) -> StringSet {
+    const ALPHABET: &[u8; 4] = b"ACGT";
+    let ancestors: Vec<Vec<u8>> = (0..k)
+        .map(|_| (0..len).map(|_| ALPHABET[rng.below(4)]).collect())
+        .collect();
+    let mut set = StringSet::new();
+    let mut buf: Vec<u8> = Vec::with_capacity(len + 8);
+    for _ in 0..n {
+        let a = &ancestors[rng.below(k)];
+        buf.clear();
+        for &base in a {
+            if rng.bool(mutation_rate) {
+                match rng.below(3) {
+                    0 => buf.push(ALPHABET[rng.below(4)]), // substitute
+                    1 => {}                                // delete
+                    _ => {
+                        // insert then keep
+                        buf.push(ALPHABET[rng.below(4)]);
+                        buf.push(base);
+                    }
+                }
+            } else {
+                buf.push(base);
+            }
+        }
+        set.push(&buf);
+    }
+    set
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::{Euclidean, Hamming, Metric};
+    use crate::points::PointSet;
+
+    #[test]
+    fn gaussian_mixture_shape() {
+        let mut rng = Rng::new(80);
+        let m = gaussian_mixture(&mut rng, 100, 5, 3, 0.1);
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.dim(), 5);
+    }
+
+    #[test]
+    fn mixture_is_clustered() {
+        // With tiny sigma, within-cluster distances should be much smaller
+        // than the typical between-cluster distance.
+        let mut rng = Rng::new(81);
+        let m = gaussian_mixture(&mut rng, 200, 4, 4, 0.01);
+        let mut small = 0usize;
+        let mut pairs = 0usize;
+        for i in 0..50 {
+            for j in i + 1..50 {
+                pairs += 1;
+                if Euclidean.dist_ij(&m, i, j) < 0.1 {
+                    small += 1;
+                }
+            }
+        }
+        // Roughly 1/4 of pairs share a cluster.
+        assert!(small > pairs / 10, "not clustered: {small}/{pairs}");
+    }
+
+    #[test]
+    fn manifold_mixture_shape_and_rank() {
+        let mut rng = Rng::new(82);
+        let m = manifold_mixture(&mut rng, 150, 32, 4, 5, 0.1);
+        assert_eq!(m.dim(), 32);
+        assert_eq!(m.len(), 150);
+        // Points should not be degenerate (nonzero spread).
+        let d = Euclidean.dist_ij(&m, 0, 1);
+        assert!(d.is_finite());
+    }
+
+    #[test]
+    fn uniform_in_bounds() {
+        let mut rng = Rng::new(83);
+        let m = uniform(&mut rng, 100, 3, 2.0);
+        for r in m.rows() {
+            for &x in r {
+                assert!((0.0..=2.0).contains(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_added() {
+        let mut rng = Rng::new(84);
+        let base = uniform(&mut rng, 20, 2, 1.0);
+        let d = with_duplicates(&mut rng, &base, 15);
+        assert_eq!(d.len(), 35);
+        // Each extra row matches some base row exactly.
+        for i in 20..35 {
+            assert!((0..20).any(|j| d.row(i) == base.row(j)));
+        }
+    }
+
+    #[test]
+    fn hamming_clusters_are_clustered() {
+        let mut rng = Rng::new(85);
+        let codes = hamming_clusters(&mut rng, 100, 128, 2, 0.02);
+        assert_eq!(codes.len(), 100);
+        // Distances should be bimodal: ~2·0.02·128 ≈ 5 within, ~64 between.
+        let mut within = 0;
+        let mut between = 0;
+        for i in 0..40 {
+            for j in i + 1..40 {
+                let d = Hamming.dist_ij(&codes, i, j);
+                if d < 20.0 {
+                    within += 1;
+                } else if d > 40.0 {
+                    between += 1;
+                }
+            }
+        }
+        assert!(within > 0 && between > 0, "within={within} between={between}");
+    }
+
+    #[test]
+    fn reads_have_plausible_lengths() {
+        let mut rng = Rng::new(86);
+        let set = reads(&mut rng, 50, 40, 3, 0.05);
+        assert_eq!(set.len(), 50);
+        for i in 0..set.len() {
+            let l = set.str_len(i);
+            assert!((25..=55).contains(&l), "read length {l} out of band");
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = gaussian_mixture(&mut Rng::new(99), 50, 4, 3, 0.1);
+        let b = gaussian_mixture(&mut Rng::new(99), 50, 4, 3, 0.1);
+        assert_eq!(a, b);
+    }
+}

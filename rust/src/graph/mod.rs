@@ -1,0 +1,307 @@
+//! ε-graph edge containers: distributed edge lists, dedup/merge into CSR,
+//! degree statistics (the "Avg. neighbors" column of Table I), and graph
+//! equality used by the correctness suite (every distributed algorithm must
+//! reproduce the brute-force edge set exactly).
+
+/// An accumulating set of undirected edges over vertex ids `0..n`.
+///
+/// Edges are stored canonically as `(min, max)` with self-loops rejected;
+/// duplicates are allowed during accumulation and removed by
+/// [`EdgeList::canonicalize`] / [`EdgeList::into_csr`].
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    edges: Vec<(u32, u32)>,
+}
+
+impl EdgeList {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        EdgeList { edges: Vec::with_capacity(cap) }
+    }
+
+    /// Add an undirected edge; self-loops are ignored.
+    #[inline]
+    pub fn push(&mut self, u: u32, v: u32) {
+        if u == v {
+            return;
+        }
+        self.edges.push(if u < v { (u, v) } else { (v, u) });
+    }
+
+    /// Number of stored (possibly duplicated) edge records.
+    pub fn raw_len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Append all edges of `other`.
+    pub fn merge(&mut self, other: &EdgeList) {
+        self.edges.extend_from_slice(&other.edges);
+    }
+
+    /// Sort + dedup in place; afterwards the edge list is a canonical set.
+    pub fn canonicalize(&mut self) {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+    }
+
+    /// Borrow the canonical edges (callers should canonicalize first).
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Serialize to bytes for the comm layer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(8 + self.edges.len() * 8);
+        buf.extend_from_slice(&(self.edges.len() as u64).to_le_bytes());
+        for &(u, v) in &self.edges {
+            buf.extend_from_slice(&u.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        let mut edges = Vec::with_capacity(n);
+        let mut off = 8;
+        for _ in 0..n {
+            let u = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            let v = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+            edges.push((u, v));
+            off += 8;
+        }
+        EdgeList { edges }
+    }
+
+    /// Convert into a CSR adjacency structure over `n` vertices
+    /// (canonicalizes first).
+    pub fn into_csr(mut self, n: usize) -> Csr {
+        self.canonicalize();
+        let mut degree = vec![0u32; n];
+        for &(u, v) in &self.edges {
+            assert!((v as usize) < n, "edge endpoint {v} out of range {n}");
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &d in &degree {
+            acc += d as usize;
+            offsets.push(acc);
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0u32; acc];
+        for &(u, v) in &self.edges {
+            neighbors[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            neighbors[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        // Sort each adjacency row for deterministic output.
+        for i in 0..n {
+            neighbors[offsets[i]..offsets[i + 1]].sort_unstable();
+        }
+        Csr { offsets, neighbors, num_edges: self.edges.len() }
+    }
+}
+
+/// Compressed-sparse-row undirected graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    neighbors: Vec<u32>,
+    num_edges: usize,
+}
+
+impl Csr {
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// Sorted neighbor list of vertex `v`.
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Average vertex degree — the "Avg. neighbors" column of Table I.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            return 0.0;
+        }
+        2.0 * self.num_edges() as f64 / self.num_vertices() as f64
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Connected components via BFS; returns (component id per vertex,
+    /// number of components). Used by the DBSCAN example.
+    pub fn components(&self) -> (Vec<usize>, usize) {
+        let n = self.num_vertices();
+        let mut comp = vec![usize::MAX; n];
+        let mut next = 0usize;
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..n {
+            if comp[s] != usize::MAX {
+                continue;
+            }
+            comp[s] = next;
+            queue.push_back(s);
+            while let Some(u) = queue.pop_front() {
+                for &v in self.neighbors(u) {
+                    if comp[v as usize] == usize::MAX {
+                        comp[v as usize] = next;
+                        queue.push_back(v as usize);
+                    }
+                }
+            }
+            next += 1;
+        }
+        (comp, next)
+    }
+}
+
+/// Degree statistics summary for bench tables.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegreeStats {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+}
+
+impl DegreeStats {
+    pub fn of(g: &Csr) -> Self {
+        DegreeStats {
+            num_vertices: g.num_vertices(),
+            num_edges: g.num_edges(),
+            avg_degree: g.avg_degree(),
+            max_degree: g.max_degree(),
+        }
+    }
+}
+
+/// Assert two canonicalized edge lists describe the same graph; on mismatch
+/// report a few missing/extra edges to ease debugging.
+pub fn assert_same_graph(mut got: EdgeList, mut want: EdgeList, ctx: &str) {
+    got.canonicalize();
+    want.canonicalize();
+    if got.edges() == want.edges() {
+        return;
+    }
+    let gs: std::collections::BTreeSet<_> = got.edges().iter().copied().collect();
+    let ws: std::collections::BTreeSet<_> = want.edges().iter().copied().collect();
+    let missing: Vec<_> = ws.difference(&gs).take(10).collect();
+    let extra: Vec<_> = gs.difference(&ws).take(10).collect();
+    panic!(
+        "{ctx}: edge sets differ (got {} want {}); missing(first 10)={missing:?} extra(first 10)={extra:?}",
+        gs.len(),
+        ws.len()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EdgeList {
+        let mut e = EdgeList::new();
+        e.push(0, 1);
+        e.push(1, 0); // duplicate in other direction
+        e.push(2, 3);
+        e.push(1, 2);
+        e.push(4, 4); // self loop dropped
+        e
+    }
+
+    #[test]
+    fn canonicalize_dedups_and_orders() {
+        let mut e = sample();
+        e.canonicalize();
+        assert_eq!(e.edges(), &[(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn csr_structure() {
+        let g = sample().into_csr(5);
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(4), &[] as &[u32]);
+        assert_eq!(g.degree(2), 2);
+        assert!((g.avg_degree() - 1.2).abs() < 1e-12);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn components_found() {
+        let mut e = EdgeList::new();
+        e.push(0, 1);
+        e.push(2, 3);
+        let g = e.into_csr(5);
+        let (comp, n) = g.components();
+        assert_eq!(n, 3); // {0,1}, {2,3}, {4}
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+        assert_ne!(comp[4], comp[0]);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let e = sample();
+        let e2 = EdgeList::from_bytes(&e.to_bytes());
+        assert_eq!(e.edges(), e2.edges());
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = EdgeList::new();
+        a.push(0, 1);
+        let mut b = EdgeList::new();
+        b.push(1, 2);
+        a.merge(&b);
+        a.canonicalize();
+        assert_eq!(a.edges(), &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn same_graph_passes() {
+        assert_same_graph(sample(), sample(), "identical");
+    }
+
+    #[test]
+    #[should_panic(expected = "edge sets differ")]
+    fn different_graph_panics() {
+        let mut b = sample();
+        b.push(0, 4);
+        assert_same_graph(sample(), b, "test");
+    }
+
+    #[test]
+    fn degree_stats() {
+        let g = sample().into_csr(5);
+        let s = DegreeStats::of(&g);
+        assert_eq!(s.num_edges, 3);
+        assert_eq!(s.num_vertices, 5);
+        assert_eq!(s.max_degree, 2);
+    }
+}

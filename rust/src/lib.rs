@@ -1,0 +1,59 @@
+//! neargraph: distributed-memory parallel fixed-radius near-neighbor graph
+//! construction in general metric spaces.
+//!
+//! Rust reproduction of "Distributed-Memory Parallel Algorithms for
+//! Fixed-Radius Near Neighbor Graph Construction" (Raulet, Morozov, Buluç,
+//! Yelick; 2025). Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack: dense distance tiles are AOT-compiled from JAX/Pallas to HLO and
+//! executed through PJRT (`runtime`), while the coordination algorithms —
+//! the paper's contribution — live here:
+//!
+//! * [`covertree`] — shared-memory batch cover tree (Algorithms 1–3);
+//! * [`dist`] — the three distributed ε-graph algorithms
+//!   (`systolic-ring`, `landmark-coll`, `landmark-ring`; Algorithms 4–6);
+//! * [`comm`] — simulated MPI runtime with an α-β communication cost model
+//!   (substitute for Perlmutter/Cray-MPICH; see DESIGN.md §3);
+//! * [`voronoi`] — landmark selection, distributed Voronoi diagrams and
+//!   multiway number partitioning for cell→rank assignment;
+//! * [`baseline`] — brute force and SNN (Chen & Güttel 2024) comparators;
+//! * [`data`] — synthetic Table-I dataset analogs and fvecs/bvecs loaders.
+//!
+//! Quickstart (single process, all ranks simulated in threads):
+//!
+//! ```no_run
+//! use neargraph::prelude::*;
+//!
+//! let pts = neargraph::data::synthetic::gaussian_mixture(
+//!     &mut Rng::new(42), 500, 8, 4, 0.2);
+//! let graph = neargraph::dist::run_epsilon_graph(
+//!     &pts, Euclidean, 0.5, &RunConfig { ranks: 4, ..Default::default() });
+//! println!("edges: {}", graph.graph.num_edges());
+//! ```
+
+pub mod baseline;
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod covertree;
+pub mod data;
+pub mod dist;
+pub mod graph;
+pub mod metric;
+pub mod points;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+pub mod voronoi;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::covertree::CoverTree;
+    pub use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig, RunResult};
+    pub use crate::graph::{Csr, EdgeList};
+    pub use crate::metric::{
+        Chebyshev, Cosine, Counted, Euclidean, Hamming, Levenshtein, Manhattan, Metric,
+    };
+    pub use crate::points::{DenseMatrix, HammingCodes, PointSet, StringSet};
+    pub use crate::util::Rng;
+}

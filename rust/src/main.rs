@@ -1,0 +1,291 @@
+//! `neargraph` — launcher for distributed ε-graph construction.
+//!
+//! Subcommands:
+//!
+//! * `run`      — build the ε-graph of a Table-I dataset analog (or a file)
+//!   with a chosen algorithm and simulated rank count; prints the graph
+//!   stats, makespan and per-phase breakdown.
+//! * `datasets` — list the built-in Table-I dataset analogs.
+//! * `selfcheck`— quick end-to-end verification (all three algorithms vs
+//!   brute force on a small workload + PJRT artifact check).
+//!
+//! Examples:
+//!
+//! ```text
+//! neargraph run --dataset sift --scale 0.002 --ranks 8 \
+//!     --algorithm landmark-ring --target-degree 70
+//! neargraph run --config experiments/sift.toml
+//! neargraph run --fvecs data/sift.fvecs --eps 175 --ranks 16
+//! ```
+
+use neargraph::baseline::brute_force_edges;
+use neargraph::bench::{build_workload, Workload};
+use neargraph::cli::Args;
+use neargraph::config::ExperimentConfig;
+use neargraph::data::registry::{DatasetSpec, TABLE1};
+use neargraph::dist::{run_epsilon_graph, Algorithm, RunConfig, RunResult};
+use neargraph::graph::DegreeStats;
+use neargraph::metric::{Euclidean, Hamming};
+use neargraph::prelude::*;
+use neargraph::util::fmt_secs;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => fail(&e),
+    };
+    let code = match args.positional(0) {
+        Some("run") => cmd_run(&args),
+        Some("datasets") => cmd_datasets(&args),
+        Some("selfcheck") => cmd_selfcheck(&args),
+        Some(other) => Err(format!("unknown command {other:?}\n{USAGE}")),
+        None => Err(USAGE.to_string()),
+    };
+    if let Err(e) = code {
+        fail(&e);
+    }
+}
+
+const USAGE: &str = "usage: neargraph <run|datasets|selfcheck> [flags]
+  run flags:
+    --config <file.toml>         load an experiment config
+    --dataset <name>             Table-I analog (see `neargraph datasets`)
+    --fvecs <file>               load a real .fvecs dataset instead
+    --scale <f>                  fraction of the paper's point count
+    --points <n>                 explicit point count (overrides --scale)
+    --eps <f>                    radius (omit to calibrate)
+    --target-degree <f>          degree target for ε calibration
+    --algorithm <name>           systolic-ring | landmark-coll | landmark-ring
+    --ranks <n>                  simulated MPI ranks
+    --num-centers <m>            Voronoi landmarks (0 = auto)
+    --leaf-size <z>              cover-tree leaf size
+    --seed <n>                   RNG seed
+    --verify                     also run brute force and compare
+    --phases                     print the per-rank phase breakdown
+    --output <file>              write the edge list (u v per line)";
+
+fn fail(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+fn cmd_datasets(args: &Args) -> Result<(), String> {
+    args.reject_unknown()?;
+    println!("{:<14} {:>9} {:>5}  {:<9}  paper ε sweep", "name", "points", "dim", "metric");
+    for s in &TABLE1 {
+        println!(
+            "{:<14} {:>9} {:>5}  {:<9}  {:?}",
+            s.name,
+            s.paper_points,
+            s.dim,
+            format!("{:?}", s.metric).to_lowercase(),
+            s.paper_eps
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    // Resolve the configuration: file first, flags override.
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            ExperimentConfig::from_toml(&text)?
+        }
+        None => ExperimentConfig::default(),
+    };
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(v) = args.get_f64("scale")? {
+        cfg.scale = v;
+    }
+    if let Some(v) = args.get_usize("points")? {
+        cfg.points = v;
+    }
+    if let Some(v) = args.get_f64("eps")? {
+        cfg.eps = v;
+    }
+    if let Some(v) = args.get_f64("target-degree")? {
+        cfg.target_degree = v;
+    }
+    if let Some(v) = args.get_usize("ranks")? {
+        cfg.run.ranks = v;
+    }
+    if let Some(a) = args.get("algorithm") {
+        cfg.run.algorithm = Algorithm::parse(a).ok_or_else(|| format!("unknown algorithm {a:?}"))?;
+    }
+    if let Some(v) = args.get_usize("num-centers")? {
+        cfg.run.num_centers = v;
+    }
+    if let Some(v) = args.get_usize("leaf-size")? {
+        cfg.run.leaf_size = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+        cfg.run.seed = v as u64;
+    }
+    let verify = args.get_bool("verify")?;
+    let phases = args.get_bool("phases")?;
+    let fvecs = args.get("fvecs").map(str::to_string);
+    let output = args.get("output").map(str::to_string);
+    args.reject_unknown()?;
+
+    // Materialize the workload.
+    if let Some(path) = fvecs {
+        let pts = neargraph::data::loaders::read_fvecs(
+            std::path::Path::new(&path),
+            if cfg.points > 0 { Some(cfg.points) } else { None },
+        )
+        .map_err(|e| format!("{path}: {e}"))?;
+        let eps = resolve_eps_dense(&pts, &cfg);
+        let res = run_epsilon_graph(&pts, Euclidean, eps, &cfg.run);
+        report(&cfg, eps, pts.len(), &res, phases);
+        write_output(output.as_deref(), &res)?;
+        if verify {
+            verify_against_brute(&pts, &Euclidean, eps, &res)?;
+        }
+        return Ok(());
+    }
+
+    let spec = DatasetSpec::by_name(&cfg.dataset)
+        .ok_or_else(|| format!("unknown dataset {:?} (see `neargraph datasets`)", cfg.dataset))?;
+    let n = if cfg.points > 0 { cfg.points } else { spec.scaled_points(cfg.scale) };
+    println!(
+        "dataset={} n={n} dim={} metric={:?} algorithm={} ranks={}",
+        spec.name, spec.dim, spec.metric, cfg.run.algorithm.name(), cfg.run.ranks
+    );
+    let workload = build_workload(spec, n, cfg.seed);
+    match workload {
+        Workload::Dense { pts, .. } => {
+            let eps = resolve_eps_dense(&pts, &cfg);
+            let res = run_epsilon_graph(&pts, Euclidean, eps, &cfg.run);
+            report(&cfg, eps, pts.len(), &res, phases);
+            write_output(output.as_deref(), &res)?;
+            if verify {
+                verify_against_brute(&pts, &Euclidean, eps, &res)?;
+            }
+        }
+        Workload::Hamming { codes, .. } => {
+            let eps = resolve_eps_hamming(&codes, &cfg);
+            let res = run_epsilon_graph(&codes, Hamming, eps, &cfg.run);
+            report(&cfg, eps, codes.len(), &res, phases);
+            write_output(output.as_deref(), &res)?;
+            if verify {
+                verify_against_brute(&codes, &Hamming, eps, &res)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn resolve_eps_dense(pts: &DenseMatrix, cfg: &ExperimentConfig) -> f64 {
+    if cfg.eps > 0.0 {
+        return cfg.eps;
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xE95);
+    neargraph::data::calibrate_eps(pts, &Euclidean, cfg.target_degree, 50_000, &mut rng)
+}
+
+fn resolve_eps_hamming(codes: &HammingCodes, cfg: &ExperimentConfig) -> f64 {
+    if cfg.eps > 0.0 {
+        return cfg.eps;
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xE95);
+    neargraph::data::calibrate_eps(codes, &Hamming, cfg.target_degree, 50_000, &mut rng)
+}
+
+fn report(cfg: &ExperimentConfig, eps: f64, _n: usize, res: &RunResult, phases: bool) {
+    let stats = DegreeStats::of(&res.graph);
+    println!("eps={eps:.6}");
+    println!(
+        "graph: {} vertices, {} edges, avg degree {:.2}, max degree {}",
+        stats.num_vertices, stats.num_edges, stats.avg_degree, stats.max_degree
+    );
+    println!(
+        "simulated makespan: {} on {} ranks ({})",
+        fmt_secs(res.makespan),
+        cfg.run.ranks,
+        cfg.run.algorithm.name()
+    );
+    if phases {
+        println!("\nper-rank phase breakdown (compute+comm seconds):");
+        for r in &res.ranks {
+            print!("  rank {:>3}: ", r.rank);
+            for name in r.stats.phase_order() {
+                let p = r.stats.phases()[name];
+                if p.total() > 0.0 {
+                    print!("{name}={:.4}+{:.4} ", p.compute, p.comm);
+                }
+            }
+            println!("| bytes_sent={}", r.stats.bytes_sent());
+        }
+    }
+}
+
+/// Write the canonical edge list as "u v" lines.
+fn write_output(path: Option<&str>, res: &RunResult) -> Result<(), String> {
+    let Some(path) = path else { return Ok(()) };
+    use std::io::Write;
+    let f = std::fs::File::create(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    for &(u, v) in res.edges.edges() {
+        writeln!(w, "{u} {v}").map_err(|e| format!("{path}: {e}"))?;
+    }
+    println!("wrote {} edges to {path}", res.edges.edges().len());
+    Ok(())
+}
+
+fn verify_against_brute<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: &M,
+    eps: f64,
+    res: &RunResult,
+) -> Result<(), String> {
+    println!("verifying against brute force...");
+    let want = brute_force_edges(pts, metric, eps);
+    if res.edges.edges() == want.edges() {
+        println!("VERIFIED: exact match ({} edges)", want.edges().len());
+        Ok(())
+    } else {
+        Err(format!(
+            "edge sets differ: got {} want {}",
+            res.edges.edges().len(),
+            want.edges().len()
+        ))
+    }
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<(), String> {
+    args.reject_unknown()?;
+    // 1. distributed algorithms vs brute force
+    let pts = neargraph::data::synthetic::gaussian_mixture(&mut Rng::new(7), 200, 6, 5, 0.12);
+    let eps = 0.3;
+    let want = brute_force_edges(&pts, &Euclidean, eps);
+    for algo in Algorithm::ALL {
+        let cfg = RunConfig { ranks: 4, algorithm: algo, ..Default::default() };
+        let got = run_epsilon_graph(&pts, Euclidean, eps, &cfg);
+        if got.edges.edges() != want.edges() {
+            return Err(format!("selfcheck failed: {} edge mismatch", algo.name()));
+        }
+        println!("OK {} ({} edges, makespan {})", algo.name(), want.edges().len(),
+                 fmt_secs(got.makespan));
+    }
+    // 2. PJRT artifacts
+    match neargraph::runtime::PjrtEngine::load_default() {
+        Some(engine) => {
+            use neargraph::metric::engine::{NativeBackend, TileBackend};
+            let q = pts.slice(0, 64);
+            let a = engine.euclidean_tile(&q, &q);
+            let b = NativeBackend.euclidean_tile(&q, &q);
+            let max_err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            if max_err > 1e-2 {
+                return Err(format!("selfcheck failed: PJRT tile max err {max_err}"));
+            }
+            println!("OK pjrt engine (max tile err {max_err:.2e} vs native)");
+        }
+        None => println!("SKIP pjrt engine (artifacts not built; run `make artifacts`)"),
+    }
+    println!("selfcheck passed");
+    Ok(())
+}

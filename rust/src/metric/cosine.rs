@@ -1,0 +1,75 @@
+//! Angular (cosine) distance — `d(x, y) = arccos(⟨x,y⟩ / (‖x‖‖y‖))`.
+//!
+//! Plain "cosine distance" `1 − cos θ` violates the triangle inequality;
+//! the *angle* itself is a true metric on the unit sphere (it is the
+//! geodesic distance), which is what cover trees require.
+
+use super::Metric;
+use crate::points::DenseMatrix;
+
+/// Angular metric on [`DenseMatrix`] rows. Zero vectors are treated as
+/// distance π/2 from everything except other zero vectors (distance 0).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cosine;
+
+impl Metric<DenseMatrix> for Cosine {
+    fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        let mut dot = 0.0f64;
+        let mut na = 0.0f64;
+        let mut nb = 0.0f64;
+        for i in 0..a.len() {
+            dot += a[i] as f64 * b[i] as f64;
+            na += a[i] as f64 * a[i] as f64;
+            nb += b[i] as f64 * b[i] as f64;
+        }
+        if na == 0.0 && nb == 0.0 {
+            return 0.0;
+        }
+        if na == 0.0 || nb == 0.0 {
+            return std::f64::consts::FRAC_PI_2;
+        }
+        let c = (dot / (na.sqrt() * nb.sqrt())).clamp(-1.0, 1.0);
+        c.acos()
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine-angular"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::axioms::check_axioms;
+    use crate::points::DenseMatrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_angles() {
+        let c = Cosine;
+        assert!(c.dist(&[1.0, 0.0], &[1.0, 0.0]).abs() < 1e-9);
+        assert!((c.dist(&[1.0, 0.0], &[0.0, 1.0]) - std::f64::consts::FRAC_PI_2).abs() < 1e-9);
+        assert!((c.dist(&[1.0, 0.0], &[-1.0, 0.0]) - std::f64::consts::PI).abs() < 1e-9);
+        // scale invariance
+        assert!(c.dist(&[2.0, 2.0], &[5.0, 5.0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_vector_convention() {
+        let c = Cosine;
+        assert_eq!(c.dist(&[0.0, 0.0], &[0.0, 0.0]), 0.0);
+        assert_eq!(c.dist(&[0.0, 0.0], &[1.0, 0.0]), std::f64::consts::FRAC_PI_2);
+    }
+
+    #[test]
+    fn axioms_hold_on_nonzero_vectors() {
+        let mut rng = Rng::new(10);
+        let mut m = DenseMatrix::new(6);
+        for _ in 0..8 {
+            // keep vectors away from zero so identity axiom applies cleanly
+            let row: Vec<f32> = (0..6).map(|_| rng.normal_f32() + 0.1).collect();
+            m.push(&row);
+        }
+        check_axioms(&m, &Cosine, 1e-7);
+    }
+}

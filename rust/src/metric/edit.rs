@@ -1,0 +1,212 @@
+//! Levenshtein edit distance on byte strings — the canonical expensive
+//! non-Euclidean metric (genomics) the paper's introduction motivates.
+//!
+//! Two-row dynamic program, O(|a|·|b|) time, O(min(|a|,|b|)) space, with a
+//! common-prefix/suffix strip that matters a lot on read-like data.
+
+use super::Metric;
+use crate::points::StringSet;
+
+/// Levenshtein (unit-cost insert/delete/substitute) metric on [`StringSet`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Levenshtein;
+
+/// Edit distance between two byte strings.
+pub fn levenshtein(a: &[u8], b: &[u8]) -> usize {
+    // Strip common prefix and suffix — cheap and very effective on
+    // mutated-read workloads.
+    let mut lo = 0;
+    while lo < a.len() && lo < b.len() && a[lo] == b[lo] {
+        lo += 1;
+    }
+    let (a, b) = (&a[lo..], &b[lo..]);
+    let mut hi = 0;
+    while hi < a.len() && hi < b.len() && a[a.len() - 1 - hi] == b[b.len() - 1 - hi] {
+        hi += 1;
+    }
+    let (a, b) = (&a[..a.len() - hi], &b[..b.len() - hi]);
+    // Ensure the DP row is the shorter string.
+    let (a, b) = if a.len() > b.len() { (b, a) } else { (a, b) };
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut row: Vec<usize> = (0..=a.len()).collect();
+    for (j, &bc) in b.iter().enumerate() {
+        let mut prev_diag = row[0];
+        row[0] = j + 1;
+        for (i, &ac) in a.iter().enumerate() {
+            let sub = prev_diag + usize::from(ac != bc);
+            prev_diag = row[i + 1];
+            row[i + 1] = sub.min(row[i] + 1).min(prev_diag + 1);
+        }
+    }
+    row[a.len()]
+}
+
+/// Banded (Ukkonen) edit distance: returns `Some(d)` when `d ≤ k`, else
+/// `None`, in O(k·min(|a|,|b|)) time instead of O(|a|·|b|).
+///
+/// Useful for pre-filtering ε-graph candidates in read-overlap pipelines
+/// where ε ≪ read length (the `genomic_reads` example's regime). The
+/// exact distance is required by the cover tree's *pruning bound* (it
+/// compares against `radius + ε`, not ε), so this is an application-level
+/// accelerator rather than a drop-in `Metric`.
+pub fn levenshtein_bounded(a: &[u8], b: &[u8], k: usize) -> Option<usize> {
+    // Length difference is a lower bound on the distance.
+    let (a, b) = if a.len() > b.len() { (b, a) } else { (a, b) };
+    if b.len() - a.len() > k {
+        return None;
+    }
+    if k == 0 {
+        return (a == b).then_some(0);
+    }
+    let n = a.len();
+    let m = b.len();
+    let inf = usize::MAX / 2;
+    // DP over a (2k+1)-wide band around the diagonal.
+    let width = 2 * k + 1;
+    let mut prev = vec![inf; width];
+    let mut cur = vec![inf; width];
+    // Band index w corresponds to j = i + (w as isize - k as isize).
+    for (w, slot) in prev.iter_mut().enumerate() {
+        // Row i = 0: dp[0][j] = j for j in band.
+        let j = w as isize - k as isize;
+        if (0..=m as isize).contains(&j) {
+            *slot = j as usize;
+        }
+    }
+    for i in 1..=n {
+        for w in 0..width {
+            let j = i as isize + w as isize - k as isize;
+            cur[w] = inf;
+            if j < 0 || j > m as isize {
+                continue;
+            }
+            let j = j as usize;
+            if j == 0 {
+                cur[w] = i;
+                continue;
+            }
+            // dp[i][j] from dp[i-1][j-1] (same w), dp[i-1][j] (w+1),
+            // dp[i][j-1] (w-1).
+            let sub = prev[w] + usize::from(a[i - 1] != b[j - 1]);
+            let del = if w + 1 < width { prev[w + 1] + 1 } else { inf };
+            let ins = if w > 0 { cur[w - 1] + 1 } else { inf };
+            cur[w] = sub.min(del).min(ins);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        if prev.iter().all(|&v| v > k) {
+            return None; // the whole band exceeded k — early exit
+        }
+    }
+    let w = m as isize - n as isize + k as isize;
+    if !(0..width as isize).contains(&w) {
+        return None;
+    }
+    let d = prev[w as usize];
+    (d <= k).then_some(d)
+}
+
+impl Metric<StringSet> for Levenshtein {
+    #[inline]
+    fn dist(&self, a: &[u8], b: &[u8]) -> f64 {
+        levenshtein(a, b) as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "levenshtein"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::axioms::check_axioms;
+    use crate::points::StringSet;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(levenshtein(b"kitten", b"sitting"), 3);
+        assert_eq!(levenshtein(b"", b"abc"), 3);
+        assert_eq!(levenshtein(b"abc", b""), 3);
+        assert_eq!(levenshtein(b"abc", b"abc"), 0);
+        assert_eq!(levenshtein(b"flaw", b"lawn"), 2);
+        assert_eq!(levenshtein(b"ACGT", b"AGT"), 1);
+    }
+
+    #[test]
+    fn prefix_suffix_strip_is_sound() {
+        // Cases engineered around the strip: shared prefix AND suffix.
+        assert_eq!(levenshtein(b"xxabyy", b"xxbayy"), 2);
+        assert_eq!(levenshtein(b"aaaa", b"aaa"), 1);
+        assert_eq!(levenshtein(b"abcabc", b"abc"), 3);
+    }
+
+    #[test]
+    fn naive_dp_agreement_on_random_strings() {
+        fn naive(a: &[u8], b: &[u8]) -> usize {
+            let mut dp = vec![vec![0usize; b.len() + 1]; a.len() + 1];
+            for i in 0..=a.len() {
+                dp[i][0] = i;
+            }
+            for j in 0..=b.len() {
+                dp[0][j] = j;
+            }
+            for i in 1..=a.len() {
+                for j in 1..=b.len() {
+                    dp[i][j] = (dp[i - 1][j - 1] + usize::from(a[i - 1] != b[j - 1]))
+                        .min(dp[i - 1][j] + 1)
+                        .min(dp[i][j - 1] + 1);
+                }
+            }
+            dp[a.len()][b.len()]
+        }
+        let mut rng = Rng::new(12);
+        let alphabet = b"ACGT";
+        for _ in 0..50 {
+            let la = rng.below(20);
+            let lb = rng.below(20);
+            let a: Vec<u8> = (0..la).map(|_| alphabet[rng.below(4)]).collect();
+            let b: Vec<u8> = (0..lb).map(|_| alphabet[rng.below(4)]).collect();
+            assert_eq!(levenshtein(&a, &b), naive(&a, &b));
+        }
+    }
+
+    #[test]
+    fn axioms_hold() {
+        let s = StringSet::from_strs(&["ACGT", "ACG", "TTTT", "", "ACGTACGT", "GATTACA"]);
+        check_axioms(&s, &Levenshtein, 0.0);
+    }
+
+    #[test]
+    fn bounded_agrees_with_exact_within_k() {
+        let mut rng = Rng::new(14);
+        let alphabet = b"ACGT";
+        for _ in 0..200 {
+            let la = rng.below(25);
+            let lb = rng.below(25);
+            let a: Vec<u8> = (0..la).map(|_| alphabet[rng.below(4)]).collect();
+            let b: Vec<u8> = (0..lb).map(|_| alphabet[rng.below(4)]).collect();
+            let exact = levenshtein(&a, &b);
+            for k in [0usize, 1, 3, 8, 30] {
+                let got = levenshtein_bounded(&a, &b, k);
+                if exact <= k {
+                    assert_eq!(got, Some(exact), "k={k} a={a:?} b={b:?}");
+                } else {
+                    assert_eq!(got, None, "k={k} exact={exact} a={a:?} b={b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_edge_cases() {
+        assert_eq!(levenshtein_bounded(b"", b"", 0), Some(0));
+        assert_eq!(levenshtein_bounded(b"", b"abc", 2), None);
+        assert_eq!(levenshtein_bounded(b"", b"abc", 3), Some(3));
+        assert_eq!(levenshtein_bounded(b"same", b"same", 0), Some(0));
+        assert_eq!(levenshtein_bounded(b"kitten", b"sitting", 3), Some(3));
+        assert_eq!(levenshtein_bounded(b"kitten", b"sitting", 2), None);
+    }
+}

@@ -1,0 +1,172 @@
+//! Dense distance-tile engine.
+//!
+//! The irregular tree traversals evaluate distances one pair at a time
+//! through [`super::Metric`]; the *dense* phases (brute-force baseline,
+//! Voronoi center assignment, SNN block queries, batched leaf filtering)
+//! instead compute whole `|Q| × |R|` distance tiles at once. Those tiles
+//! have two interchangeable backends:
+//!
+//! * [`NativeBackend`] — hand-written Rust loops (this file);
+//! * `PjrtBackend` (in [`crate::runtime`]) — the AOT-compiled JAX/Pallas
+//!   kernel executed through the PJRT CPU client.
+//!
+//! Both produce distances in the same matmul-friendly formulation
+//! (`‖x‖² + ‖y‖² − 2⟨x,y⟩` for Euclidean, `‖x‖₁ + ‖y‖₁ − 2⟨x,y⟩` for
+//! Hamming on 0/1 encodings), so they can be compared tile-for-tile in
+//! tests and benches.
+
+use crate::points::{DenseMatrix, HammingCodes, PointSet};
+
+/// A backend that can produce dense distance tiles.
+pub trait TileBackend: Send + Sync {
+    /// Row-major `|q| × |r|` Euclidean distance tile.
+    fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32>;
+
+    /// Row-major `|q| × |r|` Hamming distance tile.
+    fn hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Vec<f32>;
+
+    /// Row-major `|q| × |r|` Manhattan (l1) distance tile.
+    fn manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32>;
+
+    /// Identifier for bench tables.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust tile backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl TileBackend for NativeBackend {
+    fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+        assert_eq!(q.dim(), r.dim(), "dimension mismatch");
+        let (nq, nr) = (q.len(), r.len());
+        let mut out = vec![0.0f32; nq * nr];
+        for i in 0..nq {
+            let qi = q.row(i);
+            let row = &mut out[i * nr..(i + 1) * nr];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = super::euclidean::sq_dist(qi, r.row(j)).max(0.0).sqrt();
+            }
+        }
+        out
+    }
+
+    fn hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Vec<f32> {
+        assert_eq!(q.bits(), r.bits(), "code width mismatch");
+        let (nq, nr) = (q.len(), r.len());
+        let mut out = vec![0.0f32; nq * nr];
+        for i in 0..nq {
+            let qi = q.code(i);
+            let row = &mut out[i * nr..(i + 1) * nr];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = super::hamming::hamming_words(qi, r.code(j)) as f32;
+            }
+        }
+        out
+    }
+
+    fn manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+        assert_eq!(q.dim(), r.dim(), "dimension mismatch");
+        let (nq, nr) = (q.len(), r.len());
+        let mut out = vec![0.0f32; nq * nr];
+        for i in 0..nq {
+            let qi = q.row(i);
+            let row = &mut out[i * nr..(i + 1) * nr];
+            for (j, slot) in row.iter_mut().enumerate() {
+                let rj = r.row(j);
+                let mut s = 0.0f32;
+                for k in 0..qi.len() {
+                    s += (qi[k] - rj[k]).abs();
+                }
+                *slot = s;
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Scan a distance tile for entries `≤ eps`, reporting (query, ref) index
+/// pairs — the shared post-processing step of the dense phases.
+pub fn tile_neighbors(tile: &[f32], nq: usize, nr: usize, eps: f64) -> Vec<(usize, usize)> {
+    debug_assert_eq!(tile.len(), nq * nr);
+    let eps = eps as f32;
+    let mut out = Vec::new();
+    for i in 0..nq {
+        let row = &tile[i * nr..(i + 1) * nr];
+        for (j, &d) in row.iter().enumerate() {
+            if d <= eps {
+                out.push((i, j));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::{Euclidean, Hamming, Metric};
+    use crate::points::PointSet;
+    use crate::util::Rng;
+
+    fn random_dense(rng: &mut Rng, n: usize, d: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::new(d);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn native_euclidean_tile_matches_metric() {
+        let mut rng = Rng::new(20);
+        let q = random_dense(&mut rng, 7, 10);
+        let r = random_dense(&mut rng, 5, 10);
+        let tile = NativeBackend.euclidean_tile(&q, &r);
+        for i in 0..q.len() {
+            for j in 0..r.len() {
+                let want = Euclidean.dist_between(&q, i, &r, j) as f32;
+                let got = tile[i * r.len() + j];
+                assert!((want - got).abs() < 1e-4, "({i},{j}): {want} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_hamming_tile_matches_metric() {
+        let mut rng = Rng::new(21);
+        let mut q = HammingCodes::new(96);
+        let mut r = HammingCodes::new(96);
+        for _ in 0..6 {
+            q.push_bits(&(0..96).map(|_| rng.bool(0.5)).collect::<Vec<_>>());
+            r.push_bits(&(0..96).map(|_| rng.bool(0.5)).collect::<Vec<_>>());
+        }
+        let tile = NativeBackend.hamming_tile(&q, &r);
+        for i in 0..q.len() {
+            for j in 0..r.len() {
+                let want = Hamming.dist_between(&q, i, &r, j) as f32;
+                assert_eq!(tile[i * r.len() + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn tile_neighbors_filters_correctly() {
+        let tile = vec![0.5, 2.0, 1.0, 0.0];
+        let nb = tile_neighbors(&tile, 2, 2, 1.0);
+        assert_eq!(nb, vec![(0, 0), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn empty_tiles() {
+        let q = DenseMatrix::new(3);
+        let r = DenseMatrix::new(3);
+        assert!(NativeBackend.euclidean_tile(&q, &r).is_empty());
+        assert!(tile_neighbors(&[], 0, 0, 1.0).is_empty());
+    }
+}

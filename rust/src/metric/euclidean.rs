@@ -1,0 +1,98 @@
+//! Euclidean (l2) distance on dense f32 rows.
+//!
+//! This is the hot inner loop of every Euclidean experiment, so the squared
+//! distance is computed with four independent accumulators to expose
+//! instruction-level parallelism (the autovectorizer turns this into SIMD
+//! lanes); the square root is taken once at the end.
+
+use super::Metric;
+use crate::points::DenseMatrix;
+
+/// Euclidean (l2) metric on [`DenseMatrix`] rows.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Euclidean;
+
+/// Squared Euclidean distance.
+///
+/// `chunks_exact(8)` with an 8-lane accumulator array is the formulation
+/// LLVM reliably autovectorizes (the slice pattern removes bounds checks;
+/// independent lanes map onto AVX registers) — measured 2–5× faster than
+/// a scalar 4-way unroll across the Table-I dimensions (see
+/// EXPERIMENTS.md §Perf).
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for j in 0..8 {
+            let d = xa[j] - xb[j];
+            acc[j] += d * d;
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+impl Metric<DenseMatrix> for Euclidean {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        sq_dist(a, b).sqrt() as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "euclidean"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::axioms::check_axioms;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_values() {
+        let e = Euclidean;
+        assert_eq!(e.dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        assert_eq!(e.dist(&[1.0], &[1.0]), 0.0);
+        // dimension not a multiple of 4 exercises the remainder loop
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [0.0, 0.0, 0.0, 0.0, 0.0];
+        assert!((e.dist(&a, &b) - (55.0f64).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matches_naive_on_random_data() {
+        let mut rng = Rng::new(1);
+        for dim in [1usize, 3, 4, 7, 16, 33, 128] {
+            let a: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+            let naive: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| ((x - y) as f64) * ((x - y) as f64))
+                .sum::<f64>()
+                .sqrt();
+            let fast = Euclidean.dist(&a, &b);
+            assert!((naive - fast).abs() < 1e-4 * (1.0 + naive), "dim={dim}");
+        }
+    }
+
+    #[test]
+    fn axioms_hold() {
+        let mut rng = Rng::new(2);
+        let mut m = crate::points::DenseMatrix::new(5);
+        for _ in 0..8 {
+            let row: Vec<f32> = (0..5).map(|_| rng.normal_f32()).collect();
+            m.push(&row);
+        }
+        check_axioms(&m, &Euclidean, 1e-5);
+    }
+}

@@ -1,0 +1,77 @@
+//! Hamming distance on bit-packed codes: popcount over XOR-ed u64 words.
+
+use super::Metric;
+use crate::points::HammingCodes;
+
+/// Hamming metric on [`HammingCodes`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Hamming;
+
+/// Number of differing bits between two packed codes.
+#[inline]
+pub fn hamming_words(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0u32;
+    for i in 0..a.len() {
+        s += (a[i] ^ b[i]).count_ones();
+    }
+    s
+}
+
+impl Metric<HammingCodes> for Hamming {
+    #[inline]
+    fn dist(&self, a: &[u64], b: &[u64]) -> f64 {
+        hamming_words(a, b) as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "hamming"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::axioms::check_axioms;
+    use crate::points::PointSet;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(hamming_words(&[0b1010], &[0b0110]), 2);
+        assert_eq!(hamming_words(&[u64::MAX, 0], &[0, 0]), 64);
+        assert_eq!(hamming_words(&[7, 7], &[7, 7]), 0);
+    }
+
+    #[test]
+    fn matches_bitwise_count_on_random_codes() {
+        let mut rng = Rng::new(5);
+        let mut codes = HammingCodes::new(130);
+        for _ in 0..6 {
+            let bits: Vec<bool> = (0..130).map(|_| rng.bool(0.5)).collect();
+            codes.push_bits(&bits);
+        }
+        for i in 0..codes.len() {
+            for j in 0..codes.len() {
+                let naive = codes
+                    .unpack_f32(i)
+                    .iter()
+                    .zip(codes.unpack_f32(j).iter())
+                    .filter(|(x, y)| x != y)
+                    .count() as f64;
+                assert_eq!(Hamming.dist_ij(&codes, i, j), naive);
+            }
+        }
+    }
+
+    #[test]
+    fn axioms_hold() {
+        let mut rng = Rng::new(6);
+        let mut codes = HammingCodes::new(64);
+        for _ in 0..8 {
+            let bits: Vec<bool> = (0..64).map(|_| rng.bool(0.3)).collect();
+            codes.push_bits(&bits);
+        }
+        check_axioms(&codes, &Hamming, 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Manhattan (l1) and Chebyshev (l∞) metrics on dense rows — extra
+//! general-metric coverage beyond the paper's Euclidean/Hamming experiments,
+//! exercising the "only triangle inequality assumed" claim.
+
+use super::Metric;
+use crate::points::DenseMatrix;
+
+/// Manhattan (l1) metric.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Manhattan;
+
+impl Metric<DenseMatrix> for Manhattan {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        let mut s = 0.0f32;
+        for i in 0..a.len() {
+            s += (a[i] - b[i]).abs();
+        }
+        s as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "manhattan"
+    }
+}
+
+/// Chebyshev (l∞) metric.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Chebyshev;
+
+impl Metric<DenseMatrix> for Chebyshev {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        let mut s = 0.0f32;
+        for i in 0..a.len() {
+            s = s.max((a[i] - b[i]).abs());
+        }
+        s as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "chebyshev"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::axioms::check_axioms;
+    use crate::points::DenseMatrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn known_values() {
+        let a = [1.0, -2.0, 3.0];
+        let b = [0.0, 2.0, 1.0];
+        assert_eq!(Manhattan.dist(&a, &b), 7.0);
+        assert_eq!(Chebyshev.dist(&a, &b), 4.0);
+    }
+
+    #[test]
+    fn ordering_l1_ge_linf() {
+        // For any pair, l1 >= l∞.
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            let a: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+            assert!(Manhattan.dist(&a, &b) >= Chebyshev.dist(&a, &b) - 1e-6);
+        }
+    }
+
+    #[test]
+    fn axioms_hold() {
+        let mut rng = Rng::new(9);
+        let mut m = DenseMatrix::new(4);
+        for _ in 0..8 {
+            let row: Vec<f32> = (0..4).map(|_| rng.normal_f32()).collect();
+            m.push(&row);
+        }
+        check_axioms(&m, &Manhattan, 1e-5);
+        check_axioms(&m, &Chebyshev, 1e-5);
+    }
+}

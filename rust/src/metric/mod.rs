@@ -1,0 +1,179 @@
+//! Distance metrics over the point-set containers.
+//!
+//! The paper assumes nothing beyond the metric axioms (triangle inequality
+//! included), so every algorithm in this crate is generic over a
+//! [`Metric`]. The distance call is the cost unit of all the paper's
+//! analyses; [`Counted`] wraps any metric with a shared atomic counter so
+//! tests and benches can verify distance-call budgets (e.g. that the cover
+//! tree performs far fewer calls than brute force).
+
+mod cosine;
+mod edit;
+pub mod engine;
+pub mod euclidean;
+pub mod hamming;
+mod minkowski;
+
+pub use cosine::Cosine;
+pub use edit::{levenshtein_bounded, Levenshtein};
+pub use euclidean::Euclidean;
+pub use hamming::Hamming;
+pub use minkowski::{Chebyshev, Manhattan};
+
+use crate::points::PointSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A metric on a point-set container.
+///
+/// Implementations must satisfy the metric axioms on the points they are
+/// used with: non-negativity, identity of indiscernibles (up to duplicate
+/// points, which the cover tree handles explicitly), symmetry, and the
+/// triangle inequality. The invariant checker and property tests exercise
+/// these on random data.
+pub trait Metric<P: PointSet>: Clone + Send + Sync + 'static {
+    /// Distance between two points.
+    fn dist(&self, a: P::Point<'_>, b: P::Point<'_>) -> f64;
+
+    /// Short identifier for logs and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// Convenience: distance between points `i` and `j` of `set`.
+    #[inline]
+    fn dist_ij(&self, set: &P, i: usize, j: usize) -> f64 {
+        self.dist(set.point(i), set.point(j))
+    }
+
+    /// Convenience: distance between `a[i]` and `b[j]`.
+    #[inline]
+    fn dist_between(&self, a: &P, i: usize, b: &P, j: usize) -> f64 {
+        self.dist(a.point(i), b.point(j))
+    }
+}
+
+/// Shared distance-call counter (one per experiment phase, typically).
+#[derive(Clone, Debug, Default)]
+pub struct DistCounter(Arc<AtomicU64>);
+
+impl DistCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn bump(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Metric wrapper that counts every distance evaluation.
+#[derive(Clone, Debug)]
+pub struct Counted<M> {
+    inner: M,
+    counter: DistCounter,
+}
+
+impl<M> Counted<M> {
+    pub fn new(inner: M) -> Self {
+        Counted { inner, counter: DistCounter::new() }
+    }
+
+    pub fn with_counter(inner: M, counter: DistCounter) -> Self {
+        Counted { inner, counter }
+    }
+
+    pub fn counter(&self) -> DistCounter {
+        self.counter.clone()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counter.get()
+    }
+}
+
+impl<P: PointSet, M: Metric<P>> Metric<P> for Counted<M> {
+    #[inline]
+    fn dist(&self, a: P::Point<'_>, b: P::Point<'_>) -> f64 {
+        self.counter.bump();
+        self.inner.dist(a, b)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod axioms {
+    //! Shared helper asserting the metric axioms on a concrete point set —
+    //! reused by each metric's unit tests and by the property suite.
+    use super::*;
+
+    pub fn check_axioms<P: PointSet, M: Metric<P>>(set: &P, metric: &M, tol: f64) {
+        let n = set.len();
+        for i in 0..n {
+            assert!(
+                metric.dist_ij(set, i, i).abs() <= tol,
+                "d(x,x) != 0 for point {i} under {}",
+                metric.name()
+            );
+            for j in 0..n {
+                let dij = metric.dist_ij(set, i, j);
+                assert!(dij >= 0.0, "negative distance");
+                let dji = metric.dist_ij(set, j, i);
+                assert!(
+                    (dij - dji).abs() <= tol * (1.0 + dij.abs()),
+                    "asymmetric: d({i},{j})={dij} d({j},{i})={dji}"
+                );
+                for k in 0..n {
+                    let dik = metric.dist_ij(set, i, k);
+                    let dkj = metric.dist_ij(set, k, j);
+                    assert!(
+                        dij <= dik + dkj + tol * (1.0 + dij.abs()),
+                        "triangle violated: d({i},{j})={dij} > d({i},{k})+d({k},{j})={}",
+                        dik + dkj
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::DenseMatrix;
+
+    #[test]
+    fn counted_counts() {
+        let m = DenseMatrix::from_flat(2, vec![0.0, 0.0, 3.0, 4.0]);
+        let c = Counted::new(Euclidean);
+        assert_eq!(c.count(), 0);
+        let d = c.dist_ij(&m, 0, 1);
+        assert!((d - 5.0).abs() < 1e-6);
+        assert_eq!(c.count(), 1);
+        c.dist_ij(&m, 1, 0);
+        assert_eq!(c.count(), 2);
+        c.counter().reset();
+        assert_eq!(c.count(), 0);
+    }
+
+    #[test]
+    fn counter_shared_across_clones() {
+        let m = DenseMatrix::from_flat(1, vec![0.0, 1.0]);
+        let c = Counted::new(Euclidean);
+        let c2 = c.clone();
+        c.dist_ij(&m, 0, 1);
+        c2.dist_ij(&m, 0, 1);
+        assert_eq!(c.count(), 2);
+        assert_eq!(c2.count(), 2);
+    }
+}

@@ -1,0 +1,199 @@
+//! Dense `f32` row-major point matrix — the container for every Euclidean
+//! dataset in Table I (faces, artificial40, corel, deep, covtype, twitter,
+//! sift) and their synthetic analogs.
+
+use super::{get_u64, put_u64, PointSet};
+
+/// Row-major `n × d` matrix of `f32` coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// Create from a flat row-major buffer. `data.len()` must be a multiple
+    /// of `dim` (or zero when `dim == 0` is disallowed).
+    pub fn from_flat(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0, "dimension must be positive");
+        assert_eq!(data.len() % dim, 0, "flat buffer not a multiple of dim");
+        DenseMatrix { dim, data }
+    }
+
+    /// An empty matrix of points with dimension `dim`.
+    pub fn new(dim: usize) -> Self {
+        Self::from_flat(dim, Vec::new())
+    }
+
+    /// With pre-reserved capacity for `n` points.
+    pub fn with_capacity(dim: usize, n: usize) -> Self {
+        assert!(dim > 0);
+        DenseMatrix { dim, data: Vec::with_capacity(dim * n) }
+    }
+
+    /// Point dimensionality.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow the flat row-major data.
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Push one point (must have length `dim`).
+    pub fn push(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Iterator over rows.
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.dim)
+    }
+
+    /// Squared L2 norm of every row — precomputation used by the SNN
+    /// baseline and the matmul-form distance tiles.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        self.rows().map(|r| r.iter().map(|x| x * x).sum()).collect()
+    }
+}
+
+impl PointSet for DenseMatrix {
+    type Point<'a> = &'a [f32];
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    #[inline]
+    fn point(&self, i: usize) -> &[f32] {
+        self.row(i)
+    }
+
+    fn gather(&self, ids: &[usize]) -> Self {
+        let mut out = DenseMatrix::with_capacity(self.dim, ids.len());
+        for &i in ids {
+            out.data.extend_from_slice(self.row(i));
+        }
+        out
+    }
+
+    fn slice(&self, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi && hi <= self.len());
+        DenseMatrix { dim: self.dim, data: self.data[lo * self.dim..hi * self.dim].to_vec() }
+    }
+
+    fn extend_from(&mut self, other: &Self) {
+        assert_eq!(self.dim, other.dim, "dimension mismatch");
+        self.data.extend_from_slice(&other.data);
+    }
+
+    fn empty_like(&self) -> Self {
+        DenseMatrix::new(self.dim)
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16 + self.data.len() * 4);
+        put_u64(&mut buf, self.dim as u64);
+        put_u64(&mut buf, self.len() as u64);
+        for &x in &self.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        buf
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Self {
+        let mut off = 0;
+        let dim = get_u64(bytes, &mut off) as usize;
+        let n = get_u64(bytes, &mut off) as usize;
+        let mut data = Vec::with_capacity(n * dim);
+        for _ in 0..n * dim {
+            data.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        DenseMatrix { dim, data }
+    }
+
+    fn payload_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DenseMatrix {
+        DenseMatrix::from_flat(3, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])
+    }
+
+    #[test]
+    fn len_and_rows() {
+        let m = sample();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.dim(), 3);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.rows().count(), 3);
+    }
+
+    #[test]
+    fn gather_orders_and_duplicates() {
+        let m = sample();
+        let g = m.gather(&[2, 0, 2]);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.row(0), &[6.0, 7.0, 8.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0, 2.0]);
+        assert_eq!(g.row(2), &[6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn slice_and_extend() {
+        let m = sample();
+        let mut s = m.slice(1, 3);
+        assert_eq!(s.len(), 2);
+        s.extend_from(&m.slice(0, 1));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.row(2), &[0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let m = sample();
+        let b = m.to_bytes();
+        let m2 = DenseMatrix::from_bytes(&b);
+        assert_eq!(m, m2);
+        assert_eq!(m.payload_bytes(), 36);
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let e = sample().empty_like();
+        assert_eq!(e.len(), 0);
+        let e2 = DenseMatrix::from_bytes(&e.to_bytes());
+        assert_eq!(e, e2);
+    }
+
+    #[test]
+    fn sq_norms() {
+        let m = sample();
+        let norms = m.row_sq_norms();
+        assert_eq!(norms, vec![5.0, 50.0, 149.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_wrong_dim_panics() {
+        let mut m = sample();
+        m.push(&[1.0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! Bit-packed binary codes for Hamming-metric datasets (sift-hamming 256-bit,
+//! word2bits 800-bit in Table I). Each point is `words_per_point` u64 words;
+//! distance is a popcount over XOR-ed words.
+
+use super::{get_u64, put_u64, PointSet};
+
+/// `n` binary codes of `bits` bits each, packed little-endian into u64 words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HammingCodes {
+    bits: usize,
+    words_per_point: usize,
+    data: Vec<u64>,
+}
+
+impl HammingCodes {
+    /// Empty set of `bits`-bit codes.
+    pub fn new(bits: usize) -> Self {
+        assert!(bits > 0);
+        HammingCodes { bits, words_per_point: (bits + 63) / 64, data: Vec::new() }
+    }
+
+    /// From packed words (length must be a multiple of words-per-point).
+    pub fn from_words(bits: usize, data: Vec<u64>) -> Self {
+        let wpp = (bits + 63) / 64;
+        assert_eq!(data.len() % wpp, 0);
+        HammingCodes { bits, words_per_point: wpp, data }
+    }
+
+    /// Number of bits per code.
+    #[inline]
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// u64 words per code.
+    #[inline]
+    pub fn words_per_point(&self) -> usize {
+        self.words_per_point
+    }
+
+    /// Append a code given as a bool slice of length `bits`.
+    pub fn push_bits(&mut self, bits: &[bool]) {
+        assert_eq!(bits.len(), self.bits);
+        let base = self.data.len();
+        self.data.resize(base + self.words_per_point, 0);
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                self.data[base + i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+
+    /// Append a pre-packed code.
+    pub fn push_words(&mut self, words: &[u64]) {
+        assert_eq!(words.len(), self.words_per_point);
+        self.data.extend_from_slice(words);
+    }
+
+    /// Borrow code `i` as packed words.
+    #[inline]
+    pub fn code(&self, i: usize) -> &[u64] {
+        &self.data[i * self.words_per_point..(i + 1) * self.words_per_point]
+    }
+
+    /// Hamming weight (number of set bits) of code `i` — the `‖x‖₁` term of
+    /// the matmul-form Hamming distance used by the PJRT tile engine.
+    pub fn weight(&self, i: usize) -> u32 {
+        self.code(i).iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Unpack code `i` into ±0/1 f32s — the encoding the dense tile engine
+    /// (L1 Pallas kernel) consumes.
+    pub fn unpack_f32(&self, i: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.bits);
+        let code = self.code(i);
+        for b in 0..self.bits {
+            out.push(((code[b / 64] >> (b % 64)) & 1) as f32);
+        }
+        out
+    }
+}
+
+impl PointSet for HammingCodes {
+    type Point<'a> = &'a [u64];
+
+    #[inline]
+    fn len(&self) -> usize {
+        if self.data.is_empty() {
+            0
+        } else {
+            self.data.len() / self.words_per_point
+        }
+    }
+
+    #[inline]
+    fn point(&self, i: usize) -> &[u64] {
+        self.code(i)
+    }
+
+    fn gather(&self, ids: &[usize]) -> Self {
+        let mut out = HammingCodes::new(self.bits);
+        out.data.reserve(ids.len() * self.words_per_point);
+        for &i in ids {
+            out.data.extend_from_slice(self.code(i));
+        }
+        out
+    }
+
+    fn slice(&self, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi && hi <= self.len());
+        HammingCodes {
+            bits: self.bits,
+            words_per_point: self.words_per_point,
+            data: self.data[lo * self.words_per_point..hi * self.words_per_point].to_vec(),
+        }
+    }
+
+    fn extend_from(&mut self, other: &Self) {
+        assert_eq!(self.bits, other.bits);
+        self.data.extend_from_slice(&other.data);
+    }
+
+    fn empty_like(&self) -> Self {
+        HammingCodes::new(self.bits)
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16 + self.data.len() * 8);
+        put_u64(&mut buf, self.bits as u64);
+        put_u64(&mut buf, self.len() as u64);
+        for &w in &self.data {
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        buf
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Self {
+        let mut off = 0;
+        let bits = get_u64(bytes, &mut off) as usize;
+        let n = get_u64(bytes, &mut off) as usize;
+        let wpp = (bits + 63) / 64;
+        let mut data = Vec::with_capacity(n * wpp);
+        for _ in 0..n * wpp {
+            data.push(get_u64(bytes, &mut off));
+        }
+        HammingCodes { bits, words_per_point: wpp, data }
+    }
+
+    fn payload_bytes(&self) -> u64 {
+        (self.data.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> HammingCodes {
+        let mut h = HammingCodes::new(100); // 2 words per point
+        let mut a = vec![false; 100];
+        a[0] = true;
+        a[64] = true;
+        a[99] = true;
+        h.push_bits(&a);
+        let b = vec![true; 100];
+        h.push_bits(&b);
+        h
+    }
+
+    #[test]
+    fn packing_and_weight() {
+        let h = sample();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.words_per_point(), 2);
+        assert_eq!(h.weight(0), 3);
+        assert_eq!(h.weight(1), 100);
+    }
+
+    #[test]
+    fn unpack_roundtrip() {
+        let h = sample();
+        let f = h.unpack_f32(0);
+        assert_eq!(f.len(), 100);
+        assert_eq!(f[0], 1.0);
+        assert_eq!(f[1], 0.0);
+        assert_eq!(f[64], 1.0);
+        assert_eq!(f[99], 1.0);
+        assert_eq!(f.iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn gather_slice_extend() {
+        let h = sample();
+        let g = h.gather(&[1, 0]);
+        assert_eq!(g.weight(0), 100);
+        assert_eq!(g.weight(1), 3);
+        let mut s = h.slice(0, 1);
+        assert_eq!(s.len(), 1);
+        s.extend_from(&h.slice(1, 2));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.weight(1), 100);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let h = sample();
+        let h2 = HammingCodes::from_bytes(&h.to_bytes());
+        assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn empty_set() {
+        let e = sample().empty_like();
+        assert_eq!(e.len(), 0);
+        assert!(e.is_empty());
+        assert_eq!(HammingCodes::from_bytes(&e.to_bytes()).len(), 0);
+    }
+}

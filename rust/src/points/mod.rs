@@ -1,0 +1,84 @@
+//! Point-set containers for the three families of metric data the paper
+//! evaluates: dense real vectors (Euclidean & friends), bit-packed binary
+//! codes (Hamming), and byte strings (edit distance).
+//!
+//! All containers expose the same minimal interface the algorithms need:
+//! a length, O(1) access to a point by index, `gather` to build a subset,
+//! and a flat (de)serialization used by the simulated MPI layer to move
+//! points between ranks.
+
+mod dense;
+mod hamming;
+mod strings;
+
+pub use dense::DenseMatrix;
+pub use hamming::HammingCodes;
+pub use strings::StringSet;
+
+/// A set of points movable between ranks and sliceable into subsets.
+pub trait PointSet: Clone + Send + Sync + 'static {
+    /// Borrowed view of a single point.
+    type Point<'a>: Copy
+    where
+        Self: 'a;
+
+    /// Number of points.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow point `i`.
+    fn point(&self, i: usize) -> Self::Point<'_>;
+
+    /// New set containing `ids` (in order, duplicates allowed).
+    fn gather(&self, ids: &[usize]) -> Self;
+
+    /// New set containing the contiguous range `[lo, hi)`.
+    fn slice(&self, lo: usize, hi: usize) -> Self;
+
+    /// Append all points of `other` onto `self`.
+    fn extend_from(&mut self, other: &Self);
+
+    /// An empty set with the same per-point shape (dimension etc.).
+    fn empty_like(&self) -> Self;
+
+    /// Serialize into a byte buffer (used by the comm layer).
+    fn to_bytes(&self) -> Vec<u8>;
+
+    /// Deserialize from `to_bytes` output.
+    fn from_bytes(bytes: &[u8]) -> Self;
+
+    /// In-memory footprint of the payload in bytes (for the α-β comm model).
+    fn payload_bytes(&self) -> u64;
+}
+
+/// Little-endian framing helpers shared by the serializers.
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn get_u64(bytes: &[u8], off: &mut usize) -> u64 {
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framing_roundtrip() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 0);
+        put_u64(&mut buf, u64::MAX);
+        put_u64(&mut buf, 123456789);
+        let mut off = 0;
+        assert_eq!(get_u64(&buf, &mut off), 0);
+        assert_eq!(get_u64(&buf, &mut off), u64::MAX);
+        assert_eq!(get_u64(&buf, &mut off), 123456789);
+        assert_eq!(off, buf.len());
+    }
+}

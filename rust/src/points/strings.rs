@@ -1,0 +1,166 @@
+//! Variable-length byte strings for edit-distance (Levenshtein) workloads —
+//! the "genomic reads" use case the paper's introduction motivates for
+//! non-Euclidean metrics.
+
+use super::{get_u64, put_u64, PointSet};
+
+/// A set of byte strings stored contiguously with an offsets array (the same
+/// layout as an Arrow string column).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct StringSet {
+    offsets: Vec<usize>, // len n+1, offsets[0] == 0
+    bytes: Vec<u8>,
+}
+
+impl StringSet {
+    pub fn new() -> Self {
+        StringSet { offsets: vec![0], bytes: Vec::new() }
+    }
+
+    pub fn from_strs<S: AsRef<[u8]>>(items: &[S]) -> Self {
+        let mut s = StringSet::new();
+        for it in items {
+            s.push(it.as_ref());
+        }
+        s
+    }
+
+    pub fn push(&mut self, s: &[u8]) {
+        self.bytes.extend_from_slice(s);
+        self.offsets.push(self.bytes.len());
+    }
+
+    /// Borrow string `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> &[u8] {
+        &self.bytes[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Length of string `i` without borrowing it.
+    #[inline]
+    pub fn str_len(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+}
+
+impl PointSet for StringSet {
+    type Point<'a> = &'a [u8];
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    fn point(&self, i: usize) -> &[u8] {
+        self.get(i)
+    }
+
+    fn gather(&self, ids: &[usize]) -> Self {
+        let mut out = StringSet::new();
+        for &i in ids {
+            out.push(self.get(i));
+        }
+        out
+    }
+
+    fn slice(&self, lo: usize, hi: usize) -> Self {
+        assert!(lo <= hi && hi <= self.len());
+        let mut out = StringSet::new();
+        for i in lo..hi {
+            out.push(self.get(i));
+        }
+        out
+    }
+
+    fn extend_from(&mut self, other: &Self) {
+        for i in 0..other.len() {
+            self.push(other.get(i));
+        }
+    }
+
+    fn empty_like(&self) -> Self {
+        StringSet::new()
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16 + self.offsets.len() * 8 + self.bytes.len());
+        put_u64(&mut buf, self.len() as u64);
+        for i in 0..self.len() {
+            put_u64(&mut buf, self.str_len(i) as u64);
+        }
+        buf.extend_from_slice(&self.bytes);
+        buf
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Self {
+        let mut off = 0;
+        let n = get_u64(bytes, &mut off) as usize;
+        let mut lens = Vec::with_capacity(n);
+        for _ in 0..n {
+            lens.push(get_u64(bytes, &mut off) as usize);
+        }
+        let mut out = StringSet::new();
+        for l in lens {
+            out.push(&bytes[off..off + l]);
+            off += l;
+        }
+        out
+    }
+
+    fn payload_bytes(&self) -> u64 {
+        (self.bytes.len() + self.offsets.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StringSet {
+        StringSet::from_strs(&["ACGT", "", "AAA", "TTTTTTTT"])
+    }
+
+    #[test]
+    fn basic_access() {
+        let s = sample();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.get(0), b"ACGT");
+        assert_eq!(s.get(1), b"");
+        assert_eq!(s.str_len(3), 8);
+    }
+
+    #[test]
+    fn gather_and_slice() {
+        let s = sample();
+        let g = s.gather(&[3, 0]);
+        assert_eq!(g.get(0), b"TTTTTTTT");
+        assert_eq!(g.get(1), b"ACGT");
+        let sl = s.slice(1, 3);
+        assert_eq!(sl.len(), 2);
+        assert_eq!(sl.get(1), b"AAA");
+    }
+
+    #[test]
+    fn serialization_roundtrip_with_empty_strings() {
+        let s = sample();
+        let s2 = StringSet::from_bytes(&s.to_bytes());
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn extend_from_works() {
+        let mut a = sample();
+        let b = StringSet::from_strs(&["XY"]);
+        a.extend_from(&b);
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.get(4), b"XY");
+    }
+
+    #[test]
+    fn empty_set_roundtrip() {
+        let e = StringSet::new();
+        assert!(e.is_empty());
+        assert_eq!(StringSet::from_bytes(&e.to_bytes()).len(), 0);
+    }
+}

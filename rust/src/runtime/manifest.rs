@@ -1,0 +1,111 @@
+//! Artifact manifest parser (`artifacts/manifest.txt`, written by
+//! `python/compile/aot.py`). Whitespace-delimited:
+//! `name kind tile_q tile_r dim extra file`.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// What a compiled artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    PairwiseEuclidean,
+    PairwiseHamming,
+    PairwiseManhattan,
+    VoronoiAssign,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pairwise_euclidean" => Ok(ArtifactKind::PairwiseEuclidean),
+            "pairwise_hamming" => Ok(ArtifactKind::PairwiseHamming),
+            "pairwise_manhattan" => Ok(ArtifactKind::PairwiseManhattan),
+            "voronoi_assign" => Ok(ArtifactKind::VoronoiAssign),
+            other => Err(anyhow!("unknown artifact kind {other:?}")),
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub tile_q: usize,
+    pub tile_r: usize,
+    pub dim: usize,
+    pub extra: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 7 {
+                return Err(anyhow!("manifest line {}: expected 7 fields, got {}", ln + 1, f.len()));
+            }
+            artifacts.push(Artifact {
+                name: f[0].to_string(),
+                kind: ArtifactKind::parse(f[1])?,
+                tile_q: f[2].parse().context("tile_q")?,
+                tile_r: f[3].parse().context("tile_r")?,
+                dim: f[4].parse().context("dim")?,
+                extra: f[5].parse().context("extra")?,
+                file: f[6].to_string(),
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name kind tile_q tile_r dim extra file
+pairwise_euclidean_d32 pairwise_euclidean 64 64 32 0 pairwise_euclidean_d32.hlo.txt
+voronoi_assign_d32_m64 voronoi_assign 256 64 32 0 voronoi_assign_d32_m64.hlo.txt
+";
+
+    #[test]
+    fn parses_entries_and_skips_comments() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::PairwiseEuclidean);
+        assert_eq!(m.artifacts[0].tile_q, 64);
+        assert_eq!(m.artifacts[1].kind, ArtifactKind::VoronoiAssign);
+        assert_eq!(m.artifacts[1].dim, 32);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("too few fields").is_err());
+        assert!(Manifest::parse("a unknown_kind 1 1 1 0 f").is_err());
+        assert!(Manifest::parse("a pairwise_euclidean x 1 1 0 f").is_err());
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let m = Manifest::parse("# only a comment\n").unwrap();
+        assert!(m.artifacts.is_empty());
+    }
+}

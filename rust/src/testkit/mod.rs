@@ -1,0 +1,123 @@
+//! Mini property-testing kit (the offline environment has no `proptest`).
+//!
+//! `forall` runs a property over `cases` seeded generations; on failure it
+//! retries the failing case with shrunk size parameters (halving) to find a
+//! smaller counterexample before panicking with the seed so the case can be
+//! replayed deterministically.
+
+use crate::util::Rng;
+
+/// Size hints handed to generators; shrinking halves them.
+#[derive(Clone, Copy, Debug)]
+pub struct Size {
+    /// Suggested collection size.
+    pub n: usize,
+    /// Suggested dimensionality.
+    pub dim: usize,
+}
+
+impl Size {
+    fn shrink(self) -> Option<Size> {
+        if self.n <= 1 && self.dim <= 1 {
+            return None;
+        }
+        Some(Size { n: (self.n / 2).max(1), dim: (self.dim / 2).max(1) })
+    }
+}
+
+/// Run `prop(rng, size)` for `cases` random cases. A property *fails* by
+/// panicking (use assert!). On failure, the same seed is retried at smaller
+/// sizes to report a minimal-ish counterexample.
+pub fn forall<F>(name: &str, cases: usize, base: Size, prop: F)
+where
+    F: Fn(&mut Rng, Size) + std::panic::RefUnwindSafe,
+{
+    let root = Rng::new(0x5EED ^ fx(name));
+    for case in 0..cases {
+        let seed_rng = root.fork(case as u64);
+        let failed = std::panic::catch_unwind(|| {
+            let mut rng = seed_rng.clone();
+            prop(&mut rng, base);
+        });
+        if let Err(payload) = failed {
+            // Shrink: halve sizes while the property still fails.
+            let mut size = base;
+            let mut last_payload = payload;
+            while let Some(smaller) = size.shrink() {
+                let retry = std::panic::catch_unwind(|| {
+                    let mut rng = seed_rng.clone();
+                    prop(&mut rng, smaller);
+                });
+                match retry {
+                    Err(p) => {
+                        size = smaller;
+                        last_payload = p;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            let msg = last_payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| last_payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed (case {case}, shrunk to n={}, dim={}): {msg}",
+                size.n, size.dim
+            );
+        }
+    }
+}
+
+fn fx(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("tautology", 20, Size { n: 50, dim: 4 }, |rng, size| {
+            let v = rng.below(size.n.max(1));
+            assert!(v < size.n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        forall("always-fails", 5, Size { n: 64, dim: 8 }, |_rng, _size| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk to n=1, dim=1")]
+    fn shrinking_reaches_minimum_when_failure_persists() {
+        forall("fails-at-any-size", 1, Size { n: 64, dim: 8 }, |_rng, _size| {
+            assert!(false, "independent of size");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        // The same property observes the same random values per case.
+        use std::sync::Mutex;
+        let seen1 = Mutex::new(Vec::new());
+        forall("det", 5, Size { n: 10, dim: 2 }, |rng, _| {
+            seen1.lock().unwrap().push(rng.next_u64());
+        });
+        let seen2 = Mutex::new(Vec::new());
+        forall("det", 5, Size { n: 10, dim: 2 }, |rng, _| {
+            seen2.lock().unwrap().push(rng.next_u64());
+        });
+        assert_eq!(*seen1.lock().unwrap(), *seen2.lock().unwrap());
+    }
+}

@@ -1,0 +1,114 @@
+//! Shared utilities: deterministic RNG, timers, thread CPU clocks.
+//!
+//! The offline build environment caches only the `xla` crate closure, so the
+//! usual ecosystem crates (`rand`, `instant`, ...) are replaced by small
+//! in-crate substrates. Everything here is deterministic given a seed, which
+//! the test suite and bench harness rely on for reproducibility.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::{thread_cpu_time, Stopwatch};
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Split `n` items into `parts` contiguous chunks whose sizes differ by at
+/// most one (the first `n % parts` chunks get the extra item). Returns the
+/// (offset, len) of chunk `i`. This is the canonical block distribution used
+/// for the initial point partitioning across ranks.
+#[inline]
+pub fn block_partition(n: usize, parts: usize, i: usize) -> (usize, usize) {
+    debug_assert!(parts > 0 && i < parts);
+    let base = n / parts;
+    let rem = n % parts;
+    let len = base + usize::from(i < rem);
+    let off = i * base + i.min(rem);
+    (off, len)
+}
+
+/// Human-readable byte count for logs and bench output.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable seconds (chooses between s / ms / µs).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_partition_covers_everything_once() {
+        for n in [0usize, 1, 7, 64, 1000] {
+            for parts in [1usize, 2, 3, 7, 16] {
+                let mut covered = vec![false; n];
+                let mut prev_end = 0;
+                for i in 0..parts {
+                    let (off, len) = block_partition(n, parts, i);
+                    assert_eq!(off, prev_end, "chunks must be contiguous");
+                    for j in off..off + len {
+                        assert!(!covered[j]);
+                        covered[j] = true;
+                    }
+                    prev_end = off + len;
+                }
+                assert_eq!(prev_end, n);
+                assert!(covered.into_iter().all(|c| c));
+            }
+        }
+    }
+
+    #[test]
+    fn block_partition_balanced() {
+        let n = 103;
+        let parts = 10;
+        let sizes: Vec<usize> = (0..parts).map(|i| block_partition(n, parts, i).1).collect();
+        let mx = *sizes.iter().max().unwrap();
+        let mn = *sizes.iter().min().unwrap();
+        assert!(mx - mn <= 1);
+        assert_eq!(sizes.iter().sum::<usize>(), n);
+    }
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(2048).starts_with("2.00 KiB"));
+        assert!(fmt_secs(1.5).ends_with(" s"));
+        assert!(fmt_secs(0.0015).ends_with(" ms"));
+        assert!(fmt_secs(0.0000015).ends_with(" µs"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Wall-clock and per-thread CPU-time measurement.
+//!
+//! The simulated MPI runtime charges each rank for the CPU time its thread
+//! actually consumed (`CLOCK_THREAD_CPUTIME_ID`), which keeps virtual time
+//! meaningful on a box with a single physical core where rank threads
+//! serialize arbitrarily.
+
+use std::time::Instant;
+
+/// Per-thread CPU time in seconds via `clock_gettime(CLOCK_THREAD_CPUTIME_ID)`.
+pub fn thread_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock id is a libc constant.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Process CPU time in seconds (all threads).
+pub fn process_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: as above.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Simple stopwatch over both wall and thread-CPU clocks.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    wall_start: Instant,
+    cpu_start: f64,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { wall_start: Instant::now(), cpu_start: thread_cpu_time() }
+    }
+
+    /// Elapsed wall-clock seconds.
+    pub fn wall(&self) -> f64 {
+        self.wall_start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed thread CPU seconds.
+    pub fn cpu(&self) -> f64 {
+        thread_cpu_time() - self.cpu_start
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_clock_advances_under_work() {
+        let sw = Stopwatch::start();
+        // Busy loop long enough to register on a coarse clock.
+        let mut acc = 0u64;
+        for i in 0..3_000_000u64 {
+            acc = acc.wrapping_add(i.wrapping_mul(2654435761));
+        }
+        std::hint::black_box(acc);
+        assert!(sw.cpu() > 0.0);
+        assert!(sw.wall() > 0.0);
+    }
+
+    #[test]
+    fn thread_cpu_time_is_monotone() {
+        let a = thread_cpu_time();
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        let b = thread_cpu_time();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn sleeping_does_not_charge_cpu() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        // CPU time consumed while sleeping should be far below wall time.
+        assert!(sw.cpu() < 0.025, "cpu={} should be well under 30ms", sw.cpu());
+        assert!(sw.wall() >= 0.025);
+    }
+}

@@ -1,0 +1,116 @@
+//! Cell → rank assignment.
+//!
+//! Coalescing Voronoi cells onto ranks is a multiway number partitioning
+//! problem on the cell sizes. The paper uses Graham's LPT rule
+//! (longest-processing-time-first), a 4/3-approximation computable in
+//! O(m log m); a cyclic assignment is kept as the ablation baseline.
+
+/// Cyclic (round-robin) assignment: cell `i` → rank `i mod ranks`.
+pub fn cyclic_assignment(cell_sizes: &[u64], ranks: usize) -> Vec<usize> {
+    (0..cell_sizes.len()).map(|i| i % ranks).collect()
+}
+
+/// Graham's LPT multiway number partitioning: sort cells by decreasing
+/// size, repeatedly give the largest unassigned cell to the least-loaded
+/// rank. Returns `assignment[cell] = rank`.
+pub fn multiway_partition(cell_sizes: &[u64], ranks: usize) -> Vec<usize> {
+    assert!(ranks > 0);
+    let mut order: Vec<usize> = (0..cell_sizes.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(cell_sizes[i]));
+    // Min-heap of (load, rank) via BinaryHeap<Reverse<..>>.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        (0..ranks).map(|r| Reverse((0u64, r))).collect();
+    let mut assignment = vec![0usize; cell_sizes.len()];
+    for i in order {
+        let Reverse((load, r)) = heap.pop().unwrap();
+        assignment[i] = r;
+        heap.push(Reverse((load + cell_sizes[i], r)));
+    }
+    assignment
+}
+
+/// Maximum per-rank load under an assignment (the quantity LPT minimizes).
+pub fn partition_makespan(cell_sizes: &[u64], assignment: &[usize], ranks: usize) -> u64 {
+    let mut loads = vec![0u64; ranks];
+    for (i, &r) in assignment.iter().enumerate() {
+        loads[r] += cell_sizes[i];
+    }
+    loads.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn cyclic_is_round_robin() {
+        let a = cyclic_assignment(&[1, 2, 3, 4, 5], 2);
+        assert_eq!(a, vec![0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn lpt_assignment_valid() {
+        let sizes = [10u64, 7, 7, 6, 4, 4, 2];
+        let a = multiway_partition(&sizes, 3);
+        assert_eq!(a.len(), sizes.len());
+        assert!(a.iter().all(|&r| r < 3));
+    }
+
+    #[test]
+    fn lpt_beats_or_ties_cyclic_on_skewed_sizes() {
+        let mut rng = Rng::new(65);
+        for trial in 0..20 {
+            // Heavily skewed cell sizes (the duplicated/clustered case).
+            let m = 16 + rng.below(32);
+            let sizes: Vec<u64> =
+                (0..m).map(|_| if rng.bool(0.2) { 1000 + rng.below(5000) as u64 } else { rng.below(100) as u64 }).collect();
+            let ranks = 4;
+            let lpt = partition_makespan(&sizes, &multiway_partition(&sizes, ranks), ranks);
+            let cyc = partition_makespan(&sizes, &cyclic_assignment(&sizes, ranks), ranks);
+            assert!(lpt <= cyc, "trial {trial}: LPT {lpt} worse than cyclic {cyc}");
+        }
+    }
+
+    #[test]
+    fn lpt_within_4_3_of_lower_bound() {
+        let mut rng = Rng::new(66);
+        for _ in 0..20 {
+            let m = 8 + rng.below(24);
+            let sizes: Vec<u64> = (0..m).map(|_| 1 + rng.below(1000) as u64).collect();
+            let ranks = 1 + rng.below(6);
+            let a = multiway_partition(&sizes, ranks);
+            let mk = partition_makespan(&sizes, &a, ranks);
+            let total: u64 = sizes.iter().sum();
+            let lb = (total as f64 / ranks as f64).ceil().max(*sizes.iter().max().unwrap() as f64);
+            assert!(
+                (mk as f64) <= lb * 4.0 / 3.0 + 1.0,
+                "makespan {mk} exceeds 4/3 · LB {lb}"
+            );
+        }
+    }
+
+    #[test]
+    fn perfect_split_found_when_trivial() {
+        // Equal sizes divide evenly.
+        let sizes = vec![5u64; 8];
+        let a = multiway_partition(&sizes, 4);
+        assert_eq!(partition_makespan(&sizes, &a, 4), 10);
+    }
+
+    #[test]
+    fn more_ranks_than_cells() {
+        let sizes = [3u64, 1];
+        let a = multiway_partition(&sizes, 8);
+        assert_eq!(partition_makespan(&sizes, &a, 8), 3);
+    }
+
+    #[test]
+    fn empty_cells() {
+        let a = multiway_partition(&[], 4);
+        assert!(a.is_empty());
+        assert_eq!(partition_makespan(&[], &a, 4), 0);
+    }
+}

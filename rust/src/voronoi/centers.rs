@@ -1,0 +1,134 @@
+//! Landmark (Voronoi site) selection strategies.
+//!
+//! The paper compares the greedy permutation (Gonzalez farthest-point,
+//! which yields an r-net prefix) against uniform-random selection and finds
+//! random more robust on skewed/duplicated data; both are provided and the
+//! ablation bench compares them.
+
+use crate::metric::Metric;
+use crate::points::PointSet;
+use crate::util::Rng;
+
+/// `m` distinct uniform-random indices — the paper's default strategy.
+pub fn random_centers(rng: &mut Rng, n: usize, m: usize) -> Vec<usize> {
+    rng.sample_indices(n, m.min(n))
+}
+
+/// Length-`m` prefix of the greedy (farthest-point / Gonzalez) permutation
+/// starting from `start`. The prefix is an r-net for r = its coverage
+/// radius. O(n·m) distance evaluations.
+pub fn greedy_permutation<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: &M,
+    m: usize,
+    start: usize,
+) -> Vec<usize> {
+    let n = pts.len();
+    if n == 0 || m == 0 {
+        return Vec::new();
+    }
+    assert!(start < n);
+    let m = m.min(n);
+    let mut chosen = Vec::with_capacity(m);
+    chosen.push(start);
+    let mut dist: Vec<f64> = (0..n).map(|i| metric.dist_ij(pts, i, start)).collect();
+    while chosen.len() < m {
+        // Farthest point from the chosen set.
+        let (far, &d) = dist
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if d == 0.0 {
+            break; // every remaining point duplicates a chosen one
+        }
+        chosen.push(far);
+        for i in 0..n {
+            let nd = metric.dist_ij(pts, i, far);
+            if nd < dist[i] {
+                dist[i] = nd;
+            }
+        }
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::{Euclidean, Metric};
+    use crate::points::DenseMatrix;
+
+    #[test]
+    fn random_centers_distinct() {
+        let mut rng = Rng::new(60);
+        let c = random_centers(&mut rng, 100, 10);
+        assert_eq!(c.len(), 10);
+        let mut s = c.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn random_centers_clamped_to_n() {
+        let mut rng = Rng::new(61);
+        let c = random_centers(&mut rng, 5, 10);
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn greedy_permutation_maximizes_separation() {
+        // 1-D points: greedy from 0.0 must pick the extremes first.
+        let pts = DenseMatrix::from_flat(1, vec![0.0, 1.0, 2.0, 3.0, 10.0]);
+        let g = greedy_permutation(&pts, &Euclidean, 3, 0);
+        assert_eq!(g[0], 0);
+        assert_eq!(g[1], 4); // farthest from 0.0 is 10.0
+        // next farthest from {0, 10} is 3.0 (dist 3) vs 2.0 (dist 2) vs 1.0
+        assert_eq!(g[2], 3);
+    }
+
+    #[test]
+    fn greedy_prefix_is_net() {
+        // Separation property: pairwise distances among the prefix are ≥
+        // the coverage radius of the prefix.
+        let pts = crate::data::synthetic::uniform(&mut Rng::new(62), 200, 3, 1.0);
+        let g = greedy_permutation(&pts, &Euclidean, 12, 0);
+        // coverage radius
+        let mut cover = 0.0f64;
+        for i in 0..200 {
+            let d = g
+                .iter()
+                .map(|&c| Euclidean.dist_ij(&pts, i, c))
+                .fold(f64::INFINITY, f64::min);
+            cover = cover.max(d);
+        }
+        for i in 0..g.len() {
+            for j in i + 1..g.len() {
+                let d = Euclidean.dist_ij(&pts, g[i], g[j]);
+                assert!(
+                    d >= cover - 1e-9,
+                    "separation {d} < coverage {cover} for pair ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_stops_on_duplicates() {
+        let mut pts = DenseMatrix::new(1);
+        pts.push(&[1.0]);
+        pts.push(&[1.0]);
+        pts.push(&[2.0]);
+        let g = greedy_permutation(&pts, &Euclidean, 3, 0);
+        assert_eq!(g.len(), 2, "only two distinct points exist");
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let pts = DenseMatrix::new(1);
+        assert!(greedy_permutation(&pts, &Euclidean, 5, 0).is_empty() || pts.len() > 0);
+        let mut rng = Rng::new(63);
+        assert!(random_centers(&mut rng, 10, 0).is_empty());
+    }
+}

@@ -1,0 +1,113 @@
+//! Landmark (Voronoi) machinery for the landmarking algorithms:
+//! center selection (random / greedy permutation), Voronoi cell assignment,
+//! and the multiway-number-partitioning cell→rank assignment.
+
+mod assign;
+mod centers;
+
+pub use assign::{cyclic_assignment, multiway_partition, partition_makespan};
+pub use centers::{greedy_permutation, random_centers};
+
+use crate::metric::Metric;
+use crate::points::PointSet;
+
+/// Voronoi assignment of a batch of points against a center set:
+/// for each point, the index of the nearest center and the distance to it
+/// (`d(p, C)`). Ties break toward the lower center index, which implements
+/// the paper's "assign one of the points to avoid double counting".
+pub fn assign_to_centers<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    centers: &P,
+    metric: &M,
+) -> Vec<(u32, f64)> {
+    let m = centers.len();
+    assert!(m > 0, "need at least one center");
+    let mut out = Vec::with_capacity(pts.len());
+    for i in 0..pts.len() {
+        let mut best = 0u32;
+        let mut best_d = metric.dist_between(pts, i, centers, 0);
+        for c in 1..m {
+            let d = metric.dist_between(pts, i, centers, c);
+            if d < best_d {
+                best_d = d;
+                best = c as u32;
+            }
+        }
+        out.push((best, best_d));
+    }
+    out
+}
+
+/// Per-cell radius `r_i = max_{p ∈ V_i} d(p, c_i)` from an assignment.
+pub fn cell_radii(assignment: &[(u32, f64)], m: usize) -> Vec<f64> {
+    let mut radii = vec![0.0f64; m];
+    for &(c, d) in assignment {
+        if d > radii[c as usize] {
+            radii[c as usize] = d;
+        }
+    }
+    radii
+}
+
+/// Per-cell population counts from an assignment.
+pub fn cell_sizes(assignment: &[(u32, f64)], m: usize) -> Vec<u64> {
+    let mut sizes = vec![0u64; m];
+    for &(c, _) in assignment {
+        sizes[c as usize] += 1;
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::Euclidean;
+    use crate::points::DenseMatrix;
+
+    fn grid() -> DenseMatrix {
+        // Four obvious clusters at the unit-square corners.
+        let mut m = DenseMatrix::new(2);
+        for (cx, cy) in [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0), (10.0, 10.0)] {
+            for k in 0..5 {
+                m.push(&[cx + 0.1 * k as f32, cy]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn assignment_picks_nearest() {
+        let pts = grid();
+        let centers = DenseMatrix::from_flat(
+            2,
+            vec![0.0, 0.0, 10.0, 0.0, 0.0, 10.0, 10.0, 10.0],
+        );
+        let asg = assign_to_centers(&pts, &centers, &Euclidean);
+        for (i, &(c, d)) in asg.iter().enumerate() {
+            assert_eq!(c as usize, i / 5, "point {i}");
+            assert!(d <= 0.5);
+        }
+    }
+
+    #[test]
+    fn radii_and_sizes() {
+        let pts = grid();
+        let centers = DenseMatrix::from_flat(2, vec![0.0, 0.0, 10.0, 10.0]);
+        let asg = assign_to_centers(&pts, &centers, &Euclidean);
+        let radii = cell_radii(&asg, 2);
+        let sizes = cell_sizes(&asg, 2);
+        assert_eq!(sizes.iter().sum::<u64>(), 20);
+        assert!(radii[0] > 0.0 && radii[1] > 0.0);
+        // Farthest member of cell 0 is the (10,0)/(0,10) clusters' nearest...
+        // both clusters at distance 10-ish get split between the two centers.
+        assert!(radii[0] <= 10.5 && radii[1] <= 10.5);
+    }
+
+    #[test]
+    fn tie_breaks_to_lower_index() {
+        let pts = DenseMatrix::from_flat(1, vec![5.0]);
+        let centers = DenseMatrix::from_flat(1, vec![0.0, 10.0]);
+        let asg = assign_to_centers(&pts, &centers, &Euclidean);
+        assert_eq!(asg[0].0, 0);
+    }
+}

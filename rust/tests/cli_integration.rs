@@ -1,0 +1,93 @@
+//! Launcher (CLI) integration: drive the `neargraph` binary end to end —
+//! dataset listing, config loading, graph construction with verification,
+//! and edge-list output.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_neargraph"))
+}
+
+#[test]
+fn datasets_lists_all_nine() {
+    let out = bin().arg("datasets").output().expect("spawn");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in
+        ["faces", "artificial40", "corel", "deep", "covtype", "twitter", "sift", "sift-hamming", "word2bits"]
+    {
+        assert!(text.contains(name), "missing {name} in:\n{text}");
+    }
+}
+
+#[test]
+fn run_with_verify_and_output() {
+    let tmp = std::env::temp_dir().join("neargraph_cli_edges.txt");
+    let out = bin()
+        .args([
+            "run", "--dataset", "corel", "--points", "250", "--ranks", "3",
+            "--algorithm", "landmark-ring", "--target-degree", "12",
+            "--verify", "--output",
+        ])
+        .arg(&tmp)
+        .output()
+        .expect("spawn");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("VERIFIED"), "no verification in:\n{text}");
+    let edges = std::fs::read_to_string(&tmp).expect("edge file written");
+    let n_lines = edges.lines().count();
+    assert!(n_lines > 0, "empty edge file");
+    // Every line is "u v" with u < v.
+    for line in edges.lines() {
+        let mut it = line.split_whitespace();
+        let u: u32 = it.next().unwrap().parse().unwrap();
+        let v: u32 = it.next().unwrap().parse().unwrap();
+        assert!(u < v);
+        assert!(v < 250);
+    }
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn run_hamming_dataset() {
+    let out = bin()
+        .args([
+            "run", "--dataset", "sift-hamming", "--points", "200", "--ranks", "4",
+            "--algorithm", "systolic-ring", "--verify",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("VERIFIED"));
+}
+
+#[test]
+fn config_file_loading() {
+    let tmp = std::env::temp_dir().join("neargraph_cli_cfg.toml");
+    std::fs::write(
+        &tmp,
+        "dataset = \"faces\"\npoints = 200\ntarget_degree = 10.0\n[run]\nranks = 2\nalgorithm = \"landmark-coll\"\n",
+    )
+    .unwrap();
+    let out = bin().args(["run", "--config"]).arg(&tmp).arg("--verify").output().expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("dataset=faces"));
+    assert!(text.contains("VERIFIED"));
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn unknown_flag_rejected() {
+    let out = bin().args(["run", "--bogus-flag", "1"]).output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown flag"));
+}
+
+#[test]
+fn unknown_dataset_rejected() {
+    let out = bin().args(["run", "--dataset", "imagenet"]).output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dataset"));
+}

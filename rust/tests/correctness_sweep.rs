@@ -1,0 +1,164 @@
+//! Integration sweep: every distributed algorithm must produce the exact
+//! brute-force edge set across {metric × dataset shape × rank count × ε ×
+//! strategy} — the repo's primary correctness gate (DESIGN.md §6).
+
+use neargraph::baseline::brute_force_edges;
+use neargraph::data::synthetic;
+use neargraph::dist::{
+    run_epsilon_graph, Algorithm, AssignStrategy, CenterStrategy, RunConfig,
+};
+use neargraph::graph::assert_same_graph;
+use neargraph::prelude::*;
+
+#[test]
+fn euclidean_full_sweep() {
+    let mut rng = Rng::new(9001);
+    let datasets = [
+        ("clustered", synthetic::gaussian_mixture(&mut rng, 220, 6, 6, 0.1)),
+        ("manifold", synthetic::manifold_mixture(&mut rng, 220, 24, 4, 8, 0.1)),
+        ("uniform", synthetic::uniform(&mut rng, 220, 4, 1.0)),
+    ];
+    for (dname, pts) in &datasets {
+        for eps_quantile in [5.0, 40.0] {
+            let eps = neargraph::data::calibrate_eps(pts, &Euclidean, eps_quantile, 20_000, &mut rng);
+            let want = brute_force_edges(pts, &Euclidean, eps);
+            for ranks in [1usize, 3, 6, 13] {
+                for algorithm in Algorithm::ALL {
+                    let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+                    let got = run_epsilon_graph(pts, Euclidean, eps, &cfg);
+                    assert_same_graph(
+                        got.edges,
+                        want.clone(),
+                        &format!("{dname}/{}/{ranks}ranks/eps={eps:.3}", algorithm.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hamming_sweep() {
+    let mut rng = Rng::new(9002);
+    let codes = synthetic::hamming_clusters(&mut rng, 200, 96, 5, 0.06);
+    for eps in [8.0, 20.0, 48.0] {
+        let want = brute_force_edges(&codes, &Hamming, eps);
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 5, algorithm, ..Default::default() };
+            let got = run_epsilon_graph(&codes, Hamming, eps, &cfg);
+            assert_same_graph(got.edges, want.clone(), &format!("hamming/{}", algorithm.name()));
+        }
+    }
+}
+
+#[test]
+fn edit_distance_sweep() {
+    let mut rng = Rng::new(9003);
+    let reads = synthetic::reads(&mut rng, 120, 30, 4, 0.05);
+    for eps in [2.0, 6.0] {
+        let want = brute_force_edges(&reads, &Levenshtein, eps);
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
+            let got = run_epsilon_graph(&reads, Levenshtein, eps, &cfg);
+            assert_same_graph(got.edges, want.clone(), &format!("edit/{}", algorithm.name()));
+        }
+    }
+}
+
+#[test]
+fn exotic_metrics_sweep() {
+    // Manhattan / Chebyshev / angular: only the metric axioms are assumed.
+    let mut rng = Rng::new(9004);
+    let pts = synthetic::gaussian_mixture(&mut rng, 150, 5, 4, 0.15);
+    for algorithm in Algorithm::ALL {
+        let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
+
+        let want = brute_force_edges(&pts, &Manhattan, 0.6);
+        let got = run_epsilon_graph(&pts, Manhattan, 0.6, &cfg);
+        assert_same_graph(got.edges, want, &format!("manhattan/{}", algorithm.name()));
+
+        let want = brute_force_edges(&pts, &Chebyshev, 0.25);
+        let got = run_epsilon_graph(&pts, Chebyshev, 0.25, &cfg);
+        assert_same_graph(got.edges, want, &format!("chebyshev/{}", algorithm.name()));
+
+        let want = brute_force_edges(&pts, &Cosine, 0.3);
+        let got = run_epsilon_graph(&pts, Cosine, 0.3, &cfg);
+        assert_same_graph(got.edges, want, &format!("cosine/{}", algorithm.name()));
+    }
+}
+
+#[test]
+fn strategy_cross_product() {
+    let mut rng = Rng::new(9005);
+    let base = synthetic::uniform(&mut rng, 100, 3, 1.0);
+    let pts = synthetic::with_duplicates(&mut rng, &base, 60); // skewed cells
+    let eps = 0.15;
+    let want = brute_force_edges(&pts, &Euclidean, eps);
+    for centers in [CenterStrategy::Random, CenterStrategy::Greedy] {
+        for assignment in [AssignStrategy::Multiway, AssignStrategy::Cyclic] {
+            for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
+                for num_centers in [0usize, 3, 25] {
+                    let cfg = RunConfig {
+                        ranks: 6,
+                        algorithm,
+                        centers,
+                        assignment,
+                        num_centers,
+                        ..Default::default()
+                    };
+                    let got = run_epsilon_graph(&pts, Euclidean, eps, &cfg);
+                    assert_same_graph(
+                        got.edges,
+                        want.clone(),
+                        &format!("{centers:?}/{assignment:?}/{}/m={num_centers}", algorithm.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn extreme_configs() {
+    let mut rng = Rng::new(9006);
+    let pts = synthetic::gaussian_mixture(&mut rng, 64, 3, 3, 0.1);
+    let want = brute_force_edges(&pts, &Euclidean, 0.3);
+    // ranks > points, centers > points, leaf size 1 and huge.
+    for (ranks, num_centers, leaf_size) in
+        [(100, 0, 8), (4, 1000, 8), (4, 0, 1), (4, 0, 10_000), (2, 1, 8)]
+    {
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks, algorithm, num_centers, leaf_size, ..Default::default() };
+            let got = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
+            assert_same_graph(
+                got.edges,
+                want.clone(),
+                &format!("{}/r{ranks}/m{num_centers}/z{leaf_size}", algorithm.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn huge_eps_yields_complete_graph() {
+    let mut rng = Rng::new(9007);
+    let pts = synthetic::uniform(&mut rng, 60, 2, 1.0);
+    let n = 60u64;
+    for algorithm in Algorithm::ALL {
+        let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
+        let got = run_epsilon_graph(&pts, Euclidean, 1e9, &cfg);
+        assert_eq!(got.graph.num_edges() as u64, n * (n - 1) / 2, "{}", algorithm.name());
+    }
+}
+
+#[test]
+fn determinism_across_runs() {
+    let mut rng = Rng::new(9008);
+    let pts = synthetic::gaussian_mixture(&mut rng, 150, 4, 5, 0.1);
+    for algorithm in Algorithm::ALL {
+        let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
+        let a = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
+        let b = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
+        assert_eq!(a.edges.edges(), b.edges.edges(), "{} not deterministic", algorithm.name());
+    }
+}

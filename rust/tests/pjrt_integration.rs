@@ -1,0 +1,148 @@
+//! PJRT ↔ native backend integration: the AOT-compiled JAX/Pallas kernel
+//! must agree with the hand-written Rust tiles on random shapes, and the
+//! dense brute-force path must produce the same graph through either
+//! backend. Skips (with a notice) when artifacts have not been built.
+
+use neargraph::baseline::{brute_force_edges, brute_force_tiled};
+use neargraph::data::synthetic;
+use neargraph::metric::engine::{NativeBackend, TileBackend};
+use neargraph::prelude::*;
+use neargraph::runtime::PjrtEngine;
+
+fn engine() -> Option<PjrtEngine> {
+    match PjrtEngine::load_default() {
+        Some(e) => Some(e),
+        None => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn euclidean_tiles_match_native_on_random_shapes() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1234);
+    for &(nq, nr, d) in &[(1usize, 1usize, 1usize), (64, 64, 32), (65, 63, 20), (130, 7, 55), (10, 200, 128), (3, 3, 300)] {
+        let q = synthetic::uniform(&mut rng, nq, d, 2.0);
+        let r = synthetic::uniform(&mut rng, nr, d, 2.0);
+        let got = e.euclidean_tile(&q, &r);
+        let want = NativeBackend.euclidean_tile(&q, &r);
+        assert_eq!(got.len(), want.len());
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-2 + 1e-3 * w.abs(),
+                "({nq},{nr},{d}) idx {k}: pjrt {g} vs native {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hamming_tiles_match_native_on_random_shapes() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1235);
+    for &(nq, nr, bits) in &[(64usize, 64usize, 64usize), (70, 3, 256), (5, 129, 100), (33, 33, 800)] {
+        let q = synthetic::hamming_clusters(&mut rng, nq, bits, 2, 0.2);
+        let r = synthetic::hamming_clusters(&mut rng, nr, bits, 2, 0.2);
+        let got = e.hamming_tile(&q, &r);
+        let want = NativeBackend.hamming_tile(&q, &r);
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 0.5, "({nq},{nr},{bits}) idx {k}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn tiled_brute_force_same_graph_through_pjrt() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1236);
+    let pts = synthetic::gaussian_mixture(&mut rng, 300, 24, 5, 0.15);
+    let eps = neargraph::data::calibrate_eps(&pts, &Euclidean, 20.0, 20_000, &mut rng);
+    let scalar = brute_force_edges(&pts, &Euclidean, eps);
+    let native_tiles = brute_force_tiled(&pts, &NativeBackend, eps, 64);
+    let pjrt_tiles = brute_force_tiled(&pts, &e, eps, 64);
+    assert_eq!(scalar.edges(), native_tiles.edges(), "native tiles diverge");
+    // PJRT may flip pairs within float noise of the boundary.
+    let a: std::collections::BTreeSet<_> = pjrt_tiles.edges().iter().copied().collect();
+    let b: std::collections::BTreeSet<_> = scalar.edges().iter().copied().collect();
+    let sym = a.symmetric_difference(&b).count();
+    assert!(
+        sym <= scalar.edges().len() / 500 + 2,
+        "PJRT graph diverges beyond boundary noise: {sym} pairs"
+    );
+}
+
+#[test]
+fn engine_is_shareable_across_rank_threads() {
+    // The engine must be usable concurrently from simulated MPI ranks
+    // (Send + Sync via the internal mutex).
+    let Some(e) = engine() else { return };
+    let e = std::sync::Arc::new(e);
+    let mut rng = Rng::new(1237);
+    let pts = synthetic::uniform(&mut rng, 64, 32, 1.0);
+    let want = NativeBackend.euclidean_tile(&pts, &pts);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let e = e.clone();
+            let pts = pts.clone();
+            let want = want.clone();
+            s.spawn(move || {
+                let got = e.euclidean_tile(&pts, &pts);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-2);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn voronoi_assign_matches_native_assignment() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1238);
+    let pts = synthetic::gaussian_mixture(&mut rng, 300, 16, 6, 0.1);
+    let centers = pts.slice(0, 20);
+    let got = e.try_voronoi_assign(&pts, &centers).expect("voronoi assign failed");
+    let want = neargraph::voronoi::assign_to_centers(&pts, &centers, &Euclidean);
+    assert_eq!(got.len(), want.len());
+    let mut flips = 0usize;
+    for (k, ((gc, gd), (wc, wd))) in got.iter().zip(&want).enumerate() {
+        // Distances agree to kernel tolerance; the argmin may flip only
+        // between centers within that tolerance of each other.
+        assert!((gd - wd).abs() < 1e-2 + 1e-3 * wd.abs(), "idx {k}: {gd} vs {wd}");
+        if gc != wc {
+            let d_g = Euclidean.dist_between(&pts, k, &centers, *gc as usize);
+            assert!((d_g - wd).abs() < 1e-2, "idx {k}: wrong cell {gc} (d={d_g}) vs {wc} (d={wd})");
+            flips += 1;
+        }
+    }
+    assert!(flips < 10, "too many near-tie flips: {flips}");
+}
+
+#[test]
+fn voronoi_assign_rejects_too_many_centers() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1239);
+    let pts = synthetic::uniform(&mut rng, 100, 8, 1.0);
+    let centers = pts.slice(0, 100); // > the 64-center artifact capacity
+    assert!(e.try_voronoi_assign(&pts, &centers).is_err());
+}
+
+#[test]
+fn manhattan_tiles_match_native_on_random_shapes() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1240);
+    for &(nq, nr, d) in &[(32usize, 32usize, 16usize), (40, 20, 55), (7, 70, 256)] {
+        let q = synthetic::uniform(&mut rng, nq, d, 2.0);
+        let r = synthetic::uniform(&mut rng, nr, d, 2.0);
+        let got = e.manhattan_tile(&q, &r);
+        let want = NativeBackend.manhattan_tile(&q, &r);
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-3 + 1e-4 * w.abs(),
+                "({nq},{nr},{d}) idx {k}: pjrt {g} vs native {w}"
+            );
+        }
+    }
+}

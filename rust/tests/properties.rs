@@ -1,0 +1,204 @@
+//! Property-based suite over the testkit (DESIGN.md §6): cover-tree
+//! invariants, the ghost rule (Lemma 1), partitioning bounds, wire
+//! roundtrips and comm-layer exchange contents on random inputs.
+
+use neargraph::covertree::{check_invariants, BuildParams, CoverTree};
+use neargraph::data::synthetic;
+use neargraph::dist::Bundle;
+use neargraph::metric::Metric;
+use neargraph::prelude::*;
+use neargraph::testkit::{forall, Size};
+use neargraph::voronoi;
+
+#[test]
+fn covertree_invariants_euclidean_random() {
+    forall("covertree-euclid", 30, Size { n: 120, dim: 6 }, |rng, size| {
+        let clusters = 1 + rng.below(5);
+        let pts = synthetic::gaussian_mixture(rng, size.n, size.dim, clusters, 0.2);
+        let leaf_size = 1 + rng.below(16);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size, root: 0 });
+        check_invariants(&tree, &Euclidean);
+    });
+}
+
+#[test]
+fn covertree_invariants_with_duplicates() {
+    forall("covertree-dup", 20, Size { n: 80, dim: 4 }, |rng, size| {
+        let base = synthetic::uniform(rng, size.n.max(2), size.dim, 1.0);
+        let pts = synthetic::with_duplicates(rng, &base, size.n / 2 + 1);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        check_invariants(&tree, &Euclidean);
+    });
+}
+
+#[test]
+fn covertree_invariants_hamming_and_edit() {
+    forall("covertree-nm", 15, Size { n: 70, dim: 64 }, |rng, size| {
+        let codes = synthetic::hamming_clusters(rng, size.n, size.dim.max(8), 3, 0.1);
+        let tree = CoverTree::build(&codes, &Hamming, &BuildParams::default());
+        check_invariants(&tree, &Hamming);
+
+        let reads = synthetic::reads(rng, size.n.min(40), 16, 3, 0.08);
+        let tree = CoverTree::build(&reads, &Levenshtein, &BuildParams { leaf_size: 2, root: 0 });
+        check_invariants(&tree, &Levenshtein);
+    });
+}
+
+#[test]
+fn covertree_query_equals_linear_scan() {
+    forall("query-vs-scan", 25, Size { n: 100, dim: 5 }, |rng, size| {
+        let pts = synthetic::gaussian_mixture(rng, size.n, size.dim, 2, 0.3);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 1 + rng.below(8), root: 0 });
+        let eps = rng.f64() * 1.5;
+        let qi = rng.below(size.n);
+        let mut got = tree.query_vec(&Euclidean, pts.row(qi), eps);
+        got.sort_unstable();
+        let want: Vec<u32> = (0..size.n)
+            .filter(|&j| Euclidean.dist_ij(&pts, qi, j) <= eps)
+            .map(|j| j as u32)
+            .collect();
+        assert_eq!(got, want, "eps={eps}");
+    });
+}
+
+#[test]
+fn ghost_rule_lemma1_is_sound() {
+    // Lemma 1: if p ∈ V_j has an ε-neighbor in V_i (i≠j) then
+    // d(p, c_i) ≤ d(p, C) + 2ε. Property: every brute-force cross-cell
+    // neighbor pair is covered by the ghost candidate rule.
+    forall("lemma1", 25, Size { n: 90, dim: 4 }, |rng, size| {
+        let pts = synthetic::gaussian_mixture(rng, size.n, size.dim, 3, 0.25);
+        let m = 1 + rng.below(10);
+        let centers_idx = rng.sample_indices(size.n, m.min(size.n));
+        let centers = pts.gather(&centers_idx);
+        let assignment = voronoi::assign_to_centers(&pts, &centers, &Euclidean);
+        let eps = rng.f64() * 0.8;
+        for i in 0..size.n {
+            for j in 0..size.n {
+                if i == j || Euclidean.dist_ij(&pts, i, j) > eps {
+                    continue;
+                }
+                let (ci, _) = assignment[i];
+                let (cj, dj) = assignment[j];
+                if ci == cj {
+                    continue;
+                }
+                // j must qualify as a ghost for cell ci.
+                let d_to_ci = Euclidean.dist_between(&pts, j, &centers, ci as usize);
+                assert!(
+                    d_to_ci <= dj + 2.0 * eps + 1e-9,
+                    "Lemma 1 violated: d(p,c_i)={d_to_ci} > d(p,C)+2eps={}",
+                    dj + 2.0 * eps
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn multiway_partition_bound_random() {
+    forall("lpt-bound", 50, Size { n: 40, dim: 1 }, |rng, size| {
+        let m = 1 + rng.below(size.n.max(2));
+        let sizes: Vec<u64> = (0..m).map(|_| rng.below(10_000) as u64).collect();
+        let ranks = 1 + rng.below(12);
+        let a = voronoi::multiway_partition(&sizes, ranks);
+        assert_eq!(a.len(), m);
+        assert!(a.iter().all(|&r| r < ranks));
+        let mk = voronoi::partition_makespan(&sizes, &a, ranks);
+        let total: u64 = sizes.iter().sum();
+        let lb = ((total + ranks as u64 - 1) / ranks as u64)
+            .max(sizes.iter().copied().max().unwrap_or(0));
+        assert!(mk as f64 <= lb as f64 * 4.0 / 3.0 + 1.0, "LPT bound violated: {mk} vs LB {lb}");
+    });
+}
+
+#[test]
+fn wire_bundle_roundtrip_random() {
+    forall("bundle-roundtrip", 30, Size { n: 50, dim: 8 }, |rng, size| {
+        let pts = synthetic::uniform(rng, size.n, size.dim, 10.0);
+        let with_meta = rng.bool(0.5);
+        let b = Bundle {
+            pts: pts.clone(),
+            gids: (0..size.n as u32).map(|i| i * 7 + 3).collect(),
+            cells: if with_meta { (0..size.n as u32).collect() } else { Vec::new() },
+            dpc: if with_meta { (0..size.n).map(|i| i as f64 * 0.5).collect() } else { Vec::new() },
+        };
+        let b2: Bundle<DenseMatrix> = Bundle::from_bytes(&b.to_bytes());
+        assert_eq!(b2.pts, b.pts);
+        assert_eq!(b2.gids, b.gids);
+        assert_eq!(b2.cells, b.cells);
+        assert_eq!(b2.dpc, b.dpc);
+    });
+}
+
+#[test]
+fn alltoallv_random_contents() {
+    use neargraph::comm::{run_world, CostModel};
+    forall("alltoallv", 10, Size { n: 6, dim: 1 }, |rng, size| {
+        let ranks = 1 + size.n.min(8);
+        let seed = rng.next_u64();
+        let outs = run_world(ranks, CostModel::default(), move |c| {
+            // Deterministic pseudo-random payload per (src, dst).
+            let payload = |src: usize, dst: usize| -> Vec<u8> {
+                let mut r = Rng::new(seed ^ ((src * 1000 + dst) as u64));
+                (0..r.below(50)).map(|_| r.next_u64() as u8).collect()
+            };
+            let bufs: Vec<Vec<u8>> = (0..c.size()).map(|d| payload(c.rank(), d)).collect();
+            let got = c.alltoallv(bufs);
+            for (src, buf) in got.iter().enumerate() {
+                assert_eq!(*buf, payload(src, c.rank()), "src={src} dst={}", c.rank());
+            }
+        });
+        assert_eq!(outs.len(), ranks);
+    });
+}
+
+#[test]
+fn greedy_permutation_prefix_separation_random() {
+    forall("greedy-net", 20, Size { n: 80, dim: 4 }, |rng, size| {
+        let pts = synthetic::uniform(rng, size.n.max(3), size.dim, 1.0);
+        let m = 2 + rng.below(10);
+        let g = voronoi::greedy_permutation(&pts, &Euclidean, m, 0);
+        // Coverage radius of the prefix.
+        let mut cover = 0.0f64;
+        for i in 0..pts.len() {
+            let d =
+                g.iter().map(|&c| Euclidean.dist_ij(&pts, i, c)).fold(f64::INFINITY, f64::min);
+            cover = cover.max(d);
+        }
+        for a in 0..g.len() {
+            for b in a + 1..g.len() {
+                assert!(
+                    Euclidean.dist_ij(&pts, g[a], g[b]) >= cover - 1e-9,
+                    "prefix is not an r-net"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn snn_query_equals_scan_random() {
+    use neargraph::baseline::{Snn, SnnParams};
+    forall("snn-vs-scan", 20, Size { n: 120, dim: 6 }, |rng, size| {
+        let pts = synthetic::gaussian_mixture(rng, size.n, size.dim, 3, 0.2);
+        let snn = Snn::build(&pts, &SnnParams::default());
+        let eps = rng.f64() * 0.6;
+        let qi = rng.below(size.n);
+        let mut got = snn.query(pts.row(qi), eps);
+        got.sort_unstable();
+        // The window filter is exact up to matmul-form boundary noise;
+        // compare against a scan using the same d² formulation.
+        let norms = pts.row_sq_norms();
+        let q = pts.row(qi);
+        let qn: f32 = q.iter().map(|x| x * x).sum();
+        let want: Vec<u32> = (0..size.n)
+            .filter(|&j| {
+                let dot: f32 = pts.row(j).iter().zip(q).map(|(a, b)| a * b).sum();
+                (qn + norms[j] - 2.0 * dot).max(0.0) <= (eps * eps) as f32
+            })
+            .map(|j| j as u32)
+            .collect();
+        assert_eq!(got, want, "eps={eps} qi={qi}");
+    });
+}
