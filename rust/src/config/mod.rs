@@ -11,7 +11,7 @@ mod toml;
 pub use toml::{ParseError, TomlDoc, Value};
 
 use crate::comm::CostModel;
-use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, RunConfig};
+use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig};
 
 /// A fully-resolved experiment configuration (CLI and config files both
 /// funnel into this).
@@ -87,6 +87,13 @@ impl ExperimentConfig {
                         s => return Err(format!("unknown assignment strategy {s:?}")),
                     }
                 }
+                "run.ghost" => {
+                    cfg.run.ghost = match value.as_str().ok_or("ghost must be a string")? {
+                        "lemma1" => GhostMode::Lemma1,
+                        "all" => GhostMode::All,
+                        s => return Err(format!("unknown ghost mode {s:?}")),
+                    }
+                }
                 "run.alpha" => {
                     cfg.run.cost.alpha = value.as_f64().ok_or("alpha must be a number")?
                 }
@@ -125,6 +132,7 @@ leaf_size = 4
 num_centers = 64
 centers = "random"
 assignment = "multiway"
+ghost = "all"
 "#;
 
     #[test]
@@ -138,6 +146,15 @@ assignment = "multiway"
         assert_eq!(cfg.run.algorithm, Algorithm::LandmarkRing);
         assert_eq!(cfg.run.leaf_size, 4);
         assert_eq!(cfg.run.num_centers, 64);
+        assert_eq!(cfg.run.ghost, GhostMode::All);
+    }
+
+    #[test]
+    fn ghost_mode_defaults_and_parses() {
+        let cfg = ExperimentConfig::from_toml("[run]\nghost = \"lemma1\"\n").unwrap();
+        assert_eq!(cfg.run.ghost, GhostMode::Lemma1);
+        let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
+        assert_eq!(cfg.run.ghost, RunConfig::default().ghost);
     }
 
     #[test]
@@ -157,6 +174,7 @@ assignment = "multiway"
     fn bad_enum_values_are_errors() {
         assert!(ExperimentConfig::from_toml("[run]\nalgorithm = \"quantum\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[run]\ncenters = \"psychic\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[run]\nghost = \"psychic\"\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! The wire format of the distributed algorithms: a batch of points plus
+//! the per-point metadata the landmark algorithms need (global ids, Voronoi
+//! cell ids, distance to the nearest center `d(p, C)`).
+//!
+//! Layout (little-endian, see `tests/properties.rs` for the pinned
+//! roundtrip): a u64 byte-length prefix followed by the `PointSet`
+//! serialization, then three length-prefixed arrays (`gids` as u32,
+//! `cells` as u32, `dpc` as f64). `cells`/`dpc` may be empty — point blocks
+//! moving through the systolic ring and ghost bundles carry only what their
+//! receiver needs.
+
+use crate::points::{get_u64, put_u64, PointSet};
+
+/// A batch of points with optional per-point metadata, movable between
+/// ranks through the simulated MPI layer.
+#[derive(Clone, Debug)]
+pub struct Bundle<P: PointSet> {
+    /// The points themselves.
+    pub pts: P,
+    /// Global vertex id of each point (parallel to `pts`).
+    pub gids: Vec<u32>,
+    /// Voronoi cell of each point (empty when the receiver doesn't need it).
+    pub cells: Vec<u32>,
+    /// Distance to the nearest center `d(p, C)` (empty when not needed).
+    pub dpc: Vec<f64>,
+}
+
+impl<P: PointSet> Bundle<P> {
+    /// An empty bundle with the same per-point shape as `like`.
+    pub fn empty_like(like: &P) -> Self {
+        Bundle { pts: like.empty_like(), gids: Vec::new(), cells: Vec::new(), dpc: Vec::new() }
+    }
+
+    /// Number of points carried.
+    pub fn len(&self) -> usize {
+        self.gids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gids.is_empty()
+    }
+
+    /// Sub-bundle of the points at `idx` (metadata arrays follow when
+    /// present).
+    pub fn select(&self, idx: &[usize]) -> Self {
+        Bundle {
+            pts: self.pts.gather(idx),
+            gids: idx.iter().map(|&i| self.gids[i]).collect(),
+            cells: if self.cells.is_empty() {
+                Vec::new()
+            } else {
+                idx.iter().map(|&i| self.cells[i]).collect()
+            },
+            dpc: if self.dpc.is_empty() {
+                Vec::new()
+            } else {
+                idx.iter().map(|&i| self.dpc[i]).collect()
+            },
+        }
+    }
+
+    /// Append all points (and metadata) of `other`.
+    pub fn append(&mut self, other: &Self) {
+        self.pts.extend_from(&other.pts);
+        self.gids.extend_from_slice(&other.gids);
+        self.cells.extend_from_slice(&other.cells);
+        self.dpc.extend_from_slice(&other.dpc);
+    }
+
+    /// Serialize for the comm layer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let pb = self.pts.to_bytes();
+        let mut buf = Vec::with_capacity(
+            32 + pb.len() + 4 * self.gids.len() + 4 * self.cells.len() + 8 * self.dpc.len(),
+        );
+        put_u64(&mut buf, pb.len() as u64);
+        buf.extend_from_slice(&pb);
+        put_u64(&mut buf, self.gids.len() as u64);
+        for &g in &self.gids {
+            buf.extend_from_slice(&g.to_le_bytes());
+        }
+        put_u64(&mut buf, self.cells.len() as u64);
+        for &c in &self.cells {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        put_u64(&mut buf, self.dpc.len() as u64);
+        for &d in &self.dpc {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Deserialize from `to_bytes` output.
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let mut off = 0usize;
+        let pn = get_u64(bytes, &mut off) as usize;
+        let pts = P::from_bytes(&bytes[off..off + pn]);
+        off += pn;
+        let ng = get_u64(bytes, &mut off) as usize;
+        let mut gids = Vec::with_capacity(ng);
+        for _ in 0..ng {
+            gids.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        let nc = get_u64(bytes, &mut off) as usize;
+        let mut cells = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            cells.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        let nd = get_u64(bytes, &mut off) as usize;
+        let mut dpc = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dpc.push(f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()));
+            off += 8;
+        }
+        Bundle { pts, gids, cells, dpc }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::{DenseMatrix, StringSet};
+
+    fn sample() -> Bundle<DenseMatrix> {
+        Bundle {
+            pts: DenseMatrix::from_flat(2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]),
+            gids: vec![10, 20, 30],
+            cells: vec![0, 1, 0],
+            dpc: vec![0.5, 1.5, 2.5],
+        }
+    }
+
+    #[test]
+    fn roundtrip_full_metadata() {
+        let b = sample();
+        let b2: Bundle<DenseMatrix> = Bundle::from_bytes(&b.to_bytes());
+        assert_eq!(b2.pts, b.pts);
+        assert_eq!(b2.gids, b.gids);
+        assert_eq!(b2.cells, b.cells);
+        assert_eq!(b2.dpc, b.dpc);
+    }
+
+    #[test]
+    fn roundtrip_empty_point_set() {
+        let b: Bundle<DenseMatrix> = Bundle::empty_like(&DenseMatrix::new(7));
+        assert!(b.is_empty());
+        let b2: Bundle<DenseMatrix> = Bundle::from_bytes(&b.to_bytes());
+        assert_eq!(b2.pts.len(), 0);
+        assert_eq!(b2.pts.dim(), 7, "per-point shape survives an empty bundle");
+        assert!(b2.gids.is_empty() && b2.cells.is_empty() && b2.dpc.is_empty());
+    }
+
+    #[test]
+    fn roundtrip_metadata_less() {
+        // Systolic blocks carry only points + gids; cells/dpc stay empty.
+        let b = Bundle {
+            pts: DenseMatrix::from_flat(1, vec![9.0, 8.0]),
+            gids: vec![3, 4],
+            cells: Vec::new(),
+            dpc: Vec::new(),
+        };
+        let b2: Bundle<DenseMatrix> = Bundle::from_bytes(&b.to_bytes());
+        assert_eq!(b2.gids, vec![3, 4]);
+        assert!(b2.cells.is_empty());
+        assert!(b2.dpc.is_empty());
+        assert_eq!(b2.pts, b.pts);
+    }
+
+    #[test]
+    fn roundtrip_max_u32_global_ids() {
+        let b = Bundle {
+            pts: DenseMatrix::from_flat(1, vec![1.0, 2.0, 3.0]),
+            gids: vec![u32::MAX, 0, u32::MAX - 1],
+            cells: vec![u32::MAX, u32::MAX, 0],
+            dpc: vec![f64::MAX, 0.0, -0.0],
+        };
+        let b2: Bundle<DenseMatrix> = Bundle::from_bytes(&b.to_bytes());
+        assert_eq!(b2.gids, b.gids);
+        assert_eq!(b2.cells, b.cells);
+        assert_eq!(b2.dpc, b.dpc);
+    }
+
+    #[test]
+    fn roundtrip_strings() {
+        let b = Bundle {
+            pts: StringSet::from_strs(&["ACGT", "", "TTTT"]),
+            gids: vec![0, 1, 2],
+            cells: Vec::new(),
+            dpc: vec![1.0, 2.0, 3.0],
+        };
+        let b2: Bundle<StringSet> = Bundle::from_bytes(&b.to_bytes());
+        assert_eq!(b2.pts, b.pts);
+        assert_eq!(b2.dpc, b.dpc);
+    }
+
+    #[test]
+    fn select_subsets_and_append_concatenates() {
+        let b = sample();
+        let s = b.select(&[2, 0]);
+        assert_eq!(s.gids, vec![30, 10]);
+        assert_eq!(s.cells, vec![0, 0]);
+        assert_eq!(s.dpc, vec![2.5, 0.5]);
+        assert_eq!(s.pts.row(0), &[4.0, 5.0]);
+
+        let mut acc: Bundle<DenseMatrix> = Bundle::empty_like(&b.pts);
+        acc.append(&s);
+        acc.append(&b.select(&[1]));
+        assert_eq!(acc.len(), 3);
+        assert_eq!(acc.gids, vec![30, 10, 20]);
+    }
+
+    #[test]
+    fn metadata_less_select_stays_metadata_less() {
+        let b = Bundle {
+            pts: DenseMatrix::from_flat(1, vec![1.0, 2.0]),
+            gids: vec![5, 6],
+            cells: Vec::new(),
+            dpc: Vec::new(),
+        };
+        let s = b.select(&[1]);
+        assert!(s.cells.is_empty() && s.dpc.is_empty());
+        assert_eq!(s.gids, vec![6]);
+    }
+}

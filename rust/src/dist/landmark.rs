@@ -1,0 +1,340 @@
+//! Algorithms 5–6 — spatial partitioning over Voronoi landmark cells with
+//! ghost-point exchange (`landmark-coll` and `landmark-ring`).
+//!
+//! Both variants share the first two phases:
+//!
+//! * **partition** — rank 0 selects `m` landmarks (random or greedy
+//!   permutation) and broadcasts them; every rank assigns its block of the
+//!   canonical point distribution to the nearest landmark, the global cell
+//!   sizes are combined, cells are coalesced onto ranks by multiway number
+//!   partitioning (or cyclically, for the ablation), and an alltoallv moves
+//!   every point to the rank owning its cell;
+//! * **tree** — each rank builds one cover tree over its home points and
+//!   self-joins it, which yields every edge whose endpoints live on the
+//!   same rank (same or different cells).
+//!
+//! They differ in the **ghost** phase, which finds the cross-rank edges.
+//! A home point `p` is a *ghost candidate* for a foreign cell `V_i` when
+//! the Lemma-1 rule `d(p, c_i) ≤ d(p, C) + 2ε` holds (see DESIGN.md §5);
+//! any cross-rank ε-neighbor pair has its two endpoints related by this
+//! rule, so querying ghosts against home trees finds every remaining edge.
+//!
+//! * `landmark-coll` materializes one ghost bundle per destination rank and
+//!   exchanges them with a single alltoallv — fastest at moderate scale but
+//!   exposed to the collective's `α·(P−1)` latency term;
+//! * `landmark-ring` instead circulates each rank's *union* ghost bundle
+//!   around the ring; every rank filters the visitors relevant to its own
+//!   cells and queries them while the bundle is being forwarded
+//!   (compute/communication overlap), trading extra bandwidth for latency
+//!   that hides behind the query work.
+
+use super::{AssignStrategy, Bundle, CenterStrategy, GhostMode, RunConfig};
+use crate::comm::Comm;
+use crate::covertree::{BuildParams, CoverTree};
+use crate::graph::EdgeList;
+use crate::metric::Metric;
+use crate::points::PointSet;
+use crate::util::{block_partition, Rng};
+use crate::voronoi;
+
+/// Tag base for the circulating ghost bundles (one tag per ring step).
+const TAG_GHOST_RING: u32 = 0x6100;
+
+/// Floating-point slack for the Lemma-1 prune: admitting extra ghost
+/// candidates only costs traffic, while a rounding-induced rejection would
+/// lose an edge. The bound scales with the magnitudes involved.
+#[inline]
+fn lemma1_bound(dpc: f64, eps: f64) -> f64 {
+    dpc + 2.0 * eps + 1e-9 * (1.0 + dpc + eps)
+}
+
+pub(super) fn run<P: PointSet, M: Metric<P>>(
+    comm: &mut Comm,
+    pts: &P,
+    metric: &M,
+    eps: f64,
+    cfg: &RunConfig,
+    ring: bool,
+) -> EdgeList {
+    let mut edges = EdgeList::new();
+    let n = pts.len();
+    if n == 0 {
+        return edges;
+    }
+    let p = comm.size();
+    let rank = comm.rank();
+
+    // ------------------------------------------------------------------
+    // phase: partition
+    // ------------------------------------------------------------------
+    comm.set_phase("partition");
+
+    // Landmark selection on rank 0, broadcast as a Bundle so the α-β model
+    // sees the real payload.
+    let bytes = if rank == 0 {
+        let m = cfg.resolved_centers(n);
+        let idx = match cfg.centers {
+            CenterStrategy::Random => {
+                let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+                voronoi::random_centers(&mut rng, n, m)
+            }
+            // Greedy may stop early when fewer distinct points exist.
+            CenterStrategy::Greedy => voronoi::greedy_permutation(pts, metric, m, 0),
+        };
+        Bundle {
+            pts: pts.gather(&idx),
+            gids: idx.iter().map(|&i| i as u32).collect(),
+            cells: Vec::new(),
+            dpc: Vec::new(),
+        }
+        .to_bytes()
+    } else {
+        Vec::new()
+    };
+    let centers: Bundle<P> = Bundle::from_bytes(&comm.bcast(0, bytes));
+    let m = centers.gids.len();
+
+    // Assign the locally owned block to its nearest landmarks.
+    let (off, len) = block_partition(n, p, rank);
+    let block = pts.slice(off, off + len);
+    let assignment = voronoi::assign_to_centers(&block, &centers.pts, metric);
+
+    // Global cell sizes (sum of the per-rank counts) → cell→rank map,
+    // computed identically on every rank.
+    let local_sizes = voronoi::cell_sizes(&assignment, m);
+    let mut sizes = vec![0u64; m];
+    for b in &comm.allgather(encode_u64s(&local_sizes)) {
+        for (i, s) in decode_u64s(b).into_iter().enumerate() {
+            sizes[i] += s;
+        }
+    }
+    let cell_rank: Vec<usize> = match cfg.assignment {
+        AssignStrategy::Multiway => voronoi::multiway_partition(&sizes, p),
+        AssignStrategy::Cyclic => voronoi::cyclic_assignment(&sizes, p),
+    };
+
+    // Redistribute: every point moves to the rank owning its cell, carrying
+    // its global id, cell and d(p, C).
+    let mut outgoing: Vec<Vec<usize>> = vec![Vec::new(); p];
+    for (li, &(cell, _)) in assignment.iter().enumerate() {
+        outgoing[cell_rank[cell as usize]].push(li);
+    }
+    let bufs: Vec<Vec<u8>> = outgoing
+        .iter()
+        .map(|idx| {
+            Bundle {
+                pts: block.gather(idx),
+                gids: idx.iter().map(|&li| (off + li) as u32).collect(),
+                cells: idx.iter().map(|&li| assignment[li].0).collect(),
+                dpc: idx.iter().map(|&li| assignment[li].1).collect(),
+            }
+            .to_bytes()
+        })
+        .collect();
+    let mut home: Bundle<P> = Bundle::empty_like(pts);
+    for b in &comm.alltoallv(bufs) {
+        home.append(&Bundle::from_bytes(b));
+    }
+
+    // ------------------------------------------------------------------
+    // phase: tree
+    // ------------------------------------------------------------------
+    comm.set_phase("tree");
+    let params = BuildParams { leaf_size: cfg.leaf_size.max(1), root: 0 };
+    let tree = CoverTree::build_with_ids(home.pts.clone(), home.gids.clone(), metric, &params);
+    // One tree per rank covers every intra-rank pair (same or different
+    // cell) in a single self-join.
+    tree.eps_self_join(metric, eps, |a, b| edges.push(a, b));
+
+    // ------------------------------------------------------------------
+    // phase: ghost
+    // ------------------------------------------------------------------
+    comm.set_phase("ghost");
+    if !ring {
+        // landmark-coll: per-destination ghost bundles, one alltoallv.
+        let mut ghost_idx: Vec<Vec<usize>> = vec![Vec::new(); p];
+        let mut stamp: Vec<usize> = vec![usize::MAX; p];
+        for hi in 0..home.len() {
+            let bound = lemma1_bound(home.dpc[hi], eps);
+            for c in 0..m {
+                let dest = cell_rank[c];
+                if dest == rank || stamp[dest] == hi {
+                    continue;
+                }
+                let keep = match cfg.ghost {
+                    GhostMode::All => true,
+                    GhostMode::Lemma1 => {
+                        metric.dist_between(&home.pts, hi, &centers.pts, c) <= bound
+                    }
+                };
+                if keep {
+                    stamp[dest] = hi;
+                    ghost_idx[dest].push(hi);
+                }
+            }
+        }
+        // Coll-mode receivers only need points + gids; shipping cells/dpc
+        // would inflate the measured ghost-phase traffic with dead bytes.
+        let bufs: Vec<Vec<u8>> = ghost_idx
+            .iter()
+            .map(|idx| {
+                let mut b = home.select(idx);
+                b.cells = Vec::new();
+                b.dpc = Vec::new();
+                b.to_bytes()
+            })
+            .collect();
+        for b in &comm.alltoallv(bufs) {
+            let ghosts: Bundle<P> = Bundle::from_bytes(b);
+            tree.query_batch(metric, &ghosts.pts, eps, |qi, gid| {
+                edges.push(ghosts.gids[qi], gid);
+            });
+        }
+    } else {
+        // landmark-ring: the union ghost bundle circulates the ring.
+        let my_cells: Vec<usize> = (0..m).filter(|&c| cell_rank[c] == rank).collect();
+        let any_foreign_cell = (0..m).any(|c| cell_rank[c] != rank);
+        let union_idx: Vec<usize> = (0..home.len())
+            .filter(|&hi| match cfg.ghost {
+                GhostMode::All => any_foreign_cell,
+                GhostMode::Lemma1 => {
+                    let bound = lemma1_bound(home.dpc[hi], eps);
+                    (0..m).any(|c| {
+                        cell_rank[c] != rank
+                            && metric.dist_between(&home.pts, hi, &centers.pts, c) <= bound
+                    })
+                }
+            })
+            .collect();
+        let mut visiting = home.select(&union_idx);
+        // Ring receivers re-apply the Lemma-1 filter, so dpc must travel;
+        // cell ids are dead weight on the wire.
+        visiting.cells = Vec::new();
+        let next = (rank + 1) % p;
+        let prev = (rank + p - 1) % p;
+        for s in 1..p {
+            let bytes = visiting.to_bytes();
+            let ((), received) =
+                comm.sendrecv_overlapped(next, prev, TAG_GHOST_RING + s as u32, bytes, || {
+                    if s > 1 {
+                        // Overlap: query the visitors received on the
+                        // previous step while this transfer is in flight.
+                        ghost_ring_query(
+                            &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost,
+                            &mut edges,
+                        );
+                    }
+                });
+            visiting = Bundle::from_bytes(&received);
+        }
+        if p > 1 {
+            ghost_ring_query(
+                &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost, &mut edges,
+            );
+        }
+    }
+    edges
+}
+
+/// Filter a visiting ghost bundle down to the points relevant to this
+/// rank's cells (the receiver side of the Lemma-1 rule) and query them
+/// against the home tree.
+#[allow(clippy::too_many_arguments)]
+fn ghost_ring_query<P: PointSet, M: Metric<P>>(
+    tree: &CoverTree<P>,
+    metric: &M,
+    eps: f64,
+    visiting: &Bundle<P>,
+    centers: &Bundle<P>,
+    my_cells: &[usize],
+    ghost: GhostMode,
+    edges: &mut EdgeList,
+) {
+    if tree.num_points() == 0 || visiting.is_empty() || my_cells.is_empty() {
+        return;
+    }
+    let keep: Vec<usize> = (0..visiting.len())
+        .filter(|&i| match ghost {
+            GhostMode::All => true,
+            GhostMode::Lemma1 => {
+                let bound = lemma1_bound(visiting.dpc[i], eps);
+                my_cells.iter().any(|&c| {
+                    metric.dist_between(&visiting.pts, i, &centers.pts, c) <= bound
+                })
+            }
+        })
+        .collect();
+    if keep.is_empty() {
+        return;
+    }
+    let sub = visiting.select(&keep);
+    tree.query_batch(metric, &sub.pts, eps, |qi, gid| {
+        edges.push(sub.gids[qi], gid);
+    });
+}
+
+fn encode_u64s(xs: &[u64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    buf
+}
+
+fn decode_u64s(bytes: &[u8]) -> Vec<u64> {
+    bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_epsilon_graph, Algorithm, GhostMode, RunConfig};
+    use crate::baseline::brute_force_edges;
+    use crate::data::synthetic;
+    use crate::metric::Euclidean;
+    use crate::util::Rng;
+
+    #[test]
+    fn coll_and_ring_exact_across_rank_counts() {
+        let mut rng = Rng::new(500);
+        let pts = synthetic::gaussian_mixture(&mut rng, 110, 4, 4, 0.15);
+        let want = brute_force_edges(&pts, &Euclidean, 0.35);
+        for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
+            for ranks in [1usize, 2, 5, 11] {
+                let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+                let got = run_epsilon_graph(&pts, Euclidean, 0.35, &cfg);
+                assert_eq!(
+                    got.edges.edges(),
+                    want.edges(),
+                    "{} ranks={ranks}",
+                    algorithm.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ghost_mode_all_matches_lemma1() {
+        let mut rng = Rng::new(501);
+        let pts = synthetic::uniform(&mut rng, 80, 3, 1.0);
+        let want = brute_force_edges(&pts, &Euclidean, 0.3);
+        for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
+            for ghost in [GhostMode::Lemma1, GhostMode::All] {
+                let cfg = RunConfig { ranks: 5, algorithm, ghost, ..Default::default() };
+                let got = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
+                assert_eq!(got.edges.edges(), want.edges(), "{} {ghost:?}", algorithm.name());
+            }
+        }
+    }
+
+    #[test]
+    fn single_center_degenerates_gracefully() {
+        let mut rng = Rng::new(502);
+        let pts = synthetic::gaussian_mixture(&mut rng, 50, 3, 2, 0.2);
+        let want = brute_force_edges(&pts, &Euclidean, 0.4);
+        for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
+            let cfg = RunConfig { ranks: 4, algorithm, num_centers: 1, ..Default::default() };
+            let got = run_epsilon_graph(&pts, Euclidean, 0.4, &cfg);
+            assert_eq!(got.edges.edges(), want.edges(), "{}", algorithm.name());
+        }
+    }
+}

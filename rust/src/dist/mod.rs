@@ -1,0 +1,289 @@
+//! The three distributed ε-graph construction algorithms (the paper's
+//! Algorithms 4–6) behind one typed driver.
+//!
+//! [`run_epsilon_graph`] is the crate's front door: it launches one
+//! simulated MPI rank per thread on the [`crate::comm`] runtime, runs the
+//! selected [`Algorithm`] as an SPMD program, merges the per-rank edge
+//! lists into the canonical ε-graph and reports the virtual makespan plus
+//! per-rank, per-phase breakdowns (`partition` / `tree` / `ghost` for the
+//! landmark algorithms — the paper's Figures 3–5 view).
+//!
+//! The driver is generic over any `PointSet × Metric` pair — dense vectors,
+//! bit-packed Hamming codes and byte strings all run through the same code
+//! path, since the algorithms assume nothing beyond the metric axioms.
+//!
+//! Every algorithm is **exact**: the output equals the brute-force edge
+//! set for every metric, dataset shape and rank count (the correctness
+//! gate of `tests/correctness_sweep.rs`, DESIGN.md §6).
+
+mod bipartite;
+mod bundle;
+mod landmark;
+mod systolic;
+
+pub use bipartite::{run_bipartite_join, BipartiteResult};
+pub use bundle::Bundle;
+
+use crate::comm::{self, CommStats, CostModel};
+use crate::graph::{Csr, EdgeList};
+use crate::metric::Metric;
+use crate::points::PointSet;
+
+/// The distributed algorithm to run (Algorithms 4–6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Point partitioning with rotating point blocks (Algorithm 4).
+    SystolicRing,
+    /// Spatial partitioning; ghosts exchanged with one alltoallv
+    /// (Algorithm 5).
+    LandmarkColl,
+    /// Spatial partitioning; ghosts circulated around the ring, overlapped
+    /// with the ghost queries (Algorithm 6).
+    LandmarkRing,
+}
+
+impl Algorithm {
+    /// All algorithms, in the paper's presentation order.
+    pub const ALL: [Algorithm; 3] =
+        [Algorithm::SystolicRing, Algorithm::LandmarkColl, Algorithm::LandmarkRing];
+
+    /// The CLI / config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::SystolicRing => "systolic-ring",
+            Algorithm::LandmarkColl => "landmark-coll",
+            Algorithm::LandmarkRing => "landmark-ring",
+        }
+    }
+
+    /// Inverse of [`Algorithm::name`].
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "systolic-ring" => Some(Algorithm::SystolicRing),
+            "landmark-coll" => Some(Algorithm::LandmarkColl),
+            "landmark-ring" => Some(Algorithm::LandmarkRing),
+            _ => None,
+        }
+    }
+}
+
+/// Landmark (Voronoi center) selection strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CenterStrategy {
+    /// Uniform random sample — the paper's default, robust to skew.
+    Random,
+    /// Greedy (farthest-point) permutation prefix — an r-net, but fragile
+    /// under heavy duplication (§IV-D).
+    Greedy,
+}
+
+/// Cell → rank assignment strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignStrategy {
+    /// Multiway number partitioning via Graham's LPT rule (the paper's
+    /// choice; 4/3-approximate makespan).
+    Multiway,
+    /// Round-robin — the ablation baseline.
+    Cyclic,
+}
+
+/// Ghost-candidate selection rule for the landmark algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GhostMode {
+    /// The Lemma-1 prune: `p` is a ghost for cell `V_i` iff
+    /// `d(p, c_i) ≤ d(p, C) + 2ε`. Exact and communication-minimal.
+    Lemma1,
+    /// Ship every home point to every cell-owning rank — an exact but
+    /// unpruned baseline for measuring what Lemma 1 saves.
+    All,
+}
+
+/// Configuration of one distributed run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Number of simulated MPI ranks (threads).
+    pub ranks: usize,
+    pub algorithm: Algorithm,
+    /// Cover-tree leaf size ζ.
+    pub leaf_size: usize,
+    /// Number of Voronoi landmarks `m` (0 ⇒ auto: see
+    /// [`RunConfig::resolved_centers`]).
+    pub num_centers: usize,
+    pub centers: CenterStrategy,
+    pub assignment: AssignStrategy,
+    pub ghost: GhostMode,
+    /// α-β communication cost model (DESIGN.md §3).
+    pub cost: CostModel,
+    /// Seed for landmark sampling.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            ranks: 4,
+            algorithm: Algorithm::LandmarkColl,
+            leaf_size: 8,
+            num_centers: 0,
+            centers: CenterStrategy::Random,
+            assignment: AssignStrategy::Multiway,
+            ghost: GhostMode::Lemma1,
+            cost: CostModel::default(),
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The landmark count actually used for an `n`-point input: the
+    /// configured `num_centers` clamped to `[1, n]`, or `4·ranks` cells
+    /// (clamped likewise) when unset — enough cells for the LPT assignment
+    /// to balance skew without shrinking cells below useful tree sizes.
+    pub fn resolved_centers(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let m = if self.num_centers > 0 { self.num_centers } else { 4 * self.ranks.max(1) };
+        m.clamp(1, n)
+    }
+}
+
+/// One rank's report: final virtual clock and per-phase breakdown.
+#[derive(Clone, Debug)]
+pub struct RankReport {
+    pub rank: usize,
+    /// The rank's final virtual time (its makespan contribution).
+    pub virtual_time: f64,
+    /// Phase-bucketed compute/communication times and send counters.
+    pub stats: CommStats,
+}
+
+/// Result of a distributed ε-graph construction.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// The canonical (sorted, deduplicated) undirected edge set.
+    pub edges: EdgeList,
+    /// The same graph in CSR form.
+    pub graph: Csr,
+    /// Simulated job makespan: the maximum rank virtual time.
+    pub makespan: f64,
+    /// Per-rank reports, indexed by rank.
+    pub ranks: Vec<RankReport>,
+}
+
+/// Build the ε-graph of `pts` under `metric` with the configured
+/// distributed algorithm, one simulated MPI rank per thread.
+///
+/// The result is exact — identical to [`crate::baseline::brute_force_edges`]
+/// — for every algorithm and configuration; the algorithms differ only in
+/// simulated time and traffic.
+pub fn run_epsilon_graph<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    eps: f64,
+    cfg: &RunConfig,
+) -> RunResult {
+    let p = cfg.ranks.max(1);
+    let outputs = comm::run_world(p, cfg.cost, |c| match cfg.algorithm {
+        Algorithm::SystolicRing => systolic::run(c, pts, &metric, eps, cfg),
+        Algorithm::LandmarkColl => landmark::run(c, pts, &metric, eps, cfg, false),
+        Algorithm::LandmarkRing => landmark::run(c, pts, &metric, eps, cfg, true),
+    });
+    let makespan = comm::makespan(&outputs);
+    let mut edges = EdgeList::new();
+    let mut ranks = Vec::with_capacity(outputs.len());
+    for o in outputs {
+        edges.merge(&o.result);
+        ranks.push(RankReport { rank: o.rank, virtual_time: o.virtual_time, stats: o.stats });
+    }
+    edges.canonicalize();
+    let graph = edges.clone().into_csr(pts.len());
+    RunResult { edges, graph, makespan, ranks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::brute_force_edges;
+    use crate::data::synthetic;
+    use crate::metric::Euclidean;
+    use crate::util::Rng;
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("quantum"), None);
+    }
+
+    #[test]
+    fn resolved_centers_clamped() {
+        let cfg = RunConfig { ranks: 8, num_centers: 0, ..Default::default() };
+        assert_eq!(cfg.resolved_centers(0), 0);
+        assert_eq!(cfg.resolved_centers(5), 5); // auto 32 clamped to n
+        assert_eq!(cfg.resolved_centers(1000), 32);
+        let cfg = RunConfig { ranks: 2, num_centers: 10_000, ..Default::default() };
+        assert_eq!(cfg.resolved_centers(64), 64);
+        let cfg = RunConfig { ranks: 2, num_centers: 3, ..Default::default() };
+        assert_eq!(cfg.resolved_centers(64), 3);
+    }
+
+    #[test]
+    fn all_algorithms_exact_small() {
+        let mut rng = Rng::new(600);
+        let pts = synthetic::gaussian_mixture(&mut rng, 70, 3, 3, 0.2);
+        let want = brute_force_edges(&pts, &Euclidean, 0.35);
+        for algorithm in Algorithm::ALL {
+            for ranks in [1usize, 3, 6] {
+                let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+                let got = run_epsilon_graph(&pts, Euclidean, 0.35, &cfg);
+                assert_eq!(got.edges.edges(), want.edges(), "{} r={ranks}", algorithm.name());
+                assert_eq!(got.graph.num_edges(), want.edges().len());
+                assert_eq!(got.ranks.len(), ranks);
+                assert!(got.makespan >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_yields_empty_graph() {
+        let pts = crate::points::DenseMatrix::new(3);
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 3, algorithm, ..Default::default() };
+            let res = run_epsilon_graph(&pts, Euclidean, 1.0, &cfg);
+            assert!(res.edges.edges().is_empty());
+            assert_eq!(res.graph.num_vertices(), 0);
+        }
+    }
+
+    #[test]
+    fn landmark_runs_report_the_three_phases() {
+        let mut rng = Rng::new(601);
+        let pts = synthetic::gaussian_mixture(&mut rng, 60, 3, 3, 0.2);
+        for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
+            let cfg = RunConfig { ranks: 3, algorithm, ..Default::default() };
+            let res = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
+            for r in &res.ranks {
+                for phase in ["partition", "tree", "ghost"] {
+                    assert!(
+                        r.stats.phases().contains_key(phase),
+                        "{} rank {} missing phase {phase}",
+                        algorithm.name(),
+                        r.rank
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn makespan_is_max_rank_time() {
+        let mut rng = Rng::new(602);
+        let pts = synthetic::uniform(&mut rng, 50, 2, 1.0);
+        let cfg = RunConfig { ranks: 4, ..Default::default() };
+        let res = run_epsilon_graph(&pts, Euclidean, 0.2, &cfg);
+        let mx = res.ranks.iter().map(|r| r.virtual_time).fold(0.0, f64::max);
+        assert!((res.makespan - mx).abs() < 1e-12);
+    }
+}

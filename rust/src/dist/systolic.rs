@@ -1,0 +1,119 @@
+//! Algorithm 4 — `systolic-ring`: point partitioning with rotating point
+//! blocks.
+//!
+//! Each rank owns a contiguous block of the input (the canonical block
+//! distribution) and builds a cover tree over it. The blocks then travel
+//! the ring: at every step each rank forwards the block it is holding to
+//! its successor while — overlapped with the transfer — querying that same
+//! block against its local tree. After `P − 1` steps every block has
+//! visited every rank, so every cross-block pair has been examined (twice,
+//! once in each direction; the duplicate is removed when the driver
+//! canonicalizes the merged edge list). Intra-block pairs come from a
+//! self-join during the first step's transfer window.
+//!
+//! The overlap mirrors the paper's observation that the systolic transfer
+//! hides behind the query step until the ring latency `α·(P−1)` dominates.
+
+use super::{Bundle, RunConfig};
+use crate::comm::Comm;
+use crate::covertree::{BuildParams, CoverTree};
+use crate::graph::EdgeList;
+use crate::metric::Metric;
+use crate::points::PointSet;
+use crate::util::block_partition;
+
+/// Tag base for the rotating point blocks (one tag per ring step).
+const TAG_RING: u32 = 0x5100;
+
+pub(super) fn run<P: PointSet, M: Metric<P>>(
+    comm: &mut Comm,
+    pts: &P,
+    metric: &M,
+    eps: f64,
+    cfg: &RunConfig,
+) -> EdgeList {
+    let mut edges = EdgeList::new();
+    let n = pts.len();
+    if n == 0 {
+        return edges;
+    }
+    let p = comm.size();
+    let rank = comm.rank();
+
+    comm.set_phase("tree");
+    let (off, len) = block_partition(n, p, rank);
+    let block = pts.slice(off, off + len);
+    let gids: Vec<u32> = (off as u32..(off + len) as u32).collect();
+    let params = BuildParams { leaf_size: cfg.leaf_size.max(1), root: 0 };
+    let tree = CoverTree::build_with_ids(block.clone(), gids.clone(), metric, &params);
+
+    comm.set_phase("ring");
+    if p == 1 {
+        tree.eps_self_join(metric, eps, |a, b| edges.push(a, b));
+        return edges;
+    }
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    let mut visiting = Bundle { pts: block, gids, cells: Vec::new(), dpc: Vec::new() };
+    for s in 1..p {
+        let bytes = visiting.to_bytes();
+        let ((), received) =
+            comm.sendrecv_overlapped(next, prev, TAG_RING + s as u32, bytes, || {
+                if s == 1 {
+                    // First transfer window: the block in hand is our own —
+                    // run the intra-block self-join.
+                    tree.eps_self_join(metric, eps, |a, b| edges.push(a, b));
+                } else {
+                    cross_query(&tree, metric, eps, &visiting, &mut edges);
+                }
+            });
+        visiting = Bundle::from_bytes(&received);
+    }
+    // The block received on the last step still needs querying.
+    cross_query(&tree, metric, eps, &visiting, &mut edges);
+    edges
+}
+
+/// Emit every (visiting, local) pair within `eps`, canonically ordered.
+fn cross_query<P: PointSet, M: Metric<P>>(
+    tree: &CoverTree<P>,
+    metric: &M,
+    eps: f64,
+    visiting: &Bundle<P>,
+    edges: &mut EdgeList,
+) {
+    tree.query_batch(metric, &visiting.pts, eps, |qi, gid| {
+        edges.push(visiting.gids[qi], gid);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_epsilon_graph, Algorithm, RunConfig};
+    use crate::baseline::brute_force_edges;
+    use crate::data::synthetic;
+    use crate::metric::Euclidean;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_across_ring_sizes() {
+        let mut rng = Rng::new(404);
+        let pts = synthetic::gaussian_mixture(&mut rng, 90, 3, 3, 0.2);
+        let want = brute_force_edges(&pts, &Euclidean, 0.4);
+        for ranks in [1usize, 2, 3, 7, 16] {
+            let cfg = RunConfig { ranks, algorithm: Algorithm::SystolicRing, ..Default::default() };
+            let got = run_epsilon_graph(&pts, Euclidean, 0.4, &cfg);
+            assert_eq!(got.edges.edges(), want.edges(), "ranks={ranks}");
+        }
+    }
+
+    #[test]
+    fn more_ranks_than_points() {
+        let mut rng = Rng::new(405);
+        let pts = synthetic::uniform(&mut rng, 5, 2, 1.0);
+        let want = brute_force_edges(&pts, &Euclidean, 0.8);
+        let cfg = RunConfig { ranks: 9, algorithm: Algorithm::SystolicRing, ..Default::default() };
+        let got = run_epsilon_graph(&pts, Euclidean, 0.8, &cfg);
+        assert_eq!(got.edges.edges(), want.edges());
+    }
+}

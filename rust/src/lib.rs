@@ -20,14 +20,14 @@
 //!
 //! Quickstart (single process, all ranks simulated in threads):
 //!
-//! ```no_run
+//! ```
 //! use neargraph::prelude::*;
 //!
 //! let pts = neargraph::data::synthetic::gaussian_mixture(
 //!     &mut Rng::new(42), 500, 8, 4, 0.2);
-//! let graph = neargraph::dist::run_epsilon_graph(
+//! let result = neargraph::dist::run_epsilon_graph(
 //!     &pts, Euclidean, 0.5, &RunConfig { ranks: 4, ..Default::default() });
-//! println!("edges: {}", graph.graph.num_edges());
+//! println!("edges: {}", result.graph.num_edges());
 //! ```
 
 pub mod baseline;
@@ -49,7 +49,9 @@ pub mod voronoi;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::covertree::CoverTree;
-    pub use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig, RunResult};
+    pub use crate::dist::{
+        Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig, RunResult,
+    };
     pub use crate::graph::{Csr, EdgeList};
     pub use crate::metric::{
         Chebyshev, Cosine, Counted, Euclidean, Hamming, Levenshtein, Manhattan, Metric,

@@ -1,0 +1,438 @@
+//! The real PJRT engine (feature `pjrt`): loads the AOT-compiled
+//! JAX/Pallas artifacts and executes them through the `xla` crate.
+//!
+//! `make artifacts` (build-time Python, never on the request path) lowers
+//! the Layer-2 graphs to HLO **text** (the interchange format the bundled
+//! xla_extension 0.5.1 accepts; serialized jax ≥ 0.5 protos are rejected
+//! over 64-bit instruction ids) plus a manifest. This module parses the
+//! manifest, compiles each module on the PJRT CPU client
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile`),
+//! and exposes the result as a [`TileBackend`], interchangeable with the
+//! native Rust backend in every dense phase.
+//!
+//! Padding contract (matches `python/compile/aot.py`): artifact shapes are
+//! fixed at `(TILE_Q, D) × (TILE_R, D)`; callers' tiles are zero-padded up
+//! to the row tiles and to the next supported dimension — exact for both
+//! distance formulations since zero coordinates contribute nothing to
+//! norms or dot products.
+
+use super::{default_artifact_dir, Artifact, ArtifactKind, Manifest, Result};
+use crate::metric::engine::TileBackend;
+use crate::points::{DenseMatrix, HammingCodes, PointSet};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled pairwise-distance executable for one padded dimension.
+struct CompiledTile {
+    exe: xla::PjRtLoadedExecutable,
+    tile_q: usize,
+    tile_r: usize,
+    dim: usize,
+}
+
+/// The PJRT tile engine.
+///
+/// Executables are compiled lazily (first use per dimension) and cached.
+/// All state — the client, the executable caches, every PJRT call — lives
+/// behind one `Mutex`, which both serializes access from the simulated-MPI
+/// rank threads and keeps virtual-time accounting honest (one engine
+/// execution is charged to the calling rank only).
+struct EngineInner {
+    client: xla::PjRtClient,
+    euclidean: BTreeMap<usize, CompiledTile>,
+    hamming: BTreeMap<usize, CompiledTile>,
+    manhattan: BTreeMap<usize, CompiledTile>,
+}
+
+pub struct PjrtEngine {
+    inner: Mutex<EngineInner>,
+    manifest: Manifest,
+    dir: PathBuf,
+}
+
+// SAFETY: the `xla` crate marks its wrappers `!Send`/`!Sync` because
+// `PjRtClient` holds an `Rc` refcount and raw PJRT pointers. Every use of
+// those wrappers in this module happens while holding `self.inner`'s
+// mutex, so no two threads ever touch the client, an executable, a
+// `Literal` or a `PjRtBuffer` concurrently, and nothing reference-counted
+// escapes the lock (the public API returns plain `Vec<f32>`). The
+// underlying PJRT CPU runtime itself is thread-safe per the PJRT API
+// contract; the mutex additionally serializes the Rust-side `Rc` clones
+// that `execute` performs internally.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load the engine from an artifact directory (reads the manifest,
+    /// creates the PJRT CPU client; module compilation is lazy).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .map_err(|e| format!("loading manifest from {}: {e}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtEngine {
+            inner: Mutex::new(EngineInner {
+                client,
+                euclidean: BTreeMap::new(),
+                hamming: BTreeMap::new(),
+                manhattan: BTreeMap::new(),
+            }),
+            manifest,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default directory; `None` when artifacts are absent
+    /// (callers — tests, benches — degrade to the native backend).
+    pub fn load_default() -> Option<Self> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            return None;
+        }
+        Self::load(&dir).ok()
+    }
+
+    /// Supported padded dimensions for a kind.
+    fn dims_for(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut dims: Vec<usize> =
+            self.manifest.artifacts.iter().filter(|a| a.kind == kind).map(|a| a.dim).collect();
+        dims.sort_unstable();
+        dims
+    }
+
+    /// Smallest supported dimension ≥ `d`.
+    fn padded_dim(&self, kind: ArtifactKind, d: usize) -> Result<usize> {
+        self.dims_for(kind)
+            .into_iter()
+            .find(|&pd| pd >= d)
+            .ok_or_else(|| format!("no {kind:?} artifact for dimension {d}"))
+    }
+
+    fn find_artifact(&self, kind: ArtifactKind, dim: usize) -> Result<&Artifact> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.dim == dim)
+            .ok_or_else(|| format!("artifact {kind:?} d={dim} missing from manifest"))
+    }
+
+    fn compile(
+        &self,
+        client: &xla::PjRtClient,
+        kind: ArtifactKind,
+        dim: usize,
+    ) -> Result<CompiledTile> {
+        let art = self.find_artifact(kind, dim)?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| format!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| format!("compiling {}: {e:?}", art.name))?;
+        Ok(CompiledTile { exe, tile_q: art.tile_q, tile_r: art.tile_r, dim })
+    }
+
+    /// Execute one fixed-shape pairwise tile; `qd`/`rd` are row-major
+    /// buffers already padded to `(tile_q, dim)` / `(tile_r, dim)`.
+    fn run_tile(t: &CompiledTile, qd: &[f32], rd: &[f32]) -> Result<Vec<f32>> {
+        let q = xla::Literal::vec1(qd)
+            .reshape(&[t.tile_q as i64, t.dim as i64])
+            .map_err(|e| format!("reshape q: {e:?}"))?;
+        let r = xla::Literal::vec1(rd)
+            .reshape(&[t.tile_r as i64, t.dim as i64])
+            .map_err(|e| format!("reshape r: {e:?}"))?;
+        let bufs =
+            t.exe.execute::<xla::Literal>(&[q, r]).map_err(|e| format!("execute: {e:?}"))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(|e| format!("to_literal: {e:?}"))?;
+        // Lowered with return_tuple=True: a 1-tuple of the distance tile.
+        let out = lit.to_tuple1().map_err(|e| format!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))
+    }
+
+    /// Generic tiled pairwise driver over padded row blocks.
+    fn pairwise(
+        &self,
+        kind: ArtifactKind,
+        nq: usize,
+        nr: usize,
+        d: usize,
+        row: impl Fn(usize, &mut [f32]), // writes point i's padded coords
+        col: impl Fn(usize, &mut [f32]),
+    ) -> Result<Vec<f32>> {
+        let pd = self.padded_dim(kind, d)?;
+        let mut inner = self.inner.lock().unwrap();
+        let cache = match kind {
+            ArtifactKind::PairwiseEuclidean => &inner.euclidean,
+            ArtifactKind::PairwiseHamming => &inner.hamming,
+            ArtifactKind::PairwiseManhattan => &inner.manhattan,
+            ArtifactKind::VoronoiAssign => {
+                return Err("voronoi_assign is not a pairwise artifact".to_string())
+            }
+        };
+        if !cache.contains_key(&pd) {
+            let t = self.compile(&inner.client, kind, pd)?;
+            match kind {
+                ArtifactKind::PairwiseEuclidean => inner.euclidean.insert(pd, t),
+                ArtifactKind::PairwiseHamming => inner.hamming.insert(pd, t),
+                ArtifactKind::PairwiseManhattan => inner.manhattan.insert(pd, t),
+                ArtifactKind::VoronoiAssign => unreachable!(),
+            };
+        }
+        let t = match kind {
+            ArtifactKind::PairwiseEuclidean => &inner.euclidean[&pd],
+            ArtifactKind::PairwiseHamming => &inner.hamming[&pd],
+            ArtifactKind::PairwiseManhattan => &inner.manhattan[&pd],
+            ArtifactKind::VoronoiAssign => unreachable!(),
+        };
+        let (tq, tr) = (t.tile_q, t.tile_r);
+
+        let mut out = vec![0.0f32; nq * nr];
+        let mut qbuf = vec![0.0f32; tq * pd];
+        let mut rbuf = vec![0.0f32; tr * pd];
+        let mut bi = 0;
+        while bi < nq {
+            let qlen = (nq - bi).min(tq);
+            qbuf.iter_mut().for_each(|x| *x = 0.0);
+            for i in 0..qlen {
+                row(bi + i, &mut qbuf[i * pd..i * pd + pd]);
+            }
+            let mut bj = 0;
+            while bj < nr {
+                let rlen = (nr - bj).min(tr);
+                rbuf.iter_mut().for_each(|x| *x = 0.0);
+                for j in 0..rlen {
+                    col(bj + j, &mut rbuf[j * pd..j * pd + pd]);
+                }
+                let tile = Self::run_tile(t, &qbuf, &rbuf)?;
+                for i in 0..qlen {
+                    out[(bi + i) * nr + bj..(bi + i) * nr + bj + rlen]
+                        .copy_from_slice(&tile[i * tr..i * tr + rlen]);
+                }
+                bj += rlen;
+            }
+            bi += qlen;
+        }
+        Ok(out)
+    }
+
+    /// Euclidean tile through the AOT kernel (errors bubbled).
+    pub fn try_euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Result<Vec<f32>> {
+        assert_eq!(q.dim(), r.dim());
+        let d = q.dim();
+        self.pairwise(
+            ArtifactKind::PairwiseEuclidean,
+            q.len(),
+            r.len(),
+            d,
+            |i, dst| dst[..d].copy_from_slice(q.row(i)),
+            |j, dst| dst[..d].copy_from_slice(r.row(j)),
+        )
+    }
+
+    /// Hamming tile through the AOT kernel: codes are unpacked to the 0/1
+    /// float encoding the kernel's matmul formulation consumes.
+    pub fn try_hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Result<Vec<f32>> {
+        assert_eq!(q.bits(), r.bits());
+        let bits = q.bits();
+        let unpack = |codes: &HammingCodes, i: usize, dst: &mut [f32]| {
+            let code = codes.code(i);
+            for b in 0..bits {
+                dst[b] = ((code[b / 64] >> (b % 64)) & 1) as f32;
+            }
+        };
+        self.pairwise(
+            ArtifactKind::PairwiseHamming,
+            q.len(),
+            r.len(),
+            bits,
+            |i, dst| unpack(q, i, dst),
+            |j, dst| unpack(r, j, dst),
+        )
+    }
+
+    /// Manhattan tile through the AOT kernel (the VPU-path Pallas kernel).
+    pub fn try_manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Result<Vec<f32>> {
+        assert_eq!(q.dim(), r.dim());
+        let d = q.dim();
+        self.pairwise(
+            ArtifactKind::PairwiseManhattan,
+            q.len(),
+            r.len(),
+            d,
+            |i, dst| dst[..d].copy_from_slice(q.row(i)),
+            |j, dst| dst[..d].copy_from_slice(r.row(j)),
+        )
+    }
+
+    /// Dense Voronoi assignment through the AOT `voronoi_assign` graph
+    /// (L2 composes the pairwise kernel with an argmin): for every point
+    /// of `x`, the index of its nearest center in `c` and the distance
+    /// `d(p, C)`. Centers are padded by replicating center 0 (ties break
+    /// to the lowest index in the kernel, so replicas can never win);
+    /// point rows are zero-padded and their outputs dropped.
+    pub fn try_voronoi_assign(
+        &self,
+        x: &DenseMatrix,
+        c: &DenseMatrix,
+    ) -> Result<Vec<(u32, f64)>> {
+        assert_eq!(x.dim(), c.dim());
+        assert!(!c.is_empty(), "need at least one center");
+        let d = x.dim();
+        let pd = self.padded_dim(ArtifactKind::VoronoiAssign, d)?;
+        let art = self.find_artifact(ArtifactKind::VoronoiAssign, pd)?;
+        let (nb, m_max) = (art.tile_q, art.tile_r);
+        if c.len() > m_max {
+            return Err(format!("artifact supports ≤ {m_max} centers, got {}", c.len()));
+        }
+        let inner = self.inner.lock().unwrap();
+        // Compile fresh per call-shape; callers hold the engine for the
+        // whole phase, and the assignment runs once per landmark round.
+        let t = self.compile(&inner.client, ArtifactKind::VoronoiAssign, pd)?;
+
+        // Pad centers: replicate center 0 into unused rows.
+        let mut cbuf = vec![0.0f32; m_max * pd];
+        for j in 0..m_max {
+            let src = if j < c.len() { c.row(j) } else { c.row(0) };
+            cbuf[j * pd..j * pd + d].copy_from_slice(src);
+        }
+        let cl = xla::Literal::vec1(&cbuf)
+            .reshape(&[m_max as i64, pd as i64])
+            .map_err(|e| format!("reshape c: {e:?}"))?;
+
+        let mut out = Vec::with_capacity(x.len());
+        let mut xbuf = vec![0.0f32; nb * pd];
+        let mut bi = 0;
+        while bi < x.len() {
+            let blen = (x.len() - bi).min(nb);
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..blen {
+                xbuf[i * pd..i * pd + d].copy_from_slice(x.row(bi + i));
+            }
+            let xl = xla::Literal::vec1(&xbuf)
+                .reshape(&[nb as i64, pd as i64])
+                .map_err(|e| format!("reshape x: {e:?}"))?;
+            let bufs = t
+                .exe
+                .execute::<xla::Literal>(&[xl, cl.clone()])
+                .map_err(|e| format!("execute: {e:?}"))?;
+            let lit = bufs[0][0].to_literal_sync().map_err(|e| format!("to_literal: {e:?}"))?;
+            let (idx_l, dist_l) = lit.to_tuple2().map_err(|e| format!("to_tuple2: {e:?}"))?;
+            let idx = idx_l.to_vec::<f32>().map_err(|e| format!("idx to_vec: {e:?}"))?;
+            let dist = dist_l.to_vec::<f32>().map_err(|e| format!("dist to_vec: {e:?}"))?;
+            for i in 0..blen {
+                out.push((idx[i] as u32, dist[i] as f64));
+            }
+            bi += blen;
+        }
+        Ok(out)
+    }
+}
+
+impl TileBackend for PjrtEngine {
+    fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+        self.try_euclidean_tile(q, r).expect("PJRT euclidean tile failed")
+    }
+
+    fn hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Vec<f32> {
+        self.try_hamming_tile(q, r).expect("PJRT hamming tile failed")
+    }
+
+    fn manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+        self.try_manhattan_tile(q, r).expect("PJRT manhattan tile failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::engine::NativeBackend;
+    use crate::util::Rng;
+
+    fn engine() -> Option<PjrtEngine> {
+        // Tests run from the crate root; also honor the env override.
+        let dir = default_artifact_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(PjrtEngine::load(&dir).expect("artifacts present but engine failed to load"))
+        } else {
+            eprintln!("skipping PJRT test: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    fn random_dense(seed: u64, n: usize, d: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::new(d);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn pjrt_euclidean_matches_native_exact_tile_shape() {
+        let Some(e) = engine() else { return };
+        let q = random_dense(130, 64, 32);
+        let r = random_dense(131, 64, 32);
+        let got = e.euclidean_tile(&q, &r);
+        let want = NativeBackend.euclidean_tile(&q, &r);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2 + 1e-3 * w.abs(), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pjrt_euclidean_handles_padding_rows_and_dims() {
+        let Some(e) = engine() else { return };
+        // 55 dims → padded to 64; 70×33 rows → padded per 64-row tile.
+        let q = random_dense(132, 70, 55);
+        let r = random_dense(133, 33, 55);
+        let got = e.euclidean_tile(&q, &r);
+        let want = NativeBackend.euclidean_tile(&q, &r);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-2 + 1e-3 * w.abs(), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pjrt_hamming_matches_native() {
+        let Some(e) = engine() else { return };
+        let mut rng = Rng::new(134);
+        let mut q = HammingCodes::new(100); // pads to d=128
+        let mut r = HammingCodes::new(100);
+        for _ in 0..70 {
+            q.push_bits(&(0..100).map(|_| rng.bool(0.5)).collect::<Vec<_>>());
+        }
+        for _ in 0..65 {
+            r.push_bits(&(0..100).map(|_| rng.bool(0.5)).collect::<Vec<_>>());
+        }
+        let got = e.hamming_tile(&q, &r);
+        let want = NativeBackend.hamming_tile(&q, &r);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 0.5, "hamming must be integral: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pjrt_brute_force_matches_scalar_brute_force() {
+        let Some(e) = engine() else { return };
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(135), 150, 20, 4, 0.1);
+        let native = crate::baseline::brute_force_edges(&pts, &crate::metric::Euclidean, 0.25);
+        let pjrt = crate::baseline::brute_force_tiled(&pts, &e, 0.25, 64);
+        // Tiny fp drift near the threshold can flip borderline pairs; for
+        // this seed/eps none are within 1e-3 of the boundary, so exact.
+        assert_eq!(native.edges(), pjrt.edges());
+    }
+
+    #[test]
+    fn missing_dimension_is_an_error() {
+        let Some(e) = engine() else { return };
+        let q = random_dense(136, 64, 1000); // beyond the 800 grid
+        let r = random_dense(137, 64, 1000);
+        assert!(e.try_euclidean_tile(&q, &r).is_err());
+    }
+}

@@ -2,7 +2,7 @@
 //! `python/compile/aot.py`). Whitespace-delimited:
 //! `name kind tile_q tile_r dim extra file`.
 
-use anyhow::{anyhow, Context, Result};
+use super::Result;
 use std::path::Path;
 
 /// What a compiled artifact computes.
@@ -21,7 +21,7 @@ impl ArtifactKind {
             "pairwise_hamming" => Ok(ArtifactKind::PairwiseHamming),
             "pairwise_manhattan" => Ok(ArtifactKind::PairwiseManhattan),
             "voronoi_assign" => Ok(ArtifactKind::VoronoiAssign),
-            other => Err(anyhow!("unknown artifact kind {other:?}")),
+            other => Err(format!("unknown artifact kind {other:?}")),
         }
     }
 }
@@ -47,7 +47,7 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
         Self::parse(&text)
     }
 
@@ -60,15 +60,18 @@ impl Manifest {
             }
             let f: Vec<&str> = line.split_whitespace().collect();
             if f.len() != 7 {
-                return Err(anyhow!("manifest line {}: expected 7 fields, got {}", ln + 1, f.len()));
+                return Err(format!("manifest line {}: expected 7 fields, got {}", ln + 1, f.len()));
             }
+            let num = |field: &str, s: &str| -> Result<usize> {
+                s.parse().map_err(|_| format!("manifest line {}: bad {field} {s:?}", ln + 1))
+            };
             artifacts.push(Artifact {
                 name: f[0].to_string(),
                 kind: ArtifactKind::parse(f[1])?,
-                tile_q: f[2].parse().context("tile_q")?,
-                tile_r: f[3].parse().context("tile_r")?,
-                dim: f[4].parse().context("dim")?,
-                extra: f[5].parse().context("extra")?,
+                tile_q: num("tile_q", f[2])?,
+                tile_r: num("tile_r", f[3])?,
+                dim: num("dim", f[4])?,
+                extra: num("extra", f[5])?,
                 file: f[6].to_string(),
             });
         }

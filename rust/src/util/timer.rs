@@ -7,22 +7,52 @@
 
 use std::time::Instant;
 
-/// Per-thread CPU time in seconds via `clock_gettime(CLOCK_THREAD_CPUTIME_ID)`.
-pub fn thread_cpu_time() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: ts is a valid out-pointer; the clock id is a libc constant.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+// The offline build carries no external crates (not even `libc`), so the
+// two POSIX clock calls are declared directly; the C library is linked by
+// every Rust program on this platform anyway. The layout below is the
+// 64-bit Unix timespec — refuse to build where that assumption breaks
+// rather than silently reading garbage times.
+#[cfg(not(target_pointer_width = "64"))]
+compile_error!(
+    "the hand-declared timespec layout assumes a 64-bit Unix target; \
+     reintroduce the `libc` crate for other targets"
+);
+
+#[repr(C)]
+struct Timespec {
+    tv_sec: i64,
+    tv_nsec: i64,
+}
+
+extern "C" {
+    fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+}
+
+#[cfg(target_os = "macos")]
+const CLOCK_PROCESS_CPUTIME_ID: i32 = 12;
+#[cfg(target_os = "macos")]
+const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+#[cfg(not(target_os = "macos"))]
+const CLOCK_PROCESS_CPUTIME_ID: i32 = 2;
+#[cfg(not(target_os = "macos"))]
+const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+
+fn clock_seconds(clockid: i32) -> f64 {
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: ts is a valid out-pointer; the clock ids are Linux constants.
+    let rc = unsafe { clock_gettime(clockid, &mut ts) };
     debug_assert_eq!(rc, 0);
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
 }
 
+/// Per-thread CPU time in seconds via `clock_gettime(CLOCK_THREAD_CPUTIME_ID)`.
+pub fn thread_cpu_time() -> f64 {
+    clock_seconds(CLOCK_THREAD_CPUTIME_ID)
+}
+
 /// Process CPU time in seconds (all threads).
 pub fn process_cpu_time() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: as above.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts) };
-    debug_assert_eq!(rc, 0);
-    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+    clock_seconds(CLOCK_PROCESS_CPUTIME_ID)
 }
 
 /// Simple stopwatch over both wall and thread-CPU clocks.
