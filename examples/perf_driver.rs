@@ -1,12 +1,157 @@
-// standalone perf driver: heavy landmark run
-use neargraph::dist::{run_epsilon_graph, Algorithm, RunConfig};
-use neargraph::prelude::*;
+//! Perf driver for the shared-memory parallel cover tree (PR 2): build +
+//! ε self-join on a Table-I-style dense workload, sequential vs pooled,
+//! emitting a machine-readable `BENCH_pr2.json` so the perf trajectory
+//! accumulates across PRs.
+//!
+//! ```text
+//! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
+//!     [--threads 1,2,4] [--target-degree 30] [--out BENCH_pr2.json]
+//! ```
+//!
+//! The driver also asserts that every thread count reproduces the
+//! single-thread edge set and distance-call counts exactly (the
+//! determinism gate, on the bench workload itself).
+
+use neargraph::covertree::{BuildParams, CoverTree};
+use neargraph::metric::{Counted, Euclidean};
+use neargraph::util::{Pool, Rng};
+use std::time::Instant;
+
+struct Run {
+    threads: usize,
+    build_s: f64,
+    join_s: f64,
+    build_dists: u64,
+    join_dists: u64,
+    edges: u64,
+    edge_hash: u64,
+}
+
 fn main() {
+    let args = neargraph::cli::Args::from_env().unwrap_or_else(|e| fail(&e));
+    let n = args.get_usize("n").unwrap_or_else(|e| fail(&e)).unwrap_or(50_000);
+    let dim = args.get_usize("dim").unwrap_or_else(|e| fail(&e)).unwrap_or(16);
+    let target_degree =
+        args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
+    let threads_arg = args.get_or("threads", "1,2,4").to_string();
+    let out_path = args.get_or("out", "BENCH_pr2.json").to_string();
+    args.reject_unknown().unwrap_or_else(|e| fail(&e));
+    let thread_list: Vec<usize> = threads_arg
+        .split(',')
+        .map(|t| t.trim().parse().unwrap_or_else(|_| fail(&format!("bad --threads {t:?}"))))
+        .collect();
+
     let mut rng = Rng::new(7);
-    let pts = neargraph::data::synthetic::manifold_mixture(&mut rng, 20_000, 64, 8, 20, 0.07);
-    let eps = neargraph::data::calibrate_eps(&pts, &Euclidean, 60.0, 60_000, &mut rng);
-    let cfg = RunConfig { ranks: 16, algorithm: Algorithm::LandmarkColl, ..Default::default() };
-    let t = std::time::Instant::now();
-    let res = run_epsilon_graph(&pts, Euclidean, eps, &cfg);
-    println!("edges={} makespan={:.3} wall={:.3}", res.graph.num_edges(), res.makespan, t.elapsed().as_secs_f64());
+    let dataset = format!("gaussian_mixture(n={n},d={dim},k=32,sigma=0.05)");
+    eprintln!("[perf_driver] generating {dataset}");
+    let pts = neargraph::data::synthetic::gaussian_mixture(&mut rng, n, dim, 32, 0.05);
+    let eps = neargraph::data::calibrate_eps(&pts, &Euclidean, target_degree, 60_000, &mut rng);
+    eprintln!("[perf_driver] eps={eps:.6} (target degree {target_degree})");
+
+    let params = BuildParams::default();
+    let mut runs: Vec<Run> = Vec::new();
+    for &threads in &thread_list {
+        let pool = Pool::new(threads);
+        let counted = Counted::new(Euclidean);
+
+        let t0 = Instant::now();
+        let tree = CoverTree::build_par(&pts, &counted, &params, &pool);
+        let build_s = t0.elapsed().as_secs_f64();
+        let build_dists = counted.count();
+        counted.counter().reset();
+
+        let mut edges = 0u64;
+        let mut edge_hash = 0u64;
+        let t1 = Instant::now();
+        tree.eps_self_join_par(&counted, eps, &pool, |a, b| {
+            edges += 1;
+            // Order-independent edge-set fingerprint (sum of mixed pairs).
+            edge_hash = edge_hash.wrapping_add(mix(((a as u64) << 32) | b as u64));
+        });
+        let join_s = t1.elapsed().as_secs_f64();
+        let join_dists = counted.count();
+
+        eprintln!(
+            "[perf_driver] threads={threads}: build {build_s:.3}s ({build_dists} dists), \
+             join {join_s:.3}s ({join_dists} dists), {edges} edges"
+        );
+        runs.push(Run { threads, build_s, join_s, build_dists, join_dists, edges, edge_hash });
+    }
+
+    // Determinism gate on the bench workload: every run must agree with
+    // the first bit-for-bit (edge set and distance-call counts).
+    let base = &runs[0];
+    for r in &runs[1..] {
+        assert_eq!(r.edges, base.edges, "edge count changed at threads={}", r.threads);
+        assert_eq!(r.edge_hash, base.edge_hash, "edge set changed at threads={}", r.threads);
+        assert_eq!(r.build_dists, base.build_dists, "build dists changed at threads={}", r.threads);
+        assert_eq!(r.join_dists, base.join_dists, "join dists changed at threads={}", r.threads);
+    }
+
+    let (seq_total, best) = summarize(&runs);
+    let json = render_json(&dataset, n, dim, eps, &runs, seq_total, best);
+    std::fs::write(&out_path, &json).unwrap_or_else(|e| fail(&format!("{out_path}: {e}")));
+    println!("{json}");
+    eprintln!("[perf_driver] wrote {out_path}");
+}
+
+fn summarize(runs: &[Run]) -> (f64, &Run) {
+    let seq_total = runs[0].build_s + runs[0].join_s;
+    let best = runs
+        .iter()
+        .min_by(|a, b| (a.build_s + a.join_s).total_cmp(&(b.build_s + b.join_s)))
+        .unwrap();
+    (seq_total, best)
+}
+
+fn render_json(
+    dataset: &str,
+    n: usize,
+    dim: usize,
+    eps: f64,
+    runs: &[Run],
+    seq_total: f64,
+    best: &Run,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"pr2_parallel_covertree\",\n");
+    s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
+    s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
+    s.push_str("  \"runs\": [\n");
+    for (i, r) in runs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"threads\": {}, \"build_s\": {:.6}, \"join_s\": {:.6}, \
+             \"build_dist_calls\": {}, \"join_dist_calls\": {}, \"edges\": {}}}{}\n",
+            r.threads,
+            r.build_s,
+            r.join_s,
+            r.build_dists,
+            r.join_dists,
+            r.edges,
+            if i + 1 < runs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"best_threads\": {},\n  \"speedup_build\": {:.4},\n  \"speedup_total\": {:.4}\n",
+        best.threads,
+        runs[0].build_s / best.build_s.max(1e-12),
+        seq_total / (best.build_s + best.join_s).max(1e-12)
+    ));
+    s.push_str("}\n");
+    s
+}
+
+/// splitmix64 finalizer — order-independent accumulation of edge pairs.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+fn fail(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
 }

@@ -13,6 +13,7 @@ use neargraph::covertree::{BuildParams, CoverTree};
 use neargraph::data::registry::TABLE1;
 use neargraph::graph::EdgeList;
 use neargraph::metric::{Counted, Euclidean, Hamming};
+use neargraph::util::{Pool, Rng};
 
 fn main() {
     let n: usize = std::env::var("NEARGRAPH_BENCH_N")
@@ -72,4 +73,39 @@ fn main() {
     }
     table.print();
     table.write_csv("covertree_micro.csv").ok();
+
+    // ------------------------------------------------------------------
+    // Pool scaling: hub-parallel build + sharded self-join (bit-identical
+    // to the sequential path; see tests/par_determinism.rs).
+    // ------------------------------------------------------------------
+    let mut scaling = Table::new(
+        &format!("Cover tree pool scaling (gaussian mixture, n={n})"),
+        &["threads", "build_s", "selfjoin_s", "total_s", "speedup"],
+    );
+    let pts = neargraph::data::synthetic::gaussian_mixture(&mut Rng::new(11), n, 8, 16, 0.05);
+    let eps = neargraph::data::calibrate_eps(&pts, &Euclidean, 30.0, 50_000, &mut Rng::new(12));
+    let mut seq_total = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let pool = Pool::new(threads);
+        let (tree, build_s) = timed(|| CoverTree::build_par(&pts, &Euclidean, &params, &pool));
+        let (_edges, join_s) = timed(|| {
+            let mut e = EdgeList::new();
+            tree.eps_self_join_par(&Euclidean, eps, &pool, |a, b| e.push(a, b));
+            e
+        });
+        let total = build_s + join_s;
+        if threads == 1 {
+            seq_total = total;
+        }
+        scaling.row(&[
+            format!("{threads}"),
+            format!("{build_s:.3}"),
+            format!("{join_s:.3}"),
+            format!("{total:.3}"),
+            format!("{:.2}x", seq_total / total.max(1e-12)),
+        ]);
+        eprintln!("[covertree] pool threads={threads} done");
+    }
+    scaling.print();
+    scaling.write_csv("covertree_pool_scaling.csv").ok();
 }

@@ -32,14 +32,16 @@ impl Default for SnnParams {
 }
 
 /// SNN index over a Euclidean point set.
+///
+/// Squared norms for the matmul-form exact filter come from the
+/// [`DenseMatrix`] norm cache of the score-sorted copy (no separate
+/// precomputation).
 pub struct Snn {
     pts: DenseMatrix,
     /// Point indices sorted by principal score.
     order: Vec<u32>,
     /// Scores aligned with `order` (ascending).
     scores: Vec<f32>,
-    /// Squared norms aligned with `order`.
-    sq_norms: Vec<f32>,
     /// The principal direction (unit vector).
     component: Vec<f32>,
     /// Data mean (scores are computed on centered data).
@@ -105,8 +107,7 @@ impl Snn {
         let order: Vec<u32> = scored.iter().map(|&(_, i)| i).collect();
         let scores: Vec<f32> = scored.iter().map(|&(s, _)| s).collect();
         let sorted_pts = pts.gather(&order.iter().map(|&i| i as usize).collect::<Vec<_>>());
-        let sq_norms = sorted_pts.row_sq_norms();
-        Snn { pts: sorted_pts, order, scores, sq_norms, component, mean }
+        Snn { pts: sorted_pts, order, scores, component, mean }
     }
 
     /// Number of indexed points.
@@ -142,7 +143,7 @@ impl Snn {
             for j in 0..row.len() {
                 dot += row[j] * q[j];
             }
-            let d2 = (qn + self.sq_norms[k] - 2.0 * dot).max(0.0);
+            let d2 = (qn + self.pts.sq_norm(k) - 2.0 * dot).max(0.0);
             if d2 <= eps2 {
                 out.push(self.order[k]);
             }
@@ -162,7 +163,7 @@ impl Snn {
         for i in 0..n {
             let si = self.scores[i];
             let ri = self.pts.row(i);
-            let ni = self.sq_norms[i];
+            let ni = self.pts.sq_norm(i);
             for j in i + 1..n {
                 if self.scores[j] - si > eps {
                     break;
@@ -172,7 +173,7 @@ impl Snn {
                 for k in 0..d {
                     dot += ri[k] * rj[k];
                 }
-                let d2 = (ni + self.sq_norms[j] - 2.0 * dot).max(0.0);
+                let d2 = (ni + self.pts.sq_norm(j) - 2.0 * dot).max(0.0);
                 if d2 <= eps2 {
                     edges.push(self.order[i], self.order[j]);
                 }

@@ -164,6 +164,22 @@ impl Comm {
         self.stats.add_comm(dt);
     }
 
+    /// Charge CPU seconds consumed by helper threads owned by this rank
+    /// (its intra-rank task pool) as compute in the current phase.
+    /// `absorb_compute` reads only the rank thread's own clock
+    /// (`CLOCK_THREAD_CPUTIME_ID`) — a rank blocked on its pool accrues
+    /// ~zero there while the workers burn real cores — so pool-worker CPU
+    /// must be folded in explicitly to keep virtual time honest
+    /// (DESIGN.md §7.1). Typical call: `comm.charge_child_cpu(pool.drain_cpu())`.
+    pub fn charge_child_cpu(&mut self, dt: f64) {
+        if dt <= 0.0 {
+            return;
+        }
+        self.absorb_compute();
+        self.vt += dt;
+        self.stats.add_compute(dt);
+    }
+
     // ------------------------------------------------------------------
     // point-to-point
     // ------------------------------------------------------------------
@@ -581,6 +597,18 @@ mod tests {
         for o in &outs {
             assert!(o.result.1 >= 5e-3 && o.result.1 < 50e-3, "vt={}", o.result.1);
         }
+    }
+
+    #[test]
+    fn child_cpu_charged_to_current_phase() {
+        let mut c = Comm::new_loopback();
+        c.set_phase("tree");
+        c.charge_child_cpu(0.75);
+        c.charge_child_cpu(0.0); // no-op
+        c.charge_child_cpu(-1.0); // no-op (defensive)
+        c.finish();
+        assert!(c.virtual_time() >= 0.75);
+        assert!(c.stats().phases()["tree"].compute >= 0.75);
     }
 
     #[test]

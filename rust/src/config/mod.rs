@@ -62,6 +62,9 @@ impl ExperimentConfig {
                 }
                 "seed" => cfg.seed = value.as_usize().ok_or("seed must be an integer")? as u64,
                 "run.ranks" => cfg.run.ranks = value.as_usize().ok_or("ranks must be an integer")?,
+                "run.threads" => {
+                    cfg.run.threads = value.as_usize().ok_or("threads must be an integer")?
+                }
                 "run.algorithm" => {
                     let s = value.as_str().ok_or("algorithm must be a string")?;
                     cfg.run.algorithm =
@@ -127,6 +130,7 @@ seed = 7
 
 [run]
 ranks = 16
+threads = 64
 algorithm = "landmark-ring"
 leaf_size = 4
 num_centers = 64
@@ -143,6 +147,8 @@ ghost = "all"
         assert_eq!(cfg.target_degree, 70.0);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.run.ranks, 16);
+        assert_eq!(cfg.run.threads, 64);
+        assert_eq!(cfg.run.pool_threads(), 4);
         assert_eq!(cfg.run.algorithm, Algorithm::LandmarkRing);
         assert_eq!(cfg.run.leaf_size, 4);
         assert_eq!(cfg.run.num_centers, 64);
@@ -162,6 +168,8 @@ ghost = "all"
         let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
         assert_eq!(cfg.dataset, "deep");
         assert_eq!(cfg.run.ranks, RunConfig::default().ranks);
+        assert_eq!(cfg.run.threads, 0);
+        assert_eq!(cfg.run.pool_threads(), 1);
     }
 
     #[test]

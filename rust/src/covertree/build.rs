@@ -1,8 +1,21 @@
-//! Batch construction — Algorithms 1 (SplitVertex) and 2 (BuildLevel).
+//! Batch construction — Algorithms 1 (SplitVertex) and 2 (BuildLevel) —
+//! sequential and hub-parallel.
+//!
+//! The hub worklist is embarrassingly parallel: hubs are independent by
+//! construction, so [`par_build`] lets pool workers split hubs
+//! concurrently, records each hub's outcome (leaf attach or split) keyed
+//! by a globally unique hub id, and then *replays* the sequential LIFO
+//! worklist over the recorded structure to assign node numbers. Because
+//! the per-hub math is shared ([`compute_split`]) and the replay walks
+//! hubs in exactly the order the sequential builder would, the parallel
+//! tree is **bit-identical** to [`build`]'s at every pool size (enforced
+//! by `tests/par_determinism.rs`).
 
 use super::{CoverTree, Node, NIL};
 use crate::metric::Metric;
 use crate::points::PointSet;
+use crate::util::Pool;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Construction parameters.
 #[derive(Clone, Copy, Debug)]
@@ -117,24 +130,39 @@ fn attach_leaves<P: PointSet>(tree: &mut CoverTree<P>, hub: &Hub) {
     node.child_len = len;
 }
 
-/// Algorithm 1: split `hub` into child triples whose centers form an
-/// `r/2`-net of its members, then enqueue the children.
-fn split_vertex<P: PointSet, M: Metric<P>>(
-    tree: &mut CoverTree<P>,
+/// One child triple produced by [`compute_split`], in center order.
+struct SplitChild {
+    /// The child's center π₁ (a local point index).
+    point: u32,
+    radius: f64,
+    /// Members with `members[0] == point`.
+    members: Vec<u32>,
+    /// `dist[k] = d(members[k], point)`.
+    dist: Vec<f64>,
+    /// argmax of `dist` (the π₂ of the next split).
+    farthest: usize,
+}
+
+/// Algorithm 1 on one hub's triple: greedy farthest-point selection until
+/// the members are covered by balls of radius r/2 (covering invariant;
+/// each chosen center was at distance > r/2 from all previous ones, the
+/// separating invariant), then partition the members by nearest center.
+///
+/// Pure with respect to the tree — shared verbatim by the sequential and
+/// parallel builders so both perform the identical floating-point work.
+fn compute_split<P: PointSet, M: Metric<P>>(
+    points: &P,
     metric: &M,
-    _params: &BuildParams,
-    hub: Hub,
-    queue: &mut Vec<Hub>,
-) {
-    let Hub { node, members, mut dist, mut farthest, radius, level } = hub;
+    members: Vec<u32>,
+    mut dist: Vec<f64>,
+    mut farthest: usize,
+    radius: f64,
+) -> Vec<SplitChild> {
     let m = members.len();
     // Center list; labels[k] = index into `centers` of the closest center.
     let mut centers: Vec<u32> = vec![members[0]];
     let mut labels: Vec<u32> = vec![0; m];
 
-    // Greedy farthest-point selection until the members are covered by
-    // balls of radius r/2 (covering invariant). Each chosen center was at
-    // distance > r/2 from all previous ones (separating invariant).
     let half = radius / 2.0;
     let mut r_star = radius;
     while r_star > half {
@@ -145,7 +173,7 @@ fn split_vertex<P: PointSet, M: Metric<P>>(
         r_star = 0.0;
         let mut next_far = 0usize;
         for k in 0..m {
-            let d_new = metric.dist_ij(&tree.points, members[k] as usize, c as usize);
+            let d_new = metric.dist_ij(points, members[k] as usize, c as usize);
             if d_new < dist[k] {
                 dist[k] = d_new;
                 labels[k] = ci;
@@ -159,7 +187,7 @@ fn split_vertex<P: PointSet, M: Metric<P>>(
     }
 
     // Partition members by label into child triples, tracking each child's
-    // radius and farthest point (the π₂ of the next split).
+    // radius and farthest point.
     let nc = centers.len();
     let mut child_members: Vec<Vec<u32>> = vec![Vec::new(); nc];
     let mut child_dist: Vec<Vec<f64>> = vec![Vec::new(); nc];
@@ -183,23 +211,46 @@ fn split_vertex<P: PointSet, M: Metric<P>>(
             child_far[ci] = child_members[ci].len() - 1;
         }
     }
+    (0..nc)
+        .map(|ci| SplitChild {
+            point: centers[ci],
+            radius: child_rad[ci],
+            members: std::mem::take(&mut child_members[ci]),
+            dist: std::mem::take(&mut child_dist[ci]),
+            farthest: child_far[ci],
+        })
+        .collect()
+}
+
+/// Algorithm 1: split `hub` into child triples whose centers form an
+/// `r/2`-net of its members, then enqueue the children.
+fn split_vertex<P: PointSet, M: Metric<P>>(
+    tree: &mut CoverTree<P>,
+    metric: &M,
+    _params: &BuildParams,
+    hub: Hub,
+    queue: &mut Vec<Hub>,
+) {
+    let Hub { node, members, dist, farthest, radius, level } = hub;
+    let kids = compute_split(&tree.points, metric, members, dist, farthest, radius);
 
     // Create the child vertices (nesting: centers[0] == the hub's own point)
     // and enqueue their triples.
+    let nc = kids.len();
     let off = tree.children.len() as u32;
     // Reserve the contiguous child slots first.
     for _ in 0..nc {
         tree.children.push(NIL);
     }
-    for ci in 0..nc {
-        let child_node = push_node(tree, centers[ci], child_rad[ci], level - 1);
+    for (ci, kid) in kids.into_iter().enumerate() {
+        let child_node = push_node(tree, kid.point, kid.radius, level - 1);
         tree.children[(off as usize) + ci] = child_node;
         queue.push(Hub {
             node: child_node,
-            members: std::mem::take(&mut child_members[ci]),
-            dist: std::mem::take(&mut child_dist[ci]),
-            farthest: child_far[ci],
-            radius: child_rad[ci],
+            members: kid.members,
+            dist: kid.dist,
+            farthest: kid.farthest,
+            radius: kid.radius,
             level: level - 1,
         });
     }
@@ -208,13 +259,221 @@ fn split_vertex<P: PointSet, M: Metric<P>>(
     nref.child_len = nc as u32;
 }
 
+// ----------------------------------------------------------------------
+// hub-parallel build
+// ----------------------------------------------------------------------
+
+/// A hub awaiting a split on the shared worklist (always split-worthy:
+/// leaf-case children are resolved inline by the splitting worker).
+struct ParHub {
+    /// Globally unique hub id (allocation order, *not* the final node
+    /// number — the replay assigns those).
+    id: u64,
+    members: Vec<u32>,
+    dist: Vec<f64>,
+    farthest: usize,
+    radius: f64,
+}
+
+/// A child vertex recorded at split time, in center (ci) order.
+struct ChildDesc {
+    id: u64,
+    point: u32,
+    radius: f64,
+}
+
+/// The recorded outcome of one hub.
+enum DoneKind {
+    /// ζ cutoff or zero radius: the members become leaf children
+    /// (or, for a singleton of the hub's own point, no children at all).
+    Leaves(Vec<u32>),
+    /// Split into child triples.
+    Split(Vec<ChildDesc>),
+}
+
+struct DoneHub {
+    id: u64,
+    kind: DoneKind,
+}
+
+/// Hub-parallel batch build on `pool`, bit-identical to [`build`].
+///
+/// Phase A expands hubs in arbitrary worker order, recording each hub's
+/// outcome into per-worker arenas. Phase B replays the sequential LIFO
+/// worklist over the recorded structure — processing a hub appends exactly
+/// the nodes/children entries the sequential builder would at that point —
+/// so node numbering and the children arena come out identical without any
+/// further distance evaluations.
+pub(super) fn par_build<P: PointSet, M: Metric<P>>(
+    points: P,
+    ids: Vec<u32>,
+    metric: &M,
+    params: &BuildParams,
+    pool: &Pool,
+) -> CoverTree<P> {
+    let n = points.len();
+    // The sequential path IS the spec; use it verbatim whenever there is
+    // nothing to parallelize (one worker, or a root hub that attaches
+    // leaves immediately). These checks precede the root triple so no
+    // distance is ever evaluated twice — parallel and sequential builds
+    // perform the identical number of metric calls (the perf driver
+    // asserts this parity).
+    if pool.threads() <= 1 || n == 0 || n <= params.leaf_size {
+        return build(points, ids, metric, params);
+    }
+    assert!(params.root < n, "root index out of range");
+    assert!(params.leaf_size >= 1, "leaf size must be ≥ 1");
+
+    // Root triple — the same math as `build`.
+    let root_pt = params.root as u32;
+    let mut members: Vec<u32> = Vec::with_capacity(n);
+    members.push(root_pt);
+    members.extend((0..n as u32).filter(|&i| i != root_pt));
+    let mut dist = vec![0.0f64; n];
+    let mut farthest = 0usize;
+    let mut radius = 0.0f64;
+    for k in 1..n {
+        let d = metric.dist_ij(&points, members[k] as usize, root_pt as usize);
+        dist[k] = d;
+        if d > radius {
+            radius = d;
+            farthest = k;
+        }
+    }
+    let level = if radius > 0.0 { radius.log2().ceil() as i32 } else { 0 };
+
+    if radius == 0.0 {
+        // All points coincide with the root (n > leaf_size duplicates):
+        // mirror `build`'s attach_leaves outcome directly instead of
+        // delegating, which would recompute the n−1 root distances.
+        let mut tree =
+            CoverTree { points, ids, nodes: Vec::new(), children: Vec::new(), root: NIL };
+        let root_node = push_node(&mut tree, root_pt, radius, level);
+        tree.root = root_node;
+        // n ≥ 2 here, so this is the multi-leaf case of attach_leaves:
+        // every member (the root's point included) becomes a B(p, 0) leaf.
+        let off = tree.children.len() as u32;
+        let mut len = 0u32;
+        for p in members {
+            let leaf = push_node(&mut tree, p, 0.0, level - 1);
+            tree.children.push(leaf);
+            len += 1;
+        }
+        let nref = &mut tree.nodes[root_node as usize];
+        nref.child_off = off;
+        nref.child_len = len;
+        return tree;
+    }
+
+    // Phase A: expand every hub, any order. Hub ids come from an atomic
+    // allocator; id 0 is the root hub.
+    let counter = AtomicU64::new(1);
+    let leaf_size = params.leaf_size;
+    let seed = vec![ParHub { id: 0, members, dist, farthest, radius }];
+    let worker_out = {
+        let (points, counter) = (&points, &counter);
+        pool.run_worklist(
+            seed,
+            |_| Vec::new(),
+            move |wl, out: &mut Vec<DoneHub>, hub: ParHub| {
+                let kids =
+                    compute_split(points, metric, hub.members, hub.dist, hub.farthest, hub.radius);
+                let base = counter.fetch_add(kids.len() as u64, Ordering::Relaxed);
+                let mut descs = Vec::with_capacity(kids.len());
+                for (ci, kid) in kids.into_iter().enumerate() {
+                    let id = base + ci as u64;
+                    descs.push(ChildDesc { id, point: kid.point, radius: kid.radius });
+                    if kid.members.len() <= leaf_size || kid.radius == 0.0 {
+                        // Leaf-case children never touch the queue — record
+                        // them here (identical outcome, less contention).
+                        out.push(DoneHub { id, kind: DoneKind::Leaves(kid.members) });
+                    } else {
+                        wl.push(ParHub {
+                            id,
+                            members: kid.members,
+                            dist: kid.dist,
+                            farthest: kid.farthest,
+                            radius: kid.radius,
+                        });
+                    }
+                }
+                out.push(DoneHub { id: hub.id, kind: DoneKind::Split(descs) });
+            },
+        )
+    };
+
+    // Index outcomes by hub id (ids are a contiguous 0..total block).
+    let total = counter.load(Ordering::Relaxed) as usize;
+    let mut done: Vec<Option<DoneKind>> = Vec::new();
+    done.resize_with(total, || None);
+    for out in worker_out {
+        for h in out {
+            done[h.id as usize] = Some(h.kind);
+        }
+    }
+
+    // Phase B: replay the sequential worklist order to number the nodes.
+    let mut tree = CoverTree { points, ids, nodes: Vec::new(), children: Vec::new(), root: NIL };
+    let root_node = push_node(&mut tree, root_pt, radius, level);
+    tree.root = root_node;
+    let mut stack: Vec<(u32, u64)> = vec![(root_node, 0)];
+    while let Some((nid, hid)) = stack.pop() {
+        let kind = done[hid as usize].take().expect("hub outcome missing");
+        let lvl = tree.nodes[nid as usize].level;
+        match kind {
+            DoneKind::Leaves(members) => {
+                // Mirror `attach_leaves`.
+                let node_pt = tree.nodes[nid as usize].point;
+                if members.len() == 1 && members[0] == node_pt {
+                    tree.nodes[nid as usize].radius = 0.0;
+                    continue;
+                }
+                let off = tree.children.len() as u32;
+                let mut len = 0u32;
+                for p in members {
+                    let leaf = push_node(&mut tree, p, 0.0, lvl - 1);
+                    tree.children.push(leaf);
+                    len += 1;
+                }
+                let nref = &mut tree.nodes[nid as usize];
+                nref.child_off = off;
+                nref.child_len = len;
+            }
+            DoneKind::Split(descs) => {
+                // Mirror `split_vertex`'s tree mutations.
+                let off = tree.children.len() as u32;
+                for _ in 0..descs.len() {
+                    tree.children.push(NIL);
+                }
+                let mut kid_nodes = Vec::with_capacity(descs.len());
+                for (ci, d) in descs.iter().enumerate() {
+                    let child_node = push_node(&mut tree, d.point, d.radius, lvl - 1);
+                    tree.children[(off as usize) + ci] = child_node;
+                    kid_nodes.push(child_node);
+                }
+                {
+                    let nref = &mut tree.nodes[nid as usize];
+                    nref.child_off = off;
+                    nref.child_len = descs.len() as u32;
+                }
+                // Push in ci order — popped in reverse, exactly like the
+                // sequential LIFO queue.
+                for (ci, d) in descs.iter().enumerate() {
+                    stack.push((kid_nodes[ci], d.id));
+                }
+            }
+        }
+    }
+    tree
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::covertree::check_invariants;
     use crate::metric::{Counted, Euclidean, Hamming, Levenshtein};
     use crate::points::{DenseMatrix, HammingCodes, StringSet};
-    use crate::util::Rng;
+    use crate::util::{Pool, Rng};
 
     fn random_dense(seed: u64, n: usize, d: usize) -> DenseMatrix {
         let mut rng = Rng::new(seed);
@@ -297,6 +556,60 @@ mod tests {
             counted.count(),
             n * n
         );
+    }
+
+    #[test]
+    fn par_build_bit_identical_across_pool_sizes() {
+        let pts = random_dense(47, 300, 3);
+        for leaf_size in [1usize, 8, 64] {
+            let params = BuildParams { leaf_size, root: 0 };
+            let seq = CoverTree::build(&pts, &Euclidean, &params);
+            for threads in [1usize, 2, 4, 8] {
+                let pool = Pool::new(threads);
+                let par = CoverTree::build_par(&pts, &Euclidean, &params, &pool);
+                assert_eq!(seq.structure(), par.structure(), "leaf={leaf_size} threads={threads}");
+                assert_eq!(seq.ids(), par.ids());
+            }
+        }
+    }
+
+    #[test]
+    fn par_build_handles_duplicates_and_degenerate_inputs() {
+        let pool = Pool::new(4);
+        // Heavy duplication.
+        let mut pts = random_dense(48, 40, 2);
+        let dup = pts.row(5).to_vec();
+        for _ in 0..30 {
+            pts.push(&dup);
+        }
+        let params = BuildParams::default();
+        let seq = CoverTree::build(&pts, &Euclidean, &params);
+        let par = CoverTree::build_par(&pts, &Euclidean, &params, &pool);
+        assert_eq!(seq.structure(), par.structure());
+        check_invariants(&par, &Euclidean);
+        // All-identical points, singleton, empty.
+        let mut same = DenseMatrix::new(2);
+        for _ in 0..9 {
+            same.push(&[2.0, 2.0]);
+        }
+        for set in [same, DenseMatrix::from_flat(2, vec![1.0, 2.0]), DenseMatrix::new(2)] {
+            let seq = CoverTree::build(&set, &Euclidean, &params);
+            let par = CoverTree::build_par(&set, &Euclidean, &params, &pool);
+            assert_eq!(seq.structure(), par.structure(), "n={}", set.len());
+        }
+    }
+
+    #[test]
+    fn par_build_custom_root_and_ids() {
+        let pts = random_dense(49, 60, 2);
+        let params = BuildParams { leaf_size: 2, root: 23 };
+        let ids: Vec<u32> = (500..560).collect();
+        let pool = Pool::new(3);
+        let seq = CoverTree::build_with_ids(pts.clone(), ids.clone(), &Euclidean, &params);
+        let par = CoverTree::build_with_ids_par(pts, ids, &Euclidean, &params, &pool);
+        assert_eq!(seq.structure(), par.structure());
+        assert_eq!(par.global_id(0), 500);
+        assert_eq!(par.node(par.root()).point, 23);
     }
 
     #[test]

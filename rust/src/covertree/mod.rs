@@ -15,6 +15,13 @@
 //! bound (`d(q, v) ≤ radius(v) + ε` ⇒ descend), which is tighter than the
 //! textbook `2^level` bound. Batch queries amortize traversal state across
 //! a whole query set.
+//!
+//! Construction and the batched queries both have hub-/shard-parallel
+//! variants on the in-crate task pool ([`crate::util::Pool`]):
+//! [`CoverTree::build_par`], [`CoverTree::query_batch_par`] and
+//! [`CoverTree::eps_self_join_par`]. All are *exact* — the parallel build
+//! is bit-identical to the sequential one at every pool size, and the
+//! parallel queries emit the same result multiset (DESIGN.md §7.1).
 
 mod build;
 mod dualtree;
@@ -91,6 +98,31 @@ impl<P: PointSet> CoverTree<P> {
         build::build(points, ids, metric, params)
     }
 
+    /// Hub-parallel [`CoverTree::build`] on `pool` — bit-identical output
+    /// (same node array, children arena and numbering) at every pool size;
+    /// a one-thread pool runs the sequential builder unchanged.
+    pub fn build_par<M: Metric<P>>(
+        points: &P,
+        metric: &M,
+        params: &BuildParams,
+        pool: &crate::util::Pool,
+    ) -> Self {
+        let ids = (0..points.len() as u32).collect();
+        Self::build_with_ids_par(points.clone(), ids, metric, params, pool)
+    }
+
+    /// Hub-parallel [`CoverTree::build_with_ids`] on `pool`.
+    pub fn build_with_ids_par<M: Metric<P>>(
+        points: P,
+        ids: Vec<u32>,
+        metric: &M,
+        params: &BuildParams,
+        pool: &crate::util::Pool,
+    ) -> Self {
+        assert_eq!(points.len(), ids.len());
+        build::par_build(points, ids, metric, params, pool)
+    }
+
     /// The owned point set.
     pub fn points(&self) -> &P {
         &self.points
@@ -140,6 +172,20 @@ impl<P: PointSet> CoverTree<P> {
     /// Iterate over all nodes (index, node).
     pub fn nodes(&self) -> impl Iterator<Item = (u32, &Node)> {
         self.nodes.iter().enumerate().map(|(i, n)| (i as u32, n))
+    }
+
+    /// Structural fingerprint for exact-equality checks (the determinism
+    /// gate): `(root, nodes, children)` with each node flattened to
+    /// `(point, radius_bits, level, child_off, child_len)`. Two trees with
+    /// equal fingerprints (and equal `ids`/points) are interchangeable
+    /// bit-for-bit.
+    pub fn structure(&self) -> (u32, Vec<(u32, u64, i32, u32, u32)>, Vec<u32>) {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| (n.point, n.radius.to_bits(), n.level, n.child_off, n.child_len))
+            .collect();
+        (self.root, nodes, self.children.clone())
     }
 
     /// Depth of the tree (number of levels; 0 for empty).

@@ -113,12 +113,26 @@ impl<P: PointSet> CoverTree<P> {
                 let vp = self.points.point(node.point as usize);
                 if node.is_leaf() {
                     let gid = self.ids[node.point as usize];
-                    for k in start..end {
-                        let (q, dq) = arena[k];
-                        let d = if same { dq } else { metric.dist(queries.point(q as usize), vp) };
-                        if d <= eps {
-                            emit(q as usize, gid);
+                    if same {
+                        // Nesting reuse: the carried parent distance IS the
+                        // leaf distance.
+                        for k in start..end {
+                            let (q, dq) = arena[k];
+                            if dq <= eps {
+                                emit(q as usize, gid);
+                            }
                         }
+                    } else {
+                        // Leaf-block filter: dense metrics route this
+                        // through the norm-cached tile kernel.
+                        metric.leaf_filter(
+                            queries,
+                            &arena[start..end],
+                            &self.points,
+                            node.point as usize,
+                            eps,
+                            &mut |q| emit(q as usize, gid),
+                        );
                     }
                 } else {
                     let mark = arena.len();
@@ -154,7 +168,83 @@ impl<P: PointSet> CoverTree<P> {
             }
         });
     }
+
+    /// Parallel [`CoverTree::query_batch`]: queries are sharded into
+    /// fixed-size contiguous chunks ([`PAR_QUERY_CHUNK`]) processed on
+    /// `pool`, with per-chunk emit buffers replayed to `emit` in chunk
+    /// (i.e. query) order on the calling thread. The emitted multiset is
+    /// identical to the sequential batch at every pool size (pair order
+    /// within a chunk follows that chunk's traversal); a one-thread pool
+    /// or a small batch falls through to the sequential path unchanged.
+    pub fn query_batch_par<M, F>(
+        &self,
+        metric: &M,
+        queries: &P,
+        eps: f64,
+        pool: &crate::util::Pool,
+        mut emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(usize, u32),
+    {
+        let n = queries.len();
+        if pool.threads() <= 1 || n <= PAR_QUERY_CHUNK {
+            return self.query_batch(metric, queries, eps, emit);
+        }
+        // Chunks run in bounded waves so at most one wave of result
+        // buffers is ever live (a single fan-out over all chunks would
+        // hold the entire result multiset until the slowest chunk
+        // finished). Wave grouping does not affect the emitted sequence:
+        // chunks are always replayed in index order.
+        let nparts = crate::util::div_ceil(n, PAR_QUERY_CHUNK);
+        let wave = pool.threads() * 4;
+        let mut first = 0usize;
+        while first < nparts {
+            let count = wave.min(nparts - first);
+            let base = first;
+            let parts = pool.run_indexed(count, |w| {
+                let lo = (base + w) * PAR_QUERY_CHUNK;
+                let hi = (lo + PAR_QUERY_CHUNK).min(n);
+                let sub = queries.slice(lo, hi);
+                let mut out: Vec<(u32, u32)> = Vec::new();
+                self.query_batch(metric, &sub, eps, |qi, gid| {
+                    out.push(((lo + qi) as u32, gid));
+                });
+                out
+            });
+            for part in parts {
+                for (q, gid) in part {
+                    emit(q as usize, gid);
+                }
+            }
+            first += count;
+        }
+    }
+
+    /// Parallel [`CoverTree::eps_self_join`] on `pool` — the identical
+    /// edge set (a one-thread pool reproduces the sequential join
+    /// verbatim; larger pools shard the query side).
+    pub fn eps_self_join_par<M, F>(&self, metric: &M, eps: f64, pool: &crate::util::Pool, mut emit: F)
+    where
+        M: Metric<P>,
+        F: FnMut(u32, u32),
+    {
+        if pool.threads() <= 1 {
+            return self.eps_self_join(metric, eps, emit);
+        }
+        self.query_batch_par(metric, &self.points, eps, pool, |qi, gid| {
+            let qg = self.ids[qi];
+            if qg < gid {
+                emit(qg, gid);
+            }
+        });
+    }
 }
+
+/// Query-shard size for the parallel batch paths. Fixed (not derived from
+/// the pool size) so the chunk decomposition — and therefore the emitted
+/// pair order — is identical at every thread count.
+pub(crate) const PAR_QUERY_CHUNK: usize = 1024;
 
 #[cfg(test)]
 mod tests {
@@ -309,6 +399,44 @@ mod tests {
         }
         assert_eq!(pairs, want_pairs);
         assert!(naive_lower_bound > calls_with_reuse);
+    }
+
+    #[test]
+    fn par_batch_matches_sequential_batch() {
+        // More queries than one PAR_QUERY_CHUNK so the sharded path runs.
+        let pts = random_dense(60, 400, 3);
+        let queries = random_dense(61, 2500, 3);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+        let eps = 0.6;
+        let mut seq: Vec<(u32, u32)> = Vec::new();
+        t.query_batch(&Euclidean, &queries, eps, |q, id| seq.push((q as u32, id)));
+        seq.sort_unstable();
+        for threads in [1usize, 2, 4, 8] {
+            let pool = crate::util::Pool::new(threads);
+            let mut par: Vec<(u32, u32)> = Vec::new();
+            t.query_batch_par(&Euclidean, &queries, eps, &pool, |q, id| {
+                par.push((q as u32, id));
+            });
+            par.sort_unstable();
+            assert_eq!(seq, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_self_join_matches_sequential() {
+        let pts = random_dense(62, 1500, 3);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
+        let eps = 0.4;
+        let mut seq: Vec<(u32, u32)> = Vec::new();
+        t.eps_self_join(&Euclidean, eps, |a, b| seq.push((a, b)));
+        seq.sort_unstable();
+        for threads in [2usize, 5] {
+            let pool = crate::util::Pool::new(threads);
+            let mut par: Vec<(u32, u32)> = Vec::new();
+            t.eps_self_join_par(&Euclidean, eps, &pool, |a, b| par.push((a, b)));
+            par.sort_unstable();
+            assert_eq!(seq, par, "threads={threads}");
+        }
     }
 
     #[test]

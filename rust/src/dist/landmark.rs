@@ -34,7 +34,7 @@ use crate::covertree::{BuildParams, CoverTree};
 use crate::graph::EdgeList;
 use crate::metric::Metric;
 use crate::points::PointSet;
-use crate::util::{block_partition, Rng};
+use crate::util::{block_partition, Pool, Rng};
 use crate::voronoi;
 
 /// Tag base for the circulating ghost bundles (one tag per ring step).
@@ -63,6 +63,9 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     }
     let p = comm.size();
     let rank = comm.rank();
+    // Intra-rank task pool for the build/query phases; its worker CPU is
+    // folded into this rank's compute charge at each phase boundary.
+    let pool = Pool::new(cfg.pool_threads());
 
     // ------------------------------------------------------------------
     // phase: partition
@@ -141,10 +144,12 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     // ------------------------------------------------------------------
     comm.set_phase("tree");
     let params = BuildParams { leaf_size: cfg.leaf_size.max(1), root: 0 };
-    let tree = CoverTree::build_with_ids(home.pts.clone(), home.gids.clone(), metric, &params);
+    let tree =
+        CoverTree::build_with_ids_par(home.pts.clone(), home.gids.clone(), metric, &params, &pool);
     // One tree per rank covers every intra-rank pair (same or different
     // cell) in a single self-join.
-    tree.eps_self_join(metric, eps, |a, b| edges.push(a, b));
+    tree.eps_self_join_par(metric, eps, &pool, |a, b| edges.push(a, b));
+    comm.charge_child_cpu(pool.drain_cpu());
 
     // ------------------------------------------------------------------
     // phase: ghost
@@ -186,10 +191,11 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
             .collect();
         for b in &comm.alltoallv(bufs) {
             let ghosts: Bundle<P> = Bundle::from_bytes(b);
-            tree.query_batch(metric, &ghosts.pts, eps, |qi, gid| {
+            tree.query_batch_par(metric, &ghosts.pts, eps, &pool, |qi, gid| {
                 edges.push(ghosts.gids[qi], gid);
             });
         }
+        comm.charge_child_cpu(pool.drain_cpu());
     } else {
         // landmark-ring: the union ghost bundle circulates the ring.
         let my_cells: Vec<usize> = (0..m).filter(|&c| cell_rank[c] == rank).collect();
@@ -220,7 +226,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
                         // Overlap: query the visitors received on the
                         // previous step while this transfer is in flight.
                         ghost_ring_query(
-                            &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost,
+                            &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost, &pool,
                             &mut edges,
                         );
                     }
@@ -229,9 +235,14 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
         }
         if p > 1 {
             ghost_ring_query(
-                &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost, &mut edges,
+                &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost, &pool, &mut edges,
             );
         }
+        // Pool-worker CPU from the ring queries lands here, in the ghost
+        // phase. It is charged additively (after the overlapped steps)
+        // rather than inside the overlap window — conservative: the
+        // simulated makespan never understates the work.
+        comm.charge_child_cpu(pool.drain_cpu());
     }
     edges
 }
@@ -248,6 +259,7 @@ fn ghost_ring_query<P: PointSet, M: Metric<P>>(
     centers: &Bundle<P>,
     my_cells: &[usize],
     ghost: GhostMode,
+    pool: &Pool,
     edges: &mut EdgeList,
 ) {
     if tree.num_points() == 0 || visiting.is_empty() || my_cells.is_empty() {
@@ -268,7 +280,7 @@ fn ghost_ring_query<P: PointSet, M: Metric<P>>(
         return;
     }
     let sub = visiting.select(&keep);
-    tree.query_batch(metric, &sub.pts, eps, |qi, gid| {
+    tree.query_batch_par(metric, &sub.pts, eps, pool, |qi, gid| {
         edges.push(sub.gids[qi], gid);
     });
 }

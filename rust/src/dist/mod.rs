@@ -116,6 +116,12 @@ pub struct RunConfig {
     pub cost: CostModel,
     /// Seed for landmark sampling.
     pub seed: u64,
+    /// Global intra-node thread budget, split evenly across the simulated
+    /// ranks: each rank gets a task pool of `max(1, threads / ranks)`
+    /// workers for its build/query phases, so rank-threads × pool-threads
+    /// never exceeds `max(threads, ranks)`. `0` (the default) keeps every
+    /// rank single-threaded — the pre-pool behavior.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -130,6 +136,7 @@ impl Default for RunConfig {
             ghost: GhostMode::Lemma1,
             cost: CostModel::default(),
             seed: 42,
+            threads: 0,
         }
     }
 }
@@ -145,6 +152,15 @@ impl RunConfig {
         }
         let m = if self.num_centers > 0 { self.num_centers } else { 4 * self.ranks.max(1) };
         m.clamp(1, n)
+    }
+
+    /// Per-rank task-pool width under the global `threads` budget.
+    pub fn pool_threads(&self) -> usize {
+        if self.threads == 0 {
+            1
+        } else {
+            (self.threads / self.ranks.max(1)).max(1)
+        }
     }
 }
 
@@ -215,6 +231,37 @@ mod tests {
             assert_eq!(Algorithm::parse(a.name()), Some(a));
         }
         assert_eq!(Algorithm::parse("quantum"), None);
+    }
+
+    #[test]
+    fn pool_threads_respects_global_budget() {
+        let cfg = RunConfig { ranks: 4, threads: 0, ..Default::default() };
+        assert_eq!(cfg.pool_threads(), 1); // default: single-threaded ranks
+        let cfg = RunConfig { ranks: 4, threads: 16, ..Default::default() };
+        assert_eq!(cfg.pool_threads(), 4);
+        let cfg = RunConfig { ranks: 8, threads: 4, ..Default::default() };
+        assert_eq!(cfg.pool_threads(), 1); // never below one worker
+        let cfg = RunConfig { ranks: 1, threads: 6, ..Default::default() };
+        assert_eq!(cfg.pool_threads(), 6);
+    }
+
+    #[test]
+    fn threaded_runs_stay_exact() {
+        let mut rng = Rng::new(603);
+        let pts = synthetic::gaussian_mixture(&mut rng, 80, 3, 3, 0.2);
+        let want = brute_force_edges(&pts, &Euclidean, 0.35);
+        for algorithm in Algorithm::ALL {
+            for threads in [2usize, 8] {
+                let cfg = RunConfig { ranks: 3, algorithm, threads, ..Default::default() };
+                let got = run_epsilon_graph(&pts, Euclidean, 0.35, &cfg);
+                assert_eq!(
+                    got.edges.edges(),
+                    want.edges(),
+                    "{} threads={threads}",
+                    algorithm.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::covertree::{BuildParams, CoverTree};
 use crate::graph::EdgeList;
 use crate::metric::Metric;
 use crate::points::PointSet;
-use crate::util::block_partition;
+use crate::util::{block_partition, Pool};
 
 /// Tag base for the rotating point blocks (one tag per ring step).
 const TAG_RING: u32 = 0x5100;
@@ -40,16 +40,22 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     let p = comm.size();
     let rank = comm.rank();
 
+    // Intra-rank task pool; worker CPU is folded into the rank's compute
+    // charge at phase boundaries (DESIGN.md §7.1).
+    let pool = Pool::new(cfg.pool_threads());
+
     comm.set_phase("tree");
     let (off, len) = block_partition(n, p, rank);
     let block = pts.slice(off, off + len);
     let gids: Vec<u32> = (off as u32..(off + len) as u32).collect();
     let params = BuildParams { leaf_size: cfg.leaf_size.max(1), root: 0 };
-    let tree = CoverTree::build_with_ids(block.clone(), gids.clone(), metric, &params);
+    let tree = CoverTree::build_with_ids_par(block.clone(), gids.clone(), metric, &params, &pool);
+    comm.charge_child_cpu(pool.drain_cpu());
 
     comm.set_phase("ring");
     if p == 1 {
-        tree.eps_self_join(metric, eps, |a, b| edges.push(a, b));
+        tree.eps_self_join_par(metric, eps, &pool, |a, b| edges.push(a, b));
+        comm.charge_child_cpu(pool.drain_cpu());
         return edges;
     }
     let next = (rank + 1) % p;
@@ -62,15 +68,18 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
                 if s == 1 {
                     // First transfer window: the block in hand is our own —
                     // run the intra-block self-join.
-                    tree.eps_self_join(metric, eps, |a, b| edges.push(a, b));
+                    tree.eps_self_join_par(metric, eps, &pool, |a, b| edges.push(a, b));
                 } else {
-                    cross_query(&tree, metric, eps, &visiting, &mut edges);
+                    cross_query(&tree, metric, eps, &visiting, &pool, &mut edges);
                 }
             });
         visiting = Bundle::from_bytes(&received);
     }
     // The block received on the last step still needs querying.
-    cross_query(&tree, metric, eps, &visiting, &mut edges);
+    cross_query(&tree, metric, eps, &visiting, &pool, &mut edges);
+    // Pool CPU from the ring steps, charged additively after the overlaps
+    // (conservative — the makespan never understates the work done).
+    comm.charge_child_cpu(pool.drain_cpu());
     edges
 }
 
@@ -80,9 +89,10 @@ fn cross_query<P: PointSet, M: Metric<P>>(
     metric: &M,
     eps: f64,
     visiting: &Bundle<P>,
+    pool: &Pool,
     edges: &mut EdgeList,
 ) {
-    tree.query_batch(metric, &visiting.pts, eps, |qi, gid| {
+    tree.query_batch_par(metric, &visiting.pts, eps, pool, |qi, gid| {
         edges.push(visiting.gids[qi], gid);
     });
 }

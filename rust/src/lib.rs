@@ -57,5 +57,5 @@ pub mod prelude {
         Chebyshev, Cosine, Counted, Euclidean, Hamming, Levenshtein, Manhattan, Metric,
     };
     pub use crate::points::{DenseMatrix, HammingCodes, PointSet, StringSet};
-    pub use crate::util::Rng;
+    pub use crate::util::{Pool, Rng};
 }

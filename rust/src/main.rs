@@ -57,6 +57,8 @@ const USAGE: &str = "usage: neargraph <run|datasets|selfcheck> [flags]
     --target-degree <f>          degree target for ε calibration
     --algorithm <name>           systolic-ring | landmark-coll | landmark-ring
     --ranks <n>                  simulated MPI ranks
+    --threads <n>                global intra-node thread budget, split
+                                 across ranks (0 = single-threaded ranks)
     --num-centers <m>            Voronoi landmarks (0 = auto)
     --leaf-size <z>              cover-tree leaf size
     --seed <n>                   RNG seed
@@ -111,6 +113,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
     if let Some(v) = args.get_usize("ranks")? {
         cfg.run.ranks = v;
+    }
+    if let Some(v) = args.get_usize("threads")? {
+        cfg.run.threads = v;
     }
     if let Some(a) = args.get("algorithm") {
         cfg.run.algorithm = Algorithm::parse(a).ok_or_else(|| format!("unknown algorithm {a:?}"))?;
@@ -203,9 +208,10 @@ fn report(cfg: &ExperimentConfig, eps: f64, _n: usize, res: &RunResult, phases: 
         stats.num_vertices, stats.num_edges, stats.avg_degree, stats.max_degree
     );
     println!(
-        "simulated makespan: {} on {} ranks ({})",
+        "simulated makespan: {} on {} ranks x {} pool threads ({})",
         fmt_secs(res.makespan),
         cfg.run.ranks,
+        cfg.run.pool_threads(),
         cfg.run.algorithm.name()
     );
     if phases {

@@ -37,6 +37,12 @@ pub trait TileBackend: Send + Sync {
 pub struct NativeBackend;
 
 impl TileBackend for NativeBackend {
+    // Deliberately the subtraction form, not the cached-norm matmul form:
+    // `brute_force_tiled` promises *exact* agreement with the per-pair
+    // `sq_dist` path (its gate test), and a tile of raw distances has no
+    // ε to guard-band against. The norm cache accelerates the paths that
+    // decide `d ≤ ε` (see [`euclidean_leaf_filter`]) or already use the
+    // matmul form (SNN, PJRT).
     fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
         assert_eq!(q.dim(), r.dim(), "dimension mismatch");
         let (nq, nr) = (q.len(), r.len());
@@ -73,12 +79,9 @@ impl TileBackend for NativeBackend {
             let qi = q.row(i);
             let row = &mut out[i * nr..(i + 1) * nr];
             for (j, slot) in row.iter_mut().enumerate() {
-                let rj = r.row(j);
-                let mut s = 0.0f32;
-                for k in 0..qi.len() {
-                    s += (qi[k] - rj[k]).abs();
-                }
-                *slot = s;
+                // zip elides the per-element bounds checks that the indexed
+                // form paid (the Euclidean path's formulation).
+                *slot = qi.iter().zip(r.row(j)).map(|(x, y)| (x - y).abs()).sum();
             }
         }
         out
@@ -94,7 +97,9 @@ impl TileBackend for NativeBackend {
 pub fn tile_neighbors(tile: &[f32], nq: usize, nr: usize, eps: f64) -> Vec<(usize, usize)> {
     debug_assert_eq!(tile.len(), nq * nr);
     let eps = eps as f32;
-    let mut out = Vec::new();
+    // Pre-size for the common sparse-neighborhood case (≥ one hit per
+    // query row) so the first pushes don't reallocate a cold Vec.
+    let mut out = Vec::with_capacity(nq);
     for i in 0..nq {
         let row = &tile[i * nr..(i + 1) * nr];
         for (j, &d) in row.iter().enumerate() {
@@ -106,10 +111,55 @@ pub fn tile_neighbors(tile: &[f32], nq: usize, nr: usize, eps: f64) -> Vec<(usiz
     out
 }
 
+/// Norm-cached leaf-block filter — the batched cover-tree query's dense
+/// hot path (DESIGN.md §7.1). For each `(q, _)` entry of `active`, decides
+/// `d(queries[q], refs[j]) ≤ eps` using the matmul-form squared distance
+/// `‖q‖² + ‖r‖² − 2⟨q,r⟩` over the cached row norms, which skips the
+/// per-pair subtraction loop *and* the square root.
+///
+/// Decisions are bit-identical to the exact per-pair comparison
+/// (`sq_dist(q, r).sqrt() as f64 <= eps`): entries whose matmul-form d²
+/// lands inside a conservative rounding band around ε² are re-decided with
+/// the exact formula. The band `(‖q‖² + ‖r‖² + 1)·(dim + 8)·1e-6` bounds
+/// the f32 accumulation error of both formulations plus the exact path's
+/// sqrt rounding with ≥ 20× margin over the worst case observed on random
+/// data across dims 1–960 and coordinate scales 0.01–255.
+pub fn euclidean_leaf_filter(
+    queries: &DenseMatrix,
+    active: &[(u32, f64)],
+    refs: &DenseMatrix,
+    j: usize,
+    eps: f64,
+    yes: &mut dyn FnMut(u32),
+) {
+    let rj = refs.row(j);
+    let nj = refs.sq_norm(j);
+    let eps2 = eps * eps;
+    let dim_slack = (queries.dim() + 8) as f64 * 1e-6;
+    for &(q, _) in active {
+        let row = queries.row(q as usize);
+        let ni = queries.sq_norm(q as usize);
+        let d2 = (ni + nj - 2.0 * super::euclidean::dot(row, rj)) as f64;
+        let band = (ni + nj + 1.0) as f64 * dim_slack;
+        let pass = if d2 <= eps2 - band {
+            true
+        } else if d2 >= eps2 + band {
+            false
+        } else {
+            // Borderline: fall back to the exact per-pair decision so the
+            // kernel agrees with `Euclidean::dist` bit-for-bit.
+            (super::euclidean::sq_dist(row, rj).sqrt() as f64) <= eps
+        };
+        if pass {
+            yes(q);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metric::{Euclidean, Hamming, Metric};
+    use crate::metric::{Euclidean, Hamming, Manhattan, Metric};
     use crate::points::PointSet;
     use crate::util::Rng;
 
@@ -151,6 +201,50 @@ mod tests {
             for j in 0..r.len() {
                 let want = Hamming.dist_between(&q, i, &r, j) as f32;
                 assert_eq!(tile[i * r.len() + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn native_manhattan_tile_matches_metric() {
+        let mut rng = Rng::new(22);
+        let q = random_dense(&mut rng, 6, 9);
+        let r = random_dense(&mut rng, 8, 9);
+        let tile = NativeBackend.manhattan_tile(&q, &r);
+        for i in 0..q.len() {
+            for j in 0..r.len() {
+                let want = Manhattan.dist_between(&q, i, &r, j) as f32;
+                let got = tile[i * r.len() + j];
+                assert!((want - got).abs() < 1e-4, "({i},{j}): {want} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_filter_matches_exact_decisions() {
+        // The kernel must agree with the per-pair `dist` comparison on
+        // every pair, including zero-distance duplicates and eps = 0.
+        let mut rng = Rng::new(23);
+        for (dim, scale, off) in [(3usize, 1.0f32, 0.0f32), (17, 100.0, 500.0), (64, 0.05, 0.0)] {
+            let mut pts = DenseMatrix::new(dim);
+            for _ in 0..60 {
+                let row: Vec<f32> =
+                    (0..dim).map(|_| rng.normal_f32() * scale + off).collect();
+                pts.push(&row);
+            }
+            let dup = pts.row(3).to_vec();
+            pts.push(&dup);
+            let active: Vec<(u32, f64)> = (0..pts.len() as u32).map(|q| (q, 0.0)).collect();
+            for eps in [0.0, 0.4 * scale as f64, 2.0 * scale as f64] {
+                for j in [0usize, 3, 60] {
+                    let mut got = Vec::new();
+                    euclidean_leaf_filter(&pts, &active, &pts, j, eps, &mut |q| got.push(q));
+                    let want: Vec<u32> = (0..pts.len())
+                        .filter(|&i| Euclidean.dist_ij(&pts, i, j) <= eps)
+                        .map(|i| i as u32)
+                        .collect();
+                    assert_eq!(got, want, "dim={dim} scale={scale} eps={eps} j={j}");
+                }
             }
         }
     }

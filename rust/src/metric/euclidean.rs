@@ -40,6 +40,27 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Inner product with the same 8-lane accumulator shape as [`sq_dist`] —
+/// the `⟨x,y⟩` term of the norm-cached matmul-form kernels.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for j in 0..8 {
+            acc[j] += xa[j] * xb[j];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
 impl Metric<DenseMatrix> for Euclidean {
     #[inline]
     fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
@@ -48,6 +69,21 @@ impl Metric<DenseMatrix> for Euclidean {
 
     fn name(&self) -> &'static str {
         "euclidean"
+    }
+
+    // Leaf blocks go through the norm-cached matmul-form kernel in the
+    // tile engine instead of per-pair `sq_dist` calls; decisions stay
+    // bit-identical to the default (guard-band recheck — see the kernel).
+    fn leaf_filter(
+        &self,
+        queries: &DenseMatrix,
+        active: &[(u32, f64)],
+        refs: &DenseMatrix,
+        j: usize,
+        eps: f64,
+        yes: &mut dyn FnMut(u32),
+    ) {
+        super::engine::euclidean_leaf_filter(queries, active, refs, j, eps, yes);
     }
 }
 

@@ -49,9 +49,41 @@ pub trait Metric<P: PointSet>: Clone + Send + Sync + 'static {
     fn dist_between(&self, a: &P, i: usize, b: &P, j: usize) -> f64 {
         self.dist(a.point(i), b.point(j))
     }
+
+    /// Leaf-block filter used by the batched tree queries: for every
+    /// `(q, _carried)` entry of `active` (in order), test
+    /// `d(queries[q], refs[j]) ≤ eps` and call `yes(q)` on a pass. The
+    /// `_carried` slot is the traversal's cached parent distance; the
+    /// default ignores it and walks the block through [`Metric::dist`].
+    ///
+    /// Overrides must make *identical* accept/reject decisions to the
+    /// default — the dense override routes the block through the
+    /// norm-cached matmul kernel in [`engine`] and re-decides borderline
+    /// entries with the exact formula (see
+    /// [`engine::euclidean_leaf_filter`]).
+    fn leaf_filter(
+        &self,
+        queries: &P,
+        active: &[(u32, f64)],
+        refs: &P,
+        j: usize,
+        eps: f64,
+        yes: &mut dyn FnMut(u32),
+    ) {
+        let rp = refs.point(j);
+        for &(q, _) in active {
+            if self.dist(queries.point(q as usize), rp) <= eps {
+                yes(q);
+            }
+        }
+    }
 }
 
 /// Shared distance-call counter (one per experiment phase, typically).
+///
+/// Backed by an `Arc<AtomicU64>`, so counting metrics are `Sync` and one
+/// counter can be shared across a rank's pool workers during instrumented
+/// parallel traversals; clones observe the same total.
 #[derive(Clone, Debug, Default)]
 pub struct DistCounter(Arc<AtomicU64>);
 
@@ -63,6 +95,12 @@ impl DistCounter {
     #[inline]
     pub fn bump(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` evaluations at once (block kernels).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
@@ -108,6 +146,22 @@ impl<P: PointSet, M: Metric<P>> Metric<P> for Counted<M> {
 
     fn name(&self) -> &'static str {
         self.inner.name()
+    }
+
+    // Bulk-count the block (one logical evaluation per active entry) and
+    // delegate to the inner metric's kernel; going through the default
+    // would instead double-count via the per-pair `dist` path.
+    fn leaf_filter(
+        &self,
+        queries: &P,
+        active: &[(u32, f64)],
+        refs: &P,
+        j: usize,
+        eps: f64,
+        yes: &mut dyn FnMut(u32),
+    ) {
+        self.counter.add(active.len() as u64);
+        self.inner.leaf_filter(queries, active, refs, j, eps, yes);
     }
 }
 
@@ -175,5 +229,45 @@ mod tests {
         c2.dist_ij(&m, 0, 1);
         assert_eq!(c.count(), 2);
         assert_eq!(c2.count(), 2);
+    }
+
+    #[test]
+    fn counted_is_sync_for_parallel_traversals() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Counted<Euclidean>>();
+        assert_send_sync::<DistCounter>();
+    }
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let m = DenseMatrix::from_flat(1, vec![0.0, 1.0]);
+        let c = Counted::new(Euclidean);
+        let pool = crate::util::Pool::new(4);
+        pool.run_indexed(40, |_| {
+            c.dist_ij(&m, 0, 1);
+        });
+        assert_eq!(c.count(), 40);
+    }
+
+    #[test]
+    fn leaf_filter_counts_one_per_entry_and_matches_dist() {
+        let mut m = DenseMatrix::new(3);
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..40 {
+            m.push(&[rng.normal_f32(), rng.normal_f32(), rng.normal_f32()]);
+        }
+        let active: Vec<(u32, f64)> = (0..m.len() as u32).map(|q| (q, 0.0)).collect();
+        let eps = 1.3;
+        for j in [0usize, 7, 39] {
+            let c = Counted::new(Euclidean);
+            let mut got = Vec::new();
+            c.leaf_filter(&m, &active, &m, j, eps, &mut |q| got.push(q));
+            assert_eq!(c.count(), 40, "bulk count per entry");
+            let want: Vec<u32> = (0..m.len())
+                .filter(|&i| Euclidean.dist_ij(&m, i, j) <= eps)
+                .map(|i| i as u32)
+                .collect();
+            assert_eq!(got, want, "j={j}");
+        }
     }
 }

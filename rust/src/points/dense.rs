@@ -5,10 +5,25 @@
 use super::{get_u64, put_u64, PointSet};
 
 /// Row-major `n × d` matrix of `f32` coordinates.
+///
+/// Every matrix carries a cache of the squared L2 norm of each row,
+/// maintained by all mutation paths. The cache feeds the matmul-form
+/// distance kernels (`‖x‖² + ‖y‖² − 2⟨x,y⟩`): the SNN baseline, the dense
+/// tile engine, and the cover tree's batched leaf filtering (DESIGN.md
+/// §7.1). Norms are always computed by the same summation
+/// ([`row_sq_norm`]), so equal row data yields bit-equal cached norms.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DenseMatrix {
     dim: usize,
     data: Vec<f32>,
+    norms: Vec<f32>,
+}
+
+/// Squared L2 norm of one row — the canonical summation used for every
+/// cached norm (sequential f32 accumulation).
+#[inline]
+pub fn row_sq_norm(row: &[f32]) -> f32 {
+    row.iter().map(|x| x * x).sum()
 }
 
 impl DenseMatrix {
@@ -17,7 +32,8 @@ impl DenseMatrix {
     pub fn from_flat(dim: usize, data: Vec<f32>) -> Self {
         assert!(dim > 0, "dimension must be positive");
         assert_eq!(data.len() % dim, 0, "flat buffer not a multiple of dim");
-        DenseMatrix { dim, data }
+        let norms = data.chunks_exact(dim).map(row_sq_norm).collect();
+        DenseMatrix { dim, data, norms }
     }
 
     /// An empty matrix of points with dimension `dim`.
@@ -28,7 +44,7 @@ impl DenseMatrix {
     /// With pre-reserved capacity for `n` points.
     pub fn with_capacity(dim: usize, n: usize) -> Self {
         assert!(dim > 0);
-        DenseMatrix { dim, data: Vec::with_capacity(dim * n) }
+        DenseMatrix { dim, data: Vec::with_capacity(dim * n), norms: Vec::with_capacity(n) }
     }
 
     /// Point dimensionality.
@@ -47,6 +63,7 @@ impl DenseMatrix {
     pub fn push(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.dim);
         self.data.extend_from_slice(row);
+        self.norms.push(row_sq_norm(row));
     }
 
     /// Borrow row `i`.
@@ -60,10 +77,22 @@ impl DenseMatrix {
         self.data.chunks_exact(self.dim)
     }
 
-    /// Squared L2 norm of every row — precomputation used by the SNN
-    /// baseline and the matmul-form distance tiles.
+    /// Cached squared L2 norm of row `i`.
+    #[inline]
+    pub fn sq_norm(&self, i: usize) -> f32 {
+        self.norms[i]
+    }
+
+    /// Cached squared L2 norms of all rows (parallel to the rows).
+    #[inline]
+    pub fn sq_norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Squared L2 norm of every row, as an owned vector (a copy of the
+    /// cache; kept for callers that need ownership).
     pub fn row_sq_norms(&self) -> Vec<f32> {
-        self.rows().map(|r| r.iter().map(|x| x * x).sum()).collect()
+        self.norms.clone()
     }
 }
 
@@ -84,18 +113,24 @@ impl PointSet for DenseMatrix {
         let mut out = DenseMatrix::with_capacity(self.dim, ids.len());
         for &i in ids {
             out.data.extend_from_slice(self.row(i));
+            out.norms.push(self.norms[i]);
         }
         out
     }
 
     fn slice(&self, lo: usize, hi: usize) -> Self {
         assert!(lo <= hi && hi <= self.len());
-        DenseMatrix { dim: self.dim, data: self.data[lo * self.dim..hi * self.dim].to_vec() }
+        DenseMatrix {
+            dim: self.dim,
+            data: self.data[lo * self.dim..hi * self.dim].to_vec(),
+            norms: self.norms[lo..hi].to_vec(),
+        }
     }
 
     fn extend_from(&mut self, other: &Self) {
         assert_eq!(self.dim, other.dim, "dimension mismatch");
         self.data.extend_from_slice(&other.data);
+        self.norms.extend_from_slice(&other.norms);
     }
 
     fn empty_like(&self) -> Self {
@@ -121,7 +156,7 @@ impl PointSet for DenseMatrix {
             data.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
             off += 4;
         }
-        DenseMatrix { dim, data }
+        DenseMatrix::from_flat(dim, data)
     }
 
     fn payload_bytes(&self) -> u64 {
@@ -188,6 +223,25 @@ mod tests {
         let m = sample();
         let norms = m.row_sq_norms();
         assert_eq!(norms, vec![5.0, 50.0, 149.0]);
+        assert_eq!(m.sq_norms(), &[5.0, 50.0, 149.0]);
+        assert_eq!(m.sq_norm(1), 50.0);
+    }
+
+    #[test]
+    fn norm_cache_tracks_every_mutation() {
+        let m = sample();
+        let expect = |mm: &DenseMatrix| {
+            let want: Vec<f32> = mm.rows().map(row_sq_norm).collect();
+            assert_eq!(mm.sq_norms(), &want[..]);
+        };
+        expect(&m.gather(&[2, 0, 2]));
+        expect(&m.slice(1, 3));
+        let mut s = m.slice(0, 2);
+        s.extend_from(&m.slice(2, 3));
+        expect(&s);
+        s.push(&[1.0, 1.0, 1.0]);
+        expect(&s);
+        expect(&DenseMatrix::from_bytes(&s.to_bytes()));
     }
 
     #[test]

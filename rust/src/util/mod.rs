@@ -1,13 +1,17 @@
-//! Shared utilities: deterministic RNG, timers, thread CPU clocks.
+//! Shared utilities: deterministic RNG, timers, thread CPU clocks, and the
+//! intra-rank task pool.
 //!
 //! The offline build environment caches only the `xla` crate closure, so the
-//! usual ecosystem crates (`rand`, `instant`, ...) are replaced by small
-//! in-crate substrates. Everything here is deterministic given a seed, which
-//! the test suite and bench harness rely on for reproducibility.
+//! usual ecosystem crates (`rand`, `instant`, `rayon`, ...) are replaced by
+//! small in-crate substrates. Everything here is deterministic given a seed
+//! (or, for [`pool`], renders order-independent results), which the test
+//! suite and bench harness rely on for reproducibility.
 
+pub mod pool;
 pub mod rng;
 pub mod timer;
 
+pub use pool::{Pool, Worklist};
 pub use rng::Rng;
 pub use timer::{thread_cpu_time, Stopwatch};
 

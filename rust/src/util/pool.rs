@@ -1,0 +1,305 @@
+//! Zero-dependency task pool for intra-rank (shared-memory) parallelism.
+//!
+//! The offline build carries no `rayon`/`crossbeam`, so the pool is built
+//! from `std` only: scoped threads (`std::thread::scope`), a
+//! `Mutex`+`Condvar` work queue, and atomics. Two execution shapes cover
+//! every parallel phase in the crate:
+//!
+//! * [`Pool::run_worklist`] — a dynamic LIFO worklist whose tasks may push
+//!   further tasks (the cover-tree hub expansion);
+//! * [`Pool::run_indexed`] — a static parallel-for over `n` parts with the
+//!   outputs returned in part order (batched queries, tile sweeps).
+//!
+//! **CPU accounting.** The simulated MPI runtime charges each rank the CPU
+//! time of its own thread (`CLOCK_THREAD_CPUTIME_ID`), which cannot see
+//! work done by pool workers — a rank blocked on `run_*` accrues ~zero CPU
+//! while its workers burn several cores. Every `run_*` call therefore
+//! measures each worker thread's CPU time and accumulates it on the pool;
+//! the rank drains it with [`Pool::drain_cpu`] and folds it into its
+//! compute charge via `Comm::charge_child_cpu` (DESIGN.md §7.1).
+//!
+//! A pool with `threads == 1` never spawns: work runs inline on the caller
+//! (whose own CPU clock covers it), reproducing single-threaded behavior
+//! exactly.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A thread-budgeted task pool. Cheap to construct (no threads live between
+/// `run_*` calls — workers are scoped to each call).
+#[derive(Debug)]
+pub struct Pool {
+    threads: usize,
+    /// Worker CPU time accumulated since the last [`Pool::drain_cpu`], in
+    /// nanoseconds (atomic so workers can add concurrently).
+    cpu_nanos: AtomicU64,
+}
+
+impl Pool {
+    /// A pool with the given worker budget (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Pool { threads: threads.max(1), cpu_nanos: AtomicU64::new(0) }
+    }
+
+    /// The worker budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Take (and reset) the worker CPU seconds accumulated by `run_*` calls
+    /// since the previous drain. Inline (single-thread) execution is not
+    /// included — the caller's own CPU clock already covers it.
+    pub fn drain_cpu(&self) -> f64 {
+        self.cpu_nanos.swap(0, Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    fn add_cpu(&self, seconds: f64) {
+        if seconds > 0.0 {
+            self.cpu_nanos.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Process a dynamic worklist seeded with `seed`. Each worker owns a
+    /// state created by `init(worker_index)`; `step` handles one task and
+    /// may push follow-up tasks through the [`Worklist`] handle. Returns
+    /// the per-worker states (indexed by worker). Task execution order is
+    /// unspecified — callers needing a deterministic result must make it
+    /// order-independent (see the cover-tree build's renumber pass).
+    pub fn run_worklist<T, S, I, F>(&self, seed: Vec<T>, init: I, step: F) -> Vec<S>
+    where
+        T: Send,
+        S: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&Worklist<T>, &mut S, T) + Sync,
+    {
+        let wl = Worklist::new(seed);
+        if self.threads == 1 {
+            let mut state = init(0);
+            while let Some(task) = wl.next() {
+                let guard = ActiveGuard { wl: &wl };
+                step(&wl, &mut state, task);
+                drop(guard);
+            }
+            return vec![state];
+        }
+        let (wl, init, step) = (&wl, &init, &step);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.threads)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let cpu0 = crate::util::thread_cpu_time();
+                        let mut state = init(w);
+                        while let Some(task) = wl.next() {
+                            // The guard releases the task's "active" slot
+                            // even if `step` panics, so sibling workers
+                            // terminate instead of waiting forever.
+                            let guard = ActiveGuard { wl };
+                            step(wl, &mut state, task);
+                            drop(guard);
+                        }
+                        (state, crate::util::thread_cpu_time() - cpu0)
+                    })
+                })
+                .collect();
+            let mut states = Vec::with_capacity(self.threads);
+            for h in handles {
+                let (state, cpu) = h.join().expect("pool worker panicked");
+                self.add_cpu(cpu);
+                states.push(state);
+            }
+            states
+        })
+    }
+
+    /// Compute `f(0), …, f(n − 1)` on the pool and return the outputs in
+    /// index order. Parts are claimed dynamically (an atomic cursor), so
+    /// uneven part costs still balance.
+    pub fn run_indexed<O, F>(&self, n: usize, f: F) -> Vec<O>
+    where
+        O: Send,
+        F: Fn(usize) -> O + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            return (0..n).map(&f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let (next, f) = (&next, &f);
+        let mut slots: Vec<Option<O>> = Vec::new();
+        slots.resize_with(n, || None);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.threads.min(n))
+                .map(|_| {
+                    scope.spawn(move || {
+                        let cpu0 = crate::util::thread_cpu_time();
+                        let mut out: Vec<(usize, O)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            out.push((i, f(i)));
+                        }
+                        (out, crate::util::thread_cpu_time() - cpu0)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (out, cpu) = h.join().expect("pool worker panicked");
+                self.add_cpu(cpu);
+                for (i, o) in out {
+                    slots[i] = Some(o);
+                }
+            }
+        });
+        slots.into_iter().map(|s| s.expect("indexed part missing")).collect()
+    }
+}
+
+/// Shared dynamic work queue (LIFO). Handed to `run_worklist` steps so
+/// tasks can spawn follow-up tasks.
+pub struct Worklist<T> {
+    state: Mutex<WlState<T>>,
+    cv: Condvar,
+}
+
+struct WlState<T> {
+    items: Vec<T>,
+    /// Tasks currently being executed — the queue is only exhausted when
+    /// it is empty AND nothing in flight can still push.
+    active: usize,
+}
+
+impl<T> Worklist<T> {
+    fn new(seed: Vec<T>) -> Self {
+        Worklist { state: Mutex::new(WlState { items: seed, active: 0 }), cv: Condvar::new() }
+    }
+
+    /// Enqueue a follow-up task.
+    pub fn push(&self, item: T) {
+        let mut g = self.state.lock().unwrap();
+        g.items.push(item);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Claim the next task, blocking while in-flight tasks may still push.
+    /// `None` once the queue is empty and nothing is in flight.
+    fn next(&self) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(t) = g.items.pop() {
+                g.active += 1;
+                return Some(t);
+            }
+            if g.active == 0 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn finish_one(&self) {
+        // Recover from poisoning: this runs from a Drop guard during
+        // unwinds, and waking the siblings beats a deadlocked `scope`.
+        let mut g = match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.active -= 1;
+        if g.active == 0 && g.items.is_empty() {
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+}
+
+struct ActiveGuard<'a, T> {
+    wl: &'a Worklist<T>,
+}
+
+impl<T> Drop for ActiveGuard<'_, T> {
+    fn drop(&mut self) {
+        self.wl.finish_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestCounter;
+
+    #[test]
+    fn indexed_outputs_in_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.run_indexed(37, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn indexed_empty_and_singleton() {
+        let pool = Pool::new(4);
+        assert!(pool.run_indexed(0, |i| i).is_empty());
+        assert_eq!(pool.run_indexed(1, |i| i + 9), vec![9]);
+    }
+
+    #[test]
+    fn worklist_processes_spawned_tasks() {
+        // Each task k < 100 pushes k+1; total processed must be 100 per
+        // seed chain regardless of thread count.
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let states = pool.run_worklist(
+                vec![0u64, 0, 0],
+                |_| 0u64,
+                |wl, count, task| {
+                    *count += 1;
+                    if task + 1 < 100 {
+                        wl.push(task + 1);
+                    }
+                },
+            );
+            assert_eq!(states.len(), threads);
+            assert_eq!(states.iter().sum::<u64>(), 300, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn worklist_empty_seed_terminates() {
+        let pool = Pool::new(4);
+        let states = pool.run_worklist(Vec::<u32>::new(), |_| 0u32, |_, s, t| *s += t);
+        assert_eq!(states.iter().sum::<u32>(), 0);
+    }
+
+    #[test]
+    fn thread_budget_clamped() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::new(5).threads(), 5);
+    }
+
+    #[test]
+    fn cpu_accounting_accumulates_and_drains() {
+        let pool = Pool::new(2);
+        let shared = TestCounter::new(0);
+        pool.run_indexed(8, |_| {
+            // Enough work to register on a coarse CPU clock.
+            let mut acc = 0u64;
+            for i in 0..400_000u64 {
+                acc = acc.wrapping_add(i.wrapping_mul(2654435761));
+            }
+            shared.fetch_add(std::hint::black_box(acc) & 1, Ordering::Relaxed);
+        });
+        let cpu = pool.drain_cpu();
+        assert!(cpu > 0.0, "worker CPU not recorded");
+        // Drain resets.
+        assert_eq!(pool.drain_cpu(), 0.0);
+    }
+
+    #[test]
+    fn inline_single_thread_does_not_accumulate_pool_cpu() {
+        let pool = Pool::new(1);
+        pool.run_indexed(4, |i| i * 3);
+        assert_eq!(pool.drain_cpu(), 0.0);
+    }
+}

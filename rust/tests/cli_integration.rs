@@ -63,6 +63,22 @@ fn run_hamming_dataset() {
 }
 
 #[test]
+fn run_with_thread_pool_stays_exact() {
+    let out = bin()
+        .args([
+            "run", "--dataset", "corel", "--points", "300", "--ranks", "2",
+            "--threads", "4", "--algorithm", "landmark-coll", "--target-degree", "12",
+            "--verify",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("VERIFIED"), "no verification in:\n{text}");
+    assert!(text.contains("2 ranks x 2 pool threads"), "pool width missing in:\n{text}");
+}
+
+#[test]
 fn config_file_loading() {
     let tmp = std::env::temp_dir().join("neargraph_cli_cfg.toml");
     std::fs::write(

@@ -1,0 +1,115 @@
+//! Determinism gate for the shared-memory parallel paths (DESIGN.md §7.1):
+//!
+//! * the hub-parallel cover-tree build must produce the **identical**
+//!   node/children arrays as the sequential build at every pool size;
+//! * the parallel ε self-join must emit the **identical** edge set;
+//!
+//! on all three metric families (dense Euclidean, bit-packed Hamming,
+//! Levenshtein over strings), including duplicate-heavy inputs.
+
+use neargraph::covertree::{BuildParams, CoverTree};
+use neargraph::metric::{Euclidean, Hamming, Levenshtein, Metric};
+use neargraph::points::{DenseMatrix, PointSet};
+use neargraph::util::{Pool, Rng};
+
+const POOL_SIZES: [usize; 4] = [1, 2, 4, 8];
+
+fn check_parallel_paths<P, M>(pts: &P, metric: &M, eps: f64, leaf_size: usize, what: &str)
+where
+    P: PointSet,
+    M: Metric<P>,
+{
+    let params = BuildParams { leaf_size, root: 0 };
+    let seq = CoverTree::build(pts, metric, &params);
+    let mut seq_edges: Vec<(u32, u32)> = Vec::new();
+    seq.eps_self_join(metric, eps, |a, b| seq_edges.push((a, b)));
+    seq_edges.sort_unstable();
+
+    for threads in POOL_SIZES {
+        let pool = Pool::new(threads);
+        let par = CoverTree::build_par(pts, metric, &params, &pool);
+        assert_eq!(
+            seq.structure(),
+            par.structure(),
+            "{what}: tree arrays differ at threads={threads} leaf={leaf_size}"
+        );
+        assert_eq!(seq.ids(), par.ids(), "{what}: ids differ at threads={threads}");
+
+        let mut par_edges: Vec<(u32, u32)> = Vec::new();
+        par.eps_self_join_par(metric, eps, &pool, |a, b| par_edges.push((a, b)));
+        par_edges.sort_unstable();
+        assert_eq!(
+            seq_edges, par_edges,
+            "{what}: self-join edges differ at threads={threads} leaf={leaf_size}"
+        );
+    }
+}
+
+#[test]
+fn dense_euclidean_build_and_join_deterministic() {
+    let pts = neargraph::data::synthetic::gaussian_mixture(&mut Rng::new(900), 600, 4, 5, 0.15);
+    for leaf_size in [1usize, 8, 32] {
+        check_parallel_paths(&pts, &Euclidean, 0.3, leaf_size, "dense");
+    }
+}
+
+#[test]
+fn dense_with_duplicates_deterministic() {
+    let mut rng = Rng::new(901);
+    let base = neargraph::data::synthetic::uniform(&mut rng, 150, 3, 1.0);
+    let pts = neargraph::data::synthetic::with_duplicates(&mut rng, &base, 100);
+    check_parallel_paths(&pts, &Euclidean, 0.2, 8, "dense+dups");
+    check_parallel_paths(&pts, &Euclidean, 0.0, 8, "dense+dups eps=0");
+}
+
+#[test]
+fn hamming_build_and_join_deterministic() {
+    let codes =
+        neargraph::data::synthetic::hamming_clusters(&mut Rng::new(902), 300, 64, 4, 0.08);
+    for leaf_size in [2usize, 8] {
+        check_parallel_paths(&codes, &Hamming, 12.0, leaf_size, "hamming");
+    }
+}
+
+#[test]
+fn levenshtein_build_and_join_deterministic() {
+    let reads = neargraph::data::synthetic::reads(&mut Rng::new(903), 120, 20, 4, 0.06);
+    for leaf_size in [2usize, 8] {
+        check_parallel_paths(&reads, &Levenshtein, 4.0, leaf_size, "levenshtein");
+    }
+}
+
+#[test]
+fn tiny_and_degenerate_inputs_deterministic() {
+    // Sizes around and below the leaf cutoff, where par_build delegates.
+    for n in [0usize, 1, 2, 9, 17] {
+        let mut pts = DenseMatrix::new(2);
+        let mut rng = Rng::new(904 + n as u64);
+        for _ in 0..n {
+            pts.push(&[rng.normal_f32(), rng.normal_f32()]);
+        }
+        check_parallel_paths(&pts, &Euclidean, 0.5, 8, &format!("tiny n={n}"));
+    }
+}
+
+#[test]
+fn parallel_batch_query_matches_sequential_on_hamming() {
+    // Cross-container check of the sharded batch path (> one chunk).
+    let tree_codes =
+        neargraph::data::synthetic::hamming_clusters(&mut Rng::new(905), 400, 64, 3, 0.1);
+    let query_codes =
+        neargraph::data::synthetic::hamming_clusters(&mut Rng::new(906), 1500, 64, 3, 0.1);
+    let tree = CoverTree::build(&tree_codes, &Hamming, &BuildParams::default());
+    let mut seq: Vec<(u32, u32)> = Vec::new();
+    tree.query_batch(&Hamming, &query_codes, 14.0, |q, id| seq.push((q as u32, id)));
+    seq.sort_unstable();
+    for threads in POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut par: Vec<(u32, u32)> = Vec::new();
+        tree.query_batch_par(&Hamming, &query_codes, 14.0, &pool, |q, id| {
+            par.push((q as u32, id));
+        });
+        par.sort_unstable();
+        assert_eq!(seq, par, "hamming batch threads={threads}");
+    }
+}
