@@ -1,18 +1,21 @@
-//! Perf driver for the shared-memory parallel cover tree (PR 2): build +
-//! ε self-join on a Table-I-style dense workload, sequential vs pooled,
-//! emitting a machine-readable `BENCH_pr2.json` so the perf trajectory
-//! accumulates across PRs.
+//! Perf driver: build + ε self-join on a Table-I-style dense workload,
+//! sequential vs pooled (the PR 2 trajectory), **plus** the same join
+//! through the `neargraph::index` facade so facade overhead vs the direct
+//! cover-tree calls is visible — emitting a machine-readable
+//! `BENCH_pr3.json` so the perf trajectory accumulates across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
-//!     [--threads 1,2,4] [--target-degree 30] [--out BENCH_pr2.json]
+//!     [--threads 1,2,4] [--target-degree 30] [--out BENCH_pr3.json]
 //! ```
 //!
-//! The driver also asserts that every thread count reproduces the
-//! single-thread edge set and distance-call counts exactly (the
+//! The driver asserts that every thread count — and every facade backend
+//! it times — reproduces the single-thread direct edge set exactly (the
 //! determinism gate, on the bench workload itself).
 
 use neargraph::covertree::{BuildParams, CoverTree};
+use neargraph::graph::GraphSink;
+use neargraph::index::{build_index_par, IndexKind, IndexParams, NearIndex};
 use neargraph::metric::{Counted, Euclidean};
 use neargraph::util::{Pool, Rng};
 use std::time::Instant;
@@ -27,6 +30,31 @@ struct Run {
     edge_hash: u64,
 }
 
+struct FacadeRun {
+    kind: IndexKind,
+    threads: usize,
+    build_s: f64,
+    join_s: f64,
+    edges: u64,
+    edge_hash: u64,
+}
+
+/// Order-independent edge-set fingerprint sink (unweighted, so direct and
+/// facade paths hash identically).
+#[derive(Default)]
+struct HashSink {
+    edges: u64,
+    hash: u64,
+}
+
+impl GraphSink for HashSink {
+    fn accept(&mut self, a: u32, b: u32, _w: f64) {
+        let (a, b) = if a < b { (a, b) } else { (b, a) };
+        self.edges += 1;
+        self.hash = self.hash.wrapping_add(mix(((a as u64) << 32) | b as u64));
+    }
+}
+
 fn main() {
     let args = neargraph::cli::Args::from_env().unwrap_or_else(|e| fail(&e));
     let n = args.get_usize("n").unwrap_or_else(|e| fail(&e)).unwrap_or(50_000);
@@ -34,7 +62,7 @@ fn main() {
     let target_degree =
         args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
     let threads_arg = args.get_or("threads", "1,2,4").to_string();
-    let out_path = args.get_or("out", "BENCH_pr2.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr3.json").to_string();
     args.reject_unknown().unwrap_or_else(|e| fail(&e));
     let thread_list: Vec<usize> = threads_arg
         .split(',')
@@ -48,6 +76,9 @@ fn main() {
     let eps = neargraph::data::calibrate_eps(&pts, &Euclidean, target_degree, 60_000, &mut rng);
     eprintln!("[perf_driver] eps={eps:.6} (target degree {target_degree})");
 
+    // ------------------------------------------------------------------
+    // Direct path: the PR 2 measurement, unchanged for comparability.
+    // ------------------------------------------------------------------
     let params = BuildParams::default();
     let mut runs: Vec<Run> = Vec::new();
     for &threads in &thread_list {
@@ -60,22 +91,26 @@ fn main() {
         let build_dists = counted.count();
         counted.counter().reset();
 
-        let mut edges = 0u64;
-        let mut edge_hash = 0u64;
+        let mut sink = HashSink::default();
         let t1 = Instant::now();
-        tree.eps_self_join_par(&counted, eps, &pool, |a, b| {
-            edges += 1;
-            // Order-independent edge-set fingerprint (sum of mixed pairs).
-            edge_hash = edge_hash.wrapping_add(mix(((a as u64) << 32) | b as u64));
-        });
+        tree.eps_self_join_par(&counted, eps, &pool, |a, b, d| sink.accept(a, b, d));
         let join_s = t1.elapsed().as_secs_f64();
         let join_dists = counted.count();
 
         eprintln!(
-            "[perf_driver] threads={threads}: build {build_s:.3}s ({build_dists} dists), \
-             join {join_s:.3}s ({join_dists} dists), {edges} edges"
+            "[perf_driver] direct threads={threads}: build {build_s:.3}s ({build_dists} dists), \
+             join {join_s:.3}s ({join_dists} dists), {} edges",
+            sink.edges
         );
-        runs.push(Run { threads, build_s, join_s, build_dists, join_dists, edges, edge_hash });
+        runs.push(Run {
+            threads,
+            build_s,
+            join_s,
+            build_dists,
+            join_dists,
+            edges: sink.edges,
+            edge_hash: sink.hash,
+        });
     }
 
     // Determinism gate on the bench workload: every run must agree with
@@ -88,8 +123,50 @@ fn main() {
         assert_eq!(r.join_dists, base.join_dists, "join dists changed at threads={}", r.threads);
     }
 
+    // ------------------------------------------------------------------
+    // Facade path: the same work through `Box<dyn NearIndex>` (cover
+    // tree — overhead should be noise) plus the SNN backend (a genuinely
+    // different algorithm, for scale). Brute force and the insertion tree
+    // are O(n²)-ish on this workload and are timed only at small n.
+    // ------------------------------------------------------------------
+    let mut facade: Vec<FacadeRun> = Vec::new();
+    let mut kinds = vec![IndexKind::CoverTree, IndexKind::Snn];
+    if n <= 5_000 {
+        kinds.push(IndexKind::BruteForce);
+        kinds.push(IndexKind::InsertCoverTree);
+    }
+    for kind in kinds {
+        for &threads in &thread_list {
+            let pool = Pool::new(threads);
+            let t0 = Instant::now();
+            let index = build_index_par(kind, &pts, Euclidean, &IndexParams::default(), &pool)
+                .unwrap_or_else(|e| fail(&e.to_string()));
+            let build_s = t0.elapsed().as_secs_f64();
+            let mut sink = HashSink::default();
+            let t1 = Instant::now();
+            index.eps_self_join_par(eps, &pool, &mut sink);
+            let join_s = t1.elapsed().as_secs_f64();
+            eprintln!(
+                "[perf_driver] facade {} threads={threads}: build {build_s:.3}s, \
+                 join {join_s:.3}s, {} edges",
+                kind.name(),
+                sink.edges
+            );
+            assert_eq!(sink.edges, base.edges, "{} edge count drifted", kind.name());
+            assert_eq!(sink.hash, base.edge_hash, "{} edge set drifted", kind.name());
+            facade.push(FacadeRun {
+                kind,
+                threads,
+                build_s,
+                join_s,
+                edges: sink.edges,
+                edge_hash: sink.hash,
+            });
+        }
+    }
+
     let (seq_total, best) = summarize(&runs);
-    let json = render_json(&dataset, n, dim, eps, &runs, seq_total, best);
+    let json = render_json(&dataset, n, dim, eps, &runs, &facade, seq_total, best);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| fail(&format!("{out_path}: {e}")));
     println!("{json}");
     eprintln!("[perf_driver] wrote {out_path}");
@@ -104,21 +181,23 @@ fn summarize(runs: &[Run]) -> (f64, &Run) {
     (seq_total, best)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn render_json(
     dataset: &str,
     n: usize,
     dim: usize,
     eps: f64,
     runs: &[Run],
+    facade: &[FacadeRun],
     seq_total: f64,
     best: &Run,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"bench\": \"pr2_parallel_covertree\",\n");
+    s.push_str("  \"bench\": \"pr3_index_facade\",\n");
     s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
     s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
-    s.push_str("  \"runs\": [\n");
+    s.push_str("  \"direct_runs\": [\n");
     for (i, r) in runs.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"threads\": {}, \"build_s\": {:.6}, \"join_s\": {:.6}, \
@@ -133,6 +212,35 @@ fn render_json(
         ));
     }
     s.push_str("  ],\n");
+    s.push_str("  \"facade_runs\": [\n");
+    for (i, r) in facade.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"index\": \"{}\", \"threads\": {}, \"build_s\": {:.6}, \
+             \"join_s\": {:.6}, \"edges\": {}, \"edge_hash\": {}}}{}\n",
+            r.kind.name(),
+            r.threads,
+            r.build_s,
+            r.join_s,
+            r.edges,
+            r.edge_hash,
+            if i + 1 < facade.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    // Facade overhead: cover-tree facade total vs direct total at the same
+    // thread count (same underlying traversals; the delta is dispatch +
+    // sink indirection).
+    for r in facade.iter().filter(|r| r.kind == IndexKind::CoverTree) {
+        if let Some(d) = runs.iter().find(|d| d.threads == r.threads) {
+            let direct = d.build_s + d.join_s;
+            let via = r.build_s + r.join_s;
+            s.push_str(&format!(
+                "  \"facade_overhead_threads{}\": {:.4},\n",
+                r.threads,
+                (via - direct) / direct.max(1e-12)
+            ));
+        }
+    }
     s.push_str(&format!(
         "  \"best_threads\": {},\n  \"speedup_build\": {:.4},\n  \"speedup_total\": {:.4}\n",
         best.threads,

@@ -6,7 +6,6 @@
 //! ```
 
 use neargraph::dist::run_epsilon_graph;
-use neargraph::graph::DegreeStats;
 use neargraph::prelude::*;
 use neargraph::util::fmt_secs;
 
@@ -24,7 +23,7 @@ fn main() {
     for algorithm in Algorithm::ALL {
         let cfg = RunConfig { ranks: 8, algorithm, ..Default::default() };
         let result = run_epsilon_graph(&points, Euclidean, eps, &cfg);
-        let stats = DegreeStats::of(&result.graph);
+        let stats = result.graph.degree_stats();
         println!(
             "{:<14} edges={:<6} avg_degree={:<6.2} makespan={}",
             algorithm.name(),
@@ -55,5 +54,19 @@ fn main() {
     println!(
         "6-NN of point 0: {:?}",
         knn.iter().map(|&(id, d)| (id, (d * 1000.0).round() / 1000.0)).collect::<Vec<_>>()
+    );
+
+    // 7. Every search structure sits behind one facade; results carry
+    //    their distances, so the ε-graph comes out weighted.
+    let index = build_index(
+        IndexKind::CoverTree, &points, Euclidean, &IndexParams::default(),
+    )
+    .expect("cover tree supports every metric");
+    let graph = neargraph::index::epsilon_graph(index.as_ref(), eps, &Pool::new(4));
+    let (v, w) = graph.neighbor_entries(0).next().expect("vertex 0 has a neighbor");
+    println!(
+        "facade ({}): {} weighted edges; first edge of vertex 0: -> {v} at d={w:.4}",
+        index.kind().name(),
+        graph.num_edges()
     );
 }

@@ -40,7 +40,7 @@ fn main() {
         let (tree, build_s) = timed(|| CoverTree::build(&pts, &Euclidean, &params));
         let (_e, join_s) = timed(|| {
             let mut e = EdgeList::new();
-            tree.eps_self_join(&Euclidean, eps, |a, b| e.push(a, b));
+            tree.eps_self_join(&Euclidean, eps, |a, b, _d| e.push(a, b));
             e
         });
         t1.row(&[
@@ -197,7 +197,7 @@ fn main() {
         let counted = Counted::new(Euclidean);
         let (_n, s) = timed(|| {
             let mut n = 0u64;
-            tree.eps_self_join(&counted, eps, |_, _| n += 1);
+            tree.eps_self_join(&counted, eps, |_, _, _| n += 1);
             n
         });
         t6.row(&["batched queries".into(), format!("{s:.3}"), counted.count().to_string()]);

@@ -40,7 +40,7 @@ fn main() {
                 counted.counter().reset();
                 let (_edges, join_s) = timed(|| {
                     let mut e = EdgeList::new();
-                    tree.eps_self_join(&counted, eps, |a, b| e.push(a, b));
+                    tree.eps_self_join(&counted, eps, |a, b, _d| e.push(a, b));
                     e
                 });
                 (build_s, join_s, build_d, counted.count())
@@ -52,7 +52,7 @@ fn main() {
                 counted.counter().reset();
                 let (_edges, join_s) = timed(|| {
                     let mut e = EdgeList::new();
-                    tree.eps_self_join(&counted, eps, |a, b| e.push(a, b));
+                    tree.eps_self_join(&counted, eps, |a, b, _d| e.push(a, b));
                     e
                 });
                 (build_s, join_s, build_d, counted.count())
@@ -90,7 +90,7 @@ fn main() {
         let (tree, build_s) = timed(|| CoverTree::build_par(&pts, &Euclidean, &params, &pool));
         let (_edges, join_s) = timed(|| {
             let mut e = EdgeList::new();
-            tree.eps_self_join_par(&Euclidean, eps, &pool, |a, b| e.push(a, b));
+            tree.eps_self_join_par(&Euclidean, eps, &pool, |a, b, _d| e.push(a, b));
             e
         });
         let total = build_s + join_s;

@@ -28,6 +28,30 @@ pub fn brute_force_edges<P: PointSet, M: Metric<P>>(pts: &P, metric: &M, eps: f6
     edges
 }
 
+/// Weighted [`brute_force_edges`]: the canonical weighted edge set with
+/// exact scalar-metric distances — the ground truth for the weighted
+/// correctness gates (`tests/correctness_sweep.rs`,
+/// `tests/index_equivalence.rs`).
+pub fn brute_force_weighted<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: &M,
+    eps: f64,
+) -> crate::graph::WeightedEdgeList {
+    let n = pts.len();
+    let mut edges = crate::graph::WeightedEdgeList::new();
+    for i in 0..n {
+        let pi = pts.point(i);
+        for j in i + 1..n {
+            let d = metric.dist(pi, pts.point(j));
+            if d <= eps {
+                edges.push(i as u32, j as u32, d);
+            }
+        }
+    }
+    edges.canonicalize();
+    edges
+}
+
 /// Brute-force ε-graph through a dense tile backend (native loops or the
 /// AOT-compiled PJRT kernel), processing `tile × tile` blocks — the
 /// compute-bound regime where "one can do no better than parallelizing all

@@ -7,11 +7,15 @@
 //! the original in O(n·d) per iteration), sort by score. Querying: since
 //! `|s_p − s_q| = |⟨p − q, v⟩| ≤ ‖p − q‖`, any ε-neighbor of `q` lies in
 //! the score window `[s_q − ε, s_q + ε]`; binary-search the window and
-//! filter it with exact (blocked, matmul-form) distance evaluations.
-//! SNN requires Euclidean geometry — exactly the flexibility gap versus
-//! cover trees that the paper highlights.
+//! filter it with the matmul-form squared distance, re-deciding accepts
+//! and borderline entries with the exact scalar formula (the same
+//! guard-band scheme as `metric::engine::euclidean_leaf_filter`), so the
+//! emitted pairs — and their reported distances — are bit-identical to
+//! `Euclidean::dist` decisions. SNN requires Euclidean geometry — exactly
+//! the flexibility gap versus cover trees that the paper highlights.
 
 use crate::graph::EdgeList;
+use crate::metric::euclidean::{dot, sq_dist};
 use crate::points::{DenseMatrix, PointSet};
 use crate::util::Rng;
 
@@ -128,57 +132,103 @@ impl Snn {
         s
     }
 
-    /// All indexed points within `eps` of `q` (original point indices).
-    pub fn query(&self, q: &[f32], eps: f64) -> Vec<u32> {
-        let eps = eps as f32;
+    /// Score-window padding: scores are f32 projections, so the exact
+    /// containment `|s_p − s_q| ≤ ‖p − q‖` can be violated by rounding at
+    /// the window edge. The projection's rounding error scales with the
+    /// *centered norm* of the projected point (≈ `dim·2⁻²⁴·‖xᶜ‖`; a
+    /// neighbor within ε has centered norm ≤ `‖xᶜ‖ + ε`, so its score
+    /// error is bounded the same way), hence the pad
+    /// `1e-6·(dim + 8)·(1 + ‖xᶜ‖ + ε)` — the engine kernel's slack
+    /// convention, ≥8× the two-sided worst case. Widening the window only
+    /// admits extra candidates for the exact filter to reject — it can
+    /// never lose a neighbor.
+    #[inline]
+    fn window_pad(&self, centered_norm: f32, eps: f32) -> f32 {
+        1e-6 * (self.component.len() + 8) as f32 * (1.0 + centered_norm + eps)
+    }
+
+    /// `‖q − mean‖` — the scale the score's rounding error grows with.
+    fn centered_norm(&self, q: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for k in 0..q.len() {
+            let d = q[k] - self.mean[k];
+            s += d * d;
+        }
+        s.sqrt()
+    }
+
+    /// All indexed points within `eps` of `q`, as `(original index,
+    /// distance)` pairs. Decisions and distances are bit-identical to
+    /// `Euclidean::dist` (matmul-form screening, exact evaluation on
+    /// accept — see the module docs).
+    pub fn query_weighted(&self, q: &[f32], eps: f64) -> Vec<(u32, f64)> {
+        let epsf = eps as f32;
         let s = self.score(q);
-        let lo = lower_bound(&self.scores, s - eps);
-        let hi = upper_bound(&self.scores, s + eps);
+        let pad = self.window_pad(self.centered_norm(q), epsf);
+        let lo = lower_bound(&self.scores, s - epsf - pad);
+        let hi = upper_bound(&self.scores, s + epsf + pad);
         let qn: f32 = q.iter().map(|x| x * x).sum();
         let eps2 = eps * eps;
+        let dim_slack = (q.len() + 8) as f64 * 1e-6;
         let mut out = Vec::new();
         for k in lo..hi {
             let row = self.pts.row(k);
-            let mut dot = 0.0f32;
-            for j in 0..row.len() {
-                dot += row[j] * q[j];
+            let ni = self.pts.sq_norm(k);
+            let d2 = (qn + ni - 2.0 * dot(row, q)) as f64;
+            let band = (qn + ni + 1.0) as f64 * dim_slack;
+            if d2 >= eps2 + band {
+                continue; // clear reject under the guard band
             }
-            let d2 = (qn + self.pts.sq_norm(k) - 2.0 * dot).max(0.0);
-            if d2 <= eps2 {
-                out.push(self.order[k]);
+            let d = sq_dist(row, q).sqrt() as f64;
+            if d <= eps {
+                out.push((self.order[k], d));
             }
         }
         out
     }
 
-    /// Build the full ε-graph by the sorted-window sweep (the paper's
-    /// "batch query mode"): for each point, scan forward while the score
-    /// gap is ≤ ε and filter exactly.
-    pub fn self_join(&self, eps: f64) -> EdgeList {
-        let eps = eps as f32;
+    /// All indexed points within `eps` of `q` (original point indices).
+    pub fn query(&self, q: &[f32], eps: f64) -> Vec<u32> {
+        self.query_weighted(q, eps).into_iter().map(|(i, _)| i).collect()
+    }
+
+    /// The full weighted ε-self-join by the sorted-window sweep (the
+    /// paper's "batch query mode"): for each point, scan forward while the
+    /// score gap is within ε and filter exactly.
+    /// `emit(u, v, d)` receives each unordered pair once, in original ids.
+    pub fn self_join_weighted<F: FnMut(u32, u32, f64)>(&self, eps: f64, mut emit: F) {
+        let epsf = eps as f32;
         let eps2 = eps * eps;
         let n = self.len();
-        let d = if n > 0 { self.pts.dim() } else { 0 };
-        let mut edges = EdgeList::with_capacity(n);
+        let dims = if n > 0 { self.pts.dim() } else { 0 };
+        let dim_slack = (dims + 8) as f64 * 1e-6;
         for i in 0..n {
             let si = self.scores[i];
             let ri = self.pts.row(i);
+            let pad = self.window_pad(self.centered_norm(ri), epsf);
             let ni = self.pts.sq_norm(i);
             for j in i + 1..n {
-                if self.scores[j] - si > eps {
+                if self.scores[j] - si > epsf + pad {
                     break;
                 }
-                let rj = self.pts.row(j);
-                let mut dot = 0.0f32;
-                for k in 0..d {
-                    dot += ri[k] * rj[k];
+                let nj = self.pts.sq_norm(j);
+                let d2 = (ni + nj - 2.0 * dot(ri, self.pts.row(j))) as f64;
+                let band = (ni + nj + 1.0) as f64 * dim_slack;
+                if d2 >= eps2 + band {
+                    continue;
                 }
-                let d2 = (ni + self.pts.sq_norm(j) - 2.0 * dot).max(0.0);
-                if d2 <= eps2 {
-                    edges.push(self.order[i], self.order[j]);
+                let d = sq_dist(ri, self.pts.row(j)).sqrt() as f64;
+                if d <= eps {
+                    emit(self.order[i], self.order[j], d);
                 }
             }
         }
+    }
+
+    /// Unweighted [`Snn::self_join_weighted`], canonicalized.
+    pub fn self_join(&self, eps: f64) -> EdgeList {
+        let mut edges = EdgeList::with_capacity(self.len());
+        self.self_join_weighted(eps, |u, v, _d| edges.push(u, v));
         edges.canonicalize();
         edges
     }

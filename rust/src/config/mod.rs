@@ -12,6 +12,7 @@ pub use toml::{ParseError, TomlDoc, Value};
 
 use crate::comm::CostModel;
 use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig};
+use crate::index::IndexKind;
 
 /// A fully-resolved experiment configuration (CLI and config files both
 /// funnel into this).
@@ -28,6 +29,10 @@ pub struct ExperimentConfig {
     /// Average-degree target for ε calibration.
     pub target_degree: f64,
     pub seed: u64,
+    /// When set, build single-node through the selected
+    /// [`crate::index::NearIndex`] backend instead of the distributed
+    /// driver (config key `index`, CLI `--index`).
+    pub index: Option<IndexKind>,
     pub run: RunConfig,
 }
 
@@ -40,6 +45,7 @@ impl Default for ExperimentConfig {
             eps: 0.0,
             target_degree: 30.0,
             seed: 42,
+            index: None,
             run: RunConfig::default(),
         }
     }
@@ -61,6 +67,11 @@ impl ExperimentConfig {
                     cfg.target_degree = value.as_f64().ok_or("target_degree must be a number")?
                 }
                 "seed" => cfg.seed = value.as_usize().ok_or("seed must be an integer")? as u64,
+                "index" => {
+                    let s = value.as_str().ok_or("index must be a string")?;
+                    cfg.index =
+                        Some(IndexKind::parse(s).ok_or_else(|| format!("unknown index {s:?}"))?);
+                }
                 "run.ranks" => cfg.run.ranks = value.as_usize().ok_or("ranks must be an integer")?,
                 "run.threads" => {
                     cfg.run.threads = value.as_usize().ok_or("threads must be an integer")?
@@ -183,6 +194,19 @@ ghost = "all"
         assert!(ExperimentConfig::from_toml("[run]\nalgorithm = \"quantum\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[run]\ncenters = \"psychic\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[run]\nghost = \"psychic\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("index = \"kd-tree\"\n").is_err());
+    }
+
+    #[test]
+    fn index_kind_parses_and_defaults_off() {
+        let cfg = ExperimentConfig::from_toml("index = \"cover-tree\"\n").unwrap();
+        assert_eq!(cfg.index, Some(IndexKind::CoverTree));
+        let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
+        assert_eq!(cfg.index, None);
+        for kind in IndexKind::ALL {
+            let text = format!("index = \"{}\"\n", kind.name());
+            assert_eq!(ExperimentConfig::from_toml(&text).unwrap().index, Some(kind));
+        }
     }
 
     #[test]

@@ -105,7 +105,7 @@ mod tests {
         dual.sort_unstable();
         dual.dedup();
         let mut batched: Vec<(u32, u32)> = Vec::new();
-        tree.eps_self_join(metric, eps, |a, b| batched.push((a, b)));
+        tree.eps_self_join(metric, eps, |a, b, _d| batched.push((a, b)));
         batched.sort_unstable();
         batched.dedup();
         assert_eq!(dual, batched, "eps={eps} leaf={leaf}");
@@ -159,7 +159,7 @@ mod tests {
 
         let batch_counted = Counted::new(Euclidean);
         let mut n_batch = 0u64;
-        tree.eps_self_join(&batch_counted, eps, |_, _| n_batch += 1);
+        tree.eps_self_join(&batch_counted, eps, |_, _, _| n_batch += 1);
 
         assert_eq!(n_dual, n_batch, "result sets must agree");
         assert!(

@@ -48,6 +48,11 @@ impl<P: PointSet> InsertCoverTree<P> {
         self.nodes.len()
     }
 
+    /// The owned point set (insertion order; point index == id).
+    pub fn points(&self) -> &P {
+        &self.points
+    }
+
     fn push_node(&mut self, point: u32, level: i32) -> u32 {
         self.nodes.push(INode { point, level, children: Vec::new() });
         (self.nodes.len() - 1) as u32
@@ -127,15 +132,22 @@ impl<P: PointSet> InsertCoverTree<P> {
     }
 
     /// Fixed-radius query (Algorithm 3 with the `2^{l+1}` subtree bound in
-    /// place of the batch tree's measured triple radius).
-    pub fn query<M: Metric<P>>(&self, metric: &M, q: P::Point<'_>, eps: f64, out: &mut Vec<u32>) {
+    /// place of the batch tree's measured triple radius), reporting
+    /// `(point index, distance)` pairs.
+    pub fn query_weighted<M: Metric<P>>(
+        &self,
+        metric: &M,
+        q: P::Point<'_>,
+        eps: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) {
         let Some(root) = self.root else { return };
         let mut stack = vec![root];
         while let Some(u) = stack.pop() {
             let n = &self.nodes[u as usize];
             let d = metric.dist(q, self.points.point(n.point as usize));
             if d <= eps {
-                out.push(n.point);
+                out.push((n.point, d));
             }
             // Descendants of a level-l node lie within 2^l + 2^{l-1} + …
             // < 2^{l+1} of it.
@@ -143,6 +155,13 @@ impl<P: PointSet> InsertCoverTree<P> {
                 stack.extend_from_slice(&n.children);
             }
         }
+    }
+
+    /// [`InsertCoverTree::query_weighted`] without the distances.
+    pub fn query<M: Metric<P>>(&self, metric: &M, q: P::Point<'_>, eps: f64, out: &mut Vec<u32>) {
+        let mut weighted = Vec::new();
+        self.query_weighted(metric, q, eps, &mut weighted);
+        out.extend(weighted.into_iter().map(|(i, _)| i));
     }
 
     /// Structural sanity: every point appears exactly once; children obey

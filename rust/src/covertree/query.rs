@@ -1,5 +1,10 @@
 //! Fixed-radius queries — Algorithm 3, single and batched.
 //!
+//! Every accept reports the accepted **distance** alongside the neighbor
+//! id: the traversal has it in hand anyway (it just compared it to ε), and
+//! downstream weighted ε-graphs need it — dropping it at the hot path and
+//! recomputing later would double the metric work (see `graph::NearGraph`).
+//!
 //! Two hot-path optimizations over the textbook traversal (§Perf):
 //!
 //! * **nesting reuse** — every internal vertex has a nested child carrying
@@ -16,10 +21,16 @@ use crate::metric::Metric;
 use crate::points::PointSet;
 
 impl<P: PointSet> CoverTree<P> {
-    /// All points of the tree within distance `eps` of `query`, reported as
-    /// **global ids** (Algorithm 3, with the vertex-triple radius as the
-    /// pruning bound).
-    pub fn query<M: Metric<P>>(&self, metric: &M, query: P::Point<'_>, eps: f64, out: &mut Vec<u32>) {
+    /// All points of the tree within distance `eps` of `query`, reported
+    /// as `(global_id, distance)` pairs (Algorithm 3, with the
+    /// vertex-triple radius as the pruning bound).
+    pub fn query_weighted<M: Metric<P>>(
+        &self,
+        metric: &M,
+        query: P::Point<'_>,
+        eps: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) {
         if self.is_empty() {
             return;
         }
@@ -29,7 +40,7 @@ impl<P: PointSet> CoverTree<P> {
         let d = metric.dist(query, self.points.point(root.point as usize));
         if root.is_leaf() {
             if d <= eps {
-                out.push(self.ids[root.point as usize]);
+                out.push((self.ids[root.point as usize], d));
             }
             return;
         }
@@ -49,7 +60,7 @@ impl<P: PointSet> CoverTree<P> {
                 };
                 if node.is_leaf() {
                     if d <= eps {
-                        out.push(self.ids[node.point as usize]);
+                        out.push((self.ids[node.point as usize], d));
                     }
                 } else if d <= node.radius + eps {
                     stack.push((v, d));
@@ -58,7 +69,15 @@ impl<P: PointSet> CoverTree<P> {
         }
     }
 
-    /// Convenience wrapper returning a fresh vector.
+    /// [`CoverTree::query_weighted`] without the distances — kept for
+    /// callers that only need the id set.
+    pub fn query<M: Metric<P>>(&self, metric: &M, query: P::Point<'_>, eps: f64, out: &mut Vec<u32>) {
+        let mut weighted = Vec::new();
+        self.query_weighted(metric, query, eps, &mut weighted);
+        out.extend(weighted.into_iter().map(|(gid, _)| gid));
+    }
+
+    /// Convenience wrapper returning a fresh vector of ids.
     pub fn query_vec<M: Metric<P>>(&self, metric: &M, query: P::Point<'_>, eps: f64) -> Vec<u32> {
         let mut out = Vec::new();
         self.query(metric, query, eps, &mut out);
@@ -70,12 +89,13 @@ impl<P: PointSet> CoverTree<P> {
     /// ranges in a shared arena (no per-node allocation; distances carried
     /// so the nested child is free).
     ///
-    /// `emit(query_index, neighbor_global_id)` is called once per result
-    /// pair.
+    /// `emit(query_index, neighbor_global_id, distance)` is called once per
+    /// result pair; the distance is exactly what [`Metric::dist`] returns
+    /// for that pair (block kernels re-evaluate accepts exactly).
     pub fn query_batch<M, F>(&self, metric: &M, queries: &P, eps: f64, mut emit: F)
     where
         M: Metric<P>,
-        F: FnMut(usize, u32),
+        F: FnMut(usize, u32, f64),
     {
         if self.is_empty() || queries.is_empty() {
             return;
@@ -89,7 +109,7 @@ impl<P: PointSet> CoverTree<P> {
             let d = metric.dist(queries.point(q), rp);
             if root.is_leaf() {
                 if d <= eps {
-                    emit(q, self.ids[root.point as usize]);
+                    emit(q, self.ids[root.point as usize], d);
                 }
             } else if d <= root.radius + eps {
                 arena.push((q as u32, d));
@@ -119,7 +139,7 @@ impl<P: PointSet> CoverTree<P> {
                         for k in start..end {
                             let (q, dq) = arena[k];
                             if dq <= eps {
-                                emit(q as usize, gid);
+                                emit(q as usize, gid, dq);
                             }
                         }
                     } else {
@@ -131,7 +151,7 @@ impl<P: PointSet> CoverTree<P> {
                             &self.points,
                             node.point as usize,
                             eps,
-                            &mut |q| emit(q as usize, gid),
+                            &mut |q, d| emit(q as usize, gid, d),
                         );
                     }
                 } else {
@@ -154,17 +174,18 @@ impl<P: PointSet> CoverTree<P> {
 
     /// Self-join: all pairs `(i, j)` of tree points with
     /// `d(i, j) ≤ eps`, `i ≠ j`, reported once per unordered pair in global
-    /// ids. Used for intra-cell queries in the landmark algorithms.
+    /// ids with the pair distance. Used for intra-cell queries in the
+    /// landmark algorithms.
     pub fn eps_self_join<M, F>(&self, metric: &M, eps: f64, mut emit: F)
     where
         M: Metric<P>,
-        F: FnMut(u32, u32),
+        F: FnMut(u32, u32, f64),
     {
-        self.query_batch(metric, &self.points, eps, |qi, gid| {
+        self.query_batch(metric, &self.points, eps, |qi, gid, d| {
             let qg = self.ids[qi];
             // Report each unordered pair once, drop self-pairs.
             if qg < gid {
-                emit(qg, gid);
+                emit(qg, gid, d);
             }
         });
     }
@@ -185,7 +206,7 @@ impl<P: PointSet> CoverTree<P> {
         mut emit: F,
     ) where
         M: Metric<P>,
-        F: FnMut(usize, u32),
+        F: FnMut(usize, u32, f64),
     {
         let n = queries.len();
         if pool.threads() <= 1 || n <= PAR_QUERY_CHUNK {
@@ -206,15 +227,15 @@ impl<P: PointSet> CoverTree<P> {
                 let lo = (base + w) * PAR_QUERY_CHUNK;
                 let hi = (lo + PAR_QUERY_CHUNK).min(n);
                 let sub = queries.slice(lo, hi);
-                let mut out: Vec<(u32, u32)> = Vec::new();
-                self.query_batch(metric, &sub, eps, |qi, gid| {
-                    out.push(((lo + qi) as u32, gid));
+                let mut out: Vec<(u32, u32, f64)> = Vec::new();
+                self.query_batch(metric, &sub, eps, |qi, gid, d| {
+                    out.push(((lo + qi) as u32, gid, d));
                 });
                 out
             });
             for part in parts {
-                for (q, gid) in part {
-                    emit(q as usize, gid);
+                for (q, gid, d) in part {
+                    emit(q as usize, gid, d);
                 }
             }
             first += count;
@@ -222,20 +243,20 @@ impl<P: PointSet> CoverTree<P> {
     }
 
     /// Parallel [`CoverTree::eps_self_join`] on `pool` — the identical
-    /// edge set (a one-thread pool reproduces the sequential join
+    /// weighted edge set (a one-thread pool reproduces the sequential join
     /// verbatim; larger pools shard the query side).
     pub fn eps_self_join_par<M, F>(&self, metric: &M, eps: f64, pool: &crate::util::Pool, mut emit: F)
     where
         M: Metric<P>,
-        F: FnMut(u32, u32),
+        F: FnMut(u32, u32, f64),
     {
         if pool.threads() <= 1 {
             return self.eps_self_join(metric, eps, emit);
         }
-        self.query_batch_par(metric, &self.points, eps, pool, |qi, gid| {
+        self.query_batch_par(metric, &self.points, eps, pool, |qi, gid, d| {
             let qg = self.ids[qi];
             if qg < gid {
-                emit(qg, gid);
+                emit(qg, gid, d);
             }
         });
     }
@@ -291,6 +312,27 @@ mod tests {
     }
 
     #[test]
+    fn weighted_query_reports_exact_distances() {
+        let pts = random_dense(63, 200, 5);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
+        let queries = random_dense(64, 15, 5);
+        for qi in 0..queries.len() {
+            let mut got: Vec<(u32, f64)> = Vec::new();
+            t.query_weighted(&Euclidean, queries.row(qi), 1.0, &mut got);
+            got.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            for &(gid, d) in &got {
+                assert_eq!(
+                    d,
+                    Euclidean.dist(queries.row(qi), pts.row(gid as usize)),
+                    "qi={qi} gid={gid}"
+                );
+            }
+            let ids: Vec<u32> = got.iter().map(|&(g, _)| g).collect();
+            assert_eq!(ids, brute(&pts, &Euclidean, queries.row(qi), 1.0), "qi={qi}");
+        }
+    }
+
+    #[test]
     fn query_matches_brute_force_hamming() {
         let mut rng = Rng::new(52);
         let mut codes = HammingCodes::new(128);
@@ -314,34 +356,36 @@ mod tests {
         let queries = random_dense(54, 40, 3);
         let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
         let eps = 1.0;
-        let mut batch: Vec<Vec<u32>> = vec![Vec::new(); queries.len()];
-        t.query_batch(&Euclidean, &queries, eps, |q, id| batch[q].push(id));
+        let mut batch: Vec<Vec<(u32, f64)>> = vec![Vec::new(); queries.len()];
+        t.query_batch(&Euclidean, &queries, eps, |q, id, d| batch[q].push((id, d)));
         for (qi, row) in batch.iter_mut().enumerate() {
-            row.sort_unstable();
-            let mut single = t.query_vec(&Euclidean, queries.row(qi), eps);
-            single.sort_unstable();
-            assert_eq!(*row, single, "qi={qi}");
+            row.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            let mut single: Vec<(u32, f64)> = Vec::new();
+            t.query_weighted(&Euclidean, queries.row(qi), eps, &mut single);
+            single.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            assert_eq!(*row, single, "qi={qi} (ids and distances)");
         }
     }
 
     #[test]
-    fn self_join_matches_all_pairs() {
+    fn self_join_matches_all_pairs_with_weights() {
         let pts = random_dense(55, 120, 3);
         let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
         let eps = 1.2;
-        let mut got: Vec<(u32, u32)> = Vec::new();
-        t.eps_self_join(&Euclidean, eps, |a, b| got.push((a, b)));
-        got.sort_unstable();
-        got.dedup();
+        let mut got: Vec<(u32, u32, f64)> = Vec::new();
+        t.eps_self_join(&Euclidean, eps, |a, b, d| got.push((a, b, d)));
+        got.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        got.dedup_by_key(|e| (e.0, e.1));
         let mut want = Vec::new();
         for i in 0..pts.len() {
             for j in i + 1..pts.len() {
-                if Euclidean.dist_ij(&pts, i, j) <= eps {
-                    want.push((i as u32, j as u32));
+                let d = Euclidean.dist_ij(&pts, i, j);
+                if d <= eps {
+                    want.push((i as u32, j as u32, d));
                 }
             }
         }
-        assert_eq!(got, want);
+        assert_eq!(got, want, "edge set and exact weights");
     }
 
     #[test]
@@ -378,7 +422,7 @@ mod tests {
         let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
         let counted = Counted::new(Euclidean);
         let mut pairs = 0u64;
-        t.query_batch(&counted, &pts, 0.5, |_, _| pairs += 1);
+        t.query_batch(&counted, &pts, 0.5, |_, _, _| pairs += 1);
         // Re-run with an instrumented count of visited (node, query) pairs:
         // by construction the counted calls exclude every nested child, so
         // they must undercut a same-shape traversal that recomputes them.
@@ -408,17 +452,19 @@ mod tests {
         let queries = random_dense(61, 2500, 3);
         let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
         let eps = 0.6;
-        let mut seq: Vec<(u32, u32)> = Vec::new();
-        t.query_batch(&Euclidean, &queries, eps, |q, id| seq.push((q as u32, id)));
+        let mut seq: Vec<(u32, u32, u64)> = Vec::new();
+        t.query_batch(&Euclidean, &queries, eps, |q, id, d| {
+            seq.push((q as u32, id, d.to_bits()));
+        });
         seq.sort_unstable();
         for threads in [1usize, 2, 4, 8] {
             let pool = crate::util::Pool::new(threads);
-            let mut par: Vec<(u32, u32)> = Vec::new();
-            t.query_batch_par(&Euclidean, &queries, eps, &pool, |q, id| {
-                par.push((q as u32, id));
+            let mut par: Vec<(u32, u32, u64)> = Vec::new();
+            t.query_batch_par(&Euclidean, &queries, eps, &pool, |q, id, d| {
+                par.push((q as u32, id, d.to_bits()));
             });
             par.sort_unstable();
-            assert_eq!(seq, par, "threads={threads}");
+            assert_eq!(seq, par, "threads={threads} (incl. distance bits)");
         }
     }
 
@@ -427,13 +473,13 @@ mod tests {
         let pts = random_dense(62, 1500, 3);
         let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
         let eps = 0.4;
-        let mut seq: Vec<(u32, u32)> = Vec::new();
-        t.eps_self_join(&Euclidean, eps, |a, b| seq.push((a, b)));
+        let mut seq: Vec<(u32, u32, u64)> = Vec::new();
+        t.eps_self_join(&Euclidean, eps, |a, b, d| seq.push((a, b, d.to_bits())));
         seq.sort_unstable();
         for threads in [2usize, 5] {
             let pool = crate::util::Pool::new(threads);
-            let mut par: Vec<(u32, u32)> = Vec::new();
-            t.eps_self_join_par(&Euclidean, eps, &pool, |a, b| par.push((a, b)));
+            let mut par: Vec<(u32, u32, u64)> = Vec::new();
+            t.eps_self_join_par(&Euclidean, eps, &pool, |a, b, d| par.push((a, b, d.to_bits())));
             par.sort_unstable();
             assert_eq!(seq, par, "threads={threads}");
         }
@@ -445,7 +491,7 @@ mod tests {
         let t = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
         let empty = DenseMatrix::new(2);
         let mut called = false;
-        t.query_batch(&Euclidean, &empty, 1.0, |_, _| called = true);
+        t.query_batch(&Euclidean, &empty, 1.0, |_, _, _| called = true);
         assert!(!called);
     }
 

@@ -4,21 +4,29 @@
 //!
 //! The corpus is block-partitioned across the simulated ranks and each
 //! rank builds a cover tree over its block; the query batch is broadcast
-//! and every rank reports its local hits. This is the paper's distributed
-//! query pattern with the "queries" side degenerate (no self-join).
+//! and every rank reports its local hits — with their distances, which
+//! become edge weights of the bipartite [`NearGraph`]. This is the paper's
+//! distributed query pattern with the "queries" side degenerate (no
+//! self-join).
 
 use super::{RankReport, RunConfig};
 use crate::comm;
 use crate::covertree::{BuildParams, CoverTree};
+use crate::graph::{NearGraph, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
 use crate::util::block_partition;
 
-/// Result of a bipartite join: `(query index, corpus vertex id)` pairs.
+/// Result of a bipartite join.
 #[derive(Clone, Debug)]
 pub struct BipartiteResult {
     /// Sorted, deduplicated `(query, corpus)` hit pairs.
     pub pairs: Vec<(u32, u32)>,
+    /// Distances aligned with `pairs`.
+    pub dists: Vec<f32>,
+    /// The join as a weighted bipartite graph: vertices `0..nq` are the
+    /// queries, `nq..nq + nc` the corpus points.
+    pub graph: NearGraph,
     /// Simulated job makespan.
     pub makespan: f64,
     /// Per-rank reports, indexed by rank.
@@ -35,11 +43,12 @@ pub fn run_bipartite_join<P: PointSet, M: Metric<P>>(
     cfg: &RunConfig,
 ) -> BipartiteResult {
     let p = cfg.ranks.max(1);
+    let nq = queries.len();
     let outputs = comm::run_world(p, cfg.cost, |c| {
-        let mut pairs: Vec<(u32, u32)> = Vec::new();
+        let mut hits: Vec<(u32, u32, f64)> = Vec::new();
         let n = corpus.len();
         if n == 0 || queries.is_empty() {
-            return pairs;
+            return hits;
         }
         c.set_phase("tree");
         let (off, len) = block_partition(n, p, c.rank());
@@ -49,19 +58,29 @@ pub fn run_bipartite_join<P: PointSet, M: Metric<P>>(
         c.set_phase("query");
         let qbytes = if c.rank() == 0 { queries.to_bytes() } else { Vec::new() };
         let q = P::from_bytes(&c.bcast(0, qbytes));
-        tree.query_batch(&metric, &q, eps, |qi, gid| pairs.push((qi as u32, gid)));
-        pairs
+        tree.query_batch(&metric, &q, eps, |qi, gid, d| hits.push((qi as u32, gid, d)));
+        hits
     });
     let makespan = comm::makespan(&outputs);
-    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let mut hits: Vec<(u32, u32, f64)> = Vec::new();
     let mut ranks = Vec::with_capacity(outputs.len());
     for o in outputs {
-        pairs.extend(o.result);
+        hits.extend(o.result);
         ranks.push(RankReport { rank: o.rank, virtual_time: o.virtual_time, stats: o.stats });
     }
-    pairs.sort_unstable();
-    pairs.dedup();
-    BipartiteResult { pairs, makespan, ranks }
+    hits.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)).then(a.2.total_cmp(&b.2)));
+    hits.dedup_by_key(|h| (h.0, h.1));
+    let mut pairs = Vec::with_capacity(hits.len());
+    let mut dists = Vec::with_capacity(hits.len());
+    let mut weighted = WeightedEdgeList::with_capacity(hits.len());
+    for &(qi, cid, d) in &hits {
+        pairs.push((qi, cid));
+        dists.push(d as f32);
+        // Corpus ids shift past the query block in the bipartite graph.
+        weighted.push(qi, nq as u32 + cid, d);
+    }
+    let graph = weighted.into_near_graph(nq + corpus.len());
+    BipartiteResult { pairs, dists, graph, makespan, ranks }
 }
 
 #[cfg(test)]
@@ -90,6 +109,23 @@ mod tests {
             let cfg = RunConfig { ranks, ..Default::default() };
             let got = run_bipartite_join(&corpus, &queries, Euclidean, eps, &cfg);
             assert_eq!(got.pairs, want, "ranks={ranks}");
+            // Weights are the exact pair distances.
+            for (&(qi, ci), &d) in got.pairs.iter().zip(&got.dists) {
+                let exact = Euclidean.dist_between(&queries, qi as usize, &corpus, ci as usize);
+                assert_eq!(d, exact as f32, "({qi},{ci})");
+            }
+            // The bipartite graph has a vertex per query + corpus point and
+            // an edge per hit.
+            assert_eq!(got.graph.num_vertices(), queries.len() + corpus.len());
+            assert_eq!(got.graph.num_edges(), want.len());
+            // Query vertex adjacency mirrors the pair list (shifted ids).
+            let q0_hits: Vec<u32> = got
+                .pairs
+                .iter()
+                .filter(|&&(q, _)| q == 0)
+                .map(|&(_, c)| c + queries.len() as u32)
+                .collect();
+            assert_eq!(got.graph.neighbors(0), &q0_hits[..], "ranks={ranks}");
         }
     }
 
@@ -99,7 +135,11 @@ mod tests {
         let corpus = synthetic::uniform(&mut rng, 30, 2, 1.0);
         let empty = crate::points::DenseMatrix::new(2);
         let cfg = RunConfig { ranks: 3, ..Default::default() };
-        assert!(run_bipartite_join(&corpus, &empty, Euclidean, 1.0, &cfg).pairs.is_empty());
-        assert!(run_bipartite_join(&empty, &corpus, Euclidean, 1.0, &cfg).pairs.is_empty());
+        let a = run_bipartite_join(&corpus, &empty, Euclidean, 1.0, &cfg);
+        assert!(a.pairs.is_empty());
+        assert_eq!(a.graph.num_vertices(), corpus.len());
+        let b = run_bipartite_join(&empty, &corpus, Euclidean, 1.0, &cfg);
+        assert!(b.pairs.is_empty());
+        assert_eq!(b.graph.num_vertices(), corpus.len());
     }
 }

@@ -1,15 +1,22 @@
-//! The wire format of the distributed algorithms: a batch of points plus
-//! the per-point metadata the landmark algorithms need (global ids, Voronoi
-//! cell ids, distance to the nearest center `d(p, C)`).
+//! The wire formats of the distributed algorithms: a batch of points plus
+//! the per-point metadata the landmark algorithms need ([`Bundle`]: global
+//! ids, Voronoi cell ids, distance to the nearest center `d(p, C)`), and a
+//! batch of weighted edges ([`EdgeBundle`]: the graph-side payload, e.g. a
+//! gathered partial result).
 //!
-//! Layout (little-endian, see `tests/properties.rs` for the pinned
-//! roundtrip): a u64 byte-length prefix followed by the `PointSet`
+//! [`Bundle`] layout (little-endian, see `tests/properties.rs` for the
+//! pinned roundtrip): a u64 byte-length prefix followed by the `PointSet`
 //! serialization, then three length-prefixed arrays (`gids` as u32,
 //! `cells` as u32, `dpc` as f64). `cells`/`dpc` may be empty — point blocks
 //! moving through the systolic ring and ghost bundles carry only what their
 //! receiver needs.
+//!
+//! Both decoders are length-checked ([`Bundle::try_from_bytes`],
+//! [`EdgeBundle::from_bytes`]): truncated or odd-length input yields a
+//! typed [`WireError`], never a blind slice panic.
 
-use crate::points::{get_u64, put_u64, PointSet};
+use crate::graph::WeightedEdgeList;
+use crate::points::{put_u64, try_get_u64, try_take, PointSet, WireError};
 
 /// A batch of points with optional per-point metadata, movable between
 /// ranks through the simulated MPI layer.
@@ -90,31 +97,80 @@ impl<P: PointSet> Bundle<P> {
         buf
     }
 
-    /// Deserialize from `to_bytes` output.
-    pub fn from_bytes(bytes: &[u8]) -> Self {
+    /// Length-checked deserialization from [`Bundle::to_bytes`] output.
+    pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
         let mut off = 0usize;
-        let pn = get_u64(bytes, &mut off) as usize;
-        let pts = P::from_bytes(&bytes[off..off + pn]);
-        off += pn;
-        let ng = get_u64(bytes, &mut off) as usize;
-        let mut gids = Vec::with_capacity(ng);
-        for _ in 0..ng {
-            gids.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-            off += 4;
+        let pn = try_get_u64(bytes, &mut off, "bundle point-bytes length")? as usize;
+        let pts = P::from_bytes(try_take(bytes, &mut off, pn, "bundle point payload")?);
+        let ng = try_get_u64(bytes, &mut off, "bundle gid count")? as usize;
+        let gbytes = try_take(bytes, &mut off, ng.saturating_mul(4), "bundle gids")?;
+        let gids: Vec<u32> =
+            gbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let nc = try_get_u64(bytes, &mut off, "bundle cell count")? as usize;
+        let cbytes = try_take(bytes, &mut off, nc.saturating_mul(4), "bundle cells")?;
+        let cells: Vec<u32> =
+            cbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let nd = try_get_u64(bytes, &mut off, "bundle dpc count")? as usize;
+        let dbytes = try_take(bytes, &mut off, nd.saturating_mul(8), "bundle dpc")?;
+        let dpc: Vec<f64> =
+            dbytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after bundle payload" });
         }
-        let nc = get_u64(bytes, &mut off) as usize;
-        let mut cells = Vec::with_capacity(nc);
-        for _ in 0..nc {
-            cells.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-            off += 4;
+        if pts.len() != gids.len()
+            || (!cells.is_empty() && cells.len() != gids.len())
+            || (!dpc.is_empty() && dpc.len() != gids.len())
+        {
+            return Err(WireError::Corrupt { what: "bundle array lengths disagree" });
         }
-        let nd = get_u64(bytes, &mut off) as usize;
-        let mut dpc = Vec::with_capacity(nd);
-        for _ in 0..nd {
-            dpc.push(f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()));
-            off += 8;
+        Ok(Bundle { pts, gids, cells, dpc })
+    }
+
+    /// Deserialize from [`Bundle::to_bytes`] output, panicking (with the
+    /// decode diagnostic) on malformed bytes — the in-process simulated
+    /// MPI layer only ever hands back bytes it was given, so a failure
+    /// here is a bug, not an input error.
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        match Self::try_from_bytes(bytes) {
+            Ok(b) => b,
+            Err(e) => panic!("bundle decode failed: {e}"),
         }
-        Bundle { pts, gids, cells, dpc }
+    }
+}
+
+/// A batch of weighted edges on the wire: the graph-side counterpart of
+/// [`Bundle`], wrapping the canonical [`WeightedEdgeList`] encoding with
+/// the sender's rank so gathered partial results stay attributable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EdgeBundle {
+    /// Rank that produced these edges.
+    pub source: u32,
+    /// The weighted edges.
+    pub edges: WeightedEdgeList,
+}
+
+impl EdgeBundle {
+    /// Serialize for the comm layer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.edges.to_bytes();
+        let mut buf = Vec::with_capacity(12 + payload.len());
+        buf.extend_from_slice(&self.source.to_le_bytes());
+        put_u64(&mut buf, payload.len() as u64);
+        buf.extend_from_slice(&payload);
+        buf
+    }
+
+    /// Length-checked inverse of [`EdgeBundle::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        let src = try_take(bytes, &mut off, 4, "edge-bundle source rank")?;
+        let source = u32::from_le_bytes(src.try_into().unwrap());
+        let pn = try_get_u64(bytes, &mut off, "edge-bundle payload length")? as usize;
+        let payload = try_take(bytes, &mut off, pn, "edge-bundle payload")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after edge bundle" });
+        }
+        Ok(EdgeBundle { source, edges: WeightedEdgeList::from_bytes(payload)? })
     }
 }
 
@@ -209,6 +265,52 @@ mod tests {
         acc.append(&b.select(&[1]));
         assert_eq!(acc.len(), 3);
         assert_eq!(acc.gids, vec![30, 10, 20]);
+    }
+
+    #[test]
+    fn malformed_bundle_bytes_are_typed_errors() {
+        use crate::points::WireError;
+        let good = sample().to_bytes();
+        // Truncation anywhere in the framing or arrays is reported, not
+        // panicked. (Cuts inside the point payload are caught by the
+        // byte-length prefix check before `P::from_bytes` runs.)
+        for cut in [0usize, 4, 8, good.len() / 2, good.len() - 1] {
+            let r: Result<Bundle<DenseMatrix>, _> = Bundle::try_from_bytes(&good[..cut]);
+            assert!(r.is_err(), "cut={cut} decoded");
+        }
+        // Trailing garbage is rejected.
+        let mut padded = good.clone();
+        padded.push(7);
+        assert!(matches!(
+            Bundle::<DenseMatrix>::try_from_bytes(&padded),
+            Err(WireError::Corrupt { .. })
+        ));
+        // A huge declared array length must not allocate/panic.
+        let ppay = DenseMatrix::new(2).to_bytes();
+        let mut huge = Vec::new();
+        crate::points::put_u64(&mut huge, ppay.len() as u64);
+        huge.extend_from_slice(&ppay);
+        crate::points::put_u64(&mut huge, u64::MAX); // absurd gid count
+        assert!(matches!(
+            Bundle::<DenseMatrix>::try_from_bytes(&huge),
+            Err(WireError::Truncated { .. })
+        ));
+        // Round trip still OK.
+        let b: Bundle<DenseMatrix> = Bundle::try_from_bytes(&good).unwrap();
+        assert_eq!(b.gids, sample().gids);
+    }
+
+    #[test]
+    fn edge_bundle_roundtrip_and_truncation() {
+        let mut edges = crate::graph::WeightedEdgeList::new();
+        edges.push(3, 9, 0.5);
+        edges.push(1, 2, 1.25);
+        let eb = EdgeBundle { source: 7, edges };
+        let bytes = eb.to_bytes();
+        assert_eq!(EdgeBundle::from_bytes(&bytes).unwrap(), eb);
+        for cut in 0..bytes.len() {
+            assert!(EdgeBundle::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

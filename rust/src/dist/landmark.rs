@@ -31,7 +31,7 @@
 use super::{AssignStrategy, Bundle, CenterStrategy, GhostMode, RunConfig};
 use crate::comm::Comm;
 use crate::covertree::{BuildParams, CoverTree};
-use crate::graph::EdgeList;
+use crate::graph::{GraphSink, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
 use crate::util::{block_partition, Pool, Rng};
@@ -55,8 +55,8 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     eps: f64,
     cfg: &RunConfig,
     ring: bool,
-) -> EdgeList {
-    let mut edges = EdgeList::new();
+) -> WeightedEdgeList {
+    let mut edges = WeightedEdgeList::new();
     let n = pts.len();
     if n == 0 {
         return edges;
@@ -148,7 +148,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
         CoverTree::build_with_ids_par(home.pts.clone(), home.gids.clone(), metric, &params, &pool);
     // One tree per rank covers every intra-rank pair (same or different
     // cell) in a single self-join.
-    tree.eps_self_join_par(metric, eps, &pool, |a, b| edges.push(a, b));
+    tree.eps_self_join_par(metric, eps, &pool, |a, b, d| edges.accept(a, b, d));
     comm.charge_child_cpu(pool.drain_cpu());
 
     // ------------------------------------------------------------------
@@ -191,8 +191,8 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
             .collect();
         for b in &comm.alltoallv(bufs) {
             let ghosts: Bundle<P> = Bundle::from_bytes(b);
-            tree.query_batch_par(metric, &ghosts.pts, eps, &pool, |qi, gid| {
-                edges.push(ghosts.gids[qi], gid);
+            tree.query_batch_par(metric, &ghosts.pts, eps, &pool, |qi, gid, d| {
+                edges.accept(ghosts.gids[qi], gid, d);
             });
         }
         comm.charge_child_cpu(pool.drain_cpu());
@@ -249,7 +249,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
 
 /// Filter a visiting ghost bundle down to the points relevant to this
 /// rank's cells (the receiver side of the Lemma-1 rule) and query them
-/// against the home tree.
+/// against the home tree, feeding weighted edges into the sink.
 #[allow(clippy::too_many_arguments)]
 fn ghost_ring_query<P: PointSet, M: Metric<P>>(
     tree: &CoverTree<P>,
@@ -260,7 +260,7 @@ fn ghost_ring_query<P: PointSet, M: Metric<P>>(
     my_cells: &[usize],
     ghost: GhostMode,
     pool: &Pool,
-    edges: &mut EdgeList,
+    edges: &mut dyn GraphSink,
 ) {
     if tree.num_points() == 0 || visiting.is_empty() || my_cells.is_empty() {
         return;
@@ -280,8 +280,8 @@ fn ghost_ring_query<P: PointSet, M: Metric<P>>(
         return;
     }
     let sub = visiting.select(&keep);
-    tree.query_batch_par(metric, &sub.pts, eps, pool, |qi, gid| {
-        edges.push(sub.gids[qi], gid);
+    tree.query_batch_par(metric, &sub.pts, eps, pool, |qi, gid, d| {
+        edges.accept(sub.gids[qi], gid, d);
     });
 }
 

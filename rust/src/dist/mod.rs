@@ -3,10 +3,13 @@
 //!
 //! [`run_epsilon_graph`] is the crate's front door: it launches one
 //! simulated MPI rank per thread on the [`crate::comm`] runtime, runs the
-//! selected [`Algorithm`] as an SPMD program, merges the per-rank edge
-//! lists into the canonical ε-graph and reports the virtual makespan plus
-//! per-rank, per-phase breakdowns (`partition` / `tree` / `ghost` for the
-//! landmark algorithms — the paper's Figures 3–5 view).
+//! selected [`Algorithm`] as an SPMD program, merges the per-rank
+//! **weighted** edge lists (every accept flows through a
+//! [`crate::graph::GraphSink`] with its distance — the edge weight) into
+//! the canonical weighted ε-graph ([`crate::graph::NearGraph`]) and
+//! reports the virtual makespan plus per-rank, per-phase breakdowns
+//! (`partition` / `tree` / `ghost` for the landmark algorithms — the
+//! paper's Figures 3–5 view).
 //!
 //! The driver is generic over any `PointSet × Metric` pair — dense vectors,
 //! bit-packed Hamming codes and byte strings all run through the same code
@@ -22,10 +25,10 @@ mod landmark;
 mod systolic;
 
 pub use bipartite::{run_bipartite_join, BipartiteResult};
-pub use bundle::Bundle;
+pub use bundle::{Bundle, EdgeBundle};
 
 use crate::comm::{self, CommStats, CostModel};
-use crate::graph::{Csr, EdgeList};
+use crate::graph::{EdgeList, NearGraph, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
 
@@ -177,10 +180,13 @@ pub struct RankReport {
 /// Result of a distributed ε-graph construction.
 #[derive(Clone, Debug)]
 pub struct RunResult {
-    /// The canonical (sorted, deduplicated) undirected edge set.
+    /// The canonical (sorted, deduplicated) undirected edge set — the
+    /// unweighted projection of `weighted`.
     pub edges: EdgeList,
-    /// The same graph in CSR form.
-    pub graph: Csr,
+    /// The canonical weighted edge set (each edge with its distance).
+    pub weighted: WeightedEdgeList,
+    /// The same graph in weighted CSR form.
+    pub graph: NearGraph,
     /// Simulated job makespan: the maximum rank virtual time.
     pub makespan: f64,
     /// Per-rank reports, indexed by rank.
@@ -200,21 +206,32 @@ pub fn run_epsilon_graph<P: PointSet, M: Metric<P>>(
     cfg: &RunConfig,
 ) -> RunResult {
     let p = cfg.ranks.max(1);
-    let outputs = comm::run_world(p, cfg.cost, |c| match cfg.algorithm {
-        Algorithm::SystolicRing => systolic::run(c, pts, &metric, eps, cfg),
-        Algorithm::LandmarkColl => landmark::run(c, pts, &metric, eps, cfg, false),
-        Algorithm::LandmarkRing => landmark::run(c, pts, &metric, eps, cfg, true),
+    let outputs = comm::run_world(p, cfg.cost, |c| {
+        let edges = match cfg.algorithm {
+            Algorithm::SystolicRing => systolic::run(c, pts, &metric, eps, cfg),
+            Algorithm::LandmarkColl => landmark::run(c, pts, &metric, eps, cfg, false),
+            Algorithm::LandmarkRing => landmark::run(c, pts, &metric, eps, cfg, true),
+        };
+        // Hand the partial result back through the weighted-edge wire
+        // format — the same bytes a real MPI gather of per-rank results
+        // would move (result collection itself stays outside the α-β
+        // charge, as before).
+        EdgeBundle { source: c.rank() as u32, edges }.to_bytes()
     });
     let makespan = comm::makespan(&outputs);
-    let mut edges = EdgeList::new();
+    let mut weighted = WeightedEdgeList::new();
     let mut ranks = Vec::with_capacity(outputs.len());
     for o in outputs {
-        edges.merge(&o.result);
+        let bundle = EdgeBundle::from_bytes(&o.result).expect("per-rank edge bundle decodes");
+        debug_assert_eq!(bundle.source as usize, o.rank);
+        weighted.merge(&bundle.edges);
         ranks.push(RankReport { rank: o.rank, virtual_time: o.virtual_time, stats: o.stats });
     }
+    weighted.canonicalize();
+    let mut edges = weighted.unweighted();
     edges.canonicalize();
-    let graph = edges.clone().into_csr(pts.len());
-    RunResult { edges, graph, makespan, ranks }
+    let graph = weighted.clone().into_near_graph(pts.len());
+    RunResult { edges, weighted, graph, makespan, ranks }
 }
 
 #[cfg(test)]
@@ -321,6 +338,30 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn weighted_result_matches_brute_force_weights() {
+        let mut rng = Rng::new(604);
+        let pts = synthetic::gaussian_mixture(&mut rng, 90, 3, 3, 0.2);
+        let want = crate::baseline::brute_force_weighted(&pts, &Euclidean, 0.35);
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
+            let got = run_epsilon_graph(&pts, Euclidean, 0.35, &cfg);
+            crate::graph::assert_same_weighted_graph(
+                got.weighted.clone(),
+                want.clone(),
+                crate::graph::WEIGHT_TOL,
+                algorithm.name(),
+            );
+            // The CSR projection is bit-identical to the unweighted path.
+            assert_eq!(
+                got.graph.clone().into_unweighted(),
+                got.edges.clone().into_csr(pts.len()),
+                "{}",
+                algorithm.name()
+            );
         }
     }
 

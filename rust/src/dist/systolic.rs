@@ -17,7 +17,7 @@
 use super::{Bundle, RunConfig};
 use crate::comm::Comm;
 use crate::covertree::{BuildParams, CoverTree};
-use crate::graph::EdgeList;
+use crate::graph::{GraphSink, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
 use crate::util::{block_partition, Pool};
@@ -31,8 +31,8 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     metric: &M,
     eps: f64,
     cfg: &RunConfig,
-) -> EdgeList {
-    let mut edges = EdgeList::new();
+) -> WeightedEdgeList {
+    let mut edges = WeightedEdgeList::new();
     let n = pts.len();
     if n == 0 {
         return edges;
@@ -54,7 +54,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
 
     comm.set_phase("ring");
     if p == 1 {
-        tree.eps_self_join_par(metric, eps, &pool, |a, b| edges.push(a, b));
+        tree.eps_self_join_par(metric, eps, &pool, |a, b, d| edges.accept(a, b, d));
         comm.charge_child_cpu(pool.drain_cpu());
         return edges;
     }
@@ -68,7 +68,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
                 if s == 1 {
                     // First transfer window: the block in hand is our own —
                     // run the intra-block self-join.
-                    tree.eps_self_join_par(metric, eps, &pool, |a, b| edges.push(a, b));
+                    tree.eps_self_join_par(metric, eps, &pool, |a, b, d| edges.accept(a, b, d));
                 } else {
                     cross_query(&tree, metric, eps, &visiting, &pool, &mut edges);
                 }
@@ -83,17 +83,18 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     edges
 }
 
-/// Emit every (visiting, local) pair within `eps`, canonically ordered.
+/// Emit every (visiting, local) pair within `eps` — with its distance —
+/// into the sink.
 fn cross_query<P: PointSet, M: Metric<P>>(
     tree: &CoverTree<P>,
     metric: &M,
     eps: f64,
     visiting: &Bundle<P>,
     pool: &Pool,
-    edges: &mut EdgeList,
+    sink: &mut dyn GraphSink,
 ) {
-    tree.query_batch_par(metric, &visiting.pts, eps, pool, |qi, gid| {
-        edges.push(visiting.gids[qi], gid);
+    tree.query_batch_par(metric, &visiting.pts, eps, pool, |qi, gid, d| {
+        sink.accept(visiting.gids[qi], gid, d);
     });
 }
 

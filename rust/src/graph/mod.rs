@@ -1,7 +1,20 @@
-//! ε-graph edge containers: distributed edge lists, dedup/merge into CSR,
+//! ε-graph containers: distributed edge lists, dedup/merge into CSR,
 //! degree statistics (the "Avg. neighbors" column of Table I), and graph
 //! equality used by the correctness suite (every distributed algorithm must
 //! reproduce the brute-force edge set exactly).
+//!
+//! The weighted layer lives here too: [`WeightedEdgeList`] accumulates
+//! `(u, v, d(u, v))` triples behind the [`GraphSink`] trait and
+//! canonicalizes into a [`NearGraph`] — the CSR-with-distances result type
+//! every construction path now returns (see `weighted.rs`).
+
+mod weighted;
+
+pub use weighted::{
+    assert_same_weighted_graph, GraphSink, NearGraph, WeightedEdgeList, WEIGHT_TOL,
+};
+
+pub use crate::points::WireError;
 
 /// An accumulating set of undirected edges over vertex ids `0..n`.
 ///
@@ -67,17 +80,22 @@ impl EdgeList {
         buf
     }
 
-    pub fn from_bytes(bytes: &[u8]) -> Self {
-        let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
-        let mut edges = Vec::with_capacity(n);
-        let mut off = 8;
-        for _ in 0..n {
-            let u = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
-            let v = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
-            edges.push((u, v));
-            off += 8;
+    /// Length-checked inverse of [`EdgeList::to_bytes`]; trailing garbage
+    /// after the declared edge records is rejected.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        let n = crate::points::try_get_u64(bytes, &mut off, "edge count")? as usize;
+        let payload = crate::points::try_take(bytes, &mut off, n.saturating_mul(8), "edge records")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after edge records" });
         }
-        EdgeList { edges }
+        let mut edges = Vec::with_capacity(n);
+        for rec in payload.chunks_exact(8) {
+            let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+            let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+            edges.push((u, v));
+        }
+        Ok(EdgeList { edges })
     }
 
     /// Convert into a CSR adjacency structure over `n` vertices
@@ -113,12 +131,13 @@ impl EdgeList {
     }
 }
 
-/// Compressed-sparse-row undirected graph.
+/// Compressed-sparse-row undirected graph (unweighted; the weighted
+/// variant is [`NearGraph`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
-    offsets: Vec<usize>,
-    neighbors: Vec<u32>,
-    num_edges: usize,
+    pub(crate) offsets: Vec<usize>,
+    pub(crate) neighbors: Vec<u32>,
+    pub(crate) num_edges: usize,
 }
 
 impl Csr {
@@ -268,8 +287,36 @@ mod tests {
     #[test]
     fn serialization_roundtrip() {
         let e = sample();
-        let e2 = EdgeList::from_bytes(&e.to_bytes());
+        let e2 = EdgeList::from_bytes(&e.to_bytes()).unwrap();
         assert_eq!(e.edges(), e2.edges());
+    }
+
+    #[test]
+    fn malformed_bytes_rejected_not_panicked() {
+        let good = sample().to_bytes();
+        // Every proper prefix is truncated somewhere: header, or records.
+        for cut in 0..good.len() {
+            assert!(
+                matches!(EdgeList::from_bytes(&good[..cut]), Err(WireError::Truncated { .. })),
+                "cut={cut} should be truncated"
+            );
+        }
+        // Trailing garbage after the declared records.
+        let mut padded = good.clone();
+        padded.extend_from_slice(&[0xAB; 3]);
+        assert!(matches!(
+            EdgeList::from_bytes(&padded),
+            Err(WireError::Corrupt { .. })
+        ));
+        // A length prefix far beyond the buffer must not allocate/panic.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            EdgeList::from_bytes(&huge),
+            Err(WireError::Truncated { .. })
+        ));
+        // The full buffer still decodes.
+        assert!(EdgeList::from_bytes(&good).is_ok());
     }
 
     #[test]

@@ -1,0 +1,626 @@
+//! Weighted ε-graph containers: the [`GraphSink`] emission trait, the
+//! [`WeightedEdgeList`] accumulator and the [`NearGraph`] result type
+//! (CSR offsets + neighbor ids + a parallel `f32` distance array).
+//!
+//! Downstream analyses (DBSCAN border assignment, Vietoris–Rips filtration
+//! values, UMAP-style embeddings) need the edge *distances*, which the
+//! construction algorithms compute at every accept anyway; this layer keeps
+//! them instead of dropping them at the hot path.
+//!
+//! **Weight canonicalization.** A duplicated edge (each cross-rank pair is
+//! discovered twice, once from each side) may carry two slightly different
+//! distance evaluations when the two discoveries took different kernels.
+//! [`WeightedEdgeList::canonicalize`] therefore orders duplicates by
+//! `(u, v, weight_bits)` and keeps the first — i.e. the *minimum* weight —
+//! which is order-independent, so the canonical weighted graph is
+//! deterministic regardless of rank count, thread count or merge order.
+//! (`f32::to_bits` is monotonic on the non-negative weights a metric can
+//! produce, so the bit order is the numeric order.)
+//!
+//! **Weight tolerance.** Every emitter reports the scalar metric's `f64`
+//! distance (matmul-form kernels re-evaluate accepted pairs exactly — see
+//! `metric::engine::euclidean_leaf_filter`), narrowed to `f32` only at
+//! storage. Cross-backend comparisons therefore agree to f32 rounding;
+//! [`WEIGHT_TOL`] (1e-5 relative) allows ~100× headroom over the 2⁻²⁴
+//! narrowing error while staying far below any meaningful ε scale.
+
+use super::{Csr, EdgeList};
+use crate::points::{put_u64, try_get_u64, try_take, WireError};
+
+/// Stated tolerance for weight comparisons across construction paths
+/// (relative, via `|a − b| ≤ tol · (1 + max(a, b))`). See the module docs
+/// for the rationale.
+pub const WEIGHT_TOL: f32 = 1e-5;
+
+/// Anything that accepts weighted undirected edges — the emission interface
+/// the construction algorithms write to instead of bare `EdgeList::push`.
+pub trait GraphSink {
+    /// Accept the undirected edge `{u, v}` with distance `w`. Implementors
+    /// must tolerate duplicates and either orientation; self-loops are
+    /// dropped.
+    fn accept(&mut self, u: u32, v: u32, w: f64);
+}
+
+impl GraphSink for EdgeList {
+    #[inline]
+    fn accept(&mut self, u: u32, v: u32, _w: f64) {
+        self.push(u, v);
+    }
+}
+
+impl GraphSink for WeightedEdgeList {
+    #[inline]
+    fn accept(&mut self, u: u32, v: u32, w: f64) {
+        self.push(u, v, w);
+    }
+}
+
+/// An accumulating set of weighted undirected edges over vertex ids `0..n`.
+///
+/// Mirrors [`EdgeList`]: edges are stored canonically as `(min, max, w)`
+/// with self-loops rejected; duplicates are allowed during accumulation and
+/// removed (keeping the minimum weight) by
+/// [`WeightedEdgeList::canonicalize`] / [`WeightedEdgeList::into_near_graph`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WeightedEdgeList {
+    edges: Vec<(u32, u32, f32)>,
+}
+
+impl WeightedEdgeList {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        WeightedEdgeList { edges: Vec::with_capacity(cap) }
+    }
+
+    /// Add an undirected edge with weight `w`; self-loops are ignored and
+    /// negative weights (which no metric can produce) clamp to zero.
+    #[inline]
+    pub fn push(&mut self, u: u32, v: u32, w: f64) {
+        if u == v {
+            return;
+        }
+        let w = w.max(0.0) as f32;
+        self.edges.push(if u < v { (u, v, w) } else { (v, u, w) });
+    }
+
+    /// Number of stored (possibly duplicated) edge records.
+    pub fn raw_len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Append all edges of `other`.
+    pub fn merge(&mut self, other: &WeightedEdgeList) {
+        self.edges.extend_from_slice(&other.edges);
+    }
+
+    /// Sort by `(u, v, weight)` + dedup by `(u, v)` keeping the minimum
+    /// weight; afterwards the list is the canonical weighted edge set.
+    pub fn canonicalize(&mut self) {
+        self.edges.sort_unstable_by_key(|&(u, v, w)| (u, v, w.to_bits()));
+        self.edges.dedup_by_key(|e| (e.0, e.1));
+    }
+
+    /// Borrow the `(u, v, w)` triples (callers should canonicalize first).
+    pub fn edges(&self) -> &[(u32, u32, f32)] {
+        &self.edges
+    }
+
+    /// The unweighted projection as a fresh [`EdgeList`].
+    pub fn unweighted(&self) -> EdgeList {
+        let mut out = EdgeList::with_capacity(self.edges.len());
+        for &(u, v, _) in &self.edges {
+            out.push(u, v);
+        }
+        out
+    }
+
+    /// Serialize: the weighted-edge wire format (a u64 record count, then
+    /// `u: u32, v: u32, w: f32` triples, little-endian).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(8 + self.edges.len() * 12);
+        put_u64(&mut buf, self.edges.len() as u64);
+        for &(u, v, w) in &self.edges {
+            buf.extend_from_slice(&u.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Length-checked inverse of [`WeightedEdgeList::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        let n = try_get_u64(bytes, &mut off, "weighted edge count")? as usize;
+        let payload = try_take(bytes, &mut off, n.saturating_mul(12), "weighted edge records")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after weighted edges" });
+        }
+        let mut edges = Vec::with_capacity(n);
+        for rec in payload.chunks_exact(12) {
+            let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+            let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+            let w = f32::from_le_bytes(rec[8..12].try_into().unwrap());
+            if u == v || w.is_nan() || w < 0.0 {
+                return Err(WireError::Corrupt { what: "invalid weighted edge record" });
+            }
+            edges.push(if u < v { (u, v, w) } else { (v, u, w) });
+        }
+        Ok(WeightedEdgeList { edges })
+    }
+
+    /// Convert into a weighted CSR over `n` vertices (canonicalizes first).
+    pub fn into_near_graph(mut self, n: usize) -> NearGraph {
+        self.canonicalize();
+        let mut degree = vec![0u32; n];
+        for &(u, v, _) in &self.edges {
+            assert!((v as usize) < n, "edge endpoint {v} out of range {n}");
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &d in &degree {
+            acc += d as usize;
+            offsets.push(acc);
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0u32; acc];
+        let mut dists = vec![0.0f32; acc];
+        // Lexicographic edge order fills every adjacency row in ascending
+        // neighbor order (for row r the smaller neighbors arrive from
+        // `(x, r)` records, which sort before `(r, y)` ones), so no
+        // per-row sort is needed — and `dists` stays aligned for free.
+        for &(u, v, w) in &self.edges {
+            neighbors[cursor[u as usize]] = v;
+            dists[cursor[u as usize]] = w;
+            cursor[u as usize] += 1;
+            neighbors[cursor[v as usize]] = u;
+            dists[cursor[v as usize]] = w;
+            cursor[v as usize] += 1;
+        }
+        if cfg!(debug_assertions) {
+            for r in 0..n {
+                debug_assert!(
+                    neighbors[offsets[r]..offsets[r + 1]].windows(2).all(|p| p[0] < p[1]),
+                    "row {r} not sorted"
+                );
+            }
+        }
+        NearGraph { offsets, neighbors, dists, num_edges: self.edges.len() }
+    }
+}
+
+/// Compressed-sparse-row undirected graph with per-edge distances — the
+/// weighted counterpart of [`Csr`] and the result type of every
+/// construction path (facade self-joins and the distributed driver alike).
+///
+/// Invariants (established by [`WeightedEdgeList::into_near_graph`] and
+/// checked by [`NearGraph::from_bytes`]):
+///
+/// * `offsets` is monotone with `offsets[0] == 0`;
+/// * every adjacency row is sorted by neighbor id, self-loop free;
+/// * `dists[k]` is the distance of the edge `{v, neighbors[k]}` and both
+///   directions of an edge carry the identical `f32` weight;
+/// * `2 · num_edges == neighbors.len()`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NearGraph {
+    offsets: Vec<usize>,
+    neighbors: Vec<u32>,
+    dists: Vec<f32>,
+    num_edges: usize,
+}
+
+/// Magic prefix of the binary `.csr` graph file format.
+const NEARGRAPH_MAGIC: &[u8; 8] = b"NGW-CSR1";
+
+impl NearGraph {
+    /// The empty graph over `n` vertices.
+    pub fn empty(n: usize) -> Self {
+        NearGraph { offsets: vec![0; n + 1], neighbors: Vec::new(), dists: Vec::new(), num_edges: 0 }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// Sorted neighbor list of vertex `v`.
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Distances aligned with [`NearGraph::neighbors`].
+    pub fn dists(&self, v: usize) -> &[f32] {
+        &self.dists[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// `(neighbor, distance)` pairs of vertex `v`, ascending by neighbor.
+    pub fn neighbor_entries(&self, v: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.neighbors(v).iter().copied().zip(self.dists(v).iter().copied())
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Average vertex degree — the "Avg. neighbors" column of Table I.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            return 0.0;
+        }
+        2.0 * self.num_edges() as f64 / self.num_vertices() as f64
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Degree statistics summary (the weighted counterpart of
+    /// [`super::DegreeStats::of`]).
+    pub fn degree_stats(&self) -> super::DegreeStats {
+        super::DegreeStats {
+            num_vertices: self.num_vertices(),
+            num_edges: self.num_edges(),
+            avg_degree: self.avg_degree(),
+            max_degree: self.max_degree(),
+        }
+    }
+
+    /// Canonical `(u, v, w)` triples with `u < v`, ascending by `(u, v)`.
+    pub fn edge_triples(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.num_vertices()).flat_map(move |u| {
+            self.neighbor_entries(u)
+                .filter(move |&(v, _)| v as usize > u)
+                .map(move |(v, w)| (u as u32, v, w))
+        })
+    }
+
+    /// Drop the distances, keeping the structure — bit-identical to the
+    /// [`Csr`] the pre-weighted pipeline produced from the same edge set.
+    pub fn into_unweighted(self) -> Csr {
+        Csr { offsets: self.offsets, neighbors: self.neighbors, num_edges: self.num_edges }
+    }
+
+    /// Connected components via BFS; returns (component id per vertex,
+    /// number of components).
+    pub fn components(&self) -> (Vec<usize>, usize) {
+        let n = self.num_vertices();
+        let mut comp = vec![usize::MAX; n];
+        let mut next = 0usize;
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..n {
+            if comp[s] != usize::MAX {
+                continue;
+            }
+            comp[s] = next;
+            queue.push_back(s);
+            while let Some(u) = queue.pop_front() {
+                for &v in self.neighbors(u) {
+                    if comp[v as usize] == usize::MAX {
+                        comp[v as usize] = next;
+                        queue.push_back(v as usize);
+                    }
+                }
+            }
+            next += 1;
+        }
+        (comp, next)
+    }
+
+    /// Serialize as the binary `.csr` graph file format: the magic prefix,
+    /// `n`, `num_edges`, `nnz` (all u64), then offsets (u64 each),
+    /// neighbor ids (u32 each) and distances (f32 each).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let n = self.num_vertices();
+        let nnz = self.neighbors.len();
+        let mut buf = Vec::with_capacity(40 + 8 * (n + 1) + 8 * nnz);
+        buf.extend_from_slice(NEARGRAPH_MAGIC);
+        put_u64(&mut buf, n as u64);
+        put_u64(&mut buf, self.num_edges as u64);
+        put_u64(&mut buf, nnz as u64);
+        for &o in &self.offsets {
+            put_u64(&mut buf, o as u64);
+        }
+        for &v in &self.neighbors {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for &d in &self.dists {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Length- and invariant-checked inverse of [`NearGraph::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        if try_take(bytes, &mut off, 8, "graph magic")? != NEARGRAPH_MAGIC {
+            return Err(WireError::Corrupt { what: "bad graph magic" });
+        }
+        let n = try_get_u64(bytes, &mut off, "vertex count")? as usize;
+        let num_edges = try_get_u64(bytes, &mut off, "edge count")? as usize;
+        let nnz = try_get_u64(bytes, &mut off, "adjacency length")? as usize;
+        if nnz != num_edges.saturating_mul(2) {
+            return Err(WireError::Corrupt { what: "adjacency length != 2 * edge count" });
+        }
+        let off_bytes =
+            try_take(bytes, &mut off, (n.saturating_add(1)).saturating_mul(8), "offsets")?;
+        let nbr_bytes = try_take(bytes, &mut off, nnz.saturating_mul(4), "neighbor ids")?;
+        let dist_bytes = try_take(bytes, &mut off, nnz.saturating_mul(4), "distances")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after graph payload" });
+        }
+        let offsets: Vec<usize> = off_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        if offsets.first() != Some(&0)
+            || offsets.last() != Some(&nnz)
+            || offsets.windows(2).any(|p| p[0] > p[1])
+        {
+            return Err(WireError::Corrupt { what: "offsets not monotone over [0, nnz]" });
+        }
+        let neighbors: Vec<u32> =
+            nbr_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        if neighbors.iter().any(|&v| v as usize >= n) {
+            return Err(WireError::Corrupt { what: "neighbor id out of range" });
+        }
+        let dists: Vec<f32> =
+            dist_bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        if dists.iter().any(|d| d.is_nan() || *d < 0.0) {
+            return Err(WireError::Corrupt { what: "negative or NaN distance" });
+        }
+        // Structural invariants (the struct docs promise these hold for
+        // any decoded graph): sorted self-loop-free rows, and each edge
+        // present in both directions with the identical weight bits.
+        for v in 0..n {
+            let row = &neighbors[offsets[v]..offsets[v + 1]];
+            if row.windows(2).any(|p| p[0] >= p[1]) {
+                return Err(WireError::Corrupt { what: "adjacency row not strictly ascending" });
+            }
+            if row.binary_search(&(v as u32)).is_ok() {
+                return Err(WireError::Corrupt { what: "self-loop in adjacency" });
+            }
+        }
+        for v in 0..n {
+            for k in offsets[v]..offsets[v + 1] {
+                let u = neighbors[k] as usize;
+                let urow = &neighbors[offsets[u]..offsets[u + 1]];
+                match urow.binary_search(&(v as u32)) {
+                    Ok(pos) if dists[offsets[u] + pos].to_bits() == dists[k].to_bits() => {}
+                    _ => {
+                        return Err(WireError::Corrupt {
+                            what: "asymmetric adjacency or unpaired weight",
+                        })
+                    }
+                }
+            }
+        }
+        Ok(NearGraph { offsets, neighbors, dists, num_edges })
+    }
+}
+
+/// Assert two weighted edge lists describe the same graph: identical edge
+/// sets (exactly) and weights equal within `tol` (relative, per
+/// [`WEIGHT_TOL`]'s convention). Canonicalizes both sides first.
+pub fn assert_same_weighted_graph(
+    mut got: WeightedEdgeList,
+    mut want: WeightedEdgeList,
+    tol: f32,
+    ctx: &str,
+) {
+    got.canonicalize();
+    want.canonicalize();
+    super::assert_same_graph(got.unweighted(), want.unweighted(), ctx);
+    for (&(u, v, gw), &(_, _, ww)) in got.edges().iter().zip(want.edges()) {
+        let bound = tol * (1.0 + gw.max(ww));
+        assert!(
+            (gw - ww).abs() <= bound,
+            "{ctx}: weight mismatch on edge ({u},{v}): got {gw} want {ww} (tol {bound})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WeightedEdgeList {
+        let mut e = WeightedEdgeList::new();
+        e.push(1, 0, 0.5); // reversed orientation normalizes
+        e.push(0, 1, 0.25); // duplicate with a smaller weight — kept
+        e.push(2, 3, 1.5);
+        e.push(1, 2, 0.75);
+        e.push(4, 4, 9.0); // self loop dropped
+        e
+    }
+
+    #[test]
+    fn canonicalize_keeps_min_weight() {
+        let mut e = sample();
+        e.canonicalize();
+        assert_eq!(e.edges(), &[(0, 1, 0.25), (1, 2, 0.75), (2, 3, 1.5)]);
+        // Merge order must not matter.
+        let mut a = WeightedEdgeList::new();
+        a.push(0, 1, 0.25);
+        let mut b = WeightedEdgeList::new();
+        b.push(1, 0, 0.5);
+        b.merge(&a);
+        b.canonicalize();
+        assert_eq!(b.edges(), &[(0, 1, 0.25)]);
+    }
+
+    #[test]
+    fn unweighted_projection_matches_edge_list() {
+        let mut e = sample();
+        e.canonicalize();
+        let mut u = e.unweighted();
+        u.canonicalize();
+        assert_eq!(u.edges(), &[(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn near_graph_structure_and_weights() {
+        let g = sample().into_near_graph(5);
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.dists(1), &[0.25, 0.75]);
+        assert_eq!(g.neighbors(4), &[] as &[u32]);
+        assert_eq!(g.degree(2), 2);
+        assert!((g.avg_degree() - 1.2).abs() < 1e-12);
+        assert_eq!(g.max_degree(), 2);
+        let triples: Vec<_> = g.edge_triples().collect();
+        assert_eq!(triples, vec![(0, 1, 0.25), (1, 2, 0.75), (2, 3, 1.5)]);
+        let stats = g.degree_stats();
+        assert_eq!(stats.num_edges, 3);
+        assert_eq!(stats.max_degree, 2);
+    }
+
+    #[test]
+    fn unweighted_csr_is_bit_identical() {
+        let weighted = sample().into_near_graph(5).into_unweighted();
+        let mut plain = EdgeList::new();
+        plain.push(0, 1);
+        plain.push(1, 2);
+        plain.push(2, 3);
+        assert_eq!(weighted, plain.into_csr(5));
+    }
+
+    #[test]
+    fn components_found() {
+        let mut e = WeightedEdgeList::new();
+        e.push(0, 1, 0.1);
+        e.push(2, 3, 0.2);
+        let g = e.into_near_graph(5);
+        let (comp, n) = g.components();
+        assert_eq!(n, 3);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+        assert_ne!(comp[4], comp[0]);
+    }
+
+    #[test]
+    fn edge_list_wire_roundtrip_and_truncation() {
+        let e = sample();
+        let bytes = e.to_bytes();
+        let e2 = WeightedEdgeList::from_bytes(&bytes).unwrap();
+        assert_eq!(e.edges(), e2.edges());
+        for cut in 0..bytes.len() {
+            assert!(
+                matches!(
+                    WeightedEdgeList::from_bytes(&bytes[..cut]),
+                    Err(WireError::Truncated { .. })
+                ),
+                "cut={cut}"
+            );
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(matches!(WeightedEdgeList::from_bytes(&padded), Err(WireError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn wire_rejects_invalid_records() {
+        // A self-loop record is structurally invalid on the wire.
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 1);
+        buf.extend_from_slice(&7u32.to_le_bytes());
+        buf.extend_from_slice(&7u32.to_le_bytes());
+        buf.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(matches!(WeightedEdgeList::from_bytes(&buf), Err(WireError::Corrupt { .. })));
+        // Negative weight.
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 1);
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(-1.0f32).to_le_bytes());
+        assert!(matches!(WeightedEdgeList::from_bytes(&buf), Err(WireError::Corrupt { .. })));
+    }
+
+    #[test]
+    fn graph_wire_roundtrip_and_validation() {
+        let g = sample().into_near_graph(5);
+        let bytes = g.to_bytes();
+        assert_eq!(NearGraph::from_bytes(&bytes).unwrap(), g);
+        for cut in 0..bytes.len() {
+            assert!(
+                NearGraph::from_bytes(&bytes[..cut]).is_err(),
+                "cut={cut} should fail to decode"
+            );
+        }
+        // Corrupt the magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(NearGraph::from_bytes(&bad), Err(WireError::Corrupt { .. })));
+        // Tamper one stored distance: the mirrored direction keeps the old
+        // weight, so the paired-weight invariant must catch it.
+        let mut tampered = bytes.clone();
+        let last = tampered.len() - 1;
+        tampered[last] ^= 0x3F;
+        assert!(matches!(NearGraph::from_bytes(&tampered), Err(WireError::Corrupt { .. })));
+        // Empty graphs round-trip.
+        let empty = NearGraph::empty(2);
+        let round = NearGraph::from_bytes(&empty.to_bytes()).unwrap();
+        assert_eq!(round.num_vertices(), 2);
+        assert_eq!(round.num_edges(), 0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = WeightedEdgeList::new().into_near_graph(0);
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.avg_degree(), 0.0);
+        assert_eq!(g.max_degree(), 0);
+        assert_eq!(g.edge_triples().count(), 0);
+    }
+
+    #[test]
+    fn sink_trait_feeds_both_containers() {
+        fn emit(sink: &mut dyn GraphSink) {
+            sink.accept(3, 1, 0.5);
+            sink.accept(1, 3, 0.5);
+            sink.accept(2, 2, 0.0);
+        }
+        let mut w = WeightedEdgeList::new();
+        emit(&mut w);
+        w.canonicalize();
+        assert_eq!(w.edges(), &[(1, 3, 0.5)]);
+        let mut u = EdgeList::new();
+        emit(&mut u);
+        u.canonicalize();
+        assert_eq!(u.edges(), &[(1, 3)]);
+    }
+
+    #[test]
+    fn weighted_assert_passes_within_tol() {
+        let mut a = WeightedEdgeList::new();
+        a.push(0, 1, 1.0);
+        let mut b = WeightedEdgeList::new();
+        b.push(0, 1, 1.0 + 1e-7);
+        assert_same_weighted_graph(a, b, WEIGHT_TOL, "close weights");
+    }
+
+    #[test]
+    #[should_panic(expected = "weight mismatch")]
+    fn weighted_assert_catches_weight_drift() {
+        let mut a = WeightedEdgeList::new();
+        a.push(0, 1, 1.0);
+        let mut b = WeightedEdgeList::new();
+        b.push(0, 1, 1.1);
+        assert_same_weighted_graph(a, b, WEIGHT_TOL, "drift");
+    }
+}

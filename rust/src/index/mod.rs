@@ -1,0 +1,669 @@
+//! One query facade over every search structure: the object-safe
+//! [`NearIndex`] trait, the [`IndexKind`] selector and the
+//! [`build_index`] constructor.
+//!
+//! The four in-crate search structures historically exposed four bespoke
+//! APIs (`query`/`query_batch(emit)`/`eps_self_join(emit)`/`knn`/
+//! `self_join -> EdgeList`), all of which dropped the pair distance at the
+//! hot path. The facade unifies them behind one trait whose every result
+//! carries the distance — the edge weight of the [`crate::graph::NearGraph`]
+//! downstream analyses consume — and makes each structure an
+//! interchangeable backend:
+//!
+//! | [`IndexKind`]      | structure                              | scope |
+//! |--------------------|----------------------------------------|-------|
+//! | `BruteForce`       | linear scan (the trait's default impls)| any metric |
+//! | `CoverTree`        | batch cover tree (Algorithms 1–3)      | any metric |
+//! | `InsertCoverTree`  | BKL-2006 insertion cover tree          | any metric |
+//! | `Snn`              | sort-based SNN (Chen & Güttel 2024)    | dense × Euclidean only |
+//!
+//! Contracts every backend upholds (enforced by
+//! `tests/index_equivalence.rs`):
+//!
+//! * **identical edge sets** — accept/reject decisions equal the scalar
+//!   [`Metric::dist`] comparison bit-for-bit, whatever kernel screens the
+//!   candidates;
+//! * **identical weights** — the reported distance is exactly what
+//!   `Metric::dist` returns for that pair (see
+//!   [`crate::graph::WEIGHT_TOL`] for the storage tolerance);
+//! * **identity ids** — a facade index is built over the full point set,
+//!   so reported ids are positions in the input.
+//!
+//! The pooled `*_par` variants are default-implemented on
+//! [`crate::util::Pool`] with the fixed-chunk shard-and-replay scheme of
+//! the cover tree's parallel queries, so any backend — including a future
+//! one-file plug-in — gets deterministic parallel batching for free.
+
+use crate::baseline::{Snn, SnnParams};
+use crate::covertree::{BuildParams, CoverTree, InsertCoverTree};
+use crate::graph::{GraphSink, NearGraph, WeightedEdgeList};
+use crate::metric::{Euclidean, Metric};
+use crate::points::{DenseMatrix, PointSet};
+use crate::util::Pool;
+use std::any::Any;
+
+/// The search structure behind a [`NearIndex`] — mirrors
+/// [`crate::dist::Algorithm`] for config/CLI selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    /// Linear scan over every point — the reference backend (and the
+    /// trait's default implementations, verbatim).
+    BruteForce,
+    /// The paper's batch-built cover tree (Algorithms 1–3).
+    CoverTree,
+    /// The classic consecutive-insertion cover tree (BKL 2006).
+    InsertCoverTree,
+    /// Sort-based SNN (Chen & Güttel 2024); dense Euclidean data only.
+    Snn,
+}
+
+impl IndexKind {
+    /// All kinds, reference first.
+    pub const ALL: [IndexKind; 4] =
+        [IndexKind::BruteForce, IndexKind::CoverTree, IndexKind::InsertCoverTree, IndexKind::Snn];
+
+    /// The CLI / config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexKind::BruteForce => "brute-force",
+            IndexKind::CoverTree => "cover-tree",
+            IndexKind::InsertCoverTree => "insert-cover-tree",
+            IndexKind::Snn => "snn",
+        }
+    }
+
+    /// Inverse of [`IndexKind::name`].
+    pub fn parse(s: &str) -> Option<IndexKind> {
+        match s {
+            "brute-force" => Some(IndexKind::BruteForce),
+            "cover-tree" => Some(IndexKind::CoverTree),
+            "insert-cover-tree" => Some(IndexKind::InsertCoverTree),
+            "snn" => Some(IndexKind::Snn),
+            _ => None,
+        }
+    }
+}
+
+/// Build-time parameters shared by every backend (each uses what applies).
+#[derive(Clone, Debug)]
+pub struct IndexParams {
+    /// Cover-tree leaf size ζ.
+    pub leaf_size: usize,
+    /// SNN power-iteration parameters.
+    pub snn: SnnParams,
+}
+
+impl Default for IndexParams {
+    fn default() -> Self {
+        IndexParams { leaf_size: 8, snn: SnnParams::default() }
+    }
+}
+
+/// Typed failure of [`build_index`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IndexError {
+    /// The backend cannot serve this point-set/metric combination (e.g.
+    /// SNN outside dense Euclidean data).
+    Unsupported {
+        kind: IndexKind,
+        /// `Metric::name` of the requested metric.
+        metric: &'static str,
+        /// What the backend requires instead.
+        requires: &'static str,
+    },
+}
+
+impl std::fmt::Display for IndexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IndexError::Unsupported { kind, metric, requires } => write!(
+                f,
+                "index backend {:?} does not support metric {metric:?}: requires {requires}",
+                kind.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IndexError {}
+
+/// Query-shard size of the pooled default implementations (fixed, so the
+/// chunk decomposition — and the replayed emission order — is identical at
+/// every thread count).
+const PAR_CHUNK: usize = 1024;
+
+/// A built near-neighbor index over an owned point set with identity ids.
+///
+/// Object-safe: `Box<dyn NearIndex<P, M>>` is the facade's working type,
+/// which is why the batch emitters take `&mut dyn FnMut` / `&mut dyn
+/// GraphSink` rather than generic closures. Every method has a default
+/// implementation in terms of [`NearIndex::points`] /
+/// [`NearIndex::metric`] — a linear scan, which **is** the brute-force
+/// reference backend — so a new backend only overrides its fast paths.
+pub trait NearIndex<P: PointSet, M: Metric<P>>: Send + Sync {
+    /// Which backend this is.
+    fn kind(&self) -> IndexKind;
+
+    /// The indexed points (input order; point index == reported id).
+    fn points(&self) -> &P;
+
+    /// The metric captured at build time.
+    fn metric(&self) -> &M;
+
+    /// Number of indexed points.
+    fn num_points(&self) -> usize {
+        self.points().len()
+    }
+
+    /// All indexed points within `eps` of `query`, as `(id, distance)`
+    /// pairs appended to `out` (order unspecified).
+    fn eps_query(&self, query: P::Point<'_>, eps: f64, out: &mut Vec<(u32, f64)>) {
+        let pts = self.points();
+        let metric = self.metric();
+        for i in 0..pts.len() {
+            let d = metric.dist(query, pts.point(i));
+            if d <= eps {
+                out.push((i as u32, d));
+            }
+        }
+    }
+
+    /// Batched [`NearIndex::eps_query`]: `emit(query_index, id, distance)`
+    /// once per result pair (pair order unspecified; pairs unique).
+    fn eps_batch(&self, queries: &P, eps: f64, emit: &mut dyn FnMut(u32, u32, f64)) {
+        let mut out = Vec::new();
+        for q in 0..queries.len() {
+            out.clear();
+            self.eps_query(queries.point(q), eps, &mut out);
+            for &(gid, d) in &out {
+                emit(q as u32, gid, d);
+            }
+        }
+    }
+
+    /// Weighted ε-self-join: every unordered pair of indexed points within
+    /// `eps`, fed to `sink` once per pair.
+    fn eps_self_join(&self, eps: f64, sink: &mut dyn GraphSink) {
+        self.eps_batch(self.points(), eps, &mut |q, gid, d| {
+            if q < gid {
+                sink.accept(q, gid, d);
+            }
+        });
+    }
+
+    /// The `k` nearest indexed points to `query`, as `(id, distance)`
+    /// ascending by `(distance, id)`. Fewer than `k` only when the index
+    /// holds fewer points; the query point is not excluded if indexed.
+    fn knn(&self, query: P::Point<'_>, k: usize) -> Vec<(u32, f64)> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let pts = self.points();
+        let metric = self.metric();
+        let mut all: Vec<(u32, f64)> =
+            (0..pts.len()).map(|i| (i as u32, metric.dist(query, pts.point(i)))).collect();
+        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all
+    }
+
+    /// [`NearIndex::knn`] for every point of `queries`, in query order.
+    fn knn_batch(&self, queries: &P, k: usize) -> Vec<Vec<(u32, f64)>> {
+        (0..queries.len()).map(|q| self.knn(queries.point(q), k)).collect()
+    }
+
+    /// Pooled [`NearIndex::eps_batch`]: fixed-size query shards
+    /// ([`PAR_CHUNK`]) on `pool`, per-shard buffers replayed in shard
+    /// order — the emitted multiset is identical at every pool size.
+    fn eps_batch_par(
+        &self,
+        queries: &P,
+        eps: f64,
+        pool: &Pool,
+        emit: &mut dyn FnMut(u32, u32, f64),
+    ) {
+        let n = queries.len();
+        if pool.threads() <= 1 || n <= PAR_CHUNK {
+            return self.eps_batch(queries, eps, emit);
+        }
+        // Bounded waves keep at most one wave of result buffers live (the
+        // same scheme as the cover tree's parallel batch).
+        let nparts = crate::util::div_ceil(n, PAR_CHUNK);
+        let wave = pool.threads() * 4;
+        let mut first = 0usize;
+        while first < nparts {
+            let count = wave.min(nparts - first);
+            let base = first;
+            let parts = pool.run_indexed(count, |w| {
+                let lo = (base + w) * PAR_CHUNK;
+                let hi = (lo + PAR_CHUNK).min(n);
+                let sub = queries.slice(lo, hi);
+                let mut out: Vec<(u32, u32, f64)> = Vec::new();
+                self.eps_batch(&sub, eps, &mut |qi, gid, d| {
+                    out.push((lo as u32 + qi, gid, d));
+                });
+                out
+            });
+            for part in parts {
+                for (q, gid, d) in part {
+                    emit(q, gid, d);
+                }
+            }
+            first += count;
+        }
+    }
+
+    /// Pooled [`NearIndex::eps_self_join`] — the identical weighted edge
+    /// set at every pool size. The sequential/small-input path delegates
+    /// to [`NearIndex::eps_self_join`] so a backend's specialized
+    /// self-join (e.g. SNN's forward-only sorted sweep) is what actually
+    /// runs there.
+    fn eps_self_join_par(&self, eps: f64, pool: &Pool, sink: &mut dyn GraphSink) {
+        if pool.threads() <= 1 || self.num_points() <= PAR_CHUNK {
+            return self.eps_self_join(eps, sink);
+        }
+        self.eps_batch_par(self.points(), eps, pool, &mut |q, gid, d| {
+            if q < gid {
+                sink.accept(q, gid, d);
+            }
+        });
+    }
+
+    /// Pooled [`NearIndex::knn_batch`], in query order at every pool size.
+    fn knn_batch_par(&self, queries: &P, k: usize, pool: &Pool) -> Vec<Vec<(u32, f64)>> {
+        let n = queries.len();
+        if pool.threads() <= 1 || n <= PAR_CHUNK {
+            return self.knn_batch(queries, k);
+        }
+        let nparts = crate::util::div_ceil(n, PAR_CHUNK);
+        let parts = pool.run_indexed(nparts, |w| {
+            let lo = w * PAR_CHUNK;
+            let hi = (lo + PAR_CHUNK).min(n);
+            self.knn_batch(&queries.slice(lo, hi), k)
+        });
+        parts.into_iter().flatten().collect()
+    }
+}
+
+/// The ε-graph of an index's points: pooled weighted self-join,
+/// canonicalized into a [`NearGraph`].
+pub fn epsilon_graph<P: PointSet, M: Metric<P>>(
+    index: &dyn NearIndex<P, M>,
+    eps: f64,
+    pool: &Pool,
+) -> NearGraph {
+    let mut sink = WeightedEdgeList::new();
+    index.eps_self_join_par(eps, pool, &mut sink);
+    sink.into_near_graph(index.num_points())
+}
+
+/// Linear-scan reference backend: the trait's default implementations,
+/// unmodified.
+pub struct BruteForceIndex<P: PointSet, M: Metric<P>> {
+    pts: P,
+    metric: M,
+}
+
+impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for BruteForceIndex<P, M> {
+    fn kind(&self) -> IndexKind {
+        IndexKind::BruteForce
+    }
+
+    fn points(&self) -> &P {
+        &self.pts
+    }
+
+    fn metric(&self) -> &M {
+        &self.metric
+    }
+}
+
+/// Batch cover tree behind the facade.
+pub struct CoverTreeIndex<P: PointSet, M: Metric<P>> {
+    tree: CoverTree<P>,
+    metric: M,
+}
+
+impl<P: PointSet, M: Metric<P>> CoverTreeIndex<P, M> {
+    /// The wrapped tree (for structure inspection / direct-path benches).
+    pub fn tree(&self) -> &CoverTree<P> {
+        &self.tree
+    }
+}
+
+impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for CoverTreeIndex<P, M> {
+    fn kind(&self) -> IndexKind {
+        IndexKind::CoverTree
+    }
+
+    fn points(&self) -> &P {
+        self.tree.points()
+    }
+
+    fn metric(&self) -> &M {
+        &self.metric
+    }
+
+    fn eps_query(&self, query: P::Point<'_>, eps: f64, out: &mut Vec<(u32, f64)>) {
+        self.tree.query_weighted(&self.metric, query, eps, out);
+    }
+
+    fn eps_batch(&self, queries: &P, eps: f64, emit: &mut dyn FnMut(u32, u32, f64)) {
+        self.tree.query_batch(&self.metric, queries, eps, |qi, gid, d| {
+            emit(qi as u32, gid, d);
+        });
+    }
+
+    fn eps_self_join(&self, eps: f64, sink: &mut dyn GraphSink) {
+        self.tree.eps_self_join(&self.metric, eps, |a, b, d| sink.accept(a, b, d));
+    }
+
+    fn knn(&self, query: P::Point<'_>, k: usize) -> Vec<(u32, f64)> {
+        self.tree.knn(&self.metric, query, k)
+    }
+
+    fn eps_batch_par(
+        &self,
+        queries: &P,
+        eps: f64,
+        pool: &Pool,
+        emit: &mut dyn FnMut(u32, u32, f64),
+    ) {
+        self.tree.query_batch_par(&self.metric, queries, eps, pool, |qi, gid, d| {
+            emit(qi as u32, gid, d);
+        });
+    }
+
+    fn eps_self_join_par(&self, eps: f64, pool: &Pool, sink: &mut dyn GraphSink) {
+        self.tree.eps_self_join_par(&self.metric, eps, pool, |a, b, d| sink.accept(a, b, d));
+    }
+}
+
+/// Insertion-built cover tree behind the facade. Only the single-point
+/// query is overridden — batching, the self-join and the pooled variants
+/// all come from the trait's defaults, which closes its historical parity
+/// gap with [`CoverTree`] without new traversal code.
+pub struct InsertCoverTreeIndex<P: PointSet, M: Metric<P>> {
+    tree: InsertCoverTree<P>,
+    metric: M,
+}
+
+impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for InsertCoverTreeIndex<P, M> {
+    fn kind(&self) -> IndexKind {
+        IndexKind::InsertCoverTree
+    }
+
+    fn points(&self) -> &P {
+        self.tree.points()
+    }
+
+    fn metric(&self) -> &M {
+        &self.metric
+    }
+
+    fn eps_query(&self, query: P::Point<'_>, eps: f64, out: &mut Vec<(u32, f64)>) {
+        self.tree.query_weighted(&self.metric, query, eps, out);
+    }
+}
+
+/// SNN behind the facade (dense Euclidean only; [`build_index`] rejects
+/// anything else with [`IndexError::Unsupported`]).
+pub struct SnnIndex {
+    snn: Snn,
+    /// Input-order copy (the SNN core keeps a score-sorted copy).
+    pts: DenseMatrix,
+    metric: Euclidean,
+}
+
+impl NearIndex<DenseMatrix, Euclidean> for SnnIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Snn
+    }
+
+    fn points(&self) -> &DenseMatrix {
+        &self.pts
+    }
+
+    fn metric(&self) -> &Euclidean {
+        &self.metric
+    }
+
+    fn eps_query(&self, query: &[f32], eps: f64, out: &mut Vec<(u32, f64)>) {
+        out.extend(self.snn.query_weighted(query, eps));
+    }
+
+    fn eps_self_join(&self, eps: f64, sink: &mut dyn GraphSink) {
+        self.snn.self_join_weighted(eps, |u, v, d| sink.accept(u, v, d));
+    }
+}
+
+/// Build the selected index over `pts` under `metric`.
+///
+/// Backends are single-threaded here; see [`build_index_par`] for the
+/// pool-accelerated cover-tree build.
+pub fn build_index<P: PointSet, M: Metric<P>>(
+    kind: IndexKind,
+    pts: &P,
+    metric: M,
+    params: &IndexParams,
+) -> Result<Box<dyn NearIndex<P, M>>, IndexError> {
+    build_impl(kind, pts, metric, params, None)
+}
+
+/// [`build_index`] with a hub-parallel cover-tree construction on `pool`
+/// (bit-identical structure to the sequential build; other backends build
+/// identically and ignore the pool).
+pub fn build_index_par<P: PointSet, M: Metric<P>>(
+    kind: IndexKind,
+    pts: &P,
+    metric: M,
+    params: &IndexParams,
+    pool: &Pool,
+) -> Result<Box<dyn NearIndex<P, M>>, IndexError> {
+    build_impl(kind, pts, metric, params, Some(pool))
+}
+
+fn build_impl<P: PointSet, M: Metric<P>>(
+    kind: IndexKind,
+    pts: &P,
+    metric: M,
+    params: &IndexParams,
+    pool: Option<&Pool>,
+) -> Result<Box<dyn NearIndex<P, M>>, IndexError> {
+    match kind {
+        IndexKind::BruteForce => Ok(Box::new(BruteForceIndex { pts: pts.clone(), metric })),
+        IndexKind::CoverTree => {
+            let build = BuildParams { leaf_size: params.leaf_size.max(1), root: 0 };
+            let tree = match pool {
+                Some(pool) => CoverTree::build_par(pts, &metric, &build, pool),
+                None => CoverTree::build(pts, &metric, &build),
+            };
+            Ok(Box::new(CoverTreeIndex { tree, metric }))
+        }
+        IndexKind::InsertCoverTree => {
+            let tree = InsertCoverTree::build(pts, &metric);
+            Ok(Box::new(InsertCoverTreeIndex { tree, metric }))
+        }
+        IndexKind::Snn => {
+            // SNN needs dense rows and Euclidean geometry; everything else
+            // gets a typed error instead of a panic. The downcast dance is
+            // how a generic signature meets a monomorphic backend: when the
+            // runtime types match, `Box<dyn NearIndex<DenseMatrix,
+            // Euclidean>>` IS `Box<dyn NearIndex<P, M>>`.
+            let (Some(dense), Some(_)) = (
+                (pts as &dyn Any).downcast_ref::<DenseMatrix>(),
+                (&metric as &dyn Any).downcast_ref::<Euclidean>(),
+            ) else {
+                return Err(IndexError::Unsupported {
+                    kind: IndexKind::Snn,
+                    metric: metric.name(),
+                    requires: "dense f32 rows under the Euclidean metric",
+                });
+            };
+            let idx: Box<dyn NearIndex<DenseMatrix, Euclidean>> = Box::new(SnnIndex {
+                snn: Snn::build(dense, &params.snn),
+                pts: dense.clone(),
+                metric: Euclidean,
+            });
+            let any_box: Box<dyn Any> = Box::new(idx);
+            Ok(*any_box
+                .downcast::<Box<dyn NearIndex<P, M>>>()
+                .expect("type ids matched the dense Euclidean case"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::metric::{Hamming, Levenshtein};
+    use crate::util::Rng;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in IndexKind::ALL {
+            assert_eq!(IndexKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(IndexKind::parse("quantum"), None);
+    }
+
+    #[test]
+    fn snn_unsupported_is_typed_not_panic() {
+        let mut rng = Rng::new(800);
+        let codes = synthetic::hamming_clusters(&mut rng, 30, 64, 2, 0.1);
+        let err = build_index(IndexKind::Snn, &codes, Hamming, &IndexParams::default())
+            .err()
+            .expect("hamming SNN must be rejected");
+        assert_eq!(
+            err,
+            IndexError::Unsupported {
+                kind: IndexKind::Snn,
+                metric: "hamming",
+                requires: "dense f32 rows under the Euclidean metric",
+            }
+        );
+        assert!(err.to_string().contains("snn"));
+
+        let reads = synthetic::reads(&mut rng, 20, 16, 4, 0.05);
+        assert!(build_index(IndexKind::Snn, &reads, Levenshtein, &IndexParams::default()).is_err());
+    }
+
+    #[test]
+    fn snn_supported_on_dense_euclidean() {
+        let mut rng = Rng::new(801);
+        let pts = synthetic::gaussian_mixture(&mut rng, 60, 4, 3, 0.2);
+        let idx = build_index(IndexKind::Snn, &pts, Euclidean, &IndexParams::default()).unwrap();
+        assert_eq!(idx.kind(), IndexKind::Snn);
+        assert_eq!(idx.num_points(), 60);
+        let mut out = Vec::new();
+        idx.eps_query(pts.row(0), 0.0, &mut out);
+        assert!(out.iter().any(|&(i, d)| i == 0 && d == 0.0));
+    }
+
+    #[test]
+    fn all_kinds_build_on_dense() {
+        let mut rng = Rng::new(802);
+        let pts = synthetic::gaussian_mixture(&mut rng, 50, 3, 3, 0.2);
+        for kind in IndexKind::ALL {
+            let idx = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+            assert_eq!(idx.kind(), kind);
+            assert_eq!(idx.num_points(), pts.len());
+        }
+    }
+
+    #[test]
+    fn facade_self_join_matches_brute_force_weighted() {
+        let mut rng = Rng::new(803);
+        let pts = synthetic::gaussian_mixture(&mut rng, 90, 4, 3, 0.2);
+        let eps = 0.4;
+        let want = crate::baseline::brute_force_weighted(&pts, &Euclidean, eps);
+        for kind in IndexKind::ALL {
+            let idx = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+            let mut got = WeightedEdgeList::new();
+            idx.eps_self_join(eps, &mut got);
+            crate::graph::assert_same_weighted_graph(
+                got,
+                want.clone(),
+                crate::graph::WEIGHT_TOL,
+                kind.name(),
+            );
+        }
+    }
+
+    #[test]
+    fn epsilon_graph_builds_near_graph() {
+        let mut rng = Rng::new(804);
+        let pts = synthetic::gaussian_mixture(&mut rng, 80, 3, 3, 0.2);
+        let idx = build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default())
+            .unwrap();
+        let pool = Pool::new(2);
+        let g = epsilon_graph(idx.as_ref(), 0.5, &pool);
+        assert_eq!(g.num_vertices(), 80);
+        let want = crate::baseline::brute_force_edges(&pts, &Euclidean, 0.5);
+        assert_eq!(g.num_edges(), want.edges().len());
+    }
+
+    #[test]
+    fn knn_default_matches_covertree_backend() {
+        let mut rng = Rng::new(805);
+        let pts = synthetic::gaussian_mixture(&mut rng, 120, 5, 4, 0.15);
+        let queries = synthetic::uniform(&mut rng, 10, 5, 1.0);
+        let brute =
+            build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let tree =
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+        for qi in 0..queries.len() {
+            let a = brute.knn(queries.row(qi), 7);
+            let b = tree.knn(queries.row(qi), 7);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.1, y.1, "distance mismatch at qi={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_defaults_match_sequential() {
+        let mut rng = Rng::new(806);
+        let pts = synthetic::gaussian_mixture(&mut rng, 1500, 3, 4, 0.1);
+        let eps = 0.25;
+        let idx =
+            build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let mut seq = WeightedEdgeList::new();
+        idx.eps_self_join(eps, &mut seq);
+        seq.canonicalize();
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads);
+            let mut par = WeightedEdgeList::new();
+            idx.eps_self_join_par(eps, &pool, &mut par);
+            par.canonicalize();
+            assert_eq!(seq, par, "threads={threads}");
+        }
+        // knn_batch_par in query order.
+        let k = 5;
+        let a = idx.knn_batch(&pts, k);
+        let pool = Pool::new(4);
+        let b = idx.knn_batch_par(&pts, k, &pool);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn empty_index_is_harmless() {
+        let empty = DenseMatrix::new(3);
+        for kind in IndexKind::ALL {
+            let idx = build_index(kind, &empty, Euclidean, &IndexParams::default()).unwrap();
+            assert_eq!(idx.num_points(), 0);
+            let mut out = Vec::new();
+            idx.eps_query(&[0.0, 0.0, 0.0], 1.0, &mut out);
+            assert!(out.is_empty());
+            assert!(idx.knn(&[0.0, 0.0, 0.0], 3).is_empty());
+            let mut sink = WeightedEdgeList::new();
+            idx.eps_self_join(1.0, &mut sink);
+            assert!(sink.is_empty());
+        }
+    }
+}

@@ -9,8 +9,12 @@
 //! the paper's contribution — live here:
 //!
 //! * [`covertree`] — shared-memory batch cover tree (Algorithms 1–3);
+//! * [`index`] — one query facade ([`index::NearIndex`]) over every search
+//!   structure (cover tree, insertion cover tree, SNN, brute force), every
+//!   result carrying its distance;
 //! * [`dist`] — the three distributed ε-graph algorithms
-//!   (`systolic-ring`, `landmark-coll`, `landmark-ring`; Algorithms 4–6);
+//!   (`systolic-ring`, `landmark-coll`, `landmark-ring`; Algorithms 4–6),
+//!   returning weighted [`graph::NearGraph`]s;
 //! * [`comm`] — simulated MPI runtime with an α-β communication cost model
 //!   (substitute for Perlmutter/Cray-MPICH; see DESIGN.md §3);
 //! * [`voronoi`] — landmark selection, distributed Voronoi diagrams and
@@ -18,16 +22,34 @@
 //! * [`baseline`] — brute force and SNN (Chen & Güttel 2024) comparators;
 //! * [`data`] — synthetic Table-I dataset analogs and fvecs/bvecs loaders.
 //!
-//! Quickstart (single process, all ranks simulated in threads):
+//! Quickstart — the distributed driver and the single-node index facade
+//! produce the same weighted ε-graph:
 //!
 //! ```
 //! use neargraph::prelude::*;
 //!
 //! let pts = neargraph::data::synthetic::gaussian_mixture(
 //!     &mut Rng::new(42), 500, 8, 4, 0.2);
+//!
+//! // Distributed: 4 simulated MPI ranks, weighted NearGraph result.
 //! let result = neargraph::dist::run_epsilon_graph(
 //!     &pts, Euclidean, 0.5, &RunConfig { ranks: 4, ..Default::default() });
 //! println!("edges: {}", result.graph.num_edges());
+//! let (v0, w0) = result.graph.neighbor_entries(0).next().unwrap_or((0, 0.0));
+//! println!("first edge of vertex 0: -> {v0} at distance {w0}");
+//!
+//! // Single node: any backend behind the same facade.
+//! let index = build_index(
+//!     IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+//! let graph = neargraph::index::epsilon_graph(index.as_ref(), 0.5, &Pool::new(2));
+//! assert_eq!(graph.num_edges(), result.graph.num_edges());
+//!
+//! // The facade also answers weighted point queries and k-NN.
+//! let mut hits = Vec::new();
+//! index.eps_query(pts.row(0), 0.5, &mut hits);
+//! let nearest = index.knn(pts.row(0), 4);
+//! assert_eq!(nearest[0].0, 0); // the point itself, at distance 0
+//! assert!(hits.len() >= 1);
 //! ```
 
 pub mod baseline;
@@ -39,6 +61,7 @@ pub mod covertree;
 pub mod data;
 pub mod dist;
 pub mod graph;
+pub mod index;
 pub mod metric;
 pub mod points;
 pub mod runtime;
@@ -52,7 +75,8 @@ pub mod prelude {
     pub use crate::dist::{
         Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig, RunResult,
     };
-    pub use crate::graph::{Csr, EdgeList};
+    pub use crate::graph::{Csr, EdgeList, GraphSink, NearGraph, WeightedEdgeList};
+    pub use crate::index::{build_index, IndexKind, IndexParams, NearIndex};
     pub use crate::metric::{
         Chebyshev, Cosine, Counted, Euclidean, Hamming, Levenshtein, Manhattan, Metric,
     };

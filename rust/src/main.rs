@@ -24,7 +24,7 @@ use neargraph::cli::Args;
 use neargraph::config::ExperimentConfig;
 use neargraph::data::registry::{DatasetSpec, TABLE1};
 use neargraph::dist::{run_epsilon_graph, Algorithm, RunConfig, RunResult};
-use neargraph::graph::DegreeStats;
+use neargraph::index::{build_index_par, epsilon_graph, IndexKind, IndexParams};
 use neargraph::metric::{Euclidean, Hamming};
 use neargraph::prelude::*;
 use neargraph::util::fmt_secs;
@@ -56,6 +56,9 @@ const USAGE: &str = "usage: neargraph <run|datasets|selfcheck> [flags]
     --eps <f>                    radius (omit to calibrate)
     --target-degree <f>          degree target for ε calibration
     --algorithm <name>           systolic-ring | landmark-coll | landmark-ring
+    --index <kind>               single-node run through the index facade:
+                                 brute-force | cover-tree | insert-cover-tree
+                                 | snn (overrides --algorithm/--ranks)
     --ranks <n>                  simulated MPI ranks
     --threads <n>                global intra-node thread budget, split
                                  across ranks (0 = single-threaded ranks)
@@ -64,7 +67,10 @@ const USAGE: &str = "usage: neargraph <run|datasets|selfcheck> [flags]
     --seed <n>                   RNG seed
     --verify                     also run brute force and compare
     --phases                     print the per-rank phase breakdown
-    --output <file>              write the edge list (u v per line)";
+    --output <file>              write the edge list (u v per line)
+    --out <file>                 write the weighted graph
+    --out-format <tsv|csr>       --out format: \"u v w\" lines (tsv, the
+                                 default) or binary CSR (csr)";
 
 fn fail(msg: &str) -> ! {
     eprintln!("error: {msg}");
@@ -130,10 +136,22 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         cfg.seed = v as u64;
         cfg.run.seed = v as u64;
     }
-    let verify = args.get_bool("verify")?;
-    let phases = args.get_bool("phases")?;
+    if let Some(k) = args.get("index") {
+        cfg.index =
+            Some(IndexKind::parse(k).ok_or_else(|| format!("unknown index kind {k:?}"))?);
+    }
+    let opts = OutputOpts {
+        verify: args.get_bool("verify")?,
+        phases: args.get_bool("phases")?,
+        output: args.get("output").map(str::to_string),
+        out: args.get("out").map(str::to_string),
+        format: match args.get_or("out-format", "tsv") {
+            "tsv" => GraphFormat::Tsv,
+            "csr" => GraphFormat::Csr,
+            other => return Err(format!("unknown --out-format {other:?} (tsv | csr)")),
+        },
+    };
     let fvecs = args.get("fvecs").map(str::to_string);
-    let output = args.get("output").map(str::to_string);
     args.reject_unknown()?;
 
     // Materialize the workload.
@@ -144,13 +162,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         )
         .map_err(|e| format!("{path}: {e}"))?;
         let eps = resolve_eps_dense(&pts, &cfg);
-        let res = run_epsilon_graph(&pts, Euclidean, eps, &cfg.run);
-        report(&cfg, eps, pts.len(), &res, phases);
-        write_output(output.as_deref(), &res)?;
-        if verify {
-            verify_against_brute(&pts, &Euclidean, eps, &res)?;
-        }
-        return Ok(());
+        return run_one(&pts, Euclidean, eps, &cfg, &opts);
     }
 
     let spec = DatasetSpec::by_name(&cfg.dataset)
@@ -164,22 +176,83 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     match workload {
         Workload::Dense { pts, .. } => {
             let eps = resolve_eps_dense(&pts, &cfg);
-            let res = run_epsilon_graph(&pts, Euclidean, eps, &cfg.run);
-            report(&cfg, eps, pts.len(), &res, phases);
-            write_output(output.as_deref(), &res)?;
-            if verify {
-                verify_against_brute(&pts, &Euclidean, eps, &res)?;
-            }
+            run_one(&pts, Euclidean, eps, &cfg, &opts)
         }
         Workload::Hamming { codes, .. } => {
             let eps = resolve_eps_hamming(&codes, &cfg);
-            let res = run_epsilon_graph(&codes, Hamming, eps, &cfg.run);
-            report(&cfg, eps, codes.len(), &res, phases);
-            write_output(output.as_deref(), &res)?;
-            if verify {
-                verify_against_brute(&codes, &Hamming, eps, &res)?;
-            }
+            run_one(&codes, Hamming, eps, &cfg, &opts)
         }
+    }
+}
+
+/// Output/verification options shared by every `run` path.
+struct OutputOpts {
+    verify: bool,
+    phases: bool,
+    /// Legacy unweighted edge-list writer (`u v` lines).
+    output: Option<String>,
+    /// Weighted graph writer.
+    out: Option<String>,
+    format: GraphFormat,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum GraphFormat {
+    Tsv,
+    Csr,
+}
+
+/// One experiment: distributed driver by default, or the single-node index
+/// facade when `--index` is set. Both produce a weighted [`NearGraph`] and
+/// share the writers and the brute-force verifier.
+fn run_one<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    eps: f64,
+    cfg: &ExperimentConfig,
+    opts: &OutputOpts,
+) -> Result<(), String> {
+    let graph = match cfg.index {
+        None => {
+            let res = run_epsilon_graph(pts, metric.clone(), eps, &cfg.run);
+            report(cfg, eps, &res, opts.phases);
+            res.graph
+        }
+        Some(kind) => {
+            let pool = Pool::new(cfg.run.threads.max(1));
+            let t0 = std::time::Instant::now();
+            let index = build_index_par(
+                kind,
+                pts,
+                metric.clone(),
+                &IndexParams { leaf_size: cfg.run.leaf_size.max(1), ..Default::default() },
+                &pool,
+            )
+            .map_err(|e| e.to_string())?;
+            let build_s = t0.elapsed().as_secs_f64();
+            let t1 = std::time::Instant::now();
+            let graph = epsilon_graph(index.as_ref(), eps, &pool);
+            let join_s = t1.elapsed().as_secs_f64();
+            let stats = graph.degree_stats();
+            println!("eps={eps:.6}");
+            println!(
+                "graph: {} vertices, {} edges, avg degree {:.2}, max degree {}",
+                stats.num_vertices, stats.num_edges, stats.avg_degree, stats.max_degree
+            );
+            println!(
+                "index facade: {} build {} + self-join {} on {} pool threads",
+                kind.name(),
+                fmt_secs(build_s),
+                fmt_secs(join_s),
+                pool.threads()
+            );
+            graph
+        }
+    };
+    write_output(opts.output.as_deref(), &graph)?;
+    write_graph(opts.out.as_deref(), opts.format, &graph)?;
+    if opts.verify {
+        verify_against_brute(pts, &metric, eps, &graph)?;
     }
     Ok(())
 }
@@ -200,8 +273,8 @@ fn resolve_eps_hamming(codes: &HammingCodes, cfg: &ExperimentConfig) -> f64 {
     neargraph::data::calibrate_eps(codes, &Hamming, cfg.target_degree, 50_000, &mut rng)
 }
 
-fn report(cfg: &ExperimentConfig, eps: f64, _n: usize, res: &RunResult, phases: bool) {
-    let stats = DegreeStats::of(&res.graph);
+fn report(cfg: &ExperimentConfig, eps: f64, res: &RunResult, phases: bool) {
+    let stats = res.graph.degree_stats();
     println!("eps={eps:.6}");
     println!(
         "graph: {} vertices, {} edges, avg degree {:.2}, max degree {}",
@@ -229,16 +302,38 @@ fn report(cfg: &ExperimentConfig, eps: f64, _n: usize, res: &RunResult, phases: 
     }
 }
 
-/// Write the canonical edge list as "u v" lines.
-fn write_output(path: Option<&str>, res: &RunResult) -> Result<(), String> {
+/// Write the canonical edge list as "u v" lines (the legacy `--output`
+/// format, unweighted).
+fn write_output(path: Option<&str>, graph: &NearGraph) -> Result<(), String> {
     let Some(path) = path else { return Ok(()) };
     use std::io::Write;
     let f = std::fs::File::create(path).map_err(|e| format!("{path}: {e}"))?;
     let mut w = std::io::BufWriter::new(f);
-    for &(u, v) in res.edges.edges() {
+    for (u, v, _) in graph.edge_triples() {
         writeln!(w, "{u} {v}").map_err(|e| format!("{path}: {e}"))?;
     }
-    println!("wrote {} edges to {path}", res.edges.edges().len());
+    println!("wrote {} edges to {path}", graph.num_edges());
+    Ok(())
+}
+
+/// Write the weighted graph: "u v w" lines (tsv) or the binary CSR file
+/// format (csr; see `graph::NearGraph::to_bytes`).
+fn write_graph(path: Option<&str>, format: GraphFormat, graph: &NearGraph) -> Result<(), String> {
+    let Some(path) = path else { return Ok(()) };
+    match format {
+        GraphFormat::Tsv => {
+            use std::io::Write;
+            let f = std::fs::File::create(path).map_err(|e| format!("{path}: {e}"))?;
+            let mut w = std::io::BufWriter::new(f);
+            for (u, v, d) in graph.edge_triples() {
+                writeln!(w, "{u}\t{v}\t{d}").map_err(|e| format!("{path}: {e}"))?;
+            }
+        }
+        GraphFormat::Csr => {
+            std::fs::write(path, graph.to_bytes()).map_err(|e| format!("{path}: {e}"))?;
+        }
+    }
+    println!("wrote weighted graph ({} edges) to {path}", graph.num_edges());
     Ok(())
 }
 
@@ -246,19 +341,16 @@ fn verify_against_brute<P: PointSet, M: Metric<P>>(
     pts: &P,
     metric: &M,
     eps: f64,
-    res: &RunResult,
+    graph: &NearGraph,
 ) -> Result<(), String> {
     println!("verifying against brute force...");
     let want = brute_force_edges(pts, metric, eps);
-    if res.edges.edges() == want.edges() {
+    let got: Vec<(u32, u32)> = graph.edge_triples().map(|(u, v, _)| (u, v)).collect();
+    if got == want.edges() {
         println!("VERIFIED: exact match ({} edges)", want.edges().len());
         Ok(())
     } else {
-        Err(format!(
-            "edge sets differ: got {} want {}",
-            res.edges.edges().len(),
-            want.edges().len()
-        ))
+        Err(format!("edge sets differ: got {} want {}", got.len(), want.edges().len()))
     }
 }
 

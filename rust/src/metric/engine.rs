@@ -124,13 +124,21 @@ pub fn tile_neighbors(tile: &[f32], nq: usize, nr: usize, eps: f64) -> Vec<(usiz
 /// the f32 accumulation error of both formulations plus the exact path's
 /// sqrt rounding with ≥ 20× margin over the worst case observed on random
 /// data across dims 1–960 and coordinate scales 0.01–255.
+///
+/// Accepted entries report the **exact** scalar distance (one `sq_dist`
+/// per emitted pair): the matmul form's cancellation error is relative to
+/// `‖q‖² + ‖r‖²`, which for near-duplicate points can dwarf d² itself, so
+/// reporting `√d²_matmul` would corrupt small edge weights. The extra
+/// evaluation is proportional to the *output* size (the graph's edges),
+/// not to the candidate count the filter screens — the kernel still skips
+/// the subtraction loop for every rejected candidate.
 pub fn euclidean_leaf_filter(
     queries: &DenseMatrix,
     active: &[(u32, f64)],
     refs: &DenseMatrix,
     j: usize,
     eps: f64,
-    yes: &mut dyn FnMut(u32),
+    yes: &mut dyn FnMut(u32, f64),
 ) {
     let rj = refs.row(j);
     let nj = refs.sq_norm(j);
@@ -141,17 +149,16 @@ pub fn euclidean_leaf_filter(
         let ni = queries.sq_norm(q as usize);
         let d2 = (ni + nj - 2.0 * super::euclidean::dot(row, rj)) as f64;
         let band = (ni + nj + 1.0) as f64 * dim_slack;
-        let pass = if d2 <= eps2 - band {
-            true
-        } else if d2 >= eps2 + band {
-            false
-        } else {
-            // Borderline: fall back to the exact per-pair decision so the
-            // kernel agrees with `Euclidean::dist` bit-for-bit.
-            (super::euclidean::sq_dist(row, rj).sqrt() as f64) <= eps
-        };
-        if pass {
-            yes(q);
+        if d2 >= eps2 + band {
+            continue; // clear reject — the only case that skips exact work
+        }
+        // Clear accept or borderline: one exact evaluation decides (for
+        // the borderline) and supplies the canonical edge weight (for
+        // both), keeping decisions AND weights identical to
+        // `Euclidean::dist` on every path.
+        let d = super::euclidean::sq_dist(row, rj).sqrt() as f64;
+        if d <= eps {
+            yes(q, d);
         }
     }
 }
@@ -238,12 +245,25 @@ mod tests {
             for eps in [0.0, 0.4 * scale as f64, 2.0 * scale as f64] {
                 for j in [0usize, 3, 60] {
                     let mut got = Vec::new();
-                    euclidean_leaf_filter(&pts, &active, &pts, j, eps, &mut |q| got.push(q));
+                    let mut dists = Vec::new();
+                    euclidean_leaf_filter(&pts, &active, &pts, j, eps, &mut |q, d| {
+                        got.push(q);
+                        dists.push(d);
+                    });
                     let want: Vec<u32> = (0..pts.len())
                         .filter(|&i| Euclidean.dist_ij(&pts, i, j) <= eps)
                         .map(|i| i as u32)
                         .collect();
                     assert_eq!(got, want, "dim={dim} scale={scale} eps={eps} j={j}");
+                    // The reported weight is the exact scalar distance,
+                    // bit-for-bit (not the matmul-form approximation).
+                    for (&q, &d) in got.iter().zip(&dists) {
+                        assert_eq!(
+                            d,
+                            Euclidean.dist_ij(&pts, q as usize, j),
+                            "dim={dim} eps={eps} j={j} q={q}"
+                        );
+                    }
                 }
             }
         }

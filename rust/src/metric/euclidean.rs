@@ -72,8 +72,9 @@ impl Metric<DenseMatrix> for Euclidean {
     }
 
     // Leaf blocks go through the norm-cached matmul-form kernel in the
-    // tile engine instead of per-pair `sq_dist` calls; decisions stay
-    // bit-identical to the default (guard-band recheck — see the kernel).
+    // tile engine instead of per-pair `sq_dist` calls; decisions and the
+    // reported distances stay bit-identical to the default (guard-band
+    // reject + exact evaluation on accept — see the kernel).
     fn leaf_filter(
         &self,
         queries: &DenseMatrix,
@@ -81,7 +82,7 @@ impl Metric<DenseMatrix> for Euclidean {
         refs: &DenseMatrix,
         j: usize,
         eps: f64,
-        yes: &mut dyn FnMut(u32),
+        yes: &mut dyn FnMut(u32, f64),
     ) {
         super::engine::euclidean_leaf_filter(queries, active, refs, j, eps, yes);
     }

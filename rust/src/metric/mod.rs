@@ -52,15 +52,16 @@ pub trait Metric<P: PointSet>: Clone + Send + Sync + 'static {
 
     /// Leaf-block filter used by the batched tree queries: for every
     /// `(q, _carried)` entry of `active` (in order), test
-    /// `d(queries[q], refs[j]) ≤ eps` and call `yes(q)` on a pass. The
-    /// `_carried` slot is the traversal's cached parent distance; the
+    /// `d(queries[q], refs[j]) ≤ eps` and call `yes(q, d)` on a pass with
+    /// the accepted distance — the edge weight of the resulting ε-graph.
+    /// The `_carried` slot is the traversal's cached parent distance; the
     /// default ignores it and walks the block through [`Metric::dist`].
     ///
     /// Overrides must make *identical* accept/reject decisions to the
-    /// default — the dense override routes the block through the
-    /// norm-cached matmul kernel in [`engine`] and re-decides borderline
-    /// entries with the exact formula (see
-    /// [`engine::euclidean_leaf_filter`]).
+    /// default **and report the identical distance** — the dense override
+    /// routes the block through the norm-cached matmul kernel in [`engine`]
+    /// and re-evaluates accepted/borderline entries with the exact formula
+    /// (see [`engine::euclidean_leaf_filter`]).
     fn leaf_filter(
         &self,
         queries: &P,
@@ -68,12 +69,13 @@ pub trait Metric<P: PointSet>: Clone + Send + Sync + 'static {
         refs: &P,
         j: usize,
         eps: f64,
-        yes: &mut dyn FnMut(u32),
+        yes: &mut dyn FnMut(u32, f64),
     ) {
         let rp = refs.point(j);
         for &(q, _) in active {
-            if self.dist(queries.point(q as usize), rp) <= eps {
-                yes(q);
+            let d = self.dist(queries.point(q as usize), rp);
+            if d <= eps {
+                yes(q, d);
             }
         }
     }
@@ -158,7 +160,7 @@ impl<P: PointSet, M: Metric<P>> Metric<P> for Counted<M> {
         refs: &P,
         j: usize,
         eps: f64,
-        yes: &mut dyn FnMut(u32),
+        yes: &mut dyn FnMut(u32, f64),
     ) {
         self.counter.add(active.len() as u64);
         self.inner.leaf_filter(queries, active, refs, j, eps, yes);
@@ -261,13 +263,21 @@ mod tests {
         for j in [0usize, 7, 39] {
             let c = Counted::new(Euclidean);
             let mut got = Vec::new();
-            c.leaf_filter(&m, &active, &m, j, eps, &mut |q| got.push(q));
+            let mut dists = Vec::new();
+            c.leaf_filter(&m, &active, &m, j, eps, &mut |q, d| {
+                got.push(q);
+                dists.push(d);
+            });
             assert_eq!(c.count(), 40, "bulk count per entry");
             let want: Vec<u32> = (0..m.len())
                 .filter(|&i| Euclidean.dist_ij(&m, i, j) <= eps)
                 .map(|i| i as u32)
                 .collect();
             assert_eq!(got, want, "j={j}");
+            // Reported distances are the exact scalar-metric distances.
+            for (&q, &d) in got.iter().zip(&dists) {
+                assert_eq!(d, Euclidean.dist_ij(&m, q as usize, j), "j={j} q={q}");
+            }
         }
     }
 }

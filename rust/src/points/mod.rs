@@ -65,6 +65,61 @@ pub(crate) fn get_u64(bytes: &[u8], off: &mut usize) -> u64 {
     v
 }
 
+/// Decode failure of a wire payload (truncated or internally inconsistent
+/// bytes). Wire decoders that face bytes from outside the process — edge
+/// lists, weighted graphs, point bundles — return this instead of panicking
+/// on a blind slice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before `need` more bytes of `what` could be read.
+    Truncated { what: &'static str, need: usize, have: usize },
+    /// Lengths/values decoded fine but contradict each other.
+    Corrupt { what: &'static str },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { what, need, have } => {
+                write!(f, "truncated wire payload: {what} needs {need} more bytes, {have} left")
+            }
+            WireError::Corrupt { what } => write!(f, "corrupt wire payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Length-checked [`get_u64`].
+pub(crate) fn try_get_u64(
+    bytes: &[u8],
+    off: &mut usize,
+    what: &'static str,
+) -> Result<u64, WireError> {
+    let have = bytes.len().saturating_sub(*off);
+    if have < 8 {
+        return Err(WireError::Truncated { what, need: 8, have });
+    }
+    Ok(get_u64(bytes, off))
+}
+
+/// Borrow the next `len` bytes of `bytes`, or report how short the buffer
+/// falls.
+pub(crate) fn try_take<'a>(
+    bytes: &'a [u8],
+    off: &mut usize,
+    len: usize,
+    what: &'static str,
+) -> Result<&'a [u8], WireError> {
+    let have = bytes.len().saturating_sub(*off);
+    if have < len {
+        return Err(WireError::Truncated { what, need: len, have });
+    }
+    let out = &bytes[*off..*off + len];
+    *off += len;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -50,6 +50,74 @@ fn run_with_verify_and_output() {
 }
 
 #[test]
+fn run_with_index_facade_and_weighted_outputs() {
+    // The facade path: single-node build through --index, verified against
+    // brute force, with both weighted writers exercised.
+    let tsv = std::env::temp_dir().join("neargraph_cli_graph.tsv");
+    let csr = std::env::temp_dir().join("neargraph_cli_graph.csr");
+    for kind in ["brute-force", "cover-tree", "insert-cover-tree", "snn"] {
+        let out = bin()
+            .args([
+                "run", "--dataset", "corel", "--points", "200", "--index", kind,
+                "--target-degree", "10", "--verify", "--out",
+            ])
+            .arg(&tsv)
+            .args(["--out-format", "tsv"])
+            .output()
+            .expect("spawn");
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            out.status.success(),
+            "{kind} stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(text.contains("VERIFIED"), "{kind}: no verification in:\n{text}");
+        assert!(text.contains("index facade"), "{kind}: facade banner missing:\n{text}");
+        // Every tsv line is "u<TAB>v<TAB>w" with u < v and a finite weight.
+        let body = std::fs::read_to_string(&tsv).expect("tsv written");
+        assert!(body.lines().count() > 0, "{kind}: empty graph file");
+        for line in body.lines() {
+            let mut it = line.split('\t');
+            let u: u32 = it.next().unwrap().parse().unwrap();
+            let v: u32 = it.next().unwrap().parse().unwrap();
+            let w: f32 = it.next().unwrap().parse().unwrap();
+            assert!(u < v && v < 200);
+            assert!(w.is_finite() && w >= 0.0);
+        }
+    }
+    // Binary CSR round-trips through the documented file format.
+    let out = bin()
+        .args([
+            "run", "--dataset", "corel", "--points", "200", "--index", "cover-tree",
+            "--target-degree", "10", "--out",
+        ])
+        .arg(&csr)
+        .args(["--out-format", "csr"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let bytes = std::fs::read(&csr).expect("csr written");
+    let graph = neargraph::graph::NearGraph::from_bytes(&bytes).expect("valid csr file");
+    assert_eq!(graph.num_vertices(), 200);
+    assert!(graph.num_edges() > 0);
+    std::fs::remove_file(&tsv).ok();
+    std::fs::remove_file(&csr).ok();
+}
+
+#[test]
+fn run_with_unsupported_index_fails_cleanly() {
+    // SNN on a Hamming dataset must exit with the typed error message, not
+    // a panic/abort.
+    let out = bin()
+        .args(["run", "--dataset", "sift-hamming", "--points", "100", "--index", "snn"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("does not support"), "unexpected stderr:\n{err}");
+}
+
+#[test]
 fn run_hamming_dataset() {
     let out = bin()
         .args([

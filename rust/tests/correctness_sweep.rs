@@ -1,14 +1,33 @@
 //! Integration sweep: every distributed algorithm must produce the exact
 //! brute-force edge set across {metric × dataset shape × rank count × ε ×
 //! strategy} — the repo's primary correctness gate (DESIGN.md §6).
+//!
+//! Since the weighted redesign the gate is three-sided for every
+//! configuration: (1) the edge set matches brute force exactly, (2) the
+//! weighted result's distances match the scalar metric within
+//! [`WEIGHT_TOL`], and (3) the `NearGraph`'s unweighted CSR projection is
+//! bit-identical to the CSR the pre-redesign pipeline built from the same
+//! edge set.
 
-use neargraph::baseline::brute_force_edges;
+use neargraph::baseline::brute_force_weighted;
 use neargraph::data::synthetic;
 use neargraph::dist::{
-    run_epsilon_graph, Algorithm, AssignStrategy, CenterStrategy, RunConfig,
+    run_epsilon_graph, Algorithm, AssignStrategy, CenterStrategy, RunConfig, RunResult,
 };
-use neargraph::graph::assert_same_graph;
+use neargraph::graph::{assert_same_graph, assert_same_weighted_graph, WeightedEdgeList, WEIGHT_TOL};
 use neargraph::prelude::*;
+
+/// The full three-sided check of one distributed result against the
+/// weighted brute-force reference.
+fn check_result(got: &RunResult, want: &WeightedEdgeList, n: usize, ctx: &str) {
+    assert_same_graph(got.edges.clone(), want.unweighted(), ctx);
+    assert_same_weighted_graph(got.weighted.clone(), want.clone(), WEIGHT_TOL, ctx);
+    assert_eq!(
+        got.graph.clone().into_unweighted(),
+        want.unweighted().into_csr(n),
+        "{ctx}: unweighted CSR projection must be bit-identical"
+    );
+}
 
 #[test]
 fn euclidean_full_sweep() {
@@ -21,14 +40,15 @@ fn euclidean_full_sweep() {
     for (dname, pts) in &datasets {
         for eps_quantile in [5.0, 40.0] {
             let eps = neargraph::data::calibrate_eps(pts, &Euclidean, eps_quantile, 20_000, &mut rng);
-            let want = brute_force_edges(pts, &Euclidean, eps);
+            let want = brute_force_weighted(pts, &Euclidean, eps);
             for ranks in [1usize, 3, 6, 13] {
                 for algorithm in Algorithm::ALL {
                     let cfg = RunConfig { ranks, algorithm, ..Default::default() };
                     let got = run_epsilon_graph(pts, Euclidean, eps, &cfg);
-                    assert_same_graph(
-                        got.edges,
-                        want.clone(),
+                    check_result(
+                        &got,
+                        &want,
+                        pts.len(),
                         &format!("{dname}/{}/{ranks}ranks/eps={eps:.3}", algorithm.name()),
                     );
                 }
@@ -42,11 +62,11 @@ fn hamming_sweep() {
     let mut rng = Rng::new(9002);
     let codes = synthetic::hamming_clusters(&mut rng, 200, 96, 5, 0.06);
     for eps in [8.0, 20.0, 48.0] {
-        let want = brute_force_edges(&codes, &Hamming, eps);
+        let want = brute_force_weighted(&codes, &Hamming, eps);
         for algorithm in Algorithm::ALL {
             let cfg = RunConfig { ranks: 5, algorithm, ..Default::default() };
             let got = run_epsilon_graph(&codes, Hamming, eps, &cfg);
-            assert_same_graph(got.edges, want.clone(), &format!("hamming/{}", algorithm.name()));
+            check_result(&got, &want, codes.len(), &format!("hamming/{}", algorithm.name()));
         }
     }
 }
@@ -56,11 +76,11 @@ fn edit_distance_sweep() {
     let mut rng = Rng::new(9003);
     let reads = synthetic::reads(&mut rng, 120, 30, 4, 0.05);
     for eps in [2.0, 6.0] {
-        let want = brute_force_edges(&reads, &Levenshtein, eps);
+        let want = brute_force_weighted(&reads, &Levenshtein, eps);
         for algorithm in Algorithm::ALL {
             let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
             let got = run_epsilon_graph(&reads, Levenshtein, eps, &cfg);
-            assert_same_graph(got.edges, want.clone(), &format!("edit/{}", algorithm.name()));
+            check_result(&got, &want, reads.len(), &format!("edit/{}", algorithm.name()));
         }
     }
 }
@@ -73,17 +93,17 @@ fn exotic_metrics_sweep() {
     for algorithm in Algorithm::ALL {
         let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
 
-        let want = brute_force_edges(&pts, &Manhattan, 0.6);
+        let want = brute_force_weighted(&pts, &Manhattan, 0.6);
         let got = run_epsilon_graph(&pts, Manhattan, 0.6, &cfg);
-        assert_same_graph(got.edges, want, &format!("manhattan/{}", algorithm.name()));
+        check_result(&got, &want, pts.len(), &format!("manhattan/{}", algorithm.name()));
 
-        let want = brute_force_edges(&pts, &Chebyshev, 0.25);
+        let want = brute_force_weighted(&pts, &Chebyshev, 0.25);
         let got = run_epsilon_graph(&pts, Chebyshev, 0.25, &cfg);
-        assert_same_graph(got.edges, want, &format!("chebyshev/{}", algorithm.name()));
+        check_result(&got, &want, pts.len(), &format!("chebyshev/{}", algorithm.name()));
 
-        let want = brute_force_edges(&pts, &Cosine, 0.3);
+        let want = brute_force_weighted(&pts, &Cosine, 0.3);
         let got = run_epsilon_graph(&pts, Cosine, 0.3, &cfg);
-        assert_same_graph(got.edges, want, &format!("cosine/{}", algorithm.name()));
+        check_result(&got, &want, pts.len(), &format!("cosine/{}", algorithm.name()));
     }
 }
 
@@ -93,7 +113,7 @@ fn strategy_cross_product() {
     let base = synthetic::uniform(&mut rng, 100, 3, 1.0);
     let pts = synthetic::with_duplicates(&mut rng, &base, 60); // skewed cells
     let eps = 0.15;
-    let want = brute_force_edges(&pts, &Euclidean, eps);
+    let want = brute_force_weighted(&pts, &Euclidean, eps);
     for centers in [CenterStrategy::Random, CenterStrategy::Greedy] {
         for assignment in [AssignStrategy::Multiway, AssignStrategy::Cyclic] {
             for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
@@ -107,9 +127,10 @@ fn strategy_cross_product() {
                         ..Default::default()
                     };
                     let got = run_epsilon_graph(&pts, Euclidean, eps, &cfg);
-                    assert_same_graph(
-                        got.edges,
-                        want.clone(),
+                    check_result(
+                        &got,
+                        &want,
+                        pts.len(),
                         &format!("{centers:?}/{assignment:?}/{}/m={num_centers}", algorithm.name()),
                     );
                 }
@@ -122,7 +143,7 @@ fn strategy_cross_product() {
 fn extreme_configs() {
     let mut rng = Rng::new(9006);
     let pts = synthetic::gaussian_mixture(&mut rng, 64, 3, 3, 0.1);
-    let want = brute_force_edges(&pts, &Euclidean, 0.3);
+    let want = brute_force_weighted(&pts, &Euclidean, 0.3);
     // ranks > points, centers > points, leaf size 1 and huge.
     for (ranks, num_centers, leaf_size) in
         [(100, 0, 8), (4, 1000, 8), (4, 0, 1), (4, 0, 10_000), (2, 1, 8)]
@@ -130,9 +151,10 @@ fn extreme_configs() {
         for algorithm in Algorithm::ALL {
             let cfg = RunConfig { ranks, algorithm, num_centers, leaf_size, ..Default::default() };
             let got = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
-            assert_same_graph(
-                got.edges,
-                want.clone(),
+            check_result(
+                &got,
+                &want,
+                pts.len(),
                 &format!("{}/r{ranks}/m{num_centers}/z{leaf_size}", algorithm.name()),
             );
         }
@@ -160,5 +182,11 @@ fn determinism_across_runs() {
         let a = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
         let b = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);
         assert_eq!(a.edges.edges(), b.edges.edges(), "{} not deterministic", algorithm.name());
+        assert_eq!(
+            a.weighted.edges(),
+            b.weighted.edges(),
+            "{} weights not deterministic",
+            algorithm.name()
+        );
     }
 }

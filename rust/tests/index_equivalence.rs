@@ -1,0 +1,180 @@
+//! Backend-equivalence sweep for the `neargraph::index` facade: every
+//! [`IndexKind`] must return the identical edge set — and weights equal
+//! within [`WEIGHT_TOL`] — across dense / Hamming / Levenshtein points and
+//! 1 / 4 / 8 pool threads (DESIGN.md §8).
+//!
+//! SNN is dense-Euclidean-only by contract: on the other point families it
+//! must fail `build_index` with a typed `Unsupported` error, not panic.
+
+use neargraph::baseline::brute_force_weighted;
+use neargraph::data::synthetic;
+use neargraph::graph::{assert_same_weighted_graph, WeightedEdgeList, WEIGHT_TOL};
+use neargraph::index::{build_index, epsilon_graph, IndexError, IndexKind, IndexParams};
+use neargraph::prelude::*;
+
+const POOL_SIZES: [usize; 3] = [1, 4, 8];
+
+/// Self-join every supported backend at every pool size and compare the
+/// canonical weighted edge sets against the brute-force scalar reference.
+fn sweep<P, M>(pts: &P, metric: M, eps: f64, supported: &[IndexKind], what: &str)
+where
+    P: PointSet,
+    M: Metric<P>,
+{
+    let want = brute_force_weighted(pts, &metric, eps);
+    for &kind in supported {
+        let index = build_index(kind, pts, metric.clone(), &IndexParams::default())
+            .unwrap_or_else(|e| panic!("{what}: {} failed to build: {e}", kind.name()));
+        for threads in POOL_SIZES {
+            let pool = Pool::new(threads);
+            let mut got = WeightedEdgeList::new();
+            index.eps_self_join_par(eps, &pool, &mut got);
+            assert_same_weighted_graph(
+                got,
+                want.clone(),
+                WEIGHT_TOL,
+                &format!("{what}/{}/threads={threads}", kind.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_euclidean_all_backends() {
+    let mut rng = Rng::new(7001);
+    let pts = synthetic::gaussian_mixture(&mut rng, 220, 5, 5, 0.12);
+    for eps in [0.1, 0.35] {
+        sweep(&pts, Euclidean, eps, &IndexKind::ALL, "dense");
+    }
+}
+
+#[test]
+fn dense_with_duplicates_all_backends() {
+    // Zero-distance pairs stress the weight paths (matmul-form kernels
+    // must not report phantom nonzero distances).
+    let mut rng = Rng::new(7002);
+    let base = synthetic::uniform(&mut rng, 90, 3, 1.0);
+    let pts = synthetic::with_duplicates(&mut rng, &base, 60);
+    sweep(&pts, Euclidean, 0.15, &IndexKind::ALL, "dense+dups");
+    sweep(&pts, Euclidean, 0.0, &IndexKind::ALL, "dense+dups eps=0");
+}
+
+#[test]
+fn hamming_backends_match_and_snn_is_rejected() {
+    let mut rng = Rng::new(7003);
+    let codes = synthetic::hamming_clusters(&mut rng, 180, 96, 4, 0.07);
+    let supported =
+        [IndexKind::BruteForce, IndexKind::CoverTree, IndexKind::InsertCoverTree];
+    for eps in [10.0, 28.0] {
+        sweep(&codes, Hamming, eps, &supported, "hamming");
+    }
+    match build_index(IndexKind::Snn, &codes, Hamming, &IndexParams::default()) {
+        Err(IndexError::Unsupported { kind: IndexKind::Snn, .. }) => {}
+        other => panic!("SNN on Hamming must be Unsupported, got {:?}", other.is_ok()),
+    }
+}
+
+#[test]
+fn levenshtein_backends_match_and_snn_is_rejected() {
+    let mut rng = Rng::new(7004);
+    let reads = synthetic::reads(&mut rng, 100, 24, 4, 0.06);
+    let supported =
+        [IndexKind::BruteForce, IndexKind::CoverTree, IndexKind::InsertCoverTree];
+    for eps in [2.0, 5.0] {
+        sweep(&reads, Levenshtein, eps, &supported, "levenshtein");
+    }
+    assert!(matches!(
+        build_index(IndexKind::Snn, &reads, Levenshtein, &IndexParams::default()),
+        Err(IndexError::Unsupported { .. })
+    ));
+}
+
+#[test]
+fn eps_batch_equivalent_on_external_queries() {
+    // Batch queries against a foreign query set (not the self-join path).
+    let mut rng = Rng::new(7005);
+    let pts = synthetic::gaussian_mixture(&mut rng, 150, 4, 4, 0.15);
+    let queries = synthetic::uniform(&mut rng, 40, 4, 1.0);
+    let eps = 0.4;
+    let mut want: Vec<(u32, u32, u64)> = Vec::new();
+    for q in 0..queries.len() {
+        for i in 0..pts.len() {
+            let d = Euclidean.dist_between(&queries, q, &pts, i);
+            if d <= eps {
+                want.push((q as u32, i as u32, d.to_bits()));
+            }
+        }
+    }
+    want.sort_unstable();
+    for kind in IndexKind::ALL {
+        let index = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+        for threads in POOL_SIZES {
+            let pool = Pool::new(threads);
+            let mut got: Vec<(u32, u32, u64)> = Vec::new();
+            index.eps_batch_par(&queries, eps, &pool, &mut |q, gid, d| {
+                got.push((q, gid, d.to_bits()));
+            });
+            got.sort_unstable();
+            assert_eq!(got, want, "{}/threads={threads} (weights bit-exact)", kind.name());
+        }
+    }
+}
+
+#[test]
+fn knn_batch_equivalent_across_backends() {
+    let mut rng = Rng::new(7006);
+    let pts = synthetic::gaussian_mixture(&mut rng, 160, 5, 4, 0.15);
+    let queries = synthetic::uniform(&mut rng, 12, 5, 1.0);
+    let k = 9;
+    let reference = build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default())
+        .unwrap()
+        .knn_batch(&queries, k);
+    for kind in [IndexKind::CoverTree, IndexKind::InsertCoverTree, IndexKind::Snn] {
+        let index = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+        for threads in POOL_SIZES {
+            let pool = Pool::new(threads);
+            let got = index.knn_batch_par(&queries, k, &pool);
+            assert_eq!(got.len(), reference.len(), "{}", kind.name());
+            for (q, (g, w)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(g.len(), w.len());
+                for (x, y) in g.iter().zip(w) {
+                    // Distances must agree exactly; ids may differ only on
+                    // exact distance ties.
+                    assert_eq!(x.1, y.1, "{} q={q}", kind.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn insert_covertree_facade_matches_covertree_exactly() {
+    // The historical parity gap: InsertCoverTree had no batch path. Via
+    // the facade's default impls it must now answer batch + self-join
+    // queries identically (ids AND weight bits) to the batch CoverTree on
+    // the same data.
+    let mut rng = Rng::new(7007);
+    let pts = synthetic::gaussian_mixture(&mut rng, 200, 4, 4, 0.12);
+    let queries = synthetic::uniform(&mut rng, 30, 4, 1.0);
+    let eps = 0.3;
+    let batch = build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default())
+        .unwrap();
+    let insert =
+        build_index(IndexKind::InsertCoverTree, &pts, Euclidean, &IndexParams::default())
+            .unwrap();
+
+    let mut a: Vec<(u32, u32, u64)> = Vec::new();
+    batch.eps_batch(&queries, eps, &mut |q, gid, d| a.push((q, gid, d.to_bits())));
+    a.sort_unstable();
+    let mut b: Vec<(u32, u32, u64)> = Vec::new();
+    insert.eps_batch(&queries, eps, &mut |q, gid, d| b.push((q, gid, d.to_bits())));
+    b.sort_unstable();
+    assert_eq!(a, b, "incremental-build + facade batch must match CoverTree bit-for-bit");
+
+    for threads in POOL_SIZES {
+        let pool = Pool::new(threads);
+        let ga = epsilon_graph(batch.as_ref(), eps, &pool);
+        let gb = epsilon_graph(insert.as_ref(), eps, &pool);
+        assert_eq!(ga, gb, "threads={threads}: facade graphs must be identical");
+    }
+}

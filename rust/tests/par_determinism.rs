@@ -21,8 +21,9 @@ where
 {
     let params = BuildParams { leaf_size, root: 0 };
     let seq = CoverTree::build(pts, metric, &params);
-    let mut seq_edges: Vec<(u32, u32)> = Vec::new();
-    seq.eps_self_join(metric, eps, |a, b| seq_edges.push((a, b)));
+    // Edge set AND weight bits must be identical at every pool size.
+    let mut seq_edges: Vec<(u32, u32, u64)> = Vec::new();
+    seq.eps_self_join(metric, eps, |a, b, d| seq_edges.push((a, b, d.to_bits())));
     seq_edges.sort_unstable();
 
     for threads in POOL_SIZES {
@@ -35,8 +36,8 @@ where
         );
         assert_eq!(seq.ids(), par.ids(), "{what}: ids differ at threads={threads}");
 
-        let mut par_edges: Vec<(u32, u32)> = Vec::new();
-        par.eps_self_join_par(metric, eps, &pool, |a, b| par_edges.push((a, b)));
+        let mut par_edges: Vec<(u32, u32, u64)> = Vec::new();
+        par.eps_self_join_par(metric, eps, &pool, |a, b, d| par_edges.push((a, b, d.to_bits())));
         par_edges.sort_unstable();
         assert_eq!(
             seq_edges, par_edges,
@@ -100,14 +101,16 @@ fn parallel_batch_query_matches_sequential_on_hamming() {
     let query_codes =
         neargraph::data::synthetic::hamming_clusters(&mut Rng::new(906), 1500, 64, 3, 0.1);
     let tree = CoverTree::build(&tree_codes, &Hamming, &BuildParams::default());
-    let mut seq: Vec<(u32, u32)> = Vec::new();
-    tree.query_batch(&Hamming, &query_codes, 14.0, |q, id| seq.push((q as u32, id)));
+    let mut seq: Vec<(u32, u32, u64)> = Vec::new();
+    tree.query_batch(&Hamming, &query_codes, 14.0, |q, id, d| {
+        seq.push((q as u32, id, d.to_bits()));
+    });
     seq.sort_unstable();
     for threads in POOL_SIZES {
         let pool = Pool::new(threads);
-        let mut par: Vec<(u32, u32)> = Vec::new();
-        tree.query_batch_par(&Hamming, &query_codes, 14.0, &pool, |q, id| {
-            par.push((q as u32, id));
+        let mut par: Vec<(u32, u32, u64)> = Vec::new();
+        tree.query_batch_par(&Hamming, &query_codes, 14.0, &pool, |q, id, d| {
+            par.push((q as u32, id, d.to_bits()));
         });
         par.sort_unstable();
         assert_eq!(seq, par, "hamming batch threads={threads}");

@@ -132,6 +132,31 @@ fn wire_bundle_roundtrip_random() {
 }
 
 #[test]
+fn weighted_wire_roundtrip_and_truncation_random() {
+    forall("weighted-wire", 30, Size { n: 60, dim: 1 }, |rng, size| {
+        let mut w = WeightedEdgeList::new();
+        for _ in 0..size.n {
+            let u = rng.below(500) as u32;
+            let v = rng.below(500) as u32;
+            w.push(u, v, rng.below(1000) as f64 * 0.01);
+        }
+        let bytes = w.to_bytes();
+        let w2 = WeightedEdgeList::from_bytes(&bytes).expect("roundtrip");
+        assert_eq!(w.edges(), w2.edges());
+        // Any truncation is a typed error, never a panic.
+        let cut = rng.below(bytes.len().max(1));
+        if cut < bytes.len() {
+            assert!(WeightedEdgeList::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // The canonical graph round-trips through the binary CSR format.
+        let n = 500;
+        let g = w.into_near_graph(n);
+        let g2 = NearGraph::from_bytes(&g.to_bytes()).expect("graph roundtrip");
+        assert_eq!(g, g2);
+    });
+}
+
+#[test]
 fn alltoallv_random_contents() {
     use neargraph::comm::{run_world, CostModel};
     forall("alltoallv", 10, Size { n: 6, dim: 1 }, |rng, size| {
