@@ -1,20 +1,25 @@
 //! Perf driver: build + ε self-join on a Table-I-style dense workload,
-//! sequential vs pooled (the PR 2 trajectory), **plus** the same join
-//! through the `neargraph::index` facade so facade overhead vs the direct
-//! cover-tree calls is visible — emitting a machine-readable
-//! `BENCH_pr3.json` so the perf trajectory accumulates across PRs.
+//! sequential vs pooled (the PR 2 trajectory), the same join through the
+//! `neargraph::index` facade (PR 3), **plus** — when `--knn k` is set —
+//! the k-NN paths: the facade's `knn_graph` per thread count and the three
+//! distributed radius-refinement layouts (PR 4) — emitting a
+//! machine-readable `BENCH_pr4.json` so the perf trajectory accumulates
+//! across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
-//!     [--threads 1,2,4] [--target-degree 30] [--out BENCH_pr3.json]
+//!     [--threads 1,2,4] [--target-degree 30] [--knn 16] \
+//!     [--out BENCH_pr4.json]
 //! ```
 //!
 //! The driver asserts that every thread count — and every facade backend
-//! it times — reproduces the single-thread direct edge set exactly (the
+//! it times — reproduces the single-thread direct edge set exactly, and
+//! that every k-NN path reproduces the identical row fingerprint (the
 //! determinism gate, on the bench workload itself).
 
 use neargraph::covertree::{BuildParams, CoverTree};
-use neargraph::graph::GraphSink;
+use neargraph::dist::{run_knn_graph, Algorithm, RunConfig};
+use neargraph::graph::{GraphSink, KnnGraph};
 use neargraph::index::{build_index_par, IndexKind, IndexParams, NearIndex};
 use neargraph::metric::{Counted, Euclidean};
 use neargraph::util::{Pool, Rng};
@@ -39,6 +44,28 @@ struct FacadeRun {
     edge_hash: u64,
 }
 
+struct KnnRun {
+    /// "facade" or a distributed algorithm name.
+    mode: String,
+    threads: usize,
+    total_s: f64,
+    arcs: u64,
+    row_hash: u64,
+}
+
+/// Order-independent fingerprint of a k-NN graph's (vertex, neighbor,
+/// distance-bits) arcs — identical iff the certified rows are identical.
+fn knn_fingerprint(g: &KnnGraph) -> u64 {
+    let mut hash = 0u64;
+    for u in 0..g.num_vertices() {
+        for (v, d) in g.row_entries(u) {
+            hash = hash
+                .wrapping_add(mix(((u as u64) << 32) | v as u64).wrapping_add(mix(d.to_bits())));
+        }
+    }
+    hash
+}
+
 /// Order-independent edge-set fingerprint sink (unweighted, so direct and
 /// facade paths hash identically).
 #[derive(Default)]
@@ -61,8 +88,9 @@ fn main() {
     let dim = args.get_usize("dim").unwrap_or_else(|e| fail(&e)).unwrap_or(16);
     let target_degree =
         args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
+    let knn_k = args.get_usize("knn").unwrap_or_else(|e| fail(&e)).unwrap_or(0);
     let threads_arg = args.get_or("threads", "1,2,4").to_string();
-    let out_path = args.get_or("out", "BENCH_pr3.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr4.json").to_string();
     args.reject_unknown().unwrap_or_else(|e| fail(&e));
     let thread_list: Vec<usize> = threads_arg
         .split(',')
@@ -165,8 +193,69 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------------------------
+    // k-NN paths (--knn k): facade knn_graph per thread count + the three
+    // distributed radius-refinement layouts. Every run must produce the
+    // identical row fingerprint (the k-NN determinism gate).
+    // ------------------------------------------------------------------
+    let mut knn_runs: Vec<KnnRun> = Vec::new();
+    if knn_k > 0 {
+        let mut reference: Option<u64> = None;
+        for &threads in &thread_list {
+            let pool = Pool::new(threads);
+            let params = IndexParams::default();
+            let index = build_index_par(IndexKind::CoverTree, &pts, Euclidean, &params, &pool)
+                .unwrap_or_else(|e| fail(&e.to_string()));
+            let t0 = Instant::now();
+            let g = index.knn_graph(knn_k, &pool);
+            let total_s = t0.elapsed().as_secs_f64();
+            let row_hash = knn_fingerprint(&g);
+            eprintln!(
+                "[perf_driver] knn facade threads={threads}: {total_s:.3}s, {} arcs",
+                g.num_arcs()
+            );
+            match reference {
+                None => reference = Some(row_hash),
+                Some(r) => assert_eq!(r, row_hash, "facade knn rows drifted at threads={threads}"),
+            }
+            knn_runs.push(KnnRun {
+                mode: "facade".into(),
+                threads,
+                total_s,
+                arcs: g.num_arcs() as u64,
+                row_hash,
+            });
+        }
+        let threads = *thread_list.last().unwrap();
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 4, algorithm, threads: threads * 4, ..Default::default() };
+            let t0 = Instant::now();
+            let res = run_knn_graph(&pts, Euclidean, knn_k, &cfg);
+            let total_s = t0.elapsed().as_secs_f64();
+            let row_hash = knn_fingerprint(&res.knn);
+            eprintln!(
+                "[perf_driver] knn {} ranks=4: {total_s:.3}s wall, makespan {:.3}s",
+                algorithm.name(),
+                res.makespan
+            );
+            assert_eq!(
+                reference.unwrap(),
+                row_hash,
+                "{} knn rows drifted from the facade",
+                algorithm.name()
+            );
+            knn_runs.push(KnnRun {
+                mode: algorithm.name().into(),
+                threads,
+                total_s,
+                arcs: res.knn.num_arcs() as u64,
+                row_hash,
+            });
+        }
+    }
+
     let (seq_total, best) = summarize(&runs);
-    let json = render_json(&dataset, n, dim, eps, &runs, &facade, seq_total, best);
+    let json = render_json(&dataset, n, dim, eps, &runs, &facade, &knn_runs, seq_total, best);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| fail(&format!("{out_path}: {e}")));
     println!("{json}");
     eprintln!("[perf_driver] wrote {out_path}");
@@ -189,12 +278,13 @@ fn render_json(
     eps: f64,
     runs: &[Run],
     facade: &[FacadeRun],
+    knn_runs: &[KnnRun],
     seq_total: f64,
     best: &Run,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"bench\": \"pr3_index_facade\",\n");
+    s.push_str("  \"bench\": \"pr4_dist_knn\",\n");
     s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
     s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
     s.push_str("  \"direct_runs\": [\n");
@@ -224,6 +314,20 @@ fn render_json(
             r.edges,
             r.edge_hash,
             if i + 1 < facade.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"knn_runs\": [\n");
+    for (i, r) in knn_runs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"threads\": {}, \"total_s\": {:.6}, \
+             \"arcs\": {}, \"row_hash\": {}}}{}\n",
+            r.mode,
+            r.threads,
+            r.total_s,
+            r.arcs,
+            r.row_hash,
+            if i + 1 < knn_runs.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n");

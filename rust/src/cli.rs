@@ -96,6 +96,16 @@ impl Args {
         }
     }
 
+    /// Error when two mutually-exclusive flags are both present (e.g.
+    /// `--knn` vs `--eps`). Checks presence only — call before or after
+    /// the typed accessors.
+    pub fn reject_conflict(&self, a: &str, b: &str) -> Result<(), String> {
+        if self.flags.contains_key(a) && self.flags.contains_key(b) {
+            return Err(format!("--{a} and --{b} are mutually exclusive"));
+        }
+        Ok(())
+    }
+
     /// Error if any provided flag was never queried (typo protection).
     /// Call after all `get_*` calls.
     pub fn reject_unknown(&self) -> Result<(), String> {
@@ -150,6 +160,15 @@ mod tests {
         assert!(a.reject_unknown().is_err());
         let _ = a.get("typo");
         assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn conflicting_flags_rejected() {
+        let a = parse("run --knn 5 --eps 0.3");
+        assert!(a.reject_conflict("knn", "eps").is_err());
+        assert!(a.reject_conflict("knn", "scale").is_ok());
+        let b = parse("run --knn 5");
+        assert!(b.reject_conflict("knn", "eps").is_ok());
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct ExperimentConfig {
     pub points: usize,
     /// Explicit ε (0 ⇒ calibrate from `target_degree`).
     pub eps: f64,
+    /// Build the exact k-NN graph with this `k` instead of an ε-graph
+    /// (0 ⇒ off). Mutually exclusive with an explicit `eps` — the launcher
+    /// rejects configs setting both (config key `knn`, CLI `--knn`).
+    pub knn: usize,
     /// Average-degree target for ε calibration.
     pub target_degree: f64,
     pub seed: u64,
@@ -43,6 +47,7 @@ impl Default for ExperimentConfig {
             scale: 0.01,
             points: 0,
             eps: 0.0,
+            knn: 0,
             target_degree: 30.0,
             seed: 42,
             index: None,
@@ -63,6 +68,7 @@ impl ExperimentConfig {
                 "scale" => cfg.scale = value.as_f64().ok_or("scale must be a number")?,
                 "points" => cfg.points = value.as_usize().ok_or("points must be an integer")?,
                 "eps" => cfg.eps = value.as_f64().ok_or("eps must be a number")?,
+                "knn" => cfg.knn = value.as_usize().ok_or("knn must be an integer")?,
                 "target_degree" => {
                     cfg.target_degree = value.as_f64().ok_or("target_degree must be a number")?
                 }
@@ -164,6 +170,15 @@ ghost = "all"
         assert_eq!(cfg.run.leaf_size, 4);
         assert_eq!(cfg.run.num_centers, 64);
         assert_eq!(cfg.run.ghost, GhostMode::All);
+    }
+
+    #[test]
+    fn knn_key_parses_and_defaults_off() {
+        let cfg = ExperimentConfig::from_toml("knn = 70\n").unwrap();
+        assert_eq!(cfg.knn, 70);
+        let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
+        assert_eq!(cfg.knn, 0);
+        assert!(ExperimentConfig::from_toml("knn = \"many\"\n").is_err());
     }
 
     #[test]

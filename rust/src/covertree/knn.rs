@@ -6,6 +6,20 @@
 //! Best-first branch-and-bound over the cover tree: nodes are visited in
 //! order of their lower bound `max(d(q, p_v) − radius_v, 0)`; a node is
 //! pruned once k candidates closer than its bound are known.
+//!
+//! Two properties the distributed radius-refinement loop (`dist::knn`,
+//! DESIGN.md §9) depends on:
+//!
+//! * **bounded search** — [`CoverTree::knn_within`] additionally prunes
+//!   every subtree whose lower bound exceeds a caller-supplied radius cap,
+//!   so a remote rank refining a visiting point does work proportional to
+//!   the point's *current* candidate radius, not its tree size;
+//! * **tie-exact order** — results are the k smallest under the total
+//!   order `(distance, id)`, including on exact distance ties (duplicate
+//!   points). Pruning uses strict comparisons against the current k-th
+//!   candidate so an equal-distance, smaller-id point behind an
+//!   equal-to-bound subtree is never lost; this is what makes distributed
+//!   merges bit-deterministic across rank and pool counts.
 
 use super::CoverTree;
 use crate::metric::Metric;
@@ -60,28 +74,55 @@ impl Ord for Frontier {
 
 impl<P: PointSet> CoverTree<P> {
     /// The `k` nearest tree points to `query`, as `(global_id, distance)`
-    /// sorted by ascending distance (ties by id). Returns fewer than `k`
-    /// only when the tree holds fewer points. The query point itself is
-    /// *not* excluded — callers joining a set against itself typically
-    /// ask for `k + 1` and drop the self match.
+    /// sorted ascending by `(distance, id)` — tie-exact. Returns fewer
+    /// than `k` only when the tree holds fewer points. The query point
+    /// itself is *not* excluded — callers joining a set against itself
+    /// typically ask for `k + 1` and drop the self match.
     pub fn knn<M: Metric<P>>(&self, metric: &M, query: P::Point<'_>, k: usize) -> Vec<(u32, f64)> {
-        if self.is_empty() || k == 0 {
+        self.knn_within(metric, query, k, f64::INFINITY)
+    }
+
+    /// The `k` nearest tree points to `query` **among those within
+    /// distance `cap`**, ascending by `(distance, id)` — the bounded query
+    /// of the distributed radius-refinement loop (DESIGN.md §9).
+    ///
+    /// Equivalent to filtering [`CoverTree::knn`]'s result to `d ≤ cap`,
+    /// but prunes every subtree whose lower bound exceeds `cap`, so the
+    /// work shrinks with the cap. May return fewer than `k` entries when
+    /// fewer tree points lie within `cap`. A NaN or negative `cap` yields
+    /// an empty result.
+    pub fn knn_within<M: Metric<P>>(
+        &self,
+        metric: &M,
+        query: P::Point<'_>,
+        k: usize,
+        cap: f64,
+    ) -> Vec<(u32, f64)> {
+        if self.is_empty() || k == 0 || !(cap >= 0.0) {
             return Vec::new();
         }
         let mut best: BinaryHeap<Cand> = BinaryHeap::with_capacity(k + 1);
         let mut frontier: BinaryHeap<Frontier> = BinaryHeap::new();
         let root = self.node(self.root());
         let d = metric.dist(query, self.points().point(root.point as usize));
-        frontier.push(Frontier { bound: (d - root.radius).max(0.0), node: self.root(), dist: d });
+        let rb = (d - root.radius).max(0.0);
+        if rb <= cap {
+            frontier.push(Frontier { bound: rb, node: self.root(), dist: d });
+        }
 
         while let Some(Frontier { bound, node, dist }) = frontier.pop() {
-            // Prune: k candidates at least as close as this bound exist.
-            if best.len() == k && bound >= best.peek().unwrap().dist {
+            // Prune: k candidates *strictly* better than this bound exist.
+            // On a tie (bound == current k-th distance) the subtree may
+            // still hold an equal-distance point with a smaller id, which
+            // outranks the current k-th under (distance, id) — keep going.
+            if best.len() == k && bound > best.peek().unwrap().dist {
                 break; // the frontier is bound-ordered — nothing better left
             }
             let n = self.node(node);
             if n.is_leaf() {
-                push_cand(&mut best, k, Cand { dist, gid: self.global_id(n.point as usize) });
+                if dist <= cap {
+                    push_cand(&mut best, k, Cand { dist, gid: self.global_id(n.point as usize) });
+                }
                 continue;
             }
             for &c in self.node_children(node) {
@@ -93,7 +134,10 @@ impl<P: PointSet> CoverTree<P> {
                     metric.dist(query, self.points().point(cn.point as usize))
                 };
                 let cb = (dc - cn.radius).max(0.0);
-                if best.len() < k || cb < best.peek().unwrap().dist {
+                if cb > cap {
+                    continue;
+                }
+                if best.len() < k || cb <= best.peek().unwrap().dist {
                     frontier.push(Frontier { bound: cb, node: c, dist: dc });
                 }
             }
@@ -198,6 +242,79 @@ mod tests {
         let got = tree.knn(&Euclidean, &[5.0], 2);
         let ids: Vec<u32> = got.iter().map(|&(g, _)| g).collect();
         assert_eq!(ids, vec![0, 1]);
+    }
+
+    fn brute_knn_within<P: PointSet, M: Metric<P>>(
+        pts: &P,
+        metric: &M,
+        q: P::Point<'_>,
+        k: usize,
+        cap: f64,
+    ) -> Vec<(u32, f64)> {
+        let mut all: Vec<(u32, f64)> = (0..pts.len())
+            .map(|i| (i as u32, metric.dist(q, pts.point(i))))
+            .filter(|&(_, d)| d <= cap)
+            .collect();
+        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all
+    }
+
+    #[test]
+    fn knn_within_matches_filtered_brute_force() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(154), 250, 4, 4, 0.2);
+        let queries = crate::data::synthetic::uniform(&mut Rng::new(155), 12, 4, 1.0);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
+        for k in [1usize, 6, 20] {
+            for cap in [0.0f64, 0.1, 0.4, 2.0, f64::INFINITY] {
+                for qi in 0..queries.len() {
+                    let got = tree.knn_within(&Euclidean, queries.row(qi), k, cap);
+                    let want = brute_knn_within(&pts, &Euclidean, queries.row(qi), k, cap);
+                    // Ids AND distance bits: the bounded query is tie-exact.
+                    assert_eq!(got, want, "k={k} cap={cap} qi={qi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn knn_within_tie_exact_on_duplicates() {
+        // Many co-located points: the (distance, id) order must pick the
+        // smallest ids, and a cap equal to the tie distance must include
+        // the tied points.
+        let mut pts = DenseMatrix::new(1);
+        for _ in 0..6 {
+            pts.push(&[2.0]);
+        }
+        pts.push(&[5.0]);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 2, root: 0 });
+        let got = tree.knn_within(&Euclidean, &[1.0], 4, 1.0);
+        assert_eq!(
+            got,
+            vec![(0, 1.0), (1, 1.0), (2, 1.0), (3, 1.0)],
+            "smallest ids win exact ties at the cap boundary"
+        );
+        // Degenerate caps.
+        assert!(tree.knn_within(&Euclidean, &[1.0], 4, f64::NAN).is_empty());
+        assert!(tree.knn_within(&Euclidean, &[1.0], 4, -1.0).is_empty());
+        assert!(tree.knn_within(&Euclidean, &[2.0], 0, 1.0).is_empty());
+    }
+
+    #[test]
+    fn knn_within_small_cap_prunes_work() {
+        let pts =
+            crate::data::synthetic::gaussian_mixture(&mut Rng::new(156), 3000, 6, 15, 0.02);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 8, root: 0 });
+        let wide = Counted::new(Euclidean);
+        tree.knn_within(&wide, pts.row(0), 10, f64::INFINITY);
+        let narrow = Counted::new(Euclidean);
+        tree.knn_within(&narrow, pts.row(0), 10, 0.05);
+        assert!(
+            narrow.count() <= wide.count(),
+            "bounded query did more work: {} > {}",
+            narrow.count(),
+            wide.count()
+        );
     }
 
     #[test]

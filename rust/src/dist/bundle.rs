@@ -1,8 +1,10 @@
 //! The wire formats of the distributed algorithms: a batch of points plus
 //! the per-point metadata the landmark algorithms need ([`Bundle`]: global
-//! ids, Voronoi cell ids, distance to the nearest center `d(p, C)`), and a
+//! ids, Voronoi cell ids, distance to the nearest center `d(p, C)`), a
 //! batch of weighted edges ([`EdgeBundle`]: the graph-side payload, e.g. a
-//! gathered partial result).
+//! gathered partial result), and the k-NN radius-refinement message
+//! ([`KnnBundle`]: query points with per-point radius caps and running
+//! top-k candidate rows — DESIGN.md §9).
 //!
 //! [`Bundle`] layout (little-endian, see `tests/properties.rs` for the
 //! pinned roundtrip): a u64 byte-length prefix followed by the `PointSet`
@@ -98,10 +100,13 @@ impl<P: PointSet> Bundle<P> {
     }
 
     /// Length-checked deserialization from [`Bundle::to_bytes`] output.
+    /// The embedded point payload decodes through
+    /// [`PointSet::try_from_bytes`], so a corrupt point serialization is a
+    /// typed error too, not a panic inside the container.
     pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
         let mut off = 0usize;
         let pn = try_get_u64(bytes, &mut off, "bundle point-bytes length")? as usize;
-        let pts = P::from_bytes(try_take(bytes, &mut off, pn, "bundle point payload")?);
+        let pts = P::try_from_bytes(try_take(bytes, &mut off, pn, "bundle point payload")?)?;
         let ng = try_get_u64(bytes, &mut off, "bundle gid count")? as usize;
         let gbytes = try_take(bytes, &mut off, ng.saturating_mul(4), "bundle gids")?;
         let gids: Vec<u32> =
@@ -172,6 +177,227 @@ impl EdgeBundle {
         }
         Ok(EdgeBundle { source, edges: WeightedEdgeList::from_bytes(payload)? })
     }
+}
+
+/// The k-NN radius-refinement wire message (DESIGN.md §9): a batch of
+/// query points with their per-point **radius caps** and running top-k
+/// candidate rows, movable between ranks.
+///
+/// Three shapes travel, all through the same decoder:
+///
+/// * **circulating bundles** (systolic-ring / landmark-ring): points +
+///   gids + caps + carried rows (+ `dpc` on the landmark ring, which
+///   re-applies the per-point Lemma-1 relevance filter at every stop);
+/// * **requests** (landmark-coll): points + gids + caps, rows empty — the
+///   receiver answers from its own tree;
+/// * **replies** (landmark-coll, and every per-rank final result handed to
+///   the driver): gids + rows only; `pts`, `dpc` and `caps` stay empty.
+///
+/// [`KnnBundle::try_from_bytes`] is length-checked like [`EdgeBundle`] and
+/// re-validates every structural invariant (parallel array lengths, row
+/// width ≤ k, rows strictly ascending by `(distance, id)`, finite
+/// non-negative distances, candidates within their cap), returning a typed
+/// [`WireError`] on any malformed input — never a panic.
+#[derive(Clone, Debug)]
+pub struct KnnBundle<P: PointSet> {
+    /// The `k` this exchange refines toward (bounds every row).
+    pub k: u32,
+    /// The query points (empty for reply bundles, which travel by gid).
+    pub pts: P,
+    /// Global vertex id of each query (parallel to rows; to `pts` when
+    /// points travel).
+    pub gids: Vec<u32>,
+    /// Distance to the nearest Voronoi center `d(p, C)` — present only on
+    /// landmark-ring bundles, whose receivers re-apply the Lemma-1 rule.
+    pub dpc: Vec<f64>,
+    /// Current per-point radius cap (`+∞` until k candidates are known);
+    /// empty on replies.
+    pub caps: Vec<f64>,
+    /// Row offsets into `cand_ids`/`cand_dists` (`gids.len() + 1` entries).
+    pub cand_off: Vec<u32>,
+    /// Flattened candidate ids, row-major, each row ascending by
+    /// `(distance, id)`.
+    pub cand_ids: Vec<u32>,
+    /// Candidate distances parallel to `cand_ids` (exact `f64` — merges
+    /// stay bit-deterministic; narrowing to `f32` happens only at final
+    /// graph storage).
+    pub cand_dists: Vec<f64>,
+}
+
+impl<P: PointSet> KnnBundle<P> {
+    /// Number of query points carried.
+    pub fn len(&self) -> usize {
+        self.gids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gids.is_empty()
+    }
+
+    /// Candidate row `i` as parallel `(ids, dists)` slices.
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.cand_off[i] as usize;
+        let hi = self.cand_off[i + 1] as usize;
+        (&self.cand_ids[lo..hi], &self.cand_dists[lo..hi])
+    }
+
+    /// Flatten per-point `(id, distance)` rows into a bundle. `pts`, `dpc`
+    /// and `caps` follow the shape rules of the struct docs (empty or
+    /// parallel to `gids`).
+    pub fn from_rows(
+        k: usize,
+        pts: P,
+        gids: Vec<u32>,
+        dpc: Vec<f64>,
+        caps: Vec<f64>,
+        rows: &[Vec<(u32, f64)>],
+    ) -> Self {
+        assert_eq!(rows.len(), gids.len(), "one candidate row per query");
+        let total: usize = rows.iter().map(Vec::len).sum();
+        let mut cand_off = Vec::with_capacity(rows.len() + 1);
+        let mut cand_ids = Vec::with_capacity(total);
+        let mut cand_dists = Vec::with_capacity(total);
+        cand_off.push(0u32);
+        for row in rows {
+            debug_assert!(row.len() <= k, "row wider than k");
+            for &(id, d) in row {
+                cand_ids.push(id);
+                cand_dists.push(d);
+            }
+            cand_off.push(cand_ids.len() as u32);
+        }
+        KnnBundle { k: k as u32, pts, gids, dpc, caps, cand_off, cand_ids, cand_dists }
+    }
+
+    /// Unflatten into per-point `(id, distance)` rows.
+    pub fn rows(&self) -> Vec<Vec<(u32, f64)>> {
+        (0..self.len())
+            .map(|i| {
+                let (ids, ds) = self.row(i);
+                ids.iter().copied().zip(ds.iter().copied()).collect()
+            })
+            .collect()
+    }
+
+    /// Serialize for the comm layer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let pb = self.pts.to_bytes();
+        let mut buf = Vec::with_capacity(
+            64 + pb.len()
+                + 4 * self.gids.len()
+                + 8 * (self.dpc.len() + self.caps.len() + self.cand_dists.len())
+                + 4 * (self.cand_off.len() + self.cand_ids.len()),
+        );
+        buf.extend_from_slice(&self.k.to_le_bytes());
+        put_u64(&mut buf, pb.len() as u64);
+        buf.extend_from_slice(&pb);
+        put_u64(&mut buf, self.gids.len() as u64);
+        for &g in &self.gids {
+            buf.extend_from_slice(&g.to_le_bytes());
+        }
+        put_u64(&mut buf, self.dpc.len() as u64);
+        for &d in &self.dpc {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        put_u64(&mut buf, self.caps.len() as u64);
+        for &c in &self.caps {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        put_u64(&mut buf, self.cand_off.len() as u64);
+        for &o in &self.cand_off {
+            buf.extend_from_slice(&o.to_le_bytes());
+        }
+        put_u64(&mut buf, self.cand_ids.len() as u64);
+        for &id in &self.cand_ids {
+            buf.extend_from_slice(&id.to_le_bytes());
+        }
+        put_u64(&mut buf, self.cand_dists.len() as u64);
+        for &d in &self.cand_dists {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Length-checked, invariant-checked inverse of
+    /// [`KnnBundle::to_bytes`].
+    pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        let kb = try_take(bytes, &mut off, 4, "knn-bundle k")?;
+        let k = u32::from_le_bytes(kb.try_into().unwrap());
+        let pn = try_get_u64(bytes, &mut off, "knn-bundle point-bytes length")? as usize;
+        let pts = P::try_from_bytes(try_take(bytes, &mut off, pn, "knn-bundle point payload")?)?;
+        let gids = take_u32s(bytes, &mut off, "knn-bundle gids")?;
+        let dpc = take_f64s(bytes, &mut off, "knn-bundle dpc")?;
+        let caps = take_f64s(bytes, &mut off, "knn-bundle caps")?;
+        let cand_off = take_u32s(bytes, &mut off, "knn-bundle row offsets")?;
+        let cand_ids = take_u32s(bytes, &mut off, "knn-bundle candidate ids")?;
+        let cand_dists = take_f64s(bytes, &mut off, "knn-bundle candidate dists")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after knn bundle" });
+        }
+        let m = gids.len();
+        if (pts.len() != 0 && pts.len() != m)
+            || (!dpc.is_empty() && dpc.len() != m)
+            || (!caps.is_empty() && caps.len() != m)
+        {
+            return Err(WireError::Corrupt { what: "knn bundle array lengths disagree" });
+        }
+        if cand_off.len() != m + 1
+            || cand_off[0] != 0
+            || cand_off.windows(2).any(|p| p[0] > p[1])
+            || *cand_off.last().unwrap() as usize != cand_ids.len()
+            || cand_ids.len() != cand_dists.len()
+        {
+            return Err(WireError::Corrupt { what: "knn bundle row offsets inconsistent" });
+        }
+        if dpc.iter().any(|d| !d.is_finite() || *d < 0.0) {
+            return Err(WireError::Corrupt { what: "non-finite or negative dpc" });
+        }
+        if caps.iter().any(|c| c.is_nan() || *c < 0.0) {
+            return Err(WireError::Corrupt { what: "NaN or negative cap" });
+        }
+        if cand_dists.iter().any(|d| !d.is_finite() || *d < 0.0) {
+            return Err(WireError::Corrupt { what: "non-finite or negative candidate distance" });
+        }
+        for i in 0..m {
+            let (lo, hi) = (cand_off[i] as usize, cand_off[i + 1] as usize);
+            if hi - lo > k as usize {
+                return Err(WireError::Corrupt { what: "candidate row wider than k" });
+            }
+            for w in lo..hi.saturating_sub(1) {
+                if (cand_dists[w], cand_ids[w]) >= (cand_dists[w + 1], cand_ids[w + 1]) {
+                    return Err(WireError::Corrupt {
+                        what: "candidate row not strictly ascending by (distance, id)",
+                    });
+                }
+            }
+            if !caps.is_empty() && (lo..hi).any(|w| cand_dists[w] > caps[i]) {
+                return Err(WireError::Corrupt { what: "candidate beyond its radius cap" });
+            }
+        }
+        Ok(KnnBundle { k, pts, gids, dpc, caps, cand_off, cand_ids, cand_dists })
+    }
+
+    /// Deserialize, panicking on malformed bytes — for the in-process
+    /// simulated MPI layer (mirrors [`Bundle::from_bytes`]).
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        match Self::try_from_bytes(bytes) {
+            Ok(b) => b,
+            Err(e) => panic!("knn bundle decode failed: {e}"),
+        }
+    }
+}
+
+fn take_u32s(bytes: &[u8], off: &mut usize, what: &'static str) -> Result<Vec<u32>, WireError> {
+    let n = try_get_u64(bytes, off, what)? as usize;
+    let payload = try_take(bytes, off, n.saturating_mul(4), what)?;
+    Ok(payload.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn take_f64s(bytes: &[u8], off: &mut usize, what: &'static str) -> Result<Vec<f64>, WireError> {
+    let n = try_get_u64(bytes, off, what)? as usize;
+    let payload = try_take(bytes, off, n.saturating_mul(8), what)?;
+    Ok(payload.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
 #[cfg(test)]
@@ -311,6 +537,127 @@ mod tests {
         for cut in 0..bytes.len() {
             assert!(EdgeBundle::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
         }
+    }
+
+    fn knn_sample() -> KnnBundle<DenseMatrix> {
+        KnnBundle::from_rows(
+            3,
+            DenseMatrix::from_flat(2, vec![0.0, 1.0, 2.0, 3.0]),
+            vec![7, 9],
+            vec![0.25, 0.5],
+            vec![1.5, f64::INFINITY],
+            &[vec![(3, 0.5), (1, 1.5)], vec![(2, 0.75)]],
+        )
+    }
+
+    #[test]
+    fn knn_bundle_roundtrip_shapes() {
+        // Circulating shape: points + dpc + caps + rows.
+        let b = knn_sample();
+        let b2: KnnBundle<DenseMatrix> = KnnBundle::from_bytes(&b.to_bytes());
+        assert_eq!(b2.k, 3);
+        assert_eq!(b2.pts, b.pts);
+        assert_eq!(b2.gids, b.gids);
+        assert_eq!(b2.dpc, b.dpc);
+        assert_eq!(b2.caps, b.caps);
+        assert_eq!(b2.rows(), b.rows());
+        assert_eq!(b2.row(1), (&[2u32][..], &[0.75f64][..]));
+
+        // Request shape: points + caps, rows empty.
+        let req = KnnBundle::from_rows(
+            5,
+            DenseMatrix::from_flat(1, vec![4.0]),
+            vec![11],
+            Vec::new(),
+            vec![2.0],
+            &[Vec::new()],
+        );
+        let req2: KnnBundle<DenseMatrix> = KnnBundle::from_bytes(&req.to_bytes());
+        assert!(req2.dpc.is_empty() && req2.cand_ids.is_empty());
+        assert_eq!(req2.caps, vec![2.0]);
+
+        // Reply shape: gids + rows only, no points.
+        let reply = KnnBundle::from_rows(
+            2,
+            DenseMatrix::new(4),
+            vec![3, 4],
+            Vec::new(),
+            Vec::new(),
+            &[vec![(0, 0.0), (9, 0.25)], vec![(1, 1.0)]],
+        );
+        let reply2: KnnBundle<DenseMatrix> = KnnBundle::from_bytes(&reply.to_bytes());
+        assert_eq!(reply2.pts.len(), 0);
+        assert_eq!(reply2.rows(), reply.rows());
+    }
+
+    #[test]
+    fn knn_bundle_malformed_bytes_are_typed_errors() {
+        use crate::points::WireError;
+        let good = knn_sample().to_bytes();
+        // Every truncation fails (count prefixes + trailing check).
+        for cut in 0..good.len() {
+            let r: Result<KnnBundle<DenseMatrix>, _> = KnnBundle::try_from_bytes(&good[..cut]);
+            assert!(r.is_err(), "cut={cut} decoded");
+        }
+        // Trailing garbage rejected.
+        let mut padded = good.clone();
+        padded.push(1);
+        assert!(matches!(
+            KnnBundle::<DenseMatrix>::try_from_bytes(&padded),
+            Err(WireError::Corrupt { .. })
+        ));
+        // Structural corruption: rows wider than k.
+        let wide = KnnBundle::from_rows(
+            1,
+            DenseMatrix::from_flat(1, vec![0.0]),
+            vec![0],
+            Vec::new(),
+            Vec::new(),
+            &[vec![(1, 0.1)]],
+        );
+        let mut bytes = wide.to_bytes();
+        // Patch k (first 4 bytes) down to 0: the one-candidate row now
+        // exceeds k.
+        bytes[0] = 0;
+        assert!(matches!(
+            KnnBundle::<DenseMatrix>::try_from_bytes(&bytes),
+            Err(WireError::Corrupt { .. })
+        ));
+        // A row out of (distance, id) order is rejected.
+        let mut unsorted = knn_sample();
+        unsorted.cand_ids.swap(0, 1);
+        unsorted.cand_dists.swap(0, 1);
+        assert!(matches!(
+            KnnBundle::<DenseMatrix>::try_from_bytes(&unsorted.to_bytes()),
+            Err(WireError::Corrupt { .. })
+        ));
+        // Candidate beyond its cap rejected.
+        let mut beyond = knn_sample();
+        beyond.caps[0] = 0.1;
+        assert!(matches!(
+            KnnBundle::<DenseMatrix>::try_from_bytes(&beyond.to_bytes()),
+            Err(WireError::Corrupt { .. })
+        ));
+        // NaN cap rejected (infinite caps are legal).
+        let mut nan = knn_sample();
+        nan.caps[1] = f64::NAN;
+        assert!(matches!(
+            KnnBundle::<DenseMatrix>::try_from_bytes(&nan.to_bytes()),
+            Err(WireError::Corrupt { .. })
+        ));
+        // A huge declared array length must not allocate/panic.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&3u32.to_le_bytes());
+        let ppay = DenseMatrix::new(2).to_bytes();
+        crate::points::put_u64(&mut huge, ppay.len() as u64);
+        huge.extend_from_slice(&ppay);
+        crate::points::put_u64(&mut huge, u64::MAX); // absurd gid count
+        assert!(matches!(
+            KnnBundle::<DenseMatrix>::try_from_bytes(&huge),
+            Err(WireError::Truncated { .. })
+        ));
+        // Pristine bytes still decode.
+        assert!(KnnBundle::<DenseMatrix>::try_from_bytes(&good).is_ok());
     }
 
     #[test]

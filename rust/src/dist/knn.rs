@@ -1,0 +1,517 @@
+//! Distributed exact k-NN graph construction by **per-point radius
+//! refinement** (DESIGN.md §9) — the k-nearest counterpart of the three
+//! ε-graph algorithms, behind the same rank layouts.
+//!
+//! Every layout follows the same three-step protocol:
+//!
+//! 1. **seed** — each rank builds a cover tree over the points it owns and
+//!    answers `k+1`-NN for each of them locally (dropping the self match).
+//!    The k-th seed distance is an upper bound on the point's true global
+//!    k-th distance: its **radius cap** (`+∞` while fewer than k local
+//!    candidates exist).
+//! 2. **refine** — caps and running top-k rows travel between ranks in
+//!    [`KnnBundle`] messages; every remote rank answers with
+//!    `CoverTree::knn_within(q, k, cap)` — a *bounded* branch-and-bound
+//!    that prunes with the cover-tree radius bound, so remote work scales
+//!    with the candidate radius, not the tree size. Merging under the
+//!    total order `(distance, id)` only ever shrinks the cap
+//!    (monotonically), and a shrunk cap makes every later hop cheaper.
+//! 3. **certify** — once a point's row has absorbed a bounded answer from
+//!    every rank, the cap *is* the global k-th distance and the row is the
+//!    exact global top-k: any better candidate would live on some rank,
+//!    within the cap that rank was queried with, and would have been
+//!    returned by its bounded search.
+//!
+//! Layouts differ only in how the bundles move:
+//!
+//! * **systolic-ring** — each rank's whole block circulates the ring with
+//!   its rows aboard; every stop refines the visiting rows against the
+//!   local tree; the `P`-th transfer brings the block home certified.
+//! * **landmark-coll** — after the shared Voronoi partition, each home
+//!   point is sent (point + cap, one `KnnBundle` per destination rank) to
+//!   exactly the ranks owning a cell that can intersect its cap ball — the
+//!   per-point Lemma-1 rule `d(p, c_i) ≤ d(p, C) + 2·cap` — in one
+//!   alltoallv; bounded answers come back in a second alltoallv and merge
+//!   at home.
+//! * **landmark-ring** — each rank's union bundle (points relevant to
+//!   *any* foreign cell) circulates the ring; every stop re-applies the
+//!   Lemma-1 rule with the *current* (already shrunk) cap before querying,
+//!   so refinement work decays as the bundle travels.
+//!
+//! Results are **bit-deterministic** across rank counts, pool sizes and
+//! layouts: every distance is the scalar `Metric::dist` value carried in
+//! `f64` end to end, and every selection resolves ties by `(distance,
+//! id)`. The conformance gate is `tests/knn_conformance.rs`.
+
+use super::landmark::{lemma1_bound, partition_points, Partitioned};
+use super::{GhostMode, KnnBundle, RunConfig};
+use crate::comm::Comm;
+use crate::covertree::{BuildParams, CoverTree};
+use crate::metric::Metric;
+use crate::points::PointSet;
+use crate::util::{block_partition, div_ceil, Pool};
+use std::collections::HashMap;
+
+/// Tag base for the circulating k-NN bundles (one tag per ring step).
+const TAG_KNN_RING: u32 = 0x7100;
+/// Tag base for the landmark-ring k-NN bundles.
+const TAG_KNN_GHOST_RING: u32 = 0x7200;
+
+/// Fixed shard size for pooled per-point query loops — fixed (not derived
+/// from the pool width) so the work decomposition, and therefore every
+/// emitted row, is identical at every thread count.
+const KNN_CHUNK: usize = 256;
+
+/// The current radius cap of a running top-k row: its k-th distance once
+/// full, `+∞` before.
+fn row_cap(row: &[(u32, f64)], k: usize) -> f64 {
+    if k > 0 && row.len() >= k {
+        row[k - 1].1
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Merge bounded-query candidates into a running row, keeping the k
+/// smallest under the total order `(distance, id)`. Candidate sets from
+/// distinct ranks are disjoint (each rank owns a disjoint point set), so
+/// no dedup is needed and the result is independent of merge order.
+fn merge_row(row: &mut Vec<(u32, f64)>, k: usize, cands: &[(u32, f64)]) {
+    if cands.is_empty() {
+        return;
+    }
+    row.extend_from_slice(cands);
+    row.sort_unstable_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
+    row.truncate(k);
+}
+
+/// Seed phase: the local `k+1`-NN of every tree point against its own
+/// tree, self match dropped — each row is the local top-k and its k-th
+/// distance the initial cap. Pooled over fixed chunks, rows in tree order.
+fn seed_rows<P: PointSet, M: Metric<P>>(
+    tree: &CoverTree<P>,
+    metric: &M,
+    k: usize,
+    pool: &Pool,
+) -> Vec<Vec<(u32, f64)>> {
+    let n = tree.num_points();
+    if n == 0 || k == 0 {
+        return vec![Vec::new(); n];
+    }
+    let nparts = div_ceil(n, KNN_CHUNK);
+    let parts = pool.run_indexed(nparts, |w| {
+        let lo = w * KNN_CHUNK;
+        let hi = ((w + 1) * KNN_CHUNK).min(n);
+        (lo..hi)
+            .map(|i| {
+                let own = tree.global_id(i);
+                let mut row: Vec<(u32, f64)> = tree
+                    .knn_within(metric, tree.points().point(i), k + 1, f64::INFINITY)
+                    .into_iter()
+                    .filter(|&(g, _)| g != own)
+                    .collect();
+                row.truncate(k);
+                row
+            })
+            .collect::<Vec<_>>()
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Refine the selected visiting rows against the local tree: one bounded
+/// `knn_within` per selected point at its current cap, merged in place.
+/// Pooled over fixed chunks; per-point work is independent, so the result
+/// is identical at every pool size.
+fn refine_rows<P: PointSet, M: Metric<P>>(
+    tree: &CoverTree<P>,
+    metric: &M,
+    k: usize,
+    pool: &Pool,
+    pts: &P,
+    idx: &[usize],
+    rows: &mut [Vec<(u32, f64)>],
+) {
+    if tree.num_points() == 0 || idx.is_empty() || k == 0 {
+        return;
+    }
+    let caps: Vec<f64> = idx.iter().map(|&i| row_cap(&rows[i], k)).collect();
+    let nparts = div_ceil(idx.len(), KNN_CHUNK);
+    let parts = pool.run_indexed(nparts, |w| {
+        let lo = w * KNN_CHUNK;
+        let hi = ((w + 1) * KNN_CHUNK).min(idx.len());
+        (lo..hi)
+            .map(|j| tree.knn_within(metric, pts.point(idx[j]), k, caps[j]))
+            .collect::<Vec<_>>()
+    });
+    let mut j = 0usize;
+    for part in parts {
+        for cands in part {
+            merge_row(&mut rows[idx[j]], k, &cands);
+            j += 1;
+        }
+    }
+}
+
+/// In-memory form of a circulating bundle: points, gids, optional `d(p,C)`
+/// and per-point rows (caps are derived from the rows at serialization).
+struct Traveler<P: PointSet> {
+    pts: P,
+    gids: Vec<u32>,
+    dpc: Vec<f64>,
+    rows: Vec<Vec<(u32, f64)>>,
+}
+
+impl<P: PointSet> Traveler<P> {
+    /// Serialize for the next ring hop, consuming the traveler — the next
+    /// state is whatever arrives from the predecessor, so nothing is
+    /// cloned on the hot exchange path.
+    fn into_bundle(self, k: usize) -> KnnBundle<P> {
+        let caps: Vec<f64> = self.rows.iter().map(|r| row_cap(r, k)).collect();
+        KnnBundle::from_rows(k, self.pts, self.gids, self.dpc, caps, &self.rows)
+    }
+
+    fn from_bundle(b: KnnBundle<P>) -> Self {
+        let rows = b.rows();
+        Traveler { pts: b.pts, gids: b.gids, dpc: b.dpc, rows }
+    }
+}
+
+/// Reply-shaped bundle: the final per-rank result handed to the driver
+/// (gids + certified rows only).
+fn reply_bundle<P: PointSet>(
+    like: &P,
+    k: usize,
+    gids: Vec<u32>,
+    rows: &[Vec<(u32, f64)>],
+) -> KnnBundle<P> {
+    KnnBundle::from_rows(k, like.empty_like(), gids, Vec::new(), Vec::new(), rows)
+}
+
+/// Algorithm 4 layout (`systolic-ring`), k-NN variant: blocks of the
+/// canonical distribution circulate with their rows aboard; `P` transfers
+/// bring every block home certified.
+pub(super) fn run_systolic<P: PointSet, M: Metric<P>>(
+    comm: &mut Comm,
+    pts: &P,
+    metric: &M,
+    k: usize,
+    cfg: &RunConfig,
+) -> KnnBundle<P> {
+    let n = pts.len();
+    let p = comm.size();
+    let rank = comm.rank();
+    let pool = Pool::new(cfg.pool_threads());
+    if n == 0 {
+        return reply_bundle(pts, k, Vec::new(), &[]);
+    }
+
+    comm.set_phase("tree");
+    let (off, len) = block_partition(n, p, rank);
+    let block = pts.slice(off, off + len);
+    let gids: Vec<u32> = (off as u32..(off + len) as u32).collect();
+    let params = BuildParams { leaf_size: cfg.leaf_size.max(1), root: 0 };
+    let tree = CoverTree::build_with_ids_par(block.clone(), gids.clone(), metric, &params, &pool);
+    comm.charge_child_cpu(pool.drain_cpu());
+
+    comm.set_phase("seed");
+    let mut rows = seed_rows(&tree, metric, k, &pool);
+    comm.charge_child_cpu(pool.drain_cpu());
+
+    comm.set_phase("refine");
+    if p > 1 {
+        let next = (rank + 1) % p;
+        let prev = (rank + p - 1) % p;
+        let mut visiting = Traveler { pts: block, gids: gids.clone(), dpc: Vec::new(), rows };
+        // P transfers: after s the block in hand started at rank − s; the
+        // final transfer returns our own block, refined at every foreign
+        // rank. (The ε ring stops one step earlier because its results stay
+        // where they are found; k-NN rows must come home to merge.)
+        for s in 1..=p {
+            let bytes = visiting.into_bundle(k).to_bytes();
+            let ((), received) =
+                comm.sendrecv_overlapped(next, prev, TAG_KNN_RING + s as u32, bytes, || ());
+            visiting = Traveler::from_bundle(KnnBundle::from_bytes(&received));
+            if s < p {
+                let idx: Vec<usize> = (0..visiting.gids.len()).collect();
+                refine_rows(&tree, metric, k, &pool, &visiting.pts, &idx, &mut visiting.rows);
+            }
+        }
+        comm.charge_child_cpu(pool.drain_cpu());
+        debug_assert_eq!(visiting.gids, gids, "ring did not return the home block");
+        rows = visiting.rows;
+    }
+    reply_bundle(pts, k, gids, &rows)
+}
+
+/// Algorithms 5–6 layouts (`landmark-coll` / `landmark-ring`), k-NN
+/// variant over the shared Voronoi partition.
+pub(super) fn run_landmark<P: PointSet, M: Metric<P>>(
+    comm: &mut Comm,
+    pts: &P,
+    metric: &M,
+    k: usize,
+    cfg: &RunConfig,
+    ring: bool,
+) -> KnnBundle<P> {
+    let n = pts.len();
+    let p = comm.size();
+    let rank = comm.rank();
+    let pool = Pool::new(cfg.pool_threads());
+    if n == 0 {
+        return reply_bundle(pts, k, Vec::new(), &[]);
+    }
+    let Partitioned { centers, cell_rank, home } = partition_points(comm, pts, metric, cfg);
+    let m = centers.gids.len();
+
+    comm.set_phase("tree");
+    let params = BuildParams { leaf_size: cfg.leaf_size.max(1), root: 0 };
+    let tree =
+        CoverTree::build_with_ids_par(home.pts.clone(), home.gids.clone(), metric, &params, &pool);
+    comm.charge_child_cpu(pool.drain_cpu());
+
+    comm.set_phase("seed");
+    let mut rows = seed_rows(&tree, metric, k, &pool);
+    comm.charge_child_cpu(pool.drain_cpu());
+
+    comm.set_phase("refine");
+    if !ring {
+        // landmark-coll: request round — each home point travels (point +
+        // cap) to exactly the ranks owning a cell its cap ball can reach.
+        let mut req_idx: Vec<Vec<usize>> = vec![Vec::new(); p];
+        let mut stamp: Vec<usize> = vec![usize::MAX; p];
+        for hi in 0..home.len() {
+            let bound = lemma1_bound(home.dpc[hi], row_cap(&rows[hi], k));
+            for c in 0..m {
+                let dest = cell_rank[c];
+                if dest == rank || stamp[dest] == hi {
+                    continue;
+                }
+                let keep = match cfg.ghost {
+                    GhostMode::All => true,
+                    GhostMode::Lemma1 => {
+                        metric.dist_between(&home.pts, hi, &centers.pts, c) <= bound
+                    }
+                };
+                if keep {
+                    stamp[dest] = hi;
+                    req_idx[dest].push(hi);
+                }
+            }
+        }
+        let bufs: Vec<Vec<u8>> = req_idx
+            .iter()
+            .map(|idx| {
+                let sub = home.select(idx);
+                let caps: Vec<f64> = idx.iter().map(|&hi| row_cap(&rows[hi], k)).collect();
+                let empty_rows = vec![Vec::new(); idx.len()];
+                KnnBundle::from_rows(k, sub.pts, sub.gids, Vec::new(), caps, &empty_rows)
+                    .to_bytes()
+            })
+            .collect();
+        // Reply round: bounded answers from the home tree, sent back to
+        // each requester keyed by gid.
+        let replies: Vec<Vec<u8>> = comm
+            .alltoallv(bufs)
+            .iter()
+            .map(|b| {
+                let req: KnnBundle<P> = KnnBundle::from_bytes(b);
+                let mq = req.len();
+                let nparts = div_ceil(mq, KNN_CHUNK);
+                let parts = pool.run_indexed(nparts, |w| {
+                    let lo = w * KNN_CHUNK;
+                    let hi = ((w + 1) * KNN_CHUNK).min(mq);
+                    (lo..hi)
+                        .map(|i| tree.knn_within(metric, req.pts.point(i), k, req.caps[i]))
+                        .collect::<Vec<_>>()
+                });
+                let out_rows: Vec<Vec<(u32, f64)>> = parts.into_iter().flatten().collect();
+                reply_bundle(pts, k, req.gids.clone(), &out_rows).to_bytes()
+            })
+            .collect();
+        comm.charge_child_cpu(pool.drain_cpu());
+        let pos: HashMap<u32, usize> =
+            home.gids.iter().enumerate().map(|(i, &g)| (g, i)).collect();
+        for b in &comm.alltoallv(replies) {
+            let reply: KnnBundle<P> = KnnBundle::from_bytes(b);
+            let reply_rows = reply.rows();
+            for (i, &gid) in reply.gids.iter().enumerate() {
+                merge_row(&mut rows[pos[&gid]], k, &reply_rows[i]);
+            }
+        }
+    } else if p > 1 {
+        // landmark-ring: the union bundle of points relevant to any
+        // foreign cell circulates; every stop re-applies the Lemma-1 rule
+        // with the current (shrunk) cap before querying.
+        let my_cells: Vec<usize> = (0..m).filter(|&c| cell_rank[c] == rank).collect();
+        let any_foreign_cell = (0..m).any(|c| cell_rank[c] != rank);
+        let union_idx: Vec<usize> = (0..home.len())
+            .filter(|&hi| match cfg.ghost {
+                GhostMode::All => any_foreign_cell,
+                GhostMode::Lemma1 => {
+                    let bound = lemma1_bound(home.dpc[hi], row_cap(&rows[hi], k));
+                    (0..m).any(|c| {
+                        cell_rank[c] != rank
+                            && metric.dist_between(&home.pts, hi, &centers.pts, c) <= bound
+                    })
+                }
+            })
+            .collect();
+        let home_gids: Vec<u32> = union_idx.iter().map(|&hi| home.gids[hi]).collect();
+        let sub = home.select(&union_idx);
+        let sel_rows: Vec<Vec<(u32, f64)>> =
+            union_idx.iter().map(|&hi| rows[hi].clone()).collect();
+        let mut visiting =
+            Traveler { pts: sub.pts, gids: sub.gids, dpc: sub.dpc, rows: sel_rows };
+        let next = (rank + 1) % p;
+        let prev = (rank + p - 1) % p;
+        for s in 1..=p {
+            let bytes = visiting.into_bundle(k).to_bytes();
+            let ((), received) =
+                comm.sendrecv_overlapped(next, prev, TAG_KNN_GHOST_RING + s as u32, bytes, || ());
+            visiting = Traveler::from_bundle(KnnBundle::from_bytes(&received));
+            if s < p {
+                let idx: Vec<usize> = (0..visiting.gids.len())
+                    .filter(|&i| match cfg.ghost {
+                        GhostMode::All => !my_cells.is_empty(),
+                        GhostMode::Lemma1 => {
+                            let bound =
+                                lemma1_bound(visiting.dpc[i], row_cap(&visiting.rows[i], k));
+                            my_cells.iter().any(|&c| {
+                                metric.dist_between(&visiting.pts, i, &centers.pts, c) <= bound
+                            })
+                        }
+                    })
+                    .collect();
+                refine_rows(&tree, metric, k, &pool, &visiting.pts, &idx, &mut visiting.rows);
+            }
+        }
+        comm.charge_child_cpu(pool.drain_cpu());
+        debug_assert_eq!(visiting.gids, home_gids, "ring did not return the home bundle");
+        for (j, &hi) in union_idx.iter().enumerate() {
+            rows[hi] = std::mem::take(&mut visiting.rows[j]);
+        }
+    }
+    reply_bundle(pts, k, home.gids.clone(), &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_knn_graph, Algorithm, GhostMode, RunConfig};
+    use crate::data::synthetic;
+    use crate::metric::Euclidean;
+    use crate::points::PointSet;
+    use crate::testkit::brute_knn_rows;
+    use crate::util::Rng;
+
+    #[test]
+    fn all_layouts_exact_small() {
+        let mut rng = Rng::new(700);
+        let pts = synthetic::gaussian_mixture(&mut rng, 70, 3, 3, 0.2);
+        for k in [1usize, 4] {
+            let want = brute_knn_rows(&pts, &Euclidean, k);
+            for algorithm in Algorithm::ALL {
+                for ranks in [1usize, 3, 6] {
+                    let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+                    let got = run_knn_graph(&pts, Euclidean, k, &cfg);
+                    assert_eq!(got.knn.num_vertices(), 70);
+                    assert_eq!(got.ranks.len(), ranks);
+                    for i in 0..70 {
+                        assert_eq!(
+                            got.knn.row(i),
+                            want[i],
+                            "{} r={ranks} k={k} i={i}",
+                            algorithm.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ghost_all_matches_lemma1() {
+        let mut rng = Rng::new(701);
+        let pts = synthetic::uniform(&mut rng, 60, 3, 1.0);
+        let want = brute_knn_rows(&pts, &Euclidean, 5);
+        for algorithm in [Algorithm::LandmarkColl, Algorithm::LandmarkRing] {
+            for ghost in [GhostMode::Lemma1, GhostMode::All] {
+                let cfg = RunConfig { ranks: 4, algorithm, ghost, ..Default::default() };
+                let got = run_knn_graph(&pts, Euclidean, 5, &cfg);
+                for i in 0..60 {
+                    assert_eq!(got.knn.row(i), want[i], "{} {ghost:?}", algorithm.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_exceeding_points_yields_full_rows() {
+        let mut rng = Rng::new(702);
+        let pts = synthetic::uniform(&mut rng, 9, 2, 1.0);
+        let want = brute_knn_rows(&pts, &Euclidean, 100);
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
+            let got = run_knn_graph(&pts, Euclidean, 100, &cfg);
+            for i in 0..9 {
+                assert_eq!(got.knn.row(i).len(), 8);
+                assert_eq!(got.knn.row(i), want[i], "{}", algorithm.name());
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_resolve_ties_by_id() {
+        let mut rng = Rng::new(703);
+        let base = synthetic::uniform(&mut rng, 30, 2, 1.0);
+        let pts = synthetic::with_duplicates(&mut rng, &base, 30);
+        let want = brute_knn_rows(&pts, &Euclidean, 3);
+        for algorithm in Algorithm::ALL {
+            for ranks in [1usize, 5] {
+                let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+                let got = run_knn_graph(&pts, Euclidean, 3, &cfg);
+                for i in 0..pts.len() {
+                    assert_eq!(got.knn.row(i), want[i], "{} r={ranks} i={i}", algorithm.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let pts = crate::points::DenseMatrix::new(3);
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 3, algorithm, ..Default::default() };
+            let res = run_knn_graph(&pts, Euclidean, 5, &cfg);
+            assert_eq!(res.knn.num_vertices(), 0);
+            assert_eq!(res.graph.num_vertices(), 0);
+        }
+        // One point: rows are empty but present.
+        let mut one = crate::points::DenseMatrix::new(2);
+        one.push(&[0.5, 0.5]);
+        for algorithm in Algorithm::ALL {
+            let cfg = RunConfig { ranks: 2, algorithm, ..Default::default() };
+            let res = run_knn_graph(&one, Euclidean, 5, &cfg);
+            assert_eq!(res.knn.num_vertices(), 1);
+            assert!(res.knn.row(0).is_empty());
+        }
+    }
+
+    #[test]
+    fn near_graph_projection_is_union_of_arcs() {
+        let mut rng = Rng::new(704);
+        let pts = synthetic::gaussian_mixture(&mut rng, 50, 3, 2, 0.2);
+        let cfg = RunConfig { ranks: 3, ..Default::default() };
+        let got = run_knn_graph(&pts, Euclidean, 4, &cfg);
+        assert_eq!(got.graph.num_vertices(), 50);
+        // Every arc appears as an undirected edge; every vertex keeps at
+        // least its own k arcs.
+        for i in 0..50 {
+            assert!(got.graph.degree(i) >= 4);
+            for (j, d) in got.knn.row_entries(i) {
+                let row = got.graph.neighbors(i);
+                let pos = row.binary_search(&j).expect("arc present in projection");
+                assert!((got.graph.dists(i)[pos] as f64 - d).abs() <= 1e-6 * (1.0 + d));
+            }
+        }
+    }
+}

@@ -42,34 +42,43 @@ const TAG_GHOST_RING: u32 = 0x6100;
 
 /// Floating-point slack for the Lemma-1 prune: admitting extra ghost
 /// candidates only costs traffic, while a rounding-induced rejection would
-/// lose an edge. The bound scales with the magnitudes involved.
+/// lose an edge. The bound scales with the magnitudes involved. The k-NN
+/// refinement loop reuses it with a per-point radius cap in place of ε
+/// (DESIGN.md §9); an infinite cap yields an infinite bound, i.e. "ship
+/// everywhere", which is the exact degenerate behavior wanted before k
+/// candidates are known.
 #[inline]
-fn lemma1_bound(dpc: f64, eps: f64) -> f64 {
+pub(super) fn lemma1_bound(dpc: f64, eps: f64) -> f64 {
     dpc + 2.0 * eps + 1e-9 * (1.0 + dpc + eps)
 }
 
-pub(super) fn run<P: PointSet, M: Metric<P>>(
+/// Output of the shared **partition** phase (the first phase of both the
+/// ε-graph and k-NN landmark algorithms): the broadcast landmark bundle,
+/// the deterministic cell → rank map, and this rank's home points.
+pub(super) struct Partitioned<P: PointSet> {
+    /// Landmark points + their global ids (broadcast from rank 0).
+    pub centers: Bundle<P>,
+    /// Cell → owning rank, identical on every rank.
+    pub cell_rank: Vec<usize>,
+    /// Points homed on this rank, with `gids`, `cells` and `dpc` attached.
+    pub home: Bundle<P>,
+}
+
+/// The landmark algorithms' partition phase, shared verbatim between the
+/// ε-graph and k-NN paths: rank 0 selects `m` landmarks (random or greedy
+/// permutation) and broadcasts them; every rank assigns its block of the
+/// canonical distribution to the nearest landmark; global cell sizes are
+/// combined; cells are coalesced onto ranks (multiway LPT or cyclic); one
+/// alltoallv moves every point to the rank owning its cell.
+pub(super) fn partition_points<P: PointSet, M: Metric<P>>(
     comm: &mut Comm,
     pts: &P,
     metric: &M,
-    eps: f64,
     cfg: &RunConfig,
-    ring: bool,
-) -> WeightedEdgeList {
-    let mut edges = WeightedEdgeList::new();
+) -> Partitioned<P> {
     let n = pts.len();
-    if n == 0 {
-        return edges;
-    }
     let p = comm.size();
     let rank = comm.rank();
-    // Intra-rank task pool for the build/query phases; its worker CPU is
-    // folded into this rank's compute charge at each phase boundary.
-    let pool = Pool::new(cfg.pool_threads());
-
-    // ------------------------------------------------------------------
-    // phase: partition
-    // ------------------------------------------------------------------
     comm.set_phase("partition");
 
     // Landmark selection on rank 0, broadcast as a Bundle so the α-β model
@@ -138,6 +147,33 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     for b in &comm.alltoallv(bufs) {
         home.append(&Bundle::from_bytes(b));
     }
+    Partitioned { centers, cell_rank, home }
+}
+
+pub(super) fn run<P: PointSet, M: Metric<P>>(
+    comm: &mut Comm,
+    pts: &P,
+    metric: &M,
+    eps: f64,
+    cfg: &RunConfig,
+    ring: bool,
+) -> WeightedEdgeList {
+    let mut edges = WeightedEdgeList::new();
+    let n = pts.len();
+    if n == 0 {
+        return edges;
+    }
+    let p = comm.size();
+    let rank = comm.rank();
+    // Intra-rank task pool for the build/query phases; its worker CPU is
+    // folded into this rank's compute charge at each phase boundary.
+    let pool = Pool::new(cfg.pool_threads());
+
+    // ------------------------------------------------------------------
+    // phase: partition (shared with the k-NN path — see partition_points)
+    // ------------------------------------------------------------------
+    let Partitioned { centers, cell_rank, home } = partition_points(comm, pts, metric, cfg);
+    let m = centers.gids.len();
 
     // ------------------------------------------------------------------
     // phase: tree

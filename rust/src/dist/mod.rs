@@ -18,17 +18,24 @@
 //! Every algorithm is **exact**: the output equals the brute-force edge
 //! set for every metric, dataset shape and rank count (the correctness
 //! gate of `tests/correctness_sweep.rs`, DESIGN.md §6).
+//!
+//! [`run_knn_graph`] is the k-nearest counterpart: exact distributed k-NN
+//! graph construction by per-point radius refinement over the same three
+//! rank layouts (DESIGN.md §9), returning a bit-deterministic directed
+//! [`KnnGraph`] plus its undirected [`NearGraph`] projection. Its
+//! correctness gate is `tests/knn_conformance.rs`.
 
 mod bipartite;
 mod bundle;
+mod knn;
 mod landmark;
 mod systolic;
 
 pub use bipartite::{run_bipartite_join, BipartiteResult};
-pub use bundle::{Bundle, EdgeBundle};
+pub use bundle::{Bundle, EdgeBundle, KnnBundle};
 
 use crate::comm::{self, CommStats, CostModel};
-use crate::graph::{EdgeList, NearGraph, WeightedEdgeList};
+use crate::graph::{EdgeList, KnnGraph, NearGraph, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
 
@@ -232,6 +239,73 @@ pub fn run_epsilon_graph<P: PointSet, M: Metric<P>>(
     edges.canonicalize();
     let graph = weighted.clone().into_near_graph(pts.len());
     RunResult { edges, weighted, graph, makespan, ranks }
+}
+
+/// Result of a distributed k-NN graph construction.
+#[derive(Clone, Debug)]
+pub struct KnnResult {
+    /// The exact directed k-NN graph: row `i` holds the `min(k, n − 1)`
+    /// nearest other points of `i`, ascending by `(distance, id)` —
+    /// bit-deterministic across rank counts, pool sizes and layouts.
+    pub knn: KnnGraph,
+    /// The undirected union of the k-NN arcs (each unordered pair once,
+    /// weights narrowed to `f32` at storage) — the same [`NearGraph`] type
+    /// every ε path returns, fed through the `GraphSink` machinery.
+    pub graph: NearGraph,
+    /// Simulated job makespan: the maximum rank virtual time.
+    pub makespan: f64,
+    /// Per-rank reports, indexed by rank.
+    pub ranks: Vec<RankReport>,
+}
+
+/// Build the exact k-NN graph of `pts` under `metric` with the configured
+/// distributed algorithm — the k-nearest counterpart of
+/// [`run_epsilon_graph`], sharing its rank layouts, cost model and typed
+/// driver (DESIGN.md §9).
+///
+/// The result equals single-rank brute force bit-for-bit (ids and `f64`
+/// distance bits, ties by `(distance, id)`) for every algorithm, metric
+/// and configuration; the algorithms differ only in simulated time and
+/// traffic. Each rank hands its certified rows back through the
+/// [`KnnBundle`] wire format.
+pub fn run_knn_graph<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    k: usize,
+    cfg: &RunConfig,
+) -> KnnResult {
+    let p = cfg.ranks.max(1);
+    let outputs = comm::run_world(p, cfg.cost, |c| {
+        match cfg.algorithm {
+            Algorithm::SystolicRing => knn::run_systolic(c, pts, &metric, k, cfg),
+            Algorithm::LandmarkColl => knn::run_landmark(c, pts, &metric, k, cfg, false),
+            Algorithm::LandmarkRing => knn::run_landmark(c, pts, &metric, k, cfg, true),
+        }
+        .to_bytes()
+    });
+    let makespan = comm::makespan(&outputs);
+    let n = pts.len();
+    let mut rows: Vec<Option<Vec<(u32, f64)>>> = vec![None; n];
+    let mut ranks = Vec::with_capacity(outputs.len());
+    for o in outputs {
+        let bundle: KnnBundle<P> =
+            KnnBundle::try_from_bytes(&o.result).expect("per-rank knn bundle decodes");
+        let mut bundle_rows = bundle.rows();
+        for (i, &gid) in bundle.gids.iter().enumerate() {
+            let slot = &mut rows[gid as usize];
+            assert!(slot.is_none(), "point {gid} reported by two ranks");
+            *slot = Some(std::mem::take(&mut bundle_rows[i]));
+        }
+        ranks.push(RankReport { rank: o.rank, virtual_time: o.virtual_time, stats: o.stats });
+    }
+    let rows: Vec<Vec<(u32, f64)>> = rows
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("point {i} reported by no rank")))
+        .collect();
+    let knn = KnnGraph::from_rows(n, k, rows);
+    let graph = knn.to_near_graph();
+    KnnResult { knn, graph, makespan, ranks }
 }
 
 #[cfg(test)]

@@ -1,0 +1,336 @@
+//! The directed k-NN graph container: [`KnnGraph`], the result type of
+//! `dist::run_knn_graph` and `index::NearIndex::knn_graph`.
+//!
+//! Unlike the undirected ε-graph ([`super::NearGraph`]), a k-NN graph is
+//! *directed* and *uniform*: row `i` holds exactly `min(k, n − 1)` arcs —
+//! the k nearest other points of vertex `i` — ascending by
+//! `(distance, id)`. Distances are kept in `f64` (exactly what
+//! `Metric::dist` returned), so the tie order stored on disk is the tie
+//! order the construction certified; the undirected projection
+//! ([`KnnGraph::to_near_graph`]) narrows to `f32` at storage like every
+//! other path.
+//!
+//! **Determinism contract** (DESIGN.md §9): two `KnnGraph`s built over the
+//! same input with any rank count, pool size or algorithm are bit-equal —
+//! ids and distance bits — because every construction path resolves ties
+//! by the total order `(distance, id)`.
+//!
+//! The binary file format (`NGK-KNN1`) is length- and invariant-checked on
+//! decode: [`KnnGraph::from_bytes`] returns a typed [`WireError`] on
+//! truncated, oversized or internally inconsistent bytes, never panics.
+
+use super::{GraphSink, NearGraph, WeightedEdgeList};
+use crate::points::{put_u64, try_get_u64, try_take, WireError};
+
+/// Magic prefix of the binary `.knn` graph file format.
+const KNNGRAPH_MAGIC: &[u8; 8] = b"NGK-KNN1";
+
+/// Directed k-NN graph in CSR form: row `i` holds the `min(k, n − 1)`
+/// nearest other vertices of `i`, ascending by `(distance, id)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KnnGraph {
+    k: usize,
+    offsets: Vec<usize>,
+    neighbors: Vec<u32>,
+    dists: Vec<f64>,
+}
+
+impl KnnGraph {
+    /// The empty graph over `n` vertices (only valid for `k == 0` or
+    /// `n ≤ 1`, where every row is legitimately empty).
+    pub fn empty(n: usize, k: usize) -> Self {
+        assert!(k == 0 || n <= 1, "empty KnnGraph needs k=0 or n<=1");
+        KnnGraph { k, offsets: vec![0; n + 1], neighbors: Vec::new(), dists: Vec::new() }
+    }
+
+    /// Build from per-vertex rows: `rows[i]` is the `(id, distance)` list
+    /// of vertex `i`, which must hold exactly `min(k, n − 1)` entries,
+    /// strictly ascending by `(distance, id)`, self-free and in-range.
+    /// Panics on violation — rows come from in-process construction, not
+    /// the wire (the wire path is [`KnnGraph::from_bytes`]).
+    pub fn from_rows(n: usize, k: usize, rows: Vec<Vec<(u32, f64)>>) -> Self {
+        assert_eq!(rows.len(), n, "one row per vertex");
+        let want = k.min(n.saturating_sub(1));
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        let mut neighbors = Vec::with_capacity(n * want);
+        let mut dists = Vec::with_capacity(n * want);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), want, "row {i}: {} entries, want {want}", row.len());
+            for w in row.windows(2) {
+                assert!(
+                    (w[0].1, w[0].0) < (w[1].1, w[1].0),
+                    "row {i} not strictly ascending by (distance, id)"
+                );
+            }
+            for &(j, d) in row {
+                assert!(j as usize != i, "self-arc in row {i}");
+                assert!((j as usize) < n, "row {i}: neighbor {j} out of range {n}");
+                assert!(d.is_finite() && d >= 0.0, "row {i}: invalid distance {d}");
+                neighbors.push(j);
+                dists.push(d);
+            }
+            offsets.push(neighbors.len());
+        }
+        KnnGraph { k, offsets, neighbors, dists }
+    }
+
+    /// The `k` this graph was built for (rows hold `min(k, n − 1)` arcs).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total number of directed arcs.
+    pub fn num_arcs(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Out-neighbors of vertex `v`, ascending by `(distance, id)`.
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Distances aligned with [`KnnGraph::neighbors`] (exact `f64`).
+    pub fn dists(&self, v: usize) -> &[f64] {
+        &self.dists[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// `(neighbor, distance)` arcs of vertex `v`, ascending by
+    /// `(distance, id)`.
+    pub fn row_entries(&self, v: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        self.neighbors(v).iter().copied().zip(self.dists(v).iter().copied())
+    }
+
+    /// The row of vertex `v` as an owned `(id, distance)` vector.
+    pub fn row(&self, v: usize) -> Vec<(u32, f64)> {
+        self.row_entries(v).collect()
+    }
+
+    /// Undirected projection: the union of all arcs as a weighted
+    /// [`NearGraph`] (each unordered pair once, duplicate discoveries
+    /// deduplicated keep-min like every other construction path). Arcs
+    /// flow through the [`GraphSink`] interface; weights narrow to `f32`
+    /// at storage.
+    pub fn to_near_graph(&self) -> NearGraph {
+        let mut sink = WeightedEdgeList::new();
+        for u in 0..self.num_vertices() {
+            for (v, d) in self.row_entries(u) {
+                GraphSink::accept(&mut sink, u as u32, v, d);
+            }
+        }
+        sink.into_near_graph(self.num_vertices())
+    }
+
+    /// Serialize as the binary `.knn` file format: the magic prefix, `n`,
+    /// `k`, `nnz` (all u64), then offsets (u64 each), neighbor ids (u32
+    /// each) and exact distances (f64 each).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let n = self.num_vertices();
+        let nnz = self.neighbors.len();
+        let mut buf = Vec::with_capacity(32 + 8 * (n + 1) + 12 * nnz);
+        buf.extend_from_slice(KNNGRAPH_MAGIC);
+        put_u64(&mut buf, n as u64);
+        put_u64(&mut buf, self.k as u64);
+        put_u64(&mut buf, nnz as u64);
+        for &o in &self.offsets {
+            put_u64(&mut buf, o as u64);
+        }
+        for &v in &self.neighbors {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for &d in &self.dists {
+            buf.extend_from_slice(&d.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Length- and invariant-checked inverse of [`KnnGraph::to_bytes`]:
+    /// every structural promise of the type (uniform row width, sorted
+    /// tie-exact rows, self-free in-range arcs, finite non-negative
+    /// distances) is re-validated, so a decoded graph is as trustworthy as
+    /// a constructed one.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        if try_take(bytes, &mut off, 8, "knn-graph magic")? != KNNGRAPH_MAGIC {
+            return Err(WireError::Corrupt { what: "bad knn-graph magic" });
+        }
+        let n = try_get_u64(bytes, &mut off, "knn vertex count")? as usize;
+        let k = try_get_u64(bytes, &mut off, "knn k")? as usize;
+        let nnz = try_get_u64(bytes, &mut off, "knn arc count")? as usize;
+        if nnz != n.saturating_mul(k.min(n.saturating_sub(1))) {
+            return Err(WireError::Corrupt { what: "arc count != n * min(k, n-1)" });
+        }
+        let off_bytes =
+            try_take(bytes, &mut off, n.saturating_add(1).saturating_mul(8), "knn offsets")?;
+        let nbr_bytes = try_take(bytes, &mut off, nnz.saturating_mul(4), "knn neighbor ids")?;
+        let dist_bytes = try_take(bytes, &mut off, nnz.saturating_mul(8), "knn distances")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after knn payload" });
+        }
+        let offsets: Vec<usize> = off_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let want = k.min(n.saturating_sub(1));
+        if offsets.first() != Some(&0)
+            || offsets.last() != Some(&nnz)
+            || offsets.windows(2).any(|p| p[1] != p[0].saturating_add(want))
+        {
+            return Err(WireError::Corrupt { what: "knn offsets not uniform rows of min(k, n-1)" });
+        }
+        let neighbors: Vec<u32> =
+            nbr_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let dists: Vec<f64> =
+            dist_bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        if dists.iter().any(|d| !d.is_finite() || *d < 0.0) {
+            return Err(WireError::Corrupt { what: "non-finite or negative knn distance" });
+        }
+        for v in 0..n {
+            let row = &neighbors[offsets[v]..offsets[v + 1]];
+            let rd = &dists[offsets[v]..offsets[v + 1]];
+            if row.iter().any(|&j| j as usize >= n || j as usize == v) {
+                return Err(WireError::Corrupt { what: "knn arc out of range or self-arc" });
+            }
+            for w in 0..row.len().saturating_sub(1) {
+                if (rd[w], row[w]) >= (rd[w + 1], row[w + 1]) {
+                    return Err(WireError::Corrupt {
+                        what: "knn row not strictly ascending by (distance, id)",
+                    });
+                }
+            }
+        }
+        Ok(KnnGraph { k, offsets, neighbors, dists })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> KnnGraph {
+        // 4 vertices, k=2: hand-built consistent rows.
+        KnnGraph::from_rows(
+            4,
+            2,
+            vec![
+                vec![(1, 0.5), (2, 1.0)],
+                vec![(0, 0.5), (2, 0.75)],
+                vec![(1, 0.75), (3, 0.9)],
+                vec![(2, 0.9), (1, 1.5)],
+            ],
+        )
+    }
+
+    #[test]
+    fn rows_and_stats() {
+        let g = sample();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.k(), 2);
+        assert_eq!(g.num_arcs(), 8);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.dists(3), &[0.9, 1.5]);
+        assert_eq!(g.row(1), vec![(0, 0.5), (2, 0.75)]);
+    }
+
+    #[test]
+    fn near_graph_projection_dedups_keep_min() {
+        let g = sample();
+        let ng = g.to_near_graph();
+        assert_eq!(ng.num_vertices(), 4);
+        // Arc (0,1,0.5) is discovered from both sides; (2,3,0.9) likewise.
+        // Unordered union: {0,1} {0,2} {1,2} {2,3} {1,3}.
+        assert_eq!(ng.num_edges(), 5);
+        assert_eq!(ng.neighbors(1), &[0, 2, 3]);
+        assert_eq!(ng.dists(1), &[0.5, 0.75, 1.5]);
+    }
+
+    #[test]
+    fn ties_sorted_by_id() {
+        // Equal distances must come in id order.
+        let g = KnnGraph::from_rows(
+            3,
+            2,
+            vec![
+                vec![(1, 1.0), (2, 1.0)],
+                vec![(0, 1.0), (2, 1.0)],
+                vec![(0, 1.0), (1, 1.0)],
+            ],
+        );
+        assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not strictly ascending")]
+    fn unsorted_row_rejected() {
+        KnnGraph::from_rows(3, 2, vec![
+            vec![(2, 1.0), (1, 1.0)], // tie out of id order
+            vec![(0, 1.0), (2, 1.0)],
+            vec![(0, 1.0), (1, 1.0)],
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "entries, want")]
+    fn short_row_rejected() {
+        KnnGraph::from_rows(3, 2, vec![vec![(1, 1.0)], vec![], vec![]]);
+    }
+
+    #[test]
+    fn k_larger_than_n_means_full_rows() {
+        let g = KnnGraph::from_rows(
+            3,
+            10,
+            vec![
+                vec![(1, 1.0), (2, 2.0)],
+                vec![(0, 1.0), (2, 1.5)],
+                vec![(1, 1.5), (0, 2.0)],
+            ],
+        );
+        assert_eq!(g.k(), 10);
+        assert_eq!(g.num_arcs(), 6, "rows hold min(k, n-1) = 2 arcs");
+    }
+
+    #[test]
+    fn empty_graphs() {
+        let g = KnnGraph::empty(0, 7);
+        assert_eq!(g.num_vertices(), 0);
+        let g = KnnGraph::empty(5, 0);
+        assert_eq!(g.num_arcs(), 0);
+        let round = KnnGraph::from_bytes(&g.to_bytes()).unwrap();
+        assert_eq!(round, g);
+    }
+
+    #[test]
+    fn wire_roundtrip_truncation_and_tamper() {
+        let g = sample();
+        let bytes = g.to_bytes();
+        assert_eq!(KnnGraph::from_bytes(&bytes).unwrap(), g);
+        for cut in 0..bytes.len() {
+            assert!(KnnGraph::from_bytes(&bytes[..cut]).is_err(), "cut={cut} decoded");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(matches!(KnnGraph::from_bytes(&padded), Err(WireError::Corrupt { .. })));
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(KnnGraph::from_bytes(&bad), Err(WireError::Corrupt { .. })));
+        // NaN distance: flip the final f64's exponent bytes.
+        let mut nan = bytes.clone();
+        let last = nan.len() - 1;
+        nan[last] = 0x7F;
+        nan[last - 1] = 0xF8;
+        assert!(KnnGraph::from_bytes(&nan).is_err());
+        // A huge declared arc count must not allocate/panic.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(KNNGRAPH_MAGIC);
+        put_u64(&mut huge, u64::MAX);
+        put_u64(&mut huge, u64::MAX);
+        put_u64(&mut huge, u64::MAX);
+        assert!(matches!(KnnGraph::from_bytes(&huge), Err(WireError::Truncated { .. })));
+    }
+}

@@ -8,8 +8,10 @@
 //! canonicalizes into a [`NearGraph`] — the CSR-with-distances result type
 //! every construction path now returns (see `weighted.rs`).
 
+mod knn;
 mod weighted;
 
+pub use knn::KnnGraph;
 pub use weighted::{
     assert_same_weighted_graph, GraphSink, NearGraph, WeightedEdgeList, WEIGHT_TOL,
 };

@@ -36,7 +36,7 @@
 
 use crate::baseline::{Snn, SnnParams};
 use crate::covertree::{BuildParams, CoverTree, InsertCoverTree};
-use crate::graph::{GraphSink, NearGraph, WeightedEdgeList};
+use crate::graph::{GraphSink, KnnGraph, NearGraph, WeightedEdgeList};
 use crate::metric::{Euclidean, Metric};
 use crate::points::{DenseMatrix, PointSet};
 use crate::util::Pool;
@@ -282,6 +282,30 @@ pub trait NearIndex<P: PointSet, M: Metric<P>>: Send + Sync {
             self.knn_batch(&queries.slice(lo, hi), k)
         });
         parts.into_iter().flatten().collect()
+    }
+
+    /// The exact directed k-NN graph of the indexed points: row `i` holds
+    /// the `min(k, n − 1)` nearest *other* points of `i`, ascending by
+    /// `(distance, id)` — the single-node counterpart of
+    /// `dist::run_knn_graph`, identical at every pool size. Implemented on
+    /// [`NearIndex::knn_batch_par`] with `k + 1` and the self match
+    /// dropped, so every backend serves it through its own k-NN path.
+    fn knn_graph(&self, k: usize, pool: &Pool) -> KnnGraph {
+        let pts = self.points();
+        let n = pts.len();
+        let want = k.min(n.saturating_sub(1));
+        let rows: Vec<Vec<(u32, f64)>> = self
+            .knn_batch_par(pts, k.saturating_add(1), pool)
+            .into_iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let mut row: Vec<(u32, f64)> =
+                    row.into_iter().filter(|&(g, _)| g as usize != i).collect();
+                row.truncate(want);
+                row
+            })
+            .collect();
+        KnnGraph::from_rows(n, k, rows)
     }
 }
 
@@ -649,6 +673,31 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x, y);
         }
+    }
+
+    #[test]
+    fn knn_graph_identical_across_backends_and_pools() {
+        let mut rng = Rng::new(807);
+        let base = synthetic::uniform(&mut rng, 70, 3, 1.0);
+        let pts = synthetic::with_duplicates(&mut rng, &base, 40); // exact ties
+        let reference = build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default())
+            .unwrap()
+            .knn_graph(6, &Pool::new(1));
+        assert_eq!(reference.num_vertices(), pts.len());
+        assert_eq!(reference.k(), 6);
+        for kind in IndexKind::ALL {
+            let idx = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+            for threads in [1usize, 4] {
+                let got = idx.knn_graph(6, &Pool::new(threads));
+                assert_eq!(got, reference, "{} threads={threads}", kind.name());
+            }
+        }
+        // k beyond the point count yields full rows of n-1.
+        let tiny = synthetic::uniform(&mut rng, 5, 2, 1.0);
+        let idx = build_index(IndexKind::CoverTree, &tiny, Euclidean, &IndexParams::default())
+            .unwrap();
+        let g = idx.knn_graph(99, &Pool::new(2));
+        assert_eq!(g.num_arcs(), 5 * 4);
     }
 
     #[test]

@@ -73,9 +73,9 @@ pub mod voronoi;
 pub mod prelude {
     pub use crate::covertree::CoverTree;
     pub use crate::dist::{
-        Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig, RunResult,
+        Algorithm, AssignStrategy, CenterStrategy, GhostMode, KnnResult, RunConfig, RunResult,
     };
-    pub use crate::graph::{Csr, EdgeList, GraphSink, NearGraph, WeightedEdgeList};
+    pub use crate::graph::{Csr, EdgeList, GraphSink, KnnGraph, NearGraph, WeightedEdgeList};
     pub use crate::index::{build_index, IndexKind, IndexParams, NearIndex};
     pub use crate::metric::{
         Chebyshev, Cosine, Counted, Euclidean, Hamming, Levenshtein, Manhattan, Metric,

@@ -23,7 +23,10 @@ use neargraph::bench::{build_workload, Workload};
 use neargraph::cli::Args;
 use neargraph::config::ExperimentConfig;
 use neargraph::data::registry::{DatasetSpec, TABLE1};
-use neargraph::dist::{run_epsilon_graph, Algorithm, RunConfig, RunResult};
+use neargraph::dist::{
+    run_epsilon_graph, run_knn_graph, Algorithm, RankReport, RunConfig, RunResult,
+};
+use neargraph::graph::KnnGraph;
 use neargraph::index::{build_index_par, epsilon_graph, IndexKind, IndexParams};
 use neargraph::metric::{Euclidean, Hamming};
 use neargraph::prelude::*;
@@ -54,6 +57,8 @@ const USAGE: &str = "usage: neargraph <run|datasets|selfcheck> [flags]
     --scale <f>                  fraction of the paper's point count
     --points <n>                 explicit point count (overrides --scale)
     --eps <f>                    radius (omit to calibrate)
+    --knn <k>                    build the exact k-NN graph instead of an
+                                 ε-graph (mutually exclusive with --eps)
     --target-degree <f>          degree target for ε calibration
     --algorithm <name>           systolic-ring | landmark-coll | landmark-ring
     --index <kind>               single-node run through the index facade:
@@ -70,7 +75,8 @@ const USAGE: &str = "usage: neargraph <run|datasets|selfcheck> [flags]
     --output <file>              write the edge list (u v per line)
     --out <file>                 write the weighted graph
     --out-format <tsv|csr>       --out format: \"u v w\" lines (tsv, the
-                                 default) or binary CSR (csr)";
+                                 default) or binary CSR (csr; NGW-CSR1 for
+                                 ε runs, NGK-KNN1 directed rows for --knn)";
 
 fn fail(msg: &str) -> ! {
     eprintln!("error: {msg}");
@@ -113,6 +119,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
     if let Some(v) = args.get_f64("eps")? {
         cfg.eps = v;
+    }
+    args.reject_conflict("knn", "eps")?;
+    if let Some(v) = args.get_usize("knn")? {
+        cfg.knn = v;
+    }
+    if cfg.knn > 0 && cfg.eps > 0.0 {
+        return Err("knn and eps are mutually exclusive (set one of them)".into());
     }
     if let Some(v) = args.get_f64("target-degree")? {
         cfg.target_degree = v;
@@ -204,7 +217,8 @@ enum GraphFormat {
 
 /// One experiment: distributed driver by default, or the single-node index
 /// facade when `--index` is set. Both produce a weighted [`NearGraph`] and
-/// share the writers and the brute-force verifier.
+/// share the writers and the brute-force verifier. `--knn` runs divert to
+/// [`run_knn_one`] before ε is even resolved.
 fn run_one<P: PointSet, M: Metric<P>>(
     pts: &P,
     metric: M,
@@ -212,6 +226,9 @@ fn run_one<P: PointSet, M: Metric<P>>(
     cfg: &ExperimentConfig,
     opts: &OutputOpts,
 ) -> Result<(), String> {
+    if cfg.knn > 0 {
+        return run_knn_one(pts, metric, cfg, opts);
+    }
     let graph = match cfg.index {
         None => {
             let res = run_epsilon_graph(pts, metric.clone(), eps, &cfg.run);
@@ -258,15 +275,15 @@ fn run_one<P: PointSet, M: Metric<P>>(
 }
 
 fn resolve_eps_dense(pts: &DenseMatrix, cfg: &ExperimentConfig) -> f64 {
-    if cfg.eps > 0.0 {
-        return cfg.eps;
+    if cfg.eps > 0.0 || cfg.knn > 0 {
+        return cfg.eps; // --knn runs never use ε; skip calibration
     }
     let mut rng = Rng::new(cfg.seed ^ 0xE95);
     neargraph::data::calibrate_eps(pts, &Euclidean, cfg.target_degree, 50_000, &mut rng)
 }
 
 fn resolve_eps_hamming(codes: &HammingCodes, cfg: &ExperimentConfig) -> f64 {
-    if cfg.eps > 0.0 {
+    if cfg.eps > 0.0 || cfg.knn > 0 {
         return cfg.eps;
     }
     let mut rng = Rng::new(cfg.seed ^ 0xE95);
@@ -288,18 +305,150 @@ fn report(cfg: &ExperimentConfig, eps: f64, res: &RunResult, phases: bool) {
         cfg.run.algorithm.name()
     );
     if phases {
-        println!("\nper-rank phase breakdown (compute+comm seconds):");
-        for r in &res.ranks {
-            print!("  rank {:>3}: ", r.rank);
-            for name in r.stats.phase_order() {
-                let p = r.stats.phases()[name];
-                if p.total() > 0.0 {
-                    print!("{name}={:.4}+{:.4} ", p.compute, p.comm);
-                }
+        print_phase_breakdown(&res.ranks);
+    }
+}
+
+fn print_phase_breakdown(ranks: &[RankReport]) {
+    println!("\nper-rank phase breakdown (compute+comm seconds):");
+    for r in ranks {
+        print!("  rank {:>3}: ", r.rank);
+        for name in r.stats.phase_order() {
+            let p = r.stats.phases()[name];
+            if p.total() > 0.0 {
+                print!("{name}={:.4}+{:.4} ", p.compute, p.comm);
             }
-            println!("| bytes_sent={}", r.stats.bytes_sent());
+        }
+        println!("| bytes_sent={}", r.stats.bytes_sent());
+    }
+}
+
+/// One k-NN experiment: `dist::run_knn_graph` by default, or the facade's
+/// `knn_graph` when `--index` is set. Both produce the exact directed
+/// [`KnnGraph`] and share the writers and the brute-force verifier.
+fn run_knn_one<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    cfg: &ExperimentConfig,
+    opts: &OutputOpts,
+) -> Result<(), String> {
+    let k = cfg.knn;
+    let knn = match cfg.index {
+        None => {
+            let res = run_knn_graph(pts, metric.clone(), k, &cfg.run);
+            println!(
+                "knn: k={k}, {} vertices, {} arcs",
+                res.knn.num_vertices(),
+                res.knn.num_arcs()
+            );
+            println!(
+                "undirected projection: {} edges, avg degree {:.2}",
+                res.graph.num_edges(),
+                res.graph.avg_degree()
+            );
+            println!(
+                "simulated makespan: {} on {} ranks x {} pool threads ({})",
+                fmt_secs(res.makespan),
+                cfg.run.ranks,
+                cfg.run.pool_threads(),
+                cfg.run.algorithm.name()
+            );
+            if opts.phases {
+                print_phase_breakdown(&res.ranks);
+            }
+            res.knn
+        }
+        Some(kind) => {
+            let pool = Pool::new(cfg.run.threads.max(1));
+            let t0 = std::time::Instant::now();
+            let index = build_index_par(
+                kind,
+                pts,
+                metric.clone(),
+                &IndexParams { leaf_size: cfg.run.leaf_size.max(1), ..Default::default() },
+                &pool,
+            )
+            .map_err(|e| e.to_string())?;
+            let build_s = t0.elapsed().as_secs_f64();
+            let t1 = std::time::Instant::now();
+            let knn = index.knn_graph(k, &pool);
+            let knn_s = t1.elapsed().as_secs_f64();
+            println!("knn: k={k}, {} vertices, {} arcs", knn.num_vertices(), knn.num_arcs());
+            println!(
+                "index facade: {} build {} + knn {} on {} pool threads",
+                kind.name(),
+                fmt_secs(build_s),
+                fmt_secs(knn_s),
+                pool.threads()
+            );
+            knn
+        }
+    };
+    write_knn_output(opts.output.as_deref(), &knn)?;
+    write_knn_graph(opts.out.as_deref(), opts.format, &knn)?;
+    if opts.verify {
+        verify_knn_against_brute(pts, &metric, k, &knn)?;
+    }
+    Ok(())
+}
+
+/// Write the directed arcs as "u v" lines (the legacy `--output` format;
+/// one line per arc, rows in vertex order).
+fn write_knn_output(path: Option<&str>, knn: &KnnGraph) -> Result<(), String> {
+    let Some(path) = path else { return Ok(()) };
+    use std::io::Write;
+    let f = std::fs::File::create(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    for u in 0..knn.num_vertices() {
+        for (v, _) in knn.row_entries(u) {
+            writeln!(w, "{u} {v}").map_err(|e| format!("{path}: {e}"))?;
         }
     }
+    println!("wrote {} arcs to {path}", knn.num_arcs());
+    Ok(())
+}
+
+/// Write the directed k-NN graph: "u v w" lines (tsv, row order) or the
+/// binary NGK-KNN1 file format (csr; see `graph::KnnGraph::to_bytes`).
+fn write_knn_graph(path: Option<&str>, format: GraphFormat, knn: &KnnGraph) -> Result<(), String> {
+    let Some(path) = path else { return Ok(()) };
+    match format {
+        GraphFormat::Tsv => {
+            use std::io::Write;
+            let f = std::fs::File::create(path).map_err(|e| format!("{path}: {e}"))?;
+            let mut w = std::io::BufWriter::new(f);
+            for u in 0..knn.num_vertices() {
+                for (v, d) in knn.row_entries(u) {
+                    writeln!(w, "{u}\t{v}\t{d}").map_err(|e| format!("{path}: {e}"))?;
+                }
+            }
+        }
+        GraphFormat::Csr => {
+            std::fs::write(path, knn.to_bytes()).map_err(|e| format!("{path}: {e}"))?;
+        }
+    }
+    println!("wrote knn graph ({} arcs) to {path}", knn.num_arcs());
+    Ok(())
+}
+
+fn verify_knn_against_brute<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: &M,
+    k: usize,
+    knn: &KnnGraph,
+) -> Result<(), String> {
+    println!("verifying against brute force...");
+    let n = pts.len();
+    // One shared reference definition (tie order, row clamp) for every
+    // k-NN gate: the conformance suite and this verifier can never drift.
+    let want = neargraph::testkit::brute_knn_rows(pts, metric, k);
+    for (i, wrow) in want.iter().enumerate() {
+        if &knn.row(i) != wrow {
+            return Err(format!("knn row {i} differs from brute force"));
+        }
+    }
+    println!("VERIFIED: exact k-NN rows for all {n} vertices (k={k})");
+    Ok(())
 }
 
 /// Write the canonical edge list as "u v" lines (the legacy `--output`

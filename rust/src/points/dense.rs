@@ -2,7 +2,7 @@
 //! dataset in Table I (faces, artificial40, corel, deep, covtype, twitter,
 //! sift) and their synthetic analogs.
 
-use super::{get_u64, put_u64, PointSet};
+use super::{put_u64, PointSet};
 
 /// Row-major `n × d` matrix of `f32` coordinates.
 ///
@@ -147,16 +147,22 @@ impl PointSet for DenseMatrix {
         buf
     }
 
-    fn from_bytes(bytes: &[u8]) -> Self {
-        let mut off = 0;
-        let dim = get_u64(bytes, &mut off) as usize;
-        let n = get_u64(bytes, &mut off) as usize;
-        let mut data = Vec::with_capacity(n * dim);
-        for _ in 0..n * dim {
-            data.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-            off += 4;
+    fn try_from_bytes(bytes: &[u8]) -> Result<Self, super::WireError> {
+        use super::{try_get_u64, try_take, WireError};
+        let mut off = 0usize;
+        let dim = try_get_u64(bytes, &mut off, "dense dim")? as usize;
+        let n = try_get_u64(bytes, &mut off, "dense point count")? as usize;
+        if dim == 0 {
+            return Err(WireError::Corrupt { what: "dense dim must be positive" });
         }
-        DenseMatrix::from_flat(dim, data)
+        let payload =
+            try_take(bytes, &mut off, n.saturating_mul(dim).saturating_mul(4), "dense rows")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after dense rows" });
+        }
+        let data: Vec<f32> =
+            payload.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        Ok(DenseMatrix::from_flat(dim, data))
     }
 
     fn payload_bytes(&self) -> u64 {

@@ -2,7 +2,7 @@
 //! word2bits 800-bit in Table I). Each point is `words_per_point` u64 words;
 //! distance is a popcount over XOR-ed words.
 
-use super::{get_u64, put_u64, PointSet};
+use super::{put_u64, PointSet};
 
 /// `n` binary codes of `bits` bits each, packed little-endian into u64 words.
 #[derive(Clone, Debug, PartialEq)]
@@ -134,16 +134,23 @@ impl PointSet for HammingCodes {
         buf
     }
 
-    fn from_bytes(bytes: &[u8]) -> Self {
-        let mut off = 0;
-        let bits = get_u64(bytes, &mut off) as usize;
-        let n = get_u64(bytes, &mut off) as usize;
-        let wpp = (bits + 63) / 64;
-        let mut data = Vec::with_capacity(n * wpp);
-        for _ in 0..n * wpp {
-            data.push(get_u64(bytes, &mut off));
+    fn try_from_bytes(bytes: &[u8]) -> Result<Self, super::WireError> {
+        use super::{try_get_u64, try_take, WireError};
+        let mut off = 0usize;
+        let bits = try_get_u64(bytes, &mut off, "hamming bits")? as usize;
+        let n = try_get_u64(bytes, &mut off, "hamming code count")? as usize;
+        if bits == 0 {
+            return Err(WireError::Corrupt { what: "hamming bits must be positive" });
         }
-        HammingCodes { bits, words_per_point: wpp, data }
+        let wpp = bits.saturating_add(63) / 64;
+        let payload =
+            try_take(bytes, &mut off, n.saturating_mul(wpp).saturating_mul(8), "hamming words")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after hamming words" });
+        }
+        let data: Vec<u64> =
+            payload.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+        Ok(HammingCodes { bits, words_per_point: wpp, data })
     }
 
     fn payload_bytes(&self) -> u64 {

@@ -47,8 +47,22 @@ pub trait PointSet: Clone + Send + Sync + 'static {
     /// Serialize into a byte buffer (used by the comm layer).
     fn to_bytes(&self) -> Vec<u8>;
 
-    /// Deserialize from `to_bytes` output.
-    fn from_bytes(bytes: &[u8]) -> Self;
+    /// Length-checked deserialization from [`PointSet::to_bytes`] output:
+    /// truncated, oversized or internally inconsistent bytes yield a typed
+    /// [`WireError`], never a panic. This is the decoder every wire-facing
+    /// container (`Bundle`, `KnnBundle`) routes through, so a corrupt
+    /// point payload surfaces as an error at the message boundary.
+    fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError>;
+
+    /// Deserialize from [`PointSet::to_bytes`] output, panicking (with the
+    /// decode diagnostic) on malformed bytes — for in-process callers
+    /// whose bytes never left the address space.
+    fn from_bytes(bytes: &[u8]) -> Self {
+        match Self::try_from_bytes(bytes) {
+            Ok(v) => v,
+            Err(e) => panic!("point-set decode failed: {e}"),
+        }
+    }
 
     /// In-memory footprint of the payload in bytes (for the α-β comm model).
     fn payload_bytes(&self) -> u64;

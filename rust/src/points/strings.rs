@@ -2,7 +2,7 @@
 //! the "genomic reads" use case the paper's introduction motivates for
 //! non-Euclidean metrics.
 
-use super::{get_u64, put_u64, PointSet};
+use super::{put_u64, PointSet};
 
 /// A set of byte strings stored contiguously with an offsets array (the same
 /// layout as an Arrow string column).
@@ -93,19 +93,23 @@ impl PointSet for StringSet {
         buf
     }
 
-    fn from_bytes(bytes: &[u8]) -> Self {
-        let mut off = 0;
-        let n = get_u64(bytes, &mut off) as usize;
-        let mut lens = Vec::with_capacity(n);
-        for _ in 0..n {
-            lens.push(get_u64(bytes, &mut off) as usize);
-        }
+    fn try_from_bytes(bytes: &[u8]) -> Result<Self, super::WireError> {
+        use super::{try_get_u64, try_take, WireError};
+        let mut off = 0usize;
+        let n = try_get_u64(bytes, &mut off, "string count")? as usize;
+        let len_bytes = try_take(bytes, &mut off, n.saturating_mul(8), "string lengths")?;
+        let lens: Vec<usize> = len_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
         let mut out = StringSet::new();
         for l in lens {
-            out.push(&bytes[off..off + l]);
-            off += l;
+            out.push(try_take(bytes, &mut off, l, "string bytes")?);
         }
-        out
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after string payload" });
+        }
+        Ok(out)
     }
 
     fn payload_bytes(&self) -> u64 {

@@ -1,11 +1,47 @@
-//! Mini property-testing kit (the offline environment has no `proptest`).
+//! Mini property-testing kit (the offline environment has no `proptest`)
+//! and the shared test scenario source.
 //!
-//! `forall` runs a property over `cases` seeded generations; on failure it
-//! retries the failing case with shrunk size parameters (halving) to find a
-//! smaller counterexample before panicking with the seed so the case can be
-//! replayed deterministically.
+//! Three pieces, used by every integration suite:
+//!
+//! * [`forall`] — seeded property runner with size-shrinking on failure;
+//! * [`scenario`] — named, seeded dataset generators (dense clusters,
+//!   manifolds, duplicates, Hamming codes, string pools) so tests share
+//!   one scenario vocabulary instead of ad-hoc generator parameter copies;
+//! * [`wire`] — the byte-mutation harness every length-checked wire
+//!   decoder is held to (truncate/extend must error, bit flips must never
+//!   panic).
 
+pub mod scenario;
+pub mod wire;
+
+use crate::metric::Metric;
+use crate::points::PointSet;
 use crate::util::Rng;
+
+/// Reference k-NN rows by brute force under the total order
+/// `(distance, id)`: row `i` holds the `min(k, n − 1)` nearest *other*
+/// points of `i`. This is **the** definition every k-NN construction path
+/// is pinned against (the conformance suite, `dist::knn`'s unit tests,
+/// the CLI `--verify` path) — one copy, here, so the tie order and the
+/// row clamp can never drift apart between suites.
+pub fn brute_knn_rows<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: &M,
+    k: usize,
+) -> Vec<Vec<(u32, f64)>> {
+    let n = pts.len();
+    (0..n)
+        .map(|i| {
+            let mut all: Vec<(u32, f64)> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| (j as u32, metric.dist(pts.point(i), pts.point(j))))
+                .collect();
+            all.sort_unstable_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
+            all.truncate(k.min(n.saturating_sub(1)));
+            all
+        })
+        .collect()
+}
 
 /// Size hints handed to generators; shrinking halves them.
 #[derive(Clone, Copy, Debug)]

@@ -1,0 +1,81 @@
+//! Named, seeded scenario datasets — the single source every integration
+//! test draws from (`correctness_sweep`, `index_equivalence`,
+//! `par_determinism`, `knn_conformance`).
+//!
+//! Each generator is a *named scenario* with a fixed shape (dimensionality,
+//! cluster count, noise level) chosen to exercise one data regime the
+//! paper's algorithms care about; tests pick a scenario, a seed and a size
+//! instead of copying `data::synthetic` parameter tuples around. Same
+//! `(scenario, seed, n)` ⇒ bit-identical dataset, everywhere, forever —
+//! that is what makes cross-suite comparisons (and failure reproduction)
+//! trivial.
+
+use crate::data::synthetic;
+use crate::points::{DenseMatrix, HammingCodes, StringSet};
+use crate::util::Rng;
+
+/// Dense Gaussian clusters (dim 5, 5 clusters, σ = 0.12) — the bread-and-
+/// butter Euclidean regime where landmark partitioning localizes well.
+pub fn dense_clusters(seed: u64, n: usize) -> DenseMatrix {
+    synthetic::gaussian_mixture(&mut Rng::new(seed), n, 5, 5, 0.12)
+}
+
+/// Dense clustered data with intrinsic dimension 4 embedded in 24 ambient
+/// dimensions — the "data manifold" regime of the high-dimensional Table-I
+/// analogs.
+pub fn dense_manifold(seed: u64, n: usize) -> DenseMatrix {
+    synthetic::manifold_mixture(&mut Rng::new(seed), n, 24, 4, 8, 0.1)
+}
+
+/// Uniform points in `[0, 1]^4` — no cluster structure; the worst case for
+/// landmarking.
+pub fn dense_uniform(seed: u64, n: usize) -> DenseMatrix {
+    synthetic::uniform(&mut Rng::new(seed), n, 4, 1.0)
+}
+
+/// A uniform base with `extra` exact duplicate rows — stresses zero-
+/// distance ties, duplicate collapse in the cover tree, and skewed Voronoi
+/// cells. `n` is the base size; the result holds `n + extra` points.
+pub fn dense_duplicates(seed: u64, n: usize, extra: usize) -> DenseMatrix {
+    let mut rng = Rng::new(seed);
+    let base = synthetic::uniform(&mut rng, n, 3, 1.0);
+    synthetic::with_duplicates(&mut rng, &base, extra)
+}
+
+/// 96-bit Hamming codes in 4 clusters (flip probability 0.07) — the
+/// bit-packed metric family (sift-hamming / word2bits analogs).
+pub fn hamming_codes(seed: u64, n: usize) -> HammingCodes {
+    synthetic::hamming_clusters(&mut Rng::new(seed), n, 96, 4, 0.07)
+}
+
+/// Synthetic sequencing reads (length ~24, 4 ancestors, 6% mutation) — the
+/// Levenshtein workload from the paper's introduction.
+pub fn string_pool(seed: u64, n: usize) -> StringSet {
+    synthetic::reads(&mut Rng::new(seed), n, 24, 4, 0.06)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::PointSet;
+
+    #[test]
+    fn scenarios_are_deterministic_per_seed() {
+        assert_eq!(dense_clusters(7, 50), dense_clusters(7, 50));
+        assert_ne!(dense_clusters(7, 50), dense_clusters(8, 50));
+        assert_eq!(hamming_codes(7, 40), hamming_codes(7, 40));
+        assert_eq!(string_pool(7, 30), string_pool(7, 30));
+        assert_eq!(dense_manifold(7, 30), dense_manifold(7, 30));
+        assert_eq!(dense_uniform(7, 30), dense_uniform(7, 30));
+    }
+
+    #[test]
+    fn shapes_match_the_contract() {
+        assert_eq!(dense_clusters(1, 64).dim(), 5);
+        assert_eq!(dense_manifold(1, 64).dim(), 24);
+        assert_eq!(dense_uniform(1, 64).dim(), 4);
+        assert_eq!(dense_duplicates(1, 40, 25).len(), 65);
+        assert_eq!(hamming_codes(1, 64).len(), 64);
+        assert_eq!(string_pool(1, 64).len(), 64);
+    }
+}

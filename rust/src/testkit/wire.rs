@@ -1,0 +1,125 @@
+//! Shared byte-mutation harness for wire decoders (the adversarial side of
+//! the testkit): every length-checked decoder in the crate — `Bundle`,
+//! `EdgeBundle`, `KnnBundle`, `WeightedEdgeList`, `NearGraph` (NGW-CSR1),
+//! `KnnGraph` (NGK-KNN1) — must satisfy the same contract against
+//! malformed bytes, and this module enforces it uniformly.
+//!
+//! The contract, applied to a pristine encoding:
+//!
+//! * **pristine bytes decode** — the unmutated buffer is `Ok`;
+//! * **every truncation fails** — all formats are count-prefixed with a
+//!   trailing-bytes check, so *every* strict prefix must yield a typed
+//!   [`WireError`] (never a panic, never a silent partial decode);
+//! * **every extension fails** — appending any byte trips the
+//!   trailing-bytes check;
+//! * **bit flips never panic** — flipping any single bit anywhere in the
+//!   buffer must produce either a typed error or a *valid* alternative
+//!   decoding (e.g. a flipped coordinate bit is a different, legal point);
+//!   what it must never do is panic, over-allocate from a corrupt length
+//!   prefix, or read out of bounds.
+
+use crate::points::WireError;
+
+/// Exhaustively mutate `bytes` against `decode`, enforcing the module
+/// contract. `what` labels failures.
+///
+/// Runs `O(len)` truncations, a few extensions and `8·len` bit-flip
+/// decodes — keep sample payloads small (hundreds of bytes, not
+/// megabytes).
+pub fn check_wire_decoder<T>(
+    what: &str,
+    bytes: &[u8],
+    decode: &dyn Fn(&[u8]) -> Result<T, WireError>,
+) {
+    assert!(decode(bytes).is_ok(), "{what}: pristine bytes must decode");
+
+    // Truncation at every boundary.
+    for cut in 0..bytes.len() {
+        assert!(
+            decode(&bytes[..cut]).is_err(),
+            "{what}: truncation to {cut}/{} bytes decoded",
+            bytes.len()
+        );
+    }
+
+    // Extension by assorted bytes.
+    for pad in [0u8, 1, 0x7F, 0xFF] {
+        let mut extended = bytes.to_vec();
+        extended.push(pad);
+        assert!(decode(&extended).is_err(), "{what}: trailing byte {pad:#x} accepted");
+    }
+
+    // Single-bit flips at every position: must not panic (a panic here
+    // aborts the test), and must not hang on a huge corrupt length prefix.
+    let mut flipped = bytes.to_vec();
+    for i in 0..flipped.len() {
+        for bit in 0..8u8 {
+            flipped[i] ^= 1 << bit;
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                decode(&flipped).is_ok()
+            }));
+            assert!(
+                result.is_ok(),
+                "{what}: decoder panicked on bit flip at byte {i}, bit {bit}"
+            );
+            flipped[i] ^= 1 << bit;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::{put_u64, try_get_u64, try_take};
+
+    /// A tiny well-behaved format: count-prefixed u32s + trailing check.
+    fn encode(vals: &[u32]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, vals.len() as u64);
+        for v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Vec<u32>, WireError> {
+        let mut off = 0usize;
+        let n = try_get_u64(bytes, &mut off, "count")? as usize;
+        let payload = try_take(bytes, &mut off, n.saturating_mul(4), "values")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes" });
+        }
+        Ok(payload.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    #[test]
+    fn well_behaved_decoder_passes() {
+        check_wire_decoder("sample", &encode(&[1, 2, 0xFFFF_FFFF]), &decode);
+        check_wire_decoder("empty", &encode(&[]), &decode);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncation")]
+    fn sloppy_decoder_is_caught() {
+        // A decoder that tolerates truncation must be flagged.
+        let tolerant = |bytes: &[u8]| -> Result<usize, WireError> { Ok(bytes.len()) };
+        check_wire_decoder("tolerant", &encode(&[5]), &tolerant);
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked on bit flip")]
+    fn panicking_decoder_is_caught() {
+        let brittle = |bytes: &[u8]| -> Result<u64, WireError> {
+            let mut off = 0usize;
+            let n = try_get_u64(bytes, &mut off, "count")?;
+            if off != bytes.len() {
+                return Err(WireError::Corrupt { what: "trailing" });
+            }
+            assert!(n < 100, "blind internal assert");
+            Ok(n)
+        };
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 5);
+        check_wire_decoder("brittle", &buf, &brittle);
+    }
+}

@@ -105,6 +105,58 @@ fn run_with_index_facade_and_weighted_outputs() {
 }
 
 #[test]
+fn run_knn_mode_verifies_and_writes() {
+    // Distributed k-NN path: exact rows, binary NGK-KNN1 output.
+    let knn_file = std::env::temp_dir().join("neargraph_cli_graph.knn");
+    let out = bin()
+        .args([
+            "run", "--dataset", "corel", "--points", "150", "--ranks", "3",
+            "--algorithm", "landmark-ring", "--knn", "6", "--verify", "--out",
+        ])
+        .arg(&knn_file)
+        .args(["--out-format", "csr"])
+        .output()
+        .expect("spawn");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("VERIFIED"), "no verification in:\n{text}");
+    assert!(text.contains("knn: k=6"), "knn banner missing:\n{text}");
+    let bytes = std::fs::read(&knn_file).expect("knn file written");
+    let graph = neargraph::graph::KnnGraph::from_bytes(&bytes).expect("valid NGK-KNN1 file");
+    assert_eq!(graph.num_vertices(), 150);
+    assert_eq!(graph.k(), 6);
+    assert_eq!(graph.num_arcs(), 150 * 6);
+    std::fs::remove_file(&knn_file).ok();
+
+    // Facade k-NN path.
+    let out = bin()
+        .args([
+            "run", "--dataset", "corel", "--points", "120", "--index", "cover-tree",
+            "--knn", "4", "--verify",
+        ])
+        .output()
+        .expect("spawn");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("VERIFIED"), "facade knn not verified:\n{text}");
+    assert!(text.contains("index facade"), "facade banner missing:\n{text}");
+}
+
+#[test]
+fn knn_and_eps_are_mutually_exclusive() {
+    let out = bin()
+        .args(["run", "--dataset", "corel", "--points", "50", "--knn", "5", "--eps", "0.3"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"),
+        "unexpected stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn run_with_unsupported_index_fails_cleanly() {
     // SNN on a Hamming dataset must exit with the typed error message, not
     // a panic/abort.

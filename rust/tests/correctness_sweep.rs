@@ -8,14 +8,16 @@
 //! [`WEIGHT_TOL`], and (3) the `NearGraph`'s unweighted CSR projection is
 //! bit-identical to the CSR the pre-redesign pipeline built from the same
 //! edge set.
+//!
+//! Datasets come from the shared `testkit::scenario` source.
 
 use neargraph::baseline::brute_force_weighted;
-use neargraph::data::synthetic;
 use neargraph::dist::{
     run_epsilon_graph, Algorithm, AssignStrategy, CenterStrategy, RunConfig, RunResult,
 };
 use neargraph::graph::{assert_same_graph, assert_same_weighted_graph, WeightedEdgeList, WEIGHT_TOL};
 use neargraph::prelude::*;
+use neargraph::testkit::scenario;
 
 /// The full three-sided check of one distributed result against the
 /// weighted brute-force reference.
@@ -33,9 +35,9 @@ fn check_result(got: &RunResult, want: &WeightedEdgeList, n: usize, ctx: &str) {
 fn euclidean_full_sweep() {
     let mut rng = Rng::new(9001);
     let datasets = [
-        ("clustered", synthetic::gaussian_mixture(&mut rng, 220, 6, 6, 0.1)),
-        ("manifold", synthetic::manifold_mixture(&mut rng, 220, 24, 4, 8, 0.1)),
-        ("uniform", synthetic::uniform(&mut rng, 220, 4, 1.0)),
+        ("clustered", scenario::dense_clusters(9001, 220)),
+        ("manifold", scenario::dense_manifold(90011, 220)),
+        ("uniform", scenario::dense_uniform(90012, 220)),
     ];
     for (dname, pts) in &datasets {
         for eps_quantile in [5.0, 40.0] {
@@ -59,8 +61,7 @@ fn euclidean_full_sweep() {
 
 #[test]
 fn hamming_sweep() {
-    let mut rng = Rng::new(9002);
-    let codes = synthetic::hamming_clusters(&mut rng, 200, 96, 5, 0.06);
+    let codes = scenario::hamming_codes(9002, 200);
     for eps in [8.0, 20.0, 48.0] {
         let want = brute_force_weighted(&codes, &Hamming, eps);
         for algorithm in Algorithm::ALL {
@@ -73,8 +74,7 @@ fn hamming_sweep() {
 
 #[test]
 fn edit_distance_sweep() {
-    let mut rng = Rng::new(9003);
-    let reads = synthetic::reads(&mut rng, 120, 30, 4, 0.05);
+    let reads = scenario::string_pool(9003, 120);
     for eps in [2.0, 6.0] {
         let want = brute_force_weighted(&reads, &Levenshtein, eps);
         for algorithm in Algorithm::ALL {
@@ -88,8 +88,7 @@ fn edit_distance_sweep() {
 #[test]
 fn exotic_metrics_sweep() {
     // Manhattan / Chebyshev / angular: only the metric axioms are assumed.
-    let mut rng = Rng::new(9004);
-    let pts = synthetic::gaussian_mixture(&mut rng, 150, 5, 4, 0.15);
+    let pts = scenario::dense_clusters(9004, 150);
     for algorithm in Algorithm::ALL {
         let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
 
@@ -109,9 +108,7 @@ fn exotic_metrics_sweep() {
 
 #[test]
 fn strategy_cross_product() {
-    let mut rng = Rng::new(9005);
-    let base = synthetic::uniform(&mut rng, 100, 3, 1.0);
-    let pts = synthetic::with_duplicates(&mut rng, &base, 60); // skewed cells
+    let pts = scenario::dense_duplicates(9005, 100, 60); // skewed cells
     let eps = 0.15;
     let want = brute_force_weighted(&pts, &Euclidean, eps);
     for centers in [CenterStrategy::Random, CenterStrategy::Greedy] {
@@ -141,8 +138,7 @@ fn strategy_cross_product() {
 
 #[test]
 fn extreme_configs() {
-    let mut rng = Rng::new(9006);
-    let pts = synthetic::gaussian_mixture(&mut rng, 64, 3, 3, 0.1);
+    let pts = scenario::dense_clusters(9006, 64);
     let want = brute_force_weighted(&pts, &Euclidean, 0.3);
     // ranks > points, centers > points, leaf size 1 and huge.
     for (ranks, num_centers, leaf_size) in
@@ -163,8 +159,7 @@ fn extreme_configs() {
 
 #[test]
 fn huge_eps_yields_complete_graph() {
-    let mut rng = Rng::new(9007);
-    let pts = synthetic::uniform(&mut rng, 60, 2, 1.0);
+    let pts = scenario::dense_uniform(9007, 60);
     let n = 60u64;
     for algorithm in Algorithm::ALL {
         let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
@@ -175,8 +170,7 @@ fn huge_eps_yields_complete_graph() {
 
 #[test]
 fn determinism_across_runs() {
-    let mut rng = Rng::new(9008);
-    let pts = synthetic::gaussian_mixture(&mut rng, 150, 4, 5, 0.1);
+    let pts = scenario::dense_clusters(9008, 150);
     for algorithm in Algorithm::ALL {
         let cfg = RunConfig { ranks: 4, algorithm, ..Default::default() };
         let a = run_epsilon_graph(&pts, Euclidean, 0.3, &cfg);

@@ -5,12 +5,14 @@
 //!
 //! SNN is dense-Euclidean-only by contract: on the other point families it
 //! must fail `build_index` with a typed `Unsupported` error, not panic.
+//!
+//! Datasets come from the shared `testkit::scenario` source.
 
 use neargraph::baseline::brute_force_weighted;
-use neargraph::data::synthetic;
 use neargraph::graph::{assert_same_weighted_graph, WeightedEdgeList, WEIGHT_TOL};
 use neargraph::index::{build_index, epsilon_graph, IndexError, IndexKind, IndexParams};
 use neargraph::prelude::*;
+use neargraph::testkit::scenario;
 
 const POOL_SIZES: [usize; 3] = [1, 4, 8];
 
@@ -41,8 +43,7 @@ where
 
 #[test]
 fn dense_euclidean_all_backends() {
-    let mut rng = Rng::new(7001);
-    let pts = synthetic::gaussian_mixture(&mut rng, 220, 5, 5, 0.12);
+    let pts = scenario::dense_clusters(7001, 220);
     for eps in [0.1, 0.35] {
         sweep(&pts, Euclidean, eps, &IndexKind::ALL, "dense");
     }
@@ -52,17 +53,14 @@ fn dense_euclidean_all_backends() {
 fn dense_with_duplicates_all_backends() {
     // Zero-distance pairs stress the weight paths (matmul-form kernels
     // must not report phantom nonzero distances).
-    let mut rng = Rng::new(7002);
-    let base = synthetic::uniform(&mut rng, 90, 3, 1.0);
-    let pts = synthetic::with_duplicates(&mut rng, &base, 60);
+    let pts = scenario::dense_duplicates(7002, 90, 60);
     sweep(&pts, Euclidean, 0.15, &IndexKind::ALL, "dense+dups");
     sweep(&pts, Euclidean, 0.0, &IndexKind::ALL, "dense+dups eps=0");
 }
 
 #[test]
 fn hamming_backends_match_and_snn_is_rejected() {
-    let mut rng = Rng::new(7003);
-    let codes = synthetic::hamming_clusters(&mut rng, 180, 96, 4, 0.07);
+    let codes = scenario::hamming_codes(7003, 180);
     let supported =
         [IndexKind::BruteForce, IndexKind::CoverTree, IndexKind::InsertCoverTree];
     for eps in [10.0, 28.0] {
@@ -76,8 +74,7 @@ fn hamming_backends_match_and_snn_is_rejected() {
 
 #[test]
 fn levenshtein_backends_match_and_snn_is_rejected() {
-    let mut rng = Rng::new(7004);
-    let reads = synthetic::reads(&mut rng, 100, 24, 4, 0.06);
+    let reads = scenario::string_pool(7004, 100);
     let supported =
         [IndexKind::BruteForce, IndexKind::CoverTree, IndexKind::InsertCoverTree];
     for eps in [2.0, 5.0] {
@@ -92,9 +89,8 @@ fn levenshtein_backends_match_and_snn_is_rejected() {
 #[test]
 fn eps_batch_equivalent_on_external_queries() {
     // Batch queries against a foreign query set (not the self-join path).
-    let mut rng = Rng::new(7005);
-    let pts = synthetic::gaussian_mixture(&mut rng, 150, 4, 4, 0.15);
-    let queries = synthetic::uniform(&mut rng, 40, 4, 1.0);
+    let pts = scenario::dense_clusters(7005, 150);
+    let queries = scenario::dense_clusters(70051, 40);
     let eps = 0.4;
     let mut want: Vec<(u32, u32, u64)> = Vec::new();
     for q in 0..queries.len() {
@@ -122,9 +118,8 @@ fn eps_batch_equivalent_on_external_queries() {
 
 #[test]
 fn knn_batch_equivalent_across_backends() {
-    let mut rng = Rng::new(7006);
-    let pts = synthetic::gaussian_mixture(&mut rng, 160, 5, 4, 0.15);
-    let queries = synthetic::uniform(&mut rng, 12, 5, 1.0);
+    let pts = scenario::dense_clusters(7006, 160);
+    let queries = scenario::dense_clusters(70061, 12);
     let k = 9;
     let reference = build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default())
         .unwrap()
@@ -153,9 +148,8 @@ fn insert_covertree_facade_matches_covertree_exactly() {
     // the facade's default impls it must now answer batch + self-join
     // queries identically (ids AND weight bits) to the batch CoverTree on
     // the same data.
-    let mut rng = Rng::new(7007);
-    let pts = synthetic::gaussian_mixture(&mut rng, 200, 4, 4, 0.12);
-    let queries = synthetic::uniform(&mut rng, 30, 4, 1.0);
+    let pts = scenario::dense_clusters(7007, 200);
+    let queries = scenario::dense_clusters(70071, 30);
     let eps = 0.3;
     let batch = build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default())
         .unwrap();

@@ -1,0 +1,164 @@
+//! Conformance gate for distributed k-NN graph construction (DESIGN.md
+//! §9): `dist::run_knn_graph` must reproduce single-rank brute force
+//! **bit-for-bit** — exact neighbor id sets, bit-equal `f64` distances and
+//! deterministic `(distance, id)` tie-breaks — over
+//!
+//!   {3 algorithms} × {dense / Hamming / Levenshtein / duplicate-heavy}
+//!     × {1, 2, 4 ranks} × {1, 4 threads} × k ∈ {1, 5, 70},
+//!
+//! including datasets where k exceeds the point count (rows clamp to
+//! `n − 1`) and duplicate-point datasets where every tie must resolve by
+//! id. The facade's `knn_graph` is held to the identical result, and every
+//! malformed `KnnBundle` byte pattern must decode to a typed `WireError`
+//! (via the shared `testkit::wire` mutation harness), never a panic.
+
+use neargraph::dist::{run_knn_graph, Algorithm, KnnBundle, RunConfig};
+use neargraph::graph::KnnGraph;
+use neargraph::index::{build_index, IndexKind, IndexParams};
+use neargraph::prelude::*;
+use neargraph::testkit::{brute_knn_rows, scenario, wire};
+
+const RANKS: [usize; 3] = [1, 2, 4];
+const THREADS: [usize; 2] = [1, 4];
+const KS: [usize; 3] = [1, 5, 70];
+
+/// Assert a constructed graph equals the reference rows bit-for-bit.
+fn assert_rows_bit_equal(got: &KnnGraph, want: &[Vec<(u32, f64)>], ctx: &str) {
+    assert_eq!(got.num_vertices(), want.len(), "{ctx}: vertex count");
+    for (i, wrow) in want.iter().enumerate() {
+        let grow = got.row(i);
+        assert_eq!(grow.len(), wrow.len(), "{ctx}: row {i} length");
+        for (g, w) in grow.iter().zip(wrow) {
+            assert_eq!(g.0, w.0, "{ctx}: row {i} neighbor id");
+            assert_eq!(
+                g.1.to_bits(),
+                w.1.to_bits(),
+                "{ctx}: row {i} distance bits (got {}, want {})",
+                g.1,
+                w.1
+            );
+        }
+    }
+}
+
+/// The full {algorithm × ranks × threads × k} sweep over one dataset.
+fn sweep<P: PointSet, M: Metric<P>>(pts: &P, metric: M, what: &str) {
+    for k in KS {
+        let want = brute_knn_rows(pts, &metric, k);
+        for algorithm in Algorithm::ALL {
+            for ranks in RANKS {
+                for threads in THREADS {
+                    let cfg = RunConfig {
+                        ranks,
+                        algorithm,
+                        threads: threads * ranks, // `threads` pool workers per rank
+                        ..Default::default()
+                    };
+                    let got = run_knn_graph(pts, metric.clone(), k, &cfg);
+                    assert_rows_bit_equal(
+                        &got.knn,
+                        &want,
+                        &format!("{what}/{}/r{ranks}/t{threads}/k{k}", algorithm.name()),
+                    );
+                    // The undirected projection is the arc union.
+                    assert_eq!(got.graph.num_vertices(), pts.len());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_clusters_conformance() {
+    let pts = scenario::dense_clusters(8101, 110);
+    sweep(&pts, Euclidean, "dense");
+}
+
+#[test]
+fn dense_duplicates_conformance() {
+    // Duplicate-heavy: exact zero-distance ties everywhere; every row must
+    // still resolve deterministically by id.
+    let pts = scenario::dense_duplicates(8102, 60, 50);
+    sweep(&pts, Euclidean, "dense+dups");
+}
+
+#[test]
+fn hamming_conformance() {
+    // Integer-valued distances: ties are the common case, not the edge
+    // case.
+    let codes = scenario::hamming_codes(8103, 90);
+    sweep(&codes, Hamming, "hamming");
+}
+
+#[test]
+fn levenshtein_conformance() {
+    // k = 70 exceeds n − 1 = 59: every row clamps to full width.
+    let reads = scenario::string_pool(8104, 60);
+    sweep(&reads, Levenshtein, "levenshtein");
+}
+
+#[test]
+fn facade_knn_graph_matches_distributed() {
+    // The single-node facade entry point and the distributed driver must
+    // agree bit-for-bit (and with brute force) on the same input.
+    let pts = scenario::dense_clusters(8105, 130);
+    let k = 7;
+    let want = brute_knn_rows(&pts, &Euclidean, k);
+    let pool = Pool::new(4);
+    for kind in IndexKind::ALL {
+        let index = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let got = index.knn_graph(k, &pool);
+        assert_rows_bit_equal(&got, &want, &format!("facade/{}", kind.name()));
+    }
+    let cfg = RunConfig { ranks: 3, ..Default::default() };
+    let dist = run_knn_graph(&pts, Euclidean, k, &cfg);
+    assert_rows_bit_equal(&dist.knn, &want, "dist-vs-facade");
+}
+
+#[test]
+fn knn_graph_wire_roundtrip() {
+    // The NGK-KNN1 file format preserves the certified rows exactly.
+    let pts = scenario::dense_clusters(8106, 50);
+    let cfg = RunConfig { ranks: 2, ..Default::default() };
+    let res = run_knn_graph(&pts, Euclidean, 4, &cfg);
+    let decoded = KnnGraph::from_bytes(&res.knn.to_bytes()).expect("roundtrip");
+    assert_eq!(decoded, res.knn);
+}
+
+#[test]
+fn malformed_knn_bundles_are_typed_errors() {
+    // Acceptance criterion: every truncation/extension of a KnnBundle is a
+    // WireError and no byte mutation can panic the decoder. Exercise all
+    // three wire shapes (circulating, request, reply).
+    let pts = scenario::dense_clusters(8107, 6);
+    let gids: Vec<u32> = (0..6).collect();
+    let rows: Vec<Vec<(u32, f64)>> = (0..6)
+        .map(|i| vec![((i as u32 + 1) % 6, 0.5 + i as f64), ((i as u32 + 2) % 6, 1.5 + i as f64)])
+        .collect();
+    let caps: Vec<f64> = rows.iter().map(|r| r.last().unwrap().1).collect();
+    let dpc: Vec<f64> = (0..6).map(|i| i as f64 * 0.1).collect();
+
+    let circulating =
+        KnnBundle::from_rows(2, pts.clone(), gids.clone(), dpc, caps.clone(), &rows);
+    wire::check_wire_decoder("knn-bundle/circulating", &circulating.to_bytes(), &|b| {
+        KnnBundle::<DenseMatrix>::try_from_bytes(b)
+    });
+
+    let request = KnnBundle::from_rows(
+        2,
+        pts.clone(),
+        gids.clone(),
+        Vec::new(),
+        caps,
+        &vec![Vec::new(); 6],
+    );
+    wire::check_wire_decoder("knn-bundle/request", &request.to_bytes(), &|b| {
+        KnnBundle::<DenseMatrix>::try_from_bytes(b)
+    });
+
+    let reply =
+        KnnBundle::from_rows(2, DenseMatrix::new(5), gids, Vec::new(), Vec::new(), &rows);
+    wire::check_wire_decoder("knn-bundle/reply", &reply.to_bytes(), &|b| {
+        KnnBundle::<DenseMatrix>::try_from_bytes(b)
+    });
+}

@@ -1,15 +1,21 @@
 //! Determinism gate for the shared-memory parallel paths (DESIGN.md §7.1):
 //!
 //! * the hub-parallel cover-tree build must produce the **identical**
-//!   node/children arrays as the sequential build at every pool size;
+//!   node/children arrays as the sequential build at every pool size —
+//!   and the parallel-built tree must satisfy every cover-tree invariant
+//!   (`covertree::check_invariants`: nesting, covering, separating, leaf
+//!   partition), so bit-equality is anchored to a *valid* structure, not
+//!   just a reproducible one;
 //! * the parallel ε self-join must emit the **identical** edge set;
 //!
 //! on all three metric families (dense Euclidean, bit-packed Hamming,
-//! Levenshtein over strings), including duplicate-heavy inputs.
+//! Levenshtein over strings), including duplicate-heavy inputs. Datasets
+//! come from the shared `testkit::scenario` source.
 
-use neargraph::covertree::{BuildParams, CoverTree};
+use neargraph::covertree::{check_invariants, BuildParams, CoverTree};
 use neargraph::metric::{Euclidean, Hamming, Levenshtein, Metric};
 use neargraph::points::{DenseMatrix, PointSet};
+use neargraph::testkit::scenario;
 use neargraph::util::{Pool, Rng};
 
 const POOL_SIZES: [usize; 4] = [1, 2, 4, 8];
@@ -35,6 +41,10 @@ where
             "{what}: tree arrays differ at threads={threads} leaf={leaf_size}"
         );
         assert_eq!(seq.ids(), par.ids(), "{what}: ids differ at threads={threads}");
+        // The parallel build must be a *valid* cover tree, not merely a
+        // reproducible byte pattern (the invariant module historically
+        // never ran against build_par).
+        check_invariants(&par, metric);
 
         let mut par_edges: Vec<(u32, u32, u64)> = Vec::new();
         par.eps_self_join_par(metric, eps, &pool, |a, b, d| par_edges.push((a, b, d.to_bits())));
@@ -48,7 +58,7 @@ where
 
 #[test]
 fn dense_euclidean_build_and_join_deterministic() {
-    let pts = neargraph::data::synthetic::gaussian_mixture(&mut Rng::new(900), 600, 4, 5, 0.15);
+    let pts = scenario::dense_clusters(900, 600);
     for leaf_size in [1usize, 8, 32] {
         check_parallel_paths(&pts, &Euclidean, 0.3, leaf_size, "dense");
     }
@@ -56,25 +66,22 @@ fn dense_euclidean_build_and_join_deterministic() {
 
 #[test]
 fn dense_with_duplicates_deterministic() {
-    let mut rng = Rng::new(901);
-    let base = neargraph::data::synthetic::uniform(&mut rng, 150, 3, 1.0);
-    let pts = neargraph::data::synthetic::with_duplicates(&mut rng, &base, 100);
+    let pts = scenario::dense_duplicates(901, 150, 100);
     check_parallel_paths(&pts, &Euclidean, 0.2, 8, "dense+dups");
     check_parallel_paths(&pts, &Euclidean, 0.0, 8, "dense+dups eps=0");
 }
 
 #[test]
 fn hamming_build_and_join_deterministic() {
-    let codes =
-        neargraph::data::synthetic::hamming_clusters(&mut Rng::new(902), 300, 64, 4, 0.08);
+    let codes = scenario::hamming_codes(902, 300);
     for leaf_size in [2usize, 8] {
-        check_parallel_paths(&codes, &Hamming, 12.0, leaf_size, "hamming");
+        check_parallel_paths(&codes, &Hamming, 14.0, leaf_size, "hamming");
     }
 }
 
 #[test]
 fn levenshtein_build_and_join_deterministic() {
-    let reads = neargraph::data::synthetic::reads(&mut Rng::new(903), 120, 20, 4, 0.06);
+    let reads = scenario::string_pool(903, 120);
     for leaf_size in [2usize, 8] {
         check_parallel_paths(&reads, &Levenshtein, 4.0, leaf_size, "levenshtein");
     }
@@ -96,20 +103,18 @@ fn tiny_and_degenerate_inputs_deterministic() {
 #[test]
 fn parallel_batch_query_matches_sequential_on_hamming() {
     // Cross-container check of the sharded batch path (> one chunk).
-    let tree_codes =
-        neargraph::data::synthetic::hamming_clusters(&mut Rng::new(905), 400, 64, 3, 0.1);
-    let query_codes =
-        neargraph::data::synthetic::hamming_clusters(&mut Rng::new(906), 1500, 64, 3, 0.1);
+    let tree_codes = scenario::hamming_codes(905, 400);
+    let query_codes = scenario::hamming_codes(906, 1500);
     let tree = CoverTree::build(&tree_codes, &Hamming, &BuildParams::default());
     let mut seq: Vec<(u32, u32, u64)> = Vec::new();
-    tree.query_batch(&Hamming, &query_codes, 14.0, |q, id, d| {
+    tree.query_batch(&Hamming, &query_codes, 16.0, |q, id, d| {
         seq.push((q as u32, id, d.to_bits()));
     });
     seq.sort_unstable();
     for threads in POOL_SIZES {
         let pool = Pool::new(threads);
         let mut par: Vec<(u32, u32, u64)> = Vec::new();
-        tree.query_batch_par(&Hamming, &query_codes, 14.0, &pool, |q, id, d| {
+        tree.query_batch_par(&Hamming, &query_codes, 16.0, &pool, |q, id, d| {
             par.push((q as u32, id, d.to_bits()));
         });
         par.sort_unstable();

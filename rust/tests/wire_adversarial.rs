@@ -1,0 +1,112 @@
+//! Adversarial wire-decoder suite: every length-checked decoder in the
+//! crate is held to the shared `testkit::wire` mutation contract —
+//! pristine bytes decode, **every** truncation and extension is a typed
+//! `WireError`, and no single-bit flip can panic the decoder (corrupt
+//! length prefixes must error before allocating).
+//!
+//! Covered formats: `Bundle` (dense / Hamming / string payloads),
+//! `EdgeBundle`, `KnnBundle` (all three wire shapes), `WeightedEdgeList`,
+//! the `NGW-CSR1` weighted graph file and the `NGK-KNN1` directed k-NN
+//! file.
+
+use neargraph::dist::{Bundle, EdgeBundle, KnnBundle};
+use neargraph::graph::{KnnGraph, NearGraph, WeightedEdgeList};
+use neargraph::prelude::*;
+use neargraph::testkit::{scenario, wire};
+
+#[test]
+fn bundle_dense_mutations() {
+    let pts = scenario::dense_clusters(8601, 8);
+    let b = Bundle {
+        pts: pts.clone(),
+        gids: (0..8).collect(),
+        cells: (0..8).map(|i| i % 3).collect(),
+        dpc: (0..8).map(|i| i as f64 * 0.25).collect(),
+    };
+    wire::check_wire_decoder("bundle/dense", &b.to_bytes(), &|bytes| {
+        Bundle::<DenseMatrix>::try_from_bytes(bytes)
+    });
+    // Metadata-less shape (systolic blocks).
+    let lean = Bundle { pts, gids: (0..8).collect(), cells: Vec::new(), dpc: Vec::new() };
+    wire::check_wire_decoder("bundle/dense-lean", &lean.to_bytes(), &|bytes| {
+        Bundle::<DenseMatrix>::try_from_bytes(bytes)
+    });
+}
+
+#[test]
+fn bundle_hamming_mutations() {
+    let codes = scenario::hamming_codes(8602, 6);
+    let b = Bundle { pts: codes, gids: (10..16).collect(), cells: Vec::new(), dpc: Vec::new() };
+    wire::check_wire_decoder("bundle/hamming", &b.to_bytes(), &|bytes| {
+        Bundle::<HammingCodes>::try_from_bytes(bytes)
+    });
+}
+
+#[test]
+fn bundle_string_mutations() {
+    let reads = scenario::string_pool(8603, 6);
+    let b = Bundle {
+        pts: reads,
+        gids: (0..6).collect(),
+        cells: Vec::new(),
+        dpc: (0..6).map(|i| i as f64).collect(),
+    };
+    wire::check_wire_decoder("bundle/strings", &b.to_bytes(), &|bytes| {
+        Bundle::<StringSet>::try_from_bytes(bytes)
+    });
+}
+
+#[test]
+fn edge_bundle_mutations() {
+    let mut edges = WeightedEdgeList::new();
+    edges.push(0, 3, 0.5);
+    edges.push(2, 7, 1.25);
+    edges.push(1, 4, 0.0);
+    let eb = EdgeBundle { source: 3, edges };
+    wire::check_wire_decoder("edge-bundle", &eb.to_bytes(), &EdgeBundle::from_bytes);
+}
+
+#[test]
+fn weighted_edge_list_mutations() {
+    let mut edges = WeightedEdgeList::new();
+    for i in 0..10u32 {
+        edges.push(i, i + 3, 0.125 * i as f64);
+    }
+    wire::check_wire_decoder("weighted-edges", &edges.to_bytes(), &WeightedEdgeList::from_bytes);
+}
+
+#[test]
+fn near_graph_csr_mutations() {
+    // A real graph through the NGW-CSR1 file format: symmetric adjacency,
+    // paired weights — plenty of cross-invariants for flips to violate
+    // (they must error, not panic).
+    let pts = scenario::dense_clusters(8604, 24);
+    let idx = build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default())
+        .unwrap();
+    let mut sink = WeightedEdgeList::new();
+    idx.eps_self_join(0.6, &mut sink);
+    let graph = sink.into_near_graph(24);
+    assert!(graph.num_edges() > 0, "need a non-trivial graph");
+    wire::check_wire_decoder("near-graph", &graph.to_bytes(), &NearGraph::from_bytes);
+}
+
+#[test]
+fn knn_graph_mutations() {
+    let pts = scenario::dense_clusters(8605, 20);
+    let idx = build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default())
+        .unwrap();
+    let graph = idx.knn_graph(3, &Pool::new(1));
+    wire::check_wire_decoder("knn-graph", &graph.to_bytes(), &KnnGraph::from_bytes);
+}
+
+#[test]
+fn knn_bundle_mutations() {
+    let pts = scenario::dense_clusters(8606, 5);
+    let rows: Vec<Vec<(u32, f64)>> =
+        (0..5).map(|i| vec![((i as u32 + 1) % 5, i as f64 + 0.5)]).collect();
+    let caps: Vec<f64> = rows.iter().map(|r| r[0].1).collect();
+    let b = KnnBundle::from_rows(1, pts, (0..5).collect(), Vec::new(), caps, &rows);
+    wire::check_wire_decoder("knn-bundle", &b.to_bytes(), &|bytes| {
+        KnnBundle::<DenseMatrix>::try_from_bytes(bytes)
+    });
+}
