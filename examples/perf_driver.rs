@@ -1,29 +1,71 @@
 //! Perf driver: build + ε self-join on a Table-I-style dense workload,
 //! sequential vs pooled (the PR 2 trajectory), the same join through the
-//! `neargraph::index` facade (PR 3), **plus** — when `--knn k` is set —
-//! the k-NN paths: the facade's `knn_graph` per thread count and the three
-//! distributed radius-refinement layouts (PR 4) — emitting a
-//! machine-readable `BENCH_pr4.json` so the perf trajectory accumulates
-//! across PRs.
+//! `neargraph::index` facade (PR 3), the k-NN paths when `--knn k` is set
+//! (PR 4), **plus** a traversal section (PR 5): the flat level-ordered
+//! layout vs the legacy build-order traversal on the same batch, with
+//! distance-call parity asserted and — via the counting global allocator
+//! below — a proof that a warmed [`QueryScratch`] makes steady-state
+//! batch queries **allocation-free**. Emits machine-readable
+//! `BENCH_pr5.json` so the perf trajectory accumulates across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
 //!     [--threads 1,2,4] [--target-degree 30] [--knn 16] \
-//!     [--out BENCH_pr4.json]
+//!     [--out BENCH_pr5.json]
 //! ```
 //!
 //! The driver asserts that every thread count — and every facade backend
-//! it times — reproduces the single-thread direct edge set exactly, and
-//! that every k-NN path reproduces the identical row fingerprint (the
-//! determinism gate, on the bench workload itself).
+//! it times — reproduces the single-thread direct edge set exactly, that
+//! the flat traversal reproduces the legacy emission (pairs, distance
+//! bits and distance-call count), and that every k-NN path reproduces the
+//! identical row fingerprint (the determinism gates, on the bench
+//! workload itself).
 
-use neargraph::covertree::{BuildParams, CoverTree};
+use neargraph::covertree::{BuildParams, CoverTree, QueryScratch};
 use neargraph::dist::{run_knn_graph, Algorithm, RunConfig};
 use neargraph::graph::{GraphSink, KnnGraph};
 use neargraph::index::{build_index_par, IndexKind, IndexParams, NearIndex};
 use neargraph::metric::{Counted, Euclidean};
 use neargraph::util::{Pool, Rng};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Counting wrapper around the system allocator: every `alloc`,
+/// `alloc_zeroed` and growing `realloc` bumps one relaxed counter. The
+/// traversal section reads it around a warmed batch query to prove the
+/// steady state allocates nothing.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 struct Run {
     threads: usize,
@@ -51,6 +93,20 @@ struct KnnRun {
     total_s: f64,
     arcs: u64,
     row_hash: u64,
+}
+
+/// The PR 5 traversal comparison: flat SoA layout + warmed scratch vs the
+/// legacy build-order traversal, on one sequential batch.
+struct TraversalRun {
+    batch: usize,
+    pairs: u64,
+    legacy_s: f64,
+    flat_s: f64,
+    legacy_dists: u64,
+    flat_dists: u64,
+    /// Heap allocations during the measured (second, warmed) flat batch —
+    /// the acceptance gate demands 0 for batches ≥ 1024 queries.
+    steady_state_allocs: u64,
 }
 
 /// Order-independent fingerprint of a k-NN graph's (vertex, neighbor,
@@ -90,7 +146,7 @@ fn main() {
         args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
     let knn_k = args.get_usize("knn").unwrap_or_else(|e| fail(&e)).unwrap_or(0);
     let threads_arg = args.get_or("threads", "1,2,4").to_string();
-    let out_path = args.get_or("out", "BENCH_pr4.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr5.json").to_string();
     args.reject_unknown().unwrap_or_else(|e| fail(&e));
     let thread_list: Vec<usize> = threads_arg
         .split(',')
@@ -150,6 +206,74 @@ fn main() {
         assert_eq!(r.build_dists, base.build_dists, "build dists changed at threads={}", r.threads);
         assert_eq!(r.join_dists, base.join_dists, "join dists changed at threads={}", r.threads);
     }
+
+    // ------------------------------------------------------------------
+    // Traversal section (PR 5): flat SoA layout + warmed scratch vs the
+    // legacy build-order traversal. Same tree, same ≥1024-query batch,
+    // sequential on this thread (the allocator counter is global, so
+    // nothing else may run). Gates: identical emission fingerprint,
+    // identical distance-call count, zero steady-state allocations.
+    // ------------------------------------------------------------------
+    let traversal = {
+        let tree = CoverTree::build(&pts, &Euclidean, &params);
+        let batch = n.min(2048);
+        let queries = pts.slice(0, batch);
+        let counted = Counted::new(Euclidean);
+
+        let mut legacy_pairs = 0u64;
+        let mut legacy_hash = 0u64;
+        let t0 = Instant::now();
+        tree.query_batch_legacy(&counted, &queries, eps, |q, gid, d| {
+            legacy_pairs += 1;
+            legacy_hash = legacy_hash
+                .wrapping_add(mix(((q as u64) << 32) | gid as u64).wrapping_add(mix(d.to_bits())));
+        });
+        let legacy_s = t0.elapsed().as_secs_f64();
+        let legacy_dists = counted.count();
+        counted.counter().reset();
+
+        // Warm the scratch (first call sizes the arena/stack), then
+        // measure the second, identical call with the allocation counter.
+        let mut scratch = QueryScratch::new();
+        tree.query_batch_with(&counted, &queries, eps, &mut scratch, |_, _, _| {});
+        counted.counter().reset();
+        let mut flat_pairs = 0u64;
+        let mut flat_hash = 0u64;
+        let alloc0 = allocations();
+        let t1 = Instant::now();
+        tree.query_batch_with(&counted, &queries, eps, &mut scratch, |q, gid, d| {
+            flat_pairs += 1;
+            flat_hash = flat_hash
+                .wrapping_add(mix(((q as u64) << 32) | gid as u64).wrapping_add(mix(d.to_bits())));
+        });
+        let flat_s = t1.elapsed().as_secs_f64();
+        let steady_state_allocs = allocations() - alloc0;
+        let flat_dists = counted.count();
+
+        eprintln!(
+            "[perf_driver] traversal batch={batch}: legacy {legacy_s:.4}s ({legacy_dists} dists) \
+             vs flat {flat_s:.4}s ({flat_dists} dists), {flat_pairs} pairs, \
+             {steady_state_allocs} steady-state allocs"
+        );
+        assert_eq!(flat_pairs, legacy_pairs, "flat traversal changed the result count");
+        assert_eq!(flat_hash, legacy_hash, "flat traversal changed pairs or distance bits");
+        assert_eq!(flat_dists, legacy_dists, "flat traversal changed the distance-call count");
+        if batch >= 1024 {
+            assert_eq!(
+                steady_state_allocs, 0,
+                "warmed batch query must be allocation-free (batch={batch})"
+            );
+        }
+        TraversalRun {
+            batch,
+            pairs: flat_pairs,
+            legacy_s,
+            flat_s,
+            legacy_dists,
+            flat_dists,
+            steady_state_allocs,
+        }
+    };
 
     // ------------------------------------------------------------------
     // Facade path: the same work through `Box<dyn NearIndex>` (cover
@@ -255,7 +379,8 @@ fn main() {
     }
 
     let (seq_total, best) = summarize(&runs);
-    let json = render_json(&dataset, n, dim, eps, &runs, &facade, &knn_runs, seq_total, best);
+    let json =
+        render_json(&dataset, n, dim, eps, &runs, &facade, &knn_runs, &traversal, seq_total, best);
     std::fs::write(&out_path, &json).unwrap_or_else(|e| fail(&format!("{out_path}: {e}")));
     println!("{json}");
     eprintln!("[perf_driver] wrote {out_path}");
@@ -279,14 +404,28 @@ fn render_json(
     runs: &[Run],
     facade: &[FacadeRun],
     knn_runs: &[KnnRun],
+    traversal: &TraversalRun,
     seq_total: f64,
     best: &Run,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"bench\": \"pr4_dist_knn\",\n");
+    s.push_str("  \"bench\": \"pr5_flat_traversal\",\n");
     s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
     s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
+    s.push_str(&format!(
+        "  \"traversal\": {{\"batch\": {}, \"pairs\": {}, \"legacy_s\": {:.6}, \
+         \"flat_s\": {:.6}, \"legacy_dist_calls\": {}, \"flat_dist_calls\": {}, \
+         \"steady_state_allocs\": {}, \"flat_speedup\": {:.4}}},\n",
+        traversal.batch,
+        traversal.pairs,
+        traversal.legacy_s,
+        traversal.flat_s,
+        traversal.legacy_dists,
+        traversal.flat_dists,
+        traversal.steady_state_allocs,
+        traversal.legacy_s / traversal.flat_s.max(1e-12)
+    ));
     s.push_str("  \"direct_runs\": [\n");
     for (i, r) in runs.iter().enumerate() {
         s.push_str(&format!(

@@ -107,7 +107,9 @@ impl Snn {
                 (s, i as u32)
             })
             .collect();
-        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        // total_cmp: a NaN projection score (degenerate input) sorts last
+        // instead of panicking the build.
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let order: Vec<u32> = scored.iter().map(|&(_, i)| i).collect();
         let scores: Vec<f32> = scored.iter().map(|&(s, _)| s).collect();
         let sorted_pts = pts.gather(&order.iter().map(|&i| i as usize).collect::<Vec<_>>());

@@ -14,6 +14,50 @@ use crate::comm::CostModel;
 use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig};
 use crate::index::IndexKind;
 
+/// Typed rejection of an unrunnable experiment configuration — raised at
+/// config/CLI *parse* time ([`ExperimentConfig::validate`]), so a bad
+/// `eps` fails loudly instead of silently falling through to calibration
+/// (the old behavior for `eps < 0` / `eps = NaN`) or running nothing.
+#[derive(Clone, Debug)]
+pub enum ConfigError {
+    /// `eps` is NaN, infinite or negative — not a radius.
+    BadEps { value: f64 },
+    /// Calibration would run (`eps == 0`, `knn == 0`) but `target_degree`
+    /// is NaN, infinite or negative.
+    BadTargetDegree { value: f64 },
+    /// Both an explicit `eps` and a `knn` were set; the two graph
+    /// constructions are mutually exclusive.
+    EpsKnnConflict { eps: f64, knn: usize },
+    /// `eps == 0`, `knn == 0` and no usable calibration target: no path
+    /// would run.
+    NothingToRun,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::BadEps { value } => {
+                write!(f, "eps must be a finite, non-negative radius (got {value})")
+            }
+            ConfigError::BadTargetDegree { value } => write!(
+                f,
+                "target_degree must be finite and positive to calibrate eps (got {value})"
+            ),
+            ConfigError::EpsKnnConflict { eps, knn } => write!(
+                f,
+                "knn and eps are mutually exclusive (set one of them; got eps={eps}, knn={knn})"
+            ),
+            ConfigError::NothingToRun => write!(
+                f,
+                "nothing to run: set eps > 0 (\u{3b5}-graph), knn > 0 (k-NN graph), or a \
+                 positive target_degree (\u{3b5} calibration)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// A fully-resolved experiment configuration (CLI and config files both
 /// funnel into this).
 #[derive(Clone, Debug)]
@@ -126,6 +170,34 @@ impl ExperimentConfig {
         }
         Ok(cfg)
     }
+
+    /// Reject configurations that cannot run — non-finite or negative
+    /// `eps`, a set-both `eps`/`knn` conflict, and the "neither path
+    /// runs" case where `eps == 0`, `knn == 0` and the calibration
+    /// target is unusable. The launcher calls this on the *effective*
+    /// configuration, after CLI flags have overridden the config file —
+    /// a file may deliberately leave `eps`/`target_degree` unset for the
+    /// command line to supply, so validating inside
+    /// [`ExperimentConfig::from_toml`] would reject working templates.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !self.eps.is_finite() || self.eps < 0.0 {
+            return Err(ConfigError::BadEps { value: self.eps });
+        }
+        if self.knn > 0 && self.eps > 0.0 {
+            return Err(ConfigError::EpsKnnConflict { eps: self.eps, knn: self.knn });
+        }
+        if self.knn == 0 && self.eps == 0.0 {
+            // The ε path will calibrate from target_degree — it must be a
+            // usable target.
+            if self.target_degree == 0.0 {
+                return Err(ConfigError::NothingToRun);
+            }
+            if !self.target_degree.is_finite() || self.target_degree < 0.0 {
+                return Err(ConfigError::BadTargetDegree { value: self.target_degree });
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Re-exported so callers can build cost models from config fragments.
@@ -228,5 +300,64 @@ ghost = "all"
     fn type_errors_reported() {
         assert!(ExperimentConfig::from_toml("scale = \"big\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[run]\nranks = 1.5\n").is_err());
+    }
+
+    fn with(eps: f64, knn: usize, target_degree: f64) -> ExperimentConfig {
+        ExperimentConfig { eps, knn, target_degree, ..ExperimentConfig::default() }
+    }
+
+    #[test]
+    fn validate_rejects_bad_eps() {
+        // Negative ε used to fall through silently to calibration.
+        let cfg = ExperimentConfig::from_toml("eps = -0.5\n").expect("parse succeeds");
+        let err = cfg.validate().expect_err("negative eps").to_string();
+        assert!(err.contains("finite, non-negative"), "unexpected: {err}");
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            assert!(
+                matches!(with(bad, 0, 30.0).validate(), Err(ConfigError::BadEps { .. })),
+                "eps={bad}"
+            );
+        }
+        assert!(with(0.25, 0, 30.0).validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_eps_knn_conflict() {
+        let cfg = ExperimentConfig::from_toml("eps = 0.3\nknn = 5\n").expect("parse succeeds");
+        let err = cfg.validate().expect_err("conflict").to_string();
+        assert!(err.contains("mutually exclusive"), "unexpected: {err}");
+        assert!(matches!(
+            with(0.3, 5, 30.0).validate(),
+            Err(ConfigError::EpsKnnConflict { .. })
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_the_nothing_to_run_fallthrough() {
+        // eps == 0 && knn == 0 is only runnable with a usable calibration
+        // target; a zeroed target means no path would run at all. The file
+        // alone still PARSES (a CLI --eps may rescue it) — rejection is
+        // validate()'s job, on the effective config.
+        let cfg = ExperimentConfig::from_toml("eps = 0.0\ntarget_degree = 0.0\n")
+            .expect("template parses");
+        let err = cfg.validate().expect_err("no run").to_string();
+        assert!(err.contains("nothing to run"), "unexpected: {err}");
+        // A CLI override makes the same template runnable.
+        let rescued = ExperimentConfig { eps: 0.5, ..cfg };
+        assert!(rescued.validate().is_ok());
+        assert!(matches!(with(0.0, 0, 0.0).validate(), Err(ConfigError::NothingToRun)));
+        for bad in [-3.0, f64::NAN, f64::INFINITY] {
+            assert!(
+                matches!(
+                    with(0.0, 0, bad).validate(),
+                    Err(ConfigError::BadTargetDegree { .. })
+                ),
+                "target={bad}"
+            );
+        }
+        // A knn run never calibrates, so a zero target is fine there.
+        assert!(with(0.0, 8, 0.0).validate().is_ok());
+        // Defaults (calibration from target_degree = 30) stay valid.
+        assert!(ExperimentConfig::default().validate().is_ok());
     }
 }

@@ -11,7 +11,7 @@
 //! tree is **bit-identical** to [`build`]'s at every pool size (enforced
 //! by `tests/par_determinism.rs`).
 
-use super::{CoverTree, Node, NIL};
+use super::{CoverTree, FlatTree, Node, NIL};
 use crate::metric::Metric;
 use crate::points::PointSet;
 use crate::util::Pool;
@@ -58,7 +58,14 @@ pub(super) fn build<P: PointSet, M: Metric<P>>(
     params: &BuildParams,
 ) -> CoverTree<P> {
     let n = points.len();
-    let mut tree = CoverTree { points, ids, nodes: Vec::new(), children: Vec::new(), root: NIL };
+    let mut tree = CoverTree {
+        points,
+        ids,
+        nodes: Vec::new(),
+        children: Vec::new(),
+        root: NIL,
+        flat: FlatTree::default(),
+    };
     if n == 0 {
         return tree;
     }
@@ -97,7 +104,7 @@ pub(super) fn build<P: PointSet, M: Metric<P>>(
         }
         split_vertex(&mut tree, metric, params, hub, &mut queue);
     }
-    tree
+    tree.finish()
 }
 
 fn push_node<P: PointSet>(tree: &mut CoverTree<P>, point: u32, radius: f64, level: i32) -> u32 {
@@ -346,8 +353,14 @@ pub(super) fn par_build<P: PointSet, M: Metric<P>>(
         // All points coincide with the root (n > leaf_size duplicates):
         // mirror `build`'s attach_leaves outcome directly instead of
         // delegating, which would recompute the n−1 root distances.
-        let mut tree =
-            CoverTree { points, ids, nodes: Vec::new(), children: Vec::new(), root: NIL };
+        let mut tree = CoverTree {
+            points,
+            ids,
+            nodes: Vec::new(),
+            children: Vec::new(),
+            root: NIL,
+            flat: FlatTree::default(),
+        };
         let root_node = push_node(&mut tree, root_pt, radius, level);
         tree.root = root_node;
         // n ≥ 2 here, so this is the multi-leaf case of attach_leaves:
@@ -362,7 +375,7 @@ pub(super) fn par_build<P: PointSet, M: Metric<P>>(
         let nref = &mut tree.nodes[root_node as usize];
         nref.child_off = off;
         nref.child_len = len;
-        return tree;
+        return tree.finish();
     }
 
     // Phase A: expand every hub, any order. Hub ids come from an atomic
@@ -413,7 +426,14 @@ pub(super) fn par_build<P: PointSet, M: Metric<P>>(
     }
 
     // Phase B: replay the sequential worklist order to number the nodes.
-    let mut tree = CoverTree { points, ids, nodes: Vec::new(), children: Vec::new(), root: NIL };
+    let mut tree = CoverTree {
+        points,
+        ids,
+        nodes: Vec::new(),
+        children: Vec::new(),
+        root: NIL,
+        flat: FlatTree::default(),
+    };
     let root_node = push_node(&mut tree, root_pt, radius, level);
     tree.root = root_node;
     let mut stack: Vec<(u32, u64)> = vec![(root_node, 0)];
@@ -464,7 +484,7 @@ pub(super) fn par_build<P: PointSet, M: Metric<P>>(
             }
         }
     }
-    tree
+    tree.finish()
 }
 
 #[cfg(test)]

@@ -11,6 +11,7 @@
 //! less — one of the two effects the paper's design exploits (the other
 //! being cache-friendly level-by-level partitioning).
 
+use super::QueryScratch;
 use crate::metric::Metric;
 use crate::points::PointSet;
 
@@ -116,10 +117,12 @@ impl<P: PointSet> InsertCoverTree<P> {
             level -= 1;
             // The separation constraint needs d(p, parent) ≤ 2^{level};
             // every member of `next` qualifies. Prefer the closest.
+            // (total_cmp: a NaN distance from a broken metric sorts last
+            // instead of panicking mid-insert.)
             let &(best, bd) = next
                 .iter()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap();
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .expect("cover set nonempty");
             parent = (best, bd, level);
             cover = next;
         }
@@ -141,8 +144,25 @@ impl<P: PointSet> InsertCoverTree<P> {
         eps: f64,
         out: &mut Vec<(u32, f64)>,
     ) {
+        let mut scratch = QueryScratch::new();
+        self.query_weighted_with(metric, q, eps, &mut scratch, out);
+    }
+
+    /// [`InsertCoverTree::query_weighted`] with a caller-owned node stack
+    /// (the comparator tree rides the same scratch-reuse scheme as the
+    /// batch tree, so facade-level batching over it stays allocation-lean).
+    pub fn query_weighted_with<M: Metric<P>>(
+        &self,
+        metric: &M,
+        q: P::Point<'_>,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
         let Some(root) = self.root else { return };
-        let mut stack = vec![root];
+        let stack = &mut scratch.nodes;
+        stack.clear();
+        stack.push(root);
         while let Some(u) = stack.pop() {
             let n = &self.nodes[u as usize];
             let d = metric.dist(q, self.points.point(n.point as usize));

@@ -5,7 +5,26 @@
 //!
 //! Best-first branch-and-bound over the cover tree: nodes are visited in
 //! order of their lower bound `max(d(q, p_v) − radius_v, 0)`; a node is
-//! pruned once k candidates closer than its bound are known.
+//! pruned once k candidates closer than its bound are known. Traversal
+//! runs over the flat level-ordered layout ([`super::FlatTree`]) with both
+//! heaps owned by a caller-provided [`QueryScratch`] — the distributed
+//! refinement loops issue millions of bounded queries per rank and reuse
+//! one scratch each, so the steady state allocates nothing per query.
+//!
+//! Heap ordering uses [`f64::total_cmp`] (see `scratch.rs`): a NaN
+//! distance from a broken user metric sorts last instead of panicking
+//! inside the heap the way `partial_cmp(..).unwrap()` did, and on real
+//! distances the order is the documented `(distance, id)` policy bit for
+//! bit. The pruning comparisons themselves stay native `f64` operators
+//! and degrade cleanly under NaN: a NaN center distance yields a lower
+//! bound of 0 (`(NaN − r).max(0.0)` is `0.0`), so such a subtree is
+//! still *explored* — real candidates beneath one broken center pair are
+//! not lost, at the price of pruning efficiency — while NaN candidate
+//! distances fail the leaf accept (`d ≤ cap` is false for NaN) and never
+//! enter a result. Point/bounded k-NN queries therefore never panic
+//! under a NaN metric; note that full k-NN **graph** construction
+//! (`KnnGraph::from_rows`) still asserts complete, finite rows and does
+//! require a finite metric.
 //!
 //! Two properties the distributed radius-refinement loop (`dist::knn`,
 //! DESIGN.md §9) depends on:
@@ -20,57 +39,14 @@
 //!   candidate so an equal-distance, smaller-id point behind an
 //!   equal-to-bound subtree is never lost; this is what makes distributed
 //!   merges bit-deterministic across rank and pool counts.
+#![warn(clippy::unwrap_used)]
 
-use super::CoverTree;
+use super::scratch::{Cand, Frontier};
+use super::{CoverTree, QueryScratch};
 use crate::metric::Metric;
 use crate::points::PointSet;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-
-/// Max-heap entry of current k-best candidates.
-#[derive(PartialEq)]
-struct Cand {
-    dist: f64,
-    gid: u32,
-}
-
-impl Eq for Cand {}
-
-impl PartialOrd for Cand {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Cand {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Max-heap by distance; ties by gid for determinism.
-        self.dist.partial_cmp(&other.dist).unwrap().then(self.gid.cmp(&other.gid))
-    }
-}
-
-/// Min-heap frontier entry (lower bound, node, exact distance to point).
-#[derive(PartialEq)]
-struct Frontier {
-    bound: f64,
-    node: u32,
-    dist: f64,
-}
-
-impl Eq for Frontier {}
-
-impl PartialOrd for Frontier {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Frontier {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for a min-heap on the bound.
-        other.bound.partial_cmp(&self.bound).unwrap().then(other.node.cmp(&self.node))
-    }
-}
 
 impl<P: PointSet> CoverTree<P> {
     /// The `k` nearest tree points to `query`, as `(global_id, distance)`
@@ -98,16 +74,40 @@ impl<P: PointSet> CoverTree<P> {
         k: usize,
         cap: f64,
     ) -> Vec<(u32, f64)> {
+        let mut scratch = QueryScratch::new();
+        let mut out = Vec::new();
+        self.knn_within_with(metric, query, k, cap, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`CoverTree::knn_within`] with caller-owned heaps and result
+    /// buffer: `out` is cleared and filled with the ascending
+    /// `(distance, id)`-ordered result. Callers issuing many bounded
+    /// queries (the `dist::knn` refinement loops, the facade's pooled
+    /// k-NN batches) hold one [`QueryScratch`] per worker and pay no
+    /// per-query allocation once the buffers are warm.
+    pub fn knn_within_with<M: Metric<P>>(
+        &self,
+        metric: &M,
+        query: P::Point<'_>,
+        k: usize,
+        cap: f64,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
         if self.is_empty() || k == 0 || !(cap >= 0.0) {
-            return Vec::new();
+            return;
         }
-        let mut best: BinaryHeap<Cand> = BinaryHeap::with_capacity(k + 1);
-        let mut frontier: BinaryHeap<Frontier> = BinaryHeap::new();
-        let root = self.node(self.root());
-        let d = metric.dist(query, self.points().point(root.point as usize));
-        let rb = (d - root.radius).max(0.0);
+        let flat = self.flat();
+        let QueryScratch { best, frontier, .. } = scratch;
+        best.clear();
+        frontier.clear();
+        let root = flat.root();
+        let d = metric.dist(query, self.points().point(flat.point(root) as usize));
+        let rb = (d - flat.radius(root)).max(0.0);
         if rb <= cap {
-            frontier.push(Frontier { bound: rb, node: self.root(), dist: d });
+            frontier.push(Frontier { bound: rb, node: root, dist: d });
         }
 
         while let Some(Frontier { bound, node, dist }) = frontier.pop() {
@@ -115,38 +115,47 @@ impl<P: PointSet> CoverTree<P> {
             // On a tie (bound == current k-th distance) the subtree may
             // still hold an equal-distance point with a smaller id, which
             // outranks the current k-th under (distance, id) — keep going.
-            if best.len() == k && bound > best.peek().unwrap().dist {
-                break; // the frontier is bound-ordered — nothing better left
+            if best.len() == k {
+                if let Some(top) = best.peek() {
+                    if bound > top.dist {
+                        break; // frontier is bound-ordered — nothing better left
+                    }
+                }
             }
-            let n = self.node(node);
-            if n.is_leaf() {
+            if flat.is_leaf(node) {
                 if dist <= cap {
-                    push_cand(&mut best, k, Cand { dist, gid: self.global_id(n.point as usize) });
+                    let gid = self.global_id(flat.point(node) as usize);
+                    push_cand(best, k, Cand { dist, gid });
                 }
                 continue;
             }
-            for &c in self.node_children(node) {
-                let cn = self.node(c);
+            let un_point = flat.point(node);
+            for c in flat.children(node) {
+                let cp = flat.point(c);
                 // Nesting reuse: same point as parent ⇒ same distance.
-                let dc = if cn.point == n.point {
+                let dc = if cp == un_point {
                     dist
                 } else {
-                    metric.dist(query, self.points().point(cn.point as usize))
+                    metric.dist(query, self.points().point(cp as usize))
                 };
-                let cb = (dc - cn.radius).max(0.0);
+                let cb = (dc - flat.radius(c)).max(0.0);
                 if cb > cap {
                     continue;
                 }
-                if best.len() < k || cb <= best.peek().unwrap().dist {
+                let admit = best.len() < k || matches!(best.peek(), Some(top) if cb <= top.dist);
+                if admit {
                     frontier.push(Frontier { bound: cb, node: c, dist: dc });
                 }
             }
         }
-        let mut out: Vec<(u32, f64)> =
-            best.into_sorted_vec().into_iter().map(|c| (c.gid, c.dist)).collect();
-        // into_sorted_vec gives ascending by our Ord (distance, gid).
+        // Drain the max-heap (descending pops) and reverse: ascending by
+        // our Ord — the same sequence `into_sorted_vec` produced, without
+        // consuming the heap's buffer.
+        while let Some(c) = best.pop() {
+            out.push((c.gid, c.dist));
+        }
+        out.reverse();
         out.truncate(k);
-        out
     }
 }
 
@@ -154,7 +163,8 @@ fn push_cand(best: &mut BinaryHeap<Cand>, k: usize, c: Cand) {
     if best.len() < k {
         best.push(c);
     } else if let Some(top) = best.peek() {
-        if c.dist < top.dist || (c.dist == top.dist && c.gid < top.gid) {
+        // Replace the current worst iff c outranks it under (distance, id).
+        if c.cmp(top) == Ordering::Less {
             best.pop();
             best.push(c);
         }
@@ -162,6 +172,7 @@ fn push_cand(best: &mut BinaryHeap<Cand>, k: usize, c: Cand) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::covertree::BuildParams;
@@ -177,7 +188,7 @@ mod tests {
     ) -> Vec<(u32, f64)> {
         let mut all: Vec<(u32, f64)> =
             (0..pts.len()).map(|i| (i as u32, metric.dist(q, pts.point(i)))).collect();
-        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        all.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
         all.truncate(k);
         all
     }
@@ -255,7 +266,7 @@ mod tests {
             .map(|i| (i as u32, metric.dist(q, pts.point(i))))
             .filter(|&(_, d)| d <= cap)
             .collect();
-        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        all.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
         all.truncate(k);
         all
     }
@@ -273,6 +284,23 @@ mod tests {
                     // Ids AND distance bits: the bounded query is tie-exact.
                     assert_eq!(got, want, "k={k} cap={cap} qi={qi}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn knn_scratch_reuse_matches_fresh_calls() {
+        // One scratch across many bounded queries must reproduce the
+        // one-shot wrapper bit for bit — the refinement-loop contract.
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(157), 300, 4, 5, 0.15);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
+        let mut scratch = QueryScratch::new();
+        let mut row = Vec::new();
+        for qi in 0..40 {
+            for (k, cap) in [(1usize, f64::INFINITY), (5, 0.3), (9, 0.0), (3, 1.5)] {
+                tree.knn_within_with(&Euclidean, pts.row(qi), k, cap, &mut scratch, &mut row);
+                let fresh = tree.knn_within(&Euclidean, pts.row(qi), k, cap);
+                assert_eq!(row, fresh, "qi={qi} k={k} cap={cap}");
             }
         }
     }
@@ -330,5 +358,32 @@ mod tests {
             "knn used {} distance calls on clustered n=3000",
             counted.count()
         );
+    }
+
+    #[test]
+    fn nan_metric_knn_does_not_panic() {
+        // A metric returning NaN must degrade cleanly (possibly odd
+        // results, never a panic) — the total_cmp heap ordering gate.
+        #[derive(Clone)]
+        struct SometimesNan;
+        impl Metric<DenseMatrix> for SometimesNan {
+            fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+                let d = Euclidean.dist(a, b);
+                if (1.0..2.0).contains(&d) {
+                    f64::NAN
+                } else {
+                    d
+                }
+            }
+            fn name(&self) -> &'static str {
+                "sometimes-nan"
+            }
+        }
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(158), 120, 3, 3, 0.4);
+        let tree = CoverTree::build(&pts, &SometimesNan, &BuildParams { leaf_size: 4, root: 0 });
+        for qi in 0..10 {
+            let got = tree.knn(&SometimesNan, pts.row(qi), 5);
+            assert!(got.len() <= 5);
+        }
     }
 }

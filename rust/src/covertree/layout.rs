@@ -1,0 +1,285 @@
+//! Level-ordered structure-of-arrays tree layout — the traversal-side
+//! counterpart of the batch builder.
+//!
+//! The builder's node arena is laid out in *construction* order (the LIFO
+//! hub worklist), so a query descending the tree hops around the arena and
+//! chases a separate children array. [`FlatTree`] renumbers the vertices
+//! **breadth-first** once per build:
+//!
+//! * node `0` is the root and every BFS layer occupies one contiguous id
+//!   range ([`FlatTree::level`]), so wide traversals sweep forward through
+//!   memory — the compressed-cover-tree / metric-skip-list layout insight;
+//! * because children are appended to the BFS order exactly when their
+//!   parent is visited, **the children of any node form a contiguous id
+//!   range** `first_child[u] .. first_child[u] + child_len[u]`. The child
+//!   arena disappears entirely: descending is an indexed range scan over
+//!   four parallel arrays (`point`, `radius`, `first_child`, `child_len`)
+//!   instead of a pointer chase;
+//! * the renumber is a *pure permutation* decided only by the legacy
+//!   arrays, and it preserves the per-node child order. A DFS over the
+//!   flat layout therefore pushes, pops, prunes and emits in **exactly**
+//!   the order the legacy traversal did — same metric evaluations, same
+//!   accept sequence, bit-identical outputs (gated by the
+//!   `flat_matches_legacy_*` tests in `query.rs` and the cross-layout
+//!   section of `examples/perf_driver.rs`).
+//!
+//! Radii stay `f64` (they are compared against `d + ε` sums); ids are
+//! `u32` throughout, matching the rest of the crate.
+
+use super::{Node, NIL};
+use std::ops::Range;
+
+/// The level-ordered SoA layout of one built cover tree. Constructed by
+/// [`FlatTree::from_arena`] at the end of every build (sequential,
+/// parallel — which replays to the identical arena — and empty).
+#[derive(Clone, Debug, Default)]
+pub struct FlatTree {
+    /// Point index (into the owning tree's point set) of each node.
+    point: Vec<u32>,
+    /// Vertex-triple radius of each node (0 for leaves).
+    radius: Vec<f64>,
+    /// First child id of each node; children are the contiguous range
+    /// `first_child[u] .. first_child[u] + child_len[u]` (empty for
+    /// leaves, where the start value is meaningless).
+    first_child: Vec<u32>,
+    /// Child count of each node (0 ⇒ leaf).
+    child_len: Vec<u32>,
+    /// BFS layer boundaries: layer `d` is `level_off[d] .. level_off[d+1]`.
+    level_off: Vec<u32>,
+}
+
+impl FlatTree {
+    /// Deterministic BFS renumber of the legacy `(nodes, children, root)`
+    /// arena (also reachable as `FlatTree::default()` for the empty
+    /// layout). Every node must be reachable from `root` (true for every
+    /// builder output); an empty tree (`root == NIL`) yields the empty
+    /// layout.
+    pub(crate) fn from_arena(nodes: &[Node], children: &[u32], root: u32) -> Self {
+        if root == NIL || nodes.is_empty() {
+            return FlatTree::default();
+        }
+        let n = nodes.len();
+        let mut point = Vec::with_capacity(n);
+        let mut radius = Vec::with_capacity(n);
+        let mut first_child = Vec::with_capacity(n);
+        let mut child_len = Vec::with_capacity(n);
+        // `order[new_id] = legacy_id`; processing in push order IS the BFS,
+        // and children are appended when their parent is processed, so each
+        // node's children get consecutive new ids starting at the queue
+        // length observed at that moment.
+        let mut order: Vec<u32> = Vec::with_capacity(n);
+        order.push(root);
+        let mut i = 0usize;
+        while i < order.len() {
+            let nd = &nodes[order[i] as usize];
+            point.push(nd.point);
+            radius.push(nd.radius);
+            child_len.push(nd.child_len);
+            first_child.push(order.len() as u32);
+            let lo = nd.child_off as usize;
+            order.extend_from_slice(&children[lo..lo + nd.child_len as usize]);
+            i += 1;
+        }
+        debug_assert_eq!(order.len(), n, "unreachable nodes in the build arena");
+        // Layer boundaries: the children of layer [lo, hi) are exactly the
+        // next `sum(child_len[lo..hi])` ids.
+        let mut level_off: Vec<u32> = vec![0, 1];
+        loop {
+            let m = level_off.len();
+            let (lo, hi) = (level_off[m - 2] as usize, level_off[m - 1] as usize);
+            if hi >= order.len() {
+                break;
+            }
+            let kids: u32 = child_len[lo..hi].iter().sum();
+            level_off.push(hi as u32 + kids);
+        }
+        FlatTree { point, radius, first_child, child_len, level_off }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.point.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.point.is_empty()
+    }
+
+    /// The root node id (0). Only meaningful when the tree is non-empty.
+    #[inline]
+    pub fn root(&self) -> u32 {
+        0
+    }
+
+    /// Point index of node `u`.
+    #[inline]
+    pub(crate) fn point(&self, u: u32) -> u32 {
+        self.point[u as usize]
+    }
+
+    /// Triple radius of node `u`.
+    #[inline]
+    pub(crate) fn radius(&self, u: u32) -> f64 {
+        self.radius[u as usize]
+    }
+
+    #[inline]
+    pub(crate) fn is_leaf(&self, u: u32) -> bool {
+        self.child_len[u as usize] == 0
+    }
+
+    /// Children of node `u` as a contiguous id range (empty for leaves).
+    #[inline]
+    pub(crate) fn children(&self, u: u32) -> Range<u32> {
+        let first = self.first_child[u as usize];
+        first..first + self.child_len[u as usize]
+    }
+
+    /// Number of BFS layers (0 for the empty tree).
+    pub fn num_levels(&self) -> usize {
+        self.level_off.len().saturating_sub(1)
+    }
+
+    /// The contiguous id range of BFS layer `d` (root layer is 0).
+    pub fn level(&self, d: usize) -> Range<usize> {
+        self.level_off[d] as usize..self.level_off[d + 1] as usize
+    }
+
+    /// Structural self-check against the legacy arena: same node count,
+    /// and for every flat node the `(point, radius bits, child count)`
+    /// triple matches its legacy counterpart under the BFS permutation,
+    /// with children preserved in order. Test-only gate; O(n).
+    #[cfg(test)]
+    pub(crate) fn verify_against(&self, nodes: &[Node], children: &[u32], root: u32) {
+        if root == NIL {
+            assert!(self.is_empty(), "flat layout non-empty for an empty tree");
+            return;
+        }
+        assert_eq!(self.len(), nodes.len(), "flat layout lost nodes");
+        // Recompute the permutation by the same BFS and compare fields.
+        let mut order: Vec<u32> = Vec::with_capacity(nodes.len());
+        order.push(root);
+        let mut i = 0usize;
+        while i < order.len() {
+            let nd = &nodes[order[i] as usize];
+            assert_eq!(self.point[i], nd.point, "point mismatch at flat id {i}");
+            assert_eq!(
+                self.radius[i].to_bits(),
+                nd.radius.to_bits(),
+                "radius bits mismatch at flat id {i}"
+            );
+            assert_eq!(self.child_len[i], nd.child_len, "child count mismatch at flat id {i}");
+            assert_eq!(
+                self.first_child[i] as usize,
+                order.len(),
+                "children of flat id {i} not contiguous at the BFS frontier"
+            );
+            let lo = nd.child_off as usize;
+            order.extend_from_slice(&children[lo..lo + nd.child_len as usize]);
+            i += 1;
+        }
+        // Layer ranges tile [0, n) in order.
+        assert_eq!(self.level_off.first(), Some(&0));
+        assert_eq!(*self.level_off.last().expect("nonempty offsets") as usize, self.len());
+        for w in self.level_off.windows(2) {
+            assert!(w[0] < w[1], "empty or inverted BFS layer");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::covertree::{BuildParams, CoverTree};
+    use crate::metric::{Euclidean, Hamming};
+    use crate::points::{DenseMatrix, HammingCodes};
+    use crate::util::Rng;
+
+    fn random_dense(seed: u64, n: usize, d: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::new(d);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn flat_layout_matches_arena_across_leaf_sizes() {
+        let pts = random_dense(900, 300, 4);
+        for leaf_size in [1usize, 4, 16, 64] {
+            let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size, root: 0 });
+            assert_eq!(t.flat().len(), t.num_nodes(), "leaf={leaf_size}");
+            let (root, _, _) = t.structure();
+            t.flat().verify_against(t.raw_nodes(), t.raw_children(), root);
+        }
+    }
+
+    #[test]
+    fn flat_layout_levels_partition_the_nodes() {
+        let pts = random_dense(901, 200, 3);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 2, root: 0 });
+        let flat = t.flat();
+        let mut covered = 0usize;
+        for d in 0..flat.num_levels() {
+            let r = flat.level(d);
+            assert_eq!(r.start, covered, "layer {d} not contiguous");
+            covered = r.end;
+        }
+        assert_eq!(covered, flat.len());
+        assert_eq!(flat.level(0), 0..1, "root layer is node 0");
+    }
+
+    #[test]
+    fn flat_layout_handles_degenerate_trees() {
+        // Empty.
+        let empty = CoverTree::build(&DenseMatrix::new(2), &Euclidean, &BuildParams::default());
+        assert!(empty.flat().is_empty());
+        assert_eq!(empty.flat().num_levels(), 0);
+        // Singleton: one node, one layer.
+        let one = CoverTree::build(
+            &DenseMatrix::from_flat(2, vec![1.0, 2.0]),
+            &Euclidean,
+            &BuildParams::default(),
+        );
+        assert_eq!(one.flat().len(), 1);
+        assert_eq!(one.flat().num_levels(), 1);
+        // All-duplicate points: root + n leaves in two layers.
+        let mut dup = DenseMatrix::new(2);
+        for _ in 0..7 {
+            dup.push(&[3.0, 3.0]);
+        }
+        let t = CoverTree::build(&dup, &Euclidean, &BuildParams::default());
+        assert_eq!(t.flat().num_levels(), 2);
+        assert_eq!(t.flat().level(1).len(), 7);
+    }
+
+    #[test]
+    fn flat_layout_identical_for_par_builds() {
+        let pts = random_dense(902, 250, 3);
+        let params = BuildParams { leaf_size: 4, root: 0 };
+        let seq = CoverTree::build(&pts, &Euclidean, &params);
+        for threads in [2usize, 4] {
+            let pool = crate::util::Pool::new(threads);
+            let par = CoverTree::build_par(&pts, &Euclidean, &params, &pool);
+            // structure() equality already implies this, but check the
+            // derived layout directly too.
+            let (root, _, _) = par.structure();
+            par.flat().verify_against(seq.raw_nodes(), seq.raw_children(), root);
+        }
+    }
+
+    #[test]
+    fn flat_layout_hamming() {
+        let mut rng = Rng::new(903);
+        let mut codes = HammingCodes::new(64);
+        for _ in 0..150 {
+            codes.push_bits(&(0..64).map(|_| rng.bool(0.5)).collect::<Vec<_>>());
+        }
+        let t = CoverTree::build(&codes, &Hamming, &BuildParams { leaf_size: 4, root: 0 });
+        let (root, _, _) = t.structure();
+        t.flat().verify_against(t.raw_nodes(), t.raw_children(), root);
+    }
+}

@@ -28,11 +28,15 @@ mod dualtree;
 mod incremental;
 mod invariants;
 mod knn;
+mod layout;
 mod query;
+mod scratch;
 
 pub use build::BuildParams;
 pub use incremental::InsertCoverTree;
 pub use invariants::check_invariants;
+pub use layout::FlatTree;
+pub use scratch::QueryScratch;
 
 use crate::metric::Metric;
 use crate::points::PointSet;
@@ -77,6 +81,16 @@ pub struct CoverTree<P: PointSet> {
     nodes: Vec<Node>,
     children: Vec<u32>,
     root: u32,
+    /// Level-ordered SoA renumber of `(nodes, children, root)` — the hot
+    /// query paths traverse this, not the build-order arena above. Derived
+    /// deterministically at the end of every build ([`FlatTree`]).
+    ///
+    /// The legacy arena is deliberately kept alongside (≈2× topology
+    /// memory): the dual-tree join, the invariant checker and the
+    /// `*_legacy` comparators still walk it. If that cost ever matters at
+    /// scale, gate the arena behind a feature and port those three
+    /// consumers to the flat layout.
+    flat: layout::FlatTree,
 }
 
 impl<P: PointSet> CoverTree<P> {
@@ -156,6 +170,32 @@ impl<P: PointSet> CoverTree<P> {
 
     pub fn is_empty(&self) -> bool {
         self.root == NIL
+    }
+
+    /// The level-ordered flat layout the hot query paths traverse.
+    #[inline]
+    pub fn flat(&self) -> &layout::FlatTree {
+        &self.flat
+    }
+
+    /// Rebuild the flat layout from the legacy arena — the last step of
+    /// every construction path.
+    pub(crate) fn finish(mut self) -> Self {
+        self.flat = layout::FlatTree::from_arena(&self.nodes, &self.children, self.root);
+        self
+    }
+
+    /// The build-order node arena (legacy layout; tests and the
+    /// invariant/ablation paths).
+    #[cfg(test)]
+    pub(crate) fn raw_nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// The build-order children arena.
+    #[cfg(test)]
+    pub(crate) fn raw_children(&self) -> &[u32] {
+        &self.children
     }
 
     #[inline]

@@ -5,7 +5,7 @@
 //! downstream weighted ε-graphs need it — dropping it at the hot path and
 //! recomputing later would double the metric work (see `graph::NearGraph`).
 //!
-//! Two hot-path optimizations over the textbook traversal (§Perf):
+//! Three hot-path optimizations over the textbook traversal (§Perf):
 //!
 //! * **nesting reuse** — every internal vertex has a nested child carrying
 //!   the same point (cover-tree invariant i), so the child's distance is
@@ -14,16 +14,25 @@
 //! * **arena batching** — `query_batch` keeps the per-node active-query
 //!   sets in one reusable arena indexed by `(start, len)` ranges instead
 //!   of allocating a `Vec` per visited node; ranges are reclaimed on pop
-//!   (LIFO order guarantees everything above `start + len` is dead).
+//!   (LIFO order guarantees everything above `start + len` is dead);
+//! * **flat layout + scratch reuse** — traversal runs over the
+//!   level-ordered [`FlatTree`](super::FlatTree) (children are contiguous
+//!   id ranges; no child-arena chase) with all growable state owned by a
+//!   caller-provided [`QueryScratch`], so steady-state batch queries
+//!   perform zero heap allocations per query. The `*_legacy` methods keep
+//!   the build-order traversal alive as a comparator (the perf driver
+//!   times both; the `flat_matches_legacy_*` tests pin bit-identical
+//!   emission order).
 
-use super::CoverTree;
+use super::{CoverTree, QueryScratch};
 use crate::metric::Metric;
 use crate::points::PointSet;
 
 impl<P: PointSet> CoverTree<P> {
     /// All points of the tree within distance `eps` of `query`, reported
     /// as `(global_id, distance)` pairs (Algorithm 3, with the
-    /// vertex-triple radius as the pruning bound).
+    /// vertex-triple radius as the pruning bound). Convenience wrapper
+    /// over [`CoverTree::query_weighted_with`] with a throwaway scratch.
     pub fn query_weighted<M: Metric<P>>(
         &self,
         metric: &M,
@@ -31,38 +40,56 @@ impl<P: PointSet> CoverTree<P> {
         eps: f64,
         out: &mut Vec<(u32, f64)>,
     ) {
+        let mut scratch = QueryScratch::new();
+        self.query_weighted_with(metric, query, eps, &mut scratch, out);
+    }
+
+    /// [`CoverTree::query_weighted`] with caller-owned traversal state:
+    /// callers issuing many queries hold one [`QueryScratch`] and pay no
+    /// per-query allocation once its buffers are warm.
+    pub fn query_weighted_with<M: Metric<P>>(
+        &self,
+        metric: &M,
+        query: P::Point<'_>,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
         if self.is_empty() {
             return;
         }
+        let flat = self.flat();
         // Stack of (node, distance from query to the node's point).
-        let mut stack: Vec<(u32, f64)> = Vec::with_capacity(64);
-        let root = self.node(self.root);
-        let d = metric.dist(query, self.points.point(root.point as usize));
-        if root.is_leaf() {
+        let stack = &mut scratch.stack;
+        stack.clear();
+        let root = flat.root();
+        let root_pt = flat.point(root);
+        let d = metric.dist(query, self.points().point(root_pt as usize));
+        if flat.is_leaf(root) {
             if d <= eps {
-                out.push((self.ids[root.point as usize], d));
+                out.push((self.ids()[root_pt as usize], d));
             }
             return;
         }
-        if d <= root.radius + eps {
-            stack.push((self.root, d));
+        if d <= flat.radius(root) + eps {
+            stack.push((root, d));
         }
         while let Some((u, du)) = stack.pop() {
-            let un_point = self.node(u).point;
-            for &v in self.node_children(u) {
-                let node = self.node(v);
+            let un_point = flat.point(u);
+            for v in flat.children(u) {
+                let vp = flat.point(v);
                 // Nesting reuse: the child sharing the parent's point is at
                 // the same distance — no metric call needed.
-                let d = if node.point == un_point {
+                let d = if vp == un_point {
                     du
                 } else {
-                    metric.dist(query, self.points.point(node.point as usize))
+                    metric.dist(query, self.points().point(vp as usize))
                 };
-                if node.is_leaf() {
+                if flat.is_leaf(v) {
                     if d <= eps {
-                        out.push((self.ids[node.point as usize], d));
+                        out.push((self.ids()[vp as usize], d));
                     }
-                } else if d <= node.radius + eps {
+                } else if d <= flat.radius(v) + eps {
                     stack.push((v, d));
                 }
             }
@@ -87,52 +114,81 @@ impl<P: PointSet> CoverTree<P> {
     /// Batched queries: for each point of `queries`, find all tree points
     /// within `eps`. Traverses the tree once with per-node active-query
     /// ranges in a shared arena (no per-node allocation; distances carried
-    /// so the nested child is free).
+    /// so the nested child is free). Convenience wrapper over
+    /// [`CoverTree::query_batch_with`] with a throwaway scratch.
     ///
     /// `emit(query_index, neighbor_global_id, distance)` is called once per
     /// result pair; the distance is exactly what [`Metric::dist`] returns
     /// for that pair (block kernels re-evaluate accepts exactly).
-    pub fn query_batch<M, F>(&self, metric: &M, queries: &P, eps: f64, mut emit: F)
+    pub fn query_batch<M, F>(&self, metric: &M, queries: &P, eps: f64, emit: F)
     where
+        M: Metric<P>,
+        F: FnMut(usize, u32, f64),
+    {
+        let mut scratch = QueryScratch::new();
+        self.query_batch_with(metric, queries, eps, &mut scratch, emit);
+    }
+
+    /// [`CoverTree::query_batch`] with caller-owned traversal state (the
+    /// arena and the range stack live in `scratch` and keep their capacity
+    /// across calls). The emitted sequence is identical to
+    /// [`CoverTree::query_batch_legacy`] pair for pair — the flat renumber
+    /// preserves per-node child order and the DFS discipline, so both
+    /// traversals visit, prune and accept in the same order with the same
+    /// metric evaluations.
+    pub fn query_batch_with<M, F>(
+        &self,
+        metric: &M,
+        queries: &P,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        mut emit: F,
+    ) where
         M: Metric<P>,
         F: FnMut(usize, u32, f64),
     {
         if self.is_empty() || queries.is_empty() {
             return;
         }
-        let root = self.node(self.root);
-        let rp = self.points.point(root.point as usize);
+        let flat = self.flat();
+        let root = flat.root();
+        let root_pt = flat.point(root);
+        let rp = self.points().point(root_pt as usize);
 
         // Arena of (query index, distance to current node's point).
-        let mut arena: Vec<(u32, f64)> = Vec::with_capacity(queries.len());
+        let arena = &mut scratch.arena;
+        let stack = &mut scratch.range_stack;
+        arena.clear();
+        stack.clear();
+        let root_leaf = flat.is_leaf(root);
+        let root_bound = flat.radius(root) + eps;
         for q in 0..queries.len() {
             let d = metric.dist(queries.point(q), rp);
-            if root.is_leaf() {
+            if root_leaf {
                 if d <= eps {
-                    emit(q, self.ids[root.point as usize], d);
+                    emit(q, self.ids()[root_pt as usize], d);
                 }
-            } else if d <= root.radius + eps {
+            } else if d <= root_bound {
                 arena.push((q as u32, d));
             }
         }
-        if root.is_leaf() || arena.is_empty() {
+        if root_leaf || arena.is_empty() {
             return;
         }
         // (node, start, len) ranges into the arena.
-        let mut stack: Vec<(u32, u32, u32)> = vec![(self.root, 0, arena.len() as u32)];
+        stack.push((root, 0, arena.len() as u32));
 
         while let Some((u, start, len)) = stack.pop() {
             let (start, end) = (start as usize, (start + len) as usize);
             // LIFO discipline: every range above `end` belongs to an
             // already-finished subtree — reclaim it.
             arena.truncate(end);
-            let un_point = self.node(u).point;
-            for &v in self.node_children(u) {
-                let node = self.node(v);
-                let same = node.point == un_point;
-                let vp = self.points.point(node.point as usize);
-                if node.is_leaf() {
-                    let gid = self.ids[node.point as usize];
+            let un_point = flat.point(u);
+            for v in flat.children(u) {
+                let vp = flat.point(v);
+                let same = vp == un_point;
+                if flat.is_leaf(v) {
+                    let gid = self.ids()[vp as usize];
                     if same {
                         // Nesting reuse: the carried parent distance IS the
                         // leaf distance.
@@ -148,7 +204,283 @@ impl<P: PointSet> CoverTree<P> {
                         metric.leaf_filter(
                             queries,
                             &arena[start..end],
-                            &self.points,
+                            self.points(),
+                            vp as usize,
+                            eps,
+                            &mut |q, d| emit(q as usize, gid, d),
+                        );
+                    }
+                } else {
+                    let mark = arena.len();
+                    let bound = flat.radius(v) + eps;
+                    let vpoint = self.points().point(vp as usize);
+                    for k in start..end {
+                        let (q, dq) = arena[k];
+                        let d =
+                            if same { dq } else { metric.dist(queries.point(q as usize), vpoint) };
+                        if d <= bound {
+                            arena.push((q, d));
+                        }
+                    }
+                    if arena.len() > mark {
+                        stack.push((v, mark as u32, (arena.len() - mark) as u32));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Self-join: all pairs `(i, j)` of tree points with
+    /// `d(i, j) ≤ eps`, `i ≠ j`, reported once per unordered pair in global
+    /// ids with the pair distance. Used for intra-cell queries in the
+    /// landmark algorithms.
+    pub fn eps_self_join<M, F>(&self, metric: &M, eps: f64, emit: F)
+    where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+    {
+        let mut scratch = QueryScratch::new();
+        self.eps_self_join_with(metric, eps, &mut scratch, emit);
+    }
+
+    /// [`CoverTree::eps_self_join`] with caller-owned traversal state.
+    pub fn eps_self_join_with<M, F>(
+        &self,
+        metric: &M,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        mut emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+    {
+        self.query_batch_with(metric, self.points(), eps, scratch, |qi, gid, d| {
+            let qg = self.ids()[qi];
+            // Report each unordered pair once, drop self-pairs.
+            if qg < gid {
+                emit(qg, gid, d);
+            }
+        });
+    }
+
+    /// Parallel [`CoverTree::query_batch`]: queries are sharded into
+    /// fixed-size contiguous chunks ([`PAR_QUERY_CHUNK`]) processed on
+    /// `pool`, with per-chunk emit buffers replayed to `emit` in chunk
+    /// (i.e. query) order on the calling thread. The emitted multiset is
+    /// identical to the sequential batch at every pool size (pair order
+    /// within a chunk follows that chunk's traversal); a one-thread pool
+    /// or a small batch falls through to the sequential path unchanged.
+    pub fn query_batch_par<M, F>(
+        &self,
+        metric: &M,
+        queries: &P,
+        eps: f64,
+        pool: &crate::util::Pool,
+        emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(usize, u32, f64),
+    {
+        let mut scratch = QueryScratch::new();
+        self.query_batch_par_with(metric, queries, eps, pool, &mut scratch, emit);
+    }
+
+    /// [`CoverTree::query_batch_par`] with a caller-owned scratch for the
+    /// sequential fall-through (single-thread pool or sub-chunk batch).
+    /// The pooled path keeps **one scratch per worker**
+    /// ([`crate::util::Pool::run_indexed_with`]) reused across every chunk
+    /// that worker claims, so steady-state per-query allocations are zero
+    /// on both routes.
+    pub fn query_batch_par_with<M, F>(
+        &self,
+        metric: &M,
+        queries: &P,
+        eps: f64,
+        pool: &crate::util::Pool,
+        scratch: &mut QueryScratch,
+        mut emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(usize, u32, f64),
+    {
+        let n = queries.len();
+        if pool.threads() <= 1 || n <= PAR_QUERY_CHUNK {
+            return self.query_batch_with(metric, queries, eps, scratch, emit);
+        }
+        // Chunks run in bounded waves so at most one wave of result
+        // buffers is ever live (a single fan-out over all chunks would
+        // hold the entire result multiset until the slowest chunk
+        // finished). Wave grouping does not affect the emitted sequence:
+        // chunks are always replayed in index order.
+        let nparts = crate::util::div_ceil(n, PAR_QUERY_CHUNK);
+        let wave = pool.threads() * 4;
+        let mut first = 0usize;
+        while first < nparts {
+            let count = wave.min(nparts - first);
+            let base = first;
+            let parts = pool.run_indexed_with(
+                count,
+                |_| QueryScratch::new(),
+                |sc, w| {
+                    let lo = (base + w) * PAR_QUERY_CHUNK;
+                    let hi = (lo + PAR_QUERY_CHUNK).min(n);
+                    let sub = queries.slice(lo, hi);
+                    let mut out: Vec<(u32, u32, f64)> = Vec::new();
+                    self.query_batch_with(metric, &sub, eps, sc, |qi, gid, d| {
+                        out.push(((lo + qi) as u32, gid, d));
+                    });
+                    out
+                },
+            );
+            for part in parts {
+                for (q, gid, d) in part {
+                    emit(q as usize, gid, d);
+                }
+            }
+            first += count;
+        }
+    }
+
+    /// Parallel [`CoverTree::eps_self_join`] on `pool` — the identical
+    /// weighted edge set (a one-thread pool reproduces the sequential join
+    /// verbatim; larger pools shard the query side).
+    pub fn eps_self_join_par<M, F>(&self, metric: &M, eps: f64, pool: &crate::util::Pool, emit: F)
+    where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+    {
+        let mut scratch = QueryScratch::new();
+        self.eps_self_join_par_with(metric, eps, pool, &mut scratch, emit);
+    }
+
+    /// [`CoverTree::eps_self_join_par`] with a caller-owned scratch for
+    /// the sequential fall-through (see
+    /// [`CoverTree::query_batch_par_with`]).
+    pub fn eps_self_join_par_with<M, F>(
+        &self,
+        metric: &M,
+        eps: f64,
+        pool: &crate::util::Pool,
+        scratch: &mut QueryScratch,
+        mut emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+    {
+        if pool.threads() <= 1 {
+            return self.eps_self_join_with(metric, eps, scratch, emit);
+        }
+        self.query_batch_par_with(metric, self.points(), eps, pool, scratch, |qi, gid, d| {
+            let qg = self.ids()[qi];
+            if qg < gid {
+                emit(qg, gid, d);
+            }
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // legacy build-order traversals — the comparator the flat layout is
+    // measured against (perf_driver's traversal section) and the oracle
+    // the flat_matches_legacy_* tests pin emission order to.
+    // ------------------------------------------------------------------
+
+    /// [`CoverTree::query_weighted`] over the build-order node arena (the
+    /// pre-flat traversal, allocating its stack per call). Same results in
+    /// the same order; kept as a perf/equivalence comparator.
+    pub fn query_weighted_legacy<M: Metric<P>>(
+        &self,
+        metric: &M,
+        query: P::Point<'_>,
+        eps: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        if self.is_empty() {
+            return;
+        }
+        let mut stack: Vec<(u32, f64)> = Vec::with_capacity(64);
+        let root = self.node(self.root());
+        let d = metric.dist(query, self.points().point(root.point as usize));
+        if root.is_leaf() {
+            if d <= eps {
+                out.push((self.ids()[root.point as usize], d));
+            }
+            return;
+        }
+        if d <= root.radius + eps {
+            stack.push((self.root(), d));
+        }
+        while let Some((u, du)) = stack.pop() {
+            let un_point = self.node(u).point;
+            for &v in self.node_children(u) {
+                let node = self.node(v);
+                let d = if node.point == un_point {
+                    du
+                } else {
+                    metric.dist(query, self.points().point(node.point as usize))
+                };
+                if node.is_leaf() {
+                    if d <= eps {
+                        out.push((self.ids()[node.point as usize], d));
+                    }
+                } else if d <= node.radius + eps {
+                    stack.push((v, d));
+                }
+            }
+        }
+    }
+
+    /// [`CoverTree::query_batch`] over the build-order node arena (the
+    /// pre-flat traversal, allocating its arena and stack per call). Same
+    /// emitted sequence; kept as a perf/equivalence comparator.
+    pub fn query_batch_legacy<M, F>(&self, metric: &M, queries: &P, eps: f64, mut emit: F)
+    where
+        M: Metric<P>,
+        F: FnMut(usize, u32, f64),
+    {
+        if self.is_empty() || queries.is_empty() {
+            return;
+        }
+        let root = self.node(self.root());
+        let rp = self.points().point(root.point as usize);
+
+        let mut arena: Vec<(u32, f64)> = Vec::with_capacity(queries.len());
+        for q in 0..queries.len() {
+            let d = metric.dist(queries.point(q), rp);
+            if root.is_leaf() {
+                if d <= eps {
+                    emit(q, self.ids()[root.point as usize], d);
+                }
+            } else if d <= root.radius + eps {
+                arena.push((q as u32, d));
+            }
+        }
+        if root.is_leaf() || arena.is_empty() {
+            return;
+        }
+        let mut stack: Vec<(u32, u32, u32)> = vec![(self.root(), 0, arena.len() as u32)];
+
+        while let Some((u, start, len)) = stack.pop() {
+            let (start, end) = (start as usize, (start + len) as usize);
+            arena.truncate(end);
+            let un_point = self.node(u).point;
+            for &v in self.node_children(u) {
+                let node = self.node(v);
+                let same = node.point == un_point;
+                let vp = self.points().point(node.point as usize);
+                if node.is_leaf() {
+                    let gid = self.ids()[node.point as usize];
+                    if same {
+                        for k in start..end {
+                            let (q, dq) = arena[k];
+                            if dq <= eps {
+                                emit(q as usize, gid, dq);
+                            }
+                        }
+                    } else {
+                        metric.leaf_filter(
+                            queries,
+                            &arena[start..end],
+                            self.points(),
                             node.point as usize,
                             eps,
                             &mut |q, d| emit(q as usize, gid, d),
@@ -170,95 +502,6 @@ impl<P: PointSet> CoverTree<P> {
                 }
             }
         }
-    }
-
-    /// Self-join: all pairs `(i, j)` of tree points with
-    /// `d(i, j) ≤ eps`, `i ≠ j`, reported once per unordered pair in global
-    /// ids with the pair distance. Used for intra-cell queries in the
-    /// landmark algorithms.
-    pub fn eps_self_join<M, F>(&self, metric: &M, eps: f64, mut emit: F)
-    where
-        M: Metric<P>,
-        F: FnMut(u32, u32, f64),
-    {
-        self.query_batch(metric, &self.points, eps, |qi, gid, d| {
-            let qg = self.ids[qi];
-            // Report each unordered pair once, drop self-pairs.
-            if qg < gid {
-                emit(qg, gid, d);
-            }
-        });
-    }
-
-    /// Parallel [`CoverTree::query_batch`]: queries are sharded into
-    /// fixed-size contiguous chunks ([`PAR_QUERY_CHUNK`]) processed on
-    /// `pool`, with per-chunk emit buffers replayed to `emit` in chunk
-    /// (i.e. query) order on the calling thread. The emitted multiset is
-    /// identical to the sequential batch at every pool size (pair order
-    /// within a chunk follows that chunk's traversal); a one-thread pool
-    /// or a small batch falls through to the sequential path unchanged.
-    pub fn query_batch_par<M, F>(
-        &self,
-        metric: &M,
-        queries: &P,
-        eps: f64,
-        pool: &crate::util::Pool,
-        mut emit: F,
-    ) where
-        M: Metric<P>,
-        F: FnMut(usize, u32, f64),
-    {
-        let n = queries.len();
-        if pool.threads() <= 1 || n <= PAR_QUERY_CHUNK {
-            return self.query_batch(metric, queries, eps, emit);
-        }
-        // Chunks run in bounded waves so at most one wave of result
-        // buffers is ever live (a single fan-out over all chunks would
-        // hold the entire result multiset until the slowest chunk
-        // finished). Wave grouping does not affect the emitted sequence:
-        // chunks are always replayed in index order.
-        let nparts = crate::util::div_ceil(n, PAR_QUERY_CHUNK);
-        let wave = pool.threads() * 4;
-        let mut first = 0usize;
-        while first < nparts {
-            let count = wave.min(nparts - first);
-            let base = first;
-            let parts = pool.run_indexed(count, |w| {
-                let lo = (base + w) * PAR_QUERY_CHUNK;
-                let hi = (lo + PAR_QUERY_CHUNK).min(n);
-                let sub = queries.slice(lo, hi);
-                let mut out: Vec<(u32, u32, f64)> = Vec::new();
-                self.query_batch(metric, &sub, eps, |qi, gid, d| {
-                    out.push(((lo + qi) as u32, gid, d));
-                });
-                out
-            });
-            for part in parts {
-                for (q, gid, d) in part {
-                    emit(q as usize, gid, d);
-                }
-            }
-            first += count;
-        }
-    }
-
-    /// Parallel [`CoverTree::eps_self_join`] on `pool` — the identical
-    /// weighted edge set (a one-thread pool reproduces the sequential join
-    /// verbatim; larger pools shard the query side).
-    pub fn eps_self_join_par<M, F>(&self, metric: &M, eps: f64, pool: &crate::util::Pool, mut emit: F)
-    where
-        M: Metric<P>,
-        F: FnMut(u32, u32, f64),
-    {
-        if pool.threads() <= 1 {
-            return self.eps_self_join(metric, eps, emit);
-        }
-        self.query_batch_par(metric, &self.points, eps, pool, |qi, gid, d| {
-            let qg = self.ids[qi];
-            if qg < gid {
-                emit(qg, gid, d);
-            }
-        });
     }
 }
 
@@ -368,6 +611,80 @@ mod tests {
     }
 
     #[test]
+    fn flat_matches_legacy_batch_emission_order() {
+        // The strongest layout gate: the flat traversal must reproduce the
+        // legacy build-order traversal's emitted sequence EXACTLY — same
+        // pairs, same distance bits, same order — across metrics, leaf
+        // sizes and ε scales.
+        let pts = random_dense(70, 400, 4);
+        let queries = random_dense(71, 60, 4);
+        for leaf_size in [1usize, 4, 32] {
+            let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size, root: 0 });
+            for eps in [0.0, 0.3, 1.0, 3.0] {
+                let mut legacy: Vec<(usize, u32, u64)> = Vec::new();
+                t.query_batch_legacy(&Euclidean, &queries, eps, |q, g, d| {
+                    legacy.push((q, g, d.to_bits()));
+                });
+                let mut flat: Vec<(usize, u32, u64)> = Vec::new();
+                t.query_batch(&Euclidean, &queries, eps, |q, g, d| {
+                    flat.push((q, g, d.to_bits()));
+                });
+                assert_eq!(flat, legacy, "leaf={leaf_size} eps={eps}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_matches_legacy_single_query_order() {
+        let pts = random_dense(72, 250, 3);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 2, root: 0 });
+        let queries = random_dense(73, 25, 3);
+        for qi in 0..queries.len() {
+            let mut legacy: Vec<(u32, f64)> = Vec::new();
+            t.query_weighted_legacy(&Euclidean, queries.row(qi), 0.8, &mut legacy);
+            let mut flat: Vec<(u32, f64)> = Vec::new();
+            t.query_weighted(&Euclidean, queries.row(qi), 0.8, &mut flat);
+            assert_eq!(flat, legacy, "qi={qi} (order-sensitive)");
+        }
+    }
+
+    #[test]
+    fn flat_and_legacy_make_identical_distance_calls() {
+        let pts = random_dense(74, 500, 4);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 8, root: 0 });
+        let queries = random_dense(75, 80, 4);
+        let counted_legacy = Counted::new(Euclidean);
+        t.query_batch_legacy(&counted_legacy, &queries, 0.6, |_, _, _| {});
+        let counted_flat = Counted::new(Euclidean);
+        t.query_batch(&counted_flat, &queries, 0.6, |_, _, _| {});
+        assert_eq!(counted_flat.count(), counted_legacy.count());
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable_across_calls() {
+        // The same scratch must serve different batches back to back with
+        // no cross-talk.
+        let pts = random_dense(76, 200, 3);
+        let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
+        let qa = random_dense(77, 30, 3);
+        let qb = random_dense(78, 50, 3);
+        let mut scratch = QueryScratch::new();
+        for round in 0..3 {
+            for (tag, queries) in [("a", &qa), ("b", &qb)] {
+                let mut fresh: Vec<(usize, u32, u64)> = Vec::new();
+                t.query_batch(&Euclidean, queries, 0.9, |q, g, d| {
+                    fresh.push((q, g, d.to_bits()));
+                });
+                let mut reused: Vec<(usize, u32, u64)> = Vec::new();
+                t.query_batch_with(&Euclidean, queries, 0.9, &mut scratch, |q, g, d| {
+                    reused.push((q, g, d.to_bits()));
+                });
+                assert_eq!(reused, fresh, "round={round} batch={tag}");
+            }
+        }
+    }
+
+    #[test]
     fn self_join_matches_all_pairs_with_weights() {
         let pts = random_dense(55, 120, 3);
         let t = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
@@ -423,16 +740,9 @@ mod tests {
         let counted = Counted::new(Euclidean);
         let mut pairs = 0u64;
         t.query_batch(&counted, &pts, 0.5, |_, _, _| pairs += 1);
-        // Re-run with an instrumented count of visited (node, query) pairs:
-        // by construction the counted calls exclude every nested child, so
-        // they must undercut a same-shape traversal that recomputes them.
         let calls_with_reuse = counted.count();
         assert!(calls_with_reuse > 0);
-        // The nested child of the root alone guarantees >= queries.len()
-        // saved evaluations on a non-trivial tree.
         let naive_lower_bound = calls_with_reuse + pts.len() as u64;
-        // Sanity rather than exact accounting: the traversal terminated and
-        // found the right result with fewer calls than the naive bound.
         let mut want_pairs = 0u64;
         for i in 0..pts.len() {
             for j in 0..pts.len() {

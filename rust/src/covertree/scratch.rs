@@ -1,0 +1,156 @@
+//! Reusable query scratch state — the allocation story of the hot path.
+//!
+//! Every traversal in this crate needs the same few growable buffers: a
+//! DFS stack, the batched query's active-query arena, and the k-NN
+//! branch-and-bound heaps. Allocating them per call is invisible on a
+//! single query and ruinous on the distributed inner loops, which issue
+//! millions of bounded queries per rank. [`QueryScratch`] owns all of
+//! them; callers that hold one across calls (one per pool worker, one per
+//! incoming bundle on a rank) perform **zero steady-state heap
+//! allocations** per query — every buffer is `clear()`ed, never dropped,
+//! so capacity warms up once and stays. `examples/perf_driver.rs` gates
+//! this with a counting global allocator.
+//!
+//! Constructing a [`QueryScratch`] is itself allocation-free (`Vec::new`
+//! and `BinaryHeap::new` defer their first allocation), so one-shot
+//! convenience wrappers can create a throwaway scratch without paying
+//! anything the old code didn't already pay.
+//!
+//! The heap entry types live here (not in `knn.rs`) because the scratch
+//! owns the heaps. Both order by [`f64::total_cmp`]: a NaN distance from
+//! a broken user metric sorts after every real distance instead of
+//! panicking inside `BinaryHeap` the way `partial_cmp(..).unwrap()` did —
+//! and on the non-NaN distances every in-crate metric produces, the total
+//! order coincides with the documented `(distance, id)` policy bit for
+//! bit.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Max-heap entry of the current k-best candidates, ordered by
+/// `(distance, gid)` under [`f64::total_cmp`].
+#[derive(Debug, PartialEq)]
+pub(crate) struct Cand {
+    pub(crate) dist: f64,
+    pub(crate) gid: u32,
+}
+
+impl Eq for Cand {}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap by distance; ties by gid for determinism. `total_cmp`
+        // never panics — NaN sorts last, see the module docs.
+        self.dist.total_cmp(&other.dist).then(self.gid.cmp(&other.gid))
+    }
+}
+
+/// Min-heap frontier entry (lower bound, node, exact distance to point).
+#[derive(Debug, PartialEq)]
+pub(crate) struct Frontier {
+    pub(crate) bound: f64,
+    pub(crate) node: u32,
+    pub(crate) dist: f64,
+}
+
+impl Eq for Frontier {}
+
+impl PartialOrd for Frontier {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Frontier {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed for a min-heap on the bound; NaN-total like `Cand`.
+        other.bound.total_cmp(&self.bound).then(other.node.cmp(&self.node))
+    }
+}
+
+/// Reusable traversal state for every cover-tree query shape.
+///
+/// One scratch serves one thread at a time; the pooled batch paths keep
+/// one per worker ([`crate::util::Pool::run_indexed_with`]) and the
+/// distributed refinement loops keep one per rank, reused across incoming
+/// bundles. All fields retain their capacity across calls.
+#[derive(Debug, Default)]
+pub struct QueryScratch {
+    /// Single-query DFS stack: `(node, distance to the node's point)`.
+    pub(crate) stack: Vec<(u32, f64)>,
+    /// Batched-query DFS stack: `(node, arena start, arena len)`.
+    pub(crate) range_stack: Vec<(u32, u32, u32)>,
+    /// Batched-query emit arena: `(query index, carried distance)` ranges
+    /// addressed by `range_stack`, reclaimed LIFO.
+    pub(crate) arena: Vec<(u32, f64)>,
+    /// Plain node stack for traversals that carry no distance (the
+    /// insertion-tree query).
+    pub(crate) nodes: Vec<u32>,
+    /// k-NN current-best max-heap.
+    pub(crate) best: BinaryHeap<Cand>,
+    /// k-NN frontier min-heap.
+    pub(crate) frontier: BinaryHeap<Frontier>,
+}
+
+impl QueryScratch {
+    /// A fresh scratch. Allocation-free until first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cand_orders_by_distance_then_id() {
+        let mut heap = BinaryHeap::new();
+        heap.push(Cand { dist: 1.0, gid: 5 });
+        heap.push(Cand { dist: 1.0, gid: 2 });
+        heap.push(Cand { dist: 0.5, gid: 9 });
+        // Max-heap: the largest (distance, id) pops first.
+        assert_eq!(heap.pop(), Some(Cand { dist: 1.0, gid: 5 }));
+        assert_eq!(heap.pop(), Some(Cand { dist: 1.0, gid: 2 }));
+        assert_eq!(heap.pop(), Some(Cand { dist: 0.5, gid: 9 }));
+    }
+
+    #[test]
+    fn nan_candidates_sort_last_without_panicking() {
+        let mut heap = BinaryHeap::new();
+        heap.push(Cand { dist: f64::NAN, gid: 0 });
+        heap.push(Cand { dist: 2.0, gid: 1 });
+        heap.push(Cand { dist: f64::INFINITY, gid: 2 });
+        // NaN > +inf > finite under total_cmp.
+        let first = heap.pop().expect("nonempty");
+        assert!(first.dist.is_nan());
+        assert_eq!(heap.pop().map(|c| c.gid), Some(2));
+        assert_eq!(heap.pop().map(|c| c.gid), Some(1));
+    }
+
+    #[test]
+    fn frontier_is_min_heap_on_bound() {
+        let mut heap = BinaryHeap::new();
+        heap.push(Frontier { bound: 3.0, node: 1, dist: 3.0 });
+        heap.push(Frontier { bound: 0.5, node: 2, dist: 1.0 });
+        heap.push(Frontier { bound: 0.5, node: 0, dist: 1.0 });
+        assert_eq!(heap.pop().map(|f| f.node), Some(0)); // tie: smaller node
+        assert_eq!(heap.pop().map(|f| f.node), Some(2));
+        assert_eq!(heap.pop().map(|f| f.node), Some(1));
+    }
+
+    #[test]
+    fn scratch_construction_is_lazy() {
+        let s = QueryScratch::new();
+        assert_eq!(s.stack.capacity(), 0);
+        assert_eq!(s.arena.capacity(), 0);
+        assert_eq!(s.range_stack.capacity(), 0);
+        assert_eq!(s.nodes.capacity(), 0);
+    }
+}

@@ -79,7 +79,7 @@ pub fn estimate_expansion_constant<P: PointSet, M: Metric<P>>(
         for j in 0..n {
             dists.push(metric.dist_ij(pts, p, j));
         }
-        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        dists.sort_by(f64::total_cmp);
         // Radii at a few quantiles of the anchor's distance distribution.
         for q in [0.05f64, 0.1, 0.25, 0.5] {
             let r = dists[((n as f64 - 1.0) * q) as usize];

@@ -42,7 +42,7 @@ pub fn calibrate_eps<P: PointSet, M: Metric<P>>(
         }
         dists.push(metric.dist_ij(pts, i, j));
     }
-    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dists.sort_by(f64::total_cmp);
     let q = (target_avg_degree / (n as f64 - 1.0)).clamp(0.0, 1.0);
     let idx = ((dists.len() as f64 - 1.0) * q).round() as usize;
     dists[idx].max(f64::MIN_POSITIVE)

@@ -11,7 +11,7 @@
 
 use super::{RankReport, RunConfig};
 use crate::comm;
-use crate::covertree::{BuildParams, CoverTree};
+use crate::covertree::{BuildParams, CoverTree, QueryScratch};
 use crate::graph::{NearGraph, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
@@ -58,7 +58,12 @@ pub fn run_bipartite_join<P: PointSet, M: Metric<P>>(
         c.set_phase("query");
         let qbytes = if c.rank() == 0 { queries.to_bytes() } else { Vec::new() };
         let q = P::from_bytes(&c.bcast(0, qbytes));
-        tree.query_batch(&metric, &q, eps, |qi, gid, d| hits.push((qi as u32, gid, d)));
+        // Rank-local scratch: repeated joins on a serving rank reuse one
+        // warmed arena (the query batch is one bundle here).
+        let mut scratch = QueryScratch::new();
+        tree.query_batch_with(&metric, &q, eps, &mut scratch, |qi, gid, d| {
+            hits.push((qi as u32, gid, d))
+        });
         hits
     });
     let makespan = comm::makespan(&outputs);

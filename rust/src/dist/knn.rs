@@ -41,12 +41,21 @@
 //! Results are **bit-deterministic** across rank counts, pool sizes and
 //! layouts: every distance is the scalar `Metric::dist` value carried in
 //! `f64` end to end, and every selection resolves ties by `(distance,
-//! id)`. The conformance gate is `tests/knn_conformance.rs`.
+//! id)` — under [`f64::total_cmp`], so a NaN distance from a broken user
+//! metric sorts last instead of panicking mid-merge. The conformance gate
+//! is `tests/knn_conformance.rs`.
+//!
+//! Every bounded-query loop holds one [`QueryScratch`] per pool worker
+//! (or per rank on the inline path), reused across all the points of an
+//! incoming bundle: the refinement inner loop — the hottest code in a
+//! distributed k-NN run — performs zero steady-state allocations beyond
+//! the result rows themselves.
+#![warn(clippy::unwrap_used)]
 
 use super::landmark::{lemma1_bound, partition_points, Partitioned};
 use super::{GhostMode, KnnBundle, RunConfig};
 use crate::comm::Comm;
-use crate::covertree::{BuildParams, CoverTree};
+use crate::covertree::{BuildParams, CoverTree, QueryScratch};
 use crate::metric::Metric;
 use crate::points::PointSet;
 use crate::util::{block_partition, div_ceil, Pool};
@@ -76,12 +85,14 @@ fn row_cap(row: &[(u32, f64)], k: usize) -> f64 {
 /// smallest under the total order `(distance, id)`. Candidate sets from
 /// distinct ranks are disjoint (each rank owns a disjoint point set), so
 /// no dedup is needed and the result is independent of merge order.
+/// `total_cmp` keeps the sort panic-free under NaN distances (which then
+/// sort last and fall off the truncation).
 fn merge_row(row: &mut Vec<(u32, f64)>, k: usize, cands: &[(u32, f64)]) {
     if cands.is_empty() {
         return;
     }
     row.extend_from_slice(cands);
-    row.sort_unstable_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
+    row.sort_unstable_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
     row.truncate(k);
 }
 
@@ -99,22 +110,31 @@ fn seed_rows<P: PointSet, M: Metric<P>>(
         return vec![Vec::new(); n];
     }
     let nparts = div_ceil(n, KNN_CHUNK);
-    let parts = pool.run_indexed(nparts, |w| {
-        let lo = w * KNN_CHUNK;
-        let hi = ((w + 1) * KNN_CHUNK).min(n);
-        (lo..hi)
-            .map(|i| {
-                let own = tree.global_id(i);
-                let mut row: Vec<(u32, f64)> = tree
-                    .knn_within(metric, tree.points().point(i), k + 1, f64::INFINITY)
-                    .into_iter()
-                    .filter(|&(g, _)| g != own)
-                    .collect();
-                row.truncate(k);
-                row
-            })
-            .collect::<Vec<_>>()
-    });
+    let parts = pool.run_indexed_with(
+        nparts,
+        |_| QueryScratch::new(),
+        |scratch, w| {
+            let lo = w * KNN_CHUNK;
+            let hi = ((w + 1) * KNN_CHUNK).min(n);
+            (lo..hi)
+                .map(|i| {
+                    let own = tree.global_id(i);
+                    let mut row: Vec<(u32, f64)> = Vec::new();
+                    tree.knn_within_with(
+                        metric,
+                        tree.points().point(i),
+                        k + 1,
+                        f64::INFINITY,
+                        scratch,
+                        &mut row,
+                    );
+                    row.retain(|&(g, _)| g != own);
+                    row.truncate(k);
+                    row
+                })
+                .collect::<Vec<_>>()
+        },
+    );
     parts.into_iter().flatten().collect()
 }
 
@@ -136,13 +156,21 @@ fn refine_rows<P: PointSet, M: Metric<P>>(
     }
     let caps: Vec<f64> = idx.iter().map(|&i| row_cap(&rows[i], k)).collect();
     let nparts = div_ceil(idx.len(), KNN_CHUNK);
-    let parts = pool.run_indexed(nparts, |w| {
-        let lo = w * KNN_CHUNK;
-        let hi = ((w + 1) * KNN_CHUNK).min(idx.len());
-        (lo..hi)
-            .map(|j| tree.knn_within(metric, pts.point(idx[j]), k, caps[j]))
-            .collect::<Vec<_>>()
-    });
+    let parts = pool.run_indexed_with(
+        nparts,
+        |_| QueryScratch::new(),
+        |scratch, w| {
+            let lo = w * KNN_CHUNK;
+            let hi = ((w + 1) * KNN_CHUNK).min(idx.len());
+            (lo..hi)
+                .map(|j| {
+                    let mut row = Vec::new();
+                    tree.knn_within_with(metric, pts.point(idx[j]), k, caps[j], scratch, &mut row);
+                    row
+                })
+                .collect::<Vec<_>>()
+        },
+    );
     let mut j = 0usize;
     for part in parts {
         for cands in part {
@@ -317,13 +345,28 @@ pub(super) fn run_landmark<P: PointSet, M: Metric<P>>(
                 let req: KnnBundle<P> = KnnBundle::from_bytes(b);
                 let mq = req.len();
                 let nparts = div_ceil(mq, KNN_CHUNK);
-                let parts = pool.run_indexed(nparts, |w| {
-                    let lo = w * KNN_CHUNK;
-                    let hi = ((w + 1) * KNN_CHUNK).min(mq);
-                    (lo..hi)
-                        .map(|i| tree.knn_within(metric, req.pts.point(i), k, req.caps[i]))
-                        .collect::<Vec<_>>()
-                });
+                let parts = pool.run_indexed_with(
+                    nparts,
+                    |_| QueryScratch::new(),
+                    |scratch, w| {
+                        let lo = w * KNN_CHUNK;
+                        let hi = ((w + 1) * KNN_CHUNK).min(mq);
+                        (lo..hi)
+                            .map(|i| {
+                                let mut row = Vec::new();
+                                tree.knn_within_with(
+                                    metric,
+                                    req.pts.point(i),
+                                    k,
+                                    req.caps[i],
+                                    scratch,
+                                    &mut row,
+                                );
+                                row
+                            })
+                            .collect::<Vec<_>>()
+                    },
+                );
                 let out_rows: Vec<Vec<(u32, f64)>> = parts.into_iter().flatten().collect();
                 reply_bundle(pts, k, req.gids.clone(), &out_rows).to_bytes()
             })

@@ -30,7 +30,7 @@
 
 use super::{AssignStrategy, Bundle, CenterStrategy, GhostMode, RunConfig};
 use crate::comm::Comm;
-use crate::covertree::{BuildParams, CoverTree};
+use crate::covertree::{BuildParams, CoverTree, QueryScratch};
 use crate::graph::{GraphSink, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
@@ -182,9 +182,14 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     let params = BuildParams { leaf_size: cfg.leaf_size.max(1), root: 0 };
     let tree =
         CoverTree::build_with_ids_par(home.pts.clone(), home.gids.clone(), metric, &params, &pool);
+    // One traversal scratch per rank, reused by the self-join and every
+    // incoming ghost bundle below (the pooled paths keep one per worker).
+    let mut scratch = QueryScratch::new();
     // One tree per rank covers every intra-rank pair (same or different
     // cell) in a single self-join.
-    tree.eps_self_join_par(metric, eps, &pool, |a, b, d| edges.accept(a, b, d));
+    tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+        edges.accept(a, b, d)
+    });
     comm.charge_child_cpu(pool.drain_cpu());
 
     // ------------------------------------------------------------------
@@ -227,7 +232,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
             .collect();
         for b in &comm.alltoallv(bufs) {
             let ghosts: Bundle<P> = Bundle::from_bytes(b);
-            tree.query_batch_par(metric, &ghosts.pts, eps, &pool, |qi, gid, d| {
+            tree.query_batch_par_with(metric, &ghosts.pts, eps, &pool, &mut scratch, |qi, gid, d| {
                 edges.accept(ghosts.gids[qi], gid, d);
             });
         }
@@ -263,7 +268,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
                         // previous step while this transfer is in flight.
                         ghost_ring_query(
                             &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost, &pool,
-                            &mut edges,
+                            &mut scratch, &mut edges,
                         );
                     }
                 });
@@ -271,7 +276,8 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
         }
         if p > 1 {
             ghost_ring_query(
-                &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost, &pool, &mut edges,
+                &tree, metric, eps, &visiting, &centers, &my_cells, cfg.ghost, &pool,
+                &mut scratch, &mut edges,
             );
         }
         // Pool-worker CPU from the ring queries lands here, in the ghost
@@ -285,7 +291,9 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
 
 /// Filter a visiting ghost bundle down to the points relevant to this
 /// rank's cells (the receiver side of the Lemma-1 rule) and query them
-/// against the home tree, feeding weighted edges into the sink.
+/// against the home tree, feeding weighted edges into the sink. The
+/// caller's scratch serves the sequential fall-through so consecutive
+/// bundles reuse one warmed arena.
 #[allow(clippy::too_many_arguments)]
 fn ghost_ring_query<P: PointSet, M: Metric<P>>(
     tree: &CoverTree<P>,
@@ -296,6 +304,7 @@ fn ghost_ring_query<P: PointSet, M: Metric<P>>(
     my_cells: &[usize],
     ghost: GhostMode,
     pool: &Pool,
+    scratch: &mut QueryScratch,
     edges: &mut dyn GraphSink,
 ) {
     if tree.num_points() == 0 || visiting.is_empty() || my_cells.is_empty() {
@@ -316,7 +325,7 @@ fn ghost_ring_query<P: PointSet, M: Metric<P>>(
         return;
     }
     let sub = visiting.select(&keep);
-    tree.query_batch_par(metric, &sub.pts, eps, pool, |qi, gid, d| {
+    tree.query_batch_par_with(metric, &sub.pts, eps, pool, scratch, |qi, gid, d| {
         edges.accept(sub.gids[qi], gid, d);
     });
 }

@@ -16,7 +16,7 @@
 
 use super::{Bundle, RunConfig};
 use crate::comm::Comm;
-use crate::covertree::{BuildParams, CoverTree};
+use crate::covertree::{BuildParams, CoverTree, QueryScratch};
 use crate::graph::{GraphSink, WeightedEdgeList};
 use crate::metric::Metric;
 use crate::points::PointSet;
@@ -53,8 +53,14 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     comm.charge_child_cpu(pool.drain_cpu());
 
     comm.set_phase("ring");
+    // One traversal scratch per rank, reused across the self-join and
+    // every visiting bundle (zero steady-state query allocations on the
+    // inline path; the pooled path keeps one scratch per worker instead).
+    let mut scratch = QueryScratch::new();
     if p == 1 {
-        tree.eps_self_join_par(metric, eps, &pool, |a, b, d| edges.accept(a, b, d));
+        tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+            edges.accept(a, b, d)
+        });
         comm.charge_child_cpu(pool.drain_cpu());
         return edges;
     }
@@ -68,15 +74,17 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
                 if s == 1 {
                     // First transfer window: the block in hand is our own —
                     // run the intra-block self-join.
-                    tree.eps_self_join_par(metric, eps, &pool, |a, b, d| edges.accept(a, b, d));
+                    tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+                        edges.accept(a, b, d)
+                    });
                 } else {
-                    cross_query(&tree, metric, eps, &visiting, &pool, &mut edges);
+                    cross_query(&tree, metric, eps, &visiting, &pool, &mut scratch, &mut edges);
                 }
             });
         visiting = Bundle::from_bytes(&received);
     }
     // The block received on the last step still needs querying.
-    cross_query(&tree, metric, eps, &visiting, &pool, &mut edges);
+    cross_query(&tree, metric, eps, &visiting, &pool, &mut scratch, &mut edges);
     // Pool CPU from the ring steps, charged additively after the overlaps
     // (conservative — the makespan never understates the work done).
     comm.charge_child_cpu(pool.drain_cpu());
@@ -84,16 +92,18 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
 }
 
 /// Emit every (visiting, local) pair within `eps` — with its distance —
-/// into the sink.
+/// into the sink. The caller's scratch serves the sequential
+/// fall-through, so consecutive bundles reuse one warmed arena.
 fn cross_query<P: PointSet, M: Metric<P>>(
     tree: &CoverTree<P>,
     metric: &M,
     eps: f64,
     visiting: &Bundle<P>,
     pool: &Pool,
+    scratch: &mut QueryScratch,
     sink: &mut dyn GraphSink,
 ) {
-    tree.query_batch_par(metric, &visiting.pts, eps, pool, |qi, gid, d| {
+    tree.query_batch_par_with(metric, &visiting.pts, eps, pool, scratch, |qi, gid, d| {
         sink.accept(visiting.gids[qi], gid, d);
     });
 }

@@ -23,6 +23,17 @@
 //! storage. Cross-backend comparisons therefore agree to f32 rounding;
 //! [`WEIGHT_TOL`] (1e-5 relative) allows ~100× headroom over the 2⁻²⁴
 //! narrowing error while staying far below any meaningful ε scale.
+//!
+//! **Non-finite weight policy.** A NaN or infinite weight can only come
+//! from a broken user metric — no in-crate construction path can emit one
+//! (ε accepts require `d ≤ ε`, which a NaN fails). [`WeightedEdgeList::push`]
+//! therefore treats a non-finite weight as a caller bug: `debug_assert` in
+//! debug builds, **silently skip** in release — never store it. The old
+//! behavior (`w.max(0.0)`) mapped NaN to `0.0`, silently fabricating a
+//! "distance zero" edge, i.e. the closest-possible relation, from garbage.
+//! Finite negative weights (also impossible for a metric) still clamp to
+//! zero, and the wire decoder continues to reject NaN/negative records as
+//! corrupt.
 
 use super::{Csr, EdgeList};
 use crate::points::{put_u64, try_get_u64, try_take, WireError};
@@ -75,11 +86,17 @@ impl WeightedEdgeList {
         WeightedEdgeList { edges: Vec::with_capacity(cap) }
     }
 
-    /// Add an undirected edge with weight `w`; self-loops are ignored and
-    /// negative weights (which no metric can produce) clamp to zero.
+    /// Add an undirected edge with weight `w`; self-loops are ignored,
+    /// finite negative weights (which no metric can produce) clamp to
+    /// zero, and non-finite weights are a debug-assert + skip — see the
+    /// module docs for the policy.
     #[inline]
     pub fn push(&mut self, u: u32, v: u32, w: f64) {
         if u == v {
+            return;
+        }
+        if !w.is_finite() {
+            debug_assert!(false, "non-finite edge weight {w} on ({u}, {v}) — broken metric?");
             return;
         }
         let w = w.max(0.0) as f32;
@@ -444,6 +461,25 @@ mod tests {
         e.push(1, 2, 0.75);
         e.push(4, 4, 9.0); // self loop dropped
         e
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "non-finite edge weight"))]
+    fn non_finite_weights_are_rejected_not_zeroed() {
+        // Debug builds trip the assert (this test expects the panic there);
+        // release builds skip the record silently — either way a NaN can
+        // no longer masquerade as a distance-zero edge.
+        let mut e = WeightedEdgeList::new();
+        e.push(0, 1, f64::NAN);
+        e.push(2, 3, f64::INFINITY);
+        assert!(e.is_empty(), "non-finite weights must not be stored");
+    }
+
+    #[test]
+    fn negative_finite_weights_still_clamp() {
+        let mut e = WeightedEdgeList::new();
+        e.push(0, 1, -2.5);
+        assert_eq!(e.edges(), &[(0, 1, 0.0)]);
     }
 
     #[test]

@@ -35,7 +35,7 @@
 //! one-file plug-in — gets deterministic parallel batching for free.
 
 use crate::baseline::{Snn, SnnParams};
-use crate::covertree::{BuildParams, CoverTree, InsertCoverTree};
+use crate::covertree::{BuildParams, CoverTree, InsertCoverTree, QueryScratch};
 use crate::graph::{GraphSink, KnnGraph, NearGraph, WeightedEdgeList};
 use crate::metric::{Euclidean, Metric};
 use crate::points::{DenseMatrix, PointSet};
@@ -202,7 +202,10 @@ pub trait NearIndex<P: PointSet, M: Metric<P>>: Send + Sync {
         let metric = self.metric();
         let mut all: Vec<(u32, f64)> =
             (0..pts.len()).map(|i| (i as u32, metric.dist(query, pts.point(i)))).collect();
-        all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        // total_cmp: a NaN distance from a broken metric sorts last
+        // instead of panicking, preserving the (distance, id) policy on
+        // every real distance.
+        all.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
         all.truncate(k);
         all
     }
@@ -384,6 +387,61 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for CoverTreeIndex<P, M> {
 
     fn knn(&self, query: P::Point<'_>, k: usize) -> Vec<(u32, f64)> {
         self.tree.knn(&self.metric, query, k)
+    }
+
+    /// One scratch across the whole batch: the bounded branch-and-bound
+    /// reuses its heaps per query instead of reallocating them.
+    fn knn_batch(&self, queries: &P, k: usize) -> Vec<Vec<(u32, f64)>> {
+        let mut scratch = QueryScratch::new();
+        (0..queries.len())
+            .map(|q| {
+                let mut row = Vec::new();
+                self.tree.knn_within_with(
+                    &self.metric,
+                    queries.point(q),
+                    k,
+                    f64::INFINITY,
+                    &mut scratch,
+                    &mut row,
+                );
+                row
+            })
+            .collect()
+    }
+
+    /// Fixed chunks with **one scratch per pool worker** (the worker's
+    /// scratch follows it across every chunk it claims) — identical rows
+    /// to [`NearIndex::knn_batch`] at every pool size.
+    fn knn_batch_par(&self, queries: &P, k: usize, pool: &Pool) -> Vec<Vec<(u32, f64)>> {
+        let n = queries.len();
+        if pool.threads() <= 1 || n <= PAR_CHUNK {
+            return self.knn_batch(queries, k);
+        }
+        let nparts = crate::util::div_ceil(n, PAR_CHUNK);
+        let parts = pool.run_indexed_with(
+            nparts,
+            |_| QueryScratch::new(),
+            |scratch, w| {
+                let lo = w * PAR_CHUNK;
+                let hi = (lo + PAR_CHUNK).min(n);
+                let sub = queries.slice(lo, hi);
+                (0..sub.len())
+                    .map(|q| {
+                        let mut row = Vec::new();
+                        self.tree.knn_within_with(
+                            &self.metric,
+                            sub.point(q),
+                            k,
+                            f64::INFINITY,
+                            scratch,
+                            &mut row,
+                        );
+                        row
+                    })
+                    .collect::<Vec<_>>()
+            },
+        );
+        parts.into_iter().flatten().collect()
     }
 
     fn eps_batch_par(

@@ -52,6 +52,20 @@
 //! assert!(hits.len() >= 1);
 //! ```
 
+// Clippy gate: CI runs `cargo clippy --all-targets -- -D warnings`. Style
+// lints that fight this crate's deliberate idioms are allowed globally;
+// correctness lints stay on, and the hot query modules additionally
+// `#![warn(clippy::unwrap_used)]` (covertree/knn.rs, dist/knn.rs) so a
+// `partial_cmp(..).unwrap()` on a distance can never sneak back in.
+#![allow(
+    clippy::needless_range_loop,      // index-coupled loops over parallel SoA arrays
+    clippy::too_many_arguments,       // phase functions thread explicit state
+    clippy::type_complexity,          // (id, distance) tuple plumbing
+    clippy::manual_range_contains,    // explicit bound comparisons mirror the paper's pseudocode
+    clippy::comparison_chain,         // ditto — tie-break ladders stay spelled out
+    clippy::field_reassign_with_default // config structs are built default-then-override
+)]
+
 pub mod baseline;
 pub mod bench;
 pub mod cli;

@@ -124,9 +124,6 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if let Some(v) = args.get_usize("knn")? {
         cfg.knn = v;
     }
-    if cfg.knn > 0 && cfg.eps > 0.0 {
-        return Err("knn and eps are mutually exclusive (set one of them)".into());
-    }
     if let Some(v) = args.get_f64("target-degree")? {
         cfg.target_degree = v;
     }
@@ -153,6 +150,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         cfg.index =
             Some(IndexKind::parse(k).ok_or_else(|| format!("unknown index kind {k:?}"))?);
     }
+    // Typed validation after every override: rejects non-finite/negative ε,
+    // the ε/knn conflict, and the "neither path runs" fallthrough that used
+    // to silently divert a bad ε into calibration.
+    cfg.validate().map_err(|e| e.to_string())?;
     let opts = OutputOpts {
         verify: args.get_bool("verify")?,
         phases: args.get_bool("phases")?,

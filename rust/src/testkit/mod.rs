@@ -36,7 +36,9 @@ pub fn brute_knn_rows<P: PointSet, M: Metric<P>>(
                 .filter(|&j| j != i)
                 .map(|j| (j as u32, metric.dist(pts.point(i), pts.point(j))))
                 .collect();
-            all.sort_unstable_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
+            // total_cmp: the oracle must not panic where product code
+            // degrades cleanly (NaN conformance scenarios).
+            all.sort_unstable_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
             all.truncate(k.min(n.saturating_sub(1)));
             all
         })

@@ -119,25 +119,44 @@ impl Pool {
         O: Send,
         F: Fn(usize) -> O + Sync,
     {
+        self.run_indexed_with(n, |_| (), |_, i| f(i))
+    }
+
+    /// [`Pool::run_indexed`] with **per-worker state**: each worker owns
+    /// one `init(worker_index)` value for its whole lifetime and every
+    /// part it claims runs as `f(&mut state, part)`. This is how the
+    /// query paths keep one reusable `QueryScratch` per worker — parts
+    /// are claimed dynamically, but the scratch (and its warmed buffer
+    /// capacity) follows the worker, not the part, so steady-state
+    /// per-part allocations drop to the parts' own outputs. A one-thread
+    /// pool runs everything inline on a single `init(0)` state.
+    pub fn run_indexed_with<O, S, I, F>(&self, n: usize, init: I, f: F) -> Vec<O>
+    where
+        O: Send,
+        I: Fn(usize) -> S + Sync,
+        F: Fn(&mut S, usize) -> O + Sync,
+    {
         if self.threads == 1 || n <= 1 {
-            return (0..n).map(&f).collect();
+            let mut state = init(0);
+            return (0..n).map(|i| f(&mut state, i)).collect();
         }
         let next = AtomicUsize::new(0);
-        let (next, f) = (&next, &f);
+        let (next, init, f) = (&next, &init, &f);
         let mut slots: Vec<Option<O>> = Vec::new();
         slots.resize_with(n, || None);
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..self.threads.min(n))
-                .map(|_| {
+                .map(|w| {
                     scope.spawn(move || {
                         let cpu0 = crate::util::thread_cpu_time();
+                        let mut state = init(w);
                         let mut out: Vec<(usize, O)> = Vec::new();
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             if i >= n {
                                 break;
                             }
-                            out.push((i, f(i)));
+                            out.push((i, f(&mut state, i)));
                         }
                         (out, crate::util::thread_cpu_time() - cpu0)
                     })
@@ -242,6 +261,44 @@ mod tests {
         let pool = Pool::new(4);
         assert!(pool.run_indexed(0, |i| i).is_empty());
         assert_eq!(pool.run_indexed(1, |i| i + 9), vec![9]);
+    }
+
+    #[test]
+    fn indexed_with_state_outputs_in_order() {
+        // Per-worker state must not perturb outputs or their order; the
+        // state visibly accumulates across the parts a worker claims.
+        for threads in [1usize, 2, 4, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.run_indexed_with(
+                53,
+                |_| Vec::<usize>::new(),
+                |seen, i| {
+                    seen.push(i);
+                    // Every part this worker processed so far includes i.
+                    assert!(seen.contains(&i));
+                    i * 2
+                },
+            );
+            assert_eq!(out, (0..53).map(|i| i * 2).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn indexed_with_state_reuses_one_state_inline() {
+        // A one-thread pool runs every part on the single init(0) state.
+        let pool = Pool::new(1);
+        let out = pool.run_indexed_with(
+            10,
+            |w| {
+                assert_eq!(w, 0);
+                0usize
+            },
+            |count, i| {
+                *count += 1;
+                (*count, i)
+            },
+        );
+        assert_eq!(out.last(), Some(&(10, 9)), "state accumulated across all parts");
     }
 
     #[test]

@@ -34,11 +34,13 @@ pub fn greedy_permutation<P: PointSet, M: Metric<P>>(
     let mut dist: Vec<f64> = (0..n).map(|i| metric.dist_ij(pts, i, start)).collect();
     while chosen.len() < m {
         // Farthest point from the chosen set.
+        // total_cmp: NaN distances (broken metric) sort last instead of
+        // panicking the selection loop.
         let (far, &d) = dist
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .expect("nonempty distance array");
         if d == 0.0 {
             break; // every remaining point duplicates a chosen one
         }

@@ -202,6 +202,105 @@ fn greedy_permutation_prefix_separation_random() {
     });
 }
 
+/// Adversarial metric: Euclidean, except distances inside a band come back
+/// NaN — the shape of a broken user metric (overflow, 0/0 normalization).
+#[derive(Clone)]
+struct NanMetric;
+
+impl Metric<DenseMatrix> for NanMetric {
+    fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        let d = Euclidean.dist(a, b);
+        if d > 0.35 && d < 0.45 {
+            f64::NAN
+        } else {
+            d
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "nan-band"
+    }
+}
+
+#[test]
+fn nan_metric_never_panics_and_graphs_stay_nan_free() {
+    // Every IndexKind and all three distributed ε algorithms must either
+    // reject the configuration with a typed error (SNN: wrong metric type)
+    // or produce a NaN-free weighted graph — never panic. NaN distances
+    // fail every `d <= eps` accept, so they are dropped at the traversal,
+    // and `WeightedEdgeList::push` skips (debug-asserts on) anything
+    // non-finite that would slip past.
+    use neargraph::dist::run_epsilon_graph;
+    use neargraph::index::build_index;
+
+    let pts = synthetic::gaussian_mixture(&mut Rng::new(950), 70, 3, 3, 0.25);
+    let eps = 0.6; // wider than the NaN band, so real accepts exist around it
+    for kind in IndexKind::ALL {
+        match build_index(kind, &pts, NanMetric, &IndexParams::default()) {
+            Err(e) => {
+                // Typed rejection is acceptable (SNN requires Euclidean).
+                assert!(!e.to_string().is_empty(), "{kind:?} error must render");
+            }
+            Ok(idx) => {
+                let mut sink = WeightedEdgeList::new();
+                idx.eps_self_join(eps, &mut sink);
+                sink.canonicalize();
+                assert!(
+                    sink.edges().iter().all(|&(u, v, w)| w.is_finite() && w >= 0.0 && u < v),
+                    "{kind:?} emitted a non-finite weight"
+                );
+                // The CSR build must also go through cleanly.
+                let g = sink.into_near_graph(pts.len());
+                assert!(g.edge_triples().all(|(_, _, w)| w.is_finite()));
+                // Point queries and k-NN must not panic either (k-NN rows
+                // may carry NaN tails — the heap order is total — but the
+                // calls return).
+                let mut hits = Vec::new();
+                idx.eps_query(pts.row(0), eps, &mut hits);
+                assert!(hits.iter().all(|&(_, d)| d.is_finite()));
+                let _ = idx.knn(pts.row(0), 5);
+            }
+        }
+    }
+    for algorithm in Algorithm::ALL {
+        for ranks in [1usize, 3] {
+            let cfg = RunConfig { ranks, algorithm, ..Default::default() };
+            let res = run_epsilon_graph(&pts, NanMetric, eps, &cfg);
+            assert!(
+                res.weighted.edges().iter().all(|&(_, _, w)| w.is_finite() && w >= 0.0),
+                "{} ranks={ranks} emitted a non-finite weight",
+                algorithm.name()
+            );
+            assert_eq!(res.graph.num_edges(), res.edges.edges().len());
+        }
+    }
+}
+
+#[test]
+fn canonicalize_orders_finite_weights_like_total_cmp() {
+    // Regression for the total_cmp sweep: `canonicalize()` keys duplicate
+    // edges by `f32::to_bits`, which must order NaN-free, non-negative
+    // weights exactly as `f32::total_cmp` — i.e. the sweep changed no
+    // canonical ordering on valid data.
+    forall("canon-totalcmp", 30, Size { n: 80, dim: 1 }, |rng, size| {
+        let mut w = WeightedEdgeList::new();
+        for _ in 0..size.n {
+            let u = rng.below(20) as u32;
+            let v = rng.below(20) as u32;
+            w.push(u, v, rng.below(8) as f64 * 0.125); // few values ⇒ many duplicates
+        }
+        // Reference: sort the raw records by (u, v, total_cmp(w)), dedup
+        // keep-first.
+        let mut want: Vec<(u32, u32, f32)> = w.edges().to_vec();
+        want.sort_by(|a, b| {
+            (a.0, a.1).cmp(&(b.0, b.1)).then_with(|| a.2.total_cmp(&b.2))
+        });
+        want.dedup_by_key(|e| (e.0, e.1));
+        w.canonicalize();
+        assert_eq!(w.edges(), &want[..], "to_bits order diverged from total_cmp");
+    });
+}
+
 #[test]
 fn snn_query_equals_scan_random() {
     use neargraph::baseline::{Snn, SnnParams};
