@@ -1,17 +1,21 @@
 //! Perf driver: build + ε self-join on a Table-I-style dense workload,
 //! sequential vs pooled (the PR 2 trajectory), the same join through the
 //! `neargraph::index` facade (PR 3), the k-NN paths when `--knn k` is set
-//! (PR 4), **plus** a traversal section (PR 5): the flat level-ordered
+//! (PR 4), a traversal section (PR 5): the flat level-ordered
 //! layout vs the legacy build-order traversal on the same batch, with
 //! distance-call parity asserted and — via the counting global allocator
 //! below — a proof that a warmed [`QueryScratch`] makes steady-state
-//! batch queries **allocation-free**. Emits machine-readable
-//! `BENCH_pr5.json` so the perf trajectory accumulates across PRs.
+//! batch queries **allocation-free**, **plus** a serve section (PR 6):
+//! the query daemon under pipelined offered load, sweeping the request
+//! coalescing window against a per-query baseline (throughput and
+//! p50/p99 latency per setting) with the same allocator proving the
+//! warmed engine batch path allocation-free. Emits machine-readable
+//! `BENCH_pr6.json` so the perf trajectory accumulates across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
 //!     [--threads 1,2,4] [--target-degree 30] [--knn 16] \
-//!     [--out BENCH_pr5.json]
+//!     [--out BENCH_pr6.json]
 //! ```
 //!
 //! The driver asserts that every thread count — and every facade backend
@@ -24,8 +28,10 @@
 use neargraph::covertree::{BuildParams, CoverTree, QueryScratch};
 use neargraph::dist::{run_knn_graph, Algorithm, RunConfig};
 use neargraph::graph::{GraphSink, KnnGraph};
-use neargraph::index::{build_index_par, IndexKind, IndexParams, NearIndex};
+use neargraph::index::{build_index_par, CoverTreeIndex, IndexKind, IndexParams, NearIndex};
 use neargraph::metric::{Counted, Euclidean};
+use neargraph::serve::{serve, BatchOutput, QueryBatch, QueryOp, ServeConfig, ServeEngine};
+use neargraph::testkit::serve_sim::{latencies_sorted, percentile, run_clients, ClientPlan, SimQuery};
 use neargraph::util::{Pool, Rng};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -109,6 +115,20 @@ struct TraversalRun {
     steady_state_allocs: u64,
 }
 
+/// One serve-daemon load point: a coalescing setting under the same
+/// scripted pipelined client mix.
+struct ServeRun {
+    label: &'static str,
+    window_us: u64,
+    max_batch: usize,
+    queries: u64,
+    wall_s: f64,
+    qps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    mean_batch: f64,
+}
+
 /// Order-independent fingerprint of a k-NN graph's (vertex, neighbor,
 /// distance-bits) arcs — identical iff the certified rows are identical.
 fn knn_fingerprint(g: &KnnGraph) -> u64 {
@@ -146,7 +166,7 @@ fn main() {
         args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
     let knn_k = args.get_usize("knn").unwrap_or_else(|e| fail(&e)).unwrap_or(0);
     let threads_arg = args.get_or("threads", "1,2,4").to_string();
-    let out_path = args.get_or("out", "BENCH_pr5.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr6.json").to_string();
     args.reject_unknown().unwrap_or_else(|e| fail(&e));
     let thread_list: Vec<usize> = threads_arg
         .split(',')
@@ -378,9 +398,108 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Serve section (PR 6): the query daemon under pipelined offered
+    // load. One cover tree, cloned per setting; the same scripted client
+    // mix replayed against a per-query baseline (window 0, batch 1) and
+    // two coalescing windows. Throughput and tail latency land in the
+    // JSON; answers are not re-verified here (the soak suite owns
+    // bit-equality) — this section measures.
+    // ------------------------------------------------------------------
+    let serve_threads = *thread_list.last().unwrap();
+    let serve_tree = CoverTree::build(&pts, &Euclidean, &params);
+    let serve_plans: Vec<ClientPlan> = (0..4)
+        .map(|c| ClientPlan {
+            queries: (0..500)
+                .map(|q| SimQuery::Eps { point: (c * 500 + q * 7) % n, eps })
+                .collect(),
+            pipeline: 16,
+        })
+        .collect();
+    let offered: u64 = serve_plans.iter().map(|p| p.queries.len() as u64).sum();
+    let mut serve_runs: Vec<ServeRun> = Vec::new();
+    for (label, window_us, max_batch) in
+        [("per-query", 0u64, 1usize), ("win100us", 100, 256), ("win500us", 500, 256)]
+    {
+        let index = Box::new(CoverTreeIndex::from_tree(serve_tree.clone(), Euclidean));
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            coalesce_us: window_us,
+            max_batch,
+            threads: serve_threads,
+            ..Default::default()
+        };
+        let server = serve(index, &cfg).unwrap_or_else(|e| fail(&e.to_string()));
+        let addr = server.local_addr().to_string();
+        let t0 = Instant::now();
+        let reports = run_clients(&addr, &pts, &serve_plans)
+            .unwrap_or_else(|e| fail(&format!("serve bench clients: {e}")));
+        let wall_s = t0.elapsed().as_secs_f64();
+        let stats = server.shutdown_and_join();
+        assert_eq!(stats.queries, offered, "{label}: daemon lost queries");
+        let lat = latencies_sorted(&reports);
+        let run = ServeRun {
+            label,
+            window_us,
+            max_batch,
+            queries: offered,
+            wall_s,
+            qps: offered as f64 / wall_s.max(1e-12),
+            p50_us: percentile(&lat, 0.50),
+            p99_us: percentile(&lat, 0.99),
+            mean_batch: stats.mean_batch(),
+        };
+        eprintln!(
+            "[perf_driver] serve {label}: {:.0} q/s, p50 {}us, p99 {}us, mean batch {:.1}",
+            run.qps, run.p50_us, run.p99_us, run.mean_batch
+        );
+        serve_runs.push(run);
+    }
+
+    // Allocation gate on the warmed engine batch path — the path every
+    // coalesced batch drains through. One lane (the pool's inline path),
+    // sequential on this thread: the TCP/decode side allocates by design
+    // (reply frames cross threads), so the gate covers exactly the
+    // engine's execute. First call warms lane scratch and output
+    // buffers; the second, identical call must not touch the allocator.
+    let serve_steady_allocs = {
+        let engine = ServeEngine::new(
+            Box::new(CoverTreeIndex::from_tree(serve_tree.clone(), Euclidean)),
+            1,
+        );
+        let gate_batch = n.min(2048);
+        let mut batch = QueryBatch::new_like(&pts);
+        for q in 0..gate_batch {
+            batch.push(&pts.slice(q, q + 1), QueryOp::Eps(eps));
+        }
+        let mut out = BatchOutput::new();
+        engine.execute(&batch, &mut out);
+        let alloc0 = allocations();
+        engine.execute(&batch, &mut out);
+        let allocs = allocations() - alloc0;
+        assert_eq!(out.len(), gate_batch, "engine dropped queries");
+        eprintln!(
+            "[perf_driver] serve engine batch={gate_batch}: {allocs} steady-state allocs"
+        );
+        assert_eq!(allocs, 0, "warmed serve engine batch must be allocation-free");
+        allocs
+    };
+
     let (seq_total, best) = summarize(&runs);
-    let json =
-        render_json(&dataset, n, dim, eps, &runs, &facade, &knn_runs, &traversal, seq_total, best);
+    let json = render_json(
+        &dataset,
+        n,
+        dim,
+        eps,
+        &runs,
+        &facade,
+        &knn_runs,
+        &traversal,
+        &serve_runs,
+        serve_steady_allocs,
+        seq_total,
+        best,
+    );
     std::fs::write(&out_path, &json).unwrap_or_else(|e| fail(&format!("{out_path}: {e}")));
     println!("{json}");
     eprintln!("[perf_driver] wrote {out_path}");
@@ -405,12 +524,14 @@ fn render_json(
     facade: &[FacadeRun],
     knn_runs: &[KnnRun],
     traversal: &TraversalRun,
+    serve_runs: &[ServeRun],
+    serve_steady_allocs: u64,
     seq_total: f64,
     best: &Run,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"bench\": \"pr5_flat_traversal\",\n");
+    s.push_str("  \"bench\": \"pr6_serve_coalescing\",\n");
     s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
     s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
     s.push_str(&format!(
@@ -470,6 +591,26 @@ fn render_json(
         ));
     }
     s.push_str("  ],\n");
+    s.push_str("  \"serve_runs\": [\n");
+    for (i, r) in serve_runs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"label\": \"{}\", \"window_us\": {}, \"max_batch\": {}, \
+             \"queries\": {}, \"wall_s\": {:.6}, \"qps\": {:.1}, \"p50_us\": {}, \
+             \"p99_us\": {}, \"mean_batch\": {:.2}}}{}\n",
+            r.label,
+            r.window_us,
+            r.max_batch,
+            r.queries,
+            r.wall_s,
+            r.qps,
+            r.p50_us,
+            r.p99_us,
+            r.mean_batch,
+            if i + 1 < serve_runs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"serve_steady_state_allocs\": {serve_steady_allocs},\n"));
     // Facade overhead: cover-tree facade total vs direct total at the same
     // thread count (same underlying traversals; the delta is dispatch +
     // sink indirection).

@@ -13,6 +13,7 @@ pub use toml::{ParseError, TomlDoc, Value};
 use crate::comm::CostModel;
 use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig};
 use crate::index::IndexKind;
+use crate::serve::ServeConfig;
 
 /// Typed rejection of an unrunnable experiment configuration — raised at
 /// config/CLI *parse* time ([`ExperimentConfig::validate`]), so a bad
@@ -31,6 +32,9 @@ pub enum ConfigError {
     /// `eps == 0`, `knn == 0` and no usable calibration target: no path
     /// would run.
     NothingToRun,
+    /// A `serve.*` key holds an unusable value (bad listen address, zero
+    /// batch cap, queue bound below the batch cap, oversized window).
+    BadServe { key: &'static str, value: String, why: &'static str },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -52,6 +56,9 @@ impl std::fmt::Display for ConfigError {
                 "nothing to run: set eps > 0 (\u{3b5}-graph), knn > 0 (k-NN graph), or a \
                  positive target_degree (\u{3b5} calibration)"
             ),
+            ConfigError::BadServe { key, value, why } => {
+                write!(f, "serve.{key} = {value:?} is unusable: {why}")
+            }
         }
     }
 }
@@ -82,6 +89,10 @@ pub struct ExperimentConfig {
     /// driver (config key `index`, CLI `--index`).
     pub index: Option<IndexKind>,
     pub run: RunConfig,
+    /// Daemon settings consumed by the `serve` subcommand (config section
+    /// `[serve]`, keys `addr`, `coalesce_us`, `max_batch`, `queue_cap`,
+    /// `threads`); other subcommands ignore them.
+    pub serve: ServeConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -96,6 +107,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             index: None,
             run: RunConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -165,6 +177,24 @@ impl ExperimentConfig {
                     cfg.run.cost.beta_inv = value.as_f64().ok_or("beta_inv must be a number")?
                 }
                 "run.seed" => cfg.run.seed = value.as_usize().ok_or("seed must be an integer")? as u64,
+                "serve.addr" => {
+                    cfg.serve.addr = value.as_str().ok_or("serve.addr must be a string")?.into()
+                }
+                "serve.coalesce_us" => {
+                    cfg.serve.coalesce_us =
+                        value.as_usize().ok_or("serve.coalesce_us must be an integer")? as u64
+                }
+                "serve.max_batch" => {
+                    cfg.serve.max_batch =
+                        value.as_usize().ok_or("serve.max_batch must be an integer")?
+                }
+                "serve.queue_cap" => {
+                    cfg.serve.queue_cap =
+                        value.as_usize().ok_or("serve.queue_cap must be an integer")?
+                }
+                "serve.threads" => {
+                    cfg.serve.threads = value.as_usize().ok_or("serve.threads must be an integer")?
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -195,6 +225,44 @@ impl ExperimentConfig {
             if !self.target_degree.is_finite() || self.target_degree < 0.0 {
                 return Err(ConfigError::BadTargetDegree { value: self.target_degree });
             }
+        }
+        self.validate_serve()
+    }
+
+    /// Reject unusable `serve.*` settings. Part of [`validate`]
+    /// (defaults always pass), and the `serve` subcommand's whole
+    /// validation when it skips the run-path checks.
+    ///
+    /// [`validate`]: ExperimentConfig::validate
+    pub fn validate_serve(&self) -> Result<(), ConfigError> {
+        let s = &self.serve;
+        if s.addr.parse::<std::net::SocketAddr>().is_err() {
+            return Err(ConfigError::BadServe {
+                key: "addr",
+                value: s.addr.clone(),
+                why: "must be an ip:port literal (e.g. 127.0.0.1:7878; port 0 for ephemeral)",
+            });
+        }
+        if s.max_batch == 0 {
+            return Err(ConfigError::BadServe {
+                key: "max_batch",
+                value: s.max_batch.to_string(),
+                why: "a batch must hold at least one query",
+            });
+        }
+        if s.queue_cap < s.max_batch {
+            return Err(ConfigError::BadServe {
+                key: "queue_cap",
+                value: s.queue_cap.to_string(),
+                why: "the admission bound must cover at least one full batch (queue_cap >= max_batch)",
+            });
+        }
+        if s.coalesce_us > 1_000_000 {
+            return Err(ConfigError::BadServe {
+                key: "coalesce_us",
+                value: s.coalesce_us.to_string(),
+                why: "coalescing windows above one second serve nobody; lower the window",
+            });
         }
         Ok(())
     }
@@ -359,5 +427,60 @@ ghost = "all"
         assert!(with(0.0, 8, 0.0).validate().is_ok());
         // Defaults (calibration from target_degree = 30) stay valid.
         assert!(ExperimentConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn serve_keys_parse_into_serve_config() {
+        let cfg = ExperimentConfig::from_toml(
+            "[serve]\naddr = \"0.0.0.0:9100\"\ncoalesce_us = 500\nmax_batch = 64\n\
+             queue_cap = 1024\nthreads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.addr, "0.0.0.0:9100");
+        assert_eq!(cfg.serve.coalesce_us, 500);
+        assert_eq!(cfg.serve.max_batch, 64);
+        assert_eq!(cfg.serve.queue_cap, 1024);
+        assert_eq!(cfg.serve.threads, 4);
+        // Defaults when the section is absent.
+        let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
+        assert_eq!(cfg.serve, crate::serve::ServeConfig::default());
+        // Type and typo errors are loud.
+        assert!(ExperimentConfig::from_toml("[serve]\nmax_batch = \"lots\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[serve]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unusable_serve_settings() {
+        let bad = |mutate: &dyn Fn(&mut ExperimentConfig)| {
+            let mut cfg = ExperimentConfig::default();
+            mutate(&mut cfg);
+            cfg.validate()
+        };
+        let err = bad(&|c| c.serve.addr = "localhost".into()).expect_err("hostless addr");
+        assert!(
+            matches!(err, ConfigError::BadServe { key: "addr", .. }),
+            "unexpected: {err}"
+        );
+        assert!(err.to_string().contains("ip:port"), "unexpected: {err}");
+        assert!(matches!(
+            bad(&|c| c.serve.max_batch = 0),
+            Err(ConfigError::BadServe { key: "max_batch", .. })
+        ));
+        assert!(matches!(
+            bad(&|c| {
+                c.serve.max_batch = 100;
+                c.serve.queue_cap = 99;
+            }),
+            Err(ConfigError::BadServe { key: "queue_cap", .. })
+        ));
+        assert!(matches!(
+            bad(&|c| c.serve.coalesce_us = 2_000_000),
+            Err(ConfigError::BadServe { key: "coalesce_us", .. })
+        ));
+        // The defaults and an ephemeral-port override both pass.
+        assert!(ExperimentConfig::default().validate_serve().is_ok());
+        let mut cfg = ExperimentConfig::default();
+        cfg.serve.addr = "127.0.0.1:0".into();
+        assert!(cfg.validate_serve().is_ok());
     }
 }

@@ -31,12 +31,14 @@ mod knn;
 mod layout;
 mod query;
 mod scratch;
+mod snapshot;
 
 pub use build::BuildParams;
 pub use incremental::InsertCoverTree;
 pub use invariants::check_invariants;
 pub use layout::FlatTree;
 pub use scratch::QueryScratch;
+pub use snapshot::{peek_point_tag, point_tag, SnapshotError, SNAPSHOT_MAGIC};
 
 use crate::metric::Metric;
 use crate::points::PointSet;

@@ -1,0 +1,403 @@
+//! `NGI-IDX1` — the versioned, checksummed index snapshot format behind
+//! the serve daemon's load-once entry point (DESIGN.md §10.4).
+//!
+//! A snapshot captures everything a built [`CoverTree`] owns: the point
+//! set, the global-id map and the build-order node/children arena. The
+//! level-ordered [`super::FlatTree`] the hot query paths traverse is *not*
+//! stored — it is a pure permutation of the arena, so the loader derives
+//! it with [`FlatTree::from_arena`] in O(n) with **zero metric
+//! evaluations**, and a snapshot can never carry a flat layout that
+//! disagrees with its arena.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    [8]  b"NGI-IDX1"
+//! version  u64  1
+//! checksum u64  FNV-1a 64 of the payload bytes
+//! len      u64  payload byte count
+//! payload:
+//!   tag        u8   point container (1 dense, 2 hamming, 3 strings)
+//!   root       u64  root node id (u32; 0xFFFF_FFFF ⇒ empty tree)
+//!   points_len u64  + that many bytes of `PointSet::to_bytes`
+//!   n          u64  + n × u32 global ids (n must equal the point count)
+//!   n_nodes    u64  + n_nodes × (point u32, radius-bits u64, level i32,
+//!                    child_off u32, child_len u32)   — 24 bytes each
+//!   n_children u64  + n_children × u32
+//! ```
+//!
+//! The decoder is length-checked end to end ([`WireError`] on truncation,
+//! extension or any internal inconsistency) and *structurally* validated:
+//! node point indices, child ranges and children entries are
+//! bounds-checked, radii must be finite and non-negative, and the arena
+//! must be exactly one tree (every node reachable from the root exactly
+//! once — which also rules out cycles before `from_arena` walks it). The
+//! checksum turns nearly every payload bit flip into a typed error;
+//! `tests/wire_adversarial.rs` runs the full
+//! [`crate::testkit::wire::check_wire_decoder`] battery over all three
+//! point families.
+
+use super::layout::FlatTree;
+use super::{CoverTree, Node, NIL};
+use crate::points::{
+    put_u64, try_get_u64, try_take, DenseMatrix, HammingCodes, PointSet, StringSet, WireError,
+};
+use std::any::TypeId;
+
+/// The 8-byte magic prefix of every snapshot.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"NGI-IDX1";
+
+const SNAPSHOT_VERSION: u64 = 1;
+
+/// Per-node record width in the payload (see the module docs).
+const NODE_BYTES: usize = 4 + 8 + 4 + 4 + 4;
+
+/// Why a snapshot could not be *written* (reading fails with [`WireError`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// The tree's point container is not one of the three wire-tagged
+    /// families (dense, hamming, strings).
+    UnsupportedPointType { type_name: &'static str },
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::UnsupportedPointType { type_name } => {
+                write!(f, "no NGI-IDX1 point tag for container type {type_name}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// FNV-1a 64 — the snapshot checksum (std-only, byte-order independent).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The wire tag of point container `P`, or `None` for a container outside
+/// the three built-in families.
+pub fn point_tag<P: PointSet>() -> Option<u8> {
+    let t = TypeId::of::<P>();
+    if t == TypeId::of::<DenseMatrix>() {
+        Some(1)
+    } else if t == TypeId::of::<HammingCodes>() {
+        Some(2)
+    } else if t == TypeId::of::<StringSet>() {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// Read the point tag of an encoded snapshot without decoding the payload —
+/// how the CLI dispatches a snapshot file to the right monomorphization.
+/// Verifies magic, version and the header lengths but not the checksum.
+pub fn peek_point_tag(bytes: &[u8]) -> Result<u8, WireError> {
+    let mut off = 0usize;
+    let magic = try_take(bytes, &mut off, 8, "snapshot magic")?;
+    if magic != SNAPSHOT_MAGIC {
+        return Err(WireError::Corrupt { what: "bad snapshot magic (want NGI-IDX1)" });
+    }
+    let version = try_get_u64(bytes, &mut off, "snapshot version")?;
+    if version != SNAPSHOT_VERSION {
+        return Err(WireError::Corrupt { what: "unsupported snapshot version" });
+    }
+    let _checksum = try_get_u64(bytes, &mut off, "snapshot checksum")?;
+    let len = try_get_u64(bytes, &mut off, "snapshot payload length")? as usize;
+    let payload = try_take(bytes, &mut off, len, "snapshot payload")?;
+    if payload.is_empty() {
+        return Err(WireError::Corrupt { what: "empty snapshot payload" });
+    }
+    Ok(payload[0])
+}
+
+impl<P: PointSet> CoverTree<P> {
+    /// Encode the tree as an `NGI-IDX1` snapshot.
+    ///
+    /// Fails only when `P` is not one of the wire-tagged point families;
+    /// every built tree of dense, Hamming or string points encodes.
+    pub fn to_snapshot_bytes(&self) -> Result<Vec<u8>, SnapshotError> {
+        let tag = point_tag::<P>().ok_or(SnapshotError::UnsupportedPointType {
+            type_name: std::any::type_name::<P>(),
+        })?;
+        let points = self.points.to_bytes();
+        let mut payload = Vec::with_capacity(
+            1 + 8 + 8 + points.len() + 8 + self.ids.len() * 4 + 8
+                + self.nodes.len() * NODE_BYTES
+                + 8
+                + self.children.len() * 4,
+        );
+        payload.push(tag);
+        put_u64(&mut payload, self.root as u64);
+        put_u64(&mut payload, points.len() as u64);
+        payload.extend_from_slice(&points);
+        put_u64(&mut payload, self.ids.len() as u64);
+        for &id in &self.ids {
+            payload.extend_from_slice(&id.to_le_bytes());
+        }
+        put_u64(&mut payload, self.nodes.len() as u64);
+        for n in &self.nodes {
+            payload.extend_from_slice(&n.point.to_le_bytes());
+            payload.extend_from_slice(&n.radius.to_bits().to_le_bytes());
+            payload.extend_from_slice(&n.level.to_le_bytes());
+            payload.extend_from_slice(&n.child_off.to_le_bytes());
+            payload.extend_from_slice(&n.child_len.to_le_bytes());
+        }
+        put_u64(&mut payload, self.children.len() as u64);
+        for &c in &self.children {
+            payload.extend_from_slice(&c.to_le_bytes());
+        }
+
+        let mut buf = Vec::with_capacity(32 + payload.len());
+        buf.extend_from_slice(SNAPSHOT_MAGIC);
+        put_u64(&mut buf, SNAPSHOT_VERSION);
+        put_u64(&mut buf, fnv1a64(&payload));
+        put_u64(&mut buf, payload.len() as u64);
+        buf.extend_from_slice(&payload);
+        Ok(buf)
+    }
+
+    /// Decode an `NGI-IDX1` snapshot back into a queryable tree.
+    ///
+    /// Length-checked and structurally validated (module docs); the flat
+    /// traversal layout is re-derived from the decoded arena, so the
+    /// loaded tree is query-for-query identical to the one that was saved.
+    pub fn try_from_snapshot_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        let magic = try_take(bytes, &mut off, 8, "snapshot magic")?;
+        if magic != SNAPSHOT_MAGIC {
+            return Err(WireError::Corrupt { what: "bad snapshot magic (want NGI-IDX1)" });
+        }
+        let version = try_get_u64(bytes, &mut off, "snapshot version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(WireError::Corrupt { what: "unsupported snapshot version" });
+        }
+        let checksum = try_get_u64(bytes, &mut off, "snapshot checksum")?;
+        let len = try_get_u64(bytes, &mut off, "snapshot payload length")? as usize;
+        let payload = try_take(bytes, &mut off, len, "snapshot payload")?;
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after snapshot payload" });
+        }
+        if fnv1a64(payload) != checksum {
+            return Err(WireError::Corrupt { what: "snapshot checksum mismatch" });
+        }
+
+        let mut off = 0usize;
+        let tag = try_take(payload, &mut off, 1, "snapshot point tag")?[0];
+        if point_tag::<P>() != Some(tag) {
+            return Err(WireError::Corrupt { what: "snapshot point tag does not match container" });
+        }
+        let root64 = try_get_u64(payload, &mut off, "snapshot root")?;
+        let points_len = try_get_u64(payload, &mut off, "snapshot points length")? as usize;
+        let points = P::try_from_bytes(try_take(payload, &mut off, points_len, "snapshot points")?)?;
+        let n = try_get_u64(payload, &mut off, "snapshot id count")? as usize;
+        if n != points.len() {
+            return Err(WireError::Corrupt { what: "snapshot id count != point count" });
+        }
+        let id_bytes = try_take(payload, &mut off, n.saturating_mul(4), "snapshot ids")?;
+        let ids: Vec<u32> =
+            id_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+
+        let n_nodes = try_get_u64(payload, &mut off, "snapshot node count")? as usize;
+        let node_bytes =
+            try_take(payload, &mut off, n_nodes.saturating_mul(NODE_BYTES), "snapshot nodes")?;
+        let n_children = try_get_u64(payload, &mut off, "snapshot children count")? as usize;
+        let child_bytes =
+            try_take(payload, &mut off, n_children.saturating_mul(4), "snapshot children")?;
+        if off != payload.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after snapshot children" });
+        }
+
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for rec in node_bytes.chunks_exact(NODE_BYTES) {
+            let point = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+            let radius = f64::from_bits(u64::from_le_bytes(rec[4..12].try_into().unwrap()));
+            let level = i32::from_le_bytes(rec[12..16].try_into().unwrap());
+            let child_off = u32::from_le_bytes(rec[16..20].try_into().unwrap());
+            let child_len = u32::from_le_bytes(rec[20..24].try_into().unwrap());
+            if point as usize >= n {
+                return Err(WireError::Corrupt { what: "snapshot node point out of range" });
+            }
+            if !radius.is_finite() || radius < 0.0 {
+                return Err(WireError::Corrupt { what: "snapshot node radius not a distance" });
+            }
+            let end = (child_off as usize).saturating_add(child_len as usize);
+            if end > n_children {
+                return Err(WireError::Corrupt { what: "snapshot child range out of bounds" });
+            }
+            nodes.push(Node { point, radius, level, child_off, child_len });
+        }
+        let children: Vec<u32> =
+            child_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        for &c in &children {
+            if c as usize >= n_nodes {
+                return Err(WireError::Corrupt { what: "snapshot child id out of range" });
+            }
+        }
+
+        // Root / emptiness consistency, then single-tree reachability: every
+        // node visited exactly once from the root. This is what licenses the
+        // `from_arena` walk below (a cycle or a shared child would otherwise
+        // loop or silently drop nodes).
+        let root = if root64 == NIL as u64 {
+            if n_nodes != 0 || n != 0 || n_children != 0 {
+                return Err(WireError::Corrupt { what: "snapshot empty root over non-empty tree" });
+            }
+            NIL
+        } else {
+            if root64 >= n_nodes as u64 {
+                return Err(WireError::Corrupt { what: "snapshot root out of range" });
+            }
+            root64 as u32
+        };
+        if root != NIL {
+            let mut seen = vec![false; n_nodes];
+            let mut stack = vec![root];
+            let mut visited = 0usize;
+            while let Some(u) = stack.pop() {
+                if std::mem::replace(&mut seen[u as usize], true) {
+                    return Err(WireError::Corrupt { what: "snapshot arena is not a tree" });
+                }
+                visited += 1;
+                let nd = &nodes[u as usize];
+                let lo = nd.child_off as usize;
+                stack.extend_from_slice(&children[lo..lo + nd.child_len as usize]);
+            }
+            if visited != n_nodes {
+                return Err(WireError::Corrupt { what: "snapshot has unreachable nodes" });
+            }
+        }
+
+        let flat = FlatTree::from_arena(&nodes, &children, root);
+        Ok(CoverTree { points, ids, nodes, children, root, flat })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covertree::BuildParams;
+    use crate::metric::{Euclidean, Hamming, Levenshtein};
+    use crate::testkit::scenario;
+    use crate::util::Rng;
+
+    fn dense_tree(n: usize) -> CoverTree<DenseMatrix> {
+        let pts = scenario::dense_clusters(1234, n);
+        CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 })
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure_and_answers() {
+        let t = dense_tree(120);
+        let bytes = t.to_snapshot_bytes().expect("dense encodes");
+        let t2 = CoverTree::<DenseMatrix>::try_from_snapshot_bytes(&bytes).expect("decodes");
+        assert_eq!(t.structure(), t2.structure());
+        assert_eq!(t.ids(), t2.ids());
+        assert_eq!(t.points(), t2.points());
+        // Query-for-query identical through the re-derived flat layout.
+        let q = t.points().row(3);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        t.query_weighted(&Euclidean, q, 0.6, &mut a);
+        t2.query_weighted(&Euclidean, q, 0.6, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(t.knn(&Euclidean, q, 7), t2.knn(&Euclidean, q, 7));
+    }
+
+    #[test]
+    fn roundtrip_hamming_and_strings() {
+        let codes = scenario::hamming_codes(77, 90);
+        let t = CoverTree::build(&codes, &Hamming, &BuildParams { leaf_size: 4, root: 0 });
+        let t2 = CoverTree::<HammingCodes>::try_from_snapshot_bytes(
+            &t.to_snapshot_bytes().expect("hamming encodes"),
+        )
+        .expect("hamming decodes");
+        assert_eq!(t.structure(), t2.structure());
+
+        let mut rng = Rng::new(9);
+        let reads = crate::data::synthetic::reads(&mut rng, 40, 12, 4, 0.1);
+        let t = CoverTree::build(&reads, &Levenshtein, &BuildParams { leaf_size: 4, root: 0 });
+        let t2 = CoverTree::<StringSet>::try_from_snapshot_bytes(
+            &t.to_snapshot_bytes().expect("strings encode"),
+        )
+        .expect("strings decode");
+        assert_eq!(t.structure(), t2.structure());
+    }
+
+    #[test]
+    fn empty_and_singleton_roundtrip() {
+        let empty = CoverTree::build(&DenseMatrix::new(3), &Euclidean, &BuildParams::default());
+        let b = empty.to_snapshot_bytes().unwrap();
+        let back = CoverTree::<DenseMatrix>::try_from_snapshot_bytes(&b).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.num_points(), 0);
+
+        let one = CoverTree::build(
+            &DenseMatrix::from_flat(2, vec![1.0, 2.0]),
+            &Euclidean,
+            &BuildParams::default(),
+        );
+        let back =
+            CoverTree::<DenseMatrix>::try_from_snapshot_bytes(&one.to_snapshot_bytes().unwrap())
+                .unwrap();
+        assert_eq!(back.num_points(), 1);
+        assert_eq!(back.structure(), one.structure());
+    }
+
+    #[test]
+    fn wrong_container_tag_is_typed() {
+        let t = dense_tree(30);
+        let bytes = t.to_snapshot_bytes().unwrap();
+        assert_eq!(peek_point_tag(&bytes), Ok(1));
+        let err = CoverTree::<HammingCodes>::try_from_snapshot_bytes(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::Corrupt { .. }), "got {err:?}");
+    }
+
+    #[test]
+    fn checksum_catches_payload_corruption() {
+        let t = dense_tree(40);
+        let mut bytes = t.to_snapshot_bytes().unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x10;
+        let err = CoverTree::<DenseMatrix>::try_from_snapshot_bytes(&bytes).unwrap_err();
+        assert_eq!(err, WireError::Corrupt { what: "snapshot checksum mismatch" });
+    }
+
+    #[test]
+    fn cyclic_or_shared_arena_is_rejected_not_looped() {
+        // Hand-build a payload whose "tree" has a node that is its own
+        // child; the reachability check must reject it (a naive from_arena
+        // walk would spin forever).
+        let pts = DenseMatrix::from_flat(1, vec![0.0]);
+        let points = pts.to_bytes();
+        let mut payload = vec![1u8];
+        put_u64(&mut payload, 0); // root = node 0
+        put_u64(&mut payload, points.len() as u64);
+        payload.extend_from_slice(&points);
+        put_u64(&mut payload, 1); // one id
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        put_u64(&mut payload, 1); // one node: child range [0,1) -> itself
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&0f64.to_bits().to_le_bytes());
+        payload.extend_from_slice(&0i32.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        put_u64(&mut payload, 1); // children = [0]
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(SNAPSHOT_MAGIC);
+        put_u64(&mut bytes, SNAPSHOT_VERSION);
+        put_u64(&mut bytes, fnv1a64(&payload));
+        put_u64(&mut bytes, payload.len() as u64);
+        bytes.extend_from_slice(&payload);
+        let err = CoverTree::<DenseMatrix>::try_from_snapshot_bytes(&bytes).unwrap_err();
+        assert_eq!(err, WireError::Corrupt { what: "snapshot arena is not a tree" });
+    }
+}

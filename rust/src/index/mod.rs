@@ -168,6 +168,38 @@ pub trait NearIndex<P: PointSet, M: Metric<P>>: Send + Sync {
         }
     }
 
+    /// [`NearIndex::eps_query`] threading a caller-owned
+    /// [`QueryScratch`]: appends the same `(id, distance)` pairs in the
+    /// same order, but a backend with a scratch-aware traversal (the
+    /// cover tree) reuses the scratch's warmed buffers instead of
+    /// allocating per call. This is the serve daemon's per-lane entry
+    /// point — one long-lived scratch per pool worker keeps the coalesced
+    /// steady state allocation-free. The default ignores the scratch.
+    fn eps_query_with(
+        &self,
+        query: P::Point<'_>,
+        eps: f64,
+        _scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        self.eps_query(query, eps, out);
+    }
+
+    /// [`NearIndex::knn`] threading a caller-owned [`QueryScratch`] and an
+    /// output buffer (cleared, then filled ascending by `(distance, id)`)
+    /// — same rows as [`NearIndex::knn`], without its per-call `Vec`. The
+    /// default ignores the scratch.
+    fn knn_with(
+        &self,
+        query: P::Point<'_>,
+        k: usize,
+        _scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
+        out.extend(self.knn(query, k));
+    }
+
     /// Batched [`NearIndex::eps_query`]: `emit(query_index, id, distance)`
     /// once per result pair (pair order unspecified; pairs unique).
     fn eps_batch(&self, queries: &P, eps: f64, emit: &mut dyn FnMut(u32, u32, f64)) {
@@ -356,6 +388,29 @@ impl<P: PointSet, M: Metric<P>> CoverTreeIndex<P, M> {
     pub fn tree(&self) -> &CoverTree<P> {
         &self.tree
     }
+
+    /// Wrap an already-built tree — the snapshot load path and the tests
+    /// that build trees with non-default [`BuildParams`].
+    pub fn from_tree(tree: CoverTree<P>, metric: M) -> Self {
+        CoverTreeIndex { tree, metric }
+    }
+
+    /// Encode the underlying tree as an `NGI-IDX1` snapshot
+    /// ([`CoverTree::to_snapshot_bytes`]).
+    pub fn to_snapshot_bytes(&self) -> Result<Vec<u8>, crate::covertree::SnapshotError> {
+        self.tree.to_snapshot_bytes()
+    }
+
+    /// Load an `NGI-IDX1` snapshot into a serving-ready index — the
+    /// daemon's load-once entry point. No metric evaluations: the snapshot
+    /// carries the built structure and the flat traversal layout is a pure
+    /// permutation of it.
+    pub fn from_snapshot_bytes(
+        bytes: &[u8],
+        metric: M,
+    ) -> Result<Self, crate::points::WireError> {
+        Ok(CoverTreeIndex { tree: CoverTree::try_from_snapshot_bytes(bytes)?, metric })
+    }
 }
 
 impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for CoverTreeIndex<P, M> {
@@ -373,6 +428,28 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for CoverTreeIndex<P, M> {
 
     fn eps_query(&self, query: P::Point<'_>, eps: f64, out: &mut Vec<(u32, f64)>) {
         self.tree.query_weighted(&self.metric, query, eps, out);
+    }
+
+    fn eps_query_with(
+        &self,
+        query: P::Point<'_>,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        // Same traversal as `eps_query` (which wraps this with a throwaway
+        // scratch), so results are bit-identical — only the allocations go.
+        self.tree.query_weighted_with(&self.metric, query, eps, scratch, out);
+    }
+
+    fn knn_with(
+        &self,
+        query: P::Point<'_>,
+        k: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        self.tree.knn_within_with(&self.metric, query, k, f64::INFINITY, scratch, out);
     }
 
     fn eps_batch(&self, queries: &P, eps: f64, emit: &mut dyn FnMut(u32, u32, f64)) {
@@ -485,6 +562,16 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for InsertCoverTreeIndex<P, M> {
 
     fn eps_query(&self, query: P::Point<'_>, eps: f64, out: &mut Vec<(u32, f64)>) {
         self.tree.query_weighted(&self.metric, query, eps, out);
+    }
+
+    fn eps_query_with(
+        &self,
+        query: P::Point<'_>,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        self.tree.query_weighted_with(&self.metric, query, eps, scratch, out);
     }
 }
 
@@ -730,6 +817,27 @@ mod tests {
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn scratch_threaded_queries_match_plain_on_every_backend() {
+        let mut rng = Rng::new(808);
+        let pts = synthetic::gaussian_mixture(&mut rng, 150, 4, 4, 0.15);
+        let mut scratch = QueryScratch::new();
+        for kind in IndexKind::ALL {
+            let idx = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+            for qi in [0usize, 7, 42] {
+                let mut plain = Vec::new();
+                idx.eps_query(pts.row(qi), 0.4, &mut plain);
+                let mut with = Vec::new();
+                idx.eps_query_with(pts.row(qi), 0.4, &mut scratch, &mut with);
+                assert_eq!(plain, with, "{} eps qi={qi}", kind.name());
+                let want = idx.knn(pts.row(qi), 6);
+                let mut got = vec![(99u32, 9.9f64)]; // stale: knn_with must clear
+                idx.knn_with(pts.row(qi), 6, &mut scratch, &mut got);
+                assert_eq!(want, got, "{} knn qi={qi}", kind.name());
+            }
         }
     }
 

@@ -20,7 +20,11 @@
 //! * [`voronoi`] — landmark selection, distributed Voronoi diagrams and
 //!   multiway number partitioning for cell→rank assignment;
 //! * [`baseline`] — brute force and SNN (Chen & Güttel 2024) comparators;
-//! * [`data`] — synthetic Table-I dataset analogs and fvecs/bvecs loaders.
+//! * [`data`] — synthetic Table-I dataset analogs and fvecs/bvecs loaders;
+//! * [`serve`] — a TCP query daemon that coalesces concurrent single-point
+//!   ε/k-NN queries into batches over a resident (optionally
+//!   snapshot-loaded) index, with explicit bounded backpressure — see the
+//!   `serve`/`query` CLI subcommands and DESIGN.md §10.
 //!
 //! Quickstart — the distributed driver and the single-node index facade
 //! produce the same weighted ε-graph:
@@ -79,6 +83,7 @@ pub mod index;
 pub mod metric;
 pub mod points;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod util;
 pub mod voronoi;

@@ -39,6 +39,8 @@ fn main() {
     };
     let code = match args.positional(0) {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("query") => cmd_query(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("selfcheck") => cmd_selfcheck(&args),
         Some(other) => Err(format!("unknown command {other:?}\n{USAGE}")),
@@ -49,7 +51,31 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: neargraph <run|datasets|selfcheck> [flags]
+const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck> [flags]
+  serve flags (query daemon over a resident cover-tree index):
+    --config <file.toml>         load [serve] keys (flags override)
+    --addr <ip:port>             listen address (port 0 = ephemeral)
+    --snapshot <file>            serve an NGI-IDX1 index snapshot (the
+                                 metric follows the snapshot's point type)
+    --dataset/--scale/--points/--seed/--leaf-size
+                                 build the index from a Table-I analog
+                                 instead of a snapshot
+    --save-snapshot <file>       also write the built index as NGI-IDX1
+    --coalesce-us <n>            coalescing window (0 = dispatch at once)
+    --max-batch <n>              batch-size cap that ripens a batch early
+    --queue-cap <n>              admission bound (typed overload beyond it)
+    --threads <n>                query lanes answering batches
+  query flags (client for a running daemon):
+    --addr <ip:port>             daemon address (required)
+    --dataset/--scale/--points/--seed
+                                 regenerate the served dataset for query
+                                 points (must match the serve side)
+    --count <n>                  number of queries to send (default 64)
+    --eps <f> | --knn <k>        query type (exactly one)
+    --pipeline <n>               in-flight requests per connection
+    --verify                     check replies bit-equal vs brute force
+    --shutdown                   ask the daemon to drain and exit after
+    --retry-connect <n>          connect attempts 100ms apart (default 1)
   run flags:
     --config <file.toml>         load an experiment config
     --dataset <name>             Table-I analog (see `neargraph datasets`)
@@ -197,6 +223,297 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             run_one(&codes, Hamming, eps, &cfg, &opts)
         }
     }
+}
+
+/// `neargraph serve`: bind the daemon over a cover-tree index loaded from
+/// an NGI-IDX1 snapshot (`--snapshot`; the point container tag selects the
+/// metric) or built fresh from a Table-I analog, then block until a client
+/// shutdown frame (or a signal kills the process).
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            ExperimentConfig::from_toml(&text)?
+        }
+        None => ExperimentConfig::default(),
+    };
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(v) = args.get_f64("scale")? {
+        cfg.scale = v;
+    }
+    if let Some(v) = args.get_usize("points")? {
+        cfg.points = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.get_usize("leaf-size")? {
+        cfg.run.leaf_size = v;
+    }
+    if let Some(a) = args.get("addr") {
+        cfg.serve.addr = a.to_string();
+    }
+    if let Some(v) = args.get_usize("coalesce-us")? {
+        cfg.serve.coalesce_us = v as u64;
+    }
+    if let Some(v) = args.get_usize("max-batch")? {
+        cfg.serve.max_batch = v;
+    }
+    if let Some(v) = args.get_usize("queue-cap")? {
+        cfg.serve.queue_cap = v;
+    }
+    if let Some(v) = args.get_usize("threads")? {
+        cfg.serve.threads = v;
+    }
+    let snapshot = args.get("snapshot").map(str::to_string);
+    let save = args.get("save-snapshot").map(str::to_string);
+    args.reject_conflict("snapshot", "save-snapshot")?;
+    // Typed validation of the effective serve.* keys after CLI overrides.
+    cfg.validate_serve().map_err(|e| e.to_string())?;
+    args.reject_unknown()?;
+
+    if let Some(path) = snapshot {
+        let bytes = std::fs::read(&path).map_err(|e| format!("{path}: {e}"))?;
+        return serve_snapshot(&bytes, &cfg);
+    }
+    let spec = DatasetSpec::by_name(&cfg.dataset)
+        .ok_or_else(|| format!("unknown dataset {:?} (see `neargraph datasets`)", cfg.dataset))?;
+    let n = if cfg.points > 0 { cfg.points } else { spec.scaled_points(cfg.scale) };
+    println!("building index: dataset={} n={n} dim={} metric={:?}", spec.name, spec.dim, spec.metric);
+    match build_workload(spec, n, cfg.seed) {
+        Workload::Dense { pts, .. } => serve_built(pts, Euclidean, &cfg, save.as_deref()),
+        Workload::Hamming { codes, .. } => serve_built(codes, Hamming, &cfg, save.as_deref()),
+    }
+}
+
+/// Dispatch on the snapshot's point-container tag: the stored container
+/// decides both the point type and the metric the daemon answers with.
+fn serve_snapshot(bytes: &[u8], cfg: &ExperimentConfig) -> Result<(), String> {
+    use neargraph::covertree::{peek_point_tag, point_tag};
+    use neargraph::index::CoverTreeIndex;
+    let tag = peek_point_tag(bytes).map_err(|e| format!("snapshot: {e}"))?;
+    if Some(tag) == point_tag::<DenseMatrix>() {
+        let idx = CoverTreeIndex::from_snapshot_bytes(bytes, Euclidean)
+            .map_err(|e| format!("snapshot: {e}"))?;
+        run_server(Box::new(idx), cfg)
+    } else if Some(tag) == point_tag::<HammingCodes>() {
+        let idx = CoverTreeIndex::from_snapshot_bytes(bytes, Hamming)
+            .map_err(|e| format!("snapshot: {e}"))?;
+        run_server(Box::new(idx), cfg)
+    } else if Some(tag) == point_tag::<StringSet>() {
+        let idx = CoverTreeIndex::from_snapshot_bytes(bytes, Levenshtein)
+            .map_err(|e| format!("snapshot: {e}"))?;
+        run_server(Box::new(idx), cfg)
+    } else {
+        Err(format!("snapshot holds unknown point container tag {tag}"))
+    }
+}
+
+fn serve_built<P: PointSet, M: Metric<P>>(
+    pts: P,
+    metric: M,
+    cfg: &ExperimentConfig,
+    save: Option<&str>,
+) -> Result<(), String> {
+    use neargraph::covertree::BuildParams;
+    use neargraph::index::CoverTreeIndex;
+    let tree = CoverTree::build(
+        &pts,
+        &metric,
+        &BuildParams { leaf_size: cfg.run.leaf_size.max(1), ..Default::default() },
+    );
+    if let Some(path) = save {
+        let bytes = tree.to_snapshot_bytes().map_err(|e| e.to_string())?;
+        std::fs::write(path, &bytes).map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote snapshot ({} bytes) to {path}", bytes.len());
+    }
+    run_server(Box::new(CoverTreeIndex::from_tree(tree, metric)), cfg)
+}
+
+fn run_server<P: PointSet, M: Metric<P>>(
+    index: Box<dyn NearIndex<P, M>>,
+    cfg: &ExperimentConfig,
+) -> Result<(), String> {
+    let points = index.points().len();
+    let server = neargraph::serve::serve(index, &cfg.serve).map_err(|e| e.to_string())?;
+    println!(
+        "serving on {} ({points} points; window {}us, max batch {}, queue cap {}, {} threads)",
+        server.local_addr(),
+        cfg.serve.coalesce_us,
+        cfg.serve.max_batch,
+        cfg.serve.queue_cap,
+        cfg.serve.threads.max(1)
+    );
+    let stats = server.join();
+    println!(
+        "served {} queries in {} batches (mean batch {:.1}, max {}, overloads {}, bad frames {})",
+        stats.queries,
+        stats.batches,
+        stats.mean_batch(),
+        stats.max_batch,
+        stats.overloads,
+        stats.bad_frames
+    );
+    Ok(())
+}
+
+/// `neargraph query`: scripted client for a running daemon — regenerates
+/// the served dataset locally for query points (and, with `--verify`, for
+/// a brute-force oracle the replies must match bit-for-bit).
+fn cmd_query(args: &Args) -> Result<(), String> {
+    let addr = args.get("addr").ok_or("query needs --addr <ip:port>")?.to_string();
+    let mut cfg = ExperimentConfig::default();
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(v) = args.get_f64("scale")? {
+        cfg.scale = v;
+    }
+    if let Some(v) = args.get_usize("points")? {
+        cfg.points = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    let count = args.get_usize("count")?.unwrap_or(64);
+    let pipeline = args.get_usize("pipeline")?.unwrap_or(8).max(1);
+    args.reject_conflict("eps", "knn")?;
+    let eps = args.get_f64("eps")?;
+    let knn = args.get_usize("knn")?;
+    let verify = args.get_bool("verify")?;
+    let shutdown = args.get_bool("shutdown")?;
+    let retries = args.get_usize("retry-connect")?.unwrap_or(1).max(1);
+    args.reject_unknown()?;
+    if eps.is_none() && knn.is_none() {
+        return Err("query needs --eps <f> or --knn <k>".into());
+    }
+
+    let spec = DatasetSpec::by_name(&cfg.dataset)
+        .ok_or_else(|| format!("unknown dataset {:?} (see `neargraph datasets`)", cfg.dataset))?;
+    let n = if cfg.points > 0 { cfg.points } else { spec.scaled_points(cfg.scale) };
+    match build_workload(spec, n, cfg.seed) {
+        Workload::Dense { pts, .. } => {
+            query_one(&pts, Euclidean, &addr, count, pipeline, eps, knn, verify, shutdown, retries)
+        }
+        Workload::Hamming { codes, .. } => {
+            query_one(&codes, Hamming, &addr, count, pipeline, eps, knn, verify, shutdown, retries)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn query_one<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    addr: &str,
+    count: usize,
+    pipeline: usize,
+    eps: Option<f64>,
+    knn: Option<usize>,
+    verify: bool,
+    shutdown: bool,
+    retries: usize,
+) -> Result<(), String> {
+    use neargraph::serve::{Client, Response};
+    use neargraph::testkit::serve_sim::{self, ClientPlan, SimQuery};
+    if pts.is_empty() {
+        return Err("empty dataset".into());
+    }
+    // Gate on daemon readiness first so the plan itself never races startup.
+    let probe = Client::connect_retry(addr, retries, std::time::Duration::from_millis(100))
+        .map_err(|e| format!("{addr}: {e}"))?;
+    drop(probe);
+
+    let queries: Vec<SimQuery> = (0..count)
+        .map(|i| {
+            let point = i % pts.len();
+            match (eps, knn) {
+                (Some(e), _) => SimQuery::Eps { point, eps: e },
+                (None, Some(k)) => SimQuery::Knn { point, k },
+                (None, None) => unreachable!("validated above"),
+            }
+        })
+        .collect();
+    let reports =
+        serve_sim::run_clients(addr, pts, &[ClientPlan { queries: queries.clone(), pipeline }])
+            .map_err(|e| format!("{addr}: {e}"))?;
+    let report = &reports[0];
+
+    let mut hits_ok = 0usize;
+    let mut errors = 0usize;
+    for r in &report.replies {
+        match &r.response {
+            Response::Hits { .. } => hits_ok += 1,
+            Response::Error { code, .. } => {
+                errors += 1;
+                eprintln!("query {} rejected: {}", r.seq, code.name());
+            }
+            Response::Bye { .. } => return Err("unexpected Bye reply".into()),
+        }
+    }
+    let lats = serve_sim::latencies_sorted(&reports);
+    println!(
+        "queries={count} answered={hits_ok} errors={errors} p50={}us p99={}us",
+        serve_sim::percentile(&lats, 0.50),
+        serve_sim::percentile(&lats, 0.99)
+    );
+
+    if verify {
+        let oracle = build_index_par(
+            IndexKind::BruteForce,
+            pts,
+            metric,
+            &IndexParams::default(),
+            &Pool::new(1),
+        )
+        .map_err(|e| e.to_string())?;
+        let mut want = Vec::new();
+        for (r, q) in report.replies.iter().zip(&queries) {
+            let Response::Hits { hits, .. } = &r.response else {
+                return Err(format!("query {} got no hits to verify", r.seq));
+            };
+            let same = match *q {
+                SimQuery::Eps { point, eps } => {
+                    want.clear();
+                    oracle.eps_query(pts.point(point), eps, &mut want);
+                    // ε hits arrive in the daemon's traversal order;
+                    // compare as id-sorted multisets with exact bits.
+                    let mut got = hits.clone();
+                    got.sort_unstable_by_key(|&(g, d)| (g, d.to_bits()));
+                    want.sort_unstable_by_key(|&(g, d)| (g, d.to_bits()));
+                    bits_of(&got) == bits_of(&want)
+                }
+                SimQuery::Knn { point, k } => {
+                    want.clear();
+                    want.extend(oracle.knn(pts.point(point), k));
+                    bits_of(hits) == bits_of(&want)
+                }
+            };
+            if !same {
+                return Err(format!("query {} differs from the brute-force oracle", r.seq));
+            }
+        }
+        println!("VERIFIED: {hits_ok} replies bit-equal to brute force");
+    }
+
+    if shutdown {
+        let mut client = Client::connect(addr).map_err(|e| format!("{addr}: {e}"))?;
+        client.send_shutdown(u64::MAX).map_err(|e| e.to_string())?;
+        match client.recv().map_err(|e| e.to_string())? {
+            Response::Bye { .. } => println!("daemon acknowledged shutdown"),
+            other => return Err(format!("expected Bye, got {other:?}")),
+        }
+    }
+    if errors > 0 {
+        return Err(format!("{errors} queries rejected"));
+    }
+    Ok(())
+}
+
+fn bits_of(pairs: &[(u32, f64)]) -> Vec<(u32, u64)> {
+    pairs.iter().map(|&(g, d)| (g, d.to_bits())).collect()
 }
 
 /// Output/verification options shared by every `run` path.

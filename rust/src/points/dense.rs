@@ -133,6 +133,15 @@ impl PointSet for DenseMatrix {
         self.norms.extend_from_slice(&other.norms);
     }
 
+    fn clear(&mut self) {
+        self.data.clear();
+        self.norms.clear();
+    }
+
+    fn shape_matches(&self, other: &Self) -> bool {
+        self.dim == other.dim
+    }
+
     fn empty_like(&self) -> Self {
         DenseMatrix::new(self.dim)
     }
@@ -255,5 +264,19 @@ mod tests {
     fn push_wrong_dim_panics() {
         let mut m = sample();
         m.push(&[1.0]);
+    }
+
+    #[test]
+    fn clear_keeps_shape_and_capacity() {
+        let mut m = sample();
+        let cap = m.data.capacity();
+        m.clear();
+        assert_eq!(m.len(), 0);
+        assert_eq!(m.dim(), 3);
+        assert!(m.data.capacity() >= cap, "clear must not shrink the buffer");
+        m.extend_from(&sample());
+        assert_eq!(m.len(), 3);
+        assert!(m.shape_matches(&sample()));
+        assert!(!m.shape_matches(&DenseMatrix::new(5)));
     }
 }

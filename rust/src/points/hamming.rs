@@ -120,6 +120,14 @@ impl PointSet for HammingCodes {
         self.data.extend_from_slice(&other.data);
     }
 
+    fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    fn shape_matches(&self, other: &Self) -> bool {
+        self.bits == other.bits
+    }
+
     fn empty_like(&self) -> Self {
         HammingCodes::new(self.bits)
     }
@@ -221,5 +229,19 @@ mod tests {
         assert_eq!(e.len(), 0);
         assert!(e.is_empty());
         assert_eq!(HammingCodes::from_bytes(&e.to_bytes()).len(), 0);
+    }
+
+    #[test]
+    fn clear_keeps_shape_and_capacity() {
+        let mut h = sample();
+        let cap = h.data.capacity();
+        h.clear();
+        assert_eq!(h.len(), 0);
+        assert_eq!(h.bits(), 100);
+        assert!(h.data.capacity() >= cap);
+        h.extend_from(&sample());
+        assert_eq!(h.len(), 2);
+        assert!(h.shape_matches(&sample()));
+        assert!(!h.shape_matches(&HammingCodes::new(64)));
     }
 }

@@ -41,6 +41,19 @@ pub trait PointSet: Clone + Send + Sync + 'static {
     /// Append all points of `other` onto `self`.
     fn extend_from(&mut self, other: &Self);
 
+    /// Remove every point, keeping the per-point shape **and the buffer
+    /// capacity**. `clear()` + `extend_from` is the steady-state reuse
+    /// cycle of the serve coalescer's batch double-buffer: once warmed,
+    /// the cycle performs no heap allocation.
+    fn clear(&mut self);
+
+    /// Whether `other`'s points could be appended onto `self` — same
+    /// dimension for dense rows, same bit width for Hamming codes (byte
+    /// strings always match). [`PointSet::extend_from`] asserts this;
+    /// wire-facing callers (the serve daemon) check it first so a client
+    /// sending a wrong-shape point gets a typed reply, not a panic.
+    fn shape_matches(&self, other: &Self) -> bool;
+
     /// An empty set with the same per-point shape (dimension etc.).
     fn empty_like(&self) -> Self;
 

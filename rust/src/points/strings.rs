@@ -79,6 +79,16 @@ impl PointSet for StringSet {
         }
     }
 
+    fn clear(&mut self) {
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.bytes.clear();
+    }
+
+    fn shape_matches(&self, _other: &Self) -> bool {
+        true // variable-length strings have no fixed per-point shape
+    }
+
     fn empty_like(&self) -> Self {
         StringSet::new()
     }
@@ -166,5 +176,15 @@ mod tests {
         let e = StringSet::new();
         assert!(e.is_empty());
         assert_eq!(StringSet::from_bytes(&e.to_bytes()).len(), 0);
+    }
+
+    #[test]
+    fn clear_resets_to_valid_empty() {
+        let mut s = sample();
+        s.clear();
+        assert_eq!(s.len(), 0);
+        s.push(b"GG");
+        assert_eq!(s.get(0), b"GG");
+        assert!(s.shape_matches(&StringSet::new()));
     }
 }

@@ -1,0 +1,75 @@
+//! A blocking protocol client — the building block of the simulated-client
+//! test harness ([`crate::testkit::serve_sim`]), the CLI `query`
+//! subcommand, and the perf driver's load generator.
+//!
+//! The client pipelines freely: send any number of requests, then match
+//! replies to requests by the echoed id (the daemon may answer pipelined
+//! requests in any order).
+
+use super::protocol::{self, FrameRead, Request, Response};
+use crate::points::PointSet;
+use std::io::{self, ErrorKind};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One blocking connection to a serve daemon.
+pub struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    /// Connect once.
+    pub fn connect(addr: &str) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, buf: Vec::new() })
+    }
+
+    /// Connect with retries (for scripts that race daemon startup):
+    /// `attempts` tries spaced `delay` apart before giving up.
+    pub fn connect_retry(addr: &str, attempts: usize, delay: Duration) -> io::Result<Client> {
+        let mut last = None;
+        for i in 0..attempts.max(1) {
+            if i > 0 {
+                std::thread::sleep(delay);
+            }
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| io::Error::other("no connect attempts")))
+    }
+
+    /// Send an ε-query for the single point held by `point`.
+    pub fn send_eps<P: PointSet>(&mut self, id: u64, point: &P, eps: f64) -> io::Result<()> {
+        self.send_request(&Request::Eps { id, eps, point: point.clone() })
+    }
+
+    /// Send a k-NN query for the single point held by `point`.
+    pub fn send_knn<P: PointSet>(&mut self, id: u64, point: &P, k: usize) -> io::Result<()> {
+        self.send_request(&Request::Knn { id, k, point: point.clone() })
+    }
+
+    /// Ask the daemon to drain and exit (answered with `Bye`).
+    pub fn send_shutdown(&mut self, id: u64) -> io::Result<()> {
+        self.send_request::<crate::points::DenseMatrix>(&Request::Shutdown { id })
+    }
+
+    fn send_request<P: PointSet>(&mut self, req: &Request<P>) -> io::Result<()> {
+        protocol::write_frame(&mut self.stream, &req.to_bytes())
+    }
+
+    /// Block for the next response frame.
+    pub fn recv(&mut self) -> io::Result<Response> {
+        match protocol::read_frame(&mut self.stream, &mut self.buf, &|| false)? {
+            FrameRead::Frame => Response::try_from_bytes(&self.buf)
+                .map_err(|e| io::Error::new(ErrorKind::InvalidData, format!("{e}"))),
+            FrameRead::Eof => {
+                Err(io::Error::new(ErrorKind::UnexpectedEof, "daemon closed the connection"))
+            }
+            FrameRead::Idle => unreachable!("no read timeout set on client sockets"),
+        }
+    }
+}

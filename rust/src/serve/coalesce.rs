@@ -1,0 +1,351 @@
+//! Request coalescing: the bounded admission queue between connection
+//! readers and the batch dispatcher (DESIGN.md §10.2).
+//!
+//! Readers [`Coalescer::submit`] single queries; the dispatcher blocks in
+//! [`Coalescer::next_batch`] until a batch is *ripe* and then takes the
+//! whole pending batch in O(1) by swapping it against its own spare
+//! buffer (a double-buffer: both sides keep their warmed capacity, so the
+//! steady-state cycle allocates nothing). A pending batch ripens when
+//!
+//! * it reaches `max_batch` queries, **or**
+//! * `window` has elapsed since its *first* admission (a lone query waits
+//!   at most one window; the timer is not reset by later arrivals), **or**
+//! * the coalescer is closed (shutdown drains immediately).
+//!
+//! Backpressure is explicit and bounded: once `queue_cap` queries are
+//! pending, `submit` returns [`Admit::Overloaded`] and the reader sends
+//! the typed overload reply — the daemon never buffers unboundedly and
+//! never silently drops an admitted query. After [`Coalescer::close`],
+//! `next_batch` keeps returning batches until the queue is empty (no
+//! admitted query loses its reply to shutdown) and only then reports
+//! exhaustion.
+
+use super::engine::{QueryBatch, QueryOp};
+use crate::points::PointSet;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Where a query's reply goes: one sink per client connection, shared by
+/// every ticket of that connection. `send` must be safe to call from the
+/// dispatcher thread concurrently with reader-side error replies.
+pub trait ReplySink: Send + Sync {
+    /// Deliver one encoded response payload (the sink adds the frame
+    /// length prefix). Delivery to a vanished client may be dropped
+    /// silently; it must never block shutdown indefinitely or panic.
+    fn send(&self, payload: &[u8]);
+}
+
+/// The reply address of one admitted query.
+pub struct Ticket {
+    /// The connection's reply sink.
+    pub sink: Arc<dyn ReplySink>,
+    /// Client-chosen request id, echoed in the response.
+    pub id: u64,
+}
+
+/// A pending batch plus the reply address of each query (parallel to the
+/// batch positions).
+pub struct PendingBatch<P: PointSet> {
+    pub batch: QueryBatch<P>,
+    pub tickets: Vec<Ticket>,
+}
+
+impl<P: PointSet> PendingBatch<P> {
+    /// An empty pending batch shaped like `proto`.
+    pub fn new_like(proto: &P) -> Self {
+        PendingBatch { batch: QueryBatch::new_like(proto), tickets: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+
+    /// Drop all queries, keep capacity (the double-buffer reuse cycle).
+    pub fn clear(&mut self) {
+        self.batch.clear();
+        self.tickets.clear();
+    }
+}
+
+/// Admission verdict of [`Coalescer::submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Queued; the reply will arrive via the ticket's sink.
+    Accepted,
+    /// The admission queue is at `queue_cap` — the caller must send the
+    /// typed overload reply itself.
+    Overloaded,
+    /// The coalescer is closed (shutting down); no new queries.
+    Closed,
+}
+
+/// Tuning knobs (validated `serve.*` config keys).
+#[derive(Clone, Copy, Debug)]
+pub struct CoalesceParams {
+    /// Longest a pending batch may wait for company.
+    pub window: Duration,
+    /// Batch-size cap that ripens a batch early.
+    pub max_batch: usize,
+    /// Bound on pending queries (≥ `max_batch`); beyond it, `submit`
+    /// reports overload.
+    pub queue_cap: usize,
+}
+
+struct CoState<P: PointSet> {
+    pending: PendingBatch<P>,
+    /// When the oldest pending query was admitted (`None` ⇔ empty).
+    since: Option<Instant>,
+    open: bool,
+}
+
+/// The admission queue (see module docs).
+pub struct Coalescer<P: PointSet> {
+    state: Mutex<CoState<P>>,
+    cv: Condvar,
+    params: CoalesceParams,
+}
+
+impl<P: PointSet> Coalescer<P> {
+    /// A new, open coalescer admitting points shaped like `proto`.
+    pub fn new(proto: &P, params: CoalesceParams) -> Self {
+        assert!(params.max_batch >= 1, "max_batch must be at least 1");
+        assert!(params.queue_cap >= params.max_batch, "queue_cap must cover one full batch");
+        Coalescer {
+            state: Mutex::new(CoState {
+                pending: PendingBatch::new_like(proto),
+                since: None,
+                open: true,
+            }),
+            cv: Condvar::new(),
+            params,
+        }
+    }
+
+    /// The tuning knobs this coalescer runs with.
+    pub fn params(&self) -> &CoalesceParams {
+        &self.params
+    }
+
+    /// Admit one query. `point` must hold exactly one point whose shape
+    /// the caller has already validated against the served index.
+    pub fn submit(&self, point: &P, op: QueryOp, ticket: Ticket) -> Admit {
+        let mut g = self.state.lock().unwrap();
+        if !g.open {
+            return Admit::Closed;
+        }
+        if g.pending.len() >= self.params.queue_cap {
+            return Admit::Overloaded;
+        }
+        if g.pending.is_empty() {
+            g.since = Some(Instant::now());
+        }
+        g.pending.batch.push(point, op);
+        g.pending.tickets.push(ticket);
+        // Wake the dispatcher when a batch starts (arming the window
+        // timer) or ripens by size; intermediate growth needs no wake.
+        let wake = g.pending.len() == 1 || g.pending.len() >= self.params.max_batch;
+        drop(g);
+        if wake {
+            self.cv.notify_all();
+        }
+        Admit::Accepted
+    }
+
+    /// Block until a batch is ripe, then swap it into `into` (which must
+    /// be empty; its buffers become the new pending buffers). Returns
+    /// `false` only when the coalescer is closed **and** drained — every
+    /// admitted query is handed out exactly once before that.
+    pub fn next_batch(&self, into: &mut PendingBatch<P>) -> bool {
+        debug_assert!(into.is_empty(), "next_batch needs a cleared spare buffer");
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if !g.pending.is_empty() {
+                if !g.open || g.pending.len() >= self.params.max_batch {
+                    break;
+                }
+                let since = g.since.expect("non-empty pending batch has a start time");
+                let elapsed = since.elapsed();
+                if elapsed >= self.params.window {
+                    break;
+                }
+                let (back, _timeout) = self.cv.wait_timeout(g, self.params.window - elapsed).unwrap();
+                g = back;
+            } else {
+                if !g.open {
+                    return false;
+                }
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+        std::mem::swap(&mut g.pending, into);
+        g.since = None;
+        true
+    }
+
+    /// Stop admissions and wake the dispatcher so it drains what remains.
+    pub fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.open = false;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Whether the coalescer still admits queries.
+    pub fn is_open(&self) -> bool {
+        self.state.lock().unwrap().open
+    }
+
+    /// Number of currently pending (admitted, undrained) queries.
+    pub fn pending_len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::DenseMatrix;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct NullSink;
+    impl ReplySink for NullSink {
+        fn send(&self, _payload: &[u8]) {}
+    }
+
+    struct CountSink(AtomicUsize);
+    impl ReplySink for CountSink {
+        fn send(&self, _payload: &[u8]) {
+            self.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn one_point(v: f32) -> DenseMatrix {
+        DenseMatrix::from_flat(2, vec![v, -v])
+    }
+
+    fn ticket(id: u64) -> Ticket {
+        Ticket { sink: Arc::new(NullSink), id }
+    }
+
+    fn coalescer(window_us: u64, max_batch: usize, queue_cap: usize) -> Coalescer<DenseMatrix> {
+        Coalescer::new(
+            &DenseMatrix::new(2),
+            CoalesceParams {
+                window: Duration::from_micros(window_us),
+                max_batch,
+                queue_cap,
+            },
+        )
+    }
+
+    #[test]
+    fn size_cap_ripens_immediately() {
+        // Huge window: only the size trigger can ripen the batch.
+        let co = coalescer(60_000_000, 3, 16);
+        for i in 0..3u64 {
+            assert_eq!(co.submit(&one_point(i as f32), QueryOp::Eps(0.5), ticket(i)), Admit::Accepted);
+        }
+        let mut spare = PendingBatch::new_like(&DenseMatrix::new(2));
+        assert!(co.next_batch(&mut spare));
+        assert_eq!(spare.len(), 3);
+        assert_eq!(spare.tickets.iter().map(|t| t.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(co.pending_len(), 0);
+    }
+
+    #[test]
+    fn window_ripens_a_lone_query() {
+        let co = coalescer(2_000, 1024, 4096);
+        co.submit(&one_point(1.0), QueryOp::Knn(2), ticket(9));
+        let mut spare = PendingBatch::new_like(&DenseMatrix::new(2));
+        let t0 = Instant::now();
+        assert!(co.next_batch(&mut spare));
+        assert_eq!(spare.len(), 1);
+        // The lone query waited roughly one window, not forever (generous
+        // upper bound for slow CI).
+        assert!(t0.elapsed() < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn overload_is_reported_not_buffered() {
+        let co = coalescer(60_000_000, 2, 2);
+        assert_eq!(co.submit(&one_point(0.0), QueryOp::Eps(0.1), ticket(0)), Admit::Accepted);
+        assert_eq!(co.submit(&one_point(1.0), QueryOp::Eps(0.1), ticket(1)), Admit::Accepted);
+        assert_eq!(co.submit(&one_point(2.0), QueryOp::Eps(0.1), ticket(2)), Admit::Overloaded);
+        assert_eq!(co.pending_len(), 2, "overloaded submit must not grow the queue");
+    }
+
+    #[test]
+    fn close_drains_then_reports_exhaustion() {
+        let co = coalescer(60_000_000, 100, 100);
+        for i in 0..5u64 {
+            co.submit(&one_point(i as f32), QueryOp::Eps(0.1), ticket(i));
+        }
+        co.close();
+        assert_eq!(co.submit(&one_point(9.0), QueryOp::Eps(0.1), ticket(99)), Admit::Closed);
+        let mut spare = PendingBatch::new_like(&DenseMatrix::new(2));
+        assert!(co.next_batch(&mut spare), "pending queries survive close");
+        assert_eq!(spare.len(), 5);
+        spare.clear();
+        assert!(!co.next_batch(&mut spare), "drained + closed reports exhaustion");
+    }
+
+    #[test]
+    fn double_buffer_swap_keeps_capacity_and_delivery_works() {
+        let co = coalescer(60_000_000, 2, 8);
+        let sink = Arc::new(CountSink(AtomicUsize::new(0)));
+        let mut spare = PendingBatch::new_like(&DenseMatrix::new(2));
+        for round in 0..3u64 {
+            for i in 0..2u64 {
+                co.submit(
+                    &one_point(i as f32),
+                    QueryOp::Eps(0.1),
+                    Ticket { sink: sink.clone(), id: round * 2 + i },
+                );
+            }
+            assert!(co.next_batch(&mut spare));
+            for t in &spare.tickets {
+                t.sink.send(b"payload");
+            }
+            spare.clear();
+        }
+        assert_eq!(sink.0.load(Ordering::Relaxed), 6, "every ticket delivered exactly once");
+    }
+
+    #[test]
+    fn concurrent_producers_all_drain() {
+        let co = std::sync::Arc::new(coalescer(500, 8, 1 << 16));
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for w in 0..4u64 {
+                let co = co.clone();
+                s.spawn(move || {
+                    for i in 0..50u64 {
+                        while co.submit(&one_point(i as f32), QueryOp::Knn(1), ticket(w * 100 + i))
+                            != Admit::Accepted
+                        {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            let co = co.clone();
+            let total = &total;
+            s.spawn(move || {
+                let mut spare = PendingBatch::new_like(&DenseMatrix::new(2));
+                let mut got = 0usize;
+                while got < 200 {
+                    if co.next_batch(&mut spare) {
+                        got += spare.len();
+                        spare.clear();
+                    }
+                }
+                total.store(got, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 200);
+    }
+}

@@ -1,0 +1,371 @@
+//! Batch execution of coalesced queries over a [`NearIndex`] (DESIGN.md
+//! §10.3).
+//!
+//! The dispatcher hands the engine one [`QueryBatch`] at a time; the
+//! engine strides its queries across **lanes** — one per pool worker,
+//! each owning a long-lived [`QueryScratch`] plus warmed result buffers —
+//! via [`Pool::run_indexed_with`], then merges the per-lane results back
+//! into request order. Per-query answers are computed independently
+//! (query `q` runs on lane `q % nlanes` with the same scratch-threaded
+//! entry points a direct call would use), so the output is **bit-identical
+//! to direct `NearIndex` calls at every lane count and every batch
+//! boundary** — coalescing is a latency/throughput trade, never an answer
+//! change.
+//!
+//! Steady state allocates nothing: the batch and output double-buffers
+//! are `clear()`ed (capacity kept), lanes persist across batches, and the
+//! one-thread pool path runs inline (its `Vec<()>` of ZST outputs never
+//! touches the heap). `examples/perf_driver.rs` arms an allocation gate
+//! on exactly this path.
+
+use crate::covertree::QueryScratch;
+use crate::index::NearIndex;
+use crate::metric::Metric;
+use crate::points::PointSet;
+use crate::util::Pool;
+use std::sync::Mutex;
+
+/// One admitted query: the operation; the point rides in the batch's
+/// point set at the same position.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QueryOp {
+    /// Fixed-radius query with the given ε.
+    Eps(f64),
+    /// k-nearest-neighbor query.
+    Knn(usize),
+}
+
+/// A coalesced batch: one point container holding every admitted query
+/// point (contiguous, cache-friendly) plus the per-query operation.
+#[derive(Debug)]
+pub struct QueryBatch<P: PointSet> {
+    points: P,
+    ops: Vec<QueryOp>,
+}
+
+impl<P: PointSet> QueryBatch<P> {
+    /// An empty batch shaped like `proto` (same dimension/width).
+    pub fn new_like(proto: &P) -> Self {
+        QueryBatch { points: proto.empty_like(), ops: Vec::new() }
+    }
+
+    /// Number of queries in the batch.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Drop every query but keep the warmed buffer capacity — the
+    /// steady-state reuse cycle of the coalescer's double buffer.
+    pub fn clear(&mut self) {
+        self.points.clear();
+        self.ops.clear();
+    }
+
+    /// Append one query. `point` must hold exactly one point of the
+    /// batch's shape (the admission path checks shape before pushing).
+    pub fn push(&mut self, point: &P, op: QueryOp) {
+        assert_eq!(point.len(), 1, "a query carries exactly one point");
+        self.points.extend_from(point);
+        self.ops.push(op);
+    }
+
+    /// The packed query points (parallel to [`QueryBatch::ops`]).
+    pub fn points(&self) -> &P {
+        &self.points
+    }
+
+    /// The per-query operations.
+    pub fn ops(&self) -> &[QueryOp] {
+        &self.ops
+    }
+}
+
+/// Batch results in request order: one `(gid, dist)` span per query,
+/// packed into a single reusable hits buffer.
+#[derive(Debug, Default)]
+pub struct BatchOutput {
+    hits: Vec<(u32, f64)>,
+    /// Per-query `(start, len)` into `hits`.
+    spans: Vec<(usize, u32)>,
+}
+
+impl BatchOutput {
+    pub fn new() -> Self {
+        BatchOutput::default()
+    }
+
+    /// Number of answered queries.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The hits of query `q`, in the same order a direct
+    /// `eps_query_with`/`knn_with` call would produce them.
+    pub fn hits_of(&self, q: usize) -> &[(u32, f64)] {
+        let (start, len) = self.spans[q];
+        &self.hits[start..start + len as usize]
+    }
+
+    fn clear(&mut self) {
+        self.hits.clear();
+        self.spans.clear();
+    }
+}
+
+/// Per-lane state: one scratch plus result buffers, owned by whichever
+/// pool worker claims the lane for a batch. `row` exists because
+/// `knn_with` clears its output (k-NN rows are self-contained), while the
+/// lane accumulates many queries' hits back to back.
+#[derive(Default)]
+struct Lane {
+    scratch: QueryScratch,
+    hits: Vec<(u32, f64)>,
+    lens: Vec<u32>,
+    row: Vec<(u32, f64)>,
+}
+
+/// The serve daemon's query executor: an owned index behind lane-striped
+/// scratch state.
+///
+/// [`ServeEngine::execute`] is written for a **single consumer** (the
+/// daemon's one dispatcher thread); an internal gate serializes
+/// overlapping calls so misuse degrades to queueing, never to corrupted
+/// lanes.
+pub struct ServeEngine<P: PointSet, M: Metric<P>> {
+    index: Box<dyn NearIndex<P, M>>,
+    pool: Pool,
+    lanes: Vec<Mutex<Lane>>,
+    gate: Mutex<()>,
+}
+
+impl<P: PointSet, M: Metric<P>> ServeEngine<P, M> {
+    /// Wrap an index with a `threads`-worker lane pool (clamped to ≥ 1).
+    pub fn new(index: Box<dyn NearIndex<P, M>>, threads: usize) -> Self {
+        let pool = Pool::new(threads);
+        let lanes = (0..pool.threads()).map(|_| Mutex::new(Lane::default())).collect();
+        ServeEngine { index, pool, lanes, gate: Mutex::new(()) }
+    }
+
+    /// The served index.
+    pub fn index(&self) -> &dyn NearIndex<P, M> {
+        self.index.as_ref()
+    }
+
+    /// Lane/worker budget.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Whether a query point could be answered against the served points
+    /// (same dimension/width) — checked at admission so a mismatched point
+    /// is a typed `bad-query` reply, not a panic inside a batch.
+    pub fn shape_ok(&self, point: &P) -> bool {
+        self.index.points().shape_matches(point)
+    }
+
+    /// Answer every query of `batch` into `out` (cleared first), request
+    /// order preserved.
+    pub fn execute(&self, batch: &QueryBatch<P>, out: &mut BatchOutput) {
+        let _gate = self.gate.lock().unwrap();
+        out.clear();
+        let n = batch.len();
+        if n == 0 {
+            return;
+        }
+        let nlanes = self.lanes.len().min(n);
+        // Lane w answers queries w, w + nlanes, … with its own scratch;
+        // MutexGuard-as-worker-state is fine because `run_indexed_with`
+        // creates and drops each state on the worker that owns it.
+        self.pool.run_indexed_with(
+            nlanes,
+            |w| self.lanes[w].lock().unwrap(),
+            |lane, w| {
+                let lane = &mut **lane;
+                lane.hits.clear();
+                lane.lens.clear();
+                let mut q = w;
+                while q < n {
+                    let start = lane.hits.len();
+                    match batch.ops[q] {
+                        QueryOp::Eps(eps) => {
+                            self.index.eps_query_with(
+                                batch.points.point(q),
+                                eps,
+                                &mut lane.scratch,
+                                &mut lane.hits,
+                            );
+                        }
+                        QueryOp::Knn(k) => {
+                            self.index.knn_with(
+                                batch.points.point(q),
+                                k,
+                                &mut lane.scratch,
+                                &mut lane.row,
+                            );
+                            lane.hits.extend_from_slice(&lane.row);
+                        }
+                    }
+                    lane.lens.push((lane.hits.len() - start) as u32);
+                    q += nlanes;
+                }
+            },
+        );
+        // Merge back to request order without per-call cursor allocations:
+        // pass 1 scatters each query's hit count into its span slot, a
+        // prefix sum turns counts into offsets, pass 2 copies the hits.
+        out.spans.clear();
+        out.spans.resize(n, (0, 0));
+        for (w, lane) in self.lanes.iter().take(nlanes).enumerate() {
+            let lane = lane.lock().unwrap();
+            for (j, &len) in lane.lens.iter().enumerate() {
+                out.spans[w + j * nlanes].1 = len;
+            }
+        }
+        let mut acc = 0usize;
+        for span in out.spans.iter_mut() {
+            span.0 = acc;
+            acc += span.1 as usize;
+        }
+        out.hits.resize(acc, (0, 0.0));
+        for (w, lane) in self.lanes.iter().take(nlanes).enumerate() {
+            let lane = lane.lock().unwrap();
+            let mut src = 0usize;
+            for (j, &len) in lane.lens.iter().enumerate() {
+                let (start, _) = out.spans[w + j * nlanes];
+                let len = len as usize;
+                out.hits[start..start + len].copy_from_slice(&lane.hits[src..src + len]);
+                src += len;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::covertree::QueryScratch;
+    use crate::index::{build_index, IndexKind, IndexParams};
+    use crate::metric::Euclidean;
+    use crate::testkit::scenario;
+
+    fn bits(pairs: &[(u32, f64)]) -> Vec<(u32, u64)> {
+        pairs.iter().map(|&(g, d)| (g, d.to_bits())).collect()
+    }
+
+    #[test]
+    fn batch_answers_match_direct_calls_at_every_lane_count() {
+        let pts = scenario::dense_clusters(41, 180);
+        for threads in [1usize, 2, 5] {
+            let params = IndexParams { leaf_size: 4, ..Default::default() };
+            let engine = ServeEngine::new(
+                build_index(IndexKind::CoverTree, &pts, Euclidean, &params).unwrap(),
+                threads,
+            );
+            let direct = build_index(IndexKind::CoverTree, &pts, Euclidean, &params).unwrap();
+
+            let mut batch = QueryBatch::new_like(&pts);
+            for q in 0..37 {
+                let one = pts.slice(q, q + 1);
+                let op = match q % 3 {
+                    0 => QueryOp::Eps(0.8),
+                    1 => QueryOp::Knn(5),
+                    _ => QueryOp::Eps(0.0),
+                };
+                batch.push(&one, op);
+            }
+            let mut out = BatchOutput::new();
+            engine.execute(&batch, &mut out);
+            assert_eq!(out.len(), batch.len());
+
+            let mut scratch = QueryScratch::new();
+            let mut want = Vec::new();
+            for q in 0..batch.len() {
+                match batch.ops()[q] {
+                    QueryOp::Eps(eps) => {
+                        want.clear();
+                        direct.eps_query_with(pts.point(q), eps, &mut scratch, &mut want);
+                    }
+                    QueryOp::Knn(k) => {
+                        direct.knn_with(pts.point(q), k, &mut scratch, &mut want);
+                    }
+                }
+                assert_eq!(
+                    bits(out.hits_of(q)),
+                    bits(&want),
+                    "threads={threads} query={q} diverged from direct call"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_boundaries_do_not_change_answers() {
+        // The same 24 queries executed as one batch, as 24 singleton
+        // batches, and as uneven chunks must produce identical spans.
+        let pts = scenario::dense_uniform(7, 90);
+        let engine = ServeEngine::new(
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap(),
+            3,
+        );
+        let ops: Vec<QueryOp> = (0..24)
+            .map(|q| if q % 2 == 0 { QueryOp::Eps(0.6) } else { QueryOp::Knn(4) })
+            .collect();
+
+        let run_chunked = |chunk: usize| -> Vec<Vec<(u32, u64)>> {
+            let mut all = Vec::new();
+            let mut batch = QueryBatch::new_like(&pts);
+            let mut out = BatchOutput::new();
+            let mut q = 0usize;
+            while q < ops.len() {
+                batch.clear();
+                let hi = (q + chunk).min(ops.len());
+                for i in q..hi {
+                    batch.push(&pts.slice(i, i + 1), ops[i]);
+                }
+                engine.execute(&batch, &mut out);
+                for i in 0..batch.len() {
+                    all.push(bits(out.hits_of(i)));
+                }
+                q = hi;
+            }
+            all
+        };
+
+        let whole = run_chunked(24);
+        assert_eq!(whole, run_chunked(1), "singleton batches diverged");
+        assert_eq!(whole, run_chunked(7), "uneven chunks diverged");
+    }
+
+    #[test]
+    fn cleared_batch_and_output_are_reusable() {
+        let pts = scenario::dense_uniform(19, 40);
+        let engine = ServeEngine::new(
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap(),
+            1,
+        );
+        let mut batch = QueryBatch::new_like(&pts);
+        let mut out = BatchOutput::new();
+        batch.push(&pts.slice(0, 1), QueryOp::Knn(3));
+        engine.execute(&batch, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out.hits_of(0).len(), 3);
+        batch.clear();
+        assert!(batch.is_empty());
+        // Empty batch → empty output, stale spans gone.
+        engine.execute(&batch, &mut out);
+        assert!(out.is_empty());
+        batch.push(&pts.slice(2, 3), QueryOp::Eps(10.0));
+        engine.execute(&batch, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(!out.hits_of(0).is_empty());
+        assert!(engine.shape_ok(&pts.slice(0, 1)));
+    }
+}

@@ -1,0 +1,214 @@
+//! `neargraph::serve` — a query-serving daemon with request coalescing
+//! over snapshot-loaded indexes (DESIGN.md §10).
+//!
+//! The offline pipeline builds indexes; this module keeps one resident
+//! and answers single-point ε and k-NN queries over TCP. The core idea is
+//! **batch coalescing**: queries arriving within a bounded window
+//! (`coalesce_us` µs or `max_batch` queries, whichever first) are drained
+//! as one batch through the index's scratch-threaded batch paths on
+//! [`crate::util::Pool`] workers — each worker holding one long-lived
+//! [`crate::covertree::QueryScratch`] — so concurrent small queries get
+//! batch-path throughput while answers stay **bit-identical** to direct
+//! [`crate::index::NearIndex`] calls. Backpressure is explicit: the
+//! admission queue is bounded (`queue_cap`) and overload is a typed
+//! protocol reply, never unbounded buffering.
+//!
+//! Pieces (each its own submodule):
+//!
+//! * [`protocol`] — length-prefixed frames with hardened, `WireError`-typed
+//!   decoders (registered in `tests/wire_adversarial.rs`);
+//! * [`Coalescer`] — the bounded admission queue / batching window;
+//! * [`ServeEngine`] — lane-striped batch execution over an owned index;
+//! * [`serve`]/[`Server`] — listener, readers, dispatcher, clean shutdown;
+//! * [`client::Client`] — a blocking pipelining client (tests, CLI, perf).
+//!
+//! Quickstart (in-process, ephemeral port):
+//!
+//! ```no_run
+//! use neargraph::index::{build_index, IndexKind, IndexParams};
+//! use neargraph::metric::Euclidean;
+//! use neargraph::points::DenseMatrix;
+//! use neargraph::serve::{serve, Client, Response, ServeConfig};
+//!
+//! let pts = DenseMatrix::from_flat(2, vec![0.0, 0.0, 1.0, 1.0]);
+//! let index = build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default())?;
+//! let server = serve(index, &ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() })?;
+//! let mut client = Client::connect(&server.local_addr().to_string())?;
+//! client.send_eps(7, &pts.slice(0, 1), 0.5)?;
+//! match client.recv()? {
+//!     Response::Hits { id, hits } => assert_eq!((id, hits.len()), (7, 1)),
+//!     other => panic!("unexpected reply {other:?}"),
+//! }
+//! server.shutdown_and_join();
+//! # Ok::<(), Box<dyn std::error::Error>>(())
+//! ```
+//!
+//! Or from the CLI: `neargraph serve --dataset clusters --scale 2000`
+//! then `neargraph query --addr 127.0.0.1:7878 --eps 0.5 --count 64`.
+
+pub mod client;
+mod coalesce;
+mod engine;
+pub mod protocol;
+mod server;
+
+pub use client::Client;
+pub use coalesce::{Admit, CoalesceParams, Coalescer, PendingBatch, ReplySink, Ticket};
+pub use engine::{BatchOutput, QueryBatch, QueryOp, ServeEngine};
+pub use protocol::{ErrorCode, Request, Response, MAX_FRAME};
+pub use server::{serve, Server, StatsSnapshot};
+
+/// Validated daemon settings (the `serve.*` config keys plus CLI
+/// overrides; see [`crate::config`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Listen address, `ip:port` (port 0 picks an ephemeral port —
+    /// read it back from [`Server::local_addr`]).
+    pub addr: String,
+    /// Coalescing window in microseconds (0 dispatches every admitted
+    /// query immediately — the no-coalescing baseline).
+    pub coalesce_us: u64,
+    /// Batch-size cap that ripens a batch before the window expires.
+    pub max_batch: usize,
+    /// Bound on admitted-but-undispatched queries; beyond it clients get
+    /// the typed overload reply.
+    pub queue_cap: usize,
+    /// Pool workers (query lanes) answering batches.
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            coalesce_us: 200,
+            max_batch: 256,
+            queue_cap: 4096,
+            threads: 1,
+        }
+    }
+}
+
+/// Typed failure starting the daemon.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// `addr` is not an `ip:port` literal.
+    BadAddr { addr: String },
+    /// The listener could not bind.
+    Bind { addr: String, error: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BadAddr { addr } => {
+                write!(f, "serve address '{addr}' is not an ip:port literal")
+            }
+            ServeError::Bind { addr, error } => write!(f, "cannot bind '{addr}': {error}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{build_index, IndexKind, IndexParams};
+    use crate::metric::Euclidean;
+    use crate::points::PointSet;
+    use crate::testkit::scenario;
+
+    fn ephemeral(threads: usize, coalesce_us: u64) -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            coalesce_us,
+            threads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_roundtrip_and_clean_shutdown() {
+        let pts = scenario::dense_clusters(77, 120);
+        let index =
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let server = serve(index, &ephemeral(2, 100)).unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut client = Client::connect(&addr).unwrap();
+        client.send_eps(1, &pts.slice(3, 4), 0.7).unwrap();
+        client.send_knn(2, &pts.slice(5, 6), 4).unwrap();
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..2 {
+            match client.recv().unwrap() {
+                Response::Hits { id, hits } => {
+                    got.insert(id, hits);
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        assert!(got[&1].iter().any(|&(g, d)| g == 3 && d == 0.0), "self point within eps");
+        assert_eq!(got[&2].len(), 4);
+
+        client.send_shutdown(3).unwrap();
+        assert_eq!(client.recv().unwrap(), Response::Bye { id: 3 });
+        let stats = server.join();
+        assert_eq!(stats.queries, 2);
+        assert!(stats.batches >= 1);
+        assert_eq!(stats.connections, 1);
+    }
+
+    #[test]
+    fn bad_frame_and_bad_shape_get_typed_replies() {
+        let pts = scenario::dense_uniform(3, 60); // dim 4
+        let index =
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let server = serve(index, &ephemeral(1, 0)).unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut client = Client::connect(&addr).unwrap();
+        // Wrong dimension: decodes fine, fails the shape check.
+        let wrong = crate::points::DenseMatrix::from_flat(2, vec![0.0, 0.0]);
+        client.send_eps(5, &wrong, 0.5).unwrap();
+        assert_eq!(client.recv().unwrap(), Response::Error { id: 5, code: ErrorCode::BadQuery });
+
+        // Garbage payload: typed bad-frame reply, connection stays usable.
+        protocol::write_frame(
+            &mut std::net::TcpStream::connect(&addr).unwrap(),
+            b"\xFFnot a request",
+        )
+        .unwrap();
+        client.send_knn(6, &pts.slice(0, 1), 2).unwrap();
+        match client.recv().unwrap() {
+            Response::Hits { id, hits } => assert_eq!((id, hits.len()), (6, 2)),
+            other => panic!("unexpected reply {other:?}"),
+        }
+        let stats = server.shutdown_and_join();
+        assert_eq!(stats.bad_frames, 1);
+    }
+
+    #[test]
+    fn bad_addr_is_typed() {
+        let pts = scenario::dense_uniform(5, 10);
+        let index =
+            build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let err = serve(index, &ServeConfig { addr: "not-an-addr".into(), ..Default::default() })
+            .unwrap_err();
+        assert_eq!(err, ServeError::BadAddr { addr: "not-an-addr".into() });
+        assert!(format!("{err}").contains("not-an-addr"));
+    }
+
+    #[test]
+    fn server_drop_shuts_down_without_client_shutdown() {
+        let pts = scenario::dense_uniform(11, 30);
+        let index =
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let server = serve(index, &ephemeral(1, 50)).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.send_eps(1, &pts.slice(0, 1), 0.4).unwrap();
+        let _ = client.recv().unwrap();
+        drop(server); // must join every thread, not hang
+    }
+}

@@ -1,0 +1,494 @@
+//! The serve daemon's length-prefixed binary protocol (DESIGN.md §10.1).
+//!
+//! Every message on the socket is one **frame**: a little-endian `u64`
+//! payload length (capped at [`MAX_FRAME`] *before* any allocation)
+//! followed by that many payload bytes. Payload decoders follow the same
+//! [`WireError`]/length-checked discipline as the crate's other wire
+//! formats (`Bundle`, `KnnBundle`, NGW-CSR1): count-prefixed,
+//! `saturating_mul` length guards, trailing-bytes checks, typed errors —
+//! never a panic on adversarial bytes (`tests/wire_adversarial.rs` runs
+//! the full mutation battery over every frame kind).
+//!
+//! Request payloads (`opcode u8, request id u64, ...`):
+//!
+//! | opcode | frame | body |
+//! |--------|-------|------|
+//! | 1 | ε-query   | `eps` f64 bits, point-set length u64 + bytes (exactly one point) |
+//! | 2 | k-NN query| `k` u64 (1 ..= u32::MAX), point-set length u64 + bytes (one point) |
+//! | 3 | shutdown  | — |
+//!
+//! Response payloads:
+//!
+//! | opcode | frame | body |
+//! |--------|-------|------|
+//! | 1 | hits  | `n` u64 + n × (`gid` u32, `dist` f64 bits; finite, ≥ 0) |
+//! | 2 | error | [`ErrorCode`] u8 |
+//! | 3 | bye   | — (acknowledges a shutdown request) |
+//!
+//! Responses echo the request id; the daemon may answer pipelined
+//! requests in any order, so clients match on the id, not on arrival
+//! order. The query point travels as a one-point [`PointSet::to_bytes`]
+//! payload — the same encoding the simulated MPI layer ships, so the
+//! point containers' hardened decoders are reused verbatim.
+
+use crate::points::{put_u64, try_get_u64, try_take, PointSet, WireError};
+use std::io::{self, ErrorKind, Read, Write};
+
+/// Hard cap on a frame payload (16 MiB) — enforced before the receive
+/// buffer is grown, so a corrupt or hostile length prefix can never
+/// over-allocate.
+pub const MAX_FRAME: u64 = 1 << 24;
+
+const REQ_EPS: u8 = 1;
+const REQ_KNN: u8 = 2;
+const REQ_SHUTDOWN: u8 = 3;
+
+const RESP_HITS: u8 = 1;
+const RESP_ERROR: u8 = 2;
+const RESP_BYE: u8 = 3;
+
+/// Typed overload/rejection reply codes (the explicit-backpressure half of
+/// the protocol: a daemon under pressure answers, it never buffers
+/// unboundedly or drops the connection mid-reply).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request frame failed to decode.
+    BadFrame,
+    /// The frame decoded but the query is unanswerable (e.g. a point whose
+    /// shape does not match the served index).
+    BadQuery,
+    /// The bounded admission queue is full — retry later.
+    Overloaded,
+    /// The daemon is shutting down and no longer admits queries.
+    ShuttingDown,
+}
+
+impl ErrorCode {
+    fn code(self) -> u8 {
+        match self {
+            ErrorCode::BadFrame => 1,
+            ErrorCode::BadQuery => 2,
+            ErrorCode::Overloaded => 3,
+            ErrorCode::ShuttingDown => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<ErrorCode> {
+        match c {
+            1 => Some(ErrorCode::BadFrame),
+            2 => Some(ErrorCode::BadQuery),
+            3 => Some(ErrorCode::Overloaded),
+            4 => Some(ErrorCode::ShuttingDown),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name (logs and client diagnostics).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad-frame",
+            ErrorCode::BadQuery => "bad-query",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ShuttingDown => "shutting-down",
+        }
+    }
+}
+
+/// One decoded client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request<P: PointSet> {
+    /// All indexed points within `eps` of the (single) carried point.
+    Eps { id: u64, eps: f64, point: P },
+    /// The `k` nearest indexed points to the carried point.
+    Knn { id: u64, k: usize, point: P },
+    /// Ask the daemon to drain in-flight queries and exit.
+    Shutdown { id: u64 },
+}
+
+impl<P: PointSet> Request<P> {
+    /// Encode as a frame payload (no length prefix — [`write_frame`] adds it).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Request::Eps { id, eps, point } => {
+                buf.push(REQ_EPS);
+                put_u64(&mut buf, *id);
+                put_u64(&mut buf, eps.to_bits());
+                let pb = point.to_bytes();
+                put_u64(&mut buf, pb.len() as u64);
+                buf.extend_from_slice(&pb);
+            }
+            Request::Knn { id, k, point } => {
+                buf.push(REQ_KNN);
+                put_u64(&mut buf, *id);
+                put_u64(&mut buf, *k as u64);
+                let pb = point.to_bytes();
+                put_u64(&mut buf, pb.len() as u64);
+                buf.extend_from_slice(&pb);
+            }
+            Request::Shutdown { id } => {
+                buf.push(REQ_SHUTDOWN);
+                put_u64(&mut buf, *id);
+            }
+        }
+        buf
+    }
+
+    /// Length-checked decode of a frame payload. Rejects non-finite or
+    /// negative ε, `k` outside `1 ..= u32::MAX`, and any carried point set
+    /// that does not hold exactly one point.
+    pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        let op = try_take(bytes, &mut off, 1, "request opcode")?[0];
+        let id = try_get_u64(bytes, &mut off, "request id")?;
+        let req = match op {
+            REQ_EPS => {
+                let eps = f64::from_bits(try_get_u64(bytes, &mut off, "request eps")?);
+                if !eps.is_finite() || eps < 0.0 {
+                    return Err(WireError::Corrupt { what: "request eps not a radius" });
+                }
+                let point = decode_one_point::<P>(bytes, &mut off)?;
+                Request::Eps { id, eps, point }
+            }
+            REQ_KNN => {
+                let k = try_get_u64(bytes, &mut off, "request k")?;
+                if k == 0 || k > u32::MAX as u64 {
+                    return Err(WireError::Corrupt { what: "request k out of range" });
+                }
+                let point = decode_one_point::<P>(bytes, &mut off)?;
+                Request::Knn { id, k: k as usize, point }
+            }
+            REQ_SHUTDOWN => Request::Shutdown { id },
+            _ => return Err(WireError::Corrupt { what: "unknown request opcode" }),
+        };
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after request" });
+        }
+        Ok(req)
+    }
+}
+
+fn decode_one_point<P: PointSet>(bytes: &[u8], off: &mut usize) -> Result<P, WireError> {
+    let len = try_get_u64(bytes, off, "request point length")? as usize;
+    let point = P::try_from_bytes(try_take(bytes, off, len, "request point")?)?;
+    if point.len() != 1 {
+        return Err(WireError::Corrupt { what: "request must carry exactly one point" });
+    }
+    Ok(point)
+}
+
+/// Best-effort request id of an encoded request payload — used to address
+/// the error reply when the payload itself fails to decode (0 when even
+/// the id is unreadable).
+pub fn peek_request_id(bytes: &[u8]) -> u64 {
+    if bytes.len() >= 9 {
+        u64::from_le_bytes(bytes[1..9].try_into().unwrap())
+    } else {
+        0
+    }
+}
+
+/// One decoded daemon response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Query results: `(gid, distance)` pairs. ε-queries report them in
+    /// traversal order; k-NN ascending by `(distance, id)`.
+    Hits { id: u64, hits: Vec<(u32, f64)> },
+    /// Typed rejection (see [`ErrorCode`]).
+    Error { id: u64, code: ErrorCode },
+    /// Shutdown acknowledged; the daemon drains and exits.
+    Bye { id: u64 },
+}
+
+impl Response {
+    /// Encode as a frame payload (owned-enum convenience; the daemon's hot
+    /// path uses the `encode_*_into` borrow-encoders).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Response::Hits { id, hits } => encode_hits_into(&mut buf, *id, hits),
+            Response::Error { id, code } => encode_error_into(&mut buf, *id, *code),
+            Response::Bye { id } => encode_bye_into(&mut buf, *id),
+        }
+        buf
+    }
+
+    /// Length-checked decode of a frame payload. Hit distances must be
+    /// finite and non-negative (a flipped sign/exponent bit is a typed
+    /// error, not a silently wrong answer).
+    pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
+        let mut off = 0usize;
+        let op = try_take(bytes, &mut off, 1, "response opcode")?[0];
+        let id = try_get_u64(bytes, &mut off, "response id")?;
+        let resp = match op {
+            RESP_HITS => {
+                let n = try_get_u64(bytes, &mut off, "response hit count")? as usize;
+                let body = try_take(bytes, &mut off, n.saturating_mul(12), "response hits")?;
+                let mut hits = Vec::with_capacity(n);
+                for rec in body.chunks_exact(12) {
+                    let gid = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+                    let dist = f64::from_bits(u64::from_le_bytes(rec[4..12].try_into().unwrap()));
+                    if !dist.is_finite() || dist < 0.0 {
+                        return Err(WireError::Corrupt { what: "response hit not a distance" });
+                    }
+                    hits.push((gid, dist));
+                }
+                Response::Hits { id, hits }
+            }
+            RESP_ERROR => {
+                let c = try_take(bytes, &mut off, 1, "response error code")?[0];
+                let code = ErrorCode::from_code(c)
+                    .ok_or(WireError::Corrupt { what: "unknown response error code" })?;
+                Response::Error { id, code }
+            }
+            RESP_BYE => Response::Bye { id },
+            _ => return Err(WireError::Corrupt { what: "unknown response opcode" }),
+        };
+        if off != bytes.len() {
+            return Err(WireError::Corrupt { what: "trailing bytes after response" });
+        }
+        Ok(resp)
+    }
+}
+
+/// Encode a hits response into `buf` (cleared first) — borrows the pair
+/// slice straight out of the engine's batch output, so the daemon's reply
+/// path allocates nothing once `buf` is warmed.
+pub fn encode_hits_into(buf: &mut Vec<u8>, id: u64, hits: &[(u32, f64)]) {
+    buf.clear();
+    buf.push(RESP_HITS);
+    put_u64(buf, id);
+    put_u64(buf, hits.len() as u64);
+    for &(gid, d) in hits {
+        buf.extend_from_slice(&gid.to_le_bytes());
+        buf.extend_from_slice(&d.to_bits().to_le_bytes());
+    }
+}
+
+/// Encode a typed error response into `buf` (cleared first).
+pub fn encode_error_into(buf: &mut Vec<u8>, id: u64, code: ErrorCode) {
+    buf.clear();
+    buf.push(RESP_ERROR);
+    put_u64(buf, id);
+    buf.push(code.code());
+}
+
+/// Encode a shutdown acknowledgement into `buf` (cleared first).
+pub fn encode_bye_into(buf: &mut Vec<u8>, id: u64) {
+    buf.clear();
+    buf.push(RESP_BYE);
+    put_u64(buf, id);
+}
+
+/// Outcome of one [`read_frame`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameRead {
+    /// A complete frame payload now fills the buffer.
+    Frame,
+    /// The read timed out with **zero** bytes consumed — the connection is
+    /// idle at a frame boundary; safe to poll a shutdown flag and retry.
+    Idle,
+    /// Clean end-of-stream at a frame boundary.
+    Eof,
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.len() as u64 > MAX_FRAME {
+        return Err(io::Error::new(ErrorKind::InvalidInput, "frame payload exceeds MAX_FRAME"));
+    }
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame into `buf` (cleared and resized in place, so a warmed
+/// buffer is reused allocation-free).
+///
+/// Timeout reads (`WouldBlock`/`TimedOut` from a socket with a read
+/// timeout) return [`FrameRead::Idle`] only while nothing of the next
+/// frame has been consumed; once a frame has started, the read is retried
+/// until the frame completes or `abort()` turns true (then
+/// `ErrorKind::TimedOut`), so a frame is never split across calls. A
+/// length prefix above [`MAX_FRAME`] is `ErrorKind::InvalidData` before
+/// any buffer growth.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    abort: &dyn Fn() -> bool,
+) -> io::Result<FrameRead> {
+    let mut header = [0u8; 8];
+    let mut have = 0usize;
+    while have < 8 {
+        match r.read(&mut header[have..]) {
+            Ok(0) => {
+                return if have == 0 {
+                    Ok(FrameRead::Eof)
+                } else {
+                    Err(io::Error::new(ErrorKind::UnexpectedEof, "eof inside frame header"))
+                };
+            }
+            Ok(n) => have += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if have == 0 {
+                    return Ok(FrameRead::Idle);
+                }
+                if abort() {
+                    return Err(io::Error::new(ErrorKind::TimedOut, "aborted inside frame header"));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u64::from_le_bytes(header);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(ErrorKind::InvalidData, "frame length exceeds MAX_FRAME"));
+    }
+    buf.clear();
+    buf.resize(len as usize, 0);
+    let mut have = 0usize;
+    while have < buf.len() {
+        match r.read(&mut buf[have..]) {
+            Ok(0) => {
+                return Err(io::Error::new(ErrorKind::UnexpectedEof, "eof inside frame body"))
+            }
+            Ok(n) => have += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if abort() {
+                    return Err(io::Error::new(ErrorKind::TimedOut, "aborted inside frame body"));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(FrameRead::Frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::points::{DenseMatrix, HammingCodes, StringSet};
+    use std::io::Cursor;
+
+    fn one_dense() -> DenseMatrix {
+        DenseMatrix::from_flat(3, vec![1.0, -2.0, 0.5])
+    }
+
+    #[test]
+    fn request_roundtrips_every_variant() {
+        let reqs = [
+            Request::Eps { id: 7, eps: 0.25, point: one_dense() },
+            Request::Knn { id: u64::MAX, k: 12, point: one_dense() },
+            Request::Shutdown { id: 3 },
+        ];
+        for r in reqs {
+            let b = r.to_bytes();
+            assert_eq!(Request::<DenseMatrix>::try_from_bytes(&b), Ok(r.clone()));
+            assert_eq!(
+                peek_request_id(&b),
+                match r {
+                    Request::Eps { id, .. } | Request::Knn { id, .. } | Request::Shutdown { id } =>
+                        id,
+                }
+            );
+        }
+    }
+
+    #[test]
+    fn request_roundtrips_hamming_and_strings() {
+        let mut h = HammingCodes::new(96);
+        h.push_bits(&(0..96).map(|i| i % 3 == 0).collect::<Vec<_>>());
+        let r = Request::Eps { id: 1, eps: 4.0, point: h };
+        let b = r.to_bytes();
+        assert_eq!(Request::<HammingCodes>::try_from_bytes(&b), Ok(r));
+
+        let s = StringSet::from_strs(&["ACGT"]);
+        let r = Request::Knn { id: 2, k: 3, point: s };
+        let b = r.to_bytes();
+        assert_eq!(Request::<StringSet>::try_from_bytes(&b), Ok(r));
+    }
+
+    #[test]
+    fn request_rejects_bad_eps_k_and_multipoint() {
+        let bad_eps = Request::Eps { id: 1, eps: f64::NAN, point: one_dense() }.to_bytes();
+        assert!(Request::<DenseMatrix>::try_from_bytes(&bad_eps).is_err());
+        let neg = Request::Eps { id: 1, eps: -1.0, point: one_dense() }.to_bytes();
+        assert!(Request::<DenseMatrix>::try_from_bytes(&neg).is_err());
+        let k0 = Request::Knn { id: 1, k: 0, point: one_dense() }.to_bytes();
+        assert!(Request::<DenseMatrix>::try_from_bytes(&k0).is_err());
+        let two = DenseMatrix::from_flat(2, vec![0.0, 1.0, 2.0, 3.0]);
+        let multi = Request::Eps { id: 1, eps: 0.5, point: two }.to_bytes();
+        assert_eq!(
+            Request::<DenseMatrix>::try_from_bytes(&multi),
+            Err(WireError::Corrupt { what: "request must carry exactly one point" })
+        );
+    }
+
+    #[test]
+    fn response_roundtrips_every_variant() {
+        let resps = [
+            Response::Hits { id: 9, hits: vec![(3, 0.125), (8, 2.0)] },
+            Response::Hits { id: 10, hits: vec![] },
+            Response::Error { id: 11, code: ErrorCode::Overloaded },
+            Response::Bye { id: 12 },
+        ];
+        for r in resps {
+            assert_eq!(Response::try_from_bytes(&r.to_bytes()), Ok(r.clone()));
+        }
+        for code in
+            [ErrorCode::BadFrame, ErrorCode::BadQuery, ErrorCode::Overloaded, ErrorCode::ShuttingDown]
+        {
+            let r = Response::Error { id: 1, code };
+            assert_eq!(Response::try_from_bytes(&r.to_bytes()), Ok(r));
+            assert!(!code.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn response_rejects_nan_distance() {
+        let r = Response::Hits { id: 1, hits: vec![(0, f64::NAN)] };
+        assert_eq!(
+            Response::try_from_bytes(&r.to_bytes()),
+            Err(WireError::Corrupt { what: "response hit not a distance" })
+        );
+    }
+
+    #[test]
+    fn borrow_encoders_match_owned_encoding() {
+        let hits = vec![(1u32, 0.5f64), (2, 1.5)];
+        let mut buf = vec![0xAAu8; 3]; // stale content must be cleared
+        encode_hits_into(&mut buf, 4, &hits);
+        assert_eq!(buf, Response::Hits { id: 4, hits }.to_bytes());
+        encode_error_into(&mut buf, 5, ErrorCode::BadQuery);
+        assert_eq!(buf, Response::Error { id: 5, code: ErrorCode::BadQuery }.to_bytes());
+        encode_bye_into(&mut buf, 6);
+        assert_eq!(buf, Response::Bye { id: 6 }.to_bytes());
+    }
+
+    #[test]
+    fn frames_roundtrip_and_cap_is_enforced() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = Cursor::new(wire);
+        let mut buf = Vec::new();
+        assert_eq!(read_frame(&mut r, &mut buf, &|| false).unwrap(), FrameRead::Frame);
+        assert_eq!(buf, b"hello");
+        assert_eq!(read_frame(&mut r, &mut buf, &|| false).unwrap(), FrameRead::Frame);
+        assert!(buf.is_empty());
+        assert_eq!(read_frame(&mut r, &mut buf, &|| false).unwrap(), FrameRead::Eof);
+
+        // A poisoned length prefix errors before any allocation.
+        let mut huge = Cursor::new(u64::MAX.to_le_bytes().to_vec());
+        let err = read_frame(&mut huge, &mut buf, &|| false).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+        // Truncated body is an error, not a short read.
+        let mut trunc = Vec::new();
+        write_frame(&mut trunc, b"abcdef").unwrap();
+        trunc.truncate(trunc.len() - 2);
+        let err = read_frame(&mut Cursor::new(trunc), &mut buf, &|| false).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
+    }
+}

@@ -1,0 +1,344 @@
+//! The TCP daemon: listener, per-connection readers, and the one batch
+//! dispatcher (DESIGN.md §10.4).
+//!
+//! Thread shape — all `std`, nothing detached:
+//!
+//! * **control** — owns the listener; accepts connections and spawns one
+//!   reader per connection; after shutdown it joins every reader, closes
+//!   the coalescer, and joins the dispatcher.
+//! * **readers** (one per connection) — decode request frames, admit
+//!   queries into the [`Coalescer`], and answer protocol errors/overload
+//!   with typed replies on the spot. Reads poll with a short timeout so a
+//!   quiet connection notices shutdown promptly.
+//! * **dispatcher** (exactly one) — loops [`Coalescer::next_batch`] →
+//!   [`ServeEngine::execute`] → reply per ticket, using double-buffered
+//!   batch/output/reply buffers so the warmed loop allocates nothing.
+//!
+//! Shutdown (client `Shutdown` frame or [`Server::shutdown`]): the flag
+//! flips, the accept loop is woken by a self-connection, readers finish
+//! their current frame and exit, the coalescer closes, and the dispatcher
+//! drains every admitted query before exiting — an admitted query always
+//! gets its reply, and late frames get the typed `shutting-down` error.
+//! Replies are written under a per-connection mutex, so a reply is never
+//! torn mid-frame.
+
+use super::coalesce::{Admit, CoalesceParams, Coalescer, PendingBatch, ReplySink, Ticket};
+use super::engine::{BatchOutput, QueryOp, ServeEngine};
+use super::protocol::{self, ErrorCode, FrameRead, Request};
+use super::{ServeConfig, ServeError};
+use crate::index::NearIndex;
+use crate::metric::Metric;
+use crate::points::PointSet;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often an idle reader wakes to poll the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(25);
+
+#[derive(Debug, Default)]
+struct Stats {
+    queries: AtomicU64,
+    batches: AtomicU64,
+    overloads: AtomicU64,
+    bad_frames: AtomicU64,
+    connections: AtomicU64,
+    max_batch: AtomicU64,
+}
+
+/// Counters observed over a daemon's lifetime (or so far, via
+/// [`Server::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Queries answered through the batch path.
+    pub queries: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Typed overload replies sent.
+    pub overloads: u64,
+    /// Frames that failed to decode (answered with `bad-frame`).
+    pub bad_frames: u64,
+    /// Connections accepted.
+    pub connections: u64,
+    /// Largest batch dispatched.
+    pub max_batch: u64,
+}
+
+impl StatsSnapshot {
+    /// Mean queries per dispatched batch (0 when nothing ran) — the
+    /// direct measure of how much the window actually coalesced.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.queries as f64 / self.batches as f64
+        }
+    }
+}
+
+impl Stats {
+    fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            queries: self.queries.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            overloads: self.overloads.load(Ordering::Relaxed),
+            bad_frames: self.bad_frames.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A client connection's reply side: framed writes under a mutex so the
+/// dispatcher and the connection's reader never interleave bytes.
+struct Outbox {
+    stream: Mutex<TcpStream>,
+}
+
+impl ReplySink for Outbox {
+    fn send(&self, payload: &[u8]) {
+        let mut s = self.stream.lock().unwrap();
+        // A vanished client makes the write fail; the reader sees EOF and
+        // cleans the connection up — nothing to do here.
+        let _ = protocol::write_frame(&mut *s, payload);
+    }
+}
+
+/// A running daemon. Dropping the handle shuts it down and joins every
+/// thread (no detached threads survive the handle).
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<Stats>,
+    control: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Request shutdown without waiting (idempotent).
+    pub fn shutdown(&self) {
+        request_shutdown(&self.shutdown, self.addr);
+    }
+
+    /// Wait until the daemon has fully exited (all threads joined) and
+    /// return the final counters. Does **not** request shutdown itself —
+    /// use this after a client sent the shutdown frame.
+    pub fn join(mut self) -> StatsSnapshot {
+        if let Some(h) = self.control.take() {
+            let _ = h.join();
+        }
+        self.stats.snapshot()
+    }
+
+    /// [`Server::shutdown`] then [`Server::join`].
+    pub fn shutdown_and_join(self) -> StatsSnapshot {
+        self.shutdown();
+        self.join()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(h) = self.control.take() {
+            request_shutdown(&self.shutdown, self.addr);
+            let _ = h.join();
+        }
+    }
+}
+
+fn request_shutdown(flag: &AtomicBool, addr: SocketAddr) {
+    flag.store(true, Ordering::SeqCst);
+    // Wake the blocking accept with a throwaway self-connection.
+    let _ = TcpStream::connect(addr);
+}
+
+/// Start serving `index` per `cfg`. Binds immediately (so `:0` callers can
+/// read the ephemeral port from [`Server::local_addr`]) and returns; the
+/// daemon runs on background threads until a shutdown frame arrives or
+/// [`Server::shutdown`] is called.
+pub fn serve<P: PointSet, M: Metric<P>>(
+    index: Box<dyn NearIndex<P, M>>,
+    cfg: &ServeConfig,
+) -> Result<Server, ServeError> {
+    let addr: SocketAddr = cfg
+        .addr
+        .parse()
+        .map_err(|_| ServeError::BadAddr { addr: cfg.addr.clone() })?;
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| ServeError::Bind { addr: cfg.addr.clone(), error: e.to_string() })?;
+    let addr = listener.local_addr().map_err(|e| ServeError::Bind {
+        addr: cfg.addr.clone(),
+        error: e.to_string(),
+    })?;
+
+    let engine = Arc::new(ServeEngine::new(index, cfg.threads));
+    let coalescer = Arc::new(Coalescer::new(
+        engine.index().points(),
+        CoalesceParams {
+            window: Duration::from_micros(cfg.coalesce_us),
+            max_batch: cfg.max_batch,
+            queue_cap: cfg.queue_cap,
+        },
+    ));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(Stats::default());
+
+    let dispatcher = {
+        let engine = engine.clone();
+        let coalescer = coalescer.clone();
+        let stats = stats.clone();
+        std::thread::spawn(move || dispatch_loop(&engine, &coalescer, &stats))
+    };
+
+    let control = {
+        let shutdown = shutdown.clone();
+        let stats = stats.clone();
+        std::thread::spawn(move || {
+            let mut readers: Vec<JoinHandle<()>> = Vec::new();
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        stats.connections.fetch_add(1, Ordering::Relaxed);
+                        let engine = engine.clone();
+                        let coalescer = coalescer.clone();
+                        let shutdown = shutdown.clone();
+                        let stats = stats.clone();
+                        readers.push(std::thread::spawn(move || {
+                            reader_loop(stream, addr, &engine, &coalescer, &shutdown, &stats)
+                        }));
+                    }
+                    Err(_) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                }
+            }
+            for h in readers {
+                let _ = h.join();
+            }
+            // No reader can admit anymore; drain what remains.
+            coalescer.close();
+            let _ = dispatcher.join();
+        })
+    };
+
+    Ok(Server { addr, shutdown, stats, control: Some(control) })
+}
+
+fn dispatch_loop<P: PointSet, M: Metric<P>>(
+    engine: &ServeEngine<P, M>,
+    coalescer: &Coalescer<P>,
+    stats: &Stats,
+) {
+    let mut work = PendingBatch::new_like(engine.index().points());
+    let mut out = BatchOutput::new();
+    let mut reply = Vec::new();
+    while coalescer.next_batch(&mut work) {
+        engine.execute(&work.batch, &mut out);
+        for (q, ticket) in work.tickets.iter().enumerate() {
+            protocol::encode_hits_into(&mut reply, ticket.id, out.hits_of(q));
+            ticket.sink.send(&reply);
+        }
+        let n = work.len() as u64;
+        stats.queries.fetch_add(n, Ordering::Relaxed);
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.max_batch.fetch_max(n, Ordering::Relaxed);
+        work.clear();
+    }
+}
+
+fn reader_loop<P: PointSet, M: Metric<P>>(
+    stream: TcpStream,
+    addr: SocketAddr,
+    engine: &ServeEngine<P, M>,
+    coalescer: &Coalescer<P>,
+    shutdown: &Arc<AtomicBool>,
+    stats: &Stats,
+) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_nodelay(true);
+    let outbox: Arc<dyn ReplySink> = match stream.try_clone() {
+        Ok(write_half) => Arc::new(Outbox { stream: Mutex::new(write_half) }),
+        Err(_) => return,
+    };
+    let mut stream = stream;
+    let mut frame = Vec::new();
+    let mut reply = Vec::new();
+    // A started frame is read to completion under normal operation, but a
+    // client that stalls mid-frame must not pin the reader past shutdown.
+    let abort = || shutdown.load(Ordering::SeqCst);
+    loop {
+        match protocol::read_frame(&mut stream, &mut frame, &abort) {
+            Ok(FrameRead::Eof) | Err(_) => break,
+            Ok(FrameRead::Idle) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Ok(FrameRead::Frame) => {
+                handle_frame(&frame, &outbox, addr, engine, coalescer, shutdown, stats, &mut reply)
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_frame<P: PointSet, M: Metric<P>>(
+    frame: &[u8],
+    outbox: &Arc<dyn ReplySink>,
+    addr: SocketAddr,
+    engine: &ServeEngine<P, M>,
+    coalescer: &Coalescer<P>,
+    shutdown: &Arc<AtomicBool>,
+    stats: &Stats,
+    reply: &mut Vec<u8>,
+) {
+    let (id, point, op) = match Request::<P>::try_from_bytes(frame) {
+        Err(_) => {
+            stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+            protocol::encode_error_into(reply, protocol::peek_request_id(frame), ErrorCode::BadFrame);
+            outbox.send(reply);
+            return;
+        }
+        Ok(Request::Shutdown { id }) => {
+            protocol::encode_bye_into(reply, id);
+            outbox.send(reply);
+            request_shutdown(shutdown, addr);
+            return;
+        }
+        Ok(Request::Eps { id, eps, point }) => (id, point, QueryOp::Eps(eps)),
+        Ok(Request::Knn { id, k, point }) => (id, point, QueryOp::Knn(k)),
+    };
+    if !engine.shape_ok(&point) {
+        protocol::encode_error_into(reply, id, ErrorCode::BadQuery);
+        outbox.send(reply);
+        return;
+    }
+    match coalescer.submit(&point, op, Ticket { sink: outbox.clone(), id }) {
+        Admit::Accepted => {}
+        Admit::Overloaded => {
+            stats.overloads.fetch_add(1, Ordering::Relaxed);
+            protocol::encode_error_into(reply, id, ErrorCode::Overloaded);
+            outbox.send(reply);
+        }
+        Admit::Closed => {
+            protocol::encode_error_into(reply, id, ErrorCode::ShuttingDown);
+            outbox.send(reply);
+        }
+    }
+}

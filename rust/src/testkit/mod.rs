@@ -9,9 +9,12 @@
 //!   one scenario vocabulary instead of ad-hoc generator parameter copies;
 //! * [`wire`] — the byte-mutation harness every length-checked wire
 //!   decoder is held to (truncate/extend must error, bit flips must never
-//!   panic).
+//!   panic);
+//! * [`serve_sim`] — concurrent simulated clients for the serve daemon
+//!   (scripted pipelined query plans with latency capture).
 
 pub mod scenario;
+pub mod serve_sim;
 pub mod wire;
 
 use crate::metric::Metric;

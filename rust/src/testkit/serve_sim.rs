@@ -1,0 +1,135 @@
+//! Simulated-client harness for the serve daemon: N concurrent pipelining
+//! clients replaying scripted query plans against a live listener, with
+//! per-query latency capture. The soak suite (`tests/serve_soak.rs`), the
+//! CLI smoke job and the perf driver's serve section all drive the daemon
+//! through this one harness.
+
+use crate::points::PointSet;
+use crate::serve::{Client, Response};
+use std::io;
+use std::time::{Duration, Instant};
+
+/// One scripted query: an index into the shared query point set plus the
+/// operation.
+#[derive(Clone, Copy, Debug)]
+pub enum SimQuery {
+    Eps { point: usize, eps: f64 },
+    Knn { point: usize, k: usize },
+}
+
+/// One client's script: its queries in send order and how many it keeps
+/// in flight (`pipeline` ≥ 1; 1 = strict request/response lockstep).
+#[derive(Clone, Debug)]
+pub struct ClientPlan {
+    pub queries: Vec<SimQuery>,
+    pub pipeline: usize,
+}
+
+/// One reply, matched back to its plan position.
+#[derive(Clone, Debug)]
+pub struct SimReply {
+    /// Index into the plan's `queries`.
+    pub seq: u32,
+    pub response: Response,
+    /// Send→receive wall latency in microseconds.
+    pub micros: u64,
+}
+
+/// Everything one client observed, replies sorted by plan position.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub replies: Vec<SimReply>,
+}
+
+/// Run every plan on its own thread against the daemon at `addr`; query
+/// points come from the shared `pts` (plans index into it). Request ids
+/// encode `(client << 32) | seq`, so replies can arrive in any order and
+/// still land on the right plan slot. Returns one report per plan, in
+/// plan order.
+pub fn run_clients<P: PointSet>(
+    addr: &str,
+    pts: &P,
+    plans: &[ClientPlan],
+) -> io::Result<Vec<SimReport>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = plans
+            .iter()
+            .enumerate()
+            .map(|(c, plan)| s.spawn(move || run_one(addr, pts, c as u64, plan)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sim client panicked")).collect()
+    })
+}
+
+fn run_one<P: PointSet>(
+    addr: &str,
+    pts: &P,
+    client: u64,
+    plan: &ClientPlan,
+) -> io::Result<SimReport> {
+    let mut cl = Client::connect_retry(addr, 40, Duration::from_millis(25))?;
+    let total = plan.queries.len();
+    let depth = plan.pipeline.max(1);
+    let mut sent_at: Vec<Option<Instant>> = vec![None; total];
+    let mut replies = Vec::with_capacity(total);
+    let (mut next, mut outstanding) = (0usize, 0usize);
+    while replies.len() < total {
+        while next < total && outstanding < depth {
+            let id = (client << 32) | next as u64;
+            match plan.queries[next] {
+                SimQuery::Eps { point, eps } => {
+                    cl.send_eps(id, &pts.slice(point, point + 1), eps)?
+                }
+                SimQuery::Knn { point, k } => cl.send_knn(id, &pts.slice(point, point + 1), k)?,
+            }
+            sent_at[next] = Some(Instant::now());
+            next += 1;
+            outstanding += 1;
+        }
+        let response = cl.recv()?;
+        let now = Instant::now();
+        let id = match &response {
+            Response::Hits { id, .. } | Response::Error { id, .. } | Response::Bye { id } => *id,
+        };
+        assert_eq!(id >> 32, client, "reply routed to the wrong client");
+        let seq = (id & u32::MAX as u64) as usize;
+        let micros = sent_at[seq]
+            .map(|t| now.duration_since(t).as_micros() as u64)
+            .expect("reply for a query never sent");
+        replies.push(SimReply { seq: seq as u32, response, micros });
+        outstanding -= 1;
+    }
+    replies.sort_by_key(|r| r.seq);
+    Ok(SimReport { replies })
+}
+
+/// All latencies across reports, ascending — percentile input.
+pub fn latencies_sorted(reports: &[SimReport]) -> Vec<u64> {
+    let mut all: Vec<u64> =
+        reports.iter().flat_map(|r| r.replies.iter().map(|x| x.micros)).collect();
+    all.sort_unstable();
+    all
+}
+
+/// Percentile (0.0 ..= 1.0) of an ascending latency slice (0 when empty).
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_picks_expected_ranks() {
+        let v = vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 0.5), 6);
+        assert_eq!(percentile(&v, 1.0), 10);
+        assert_eq!(percentile(&[], 0.5), 0);
+    }
+}

@@ -1,0 +1,263 @@
+//! Soak suite for the serve daemon: concurrent pipelining clients firing
+//! interleaved ε/k-NN queries over seeded scenario datasets, with every
+//! reply held **bit-equal** to a brute-force oracle — regardless of how
+//! the coalescer happened to cut batches. Also: overload produces the
+//! typed reply (never OOM, never a dropped connection mid-reply), and
+//! shutdown drains every admitted query before the daemon exits.
+
+use neargraph::index::{build_index, IndexKind, IndexParams, NearIndex};
+use neargraph::metric::{Euclidean, Hamming, Metric};
+use neargraph::points::PointSet;
+use neargraph::serve::{serve, Client, ErrorCode, Response, ServeConfig};
+use neargraph::testkit::scenario;
+use neargraph::testkit::serve_sim::{run_clients, ClientPlan, SimQuery};
+use neargraph::util::Rng;
+
+fn ephemeral(cfg: ServeConfig) -> ServeConfig {
+    ServeConfig { addr: "127.0.0.1:0".into(), ..cfg }
+}
+
+fn bits(pairs: &[(u32, f64)]) -> Vec<(u32, u64)> {
+    pairs.iter().map(|&(g, d)| (g, d.to_bits())).collect()
+}
+
+/// id-sorted bit view (ε replies arrive in daemon traversal order; the
+/// oracle emits id order — the multiset must match exactly).
+fn sorted_bits(pairs: &[(u32, f64)]) -> Vec<(u32, u64)> {
+    let mut v = bits(pairs);
+    v.sort_unstable();
+    v
+}
+
+/// Interleaved ε/k-NN plans over `pts`, seeded per client.
+fn mixed_plans(
+    seed: u64,
+    clients: usize,
+    queries_per_client: usize,
+    n_points: usize,
+    eps: f64,
+    k: usize,
+    pipeline: usize,
+) -> Vec<ClientPlan> {
+    (0..clients)
+        .map(|c| {
+            let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let queries = (0..queries_per_client)
+                .map(|_| {
+                    let point = rng.below(n_points);
+                    if rng.below(2) == 0 {
+                        SimQuery::Eps { point, eps }
+                    } else {
+                        SimQuery::Knn { point, k }
+                    }
+                })
+                .collect();
+            ClientPlan { queries, pipeline }
+        })
+        .collect()
+}
+
+/// Check every reply in `reports` against the brute-force oracle.
+fn assert_oracle_equal<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    plans: &[ClientPlan],
+    reports: &[neargraph::testkit::serve_sim::SimReport],
+) {
+    let oracle =
+        build_index(IndexKind::BruteForce, pts, metric, &IndexParams::default()).unwrap();
+    let mut want = Vec::new();
+    for (c, (plan, report)) in plans.iter().zip(reports).enumerate() {
+        assert_eq!(report.replies.len(), plan.queries.len(), "client {c} lost replies");
+        for (r, q) in report.replies.iter().zip(&plan.queries) {
+            let Response::Hits { hits, .. } = &r.response else {
+                panic!("client {c} query {} got {:?}", r.seq, r.response);
+            };
+            match *q {
+                SimQuery::Eps { point, eps } => {
+                    want.clear();
+                    oracle.eps_query(pts.point(point), eps, &mut want);
+                    assert_eq!(
+                        sorted_bits(hits),
+                        sorted_bits(&want),
+                        "client {c} eps query {} diverged",
+                        r.seq
+                    );
+                }
+                SimQuery::Knn { point, k } => {
+                    want.clear();
+                    want.extend(oracle.knn(pts.point(point), k));
+                    assert_eq!(bits(hits), bits(&want), "client {c} knn query {} diverged", r.seq);
+                }
+            }
+        }
+    }
+}
+
+fn soak<P: PointSet, M: Metric<P>>(pts: P, metric: M, eps: f64, k: usize, cfg: ServeConfig) {
+    let index =
+        build_index(IndexKind::CoverTree, &pts, metric.clone(), &IndexParams::default()).unwrap();
+    let server = serve(index, &ephemeral(cfg)).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let plans = mixed_plans(0x50AC, 8, 400, pts.len(), eps, k, 16);
+    let reports = run_clients(&addr, &pts, &plans).unwrap();
+    assert_oracle_equal(&pts, metric, &plans, &reports);
+
+    let stats = server.shutdown_and_join();
+    assert_eq!(stats.queries, 8 * 400, "every admitted query answered through the batch path");
+    assert_eq!(stats.overloads, 0, "default queue cap must not overload this load");
+}
+
+#[test]
+fn dense_soak_concurrent_clients_match_oracle() {
+    soak(
+        scenario::dense_clusters(11, 600),
+        Euclidean,
+        0.9,
+        6,
+        ServeConfig { coalesce_us: 150, max_batch: 64, threads: 4, ..Default::default() },
+    );
+}
+
+#[test]
+fn hamming_soak_concurrent_clients_match_oracle() {
+    soak(
+        scenario::hamming_codes(23, 400),
+        Hamming,
+        20.0,
+        5,
+        ServeConfig { coalesce_us: 80, max_batch: 32, threads: 2, ..Default::default() },
+    );
+}
+
+#[test]
+fn answers_are_window_invariant() {
+    // The same scripted load under no coalescing, a tiny window and a huge
+    // batch-hungry window must produce identical reply bytes per query —
+    // batch boundaries are invisible in the answers.
+    let pts = scenario::dense_manifold(5, 300);
+    let plans = mixed_plans(77, 4, 120, pts.len(), 0.7, 4, 8);
+    let mut per_window = Vec::new();
+    for (coalesce_us, max_batch) in [(0u64, 1usize), (200, 64), (4_000, 512)] {
+        let index =
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let server = serve(
+            index,
+            &ephemeral(ServeConfig { coalesce_us, max_batch, threads: 3, ..Default::default() }),
+        )
+        .unwrap();
+        let reports = run_clients(&server.local_addr().to_string(), &pts, &plans).unwrap();
+        let digest: Vec<Vec<(u32, u64)>> = reports
+            .iter()
+            .flat_map(|rep| {
+                rep.replies.iter().map(|r| match &r.response {
+                    Response::Hits { hits, .. } => sorted_bits(hits),
+                    other => panic!("unexpected reply {other:?}"),
+                })
+            })
+            .collect();
+        per_window.push(digest);
+        server.shutdown_and_join();
+    }
+    assert_eq!(per_window[0], per_window[1], "window 0 vs 200us diverged");
+    assert_eq!(per_window[0], per_window[2], "window 0 vs 4ms diverged");
+}
+
+#[test]
+fn overload_is_typed_and_connection_survives() {
+    // A tiny queue over a deliberately slow backend (brute force, 20k
+    // points, one lane) forces overload — the reader outpaces the
+    // dispatcher — and every query still gets exactly one reply (hits or
+    // the typed overload error) on a connection that stays usable after.
+    let pts = scenario::dense_uniform(3, 20_000);
+    let index =
+        build_index(IndexKind::BruteForce, &pts, Euclidean, &IndexParams::default()).unwrap();
+    let server = serve(
+        index,
+        &ephemeral(ServeConfig {
+            coalesce_us: 1_000_000,
+            max_batch: 4,
+            queue_cap: 4,
+            threads: 1,
+            ..Default::default()
+        }),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let total = 64usize;
+    let mut client = Client::connect(&addr).unwrap();
+    for i in 0..total {
+        client.send_eps(i as u64, &pts.slice(i % pts.len(), i % pts.len() + 1), 0.5).unwrap();
+    }
+    let mut answered = vec![false; total];
+    let mut overloaded = 0usize;
+    for _ in 0..total {
+        match client.recv().unwrap() {
+            Response::Hits { id, .. } => {
+                assert!(!std::mem::replace(&mut answered[id as usize], true), "double reply {id}");
+            }
+            Response::Error { id, code } => {
+                assert_eq!(code, ErrorCode::Overloaded, "unexpected error for {id}");
+                assert!(!std::mem::replace(&mut answered[id as usize], true), "double reply {id}");
+                overloaded += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(answered.iter().all(|&a| a), "every query got exactly one reply");
+    assert!(overloaded > 0, "the tiny queue must overload under this burst");
+
+    // The connection is still usable after overload replies.
+    client.send_knn(9_999, &pts.slice(0, 1), 3).unwrap();
+    match client.recv().unwrap() {
+        Response::Hits { id, hits } => assert_eq!((id, hits.len()), (9_999, 3)),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let stats = server.shutdown_and_join();
+    assert_eq!(stats.overloads as usize, overloaded);
+}
+
+#[test]
+fn shutdown_drains_in_flight_replies() {
+    // Queries admitted before the shutdown frame must all be answered —
+    // the huge window would otherwise sit on them for a second.
+    let pts = scenario::dense_uniform(13, 150);
+    let index =
+        build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+    let server = serve(
+        index,
+        &ephemeral(ServeConfig {
+            coalesce_us: 1_000_000,
+            max_batch: 1024,
+            threads: 2,
+            ..Default::default()
+        }),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let sent = 20usize;
+    for i in 0..sent {
+        client.send_eps(i as u64, &pts.slice(i, i + 1), 0.4).unwrap();
+    }
+    // Give the reader time to admit all 20 before shutdown closes the
+    // queue — admitted queries are what the drain guarantee covers.
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let mut other = Client::connect(&addr).unwrap();
+    other.send_shutdown(500).unwrap();
+    assert_eq!(other.recv().unwrap(), Response::Bye { id: 500 });
+
+    let mut got = 0usize;
+    for _ in 0..sent {
+        match client.recv().unwrap() {
+            Response::Hits { .. } => got += 1,
+            other => panic!("in-flight query lost to shutdown: {other:?}"),
+        }
+    }
+    assert_eq!(got, sent, "all admitted queries answered during drain");
+    let stats = server.join();
+    assert_eq!(stats.queries as usize, sent);
+}

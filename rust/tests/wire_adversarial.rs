@@ -6,12 +6,15 @@
 //!
 //! Covered formats: `Bundle` (dense / Hamming / string payloads),
 //! `EdgeBundle`, `KnnBundle` (all three wire shapes), `WeightedEdgeList`,
-//! the `NGW-CSR1` weighted graph file and the `NGK-KNN1` directed k-NN
-//! file.
+//! the `NGW-CSR1` weighted graph file, the `NGK-KNN1` directed k-NN
+//! file, the serve daemon's request/response frames and the `NGI-IDX1`
+//! index snapshot (all three point families).
 
+use neargraph::covertree::BuildParams;
 use neargraph::dist::{Bundle, EdgeBundle, KnnBundle};
 use neargraph::graph::{KnnGraph, NearGraph, WeightedEdgeList};
 use neargraph::prelude::*;
+use neargraph::serve::{ErrorCode, Request, Response};
 use neargraph::testkit::{scenario, wire};
 
 #[test]
@@ -108,5 +111,101 @@ fn knn_bundle_mutations() {
     let b = KnnBundle::from_rows(1, pts, (0..5).collect(), Vec::new(), caps, &rows);
     wire::check_wire_decoder("knn-bundle", &b.to_bytes(), &|bytes| {
         KnnBundle::<DenseMatrix>::try_from_bytes(bytes)
+    });
+}
+
+// ---- serve daemon frames (DESIGN.md §10.1) -------------------------------
+
+#[test]
+fn serve_request_dense_mutations() {
+    let pts = scenario::dense_clusters(8607, 4);
+    let one = pts.slice(2, 3);
+    let eps = Request::Eps { id: 0xDEAD_BEEF, eps: 0.75, point: one.clone() };
+    wire::check_wire_decoder("serve/req-eps-dense", &eps.to_bytes(), &|bytes| {
+        Request::<DenseMatrix>::try_from_bytes(bytes)
+    });
+    let knn = Request::Knn { id: 7, k: 5, point: one };
+    wire::check_wire_decoder("serve/req-knn-dense", &knn.to_bytes(), &|bytes| {
+        Request::<DenseMatrix>::try_from_bytes(bytes)
+    });
+    let bye = Request::<DenseMatrix>::Shutdown { id: u64::MAX };
+    wire::check_wire_decoder("serve/req-shutdown", &bye.to_bytes(), &|bytes| {
+        Request::<DenseMatrix>::try_from_bytes(bytes)
+    });
+}
+
+#[test]
+fn serve_request_hamming_mutations() {
+    let codes = scenario::hamming_codes(8608, 3);
+    let one = codes.slice(1, 2);
+    let eps = Request::Eps { id: 11, eps: 16.0, point: one.clone() };
+    wire::check_wire_decoder("serve/req-eps-hamming", &eps.to_bytes(), &|bytes| {
+        Request::<HammingCodes>::try_from_bytes(bytes)
+    });
+    let knn = Request::Knn { id: 12, k: 2, point: one };
+    wire::check_wire_decoder("serve/req-knn-hamming", &knn.to_bytes(), &|bytes| {
+        Request::<HammingCodes>::try_from_bytes(bytes)
+    });
+}
+
+#[test]
+fn serve_request_string_mutations() {
+    let reads = scenario::string_pool(8609, 3);
+    let one = reads.slice(0, 1);
+    let eps = Request::Eps { id: 21, eps: 3.0, point: one.clone() };
+    wire::check_wire_decoder("serve/req-eps-strings", &eps.to_bytes(), &|bytes| {
+        Request::<StringSet>::try_from_bytes(bytes)
+    });
+    let knn = Request::Knn { id: 22, k: 1, point: one };
+    wire::check_wire_decoder("serve/req-knn-strings", &knn.to_bytes(), &|bytes| {
+        Request::<StringSet>::try_from_bytes(bytes)
+    });
+}
+
+#[test]
+fn serve_response_mutations() {
+    let hits = Response::Hits {
+        id: 0x0123_4567_89AB_CDEF,
+        hits: vec![(3, 0.25), (9, 1.5), (0, 0.0)],
+    };
+    wire::check_wire_decoder("serve/resp-hits", &hits.to_bytes(), &Response::try_from_bytes);
+    // An empty hit list is a legal (and common) ε answer.
+    let empty = Response::Hits { id: 5, hits: Vec::new() };
+    wire::check_wire_decoder("serve/resp-hits-empty", &empty.to_bytes(), &Response::try_from_bytes);
+    let err = Response::Error { id: 42, code: ErrorCode::Overloaded };
+    wire::check_wire_decoder("serve/resp-error", &err.to_bytes(), &Response::try_from_bytes);
+    let bye = Response::Bye { id: 43 };
+    wire::check_wire_decoder("serve/resp-bye", &bye.to_bytes(), &Response::try_from_bytes);
+}
+
+// ---- NGI-IDX1 index snapshots --------------------------------------------
+
+#[test]
+fn snapshot_dense_mutations() {
+    let pts = scenario::dense_clusters(8610, 12);
+    let tree = CoverTree::build(&pts, &Euclidean, &BuildParams::default());
+    let bytes = tree.to_snapshot_bytes().unwrap();
+    wire::check_wire_decoder("snapshot/dense", &bytes, &|b| {
+        CoverTree::<DenseMatrix>::try_from_snapshot_bytes(b)
+    });
+}
+
+#[test]
+fn snapshot_hamming_mutations() {
+    let codes = scenario::hamming_codes(8611, 8);
+    let tree = CoverTree::build(&codes, &Hamming, &BuildParams::default());
+    let bytes = tree.to_snapshot_bytes().unwrap();
+    wire::check_wire_decoder("snapshot/hamming", &bytes, &|b| {
+        CoverTree::<HammingCodes>::try_from_snapshot_bytes(b)
+    });
+}
+
+#[test]
+fn snapshot_string_mutations() {
+    let reads = scenario::string_pool(8612, 6);
+    let tree = CoverTree::build(&reads, &Levenshtein, &BuildParams::default());
+    let bytes = tree.to_snapshot_bytes().unwrap();
+    wire::check_wire_decoder("snapshot/strings", &bytes, &|b| {
+        CoverTree::<StringSet>::try_from_snapshot_bytes(b)
     });
 }
