@@ -2,15 +2,17 @@
 //! §10.3).
 //!
 //! The dispatcher hands the engine one [`QueryBatch`] at a time; the
-//! engine strides its queries across **lanes** — one per pool worker,
-//! each owning a long-lived [`QueryScratch`] plus warmed result buffers —
-//! via [`Pool::run_indexed_with`], then merges the per-lane results back
-//! into request order. Per-query answers are computed independently
-//! (query `q` runs on lane `q % nlanes` with the same scratch-threaded
-//! entry points a direct call would use), so the output is **bit-identical
-//! to direct `NearIndex` calls at every lane count and every batch
-//! boundary** — coalescing is a latency/throughput trade, never an answer
-//! change.
+//! engine strides its queries across **lanes** — one per stripe, each
+//! owning a long-lived [`QueryScratch`] plus warmed result buffers — via
+//! [`Pool::run_indexed`], then merges the per-lane results back into
+//! request order. The lane is bound to the **stripe index**, not to the
+//! pool worker: `run_indexed` claims parts dynamically, so a fast worker
+//! may run several stripes, and each stripe locks its own lane inside the
+//! part body. Per-query answers are computed independently (query `q`
+//! runs on lane `q % nlanes` with the same scratch-threaded entry points
+//! a direct call would use), so the output is **bit-identical to direct
+//! `NearIndex` calls at every lane count and every batch boundary** —
+//! coalescing is a latency/throughput trade, never an answer change.
 //!
 //! Steady state allocates nothing: the batch and output double-buffers
 //! are `clear()`ed (capacity kept), lanes persist across batches, and the
@@ -120,10 +122,11 @@ impl BatchOutput {
     }
 }
 
-/// Per-lane state: one scratch plus result buffers, owned by whichever
-/// pool worker claims the lane for a batch. `row` exists because
-/// `knn_with` clears its output (k-NN rows are self-contained), while the
-/// lane accumulates many queries' hits back to back.
+/// Per-lane state: one scratch plus result buffers. Lane `w` belongs to
+/// stripe `w` of the current batch (locked by whichever pool worker runs
+/// that stripe). `row` exists because `knn_with` clears its output (k-NN
+/// rows are self-contained), while the lane accumulates many queries'
+/// hits back to back.
 #[derive(Default)]
 struct Lane {
     scratch: QueryScratch,
@@ -181,43 +184,46 @@ impl<P: PointSet, M: Metric<P>> ServeEngine<P, M> {
             return;
         }
         let nlanes = self.lanes.len().min(n);
-        // Lane w answers queries w, w + nlanes, … with its own scratch;
-        // MutexGuard-as-worker-state is fine because `run_indexed_with`
-        // creates and drops each state on the worker that owns it.
-        self.pool.run_indexed_with(
-            nlanes,
-            |w| self.lanes[w].lock().unwrap(),
-            |lane, w| {
-                let lane = &mut **lane;
-                lane.hits.clear();
-                lane.lens.clear();
-                let mut q = w;
-                while q < n {
-                    let start = lane.hits.len();
-                    match batch.ops[q] {
-                        QueryOp::Eps(eps) => {
-                            self.index.eps_query_with(
-                                batch.points.point(q),
-                                eps,
-                                &mut lane.scratch,
-                                &mut lane.hits,
-                            );
-                        }
-                        QueryOp::Knn(k) => {
-                            self.index.knn_with(
-                                batch.points.point(q),
-                                k,
-                                &mut lane.scratch,
-                                &mut lane.row,
-                            );
-                            lane.hits.extend_from_slice(&lane.row);
-                        }
+        // Stale lens from an earlier batch must never reach the merge,
+        // whatever happens inside the run below.
+        for lane in &self.lanes {
+            lane.lock().unwrap().lens.clear();
+        }
+        // Stripe w answers queries w, w + nlanes, … into lane w. The lane
+        // is bound to the *part index*, not the worker: `run_indexed`
+        // claims parts dynamically, so a fast worker may run several
+        // stripes — each one locks its own lane, so the merge below can
+        // trust that lane w holds exactly stripe w's results.
+        self.pool.run_indexed(nlanes, |w| {
+            let mut lane = self.lanes[w].lock().unwrap();
+            let lane = &mut *lane;
+            lane.hits.clear();
+            let mut q = w;
+            while q < n {
+                let start = lane.hits.len();
+                match batch.ops[q] {
+                    QueryOp::Eps(eps) => {
+                        self.index.eps_query_with(
+                            batch.points.point(q),
+                            eps,
+                            &mut lane.scratch,
+                            &mut lane.hits,
+                        );
                     }
-                    lane.lens.push((lane.hits.len() - start) as u32);
-                    q += nlanes;
+                    QueryOp::Knn(k) => {
+                        self.index.knn_with(
+                            batch.points.point(q),
+                            k,
+                            &mut lane.scratch,
+                            &mut lane.row,
+                        );
+                        lane.hits.extend_from_slice(&lane.row);
+                    }
                 }
-            },
-        );
+                lane.lens.push((lane.hits.len() - start) as u32);
+                q += nlanes;
+            }
+        });
         // Merge back to request order without per-call cursor allocations:
         // pass 1 scatters each query's hit count into its span slot, a
         // prefix sum turns counts into offsets, pass 2 copies the hits.
@@ -301,6 +307,57 @@ mod tests {
                     bits(out.hits_of(q)),
                     bits(&want),
                     "threads={threads} query={q} diverged from direct call"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_batches_survive_dynamic_stripe_claiming() {
+        // Regression: `Pool::run_indexed` claims parts dynamically, so a
+        // fast worker can run several stripes back to back. Lanes must be
+        // bound to the stripe index (not the worker), or one lane's
+        // buffers get clobbered mid-batch and stale lens from earlier
+        // batches leak into the merge. Many threads over many repeated
+        // batches makes multi-stripe workers overwhelmingly likely.
+        let pts = scenario::dense_clusters(3, 240);
+        let params = IndexParams { leaf_size: 4, ..Default::default() };
+        let engine = ServeEngine::new(
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &params).unwrap(),
+            8,
+        );
+        let direct = build_index(IndexKind::CoverTree, &pts, Euclidean, &params).unwrap();
+        let mut scratch = QueryScratch::new();
+        let mut want = Vec::new();
+        let mut batch = QueryBatch::new_like(&pts);
+        let mut out = BatchOutput::new();
+        for round in 0..40usize {
+            batch.clear();
+            // Vary the batch size so lane lens lengths differ per round —
+            // stale-lens leaks would misalign or overflow the merge.
+            let n = 16 + (round * 7) % 48;
+            for i in 0..n {
+                let q = (round * 13 + i * 5) % pts.len();
+                let op = if i % 2 == 0 { QueryOp::Eps(0.9) } else { QueryOp::Knn(3) };
+                batch.push(&pts.slice(q, q + 1), op);
+            }
+            engine.execute(&batch, &mut out);
+            assert_eq!(out.len(), n, "round {round} lost queries");
+            for i in 0..n {
+                let q = (round * 13 + i * 5) % pts.len();
+                match batch.ops()[i] {
+                    QueryOp::Eps(eps) => {
+                        want.clear();
+                        direct.eps_query_with(pts.point(q), eps, &mut scratch, &mut want);
+                    }
+                    QueryOp::Knn(k) => {
+                        direct.knn_with(pts.point(q), k, &mut scratch, &mut want);
+                    }
+                }
+                assert_eq!(
+                    bits(out.hits_of(i)),
+                    bits(&want),
+                    "round {round} query {i} misattributed across lanes"
                 );
             }
         }

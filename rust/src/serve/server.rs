@@ -14,13 +14,17 @@
 //!   [`ServeEngine::execute`] → reply per ticket, using double-buffered
 //!   batch/output/reply buffers so the warmed loop allocates nothing.
 //!
-//! Shutdown (client `Shutdown` frame or [`Server::shutdown`]): the flag
-//! flips, the accept loop is woken by a self-connection, readers finish
-//! their current frame and exit, the coalescer closes, and the dispatcher
-//! drains every admitted query before exiting — an admitted query always
-//! gets its reply, and late frames get the typed `shutting-down` error.
-//! Replies are written under a per-connection mutex, so a reply is never
-//! torn mid-frame.
+//! Shutdown (client `Shutdown` frame or [`Server::shutdown`]): `Bye` is
+//! sent immediately as the acknowledgement, the flag flips, the accept
+//! loop is woken by a self-connection, readers finish their current frame
+//! and exit, the coalescer closes, and the dispatcher drains every
+//! admitted query before exiting — an admitted query always gets its
+//! reply, though those replies may arrive **after** `Bye` (clients match
+//! on the echoed id, not on arrival order). A frame that arrives after
+//! the flag flips is answered with the typed `shutting-down` error and
+//! the connection closes — a pipelining client cannot pin a reader (and
+//! the join) past shutdown. Replies are written under a per-connection
+//! mutex, so a reply is never torn mid-frame.
 
 use super::coalesce::{Admit, CoalesceParams, Coalescer, PendingBatch, ReplySink, Ticket};
 use super::engine::{BatchOutput, QueryOp, ServeEngine};
@@ -37,6 +41,10 @@ use std::time::Duration;
 
 /// How often an idle reader wakes to poll the shutdown flag.
 const READ_POLL: Duration = Duration::from_millis(25);
+
+/// Pause before retrying a failed `accept` (fd exhaustion and friends
+/// must not busy-spin a core).
+const ACCEPT_RETRY: Duration = Duration::from_millis(25);
 
 #[derive(Debug, Default)]
 struct Stats {
@@ -212,6 +220,18 @@ pub fn serve<P: PointSet, M: Metric<P>>(
                         if shutdown.load(Ordering::SeqCst) {
                             break;
                         }
+                        // Reap finished readers so a long-lived daemon
+                        // serving many short connections does not grow
+                        // the handle vector (and retained thread
+                        // resources) without bound.
+                        let mut i = 0;
+                        while i < readers.len() {
+                            if readers[i].is_finished() {
+                                let _ = readers.swap_remove(i).join();
+                            } else {
+                                i += 1;
+                            }
+                        }
                         stats.connections.fetch_add(1, Ordering::Relaxed);
                         let engine = engine.clone();
                         let coalescer = coalescer.clone();
@@ -225,6 +245,7 @@ pub fn serve<P: PointSet, M: Metric<P>>(
                         if shutdown.load(Ordering::SeqCst) {
                             break;
                         }
+                        std::thread::sleep(ACCEPT_RETRY);
                     }
                 }
             }
@@ -291,6 +312,20 @@ fn reader_loop<P: PointSet, M: Metric<P>>(
                 }
             }
             Ok(FrameRead::Frame) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    // A pipelining client can keep frames coming forever,
+                    // and `Idle` — the only other flag poll — never fires
+                    // then. Answer the late frame with the typed error and
+                    // stop reading, so the control thread's join cannot
+                    // hang on this reader.
+                    protocol::encode_error_into(
+                        &mut reply,
+                        protocol::peek_request_id(&frame),
+                        ErrorCode::ShuttingDown,
+                    );
+                    outbox.send(&reply);
+                    break;
+                }
                 handle_frame(&frame, &outbox, addr, engine, coalescer, shutdown, stats, &mut reply)
             }
         }
@@ -337,6 +372,10 @@ fn handle_frame<P: PointSet, M: Metric<P>>(
             outbox.send(reply);
         }
         Admit::Closed => {
+            // Unreachable under the current teardown order (the coalescer
+            // closes only after every reader joined; late frames are
+            // answered in `reader_loop` before reaching here) — kept so a
+            // future teardown reordering still yields the typed reply.
             protocol::encode_error_into(reply, id, ErrorCode::ShuttingDown);
             outbox.send(reply);
         }

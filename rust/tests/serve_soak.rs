@@ -220,6 +220,41 @@ fn overload_is_typed_and_connection_survives() {
 }
 
 #[test]
+fn frames_pipelined_past_shutdown_get_typed_reply_and_join_completes() {
+    // A client that keeps pipelining frames never lets its reader observe
+    // an idle read; the reader must notice the shutdown flag on the frame
+    // path itself, answer the late frame with the typed error, and exit —
+    // otherwise `Server::join` hangs on that reader forever.
+    let pts = scenario::dense_uniform(29, 80);
+    let index =
+        build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+    let server = serve(
+        index,
+        &ephemeral(ServeConfig { coalesce_us: 100, threads: 2, ..Default::default() }),
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+
+    client.send_eps(1, &pts.slice(0, 1), 0.5).unwrap();
+    match client.recv().unwrap() {
+        Response::Hits { id, .. } => assert_eq!(id, 1),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    // Shutdown plus a trailing query in one pipelined burst: the trailing
+    // frame is read after the flag flips.
+    client.send_shutdown(2).unwrap();
+    client.send_knn(3, &pts.slice(1, 2), 2).unwrap();
+    assert_eq!(client.recv().unwrap(), Response::Bye { id: 2 });
+    assert_eq!(
+        client.recv().unwrap(),
+        Response::Error { id: 3, code: ErrorCode::ShuttingDown },
+        "late frame must get the typed shutting-down reply"
+    );
+    let stats = server.join();
+    assert_eq!(stats.queries, 1, "the late query must not reach the batch path");
+}
+
+#[test]
 fn shutdown_drains_in_flight_replies() {
     // Queries admitted before the shutdown frame must all be answered —
     // the huge window would otherwise sit on them for a second.
