@@ -9,13 +9,17 @@
 //! the query daemon under pipelined offered load, sweeping the request
 //! coalescing window against a per-query baseline (throughput and
 //! p50/p99 latency per setting) with the same allocator proving the
-//! warmed engine batch path allocation-free. Emits machine-readable
-//! `BENCH_pr6.json` so the perf trajectory accumulates across PRs.
+//! warmed engine batch path allocation-free, **plus** a chaos section
+//! (PR 7): a seeded fault-injected distributed run whose edge set must
+//! match its clean twin bit-for-bit, with the fault counters and the
+//! virtual-time cost of the retries landing in the JSON. Emits
+//! machine-readable `BENCH_pr7.json` so the perf trajectory accumulates
+//! across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
 //!     [--threads 1,2,4] [--target-degree 30] [--knn 16] \
-//!     [--out BENCH_pr6.json]
+//!     [--out BENCH_pr7.json]
 //! ```
 //!
 //! The driver asserts that every thread count — and every facade backend
@@ -25,8 +29,9 @@
 //! identical row fingerprint (the determinism gates, on the bench
 //! workload itself).
 
+use neargraph::comm::{FaultCounters, FaultPlan};
 use neargraph::covertree::{BuildParams, CoverTree, QueryScratch};
-use neargraph::dist::{run_knn_graph, Algorithm, RunConfig};
+use neargraph::dist::{run_knn_graph, try_run_epsilon_graph, Algorithm, RunConfig};
 use neargraph::graph::{GraphSink, KnnGraph};
 use neargraph::index::{build_index_par, CoverTreeIndex, IndexKind, IndexParams, NearIndex};
 use neargraph::metric::{Counted, Euclidean};
@@ -129,6 +134,19 @@ struct ServeRun {
     mean_batch: f64,
 }
 
+/// The PR 7 chaos point: one survivable seeded fault schedule against its
+/// clean twin on the same distributed run, with edge-set equality
+/// asserted and the injected-fault counters recorded.
+struct ChaosRun {
+    algorithm: &'static str,
+    ranks: usize,
+    n: usize,
+    clean_makespan: f64,
+    faulty_makespan: f64,
+    faulty_wall_s: f64,
+    counters: FaultCounters,
+}
+
 /// Order-independent fingerprint of a k-NN graph's (vertex, neighbor,
 /// distance-bits) arcs — identical iff the certified rows are identical.
 fn knn_fingerprint(g: &KnnGraph) -> u64 {
@@ -166,7 +184,7 @@ fn main() {
         args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
     let knn_k = args.get_usize("knn").unwrap_or_else(|e| fail(&e)).unwrap_or(0);
     let threads_arg = args.get_or("threads", "1,2,4").to_string();
-    let out_path = args.get_or("out", "BENCH_pr6.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr7.json").to_string();
     args.reject_unknown().unwrap_or_else(|e| fail(&e));
     let thread_list: Vec<usize> = threads_arg
         .split(',')
@@ -414,6 +432,7 @@ fn main() {
                 .map(|q| SimQuery::Eps { point: (c * 500 + q * 7) % n, eps })
                 .collect(),
             pipeline: 16,
+            timeout_ms: 0,
         })
         .collect();
     let offered: u64 = serve_plans.iter().map(|p| p.queries.len() as u64).sum();
@@ -427,6 +446,10 @@ fn main() {
             coalesce_us: window_us,
             max_batch,
             threads: serve_threads,
+            // A generous deadline arms the per-ticket deadline check on
+            // every reply (the path the allocation gate must cover)
+            // without ever firing under bench load.
+            deadline_us: 60_000_000,
             ..Default::default()
         };
         let server = serve(index, &cfg).unwrap_or_else(|e| fail(&e.to_string()));
@@ -437,6 +460,7 @@ fn main() {
         let wall_s = t0.elapsed().as_secs_f64();
         let stats = server.shutdown_and_join();
         assert_eq!(stats.queries, offered, "{label}: daemon lost queries");
+        assert_eq!(stats.deadline_misses, 0, "{label}: bench load must never miss 60s deadlines");
         let lat = latencies_sorted(&reports);
         let run = ServeRun {
             label,
@@ -485,6 +509,67 @@ fn main() {
         allocs
     };
 
+    // ------------------------------------------------------------------
+    // Chaos section (PR 7): a survivable seeded fault lottery over the
+    // systolic ring, against a clean twin on the same subset. The gate is
+    // bit-equality of the edge sets; the payload is the fault counters
+    // and the virtual-time price of riding out the lottery (retries and
+    // delays are charged to the virtual clock, so the makespan delta is
+    // the overhead the α-β model attributes to the faults).
+    // ------------------------------------------------------------------
+    let chaos = {
+        let chaos_n = n.min(2_000);
+        let chaos_pts = pts.slice(0, chaos_n);
+        let ranks = 4usize;
+        let cfg = RunConfig { ranks, algorithm: Algorithm::SystolicRing, ..Default::default() };
+        let clean = try_run_epsilon_graph(&chaos_pts, Euclidean, eps, &cfg)
+            .unwrap_or_else(|e| fail(&format!("chaos clean twin: {e}")));
+        let mut faulty_cfg = cfg;
+        faulty_cfg.faults = Some(FaultPlan {
+            drop: 0.1,
+            corrupt: 0.1,
+            duplicate: 0.05,
+            delay: 0.1,
+            delay_us: 50,
+            seed: 0xC405,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        let faulty = try_run_epsilon_graph(&chaos_pts, Euclidean, eps, &faulty_cfg)
+            .unwrap_or_else(|e| fail(&format!("chaos lottery unsurvivable: {e}")));
+        let faulty_wall_s = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            faulty.edges.edges(),
+            clean.edges.edges(),
+            "faulty run diverged from its clean twin"
+        );
+        assert!(faulty.faults.any(), "the bench lottery must actually fire");
+        let c = faulty.faults;
+        eprintln!(
+            "[perf_driver] chaos systolic-ring ranks={ranks} n={chaos_n}: \
+             drops={} corrupts={} duplicates={} retries={} dup_discards={} \
+             corrupt_discards={} delayed_us={}, makespan {:.3}s (clean {:.3}s)",
+            c.drops,
+            c.corrupts,
+            c.duplicates,
+            c.retries,
+            c.dup_discards,
+            c.corrupt_discards,
+            c.delayed_us,
+            faulty.makespan,
+            clean.makespan
+        );
+        ChaosRun {
+            algorithm: "systolic-ring",
+            ranks,
+            n: chaos_n,
+            clean_makespan: clean.makespan,
+            faulty_makespan: faulty.makespan,
+            faulty_wall_s,
+            counters: c,
+        }
+    };
+
     let (seq_total, best) = summarize(&runs);
     let json = render_json(
         &dataset,
@@ -497,6 +582,7 @@ fn main() {
         &traversal,
         &serve_runs,
         serve_steady_allocs,
+        &chaos,
         seq_total,
         best,
     );
@@ -526,12 +612,13 @@ fn render_json(
     traversal: &TraversalRun,
     serve_runs: &[ServeRun],
     serve_steady_allocs: u64,
+    chaos: &ChaosRun,
     seq_total: f64,
     best: &Run,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"bench\": \"pr6_serve_coalescing\",\n");
+    s.push_str("  \"bench\": \"pr7_fault_injection\",\n");
     s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
     s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
     s.push_str(&format!(
@@ -611,6 +698,26 @@ fn render_json(
     }
     s.push_str("  ],\n");
     s.push_str(&format!("  \"serve_steady_state_allocs\": {serve_steady_allocs},\n"));
+    s.push_str(&format!(
+        "  \"chaos\": {{\"algorithm\": \"{}\", \"ranks\": {}, \"n\": {}, \
+         \"clean_makespan_s\": {:.6}, \"faulty_makespan_s\": {:.6}, \
+         \"faulty_wall_s\": {:.6}, \"drops\": {}, \"corrupts\": {}, \
+         \"duplicates\": {}, \"retries\": {}, \"dup_discards\": {}, \
+         \"corrupt_discards\": {}, \"delayed_us\": {}}},\n",
+        chaos.algorithm,
+        chaos.ranks,
+        chaos.n,
+        chaos.clean_makespan,
+        chaos.faulty_makespan,
+        chaos.faulty_wall_s,
+        chaos.counters.drops,
+        chaos.counters.corrupts,
+        chaos.counters.duplicates,
+        chaos.counters.retries,
+        chaos.counters.dup_discards,
+        chaos.counters.corrupt_discards,
+        chaos.counters.delayed_us
+    ));
     // Facade overhead: cover-tree facade total vs direct total at the same
     // thread count (same underlying traversals; the delta is dispatch +
     // sink indirection).

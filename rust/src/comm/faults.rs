@@ -1,0 +1,398 @@
+//! Seeded, deterministic fault injection for the simulated comm runtime
+//! (DESIGN.md §11). A [`FaultPlan`] turns every point-to-point `send`
+//! into a lottery — drop, corrupt, duplicate, delay or deliver clean —
+//! driven by one [`crate::util::Rng`] stream per rank, so a given
+//! `(plan, seed, rank count)` replays **bit-identically** on every run.
+//!
+//! Recovery is sender-driven: each logical message is wrapped in a
+//! sequence-numbered, FNV-1a-checksummed envelope and retransmitted
+//! until one clean copy leaves the wire (bounded by [`MAX_ATTEMPTS`]);
+//! the receiver discards corrupt copies (checksum mismatch) and
+//! duplicate sequence numbers ([`EnvelopeStream`]), so the payload
+//! stream delivered to the algorithm is byte-identical to the
+//! fault-free run — only the virtual-time accounting (and therefore
+//! the makespan) changes. Unsurvivable schedules — a rank killed at a
+//! phase boundary, or a peer that never gets a clean copy through —
+//! abort the world with a typed [`WorldAbort`] panic payload that the
+//! dist driver catches and converts into a typed error; the shared
+//! abort flag bounds every other rank's blocking receive.
+
+use crate::covertree::fnv1a64;
+use crate::points::{put_u64, try_get_u64, try_take, WireError};
+use crate::util::Rng;
+use std::collections::HashSet;
+
+/// Retransmission bound per logical message: after this many faulted
+/// attempts the sender declares the peer unreachable and aborts the
+/// world (typed, bounded — never an unbounded retry loop).
+pub const MAX_ATTEMPTS: u32 = 16;
+
+/// A seeded fault schedule for one world. Probabilities are cumulative
+/// lottery shares (validated to sum ≤ 1 at the config layer); the
+/// remainder of the unit interval is clean delivery. `kill_rank` +
+/// `kill_phase` kill one rank at the moment it enters the named phase
+/// (any phase boundary when `kill_phase` is `None`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// P(message vanishes in flight).
+    pub drop: f64,
+    /// P(one bit of the envelope flips in flight).
+    pub corrupt: f64,
+    /// P(message arrives twice).
+    pub duplicate: f64,
+    /// P(message is late by `delay_us` of virtual time).
+    pub delay: f64,
+    /// Virtual-time lateness of a delayed message, in microseconds.
+    pub delay_us: u64,
+    /// Seed of the fault lottery (forked per rank).
+    pub seed: u64,
+    /// Rank to kill at a phase boundary (`None` = nobody dies).
+    pub kill_rank: Option<usize>,
+    /// Phase whose entry kills `kill_rank` (`None` = first boundary).
+    pub kill_phase: Option<String>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            drop: 0.0,
+            corrupt: 0.0,
+            duplicate: 0.0,
+            delay: 0.0,
+            delay_us: 100,
+            seed: 0xFA17,
+            kill_rank: None,
+            kill_phase: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Whether this plan can perturb anything at all — an all-zero plan
+    /// routes through the fault-free fast path.
+    pub fn any_faults(&self) -> bool {
+        self.drop > 0.0
+            || self.corrupt > 0.0
+            || self.duplicate > 0.0
+            || self.delay > 0.0
+            || self.kill_rank.is_some()
+    }
+}
+
+/// Per-rank fault event counters, merged across ranks into
+/// `RunResult::faults` and surfaced in the perf-driver JSON.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Messages the lottery vanished in flight.
+    pub drops: u64,
+    /// Envelopes that left the sender with a flipped bit.
+    pub corrupts: u64,
+    /// Envelopes delivered twice by the lottery.
+    pub duplicates: u64,
+    /// Retransmissions the sender performed (drops + corrupts).
+    pub retries: u64,
+    /// Duplicate sequence numbers discarded on receive.
+    pub dup_discards: u64,
+    /// Checksum-failed envelopes discarded on receive.
+    pub corrupt_discards: u64,
+    /// Total virtual-time lateness injected, in microseconds.
+    pub delayed_us: u64,
+}
+
+impl FaultCounters {
+    /// Fold another rank's counters into this one.
+    pub fn merge(&mut self, other: &FaultCounters) {
+        self.drops += other.drops;
+        self.corrupts += other.corrupts;
+        self.duplicates += other.duplicates;
+        self.retries += other.retries;
+        self.dup_discards += other.dup_discards;
+        self.corrupt_discards += other.corrupt_discards;
+        self.delayed_us += other.delayed_us;
+    }
+
+    /// Whether any fault event was recorded at all.
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+}
+
+/// Typed panic payload for world-ending faults. Rank closures in the
+/// dist driver catch these (`catch_unwind` + downcast) and convert them
+/// into `DistError`; any other panic is a real bug and is re-raised.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorldAbort {
+    /// The fault plan killed this rank at a phase boundary.
+    Killed { rank: usize, phase: String },
+    /// `MAX_ATTEMPTS` transmissions of one message all faulted.
+    Unreachable { from: usize, to: usize },
+    /// This rank observed the shared abort flag while blocked.
+    Aborted { rank: usize },
+}
+
+/// Install (once, process-wide) a panic-hook wrapper that suppresses
+/// the default "thread panicked" stderr spew for [`WorldAbort`]
+/// payloads — those are typed control flow, not bugs. All other panics
+/// keep the previous hook's output.
+pub(crate) fn install_quiet_abort_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<WorldAbort>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+// ---- the envelope -------------------------------------------------------
+//
+// Layout: [seq u64][fnv u64][len u64][payload]. The checksum covers
+// seq ‖ len ‖ payload, so a flip anywhere — sequence number, length,
+// checksum itself, or payload — fails verification and the copy is
+// discarded; the sender's retransmit loop owns making progress.
+
+/// Wrap `payload` in the sequence-numbered checksummed envelope.
+pub fn encode_envelope(seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut covered = Vec::with_capacity(16 + payload.len());
+    put_u64(&mut covered, seq);
+    put_u64(&mut covered, payload.len() as u64);
+    covered.extend_from_slice(payload);
+    let fnv = fnv1a64(&covered);
+    let mut out = Vec::with_capacity(24 + payload.len());
+    put_u64(&mut out, seq);
+    put_u64(&mut out, fnv);
+    put_u64(&mut out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Unwrap an envelope: `(seq, payload)`. Any length or checksum
+/// violation is a typed [`WireError`] — never a panic.
+pub fn decode_envelope(bytes: &[u8]) -> Result<(u64, Vec<u8>), WireError> {
+    let mut off = 0usize;
+    let seq = try_get_u64(bytes, &mut off, "envelope seq")?;
+    let fnv = try_get_u64(bytes, &mut off, "envelope checksum")?;
+    let len = try_get_u64(bytes, &mut off, "envelope length")?;
+    let len_usize =
+        usize::try_from(len).map_err(|_| WireError::Corrupt { what: "envelope length" })?;
+    let payload = try_take(bytes, &mut off, len_usize, "envelope payload")?;
+    if off != bytes.len() {
+        return Err(WireError::Corrupt { what: "envelope trailing bytes" });
+    }
+    let mut covered = Vec::with_capacity(16 + payload.len());
+    put_u64(&mut covered, seq);
+    put_u64(&mut covered, len);
+    covered.extend_from_slice(payload);
+    if fnv1a64(&covered) != fnv {
+        return Err(WireError::Corrupt { what: "envelope checksum" });
+    }
+    Ok((seq, payload.to_vec()))
+}
+
+/// Receive-side dedup over one peer's envelope stream: remembers every
+/// delivered sequence number, so retransmits and lottery duplicates are
+/// idempotently discarded.
+///
+/// `accept` is the whole verdict surface: `Ok(Some(payload))` — fresh,
+/// deliver; `Ok(None)` — duplicate, discard; `Err(_)` — corrupt,
+/// discard (the sender will retransmit).
+#[derive(Debug, Default)]
+pub struct EnvelopeStream {
+    delivered: HashSet<u64>,
+}
+
+impl EnvelopeStream {
+    pub fn accept(&mut self, bytes: &[u8]) -> Result<Option<Vec<u8>>, WireError> {
+        let (seq, payload) = decode_envelope(bytes)?;
+        if self.delivered.insert(seq) {
+            Ok(Some(payload))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+/// One send's lottery outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum FaultEvent {
+    Clean,
+    Drop,
+    Corrupt { bit: usize },
+    Duplicate,
+    Delay,
+}
+
+/// Per-rank fault machinery: the plan, this rank's lottery stream,
+/// per-destination sequence counters and per-source dedup streams.
+#[derive(Debug)]
+pub(crate) struct FaultState {
+    pub(crate) plan: FaultPlan,
+    rng: Rng,
+    next_seq: Vec<u64>,
+    pub(crate) streams: Vec<EnvelopeStream>,
+    pub(crate) kill_fired: bool,
+}
+
+impl FaultState {
+    pub(crate) fn new(plan: FaultPlan, rank: usize, size: usize) -> Self {
+        let rng = Rng::new(plan.seed).fork(rank as u64);
+        FaultState {
+            plan,
+            rng,
+            next_seq: vec![0; size],
+            streams: (0..size).map(|_| EnvelopeStream::default()).collect(),
+            kill_fired: false,
+        }
+    }
+
+    /// Allocate the sequence number for the next logical message to
+    /// `to` (shared by all retransmits of that message).
+    pub(crate) fn alloc_seq(&mut self, to: usize) -> u64 {
+        let seq = self.next_seq[to];
+        self.next_seq[to] += 1;
+        seq
+    }
+
+    /// Draw the lottery for one transmission of an `env_bits`-bit
+    /// envelope. Single-threaded program order per rank ⇒ the draw
+    /// sequence is deterministic regardless of scheduling.
+    pub(crate) fn draw(&mut self, env_bits: usize) -> FaultEvent {
+        let x = self.rng.f64();
+        let mut edge = self.plan.drop;
+        if x < edge {
+            return FaultEvent::Drop;
+        }
+        edge += self.plan.corrupt;
+        if x < edge {
+            return FaultEvent::Corrupt { bit: self.rng.below(env_bits.max(1)) };
+        }
+        edge += self.plan.duplicate;
+        if x < edge {
+            return FaultEvent::Duplicate;
+        }
+        edge += self.plan.delay;
+        if x < edge {
+            return FaultEvent::Delay;
+        }
+        FaultEvent::Clean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_roundtrips() {
+        for payload in [&b""[..], b"x", b"hello world", &[0u8; 1000]] {
+            let env = encode_envelope(42, payload);
+            let (seq, got) = decode_envelope(&env).unwrap();
+            assert_eq!(seq, 42);
+            assert_eq!(got, payload);
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let env = encode_envelope(7, b"payload under test");
+        for byte in 0..env.len() {
+            for bit in 0..8 {
+                let mut bad = env.clone();
+                bad[byte] ^= 1 << bit;
+                // A flip may shrink the announced length (truncated /
+                // trailing-bytes error) or just break the checksum —
+                // either way it must be a typed error, never a decode.
+                assert!(
+                    decode_envelope(&bad).is_err(),
+                    "flip byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_and_extension_are_typed() {
+        let env = encode_envelope(3, b"abc");
+        for cut in 0..env.len() {
+            assert!(decode_envelope(&env[..cut]).is_err(), "cut at {cut} decoded");
+        }
+        let mut long = env.clone();
+        long.push(0);
+        assert!(matches!(
+            decode_envelope(&long),
+            Err(WireError::Corrupt { what: "envelope trailing bytes" })
+        ));
+    }
+
+    #[test]
+    fn stream_dedups_by_sequence_number() {
+        let mut s = EnvelopeStream::default();
+        let a = encode_envelope(0, b"first");
+        let b = encode_envelope(1, b"second");
+        assert_eq!(s.accept(&a).unwrap(), Some(b"first".to_vec()));
+        assert_eq!(s.accept(&a).unwrap(), None, "retransmit must discard");
+        assert_eq!(s.accept(&b).unwrap(), Some(b"second".to_vec()));
+        assert_eq!(s.accept(&b).unwrap(), None);
+        // Out-of-order fresh sequence numbers still deliver.
+        let late = encode_envelope(10, b"late");
+        assert_eq!(s.accept(&late).unwrap(), Some(b"late".to_vec()));
+    }
+
+    #[test]
+    fn lottery_is_deterministic_and_roughly_proportioned() {
+        let plan = FaultPlan {
+            drop: 0.1,
+            corrupt: 0.1,
+            duplicate: 0.1,
+            delay: 0.1,
+            ..Default::default()
+        };
+        let mut a = FaultState::new(plan.clone(), 3, 8);
+        let mut b = FaultState::new(plan, 3, 8);
+        let mut counts = [0usize; 5];
+        for _ in 0..4000 {
+            let ea = a.draw(256);
+            assert_eq!(ea, b.draw(256), "same seed+rank must replay the same lottery");
+            let slot = match ea {
+                FaultEvent::Drop => 0,
+                FaultEvent::Corrupt { .. } => 1,
+                FaultEvent::Duplicate => 2,
+                FaultEvent::Delay => 3,
+                FaultEvent::Clean => 4,
+            };
+            counts[slot] += 1;
+        }
+        for (i, &c) in counts[..4].iter().enumerate() {
+            assert!((200..=600).contains(&c), "event {i} count {c} far from 10%");
+        }
+        assert!(counts[4] > 2000, "clean share collapsed: {}", counts[4]);
+    }
+
+    #[test]
+    fn rank_streams_differ() {
+        let plan = FaultPlan { drop: 0.5, ..Default::default() };
+        let mut r0 = FaultState::new(plan.clone(), 0, 4);
+        let mut r1 = FaultState::new(plan, 1, 4);
+        let seq0: Vec<_> = (0..64).map(|_| r0.draw(64)).collect();
+        let seq1: Vec<_> = (0..64).map(|_| r1.draw(64)).collect();
+        assert_ne!(seq0, seq1, "per-rank forks must decorrelate the lottery");
+    }
+
+    #[test]
+    fn sequence_numbers_are_per_destination() {
+        let mut fs = FaultState::new(FaultPlan::default(), 0, 3);
+        assert_eq!(fs.alloc_seq(1), 0);
+        assert_eq!(fs.alloc_seq(2), 0);
+        assert_eq!(fs.alloc_seq(1), 1);
+        assert_eq!(fs.alloc_seq(2), 1);
+    }
+
+    #[test]
+    fn default_plan_is_inert() {
+        assert!(!FaultPlan::default().any_faults());
+        let killer = FaultPlan { kill_rank: Some(1), ..Default::default() };
+        assert!(killer.any_faults());
+    }
+}

@@ -19,13 +19,21 @@
 //! Message payloads really move between threads (over channels), so the
 //! distributed algorithms are tested end-to-end, not just cost-modeled.
 
+mod faults;
 mod stats;
 mod world;
 
+pub use faults::{
+    decode_envelope, encode_envelope, EnvelopeStream, FaultCounters, FaultPlan, WorldAbort,
+    MAX_ATTEMPTS,
+};
 pub use stats::{CommStats, PhaseTimes};
-pub use world::{makespan, run_world, RankOutput};
+pub use world::{makespan, run_world, run_world_with, RankOutput};
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// α-β communication cost model (plus per-collective formulas).
 ///
@@ -101,13 +109,26 @@ pub struct Comm {
     /// Monotone sequence number for collective operations (tag namespace).
     coll_seq: u64,
     stats: CommStats,
+    /// Fault-injection state (`None` = the fault-free fast path).
+    faults: Option<faults::FaultState>,
+    /// World-wide abort flag: set by a dying rank so every peer blocked
+    /// in a receive aborts in bounded wall time instead of hanging.
+    abort: Arc<AtomicBool>,
 }
 
 /// Tag bit reserved for internal collective traffic.
 const COLL_BIT: u64 = 1 << 63;
 
 impl Comm {
-    fn new(rank: usize, size: usize, txs: Vec<Sender<Msg>>, rx: Receiver<Msg>, cost: CostModel) -> Self {
+    fn new(
+        rank: usize,
+        size: usize,
+        txs: Vec<Sender<Msg>>,
+        rx: Receiver<Msg>,
+        cost: CostModel,
+        faults: Option<faults::FaultState>,
+        abort: Arc<AtomicBool>,
+    ) -> Self {
         Comm {
             rank,
             size,
@@ -119,6 +140,8 @@ impl Comm {
             cpu_mark: crate::util::thread_cpu_time(),
             coll_seq: 0,
             stats: CommStats::new(),
+            faults,
+            abort,
         }
     }
 
@@ -146,6 +169,25 @@ impl Comm {
     pub fn set_phase(&mut self, name: &str) {
         self.absorb_compute();
         self.stats.set_phase(name);
+        self.check_kill(name);
+    }
+
+    /// Kill this rank at a phase boundary if the fault plan says so:
+    /// set the world abort flag and unwind with the typed payload (the
+    /// dist driver's `catch_unwind` converts it into a typed error).
+    fn check_kill(&mut self, phase: &str) {
+        let Some(fs) = self.faults.as_mut() else { return };
+        if fs.kill_fired || fs.plan.kill_rank != Some(self.rank) {
+            return;
+        }
+        if let Some(kp) = &fs.plan.kill_phase {
+            if kp != phase {
+                return;
+            }
+        }
+        fs.kill_fired = true;
+        self.abort.store(true, Ordering::SeqCst);
+        std::panic::panic_any(WorldAbort::Killed { rank: self.rank, phase: phase.to_string() });
     }
 
     /// Charge CPU time since the last mark to the current phase as compute.
@@ -184,27 +226,119 @@ impl Comm {
     // point-to-point
     // ------------------------------------------------------------------
 
+    /// Push one raw [`Msg`] onto `to`'s channel, converting a hung-up
+    /// receiver into the typed abort when the world is going down.
+    fn transmit(&mut self, to: usize, tag: u64, payload: Vec<u8>, arrival_vt: f64) {
+        if self.txs[to].send(Msg { from: self.rank, tag, payload, arrival_vt }).is_err() {
+            if self.abort.load(Ordering::SeqCst) {
+                std::panic::panic_any(WorldAbort::Aborted { rank: self.rank });
+            }
+            panic!("receiver hung up");
+        }
+    }
+
     /// Send `payload` to `to` with `tag`. Non-blocking (channels are
     /// unbounded); the sender is charged the α overhead.
     pub fn send(&mut self, to: usize, tag: u32, payload: Vec<u8>) {
         self.absorb_compute();
+        if self.faults.is_some() && to != self.rank {
+            return self.send_faulty(to, tag, payload);
+        }
         let bytes = payload.len() as u64;
         self.charge_comm(self.cost.alpha);
         let arrival = self.vt + bytes as f64 * self.cost.beta_inv;
         self.stats.count_send(bytes);
-        self.txs[to]
-            .send(Msg { from: self.rank, tag: tag as u64, payload, arrival_vt: arrival })
-            .expect("receiver hung up");
+        self.transmit(to, tag as u64, payload, arrival);
+    }
+
+    /// Faulted send: wrap the payload in a sequence-numbered checksummed
+    /// envelope, run the per-attempt lottery, and retransmit until one
+    /// deliverable copy is on the wire (at most [`MAX_ATTEMPTS`], else
+    /// the typed [`WorldAbort::Unreachable`]). Every attempt is charged
+    /// α into the current phase's comm time, so retries lengthen the
+    /// makespan — fault overhead stays visible in the α-β accounting.
+    fn send_faulty(&mut self, to: usize, tag: u32, payload: Vec<u8>) {
+        let (seq, delay_us) = {
+            let fs = self.faults.as_mut().expect("send_faulty without a plan");
+            (fs.alloc_seq(to), fs.plan.delay_us)
+        };
+        let env = faults::encode_envelope(seq, &payload);
+        let bytes = env.len() as u64;
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            if attempts > MAX_ATTEMPTS {
+                self.abort.store(true, Ordering::SeqCst);
+                std::panic::panic_any(WorldAbort::Unreachable { from: self.rank, to });
+            }
+            let event = self.faults.as_mut().expect("checked above").draw(env.len() * 8);
+            self.charge_comm(self.cost.alpha);
+            let arrival = self.vt + bytes as f64 * self.cost.beta_inv;
+            self.stats.count_send(bytes);
+            match event {
+                faults::FaultEvent::Drop => {
+                    let f = self.stats.faults_mut();
+                    f.drops += 1;
+                    f.retries += 1;
+                }
+                faults::FaultEvent::Corrupt { bit } => {
+                    let mut bad = env.clone();
+                    bad[bit / 8] ^= 1 << (bit % 8);
+                    self.transmit(to, tag as u64, bad, arrival);
+                    let f = self.stats.faults_mut();
+                    f.corrupts += 1;
+                    f.retries += 1;
+                }
+                faults::FaultEvent::Duplicate => {
+                    self.stats.count_send(bytes);
+                    self.transmit(to, tag as u64, env.clone(), arrival);
+                    self.transmit(to, tag as u64, env, arrival);
+                    self.stats.faults_mut().duplicates += 1;
+                    return;
+                }
+                faults::FaultEvent::Delay => {
+                    let late = arrival + delay_us as f64 * 1e-6;
+                    self.transmit(to, tag as u64, env, late);
+                    self.stats.faults_mut().delayed_us += delay_us;
+                    return;
+                }
+                faults::FaultEvent::Clean => {
+                    self.transmit(to, tag as u64, env, arrival);
+                    return;
+                }
+            }
+        }
     }
 
     /// Blocking receive of a message from `from` with `tag`.
     pub fn recv(&mut self, from: usize, tag: u32) -> Vec<u8> {
         self.absorb_compute();
-        let msg = self.take_matching(from, tag as u64);
-        // Wait until the message is delivered in virtual time.
-        let wait = msg.arrival_vt - self.vt;
-        self.charge_comm(wait);
-        msg.payload
+        if self.faults.is_none() || from == self.rank {
+            let msg = self.take_matching(from, tag as u64);
+            // Wait until the message is delivered in virtual time.
+            let wait = msg.arrival_vt - self.vt;
+            self.charge_comm(wait);
+            return msg.payload;
+        }
+        // Faulted receive: unwrap envelopes, discarding corrupt copies
+        // (checksum mismatch — the sender retransmits) and duplicate
+        // sequence numbers (idempotent dedup), until a fresh payload
+        // arrives. The delivered payload stream is byte-identical to the
+        // fault-free run; only the arrival clock differs.
+        loop {
+            let msg = self.take_matching(from, tag as u64);
+            let verdict =
+                self.faults.as_mut().expect("checked above").streams[from].accept(&msg.payload);
+            match verdict {
+                Ok(Some(payload)) => {
+                    let wait = msg.arrival_vt - self.vt;
+                    self.charge_comm(wait);
+                    return payload;
+                }
+                Ok(None) => self.stats.faults_mut().dup_discards += 1,
+                Err(_) => self.stats.faults_mut().corrupt_discards += 1,
+            }
+        }
     }
 
     /// Simultaneous send+recv (the ring primitive), with the communication
@@ -221,14 +355,28 @@ impl Comm {
         payload: Vec<u8>,
         compute: impl FnOnce() -> R,
     ) -> (R, Vec<u8>) {
+        if self.faults.is_some() && to != self.rank {
+            // Under fault injection the overlap window closes: the send
+            // may retransmit and the receive may discard copies, so the
+            // step is accounted sequentially (send, compute, recv).
+            // Only faulted runs lose the overlap modeling.
+            self.send(to, tag, payload);
+            let cpu0 = crate::util::thread_cpu_time();
+            let out = compute();
+            let cpu1 = crate::util::thread_cpu_time();
+            let c = (cpu1 - cpu0).max(0.0);
+            self.cpu_mark = cpu1;
+            self.vt += c;
+            self.stats.add_compute(c);
+            let got = self.recv(from, tag);
+            return (out, got);
+        }
         self.absorb_compute();
         let start = self.vt;
         let bytes = payload.len() as u64;
         let arrival = start + self.cost.p2p(bytes);
         self.stats.count_send(bytes);
-        self.txs[to]
-            .send(Msg { from: self.rank, tag: tag as u64, payload, arrival_vt: arrival })
-            .expect("receiver hung up");
+        self.transmit(to, tag as u64, payload, arrival);
 
         // Run the overlapped compute and measure its CPU cost.
         let cpu0 = crate::util::thread_cpu_time();
@@ -247,16 +395,42 @@ impl Comm {
     }
 
     /// Pull the next message matching `(from, tag)`, buffering others.
+    /// In a faulted world the blocking wait polls the shared abort flag
+    /// every 5 ms, so a killed peer bounds every receive instead of
+    /// hanging it (the typed [`WorldAbort::Aborted`] unwind).
     fn take_matching(&mut self, from: usize, tag: u64) -> Msg {
         if let Some(pos) = self.pending.iter().position(|m| m.from == from && m.tag == tag) {
             return self.pending.swap_remove(pos);
         }
-        loop {
-            let msg = self.rx.recv().expect("world shut down while receiving");
-            if msg.from == from && msg.tag == tag {
-                return msg;
+        if self.faults.is_none() {
+            // Fault-free worlds never abort: plain blocking receive.
+            loop {
+                let msg = self.rx.recv().expect("world shut down while receiving");
+                if msg.from == from && msg.tag == tag {
+                    return msg;
+                }
+                self.pending.push(msg);
             }
-            self.pending.push(msg);
+        }
+        loop {
+            if self.abort.load(Ordering::SeqCst) {
+                std::panic::panic_any(WorldAbort::Aborted { rank: self.rank });
+            }
+            match self.rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(msg) => {
+                    if msg.from == from && msg.tag == tag {
+                        return msg;
+                    }
+                    self.pending.push(msg);
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if self.abort.load(Ordering::SeqCst) {
+                        std::panic::panic_any(WorldAbort::Aborted { rank: self.rank });
+                    }
+                    panic!("world shut down while receiving");
+                }
+            }
         }
     }
 
@@ -270,9 +444,10 @@ impl Comm {
     }
 
     fn raw_send(&mut self, to: usize, tag: u64, payload: Vec<u8>) {
-        self.txs[to]
-            .send(Msg { from: self.rank, tag, payload, arrival_vt: 0.0 })
-            .expect("receiver hung up");
+        // Collective traffic bypasses the fault lottery by construction
+        // (arrival_vt 0.0; cost charged analytically), but still routes
+        // through `transmit` so a dying world aborts typed, not panics.
+        self.transmit(to, tag, payload, 0.0);
     }
 
     fn raw_recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
@@ -433,7 +608,7 @@ impl Comm {
     #[cfg(test)]
     pub(crate) fn new_loopback() -> Comm {
         let (tx, rx) = std::sync::mpsc::channel();
-        Comm::new(0, 1, vec![tx], rx, CostModel::default())
+        Comm::new(0, 1, vec![tx], rx, CostModel::default(), None, Arc::new(AtomicBool::new(false)))
     }
 }
 
@@ -609,6 +784,129 @@ mod tests {
         c.finish();
         assert!(c.virtual_time() >= 0.75);
         assert!(c.stats().phases()["tree"].compute >= 0.75);
+    }
+
+    #[test]
+    fn faulted_p2p_payloads_survive_the_lottery() {
+        let plan = FaultPlan {
+            drop: 0.2,
+            corrupt: 0.2,
+            duplicate: 0.1,
+            delay: 0.1,
+            ..Default::default()
+        };
+        let outs = run_world_with(2, CostModel::default(), Some(&plan), |c| {
+            if c.rank() == 0 {
+                for i in 0..48u32 {
+                    c.send(1, i, vec![i as u8; (i as usize % 7) + 1]);
+                }
+                Vec::new()
+            } else {
+                (0..48u32).flat_map(|i| c.recv(0, i)).collect()
+            }
+        });
+        let want: Vec<u8> =
+            (0..48u32).flat_map(|i| vec![i as u8; (i as usize % 7) + 1]).collect();
+        assert_eq!(outs[1].result, want, "delivered payloads must match the fault-free stream");
+        let mut total = FaultCounters::default();
+        total.merge(outs[0].stats.faults());
+        total.merge(outs[1].stats.faults());
+        assert!(total.any(), "a 60% fault share over 48 sends must perturb something");
+        assert_eq!(
+            total.retries,
+            total.drops + total.corrupts,
+            "every drop/corrupt costs exactly one retry"
+        );
+    }
+
+    #[test]
+    fn faulted_runs_replay_bit_identically() {
+        let plan = FaultPlan {
+            drop: 0.15,
+            corrupt: 0.15,
+            duplicate: 0.1,
+            delay: 0.1,
+            seed: 99,
+            ..Default::default()
+        };
+        let run = || {
+            run_world_with(3, CostModel::default(), Some(&plan), |c| {
+                let next = (c.rank() + 1) % c.size();
+                let prev = (c.rank() + c.size() - 1) % c.size();
+                let mut got = Vec::new();
+                for s in 0..8u32 {
+                    c.send(next, s, vec![c.rank() as u8, s as u8]);
+                    got.extend(c.recv(prev, s));
+                }
+                (got, *c.stats().faults())
+            })
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.result, y.result, "rank {} diverged across replays", x.rank);
+        }
+    }
+
+    #[test]
+    fn kill_aborts_every_rank_with_typed_payloads() {
+        let plan = FaultPlan {
+            kill_rank: Some(0),
+            kill_phase: Some("work".into()),
+            ..Default::default()
+        };
+        let outs = run_world_with(2, CostModel::default(), Some(&plan), |c| {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                c.set_phase("work");
+                if c.rank() == 1 {
+                    // Would block forever in a fault-free world — the
+                    // abort flag must free it in bounded wall time.
+                    let _ = c.recv(0, 77);
+                }
+            }));
+            caught.err().and_then(|p| p.downcast_ref::<WorldAbort>().cloned())
+        });
+        assert_eq!(outs[0].result, Some(WorldAbort::Killed { rank: 0, phase: "work".into() }));
+        assert_eq!(outs[1].result, Some(WorldAbort::Aborted { rank: 1 }));
+    }
+
+    #[test]
+    fn total_loss_is_unreachable_not_a_hang() {
+        let plan = FaultPlan { drop: 1.0, ..Default::default() };
+        let outs = run_world_with(2, CostModel::default(), Some(&plan), |c| {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if c.rank() == 0 {
+                    c.send(1, 9, vec![1, 2, 3]);
+                    c.recv(1, 10)
+                } else {
+                    let got = c.recv(0, 9);
+                    c.send(0, 10, vec![4]);
+                    got
+                }
+            }));
+            caught.err().and_then(|p| p.downcast_ref::<WorldAbort>().cloned())
+        });
+        assert_eq!(outs[0].result, Some(WorldAbort::Unreachable { from: 0, to: 1 }));
+        assert_eq!(outs[1].result, Some(WorldAbort::Aborted { rank: 1 }));
+    }
+
+    #[test]
+    fn delay_inflates_virtual_time_but_not_payloads() {
+        // delay=1.0 ⇒ every message is late by exactly delay_us; the
+        // receiver's clock must absorb the lateness.
+        let plan = FaultPlan { delay: 1.0, delay_us: 50_000, ..Default::default() };
+        let outs = run_world_with(2, CostModel { alpha: 0.0, beta_inv: 0.0 }, Some(&plan), |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![7]);
+                0.0
+            } else {
+                let got = c.recv(0, 1);
+                assert_eq!(got, vec![7]);
+                c.virtual_time()
+            }
+        });
+        assert!(outs[1].result >= 0.05, "50ms of injected delay missing: {}", outs[1].result);
+        assert_eq!(outs[0].stats.faults().delayed_us, 50_000);
     }
 
     #[test]

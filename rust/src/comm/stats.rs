@@ -1,6 +1,7 @@
 //! Per-rank communication/computation statistics with named phases —
 //! the data behind the paper's Figure 3–5 breakdowns.
 
+use super::faults::FaultCounters;
 use std::collections::BTreeMap;
 
 /// Compute vs (modeled) communication seconds inside one phase.
@@ -24,6 +25,7 @@ pub struct CommStats {
     current: String,
     bytes_sent: u64,
     msgs_sent: u64,
+    faults: FaultCounters,
 }
 
 impl CommStats {
@@ -31,7 +33,14 @@ impl CommStats {
         let current = "default".to_string();
         let mut phases = BTreeMap::new();
         phases.insert(current.clone(), PhaseTimes::default());
-        CommStats { phases, phase_order: vec![current.clone()], current, bytes_sent: 0, msgs_sent: 0 }
+        CommStats {
+            phases,
+            phase_order: vec![current.clone()],
+            current,
+            bytes_sent: 0,
+            msgs_sent: 0,
+            faults: FaultCounters::default(),
+        }
     }
 
     pub(crate) fn set_phase(&mut self, name: &str) {
@@ -71,6 +80,15 @@ impl CommStats {
 
     pub fn msgs_sent(&self) -> u64 {
         self.msgs_sent
+    }
+
+    /// Fault events observed by this rank (all zero when no plan is set).
+    pub fn faults(&self) -> &FaultCounters {
+        &self.faults
+    }
+
+    pub(crate) fn faults_mut(&mut self) -> &mut FaultCounters {
+        &mut self.faults
     }
 
     /// Total across phases.

@@ -1,7 +1,9 @@
 //! World launcher: spawns one OS thread per rank and runs the SPMD closure.
 
+use super::faults::{self, FaultPlan};
 use super::{Comm, CommStats, CostModel, Msg};
-use std::sync::mpsc;
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
 
 /// Result of one rank's execution.
 #[derive(Clone, Debug)]
@@ -13,8 +15,14 @@ pub struct RankOutput<T> {
     pub stats: CommStats,
 }
 
-/// Build the fully-connected channel mesh for `n` ranks.
-pub(crate) fn spawn_comms(n: usize, cost: CostModel) -> Vec<Comm> {
+/// Build the fully-connected channel mesh for `n` ranks. When a fault
+/// plan is given, every rank carries its own forked lottery stream plus
+/// one abort flag shared by the whole world.
+pub(crate) fn spawn_comms(n: usize, cost: CostModel, plan: Option<&FaultPlan>) -> Vec<Comm> {
+    if plan.is_some() {
+        faults::install_quiet_abort_hook();
+    }
+    let abort = Arc::new(AtomicBool::new(false));
     let mut txs: Vec<mpsc::Sender<Msg>> = Vec::with_capacity(n);
     let mut rxs: Vec<mpsc::Receiver<Msg>> = Vec::with_capacity(n);
     for _ in 0..n {
@@ -24,7 +32,10 @@ pub(crate) fn spawn_comms(n: usize, cost: CostModel) -> Vec<Comm> {
     }
     rxs.into_iter()
         .enumerate()
-        .map(|(rank, rx)| Comm::new(rank, n, txs.clone(), rx, cost))
+        .map(|(rank, rx)| {
+            let fs = plan.map(|p| faults::FaultState::new(p.clone(), rank, n));
+            Comm::new(rank, n, txs.clone(), rx, cost, fs, abort.clone())
+        })
         .collect()
 }
 
@@ -38,8 +49,25 @@ where
     T: Send,
     F: Fn(&mut Comm) -> T + Sync,
 {
+    run_world_with(n, cost, None, f)
+}
+
+/// [`run_world`] with an optional fault plan injected into every rank's
+/// point-to-point path (DESIGN.md §11). The closure is responsible for
+/// catching [`super::WorldAbort`] panics (the dist driver wraps the
+/// algorithm body in `catch_unwind`), so rank threads never unwind out.
+pub fn run_world_with<T, F>(
+    n: usize,
+    cost: CostModel,
+    plan: Option<&FaultPlan>,
+    f: F,
+) -> Vec<RankOutput<T>>
+where
+    T: Send,
+    F: Fn(&mut Comm) -> T + Sync,
+{
     assert!(n >= 1, "need at least one rank");
-    let comms = spawn_comms(n, cost);
+    let comms = spawn_comms(n, cost, plan);
     let f = &f;
     let mut outputs: Vec<Option<RankOutput<T>>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {

@@ -10,7 +10,7 @@ mod toml;
 
 pub use toml::{ParseError, TomlDoc, Value};
 
-use crate::comm::CostModel;
+use crate::comm::{CostModel, FaultPlan};
 use crate::dist::{Algorithm, AssignStrategy, CenterStrategy, GhostMode, RunConfig};
 use crate::index::IndexKind;
 use crate::serve::ServeConfig;
@@ -35,6 +35,10 @@ pub enum ConfigError {
     /// A `serve.*` key holds an unusable value (bad listen address, zero
     /// batch cap, queue bound below the batch cap, oversized window).
     BadServe { key: &'static str, value: String, why: &'static str },
+    /// A `run.fault_*` / `run.kill_*` key holds an unusable value (a
+    /// probability outside [0, 1], lottery mass above 1, a kill rank
+    /// outside the world).
+    BadFaults { key: &'static str, value: String, why: &'static str },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -58,6 +62,9 @@ impl std::fmt::Display for ConfigError {
             ),
             ConfigError::BadServe { key, value, why } => {
                 write!(f, "serve.{key} = {value:?} is unusable: {why}")
+            }
+            ConfigError::BadFaults { key, value, why } => {
+                write!(f, "run.{key} = {value:?} is unusable: {why}")
             }
         }
     }
@@ -177,6 +184,42 @@ impl ExperimentConfig {
                     cfg.run.cost.beta_inv = value.as_f64().ok_or("beta_inv must be a number")?
                 }
                 "run.seed" => cfg.run.seed = value.as_usize().ok_or("seed must be an integer")? as u64,
+                "run.fault_drop" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).drop =
+                        value.as_f64().ok_or("fault_drop must be a number")?
+                }
+                "run.fault_corrupt" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).corrupt =
+                        value.as_f64().ok_or("fault_corrupt must be a number")?
+                }
+                "run.fault_duplicate" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).duplicate =
+                        value.as_f64().ok_or("fault_duplicate must be a number")?
+                }
+                "run.fault_delay" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).delay =
+                        value.as_f64().ok_or("fault_delay must be a number")?
+                }
+                "run.fault_delay_us" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).delay_us =
+                        value.as_usize().ok_or("fault_delay_us must be an integer")? as u64
+                }
+                "run.fault_seed" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).seed =
+                        value.as_usize().ok_or("fault_seed must be an integer")? as u64
+                }
+                "run.kill_rank" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).kill_rank =
+                        Some(value.as_usize().ok_or("kill_rank must be an integer")?)
+                }
+                "run.kill_phase" => {
+                    cfg.run.faults.get_or_insert_with(FaultPlan::default).kill_phase =
+                        Some(value.as_str().ok_or("kill_phase must be a string")?.into())
+                }
+                "run.checkpoint_dir" => {
+                    cfg.run.checkpoint_dir =
+                        Some(value.as_str().ok_or("checkpoint_dir must be a string")?.into())
+                }
                 "serve.addr" => {
                     cfg.serve.addr = value.as_str().ok_or("serve.addr must be a string")?.into()
                 }
@@ -194,6 +237,10 @@ impl ExperimentConfig {
                 }
                 "serve.threads" => {
                     cfg.serve.threads = value.as_usize().ok_or("serve.threads must be an integer")?
+                }
+                "serve.deadline_us" => {
+                    cfg.serve.deadline_us =
+                        value.as_usize().ok_or("serve.deadline_us must be an integer")? as u64
                 }
                 other => return Err(format!("unknown config key {other:?}")),
             }
@@ -226,7 +273,48 @@ impl ExperimentConfig {
                 return Err(ConfigError::BadTargetDegree { value: self.target_degree });
             }
         }
+        self.validate_faults()?;
         self.validate_serve()
+    }
+
+    /// Reject unusable fault-injection settings: each lottery probability
+    /// must lie in [0, 1], the four together must not exceed probability
+    /// mass 1 (one lottery draw picks at most one fault per send), and a
+    /// kill target must name a rank that exists.
+    pub fn validate_faults(&self) -> Result<(), ConfigError> {
+        let Some(plan) = &self.run.faults else { return Ok(()) };
+        for (key, p) in [
+            ("fault_drop", plan.drop),
+            ("fault_corrupt", plan.corrupt),
+            ("fault_duplicate", plan.duplicate),
+            ("fault_delay", plan.delay),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(ConfigError::BadFaults {
+                    key,
+                    value: p.to_string(),
+                    why: "fault probabilities must lie in [0, 1]",
+                });
+            }
+        }
+        let mass = plan.drop + plan.corrupt + plan.duplicate + plan.delay;
+        if mass > 1.0 {
+            return Err(ConfigError::BadFaults {
+                key: "fault_drop",
+                value: mass.to_string(),
+                why: "fault probabilities must sum to at most 1 (one lottery per send)",
+            });
+        }
+        if let Some(rank) = plan.kill_rank {
+            if rank >= self.run.ranks {
+                return Err(ConfigError::BadFaults {
+                    key: "kill_rank",
+                    value: rank.to_string(),
+                    why: "the kill target must be a rank below run.ranks",
+                });
+            }
+        }
+        Ok(())
     }
 
     /// Reject unusable `serve.*` settings. Part of [`validate`]
@@ -447,6 +535,78 @@ ghost = "all"
         // Type and typo errors are loud.
         assert!(ExperimentConfig::from_toml("[serve]\nmax_batch = \"lots\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[serve]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn fault_keys_parse_into_a_fault_plan() {
+        let cfg = ExperimentConfig::from_toml(
+            "[run]\nranks = 4\nfault_drop = 0.1\nfault_corrupt = 0.05\nfault_duplicate = 0.02\n\
+             fault_delay = 0.2\nfault_delay_us = 50\nfault_seed = 99\nkill_rank = 2\n\
+             kill_phase = \"tree\"\ncheckpoint_dir = \"/tmp/ckpt\"\n",
+        )
+        .unwrap();
+        let plan = cfg.run.faults.as_ref().expect("plan materialised");
+        assert_eq!(plan.drop, 0.1);
+        assert_eq!(plan.corrupt, 0.05);
+        assert_eq!(plan.duplicate, 0.02);
+        assert_eq!(plan.delay, 0.2);
+        assert_eq!(plan.delay_us, 50);
+        assert_eq!(plan.seed, 99);
+        assert_eq!(plan.kill_rank, Some(2));
+        assert_eq!(plan.kill_phase.as_deref(), Some("tree"));
+        assert_eq!(cfg.run.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/ckpt")));
+        assert!(cfg.validate().is_ok());
+        // No fault keys ⇒ no plan at all (the zero-overhead clean path).
+        let clean = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
+        assert!(clean.run.faults.is_none());
+        assert!(clean.run.checkpoint_dir.is_none());
+        // serve.deadline_us parses alongside.
+        let cfg = ExperimentConfig::from_toml("[serve]\ndeadline_us = 1500\n").unwrap();
+        assert_eq!(cfg.serve.deadline_us, 1500);
+    }
+
+    #[test]
+    fn validate_rejects_unusable_fault_settings() {
+        let bad = |mutate: &dyn Fn(&mut ExperimentConfig)| {
+            let mut cfg = ExperimentConfig::default();
+            mutate(&mut cfg);
+            cfg.validate_faults()
+        };
+        assert!(matches!(
+            bad(&|c| c.run.faults.get_or_insert_with(FaultPlan::default).drop = 1.5),
+            Err(ConfigError::BadFaults { key: "fault_drop", .. })
+        ));
+        assert!(matches!(
+            bad(&|c| c.run.faults.get_or_insert_with(FaultPlan::default).corrupt = -0.1),
+            Err(ConfigError::BadFaults { key: "fault_corrupt", .. })
+        ));
+        assert!(matches!(
+            bad(&|c| c.run.faults.get_or_insert_with(FaultPlan::default).delay = f64::NAN),
+            Err(ConfigError::BadFaults { key: "fault_delay", .. })
+        ));
+        // Individually legal probabilities whose sum exceeds one lottery.
+        let err = bad(&|c| {
+            let plan = c.run.faults.get_or_insert_with(FaultPlan::default);
+            plan.drop = 0.5;
+            plan.corrupt = 0.4;
+            plan.duplicate = 0.3;
+        })
+        .expect_err("over-full lottery");
+        assert!(err.to_string().contains("sum to at most 1"), "unexpected: {err}");
+        // A kill target outside the world.
+        assert!(matches!(
+            bad(&|c| {
+                c.run.ranks = 4;
+                c.run.faults.get_or_insert_with(FaultPlan::default).kill_rank = Some(4);
+            }),
+            Err(ConfigError::BadFaults { key: "kill_rank", .. })
+        ));
+        // A plan of zeros (or none at all) passes.
+        assert!(bad(&|c| {
+            c.run.faults = Some(FaultPlan::default());
+        })
+        .is_ok());
+        assert!(ExperimentConfig::default().validate_faults().is_ok());
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub use invariants::check_invariants;
 pub use layout::FlatTree;
 pub use scratch::QueryScratch;
 pub use snapshot::{peek_point_tag, point_tag, SnapshotError, SNAPSHOT_MAGIC};
+pub(crate) use snapshot::fnv1a64;
 
 use crate::metric::Metric;
 use crate::points::PointSet;

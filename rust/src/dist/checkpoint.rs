@@ -1,0 +1,234 @@
+//! Per-rank run checkpoints (DESIGN.md §11): FNV-1a-checksummed frames
+//! written crash-safely (`util::write_atomic`) at phase boundaries and
+//! at rank completion, so a killed distributed run can `--resume`
+//! instead of recomputing from scratch.
+//!
+//! Frame layout (`NGC-CKP1`, little-endian):
+//!
+//! ```text
+//! magic[8] | version u64 | fnv1a64(payload) u64 | payload_len u64 | payload
+//! payload = fingerprint u64 | rank u64 | ranks u64
+//!         | label_len u64 | label bytes | data_len u64 | data
+//! ```
+//!
+//! The `fingerprint` binds a frame to one exact run configuration
+//! (algorithm, ranks, ε or k, the point bytes, seed, …) — a checkpoint
+//! from a different run, rank count or dataset is rejected on load, so
+//! `--resume` can only ever reproduce the run it came from.
+
+use crate::covertree::fnv1a64;
+use crate::points::{put_u64, try_get_u64, try_take, WireError};
+use std::path::PathBuf;
+
+/// Checkpoint frame magic.
+pub const CKPT_MAGIC: &[u8; 8] = b"NGC-CKP1";
+/// Checkpoint format version.
+pub const CKPT_VERSION: u64 = 1;
+
+/// A decoded checkpoint frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CkptFrame {
+    pub fingerprint: u64,
+    pub rank: u64,
+    pub ranks: u64,
+    pub label: String,
+    pub data: Vec<u8>,
+}
+
+/// Encode one checkpoint frame.
+pub fn encode_frame(fingerprint: u64, rank: u64, ranks: u64, label: &str, data: &[u8]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(40 + label.len() + data.len());
+    put_u64(&mut payload, fingerprint);
+    put_u64(&mut payload, rank);
+    put_u64(&mut payload, ranks);
+    put_u64(&mut payload, label.len() as u64);
+    payload.extend_from_slice(label.as_bytes());
+    put_u64(&mut payload, data.len() as u64);
+    payload.extend_from_slice(data);
+    let mut out = Vec::with_capacity(32 + payload.len());
+    out.extend_from_slice(CKPT_MAGIC);
+    put_u64(&mut out, CKPT_VERSION);
+    put_u64(&mut out, fnv1a64(&payload));
+    put_u64(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode one checkpoint frame. Every length, magic, version and
+/// checksum violation is a typed [`WireError`] — never a panic.
+pub fn decode_frame(bytes: &[u8]) -> Result<CkptFrame, WireError> {
+    let mut off = 0usize;
+    let magic = try_take(bytes, &mut off, 8, "checkpoint magic")?;
+    if magic != CKPT_MAGIC {
+        return Err(WireError::Corrupt { what: "checkpoint magic" });
+    }
+    let version = try_get_u64(bytes, &mut off, "checkpoint version")?;
+    if version != CKPT_VERSION {
+        return Err(WireError::Corrupt { what: "checkpoint version" });
+    }
+    let fnv = try_get_u64(bytes, &mut off, "checkpoint checksum")?;
+    let len = try_get_u64(bytes, &mut off, "checkpoint length")?;
+    let len = usize::try_from(len).map_err(|_| WireError::Corrupt { what: "checkpoint length" })?;
+    let payload = try_take(bytes, &mut off, len, "checkpoint payload")?;
+    if off != bytes.len() {
+        return Err(WireError::Corrupt { what: "checkpoint trailing bytes" });
+    }
+    if fnv1a64(payload) != fnv {
+        return Err(WireError::Corrupt { what: "checkpoint checksum" });
+    }
+    let mut p = 0usize;
+    let fingerprint = try_get_u64(payload, &mut p, "checkpoint fingerprint")?;
+    let rank = try_get_u64(payload, &mut p, "checkpoint rank")?;
+    let ranks = try_get_u64(payload, &mut p, "checkpoint rank count")?;
+    let label_len = try_get_u64(payload, &mut p, "checkpoint label length")?;
+    let label_len = usize::try_from(label_len)
+        .map_err(|_| WireError::Corrupt { what: "checkpoint label length" })?;
+    let label_bytes = try_take(payload, &mut p, label_len, "checkpoint label")?;
+    let label = std::str::from_utf8(label_bytes)
+        .map_err(|_| WireError::Corrupt { what: "checkpoint label" })?
+        .to_string();
+    let data_len = try_get_u64(payload, &mut p, "checkpoint data length")?;
+    let data_len = usize::try_from(data_len)
+        .map_err(|_| WireError::Corrupt { what: "checkpoint data length" })?;
+    let data = try_take(payload, &mut p, data_len, "checkpoint data")?.to_vec();
+    if p != payload.len() {
+        return Err(WireError::Corrupt { what: "checkpoint payload trailing bytes" });
+    }
+    Ok(CkptFrame { fingerprint, rank, ranks, label, data })
+}
+
+/// Handle for saving/loading one run's per-rank checkpoints under a
+/// directory. Plain data — shared by reference across rank threads.
+///
+/// Saves are best-effort (a full disk must not fail the run — the
+/// checkpoint is an optimization, the recomputation path stays
+/// correct); loads verify checksum, fingerprint, rank identity and
+/// label before handing bytes back.
+#[derive(Clone, Debug)]
+pub struct Checkpointer {
+    dir: PathBuf,
+    fingerprint: u64,
+    ranks: usize,
+}
+
+impl Checkpointer {
+    pub fn new(dir: impl Into<PathBuf>, fingerprint: u64, ranks: usize) -> Self {
+        Checkpointer { dir: dir.into(), fingerprint, ranks }
+    }
+
+    /// The on-disk path of one rank's checkpoint for `label`.
+    pub fn path(&self, rank: usize, label: &str) -> PathBuf {
+        self.dir.join(format!("ckpt-r{rank}-{label}.ngc"))
+    }
+
+    /// Crash-safe best-effort save of one rank's `label` checkpoint.
+    pub fn save(&self, rank: usize, label: &str, data: &[u8]) {
+        if std::fs::create_dir_all(&self.dir).is_err() {
+            return;
+        }
+        let frame = encode_frame(self.fingerprint, rank as u64, self.ranks as u64, label, data);
+        let _ = crate::util::write_atomic(&self.path(rank, label), &frame);
+    }
+
+    /// Load one rank's `label` checkpoint, or `None` if it is missing,
+    /// corrupt, or belongs to a different run/rank/label.
+    pub fn load(&self, rank: usize, label: &str) -> Option<Vec<u8>> {
+        let bytes = std::fs::read(self.path(rank, label)).ok()?;
+        let f = decode_frame(&bytes).ok()?;
+        (f.fingerprint == self.fingerprint
+            && f.rank == rank as u64
+            && f.ranks == self.ranks as u64
+            && f.label == label)
+            .then_some(f.data)
+    }
+
+    /// Load every rank's `label` checkpoint — `None` unless **all**
+    /// ranks have a valid one (a partial set cannot reproduce the run).
+    pub fn load_all(&self, label: &str) -> Option<Vec<Vec<u8>>> {
+        (0..self.ranks).map(|r| self.load(r, label)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("neargraph-ckpt-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn frame_roundtrips() {
+        let frame = encode_frame(0xF1F2, 3, 8, "selfjoin", b"edge bytes here");
+        let got = decode_frame(&frame).unwrap();
+        assert_eq!(got.fingerprint, 0xF1F2);
+        assert_eq!(got.rank, 3);
+        assert_eq!(got.ranks, 8);
+        assert_eq!(got.label, "selfjoin");
+        assert_eq!(got.data, b"edge bytes here");
+    }
+
+    #[test]
+    fn frame_rejects_mutations() {
+        let frame = encode_frame(1, 0, 2, "final", b"data");
+        for cut in 0..frame.len() {
+            assert!(decode_frame(&frame[..cut]).is_err(), "cut {cut} decoded");
+        }
+        for byte in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[byte] ^= 0x10;
+            assert!(decode_frame(&bad).is_err(), "flip in byte {byte} undetected");
+        }
+        let mut long = frame.clone();
+        long.push(0);
+        assert!(decode_frame(&long).is_err());
+    }
+
+    #[test]
+    fn checkpointer_roundtrips_and_verifies_identity() {
+        let dir = tmp_dir("roundtrip");
+        let ck = Checkpointer::new(&dir, 0xABCD, 2);
+        ck.save(0, "final", b"rank zero");
+        ck.save(1, "final", b"rank one");
+        assert_eq!(ck.load(0, "final").unwrap(), b"rank zero");
+        assert_eq!(
+            ck.load_all("final").unwrap(),
+            vec![b"rank zero".to_vec(), b"rank one".to_vec()]
+        );
+        // Missing label / rank ⇒ None.
+        assert!(ck.load(0, "selfjoin").is_none());
+        assert!(ck.load_all("selfjoin").is_none());
+        // A different fingerprint (another run) must reject the file.
+        let other = Checkpointer::new(&dir, 0xDCBA, 2);
+        assert!(other.load(0, "final").is_none());
+        // A different rank count likewise.
+        let wide = Checkpointer::new(&dir, 0xABCD, 4);
+        assert!(wide.load(0, "final").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mid_write_kill_leaves_previous_checkpoint_loadable() {
+        let dir = tmp_dir("midwrite");
+        let ck = Checkpointer::new(&dir, 7, 1);
+        ck.save(0, "final", b"generation one");
+        // Simulated kill: partial garbage in the .tmp sibling, rename
+        // never happened.
+        let mut tmp = ck.path(0, "final").into_os_string();
+        tmp.push(".tmp");
+        std::fs::write(PathBuf::from(tmp), b"NGC-CK").unwrap();
+        assert_eq!(ck.load(0, "final").unwrap(), b"generation one");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_file_on_disk_is_ignored_not_a_panic() {
+        let dir = tmp_dir("corrupt");
+        let ck = Checkpointer::new(&dir, 7, 1);
+        std::fs::write(ck.path(0, "final"), b"definitely not a frame").unwrap();
+        assert!(ck.load(0, "final").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -28,7 +28,8 @@
 //!   (compute/communication overlap), trading extra bandwidth for latency
 //!   that hides behind the query work.
 
-use super::{AssignStrategy, Bundle, CenterStrategy, GhostMode, RunConfig};
+use super::checkpoint::Checkpointer;
+use super::{AssignStrategy, Bundle, CenterStrategy, EdgeBundle, GhostMode, RunConfig};
 use crate::comm::Comm;
 use crate::covertree::{BuildParams, CoverTree, QueryScratch};
 use crate::graph::{GraphSink, WeightedEdgeList};
@@ -157,6 +158,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     eps: f64,
     cfg: &RunConfig,
     ring: bool,
+    ckpt: Option<&Checkpointer>,
 ) -> WeightedEdgeList {
     let mut edges = WeightedEdgeList::new();
     let n = pts.len();
@@ -191,6 +193,13 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
         edges.accept(a, b, d)
     });
     comm.charge_child_cpu(pool.drain_cpu());
+    if let Some(ck) = ckpt {
+        // Best-effort "selfjoin" partial checkpoint: every intra-rank
+        // edge is known once the tree-phase self-join completes
+        // (DESIGN.md §11).
+        let bytes = EdgeBundle { source: rank as u32, edges: edges.clone() }.to_bytes();
+        ck.save(rank, "selfjoin", &bytes);
+    }
 
     // ------------------------------------------------------------------
     // phase: ghost

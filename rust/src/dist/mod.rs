@@ -24,20 +24,30 @@
 //! rank layouts (DESIGN.md §9), returning a bit-deterministic directed
 //! [`KnnGraph`] plus its undirected [`NearGraph`] projection. Its
 //! correctness gate is `tests/knn_conformance.rs`.
+//!
+//! Under an injected [`FaultPlan`] the fallible twins
+//! [`try_run_epsilon_graph`] / [`try_run_knn_graph`] return a typed
+//! [`DistError`] instead of panicking, write fingerprint-bound per-rank
+//! checkpoints when a `checkpoint_dir` is configured, and can `resume` a
+//! killed run to the bit-identical graph (DESIGN.md §11; the gate is
+//! `tests/chaos_conformance.rs`).
 
 mod bipartite;
 mod bundle;
+pub mod checkpoint;
 mod knn;
 mod landmark;
 mod systolic;
 
 pub use bipartite::{run_bipartite_join, BipartiteResult};
 pub use bundle::{Bundle, EdgeBundle, KnnBundle};
+pub use checkpoint::Checkpointer;
 
-use crate::comm::{self, CommStats, CostModel};
+use crate::comm::{self, CommStats, CostModel, FaultCounters, FaultPlan, WorldAbort};
+use crate::covertree::fnv1a64;
 use crate::graph::{EdgeList, KnnGraph, NearGraph, WeightedEdgeList};
 use crate::metric::Metric;
-use crate::points::PointSet;
+use crate::points::{put_u64, PointSet};
 
 /// The distributed algorithm to run (Algorithms 4–6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,6 +118,60 @@ pub enum GhostMode {
     All,
 }
 
+/// Typed failure of a distributed run under fault injection
+/// (DESIGN.md §11). A fault-free run can never produce one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DistError {
+    /// A rank was killed at a phase boundary by the fault plan.
+    RankKilled { rank: usize, phase: String },
+    /// A sender exhausted its retry budget ([`comm::MAX_ATTEMPTS`]) —
+    /// under sustained loss or corruption the peer is unreachable.
+    PeerUnreachable { from: usize, to: usize },
+    /// A rank bailed out because the world was already going down.
+    Aborted { rank: usize },
+}
+
+impl DistError {
+    /// Aggregation priority: the root cause outranks its echoes. A kill
+    /// makes peers unreachable and unreachability aborts bystanders, so
+    /// when several ranks fail the reported error is the most causal one.
+    fn severity(&self) -> u8 {
+        match self {
+            DistError::RankKilled { .. } => 2,
+            DistError::PeerUnreachable { .. } => 1,
+            DistError::Aborted { .. } => 0,
+        }
+    }
+}
+
+impl From<WorldAbort> for DistError {
+    fn from(a: WorldAbort) -> Self {
+        match a {
+            WorldAbort::Killed { rank, phase } => DistError::RankKilled { rank, phase },
+            WorldAbort::Unreachable { from, to } => DistError::PeerUnreachable { from, to },
+            WorldAbort::Aborted { rank } => DistError::Aborted { rank },
+        }
+    }
+}
+
+impl std::fmt::Display for DistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DistError::RankKilled { rank, phase } => {
+                write!(f, "rank {rank} was killed at the {phase:?} phase boundary")
+            }
+            DistError::PeerUnreachable { from, to } => {
+                write!(f, "rank {from} could not reach rank {to} (retry budget exhausted)")
+            }
+            DistError::Aborted { rank } => {
+                write!(f, "rank {rank} aborted while the run was going down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DistError {}
+
 /// Configuration of one distributed run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -132,6 +196,21 @@ pub struct RunConfig {
     /// never exceeds `max(threads, ranks)`. `0` (the default) keeps every
     /// rank single-threaded — the pre-pool behavior.
     pub threads: usize,
+    /// Fault-injection plan for the comm runtime (`None` or an all-zero
+    /// plan ⇒ clean run, byte-identical behavior to before the fault
+    /// layer existed).
+    pub faults: Option<FaultPlan>,
+    /// Directory for per-rank checkpoint frames (`None` ⇒ no
+    /// checkpointing). Use one directory per logical run — frames are
+    /// fingerprint-verified on load, so stale files are ignored, never
+    /// mixed in.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Resume from `checkpoint_dir`: when a complete fingerprint-matching
+    /// set of final checkpoints exists the graph is reassembled from disk
+    /// without running the world; otherwise the run executes normally
+    /// (with any configured kill switch disarmed — restart-after-crash
+    /// semantics) and rewrites the checkpoints.
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -147,6 +226,9 @@ impl Default for RunConfig {
             cost: CostModel::default(),
             seed: 42,
             threads: 0,
+            faults: None,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 }
@@ -198,6 +280,114 @@ pub struct RunResult {
     pub makespan: f64,
     /// Per-rank reports, indexed by rank.
     pub ranks: Vec<RankReport>,
+    /// Aggregate fault counters over every rank's comm layer (all zero
+    /// in a clean run).
+    pub faults: FaultCounters,
+    /// True when the result was reassembled from on-disk checkpoints
+    /// instead of recomputed; `makespan` is 0 and `ranks` is empty in
+    /// that case — no simulated work happened.
+    pub resumed: bool,
+}
+
+/// Fingerprint binding a checkpoint set to one exact run: the kind of
+/// query (ε vs k-NN), its parameter bits, the algorithm, the rank count,
+/// the point bytes, and every knob that changes the computed result.
+/// Fault knobs are deliberately excluded — a faulty run writes the same
+/// graph its clean twin does (that is the chaos-conformance invariant),
+/// so their checkpoints are interchangeable.
+fn run_fingerprint<P: PointSet>(kind: &str, pts: &P, param_bits: u64, cfg: &RunConfig) -> u64 {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(kind.as_bytes());
+    buf.extend_from_slice(cfg.algorithm.name().as_bytes());
+    put_u64(&mut buf, cfg.ranks.max(1) as u64);
+    put_u64(&mut buf, param_bits);
+    put_u64(&mut buf, pts.len() as u64);
+    put_u64(&mut buf, fnv1a64(&pts.to_bytes()));
+    put_u64(&mut buf, cfg.leaf_size as u64);
+    put_u64(&mut buf, cfg.num_centers as u64);
+    put_u64(&mut buf, matches!(cfg.centers, CenterStrategy::Greedy) as u64);
+    put_u64(&mut buf, matches!(cfg.assignment, AssignStrategy::Cyclic) as u64);
+    put_u64(&mut buf, matches!(cfg.ghost, GhostMode::All) as u64);
+    put_u64(&mut buf, cfg.seed);
+    fnv1a64(&buf)
+}
+
+/// The configured checkpointer, if any.
+fn checkpointer_for<P: PointSet>(
+    kind: &str,
+    pts: &P,
+    param_bits: u64,
+    cfg: &RunConfig,
+) -> Option<Checkpointer> {
+    cfg.checkpoint_dir.as_ref().map(|dir| {
+        Checkpointer::new(dir.clone(), run_fingerprint(kind, pts, param_bits, cfg), cfg.ranks.max(1))
+    })
+}
+
+/// The fault plan actually handed to the world: inert plans are dropped
+/// (keeping the clean fast path byte-identical), and a `resume` rerun
+/// disarms the kill switch — the crash being recovered from already
+/// happened; it does not strike twice.
+fn live_plan(cfg: &RunConfig) -> Option<FaultPlan> {
+    let mut plan = cfg.faults.clone()?;
+    if cfg.resume {
+        plan.kill_rank = None;
+        plan.kill_phase = None;
+    }
+    plan.any_faults().then_some(plan)
+}
+
+/// Run one rank's algorithm body, converting [`WorldAbort`] panics into
+/// typed errors. Any other panic is a real bug and keeps unwinding.
+fn catch_abort<F: FnOnce() -> Vec<u8>>(body: F) -> Result<Vec<u8>, DistError> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(body)).map_err(|payload| {
+        match payload.downcast::<WorldAbort>() {
+            Ok(abort) => DistError::from(*abort),
+            Err(other) => std::panic::resume_unwind(other),
+        }
+    })
+}
+
+/// Fold per-rank outcomes into reports, aggregate fault counters, and
+/// either every rank's payload or the most causal typed error.
+#[allow(clippy::type_complexity)]
+fn collect_outputs(
+    outputs: Vec<comm::RankOutput<Result<Vec<u8>, DistError>>>,
+) -> (Vec<RankReport>, FaultCounters, Result<Vec<Vec<u8>>, DistError>) {
+    let mut ranks = Vec::with_capacity(outputs.len());
+    let mut faults = FaultCounters::default();
+    let mut parts = Vec::with_capacity(outputs.len());
+    let mut err: Option<DistError> = None;
+    for o in outputs {
+        faults.merge(o.stats.faults());
+        match o.result {
+            Ok(bytes) => parts.push(bytes),
+            Err(e) => {
+                if err.as_ref().map_or(true, |w| e.severity() > w.severity()) {
+                    err = Some(e);
+                }
+            }
+        }
+        ranks.push(RankReport { rank: o.rank, virtual_time: o.virtual_time, stats: o.stats });
+    }
+    (ranks, faults, err.map_or(Ok(parts), Err))
+}
+
+/// Merge per-rank [`EdgeBundle`] payloads (indexed by rank) into the
+/// canonical outputs. Shared by the live path and the checkpoint-resume
+/// path — which is what makes resume bit-identical by construction.
+fn assemble_epsilon(n: usize, parts: &[Vec<u8>]) -> (EdgeList, WeightedEdgeList, NearGraph) {
+    let mut weighted = WeightedEdgeList::new();
+    for (rank, bytes) in parts.iter().enumerate() {
+        let bundle = EdgeBundle::from_bytes(bytes).expect("per-rank edge bundle decodes");
+        debug_assert_eq!(bundle.source as usize, rank);
+        weighted.merge(&bundle.edges);
+    }
+    weighted.canonicalize();
+    let mut edges = weighted.unweighted();
+    edges.canonicalize();
+    let graph = weighted.clone().into_near_graph(n);
+    (edges, weighted, graph)
 }
 
 /// Build the ε-graph of `pts` under `metric` with the configured
@@ -205,40 +395,68 @@ pub struct RunResult {
 ///
 /// The result is exact — identical to [`crate::baseline::brute_force_edges`]
 /// — for every algorithm and configuration; the algorithms differ only in
-/// simulated time and traffic.
+/// simulated time and traffic. Panics on [`DistError`]; fault-injected
+/// runs should call [`try_run_epsilon_graph`].
 pub fn run_epsilon_graph<P: PointSet, M: Metric<P>>(
     pts: &P,
     metric: M,
     eps: f64,
     cfg: &RunConfig,
 ) -> RunResult {
+    try_run_epsilon_graph(pts, metric, eps, cfg).expect("distributed ε-graph run failed")
+}
+
+/// Fallible [`run_epsilon_graph`]: injects `cfg.faults` into the comm
+/// runtime, checkpoints per-rank results under `cfg.checkpoint_dir`, and
+/// honors `cfg.resume` (DESIGN.md §11). Survivable fault schedules yield
+/// a graph bit-equal to the fault-free run; unsurvivable ones return the
+/// most causal [`DistError`] in bounded virtual time.
+pub fn try_run_epsilon_graph<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    eps: f64,
+    cfg: &RunConfig,
+) -> Result<RunResult, DistError> {
+    let ck = checkpointer_for("epsilon", pts, eps.to_bits(), cfg);
+    if cfg.resume {
+        if let Some(parts) = ck.as_ref().and_then(|ck| ck.load_all("final")) {
+            let (edges, weighted, graph) = assemble_epsilon(pts.len(), &parts);
+            return Ok(RunResult {
+                edges,
+                weighted,
+                graph,
+                makespan: 0.0,
+                ranks: Vec::new(),
+                faults: FaultCounters::default(),
+                resumed: true,
+            });
+        }
+    }
     let p = cfg.ranks.max(1);
-    let outputs = comm::run_world(p, cfg.cost, |c| {
-        let edges = match cfg.algorithm {
-            Algorithm::SystolicRing => systolic::run(c, pts, &metric, eps, cfg),
-            Algorithm::LandmarkColl => landmark::run(c, pts, &metric, eps, cfg, false),
-            Algorithm::LandmarkRing => landmark::run(c, pts, &metric, eps, cfg, true),
-        };
-        // Hand the partial result back through the weighted-edge wire
-        // format — the same bytes a real MPI gather of per-rank results
-        // would move (result collection itself stays outside the α-β
-        // charge, as before).
-        EdgeBundle { source: c.rank() as u32, edges }.to_bytes()
+    let plan = live_plan(cfg);
+    let ck_ref = ck.as_ref();
+    let outputs = comm::run_world_with(p, cfg.cost, plan.as_ref(), |c| {
+        catch_abort(|| {
+            let edges = match cfg.algorithm {
+                Algorithm::SystolicRing => systolic::run(c, pts, &metric, eps, cfg, ck_ref),
+                Algorithm::LandmarkColl => landmark::run(c, pts, &metric, eps, cfg, false, ck_ref),
+                Algorithm::LandmarkRing => landmark::run(c, pts, &metric, eps, cfg, true, ck_ref),
+            };
+            // Hand the partial result back through the weighted-edge wire
+            // format — the same bytes a real MPI gather of per-rank results
+            // would move (result collection itself stays outside the α-β
+            // charge, as before).
+            let bytes = EdgeBundle { source: c.rank() as u32, edges }.to_bytes();
+            if let Some(ck) = ck_ref {
+                ck.save(c.rank(), "final", &bytes);
+            }
+            bytes
+        })
     });
     let makespan = comm::makespan(&outputs);
-    let mut weighted = WeightedEdgeList::new();
-    let mut ranks = Vec::with_capacity(outputs.len());
-    for o in outputs {
-        let bundle = EdgeBundle::from_bytes(&o.result).expect("per-rank edge bundle decodes");
-        debug_assert_eq!(bundle.source as usize, o.rank);
-        weighted.merge(&bundle.edges);
-        ranks.push(RankReport { rank: o.rank, virtual_time: o.virtual_time, stats: o.stats });
-    }
-    weighted.canonicalize();
-    let mut edges = weighted.unweighted();
-    edges.canonicalize();
-    let graph = weighted.clone().into_near_graph(pts.len());
-    RunResult { edges, weighted, graph, makespan, ranks }
+    let (ranks, faults, parts) = collect_outputs(outputs);
+    let (edges, weighted, graph) = assemble_epsilon(pts.len(), &parts?);
+    Ok(RunResult { edges, weighted, graph, makespan, ranks, faults, resumed: false })
 }
 
 /// Result of a distributed k-NN graph construction.
@@ -256,6 +474,37 @@ pub struct KnnResult {
     pub makespan: f64,
     /// Per-rank reports, indexed by rank.
     pub ranks: Vec<RankReport>,
+    /// Aggregate fault counters over every rank's comm layer (all zero
+    /// in a clean run).
+    pub faults: FaultCounters,
+    /// True when the result was reassembled from on-disk checkpoints
+    /// instead of recomputed; `makespan` is 0 and `ranks` is empty in
+    /// that case.
+    pub resumed: bool,
+}
+
+/// Merge per-rank [`KnnBundle`] payloads into the canonical k-NN outputs
+/// — shared by the live path and the checkpoint-resume path.
+fn assemble_knn<P: PointSet>(n: usize, k: usize, parts: &[Vec<u8>]) -> (KnnGraph, NearGraph) {
+    let mut rows: Vec<Option<Vec<(u32, f64)>>> = vec![None; n];
+    for bytes in parts {
+        let bundle: KnnBundle<P> =
+            KnnBundle::try_from_bytes(bytes).expect("per-rank knn bundle decodes");
+        let mut bundle_rows = bundle.rows();
+        for (i, &gid) in bundle.gids.iter().enumerate() {
+            let slot = &mut rows[gid as usize];
+            assert!(slot.is_none(), "point {gid} reported by two ranks");
+            *slot = Some(std::mem::take(&mut bundle_rows[i]));
+        }
+    }
+    let rows: Vec<Vec<(u32, f64)>> = rows
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("point {i} reported by no rank")))
+        .collect();
+    let knn = KnnGraph::from_rows(n, k, rows);
+    let graph = knn.to_near_graph();
+    (knn, graph)
 }
 
 /// Build the exact k-NN graph of `pts` under `metric` with the configured
@@ -267,45 +516,60 @@ pub struct KnnResult {
 /// distance bits, ties by `(distance, id)`) for every algorithm, metric
 /// and configuration; the algorithms differ only in simulated time and
 /// traffic. Each rank hands its certified rows back through the
-/// [`KnnBundle`] wire format.
+/// [`KnnBundle`] wire format. Panics on [`DistError`]; fault-injected
+/// runs should call [`try_run_knn_graph`].
 pub fn run_knn_graph<P: PointSet, M: Metric<P>>(
     pts: &P,
     metric: M,
     k: usize,
     cfg: &RunConfig,
 ) -> KnnResult {
-    let p = cfg.ranks.max(1);
-    let outputs = comm::run_world(p, cfg.cost, |c| {
-        match cfg.algorithm {
-            Algorithm::SystolicRing => knn::run_systolic(c, pts, &metric, k, cfg),
-            Algorithm::LandmarkColl => knn::run_landmark(c, pts, &metric, k, cfg, false),
-            Algorithm::LandmarkRing => knn::run_landmark(c, pts, &metric, k, cfg, true),
+    try_run_knn_graph(pts, metric, k, cfg).expect("distributed k-NN run failed")
+}
+
+/// Fallible [`run_knn_graph`]: fault injection, per-rank checkpoints and
+/// resume, mirroring [`try_run_epsilon_graph`] (DESIGN.md §11).
+pub fn try_run_knn_graph<P: PointSet, M: Metric<P>>(
+    pts: &P,
+    metric: M,
+    k: usize,
+    cfg: &RunConfig,
+) -> Result<KnnResult, DistError> {
+    let ck = checkpointer_for("knn", pts, k as u64, cfg);
+    if cfg.resume {
+        if let Some(parts) = ck.as_ref().and_then(|ck| ck.load_all("final")) {
+            let (knn, graph) = assemble_knn::<P>(pts.len(), k, &parts);
+            return Ok(KnnResult {
+                knn,
+                graph,
+                makespan: 0.0,
+                ranks: Vec::new(),
+                faults: FaultCounters::default(),
+                resumed: true,
+            });
         }
-        .to_bytes()
+    }
+    let p = cfg.ranks.max(1);
+    let plan = live_plan(cfg);
+    let ck_ref = ck.as_ref();
+    let outputs = comm::run_world_with(p, cfg.cost, plan.as_ref(), |c| {
+        catch_abort(|| {
+            let bytes = match cfg.algorithm {
+                Algorithm::SystolicRing => knn::run_systolic(c, pts, &metric, k, cfg),
+                Algorithm::LandmarkColl => knn::run_landmark(c, pts, &metric, k, cfg, false),
+                Algorithm::LandmarkRing => knn::run_landmark(c, pts, &metric, k, cfg, true),
+            }
+            .to_bytes();
+            if let Some(ck) = ck_ref {
+                ck.save(c.rank(), "final", &bytes);
+            }
+            bytes
+        })
     });
     let makespan = comm::makespan(&outputs);
-    let n = pts.len();
-    let mut rows: Vec<Option<Vec<(u32, f64)>>> = vec![None; n];
-    let mut ranks = Vec::with_capacity(outputs.len());
-    for o in outputs {
-        let bundle: KnnBundle<P> =
-            KnnBundle::try_from_bytes(&o.result).expect("per-rank knn bundle decodes");
-        let mut bundle_rows = bundle.rows();
-        for (i, &gid) in bundle.gids.iter().enumerate() {
-            let slot = &mut rows[gid as usize];
-            assert!(slot.is_none(), "point {gid} reported by two ranks");
-            *slot = Some(std::mem::take(&mut bundle_rows[i]));
-        }
-        ranks.push(RankReport { rank: o.rank, virtual_time: o.virtual_time, stats: o.stats });
-    }
-    let rows: Vec<Vec<(u32, f64)>> = rows
-        .into_iter()
-        .enumerate()
-        .map(|(i, r)| r.unwrap_or_else(|| panic!("point {i} reported by no rank")))
-        .collect();
-    let knn = KnnGraph::from_rows(n, k, rows);
-    let graph = knn.to_near_graph();
-    KnnResult { knn, graph, makespan, ranks }
+    let (ranks, faults, parts) = collect_outputs(outputs);
+    let (knn, graph) = assemble_knn::<P>(pts.len(), k, &parts?);
+    Ok(KnnResult { knn, graph, makespan, ranks, faults, resumed: false })
 }
 
 #[cfg(test)]
@@ -437,6 +701,44 @@ mod tests {
                 algorithm.name()
             );
         }
+    }
+
+    #[test]
+    fn dist_error_aggregation_prefers_the_root_cause() {
+        let killed = DistError::RankKilled { rank: 1, phase: "tree".into() };
+        let unreachable = DistError::PeerUnreachable { from: 0, to: 1 };
+        let aborted = DistError::Aborted { rank: 2 };
+        assert!(killed.severity() > unreachable.severity());
+        assert!(unreachable.severity() > aborted.severity());
+        // Display stays human-readable (the CLI prints these verbatim).
+        assert!(killed.to_string().contains("rank 1"));
+        assert!(unreachable.to_string().contains("rank 0"));
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_runs() {
+        let mut rng = Rng::new(610);
+        let pts = synthetic::uniform(&mut rng, 20, 2, 1.0);
+        let cfg = RunConfig::default();
+        let base = run_fingerprint("epsilon", &pts, 0.3f64.to_bits(), &cfg);
+        // Same inputs ⇒ same fingerprint.
+        assert_eq!(base, run_fingerprint("epsilon", &pts, 0.3f64.to_bits(), &cfg));
+        // Any knob that changes the result changes the fingerprint.
+        assert_ne!(base, run_fingerprint("knn", &pts, 0.3f64.to_bits(), &cfg));
+        assert_ne!(base, run_fingerprint("epsilon", &pts, 0.4f64.to_bits(), &cfg));
+        let other = RunConfig { ranks: 2, ..cfg.clone() };
+        assert_ne!(base, run_fingerprint("epsilon", &pts, 0.3f64.to_bits(), &other));
+        let other = RunConfig { algorithm: Algorithm::SystolicRing, ..cfg.clone() };
+        assert_ne!(base, run_fingerprint("epsilon", &pts, 0.3f64.to_bits(), &other));
+        let other = RunConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(base, run_fingerprint("epsilon", &pts, 0.3f64.to_bits(), &other));
+        // Fault knobs are excluded on purpose: a clean rerun may resume a
+        // faulty run's checkpoints (survivable faults don't change output).
+        let other = RunConfig { faults: Some(FaultPlan::default()), ..cfg.clone() };
+        assert_eq!(base, run_fingerprint("epsilon", &pts, 0.3f64.to_bits(), &other));
+        let mut rng2 = Rng::new(611);
+        let pts2 = synthetic::uniform(&mut rng2, 20, 2, 1.0);
+        assert_ne!(base, run_fingerprint("epsilon", &pts2, 0.3f64.to_bits(), &cfg));
     }
 
     #[test]

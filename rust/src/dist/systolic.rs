@@ -14,7 +14,8 @@
 //! The overlap mirrors the paper's observation that the systolic transfer
 //! hides behind the query step until the ring latency `α·(P−1)` dominates.
 
-use super::{Bundle, RunConfig};
+use super::checkpoint::Checkpointer;
+use super::{Bundle, EdgeBundle, RunConfig};
 use crate::comm::Comm;
 use crate::covertree::{BuildParams, CoverTree, QueryScratch};
 use crate::graph::{GraphSink, WeightedEdgeList};
@@ -31,6 +32,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     metric: &M,
     eps: f64,
     cfg: &RunConfig,
+    ckpt: Option<&Checkpointer>,
 ) -> WeightedEdgeList {
     let mut edges = WeightedEdgeList::new();
     let n = pts.len();
@@ -62,6 +64,7 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
             edges.accept(a, b, d)
         });
         comm.charge_child_cpu(pool.drain_cpu());
+        save_selfjoin(ckpt, rank, &edges);
         return edges;
     }
     let next = (rank + 1) % p;
@@ -82,6 +85,11 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
                 }
             });
         visiting = Bundle::from_bytes(&received);
+        if s == 1 {
+            // The intra-block self-join is complete — persist it so a
+            // restarted run has the phase's partial edges on disk.
+            save_selfjoin(ckpt, rank, &edges);
+        }
     }
     // The block received on the last step still needs querying.
     cross_query(&tree, metric, eps, &visiting, &pool, &mut scratch, &mut edges);
@@ -89,6 +97,15 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     // (conservative — the makespan never understates the work done).
     comm.charge_child_cpu(pool.drain_cpu());
     edges
+}
+
+/// Best-effort "selfjoin" partial checkpoint: the rank's intra-block
+/// edges in [`EdgeBundle`] wire form (DESIGN.md §11).
+fn save_selfjoin(ckpt: Option<&Checkpointer>, rank: usize, edges: &WeightedEdgeList) {
+    if let Some(ck) = ckpt {
+        let bytes = EdgeBundle { source: rank as u32, edges: edges.clone() }.to_bytes();
+        ck.save(rank, "selfjoin", &bytes);
+    }
 }
 
 /// Emit every (visiting, local) pair within `eps` — with its distance —

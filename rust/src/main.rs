@@ -23,8 +23,10 @@ use neargraph::bench::{build_workload, Workload};
 use neargraph::cli::Args;
 use neargraph::config::ExperimentConfig;
 use neargraph::data::registry::{DatasetSpec, TABLE1};
+use neargraph::comm::{FaultCounters, FaultPlan};
 use neargraph::dist::{
-    run_epsilon_graph, run_knn_graph, Algorithm, RankReport, RunConfig, RunResult,
+    run_epsilon_graph, try_run_epsilon_graph, try_run_knn_graph, Algorithm, RankReport, RunConfig,
+    RunResult,
 };
 use neargraph::graph::KnnGraph;
 use neargraph::index::{build_index_par, epsilon_graph, IndexKind, IndexParams};
@@ -65,6 +67,9 @@ const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck> [flag
     --max-batch <n>              batch-size cap that ripens a batch early
     --queue-cap <n>              admission bound (typed overload beyond it)
     --threads <n>                query lanes answering batches
+    --deadline-us <n>            per-request deadline from admission; a
+                                 query waiting longer gets the typed
+                                 deadline-exceeded error (0 = none)
   query flags (client for a running daemon):
     --addr <ip:port>             daemon address (required)
     --dataset/--scale/--points/--seed
@@ -75,7 +80,10 @@ const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck> [flag
     --pipeline <n>               in-flight requests per connection
     --verify                     check replies bit-equal vs brute force
     --shutdown                   ask the daemon to drain and exit after
-    --retry-connect <n>          connect attempts 100ms apart (default 1)
+    --retry-connect <n>          connect attempts with exponential backoff
+                                 from 100ms (default 1)
+    --timeout <ms>               per-reply read deadline; a silent daemon
+                                 is a typed error, not a hang (0 = none)
   run flags:
     --config <file.toml>         load an experiment config
     --dataset <name>             Table-I analog (see `neargraph datasets`)
@@ -102,7 +110,19 @@ const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck> [flag
     --out <file>                 write the weighted graph
     --out-format <tsv|csr>       --out format: \"u v w\" lines (tsv, the
                                  default) or binary CSR (csr; NGW-CSR1 for
-                                 ε runs, NGK-KNN1 directed rows for --knn)";
+                                 ε runs, NGK-KNN1 directed rows for --knn)
+  run fault-injection flags (seeded chaos; DESIGN.md §11):
+    --fault-drop <p>             per-send drop probability
+    --fault-corrupt <p>          per-send corruption probability
+    --fault-duplicate <p>        per-send duplication probability
+    --fault-delay <p>            per-send delay probability
+    --fault-delay-us <n>         virtual delay charged per delayed send
+    --fault-seed <n>             fault-lottery seed (replays bit-identically)
+    --kill-rank <r>              kill this rank at a phase boundary
+    --kill-phase <name>          the boundary to kill at (e.g. tree, ring)
+    --checkpoint-dir <dir>       persist per-rank partial results (NGC-CKP1)
+    --resume                     reload final checkpoints instead of
+                                 recomputing (bit-identical graph)";
 
 fn fail(msg: &str) -> ! {
     eprintln!("error: {msg}");
@@ -176,9 +196,41 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         cfg.index =
             Some(IndexKind::parse(k).ok_or_else(|| format!("unknown index kind {k:?}"))?);
     }
+    if let Some(v) = args.get_f64("fault-drop")? {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).drop = v;
+    }
+    if let Some(v) = args.get_f64("fault-corrupt")? {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).corrupt = v;
+    }
+    if let Some(v) = args.get_f64("fault-duplicate")? {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).duplicate = v;
+    }
+    if let Some(v) = args.get_f64("fault-delay")? {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).delay = v;
+    }
+    if let Some(v) = args.get_usize("fault-delay-us")? {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).delay_us = v as u64;
+    }
+    if let Some(v) = args.get_usize("fault-seed")? {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).seed = v as u64;
+    }
+    if let Some(v) = args.get_usize("kill-rank")? {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).kill_rank = Some(v);
+    }
+    if let Some(p) = args.get("kill-phase") {
+        cfg.run.faults.get_or_insert_with(FaultPlan::default).kill_phase = Some(p.to_string());
+    }
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.run.checkpoint_dir = Some(d.into());
+    }
+    cfg.run.resume = args.get_bool("resume")?;
+    if cfg.run.resume && cfg.run.checkpoint_dir.is_none() {
+        return Err("--resume needs --checkpoint-dir (or run.checkpoint_dir)".into());
+    }
     // Typed validation after every override: rejects non-finite/negative ε,
-    // the ε/knn conflict, and the "neither path runs" fallthrough that used
-    // to silently divert a bad ε into calibration.
+    // the ε/knn conflict, the "neither path runs" fallthrough that used
+    // to silently divert a bad ε into calibration, and unusable fault
+    // lotteries / kill targets.
     cfg.validate().map_err(|e| e.to_string())?;
     let opts = OutputOpts {
         verify: args.get_bool("verify")?,
@@ -267,6 +319,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(v) = args.get_usize("threads")? {
         cfg.serve.threads = v;
     }
+    if let Some(v) = args.get_usize("deadline-us")? {
+        cfg.serve.deadline_us = v as u64;
+    }
     let snapshot = args.get("snapshot").map(str::to_string);
     let save = args.get("save-snapshot").map(str::to_string);
     args.reject_conflict("snapshot", "save-snapshot")?;
@@ -326,7 +381,10 @@ fn serve_built<P: PointSet, M: Metric<P>>(
     );
     if let Some(path) = save {
         let bytes = tree.to_snapshot_bytes().map_err(|e| e.to_string())?;
-        std::fs::write(path, &bytes).map_err(|e| format!("{path}: {e}"))?;
+        // Tmp-sibling + rename: a kill mid-write leaves any previous
+        // snapshot at this path loadable instead of a torn file.
+        neargraph::util::write_atomic(std::path::Path::new(path), &bytes)
+            .map_err(|e| format!("{path}: {e}"))?;
         println!("wrote snapshot ({} bytes) to {path}", bytes.len());
     }
     run_server(Box::new(CoverTreeIndex::from_tree(tree, metric)), cfg)
@@ -348,13 +406,15 @@ fn run_server<P: PointSet, M: Metric<P>>(
     );
     let stats = server.join();
     println!(
-        "served {} queries in {} batches (mean batch {:.1}, max {}, overloads {}, bad frames {})",
+        "served {} queries in {} batches (mean batch {:.1}, max {}, overloads {}, bad frames {}, \
+         deadline misses {})",
         stats.queries,
         stats.batches,
         stats.mean_batch(),
         stats.max_batch,
         stats.overloads,
-        stats.bad_frames
+        stats.bad_frames,
+        stats.deadline_misses
     );
     Ok(())
 }
@@ -385,6 +445,7 @@ fn cmd_query(args: &Args) -> Result<(), String> {
     let verify = args.get_bool("verify")?;
     let shutdown = args.get_bool("shutdown")?;
     let retries = args.get_usize("retry-connect")?.unwrap_or(1).max(1);
+    let timeout_ms = args.get_usize("timeout")?.unwrap_or(0) as u64;
     args.reject_unknown()?;
     if eps.is_none() && knn.is_none() {
         return Err("query needs --eps <f> or --knn <k>".into());
@@ -394,12 +455,14 @@ fn cmd_query(args: &Args) -> Result<(), String> {
         .ok_or_else(|| format!("unknown dataset {:?} (see `neargraph datasets`)", cfg.dataset))?;
     let n = if cfg.points > 0 { cfg.points } else { spec.scaled_points(cfg.scale) };
     match build_workload(spec, n, cfg.seed) {
-        Workload::Dense { pts, .. } => {
-            query_one(&pts, Euclidean, &addr, count, pipeline, eps, knn, verify, shutdown, retries)
-        }
-        Workload::Hamming { codes, .. } => {
-            query_one(&codes, Hamming, &addr, count, pipeline, eps, knn, verify, shutdown, retries)
-        }
+        Workload::Dense { pts, .. } => query_one(
+            &pts, Euclidean, &addr, count, pipeline, eps, knn, verify, shutdown, retries,
+            timeout_ms,
+        ),
+        Workload::Hamming { codes, .. } => query_one(
+            &codes, Hamming, &addr, count, pipeline, eps, knn, verify, shutdown, retries,
+            timeout_ms,
+        ),
     }
 }
 
@@ -415,6 +478,7 @@ fn query_one<P: PointSet, M: Metric<P>>(
     verify: bool,
     shutdown: bool,
     retries: usize,
+    timeout_ms: u64,
 ) -> Result<(), String> {
     use neargraph::serve::{Client, Response};
     use neargraph::testkit::serve_sim::{self, ClientPlan, SimQuery};
@@ -436,9 +500,12 @@ fn query_one<P: PointSet, M: Metric<P>>(
             }
         })
         .collect();
-    let reports =
-        serve_sim::run_clients(addr, pts, &[ClientPlan { queries: queries.clone(), pipeline }])
-            .map_err(|e| format!("{addr}: {e}"))?;
+    let reports = serve_sim::run_clients(
+        addr,
+        pts,
+        &[ClientPlan { queries: queries.clone(), pipeline, timeout_ms }],
+    )
+    .map_err(|e| format!("{addr}: {e}"))?;
     let report = &reports[0];
 
     let mut hits_ok = 0usize;
@@ -451,6 +518,7 @@ fn query_one<P: PointSet, M: Metric<P>>(
                 eprintln!("query {} rejected: {}", r.seq, code.name());
             }
             Response::Bye { .. } => return Err("unexpected Bye reply".into()),
+            Response::Health { .. } => return Err("unexpected Health reply".into()),
         }
     }
     let lats = serve_sim::latencies_sorted(&reports);
@@ -549,7 +617,11 @@ fn run_one<P: PointSet, M: Metric<P>>(
     }
     let graph = match cfg.index {
         None => {
-            let res = run_epsilon_graph(pts, metric.clone(), eps, &cfg.run);
+            // The fallible twin surfaces injected-fault outcomes (a killed
+            // rank, an exhausted retry budget) as a typed error and a
+            // nonzero exit instead of a panic.
+            let res = try_run_epsilon_graph(pts, metric.clone(), eps, &cfg.run)
+                .map_err(|e| e.to_string())?;
             report(cfg, eps, &res, opts.phases);
             res.graph
         }
@@ -615,16 +687,33 @@ fn report(cfg: &ExperimentConfig, eps: f64, res: &RunResult, phases: bool) {
         "graph: {} vertices, {} edges, avg degree {:.2}, max degree {}",
         stats.num_vertices, stats.num_edges, stats.avg_degree, stats.max_degree
     );
-    println!(
-        "simulated makespan: {} on {} ranks x {} pool threads ({})",
-        fmt_secs(res.makespan),
-        cfg.run.ranks,
-        cfg.run.pool_threads(),
-        cfg.run.algorithm.name()
-    );
+    if res.resumed {
+        println!("resumed from checkpoints (no ranks re-ran)");
+    } else {
+        println!(
+            "simulated makespan: {} on {} ranks x {} pool threads ({})",
+            fmt_secs(res.makespan),
+            cfg.run.ranks,
+            cfg.run.pool_threads(),
+            cfg.run.algorithm.name()
+        );
+    }
+    print_fault_counters(&res.faults);
     if phases {
         print_phase_breakdown(&res.ranks);
     }
+}
+
+fn print_fault_counters(f: &FaultCounters) {
+    if !f.any() {
+        return;
+    }
+    println!(
+        "injected faults: drops={} corrupts={} duplicates={} retries={} \
+         dup_discards={} corrupt_discards={} delayed_us={}",
+        f.drops, f.corrupts, f.duplicates, f.retries, f.dup_discards, f.corrupt_discards,
+        f.delayed_us
+    );
 }
 
 fn print_phase_breakdown(ranks: &[RankReport]) {
@@ -653,7 +742,8 @@ fn run_knn_one<P: PointSet, M: Metric<P>>(
     let k = cfg.knn;
     let knn = match cfg.index {
         None => {
-            let res = run_knn_graph(pts, metric.clone(), k, &cfg.run);
+            let res =
+                try_run_knn_graph(pts, metric.clone(), k, &cfg.run).map_err(|e| e.to_string())?;
             println!(
                 "knn: k={k}, {} vertices, {} arcs",
                 res.knn.num_vertices(),
@@ -664,13 +754,18 @@ fn run_knn_one<P: PointSet, M: Metric<P>>(
                 res.graph.num_edges(),
                 res.graph.avg_degree()
             );
-            println!(
-                "simulated makespan: {} on {} ranks x {} pool threads ({})",
-                fmt_secs(res.makespan),
-                cfg.run.ranks,
-                cfg.run.pool_threads(),
-                cfg.run.algorithm.name()
-            );
+            if res.resumed {
+                println!("resumed from checkpoints (no ranks re-ran)");
+            } else {
+                println!(
+                    "simulated makespan: {} on {} ranks x {} pool threads ({})",
+                    fmt_secs(res.makespan),
+                    cfg.run.ranks,
+                    cfg.run.pool_threads(),
+                    cfg.run.algorithm.name()
+                );
+            }
+            print_fault_counters(&res.faults);
             if opts.phases {
                 print_phase_breakdown(&res.ranks);
             }

@@ -4,10 +4,12 @@
 //!
 //! The client pipelines freely: send any number of requests, then match
 //! replies to requests by the echoed id (the daemon may answer pipelined
-//! requests in any order).
+//! requests in any order). An optional read deadline ([`Client::set_timeout`])
+//! turns a silent daemon into a typed `TimedOut` error instead of a hang.
 
 use super::protocol::{self, FrameRead, Request, Response};
 use crate::points::PointSet;
+use crate::util::Rng;
 use std::io::{self, ErrorKind};
 use std::net::TcpStream;
 use std::time::Duration;
@@ -16,6 +18,9 @@ use std::time::Duration;
 pub struct Client {
     stream: TcpStream,
     buf: Vec<u8>,
+    /// Whether a read deadline is armed — [`Client::recv`] maps idle and
+    /// mid-frame stalls to `TimedOut` only when it is.
+    timed: bool,
 }
 
 impl Client {
@@ -23,16 +28,21 @@ impl Client {
     pub fn connect(addr: &str) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        Ok(Client { stream, buf: Vec::new() })
+        Ok(Client { stream, buf: Vec::new(), timed: false })
     }
 
     /// Connect with retries (for scripts that race daemon startup):
-    /// `attempts` tries spaced `delay` apart before giving up.
+    /// `attempts` tries before giving up, backing off exponentially from
+    /// `delay` (doubling, capped at 16×) with seeded jitter so a herd of
+    /// clients racing the same startup de-synchronises — deterministically,
+    /// like everything else in this crate.
     pub fn connect_retry(addr: &str, attempts: usize, delay: Duration) -> io::Result<Client> {
+        let mut rng = Rng::new(0xB0FF);
         let mut last = None;
         for i in 0..attempts.max(1) {
             if i > 0 {
-                std::thread::sleep(delay);
+                let step = delay.saturating_mul(1u32 << (i - 1).min(4));
+                std::thread::sleep(step.mul_f64(0.75 + 0.5 * rng.f64()));
             }
             match Client::connect(addr) {
                 Ok(c) => return Ok(c),
@@ -40,6 +50,15 @@ impl Client {
             }
         }
         Err(last.unwrap_or_else(|| io::Error::other("no connect attempts")))
+    }
+
+    /// Arm (or with `None` disarm) a per-read deadline: a [`Client::recv`]
+    /// that waits longer than `timeout` for a reply returns
+    /// `ErrorKind::TimedOut` instead of blocking forever.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> io::Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        self.timed = timeout.is_some();
+        Ok(())
     }
 
     /// Send an ε-query for the single point held by `point`.
@@ -52,6 +71,12 @@ impl Client {
         self.send_request(&Request::Knn { id, k, point: point.clone() })
     }
 
+    /// Ask for the daemon's health counters (answered out-of-band on the
+    /// reader thread — works even when the query queue is full).
+    pub fn send_health(&mut self, id: u64) -> io::Result<()> {
+        self.send_request::<crate::points::DenseMatrix>(&Request::Health { id })
+    }
+
     /// Ask the daemon to drain and exit (answered with `Bye`).
     pub fn send_shutdown(&mut self, id: u64) -> io::Result<()> {
         self.send_request::<crate::points::DenseMatrix>(&Request::Shutdown { id })
@@ -61,15 +86,24 @@ impl Client {
         protocol::write_frame(&mut self.stream, &req.to_bytes())
     }
 
-    /// Block for the next response frame.
+    /// Block for the next response frame (bounded by the deadline when one
+    /// is armed via [`Client::set_timeout`]).
     pub fn recv(&mut self) -> io::Result<Response> {
-        match protocol::read_frame(&mut self.stream, &mut self.buf, &|| false)? {
+        // With a deadline armed, a mid-frame stall must abort after one
+        // timeout period rather than retrying forever.
+        let timed = self.timed;
+        match protocol::read_frame(&mut self.stream, &mut self.buf, &|| timed)? {
             FrameRead::Frame => Response::try_from_bytes(&self.buf)
                 .map_err(|e| io::Error::new(ErrorKind::InvalidData, format!("{e}"))),
             FrameRead::Eof => {
                 Err(io::Error::new(ErrorKind::UnexpectedEof, "daemon closed the connection"))
             }
-            FrameRead::Idle => unreachable!("no read timeout set on client sockets"),
+            // Only reachable with a read timeout armed: nothing arrived
+            // within the deadline.
+            FrameRead::Idle => Err(io::Error::new(
+                ErrorKind::TimedOut,
+                "read deadline elapsed waiting for a reply",
+            )),
         }
     }
 }

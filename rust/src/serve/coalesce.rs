@@ -41,6 +41,9 @@ pub struct Ticket {
     pub sink: Arc<dyn ReplySink>,
     /// Client-chosen request id, echoed in the response.
     pub id: u64,
+    /// When the query was admitted — the dispatcher measures the
+    /// per-request deadline from this instant (queue wait included).
+    pub admit: Instant,
 }
 
 /// A pending batch plus the reply address of each query (parallel to the
@@ -228,7 +231,7 @@ mod tests {
     }
 
     fn ticket(id: u64) -> Ticket {
-        Ticket { sink: Arc::new(NullSink), id }
+        Ticket { sink: Arc::new(NullSink), id, admit: Instant::now() }
     }
 
     fn coalescer(window_us: u64, max_batch: usize, queue_cap: usize) -> Coalescer<DenseMatrix> {
@@ -303,7 +306,7 @@ mod tests {
                 co.submit(
                     &one_point(i as f32),
                     QueryOp::Eps(0.1),
-                    Ticket { sink: sink.clone(), id: round * 2 + i },
+                    Ticket { sink: sink.clone(), id: round * 2 + i, admit: Instant::now() },
                 );
             }
             assert!(co.next_batch(&mut spare));

@@ -55,7 +55,7 @@ mod server;
 pub use client::Client;
 pub use coalesce::{Admit, CoalesceParams, Coalescer, PendingBatch, ReplySink, Ticket};
 pub use engine::{BatchOutput, QueryBatch, QueryOp, ServeEngine};
-pub use protocol::{ErrorCode, Request, Response, MAX_FRAME};
+pub use protocol::{ErrorCode, Health, Request, Response, MAX_FRAME};
 pub use server::{serve, Server, StatsSnapshot};
 
 /// Validated daemon settings (the `serve.*` config keys plus CLI
@@ -75,6 +75,11 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Pool workers (query lanes) answering batches.
     pub threads: usize,
+    /// Per-request deadline in microseconds, measured from admission. A
+    /// query still undispatched past its deadline is answered with the
+    /// typed `deadline-exceeded` error instead of a stale result — the
+    /// graceful-degradation half of overload handling (0 ⇒ no deadline).
+    pub deadline_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -85,6 +90,7 @@ impl Default for ServeConfig {
             max_batch: 256,
             queue_cap: 4096,
             threads: 1,
+            deadline_us: 0,
         }
     }
 }
@@ -186,6 +192,48 @@ mod tests {
         }
         let stats = server.shutdown_and_join();
         assert_eq!(stats.bad_frames, 1);
+    }
+
+    #[test]
+    fn deadline_miss_is_typed_and_health_reports_it() {
+        let pts = scenario::dense_uniform(9, 40);
+        let index =
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+        // A 20 ms coalescing window with a 1 µs deadline: the lone query
+        // must wait out the window, so its deadline is always blown.
+        let server = serve(
+            index,
+            &ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                coalesce_us: 20_000,
+                deadline_us: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut client = Client::connect(&addr).unwrap();
+        client.send_eps(1, &pts.slice(0, 1), 0.5).unwrap();
+        assert_eq!(
+            client.recv().unwrap(),
+            Response::Error { id: 1, code: ErrorCode::DeadlineExceeded }
+        );
+
+        // The miss counter is bumped before the error reply is sent, so the
+        // probe observes it; `queries` is only settled after join.
+        client.send_health(2).unwrap();
+        match client.recv().unwrap() {
+            Response::Health { id, health } => {
+                assert_eq!(id, 2);
+                assert_eq!(health.lanes, 1);
+                assert_eq!(health.deadline_misses, 1);
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+        let stats = server.shutdown_and_join();
+        assert_eq!(stats.deadline_misses, 1);
+        assert_eq!(stats.queries, 1);
     }
 
     #[test]

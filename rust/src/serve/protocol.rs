@@ -16,14 +16,16 @@
 //! | 1 | ε-query   | `eps` f64 bits, point-set length u64 + bytes (exactly one point) |
 //! | 2 | k-NN query| `k` u64 (1 ..= u32::MAX), point-set length u64 + bytes (one point) |
 //! | 3 | shutdown  | — |
+//! | 4 | health    | — (answered on the spot, bypassing the batch queue) |
 //!
 //! Response payloads:
 //!
 //! | opcode | frame | body |
 //! |--------|-------|------|
-//! | 1 | hits  | `n` u64 + n × (`gid` u32, `dist` f64 bits; finite, ≥ 0) |
-//! | 2 | error | [`ErrorCode`] u8 |
-//! | 3 | bye   | — (acknowledges a shutdown request) |
+//! | 1 | hits   | `n` u64 + n × (`gid` u32, `dist` f64 bits; finite, ≥ 0) |
+//! | 2 | error  | [`ErrorCode`] u8 |
+//! | 3 | bye    | — (acknowledges a shutdown request) |
+//! | 4 | health | the seven [`Health`] counters, each u64 |
 //!
 //! Responses echo the request id; the daemon may answer pipelined
 //! requests in any order, so clients match on the id, not on arrival
@@ -42,10 +44,12 @@ pub const MAX_FRAME: u64 = 1 << 24;
 const REQ_EPS: u8 = 1;
 const REQ_KNN: u8 = 2;
 const REQ_SHUTDOWN: u8 = 3;
+const REQ_HEALTH: u8 = 4;
 
 const RESP_HITS: u8 = 1;
 const RESP_ERROR: u8 = 2;
 const RESP_BYE: u8 = 3;
+const RESP_HEALTH: u8 = 4;
 
 /// Typed overload/rejection reply codes (the explicit-backpressure half of
 /// the protocol: a daemon under pressure answers, it never buffers
@@ -61,6 +65,10 @@ pub enum ErrorCode {
     Overloaded,
     /// The daemon is shutting down and no longer admits queries.
     ShuttingDown,
+    /// The query waited in the daemon past its per-request deadline — the
+    /// answer would have arrived too late to be useful, so it is replaced
+    /// by this typed reply instead of silent tail latency.
+    DeadlineExceeded,
 }
 
 impl ErrorCode {
@@ -70,6 +78,7 @@ impl ErrorCode {
             ErrorCode::BadQuery => 2,
             ErrorCode::Overloaded => 3,
             ErrorCode::ShuttingDown => 4,
+            ErrorCode::DeadlineExceeded => 5,
         }
     }
 
@@ -79,6 +88,7 @@ impl ErrorCode {
             2 => Some(ErrorCode::BadQuery),
             3 => Some(ErrorCode::Overloaded),
             4 => Some(ErrorCode::ShuttingDown),
+            5 => Some(ErrorCode::DeadlineExceeded),
             _ => None,
         }
     }
@@ -90,6 +100,7 @@ impl ErrorCode {
             ErrorCode::BadQuery => "bad-query",
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::ShuttingDown => "shutting-down",
+            ErrorCode::DeadlineExceeded => "deadline-exceeded",
         }
     }
 }
@@ -103,6 +114,10 @@ pub enum Request<P: PointSet> {
     Knn { id: u64, k: usize, point: P },
     /// Ask the daemon to drain in-flight queries and exit.
     Shutdown { id: u64 },
+    /// Ask for the daemon's health counters. Answered on the spot by the
+    /// connection reader — it never enters the batch queue, so it stays
+    /// responsive while the daemon is saturated.
+    Health { id: u64 },
 }
 
 impl<P: PointSet> Request<P> {
@@ -128,6 +143,10 @@ impl<P: PointSet> Request<P> {
             }
             Request::Shutdown { id } => {
                 buf.push(REQ_SHUTDOWN);
+                put_u64(&mut buf, *id);
+            }
+            Request::Health { id } => {
+                buf.push(REQ_HEALTH);
                 put_u64(&mut buf, *id);
             }
         }
@@ -159,6 +178,7 @@ impl<P: PointSet> Request<P> {
                 Request::Knn { id, k: k as usize, point }
             }
             REQ_SHUTDOWN => Request::Shutdown { id },
+            REQ_HEALTH => Request::Health { id },
             _ => return Err(WireError::Corrupt { what: "unknown request opcode" }),
         };
         if off != bytes.len() {
@@ -188,6 +208,28 @@ pub fn peek_request_id(bytes: &[u8]) -> u64 {
     }
 }
 
+/// Daemon health counters, as reported by a `Health` request: the live
+/// queue depth and lane count plus a snapshot of the lifetime stats —
+/// enough for an operator (or load generator) to see saturation and
+/// degradation without scraping logs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Health {
+    /// Admitted-but-undispatched queries right now.
+    pub queue_depth: u64,
+    /// Query lanes (pool workers) answering batches.
+    pub lanes: u64,
+    /// Queries answered through the batch path so far.
+    pub queries: u64,
+    /// Batches dispatched so far.
+    pub batches: u64,
+    /// Typed overload replies sent so far.
+    pub overloads: u64,
+    /// Frames that failed to decode so far.
+    pub bad_frames: u64,
+    /// Queries answered with `deadline-exceeded` so far.
+    pub deadline_misses: u64,
+}
+
 /// One decoded daemon response.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
@@ -198,6 +240,8 @@ pub enum Response {
     Error { id: u64, code: ErrorCode },
     /// Shutdown acknowledged; the daemon drains and exits.
     Bye { id: u64 },
+    /// Health counters (answers a `Health` request).
+    Health { id: u64, health: Health },
 }
 
 impl Response {
@@ -209,6 +253,7 @@ impl Response {
             Response::Hits { id, hits } => encode_hits_into(&mut buf, *id, hits),
             Response::Error { id, code } => encode_error_into(&mut buf, *id, *code),
             Response::Bye { id } => encode_bye_into(&mut buf, *id),
+            Response::Health { id, health } => encode_health_into(&mut buf, *id, health),
         }
         buf
     }
@@ -242,6 +287,19 @@ impl Response {
                 Response::Error { id, code }
             }
             RESP_BYE => Response::Bye { id },
+            RESP_HEALTH => {
+                let mut field = || try_get_u64(bytes, &mut off, "response health counter");
+                let health = Health {
+                    queue_depth: field()?,
+                    lanes: field()?,
+                    queries: field()?,
+                    batches: field()?,
+                    overloads: field()?,
+                    bad_frames: field()?,
+                    deadline_misses: field()?,
+                };
+                Response::Health { id, health }
+            }
             _ => return Err(WireError::Corrupt { what: "unknown response opcode" }),
         };
         if off != bytes.len() {
@@ -278,6 +336,20 @@ pub fn encode_bye_into(buf: &mut Vec<u8>, id: u64) {
     buf.clear();
     buf.push(RESP_BYE);
     put_u64(buf, id);
+}
+
+/// Encode a health response into `buf` (cleared first).
+pub fn encode_health_into(buf: &mut Vec<u8>, id: u64, health: &Health) {
+    buf.clear();
+    buf.push(RESP_HEALTH);
+    put_u64(buf, id);
+    put_u64(buf, health.queue_depth);
+    put_u64(buf, health.lanes);
+    put_u64(buf, health.queries);
+    put_u64(buf, health.batches);
+    put_u64(buf, health.overloads);
+    put_u64(buf, health.bad_frames);
+    put_u64(buf, health.deadline_misses);
 }
 
 /// Outcome of one [`read_frame`] call.
@@ -382,6 +454,7 @@ mod tests {
             Request::Eps { id: 7, eps: 0.25, point: one_dense() },
             Request::Knn { id: u64::MAX, k: 12, point: one_dense() },
             Request::Shutdown { id: 3 },
+            Request::Health { id: 4 },
         ];
         for r in reqs {
             let b = r.to_bytes();
@@ -389,8 +462,10 @@ mod tests {
             assert_eq!(
                 peek_request_id(&b),
                 match r {
-                    Request::Eps { id, .. } | Request::Knn { id, .. } | Request::Shutdown { id } =>
-                        id,
+                    Request::Eps { id, .. }
+                    | Request::Knn { id, .. }
+                    | Request::Shutdown { id }
+                    | Request::Health { id } => id,
                 }
             );
         }
@@ -433,13 +508,29 @@ mod tests {
             Response::Hits { id: 10, hits: vec![] },
             Response::Error { id: 11, code: ErrorCode::Overloaded },
             Response::Bye { id: 12 },
+            Response::Health {
+                id: 13,
+                health: Health {
+                    queue_depth: 1,
+                    lanes: 2,
+                    queries: 3,
+                    batches: 4,
+                    overloads: 5,
+                    bad_frames: 6,
+                    deadline_misses: 7,
+                },
+            },
         ];
         for r in resps {
             assert_eq!(Response::try_from_bytes(&r.to_bytes()), Ok(r.clone()));
         }
-        for code in
-            [ErrorCode::BadFrame, ErrorCode::BadQuery, ErrorCode::Overloaded, ErrorCode::ShuttingDown]
-        {
+        for code in [
+            ErrorCode::BadFrame,
+            ErrorCode::BadQuery,
+            ErrorCode::Overloaded,
+            ErrorCode::ShuttingDown,
+            ErrorCode::DeadlineExceeded,
+        ] {
             let r = Response::Error { id: 1, code };
             assert_eq!(Response::try_from_bytes(&r.to_bytes()), Ok(r));
             assert!(!code.name().is_empty());

@@ -37,7 +37,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How often an idle reader wakes to poll the shutdown flag.
 const READ_POLL: Duration = Duration::from_millis(25);
@@ -54,6 +54,7 @@ struct Stats {
     bad_frames: AtomicU64,
     connections: AtomicU64,
     max_batch: AtomicU64,
+    deadline_misses: AtomicU64,
 }
 
 /// Counters observed over a daemon's lifetime (or so far, via
@@ -72,6 +73,8 @@ pub struct StatsSnapshot {
     pub connections: u64,
     /// Largest batch dispatched.
     pub max_batch: u64,
+    /// Queries answered with the typed `deadline-exceeded` error.
+    pub deadline_misses: u64,
 }
 
 impl StatsSnapshot {
@@ -95,6 +98,7 @@ impl Stats {
             bad_frames: self.bad_frames.load(Ordering::Relaxed),
             connections: self.connections.load(Ordering::Relaxed),
             max_batch: self.max_batch.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -206,7 +210,8 @@ pub fn serve<P: PointSet, M: Metric<P>>(
         let engine = engine.clone();
         let coalescer = coalescer.clone();
         let stats = stats.clone();
-        std::thread::spawn(move || dispatch_loop(&engine, &coalescer, &stats))
+        let deadline = Duration::from_micros(cfg.deadline_us);
+        std::thread::spawn(move || dispatch_loop(&engine, &coalescer, &stats, deadline))
     };
 
     let control = {
@@ -265,6 +270,7 @@ fn dispatch_loop<P: PointSet, M: Metric<P>>(
     engine: &ServeEngine<P, M>,
     coalescer: &Coalescer<P>,
     stats: &Stats,
+    deadline: Duration,
 ) {
     let mut work = PendingBatch::new_like(engine.index().points());
     let mut out = BatchOutput::new();
@@ -272,7 +278,15 @@ fn dispatch_loop<P: PointSet, M: Metric<P>>(
     while coalescer.next_batch(&mut work) {
         engine.execute(&work.batch, &mut out);
         for (q, ticket) in work.tickets.iter().enumerate() {
-            protocol::encode_hits_into(&mut reply, ticket.id, out.hits_of(q));
+            // The deadline is measured from admission, so queue wait counts:
+            // under overload a stale answer degrades to the typed error
+            // rather than arriving arbitrarily late.
+            if !deadline.is_zero() && ticket.admit.elapsed() > deadline {
+                stats.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                protocol::encode_error_into(&mut reply, ticket.id, ErrorCode::DeadlineExceeded);
+            } else {
+                protocol::encode_hits_into(&mut reply, ticket.id, out.hits_of(q));
+            }
             ticket.sink.send(&reply);
         }
         let n = work.len() as u64;
@@ -356,6 +370,22 @@ fn handle_frame<P: PointSet, M: Metric<P>>(
             request_shutdown(shutdown, addr);
             return;
         }
+        Ok(Request::Health { id }) => {
+            // Answered on the reader thread, bypassing the batch queue: a
+            // health probe must work precisely when the queue is full.
+            let health = protocol::Health {
+                queue_depth: coalescer.pending_len() as u64,
+                lanes: engine.threads() as u64,
+                queries: stats.queries.load(Ordering::Relaxed),
+                batches: stats.batches.load(Ordering::Relaxed),
+                overloads: stats.overloads.load(Ordering::Relaxed),
+                bad_frames: stats.bad_frames.load(Ordering::Relaxed),
+                deadline_misses: stats.deadline_misses.load(Ordering::Relaxed),
+            };
+            protocol::encode_health_into(reply, id, &health);
+            outbox.send(reply);
+            return;
+        }
         Ok(Request::Eps { id, eps, point }) => (id, point, QueryOp::Eps(eps)),
         Ok(Request::Knn { id, k, point }) => (id, point, QueryOp::Knn(k)),
     };
@@ -364,7 +394,7 @@ fn handle_frame<P: PointSet, M: Metric<P>>(
         outbox.send(reply);
         return;
     }
-    match coalescer.submit(&point, op, Ticket { sink: outbox.clone(), id }) {
+    match coalescer.submit(&point, op, Ticket { sink: outbox.clone(), id, admit: Instant::now() }) {
         Admit::Accepted => {}
         Admit::Overloaded => {
             stats.overloads.fetch_add(1, Ordering::Relaxed);

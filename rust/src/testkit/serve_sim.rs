@@ -23,6 +23,8 @@ pub enum SimQuery {
 pub struct ClientPlan {
     pub queries: Vec<SimQuery>,
     pub pipeline: usize,
+    /// Per-reply read deadline in milliseconds (0 = block forever).
+    pub timeout_ms: u64,
 }
 
 /// One reply, matched back to its plan position.
@@ -68,6 +70,9 @@ fn run_one<P: PointSet>(
     plan: &ClientPlan,
 ) -> io::Result<SimReport> {
     let mut cl = Client::connect_retry(addr, 40, Duration::from_millis(25))?;
+    if plan.timeout_ms > 0 {
+        cl.set_timeout(Some(Duration::from_millis(plan.timeout_ms)))?;
+    }
     let total = plan.queries.len();
     let depth = plan.pipeline.max(1);
     let mut sent_at: Vec<Option<Instant>> = vec![None; total];
@@ -89,7 +94,10 @@ fn run_one<P: PointSet>(
         let response = cl.recv()?;
         let now = Instant::now();
         let id = match &response {
-            Response::Hits { id, .. } | Response::Error { id, .. } | Response::Bye { id } => *id,
+            Response::Hits { id, .. }
+            | Response::Error { id, .. }
+            | Response::Bye { id }
+            | Response::Health { id, .. } => *id,
         };
         assert_eq!(id >> 32, client, "reply routed to the wrong client");
         let seq = (id & u32::MAX as u64) as usize;

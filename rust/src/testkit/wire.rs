@@ -67,6 +67,78 @@ pub fn check_wire_decoder<T>(
     }
 }
 
+/// The replay half of the adversarial battery, for **stateful** stream
+/// decoders (sequence-numbered envelope streams): a decoder that returns
+/// `Ok(Some(payload))` for a fresh frame, `Ok(None)` for a duplicate, and
+/// a typed [`WireError`] for corruption.
+///
+/// `frames` are pristine encodings of *distinct* sequence numbers in
+/// their original send order; `make` builds a fresh decoder per scenario.
+/// The contract:
+///
+/// * **in order** — every frame is fresh (`Ok(Some)`);
+/// * **replayed twice** — the first copy is fresh, the immediate replay is
+///   recognised and discarded (`Ok(None)`), never delivered twice;
+/// * **out of order** — reversed delivery still yields each frame exactly
+///   once (`Ok(Some)`), no matter the arrival order;
+/// * **bit flips never panic** — a flipped envelope is a typed error or a
+///   (valid) different frame, never a panic.
+pub fn check_stream_decoder<T, D>(
+    what: &str,
+    frames: &[Vec<u8>],
+    make: &mut dyn FnMut() -> D,
+) where
+    D: FnMut(&[u8]) -> Result<Option<T>, WireError>,
+{
+    // In order: everything is fresh.
+    let mut dec = make();
+    for (i, f) in frames.iter().enumerate() {
+        assert!(
+            matches!(dec(f), Ok(Some(_))),
+            "{what}: in-order frame {i} was not delivered"
+        );
+    }
+
+    // Each frame duplicated back-to-back: dup discarded, not redelivered.
+    let mut dec = make();
+    for (i, f) in frames.iter().enumerate() {
+        assert!(matches!(dec(f), Ok(Some(_))), "{what}: frame {i} first copy dropped");
+        assert!(
+            matches!(dec(f), Ok(None)),
+            "{what}: frame {i} replay was not discarded as a duplicate"
+        );
+    }
+
+    // Reversed order: arrival order must not matter for exactly-once.
+    let mut dec = make();
+    for (i, f) in frames.iter().enumerate().rev() {
+        assert!(
+            matches!(dec(f), Ok(Some(_))),
+            "{what}: out-of-order frame {i} was not delivered"
+        );
+    }
+
+    // Single-bit flips on every frame against a fresh decoder: typed error
+    // or valid alternative, never a panic.
+    for (i, f) in frames.iter().enumerate() {
+        let mut flipped = f.clone();
+        for byte in 0..flipped.len() {
+            for bit in 0..8u8 {
+                flipped[byte] ^= 1 << bit;
+                let mut dec = make();
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    dec(&flipped).is_ok()
+                }));
+                assert!(
+                    outcome.is_ok(),
+                    "{what}: stream decoder panicked on frame {i}, byte {byte}, bit {bit}"
+                );
+                flipped[byte] ^= 1 << bit;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +176,28 @@ mod tests {
         // A decoder that tolerates truncation must be flagged.
         let tolerant = |bytes: &[u8]| -> Result<usize, WireError> { Ok(bytes.len()) };
         check_wire_decoder("tolerant", &encode(&[5]), &tolerant);
+    }
+
+    #[test]
+    fn envelope_stream_passes_the_replay_battery() {
+        use crate::comm::{encode_envelope, EnvelopeStream};
+        let frames: Vec<Vec<u8>> =
+            (0..4u64).map(|seq| encode_envelope(seq, &[seq as u8; 9])).collect();
+        check_stream_decoder("envelope stream", &frames, &mut || {
+            let mut s = EnvelopeStream::default();
+            move |bytes: &[u8]| s.accept(bytes)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "not discarded")]
+    fn redelivering_stream_decoder_is_caught() {
+        // A stateless decoder that delivers every frame (no dedup) must be
+        // flagged by the replay half of the battery.
+        let frames = vec![encode(&[1]), encode(&[2])];
+        check_stream_decoder("forgetful", &frames, &mut || {
+            |_bytes: &[u8]| -> Result<Option<()>, WireError> { Ok(Some(())) }
+        });
     }
 
     #[test]

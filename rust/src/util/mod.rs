@@ -52,6 +52,19 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// Crash-safe file write: write `bytes` to a `.tmp` sibling of `path`,
+/// then atomically rename over the target. A process killed mid-write
+/// can leave a stale `.tmp` behind but never a half-written target —
+/// the previous file at `path` stays intact and loadable (the snapshot
+/// and checkpoint writers both rely on this, DESIGN.md §11).
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
 /// Human-readable seconds (chooses between s / ms / µs).
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -105,6 +118,24 @@ mod tests {
         assert_eq!(div_ceil(1, 4), 1);
         assert_eq!(div_ceil(4, 4), 1);
         assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_survives_a_simulated_mid_write_kill() {
+        let dir = std::env::temp_dir().join(format!("neargraph-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("file.bin");
+        write_atomic(&target, b"generation one").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"generation one");
+        write_atomic(&target, b"generation two").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"generation two");
+        // Simulate a kill mid-write: partial garbage lands in the .tmp
+        // sibling and the rename never happens — the target must still
+        // hold the last complete generation.
+        let tmp = dir.join("file.bin.tmp");
+        std::fs::write(&tmp, b"gen").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"generation two");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Chaos conformance: the headline gate for the fault-injection layer
+//! (DESIGN.md §11). Under a seeded fault matrix — drop / corrupt /
+//! duplicate / delay lotteries across algorithms, rank counts and seeds —
+//! every **survivable** schedule must yield a graph bit-equal to the
+//! fault-free run (the retry/dedup machinery is invisible in the output),
+//! and every **unsurvivable** one must come back as a typed [`DistError`]
+//! in bounded virtual time: never a panic, never a hang, never a silently
+//! wrong graph. Kill-and-resume closes the loop: a run killed at a phase
+//! boundary restarts from its checkpoint directory and still reproduces
+//! the fault-free graph bit-for-bit.
+
+use neargraph::comm::FaultPlan;
+use neargraph::dist::{
+    try_run_epsilon_graph, try_run_knn_graph, Algorithm, DistError, RunConfig,
+};
+use neargraph::metric::Euclidean;
+use neargraph::testkit::scenario;
+
+const EPS: f64 = 0.6;
+const N: usize = 60;
+
+fn pts() -> neargraph::points::DenseMatrix {
+    scenario::dense_clusters(0xC405, N)
+}
+
+fn cfg(algorithm: Algorithm, ranks: usize) -> RunConfig {
+    RunConfig { ranks, algorithm, ..Default::default() }
+}
+
+/// A lottery loud enough to exercise every fault path (the counters must
+/// come back nonzero) yet survivable: the retry budget covers it.
+fn survivable(seed: u64) -> FaultPlan {
+    FaultPlan {
+        drop: 0.15,
+        corrupt: 0.15,
+        duplicate: 0.1,
+        delay: 0.1,
+        delay_us: 50,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("neargraph-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn survivable_fault_schedules_are_bit_identical_to_the_clean_run() {
+    let pts = pts();
+    for algorithm in Algorithm::ALL {
+        for ranks in [2usize, 4] {
+            let clean = try_run_epsilon_graph(&pts, Euclidean, EPS, &cfg(algorithm, ranks))
+                .expect("clean run succeeds");
+            assert!(!clean.faults.any(), "clean run must count zero faults");
+            for seed in [1u64, 0xBAD5EED, 777] {
+                let mut faulty_cfg = cfg(algorithm, ranks);
+                faulty_cfg.faults = Some(survivable(seed));
+                let faulty = try_run_epsilon_graph(&pts, Euclidean, EPS, &faulty_cfg)
+                    .unwrap_or_else(|e| {
+                        panic!("{} x{ranks} seed {seed:#x} unsurvivable: {e}", algorithm.name())
+                    });
+                assert_eq!(
+                    faulty.edges.edges(),
+                    clean.edges.edges(),
+                    "{} x{ranks} seed {seed:#x} diverged under faults",
+                    algorithm.name()
+                );
+                assert!(
+                    faulty.faults.any(),
+                    "{} x{ranks} seed {seed:#x}: this lottery must actually fire",
+                    algorithm.name()
+                );
+                // Retries and delays are charged into the virtual clock,
+                // never wall-clock sleeps — the makespan stays bounded.
+                assert!(
+                    faulty.makespan.is_finite() && faulty.makespan > 0.0,
+                    "fault charges must stay inside the virtual clock"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_schedules_replay_bit_identically_by_seed() {
+    // Same seed ⇒ same counters (the whole schedule replays); different
+    // seed ⇒ (almost surely) different counters.
+    let pts = pts();
+    let mut c = cfg(Algorithm::SystolicRing, 4);
+    c.faults = Some(survivable(42));
+    let a = try_run_epsilon_graph(&pts, Euclidean, EPS, &c).expect("survivable");
+    let b = try_run_epsilon_graph(&pts, Euclidean, EPS, &c).expect("survivable");
+    assert_eq!(a.faults, b.faults, "one seed, one schedule");
+    c.faults = Some(survivable(43));
+    let d = try_run_epsilon_graph(&pts, Euclidean, EPS, &c).expect("survivable");
+    assert_ne!(a.faults, d.faults, "a different seed draws a different schedule");
+    assert_eq!(a.edges.edges(), d.edges.edges(), "the graph never varies with the seed");
+}
+
+#[test]
+fn unsurvivable_schedules_are_typed_errors_not_hangs() {
+    // drop = 1 (every transmission lost) and corrupt = 1 (every
+    // transmission mangled) exhaust the retry budget on the first p2p
+    // exchange. landmark-coll moves ghosts over collectives only, so the
+    // ring-using algorithms are the ones with p2p traffic to starve.
+    let pts = pts();
+    for algorithm in [Algorithm::SystolicRing, Algorithm::LandmarkRing] {
+        for (label, plan) in [
+            ("drop", FaultPlan { drop: 1.0, ..Default::default() }),
+            ("corrupt", FaultPlan { corrupt: 1.0, ..Default::default() }),
+        ] {
+            let mut c = cfg(algorithm, 2);
+            c.faults = Some(plan);
+            let err = try_run_epsilon_graph(&pts, Euclidean, EPS, &c)
+                .expect_err("no schedule survives a total blackout");
+            assert!(
+                matches!(err, DistError::PeerUnreachable { .. }),
+                "{} {label}=1.0: wanted PeerUnreachable, got {err}",
+                algorithm.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn killed_ranks_are_typed_errors_for_every_algorithm() {
+    let pts = pts();
+    for algorithm in Algorithm::ALL {
+        let mut c = cfg(algorithm, 4);
+        c.faults = Some(FaultPlan {
+            kill_rank: Some(1),
+            kill_phase: Some("tree".into()),
+            ..Default::default()
+        });
+        let err = try_run_epsilon_graph(&pts, Euclidean, EPS, &c)
+            .expect_err("a killed rank cannot produce a graph");
+        // The root cause wins aggregation: the killed rank, not the
+        // bystanders that aborted because of it.
+        match err {
+            DistError::RankKilled { rank, ref phase } => {
+                assert_eq!((rank, phase.as_str()), (1, "tree"), "{}", algorithm.name())
+            }
+            other => panic!("{}: wanted RankKilled, got {other}", algorithm.name()),
+        }
+    }
+}
+
+#[test]
+fn kill_then_resume_reproduces_the_clean_graph_bit_for_bit() {
+    let pts = pts();
+    for algorithm in Algorithm::ALL {
+        let clean = try_run_epsilon_graph(&pts, Euclidean, EPS, &cfg(algorithm, 2))
+            .expect("clean run succeeds");
+        let dir = fresh_dir(&format!("eps-{}", algorithm.name()));
+
+        // First attempt: checkpointing on, rank 1 killed at the tree
+        // boundary — the run dies with the typed error.
+        let mut c = cfg(algorithm, 2);
+        c.checkpoint_dir = Some(dir.clone());
+        c.faults = Some(FaultPlan {
+            kill_rank: Some(1),
+            kill_phase: Some("tree".into()),
+            ..Default::default()
+        });
+        let err = try_run_epsilon_graph(&pts, Euclidean, EPS, &c).expect_err("killed");
+        assert!(matches!(err, DistError::RankKilled { rank: 1, .. }), "{}", algorithm.name());
+
+        // Restart with --resume: the kill is disarmed (the crash already
+        // happened), the run completes and matches the clean graph.
+        c.resume = true;
+        let recovered = try_run_epsilon_graph(&pts, Euclidean, EPS, &c)
+            .expect("the restarted run completes");
+        assert!(!recovered.resumed, "first restart recomputes (no final checkpoints yet)");
+        assert_eq!(
+            recovered.edges.edges(),
+            clean.edges.edges(),
+            "{}: recovery diverged from the clean run",
+            algorithm.name()
+        );
+
+        // A second resume finds every rank's final checkpoint and takes
+        // the fast path — still bit-identical.
+        let resumed = try_run_epsilon_graph(&pts, Euclidean, EPS, &c)
+            .expect("resume from final checkpoints");
+        assert!(resumed.resumed, "{}: final checkpoints must shortcut the run", algorithm.name());
+        assert_eq!(resumed.edges.edges(), clean.edges.edges());
+        assert_eq!(resumed.makespan, 0.0, "no simulated work on the fast path");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn knn_survives_faults_and_kill_resume_bit_for_bit() {
+    let pts = pts();
+    let k = 4usize;
+    let clean = try_run_knn_graph(&pts, Euclidean, k, &cfg(Algorithm::LandmarkColl, 2))
+        .expect("clean knn run succeeds");
+
+    // Survivable lottery: rows bit-equal, counters nonzero.
+    let mut c = cfg(Algorithm::LandmarkColl, 2);
+    c.faults = Some(survivable(9));
+    let faulty = try_run_knn_graph(&pts, Euclidean, k, &c).expect("survivable");
+    assert_eq!(faulty.knn.to_bytes(), clean.knn.to_bytes(), "knn rows diverged under faults");
+    assert!(faulty.faults.any());
+
+    // Kill at the refine boundary, then restart-with-resume, then the
+    // checkpointed fast path.
+    let dir = fresh_dir("knn");
+    let mut c = cfg(Algorithm::LandmarkColl, 2);
+    c.checkpoint_dir = Some(dir.clone());
+    c.faults = Some(FaultPlan {
+        kill_rank: Some(0),
+        kill_phase: Some("refine".into()),
+        ..Default::default()
+    });
+    let err = try_run_knn_graph(&pts, Euclidean, k, &c).expect_err("killed");
+    assert!(matches!(err, DistError::RankKilled { rank: 0, .. }));
+    c.resume = true;
+    let recovered = try_run_knn_graph(&pts, Euclidean, k, &c).expect("restart completes");
+    assert_eq!(recovered.knn.to_bytes(), clean.knn.to_bytes());
+    let resumed = try_run_knn_graph(&pts, Euclidean, k, &c).expect("fast path");
+    assert!(resumed.resumed);
+    assert_eq!(resumed.knn.to_bytes(), clean.knn.to_bytes());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoints_from_a_faulty_run_serve_a_clean_resume() {
+    // The fingerprint deliberately excludes fault knobs: a survivable
+    // faulty run writes the same bytes its clean twin would, so a clean
+    // `--resume` may consume them directly.
+    let pts = pts();
+    let dir = fresh_dir("cross");
+    let mut faulty_cfg = cfg(Algorithm::SystolicRing, 2);
+    faulty_cfg.checkpoint_dir = Some(dir.clone());
+    faulty_cfg.faults = Some(survivable(5));
+    let faulty = try_run_epsilon_graph(&pts, Euclidean, EPS, &faulty_cfg).expect("survivable");
+
+    let mut clean_cfg = cfg(Algorithm::SystolicRing, 2);
+    clean_cfg.checkpoint_dir = Some(dir.clone());
+    clean_cfg.resume = true;
+    let resumed = try_run_epsilon_graph(&pts, Euclidean, EPS, &clean_cfg).expect("resume");
+    assert!(resumed.resumed, "the faulty run's finals must satisfy the clean fingerprint");
+    assert_eq!(resumed.edges.edges(), faulty.edges.edges());
+    let _ = std::fs::remove_dir_all(&dir);
+}

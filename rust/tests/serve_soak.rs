@@ -52,7 +52,7 @@ fn mixed_plans(
                     }
                 })
                 .collect();
-            ClientPlan { queries, pipeline }
+            ClientPlan { queries, pipeline, timeout_ms: 0 }
         })
         .collect()
 }
@@ -217,6 +217,63 @@ fn overload_is_typed_and_connection_survives() {
     }
     let stats = server.shutdown_and_join();
     assert_eq!(stats.overloads as usize, overloaded);
+}
+
+#[test]
+fn blown_deadlines_degrade_to_typed_errors_exactly_once() {
+    // A 50 ms coalescing window with a huge batch cap makes every admitted
+    // query wait out the window — far past the 1 µs deadline (a late-joiner
+    // still pays execute time) — so each one must degrade to the typed
+    // deadline-exceeded error: exactly one reply per query, never a stale
+    // answer, never a hang.
+    let pts = scenario::dense_uniform(17, 300);
+    let index =
+        build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+    let server = serve(
+        index,
+        &ephemeral(ServeConfig {
+            coalesce_us: 50_000,
+            max_batch: 512,
+            threads: 2,
+            deadline_us: 1,
+            ..Default::default()
+        }),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    let total = 32usize;
+    for i in 0..total {
+        client.send_eps(i as u64, &pts.slice(i, i + 1), 0.5).unwrap();
+    }
+    let mut answered = vec![false; total];
+    for _ in 0..total {
+        match client.recv().unwrap() {
+            Response::Error { id, code } => {
+                assert_eq!(code, ErrorCode::DeadlineExceeded, "unexpected error for {id}");
+                assert!(!std::mem::replace(&mut answered[id as usize], true), "double reply {id}");
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(answered.iter().all(|&a| a), "every query got exactly one reply");
+
+    // The connection survives, and the health probe — answered on the
+    // reader thread, bypassing the batch queue — sees the misses.
+    client.send_health(9_000).unwrap();
+    match client.recv().unwrap() {
+        Response::Health { id, health } => {
+            assert_eq!(id, 9_000);
+            assert_eq!(health.deadline_misses as usize, total);
+            assert_eq!(health.lanes, 2);
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let stats = server.shutdown_and_join();
+    assert_eq!(stats.deadline_misses as usize, total);
+    assert_eq!(stats.queries as usize, total, "missed queries still count as served");
 }
 
 #[test]

@@ -7,8 +7,13 @@
 //! Covered formats: `Bundle` (dense / Hamming / string payloads),
 //! `EdgeBundle`, `KnnBundle` (all three wire shapes), `WeightedEdgeList`,
 //! the `NGW-CSR1` weighted graph file, the `NGK-KNN1` directed k-NN
-//! file, the serve daemon's request/response frames and the `NGI-IDX1`
-//! index snapshot (all three point families).
+//! file, the serve daemon's request/response frames, the `NGI-IDX1`
+//! index snapshot (all three point families), the fault layer's
+//! sequence-numbered envelopes and the `NGC-CKP1` checkpoint frame.
+//!
+//! Stateful decoders (the envelope stream) additionally run the
+//! `check_stream_decoder` replay battery: every frame delivered twice and
+//! out of order must dedup or error — never panic, never double-deliver.
 
 use neargraph::covertree::BuildParams;
 use neargraph::dist::{Bundle, EdgeBundle, KnnBundle};
@@ -176,6 +181,57 @@ fn serve_response_mutations() {
     wire::check_wire_decoder("serve/resp-error", &err.to_bytes(), &Response::try_from_bytes);
     let bye = Response::Bye { id: 43 };
     wire::check_wire_decoder("serve/resp-bye", &bye.to_bytes(), &Response::try_from_bytes);
+}
+
+#[test]
+fn serve_health_mutations() {
+    let req = Request::<DenseMatrix>::Health { id: 77 };
+    wire::check_wire_decoder("serve/req-health", &req.to_bytes(), &|bytes| {
+        Request::<DenseMatrix>::try_from_bytes(bytes)
+    });
+    let resp = Response::Health {
+        id: 78,
+        health: neargraph::serve::Health {
+            queue_depth: 3,
+            lanes: 2,
+            queries: 1000,
+            batches: 40,
+            overloads: 5,
+            bad_frames: 1,
+            deadline_misses: 7,
+        },
+    };
+    wire::check_wire_decoder("serve/resp-health", &resp.to_bytes(), &Response::try_from_bytes);
+}
+
+// ---- fault-layer envelopes and checkpoint frames (DESIGN.md §11) ---------
+
+#[test]
+fn envelope_mutations() {
+    use neargraph::comm::{decode_envelope, encode_envelope};
+    let payload: Vec<u8> = (0..37u8).collect();
+    wire::check_wire_decoder("envelope", &encode_envelope(9, &payload), &decode_envelope);
+    // Empty payloads ride the same framing (zero-byte sends are legal).
+    wire::check_wire_decoder("envelope/empty", &encode_envelope(0, &[]), &decode_envelope);
+}
+
+#[test]
+fn envelope_stream_replay_battery() {
+    use neargraph::comm::{encode_envelope, EnvelopeStream};
+    let frames: Vec<Vec<u8>> =
+        (0..5u64).map(|seq| encode_envelope(seq, &[0xA5; 11])).collect();
+    wire::check_stream_decoder("envelope-stream", &frames, &mut || {
+        let mut s = EnvelopeStream::default();
+        move |bytes: &[u8]| s.accept(bytes)
+    });
+}
+
+#[test]
+fn checkpoint_frame_mutations() {
+    use neargraph::dist::checkpoint::{decode_frame, encode_frame};
+    let data: Vec<u8> = (0..64u8).rev().collect();
+    let bytes = encode_frame(0x5EED_F00D, 1, 4, "selfjoin", &data);
+    wire::check_wire_decoder("checkpoint-frame", &bytes, &decode_frame);
 }
 
 // ---- NGI-IDX1 index snapshots --------------------------------------------
