@@ -1,0 +1,25 @@
+//! Machine gate for the repository's source invariants (CI `lint` job).
+//!
+//! Runs `neargraph::lint` (DESIGN.md §12) over a source tree and exits
+//! nonzero under `--deny-warnings` when any unwaived finding remains or
+//! the fixture corpus disagrees with the engine:
+//!
+//! ```text
+//! cargo run --example lint_driver -- --src rust/src --deny-warnings
+//! cargo run --example lint_driver -- --src src \
+//!     --fixtures tests/lint_fixtures --json LINT_REPORT.json
+//! ```
+//!
+//! The same flags drive `python/neargraph_lint.py`, the in-container
+//! mirror that generated the committed `LINT_REPORT.json`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match neargraph::lint::main_from_args(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("lint_driver: {e}");
+            std::process::exit(2);
+        }
+    }
+}

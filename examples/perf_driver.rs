@@ -570,6 +570,8 @@ fn main() {
         }
     };
 
+    lint_waiver_parity();
+
     let (seq_total, best) = summarize(&runs);
     let json = render_json(
         &dataset,
@@ -589,6 +591,53 @@ fn main() {
     std::fs::write(&out_path, &json).unwrap_or_else(|e| fail(&format!("{out_path}: {e}")));
     println!("{json}");
     eprintln!("[perf_driver] wrote {out_path}");
+}
+
+/// Lint-waiver parity gate (DESIGN.md §12): the committed LINT_REPORT.json
+/// must agree with the live tree — a waiver added or removed without
+/// regenerating the report fails the perf run, as does any unwaived
+/// finding. Skipped with a note when run from a cwd without the repo-root
+/// report (cargo runs examples from the crate root, where it exists).
+fn lint_waiver_parity() {
+    let report_path = std::path::Path::new("../LINT_REPORT.json");
+    let src = std::path::Path::new("src");
+    if !report_path.exists() || !src.is_dir() {
+        eprintln!("[perf_driver] lint parity skipped (no ../LINT_REPORT.json from this cwd)");
+        return;
+    }
+    let report = std::fs::read_to_string(report_path)
+        .unwrap_or_else(|e| fail(&format!("LINT_REPORT.json: {e}")));
+    let committed = report
+        .lines()
+        .find_map(|l| {
+            l.trim()
+                .strip_prefix("\"waiver_count\":")
+                .map(|v| v.trim_end_matches(',').trim().parse::<usize>())
+        })
+        .and_then(Result::ok)
+        .unwrap_or_else(|| fail("LINT_REPORT.json has no waiver_count field"));
+    let docs = ["../README.md", "../DESIGN.md"]
+        .iter()
+        .filter_map(|p| std::fs::read_to_string(p).ok())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let registry = std::path::Path::new("tests/wire_adversarial.rs");
+    let (files, findings) = neargraph::lint::scan_tree(src, Some(registry), &docs)
+        .unwrap_or_else(|e| fail(&format!("lint scan: {e}")));
+    let live = neargraph::lint::used_waivers(&files).len();
+    let unwaived = findings.iter().filter(|f| f.waived.is_none()).count();
+    assert_eq!(
+        unwaived, 0,
+        "unwaived lint findings present; run `cargo run --example lint_driver -- --src src`"
+    );
+    assert_eq!(
+        live, committed,
+        "live waiver count {live} != LINT_REPORT.json waiver_count {committed}; \
+         regenerate the report"
+    );
+    eprintln!(
+        "[perf_driver] lint parity ok: {live} waiver(s) match LINT_REPORT.json, 0 unwaived"
+    );
 }
 
 fn summarize(runs: &[Run]) -> (f64, &Run) {

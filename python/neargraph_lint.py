@@ -1,0 +1,1260 @@
+#!/usr/bin/env python3
+"""Python mirror of `neargraph::lint` (rust/src/lint/).
+
+The container that grows this repository carries no Rust toolchain, so the
+lint engine — like every other subsystem since PR 1 — ships with an
+executable Python mirror that implements the *same* tokenizer and rule
+semantics and runs over the *real* `rust/src` tree in-container.  The
+committed `LINT_REPORT.json` is produced by this script; the Rust module is
+a line-for-line port and `tests/lint_selftest.rs` re-checks the same
+fixture corpus under cargo.
+
+Usage:
+    python3 python/neargraph_lint.py --src rust/src \
+        [--registry rust/tests/wire_adversarial.rs] \
+        [--docs README.md --docs DESIGN.md] \
+        [--fixtures rust/tests/lint_fixtures] \
+        [--json LINT_REPORT.json] [--deny-warnings] [--quiet]
+
+Rules (see DESIGN.md §12):
+  R1 no-alloc-hot-path    bans Vec::new / vec! / .collect / .to_vec /
+                          .clone / String::from / format! / Box::new inside
+                          hot modules (covertree/{query,layout,scratch,knn}.rs,
+                          metric/*, serve/engine.rs) except fns marked
+                          `// lint: cold`.
+  R2 total-ordering       bans .partial_cmp, f32/f64::max|min paths, and
+                          .max(..)/.min(..) whose arguments look float-typed
+                          (float literal or .abs()/.sqrt() call), crate-wide.
+  R3 panic-free-decode    bans .unwrap / .expect / panic-family macros inside
+                          any fn returning Result<_, WireError> and inside
+                          serve/{protocol,server}.rs; additionally bans
+                          assert-family macros and `[`-indexing (instead of
+                          .get) inside the WireError fns.
+  R4 harness-registration every wire decoder fn discovered in src/ must be
+                          referenced (impl type ident + method ident) in
+                          tests/wire_adversarial.rs.
+  R5 config-doc-parity    every "key" string-literal match arm in config/
+                          must appear verbatim (word-bounded) in README.md
+                          or DESIGN.md.
+
+Waivers: `// lint: allow(rule-a, rule-b) reason="..."` — trailing on the
+offending line, standalone above the offending line, or standalone above a
+fn header (waives the rules for the whole fn).  `// lint: cold` standalone
+above a fn header exempts the fn from R1.  Malformed or unused directives
+are themselves findings (rule `lint-directive`) so waiver creep is visible.
+"""
+
+import json
+import os
+import sys
+
+KNOWN_RULES = (
+    "no-alloc-hot-path",
+    "total-ordering",
+    "panic-free-decode",
+    "harness-registration",
+    "config-doc-parity",
+)
+
+HOT_FILES = {
+    "covertree/query.rs",
+    "covertree/layout.rs",
+    "covertree/scratch.rs",
+    "covertree/knn.rs",
+    "serve/engine.rs",
+}
+HOT_PREFIXES = ("metric/",)
+
+R3_FILES = {"serve/protocol.rs", "serve/server.rs"}
+
+ALLOC_CALLS = {"collect", "to_vec", "clone"}
+PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented"}
+ASSERT_MACROS = {"assert", "assert_eq", "assert_ne"}
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+DIGITS = set("0123456789")
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer
+# ---------------------------------------------------------------------------
+
+class Tok(object):
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind = kind  # ident | num | str | char | lifetime | punct
+        self.text = text
+        self.line = line
+
+    def __repr__(self):
+        return "Tok(%s,%r,%d)" % (self.kind, self.text, self.line)
+
+
+class Comment(object):
+    __slots__ = ("line", "text", "standalone", "next_tok")
+
+    def __init__(self, line, text, standalone):
+        self.line = line
+        self.text = text
+        self.standalone = standalone  # no code token earlier on this line
+        self.next_tok = -1  # index of next significant token (filled later)
+
+
+def tokenize(src):
+    """Return (tokens, comments). Comments carry their raw text sans the
+    comment markers; `standalone` is True when no significant token precedes
+    the comment on its own line."""
+    toks = []
+    comments = []
+    i = 0
+    n = len(src)
+    line = 1
+    last_tok_line = 0  # line of the most recent significant token
+    pending_next = []  # comments awaiting their next-token index
+
+    def push(kind, text, ln):
+        # Merge '::' '->' '=>' from single punct chars.
+        if kind == "punct" and toks:
+            prev = toks[-1]
+            if prev.kind == "punct" and prev.line == ln:
+                pair = prev.text + text
+                if pair in ("::", "->", "=>"):
+                    prev.text = pair
+                    return
+        toks.append(Tok(kind, text, ln))
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # Comments ----------------------------------------------------------
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = i + 2
+            while j < n and src[j] != "\n":
+                j += 1
+            body = src[i:j]
+            # strip '//', optional third '/' or '!'
+            t = body[2:]
+            if t[:1] in ("/", "!"):
+                t = t[1:]
+            cm = Comment(line, t.strip(), last_tok_line != line)
+            comments.append(cm)
+            pending_next.append(cm)
+            i = j
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            depth = 1
+            start_line = line
+            j = i + 2
+            while j < n and depth > 0:
+                if src[j] == "\n":
+                    line += 1
+                    j += 1
+                elif src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            body = src[i + 2 : max(i + 2, j - 2)]
+            cm = Comment(start_line, body.strip(), last_tok_line != start_line)
+            comments.append(cm)
+            pending_next.append(cm)
+            i = j
+            continue
+        # Raw / byte strings ------------------------------------------------
+        if c in "rb":
+            j = i
+            prefix = c
+            if c == "b" and j + 1 < n and src[j + 1] == "r":
+                prefix = "br"
+                j += 1
+            if c == "r" and j + 1 < n and src[j + 1] == "b":
+                prefix = "rb"
+                j += 1
+            k = j + 1
+            hashes = 0
+            while k < n and src[k] == "#":
+                hashes += 1
+                k += 1
+            if "r" in prefix and k < n and src[k] == '"':
+                # raw string: ends at '"' + hashes '#'
+                close = '"' + "#" * hashes
+                end = src.find(close, k + 1)
+                if end < 0:
+                    end = n
+                text = src[i : end + len(close)]
+                ln = line
+                line += text.count("\n")
+                push("str", text, ln)
+                for cm in pending_next:
+                    cm.next_tok = len(toks) - 1
+                pending_next = []
+                last_tok_line = ln
+                i = end + len(close)
+                continue
+            if c == "b" and i + 1 < n and src[i + 1] == '"':
+                i += 1  # fall through to plain string below
+                c = '"'
+            elif c == "b" and i + 1 < n and src[i + 1] == "'":
+                # byte char literal b'x'
+                j = i + 2
+                if j < n and src[j] == "\\":
+                    j += 2
+                else:
+                    j += 1
+                while j < n and src[j] != "'":
+                    j += 1
+                push("char", src[i : j + 1], line)
+                for cm in pending_next:
+                    cm.next_tok = len(toks) - 1
+                pending_next = []
+                last_tok_line = line
+                i = j + 1
+                continue
+        # Strings -----------------------------------------------------------
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == '"':
+                    break
+                j += 1
+            text = src[i : j + 1]
+            ln = line
+            line += text.count("\n")
+            push("str", text, ln)
+            for cm in pending_next:
+                cm.next_tok = len(toks) - 1
+            pending_next = []
+            last_tok_line = ln
+            i = j + 1
+            continue
+        # Char literal vs lifetime ------------------------------------------
+        if c == "'":
+            if i + 1 < n and src[i + 1] == "\\":
+                j = i + 3
+                while j < n and src[j] != "'":
+                    j += 1
+                push("char", src[i : j + 1], line)
+                i = j + 1
+            elif i + 2 < n and src[i + 2] == "'" and src[i + 1] != "'":
+                push("char", src[i : i + 3], line)
+                i = i + 3
+            else:
+                j = i + 1
+                while j < n and src[j] in IDENT_CONT:
+                    j += 1
+                push("lifetime", src[i:j], line)
+                i = j
+            for cm in pending_next:
+                cm.next_tok = len(toks) - 1
+            pending_next = []
+            last_tok_line = line
+            continue
+        # Numbers -----------------------------------------------------------
+        if c in DIGITS:
+            j = i
+            is_float = False
+            if src.startswith("0x", i) or src.startswith("0b", i) or src.startswith("0o", i):
+                j = i + 2
+                while j < n and (src[j] in IDENT_CONT):
+                    j += 1
+            else:
+                while j < n and (src[j] in DIGITS or src[j] == "_"):
+                    j += 1
+                if j < n and src[j] == "." and j + 1 < n and src[j + 1] in DIGITS:
+                    is_float = True
+                    j += 1
+                    while j < n and (src[j] in DIGITS or src[j] == "_"):
+                        j += 1
+                elif j < n and src[j] == "." and not (
+                    j + 1 < n and (src[j + 1] == "." or src[j + 1] in IDENT_START)
+                ):
+                    # trailing-dot float like `1.`
+                    is_float = True
+                    j += 1
+                if j < n and src[j] in "eE" and j + 1 < n and (
+                    src[j + 1] in DIGITS or src[j + 1] in "+-"
+                ):
+                    is_float = True
+                    j += 2
+                    while j < n and (src[j] in DIGITS or src[j] == "_"):
+                        j += 1
+                # suffix (f32, u8, usize...)
+                s = j
+                while j < n and src[j] in IDENT_CONT:
+                    j += 1
+                if src[s:j] in ("f32", "f64"):
+                    is_float = True
+            push("num", src[i:j], line)
+            toks[-1].kind = "fnum" if is_float else "num"
+            for cm in pending_next:
+                cm.next_tok = len(toks) - 1
+            pending_next = []
+            last_tok_line = line
+            i = j
+            continue
+        # Identifiers -------------------------------------------------------
+        if c in IDENT_START:
+            j = i + 1
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            push("ident", src[i:j], line)
+            for cm in pending_next:
+                cm.next_tok = len(toks) - 1
+            pending_next = []
+            last_tok_line = line
+            i = j
+            continue
+        # Punctuation -------------------------------------------------------
+        push("punct", c, line)
+        for cm in pending_next:
+            cm.next_tok = len(toks) - 1
+        pending_next = []
+        last_tok_line = line
+        i += 1
+    return toks, comments
+
+
+# ---------------------------------------------------------------------------
+# Directives
+# ---------------------------------------------------------------------------
+
+class Directive(object):
+    __slots__ = ("kind", "rules", "reason", "line", "standalone", "next_tok", "used", "error")
+
+    def __init__(self, kind, line, standalone, next_tok):
+        self.kind = kind  # cold | allow | bad
+        self.rules = []
+        self.reason = ""
+        self.line = line
+        self.standalone = standalone
+        self.next_tok = next_tok
+        self.used = False
+        self.error = ""
+
+
+def parse_directives(comments):
+    out = []
+    for cm in comments:
+        t = cm.text
+        if not t.startswith("lint:"):
+            continue
+        body = t[5:].strip()
+        d = Directive("bad", cm.line, cm.standalone, cm.next_tok)
+        if body == "cold":
+            d.kind = "cold"
+        elif body.startswith("allow"):
+            rest = body[5:].lstrip()
+            if not rest.startswith("("):
+                d.error = "expected '(' after allow"
+            else:
+                close = rest.find(")")
+                if close < 0:
+                    d.error = "unclosed allow(...)"
+                else:
+                    names = [s.strip() for s in rest[1:close].split(",") if s.strip()]
+                    bad = [nm for nm in names if nm not in KNOWN_RULES]
+                    tail = rest[close + 1 :].strip()
+                    if not names:
+                        d.error = "allow() lists no rules"
+                    elif bad:
+                        d.error = "unknown rule '%s'" % bad[0]
+                    elif not tail.startswith('reason="'):
+                        d.error = 'waiver missing reason="..."'
+                    else:
+                        endq = tail.find('"', 8)
+                        reason = tail[8:endq] if endq > 8 else ""
+                        if not reason.strip():
+                            d.error = "waiver reason is empty"
+                        else:
+                            d.kind = "allow"
+                            d.rules = names
+                            d.reason = reason
+        else:
+            d.error = "unknown lint directive '%s'" % body.split(" ")[0]
+        out.append(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Source model: fns, impl/trait context, test regions
+# ---------------------------------------------------------------------------
+
+class Fn(object):
+    __slots__ = (
+        "name", "impl_type", "in_trait", "is_test", "is_cold",
+        "params", "ret", "item_start", "fn_kw", "body_start", "body_end",
+        "sig_line", "body_end_line",
+    )
+
+    def __init__(self):
+        self.name = ""
+        self.impl_type = None
+        self.in_trait = False
+        self.is_test = False
+        self.is_cold = False
+        self.params = []      # token objects inside the signature parens
+        self.ret = []         # token texts between -> and the body
+        self.item_start = -1  # token index incl. visibility / attributes
+        self.fn_kw = -1
+        self.body_start = -1  # index of the '{' (or -1 for decl-only)
+        self.body_end = -1
+        self.sig_line = 0
+        self.body_end_line = 0
+
+
+class FileModel(object):
+    __slots__ = ("path", "toks", "comments", "directives", "fns", "test_lines")
+
+    def __init__(self, path):
+        self.path = path
+        self.toks = []
+        self.comments = []
+        self.directives = []
+        self.fns = []
+        self.test_lines = set()  # lines inside #[cfg(test)] mod bodies
+
+
+def _match_brace(toks, i):
+    """i points at '{'; return index of the matching '}' (or len-1)."""
+    depth = 0
+    n = len(toks)
+    while i < n:
+        t = toks[i].text
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    return n - 1
+
+
+def _skip_angles(toks, i):
+    """i points at '<'; return index just past the matching '>'."""
+    depth = 0
+    n = len(toks)
+    while i < n:
+        t = toks[i].text
+        if t == "<":
+            depth += 1
+        elif t == ">":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        elif t in ("{", ";"):
+            return i  # malformed; bail
+        i += 1
+    return n
+
+
+def _attr_info(toks, i):
+    """i points at '#'; returns (end_index_exclusive, idents_inside)."""
+    n = len(toks)
+    j = i + 1
+    if j < n and toks[j].text == "!":
+        j += 1
+    if j >= n or toks[j].text != "[":
+        return i + 1, []
+    depth = 0
+    idents = []
+    while j < n:
+        t = toks[j]
+        if t.text == "[":
+            depth += 1
+        elif t.text == "]":
+            depth -= 1
+            if depth == 0:
+                return j + 1, idents
+        elif t.kind == "ident":
+            idents.append(t.text)
+        j += 1
+    return n, idents
+
+
+def _item_start(toks, fn_kw):
+    """Walk back from the `fn` keyword over visibility/qualifiers/attributes
+    to the first token of the item."""
+    j = fn_kw - 1
+    while j >= 0:
+        t = toks[j].text
+        if t in ("pub", "unsafe", "const", "async", "default", "extern"):
+            j -= 1
+        elif toks[j].kind == "str" and j >= 1 and toks[j - 1].text == "extern":
+            j -= 1
+        elif t == ")":
+            # pub(crate) / pub(in path)
+            depth = 0
+            k = j
+            while k >= 0:
+                if toks[k].text == ")":
+                    depth += 1
+                elif toks[k].text == "(":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                k -= 1
+            j = k - 1
+        elif t == "]":
+            # attribute group
+            depth = 0
+            k = j
+            while k >= 0:
+                if toks[k].text == "]":
+                    depth += 1
+                elif toks[k].text == "[":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                k -= 1
+            if k >= 1 and toks[k - 1].text == "#":
+                j = k - 2
+            else:
+                break
+        else:
+            break
+    return j + 1
+
+
+def parse_file(path, text):
+    fm = FileModel(path)
+    toks, comments = tokenize(text)
+    fm.toks = toks
+    fm.comments = comments
+    fm.directives = parse_directives(comments)
+    n = len(toks)
+
+    # context stack: (kind, name, depth_at_open); depth counts '{'
+    stack = []
+    depth = 0
+    pending_attr_idents = []
+    i = 0
+    while i < n:
+        t = toks[i]
+        txt = t.text
+        if txt == "#" :
+            end, idents = _attr_info(toks, i)
+            pending_attr_idents.extend(idents)
+            i = end
+            continue
+        if txt == "{":
+            depth += 1
+            pending_attr_idents = []
+            i += 1
+            continue
+        if txt == "}":
+            depth -= 1
+            while stack and stack[-1][2] > depth:
+                stack.pop()
+            i += 1
+            continue
+        if txt == "impl" and t.kind == "ident":
+            j = i + 1
+            if j < n and toks[j].text == "<":
+                j = _skip_angles(toks, j)
+            # collect header until '{' or ';' at angle depth 0
+            run = []
+            angle = 0
+            while j < n:
+                tt = toks[j].text
+                if tt == "<":
+                    angle += 1
+                elif tt == ">":
+                    angle -= 1
+                elif angle == 0 and tt in ("{", ";", "where"):
+                    break
+                run.append(toks[j])
+                j += 1
+            # skip a where clause
+            while j < n and toks[j].text not in ("{", ";"):
+                j += 1
+            if j < n and toks[j].text == "{":
+                # type name: after last top-level 'for' if present
+                segs = run
+                for k in range(len(run) - 1, -1, -1):
+                    if run[k].text == "for":
+                        segs = run[k + 1 :]
+                        break
+                name = None
+                for tk in segs:
+                    if tk.text == "<":
+                        break
+                    if tk.kind == "ident" and tk.text not in ("dyn", "mut"):
+                        name = tk.text
+                stack.append(("impl", name or "?", depth + 1))
+                depth += 1
+                i = j + 1
+                pending_attr_idents = []
+                continue
+            i = j + 1
+            pending_attr_idents = []
+            continue
+        if txt == "trait" and t.kind == "ident":
+            j = i + 1
+            name = toks[j].text if j < n and toks[j].kind == "ident" else "?"
+            while j < n and toks[j].text not in ("{", ";"):
+                j += 1
+            if j < n and toks[j].text == "{":
+                stack.append(("trait", name, depth + 1))
+                depth += 1
+            i = j + 1
+            pending_attr_idents = []
+            continue
+        if txt == "mod" and t.kind == "ident":
+            j = i + 1
+            is_test_mod = any(a == "cfg" for a in pending_attr_idents) and any(
+                a == "test" for a in pending_attr_idents
+            )
+            while j < n and toks[j].text not in ("{", ";"):
+                j += 1
+            if j < n and toks[j].text == "{":
+                in_test = is_test_mod or any(s[0] == "mod_test" for s in stack)
+                kind = "mod_test" if in_test else "mod"
+                if kind == "mod_test":
+                    close = _match_brace(toks, j)
+                    for ln in range(toks[j].line, toks[close].line + 1):
+                        fm.test_lines.add(ln)
+                stack.append((kind, "", depth + 1))
+                depth += 1
+            i = j + 1
+            pending_attr_idents = []
+            continue
+        if txt == "fn" and t.kind == "ident":
+            f = Fn()
+            f.fn_kw = i
+            f.item_start = _item_start(toks, i)
+            f.sig_line = toks[f.item_start].line
+            f.is_test = (
+                ("test" in pending_attr_idents and "cfg" not in pending_attr_idents)
+                or any(s[0] == "mod_test" for s in stack)
+            )
+            if "cfg" in pending_attr_idents and "test" in pending_attr_idents:
+                f.is_test = True
+            for s in reversed(stack):
+                if s[0] == "impl":
+                    f.impl_type = s[1]
+                    break
+                if s[0] == "trait":
+                    f.in_trait = True
+                    break
+            j = i + 1
+            if j < n and toks[j].kind == "ident":
+                f.name = toks[j].text
+                j += 1
+            if j < n and toks[j].text == "<":
+                j = _skip_angles(toks, j)
+            if j < n and toks[j].text == "(":
+                pd = 0
+                j0 = j
+                while j < n:
+                    if toks[j].text == "(":
+                        pd += 1
+                    elif toks[j].text == ")":
+                        pd -= 1
+                        if pd == 0:
+                            break
+                    j += 1
+                f.params = toks[j0 + 1 : j]
+                j += 1
+            if j < n and toks[j].text == "->":
+                j += 1
+                angle = 0
+                while j < n:
+                    tt = toks[j].text
+                    if tt == "<":
+                        angle += 1
+                    elif tt == ">":
+                        angle -= 1
+                    elif angle <= 0 and tt in ("{", ";", "where"):
+                        break
+                    f.ret.append(tt)
+                    j += 1
+            while j < n and toks[j].text not in ("{", ";"):
+                j += 1
+            if j < n and toks[j].text == "{":
+                f.body_start = j
+                f.body_end = _match_brace(toks, j)
+                f.body_end_line = toks[f.body_end].line
+                fm.fns.append(f)
+                # walk *into* the body (nested fns are parsed too)
+                depth += 1
+                stack.append(("fnbody", f.name, depth))
+                i = j + 1
+            else:
+                f.body_end_line = toks[min(j, n - 1)].line
+                fm.fns.append(f)
+                i = j + 1
+            pending_attr_idents = []
+            continue
+        pending_attr_idents = []
+        i += 1
+
+    # attach cold markers
+    for d in fm.directives:
+        if d.kind != "cold":
+            continue
+        for f in fm.fns:
+            if f.item_start <= d.next_tok <= (f.body_start if f.body_start >= 0 else f.fn_kw + 4):
+                f.is_cold = True
+                d.used = True
+                break
+    return fm
+
+
+# ---------------------------------------------------------------------------
+# Findings / waivers
+# ---------------------------------------------------------------------------
+
+class Finding(object):
+    __slots__ = ("rule", "file", "line", "message", "waived")
+
+    def __init__(self, rule, file, line, message):
+        self.rule = rule
+        self.file = file
+        self.line = line
+        self.message = message
+        self.waived = None  # reason string when waived
+
+    def as_json(self):
+        return {
+            "rule": self.rule,
+            "file": self.file,
+            "line": self.line,
+            "message": self.message,
+            "waived": self.waived,
+        }
+
+
+def fn_is_scanned(f):
+    return not f.is_test and f.body_start >= 0
+
+
+# ---- R1 -------------------------------------------------------------------
+
+def r1_hot_alloc(fm, findings):
+    rel = fm.path
+    if rel not in HOT_FILES and not any(rel.startswith(p) for p in HOT_PREFIXES):
+        return
+    toks = fm.toks
+    for f in fm.fns:
+        if not fn_is_scanned(f) or f.is_cold:
+            continue
+        i = f.body_start
+        while i <= f.body_end:
+            t = toks[i]
+            nxt = toks[i + 1].text if i + 1 < len(toks) else ""
+            nx2 = toks[i + 2].text if i + 2 < len(toks) else ""
+            hit = None
+            if t.kind == "ident" and t.text == "Vec" and nxt == "::" and nx2 == "new":
+                hit = "Vec::new"
+            elif t.kind == "ident" and t.text == "vec" and nxt == "!":
+                hit = "vec!"
+            elif t.kind == "ident" and t.text == "String" and nxt == "::" and nx2 == "from":
+                hit = "String::from"
+            elif t.kind == "ident" and t.text == "format" and nxt == "!":
+                hit = "format!"
+            elif t.kind == "ident" and t.text == "Box" and nxt == "::" and nx2 == "new":
+                hit = "Box::new"
+            elif t.text == "." and i + 1 < len(toks) and toks[i + 1].kind == "ident" \
+                    and toks[i + 1].text in ALLOC_CALLS:
+                hit = "." + toks[i + 1].text
+            if hit:
+                findings.append(Finding(
+                    "no-alloc-hot-path", rel, t.line,
+                    "%s in hot fn `%s` (mark `// lint: cold` or waive)" % (hit, f.name),
+                ))
+            i += 1
+
+
+# ---- R2 -------------------------------------------------------------------
+
+def _call_args_float(toks, open_paren):
+    """open_paren indexes '('; True when the argument tokens contain a float
+    literal or an .abs()/.sqrt() call — the distance-typed heuristic."""
+    depth = 0
+    i = open_paren
+    n = len(toks)
+    while i < n:
+        t = toks[i]
+        if t.text == "(":
+            depth += 1
+        elif t.text == ")":
+            depth -= 1
+            if depth == 0:
+                return False
+        elif t.kind == "fnum":
+            return True
+        elif t.text == "." and i + 1 < n and toks[i + 1].text in ("abs", "sqrt"):
+            return True
+        i += 1
+    return False
+
+
+def r2_total_ordering(fm, findings):
+    toks = fm.toks
+    for f in fm.fns:
+        if not fn_is_scanned(f):
+            continue
+        i = f.body_start
+        while i <= f.body_end:
+            t = toks[i]
+            nxt = toks[i + 1] if i + 1 < len(toks) else None
+            nx2 = toks[i + 2] if i + 2 < len(toks) else None
+            if t.text == "." and nxt is not None and nxt.kind == "ident":
+                m = nxt.text
+                if m == "partial_cmp":
+                    findings.append(Finding(
+                        "total-ordering", fm.path, t.line,
+                        ".partial_cmp on distances — use total_cmp",
+                    ))
+                elif m in ("max", "min") and nx2 is not None and nx2.text == "(" \
+                        and _call_args_float(toks, i + 2):
+                    findings.append(Finding(
+                        "total-ordering", fm.path, t.line,
+                        ".%s(..) with float argument — use total_cmp selection" % m,
+                    ))
+            elif t.kind == "ident" and t.text in ("f32", "f64") and nxt is not None \
+                    and nxt.text == "::" and nx2 is not None and nx2.text in ("max", "min"):
+                findings.append(Finding(
+                    "total-ordering", fm.path, t.line,
+                    "%s::%s as fn value — use total_cmp selection" % (t.text, nx2.text),
+                ))
+            i += 1
+
+
+# ---- R3 -------------------------------------------------------------------
+
+def _ret_is_wire_result(f):
+    return "Result" in f.ret and "WireError" in f.ret
+
+
+def r3_panic_free(fm, findings):
+    toks = fm.toks
+    file_scope = fm.path in R3_FILES
+    for f in fm.fns:
+        if not fn_is_scanned(f):
+            continue
+        wire = _ret_is_wire_result(f)
+        if not (wire or file_scope):
+            continue
+        i = f.body_start
+        while i <= f.body_end:
+            t = toks[i]
+            nxt = toks[i + 1] if i + 1 < len(toks) else None
+            if t.text == "." and nxt is not None and nxt.kind == "ident" \
+                    and nxt.text in ("unwrap", "expect"):
+                findings.append(Finding(
+                    "panic-free-decode", fm.path, t.line,
+                    ".%s in %s — return a typed error" % (
+                        nxt.text, "WireError decoder" if wire else "serve runtime"),
+                ))
+            elif t.kind == "ident" and nxt is not None and nxt.text == "!" and (
+                t.text in PANIC_MACROS or (wire and t.text in ASSERT_MACROS)
+            ):
+                findings.append(Finding(
+                    "panic-free-decode", fm.path, t.line,
+                    "%s! in %s — return a typed error" % (
+                        t.text, "WireError decoder" if wire else "serve runtime"),
+                ))
+            elif wire and t.text == "[" and i > f.body_start:
+                prev = toks[i - 1]
+                if prev.kind == "ident" or prev.text in (")", "]"):
+                    findings.append(Finding(
+                        "panic-free-decode", fm.path, t.line,
+                        "indexing in WireError decoder — use .get()/try_take",
+                    ))
+            i += 1
+
+
+# ---- R4 -------------------------------------------------------------------
+
+DECODER_EXACT = {"try_from_bytes", "from_bytes", "try_from_snapshot_bytes"}
+
+
+def _is_decoder(f):
+    if f.in_trait or f.is_test:
+        return False
+    nm = f.name
+    named = nm in DECODER_EXACT or nm.endswith("_from_bytes") or (
+        nm.startswith("decode_") and _ret_is_wire_result(f)
+    )
+    if not named:
+        return False
+    # exactly one parameter, and it mentions u8 (i.e. &[u8])
+    depth = 0
+    commas = 0
+    has_any = False
+    for t in f.params:
+        has_any = True
+        if t.text in ("(", "[", "<"):
+            depth += 1
+        elif t.text in (")", "]", ">"):
+            depth -= 1
+        elif t.text == "," and depth == 0:
+            commas += 1
+    if not has_any or commas != 0:
+        return False
+    if not any(t.text == "u8" for t in f.params):
+        return False
+    if any(t.text == "self" for t in f.params):
+        return False
+    return True
+
+
+def r4_registration(files, registry_idents, findings):
+    for fm in files:
+        for f in fm.fns:
+            if f.body_start < 0 or not _is_decoder(f):
+                continue
+            name_ok = f.name in registry_idents
+            type_ok = f.impl_type is None or f.impl_type in registry_idents
+            if not (name_ok and type_ok):
+                who = "%s::%s" % (f.impl_type, f.name) if f.impl_type else f.name
+                findings.append(Finding(
+                    "harness-registration", fm.path, f.sig_line,
+                    "decoder `%s` is not exercised by tests/wire_adversarial.rs" % who,
+                ))
+
+
+# ---- R5 -------------------------------------------------------------------
+
+def _is_config_key(s):
+    if not s:
+        return False
+    for part in s.split("."):
+        if not part:
+            return False
+        if part[0] not in "abcdefghijklmnopqrstuvwxyz":
+            return False
+        for c in part:
+            if c not in "abcdefghijklmnopqrstuvwxyz0123456789_":
+                return False
+    return True
+
+
+def _word_bounded(doc, key):
+    start = 0
+    while True:
+        idx = doc.find(key, start)
+        if idx < 0:
+            return False
+        before = doc[idx - 1] if idx > 0 else " "
+        after_i = idx + len(key)
+        after = doc[after_i] if after_i < len(doc) else " "
+        if before not in IDENT_CONT and before != "." and after not in IDENT_CONT \
+                and after != ".":
+            return True
+        start = idx + 1
+
+
+def r5_config_docs(fm, docs_text, findings):
+    if not fm.path.startswith("config/"):
+        return
+    toks = fm.toks
+    for f in fm.fns:
+        if not fn_is_scanned(f):
+            continue
+        i = f.body_start
+        while i <= f.body_end:
+            t = toks[i]
+            if t.kind == "str" and i + 1 <= f.body_end and toks[i + 1].text == "=>":
+                lit = t.text
+                if lit.startswith('"') and lit.endswith('"'):
+                    key = lit[1:-1]
+                    if _is_config_key(key) and not _word_bounded(docs_text, key):
+                        findings.append(Finding(
+                            "config-doc-parity", fm.path, t.line,
+                            'config key "%s" is not documented in README.md/DESIGN.md' % key,
+                        ))
+            i += 1
+
+
+# ---------------------------------------------------------------------------
+# Waiver application
+# ---------------------------------------------------------------------------
+
+def apply_waivers(fm, findings):
+    """Mark findings in `fm` waived per its directives; emit lint-directive
+    findings for malformed or unused directives."""
+    mine = [f for f in findings if f.file == fm.path and f.rule in KNOWN_RULES]
+    extra = []
+    for d in fm.directives:
+        if d.kind == "bad":
+            extra.append(Finding("lint-directive", fm.path, d.line, d.error))
+            continue
+        if d.kind == "cold":
+            if not d.used:
+                extra.append(Finding(
+                    "lint-directive", fm.path, d.line,
+                    "`lint: cold` marker does not precede a fn",
+                ))
+            continue
+        # allow(...)
+        scope_fn = None
+        if d.standalone:
+            for f in fm.fns:
+                if f.item_start <= d.next_tok <= (f.body_start if f.body_start >= 0 else f.fn_kw + 4):
+                    scope_fn = f
+                    break
+        if scope_fn is not None:
+            lines = (scope_fn.sig_line, scope_fn.body_end_line)
+        elif d.standalone:
+            nxt_line = fm.toks[d.next_tok].line if 0 <= d.next_tok < len(fm.toks) else -1
+            lines = (nxt_line, nxt_line)
+        else:
+            lines = (d.line, d.line)
+        hit = False
+        for f in mine:
+            if f.waived is None and f.rule in d.rules and lines[0] <= f.line <= lines[1]:
+                f.waived = d.reason
+                hit = True
+        if hit:
+            d.used = True
+        else:
+            extra.append(Finding(
+                "lint-directive", fm.path, d.line,
+                "unused waiver for %s — remove it" % ",".join(d.rules),
+            ))
+    findings.extend(extra)
+
+
+# ---------------------------------------------------------------------------
+# Fixture expectations (`//~ rule-a, rule-b` trailing comments)
+# ---------------------------------------------------------------------------
+
+def fixture_expectations(fm):
+    exp = []
+    for cm in fm.comments:
+        if cm.text.startswith("~"):
+            for nm in cm.text[1:].split(","):
+                nm = nm.strip()
+                if nm:
+                    exp.append((fm.path, cm.line, nm))
+    return exp
+
+
+def fixture_virtual_path(text):
+    for raw in text.splitlines():
+        line = raw.strip()
+        if line.startswith("//"):
+            body = line.lstrip("/").lstrip("!").strip()
+            if body.startswith("lint-fixture:"):
+                rest = body[len("lint-fixture:") :].strip()
+                if rest.startswith("virtual="):
+                    return rest[len("virtual=") :].strip()
+        elif line:
+            break
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def collect_rs(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if fn.endswith(".rs"):
+                out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def scan_tree(src_root, registry_path, docs_text):
+    files = []
+    for path in collect_rs(src_root):
+        rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+        with open(path, "r") as fh:
+            files.append(parse_file(rel, fh.read()))
+    registry_idents = set()
+    if registry_path and os.path.exists(registry_path):
+        with open(registry_path, "r") as fh:
+            rtoks, _ = tokenize(fh.read())
+        registry_idents = {t.text for t in rtoks if t.kind == "ident"}
+    findings = []
+    for fm in files:
+        r1_hot_alloc(fm, findings)
+        r2_total_ordering(fm, findings)
+        r3_panic_free(fm, findings)
+        r5_config_docs(fm, docs_text, findings)
+    r4_registration(files, registry_idents, findings)
+    for fm in files:
+        apply_waivers(fm, findings)
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return files, findings
+
+
+def scan_fixtures(fixture_root):
+    """Fixture corpus: each .rs carries `// lint-fixture: virtual=<path>`;
+    DOCS.md is the doc corpus; the file with virtual tests/wire_adversarial.rs
+    is the registry.  Returns (expected, actual, ok)."""
+    files = []
+    registry_idents = set()
+    docs_text = ""
+    docs_path = os.path.join(fixture_root, "DOCS.md")
+    if os.path.exists(docs_path):
+        with open(docs_path, "r") as fh:
+            docs_text = fh.read()
+    expectations = []
+    for path in collect_rs(fixture_root):
+        with open(path, "r") as fh:
+            text = fh.read()
+        virtual = fixture_virtual_path(text) or os.path.basename(path)
+        if virtual == "tests/wire_adversarial.rs":
+            rtoks, _ = tokenize(text)
+            registry_idents = {t.text for t in rtoks if t.kind == "ident"}
+            continue
+        fm = parse_file(virtual, text)
+        files.append(fm)
+        expectations.extend(fixture_expectations(fm))
+    findings = []
+    for fm in files:
+        r1_hot_alloc(fm, findings)
+        r2_total_ordering(fm, findings)
+        r3_panic_free(fm, findings)
+        r5_config_docs(fm, docs_text, findings)
+    r4_registration(files, registry_idents, findings)
+    for fm in files:
+        apply_waivers(fm, findings)
+    actual = sorted(
+        (f.file, f.line, f.rule) for f in findings if f.waived is None
+    )
+    expected = sorted(set(expectations))
+    return expected, actual, expected == actual
+
+
+def main(argv):
+    src = "rust/src"
+    registry = None
+    docs = []
+    json_out = None
+    fixtures = None
+    deny = False
+    quiet = False
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a == "--src":
+            i += 1
+            src = argv[i]
+        elif a == "--registry":
+            i += 1
+            registry = argv[i]
+        elif a == "--docs":
+            i += 1
+            docs.append(argv[i])
+        elif a == "--json":
+            i += 1
+            json_out = argv[i]
+        elif a == "--fixtures":
+            i += 1
+            fixtures = argv[i]
+        elif a == "--deny-warnings":
+            deny = True
+        elif a == "--quiet":
+            quiet = True
+        else:
+            sys.stderr.write("unknown arg %s\n" % a)
+            return 2
+        i += 1
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(src)))
+    if registry is None:
+        registry = os.path.join(os.path.dirname(os.path.abspath(src)), "tests", "wire_adversarial.rs")
+    if not docs:
+        docs = [os.path.join(repo_root, "README.md"), os.path.join(repo_root, "DESIGN.md")]
+    docs_text = ""
+    for d in docs:
+        if os.path.exists(d):
+            with open(d, "r") as fh:
+                docs_text += fh.read() + "\n"
+
+    files, findings = scan_tree(src, registry, docs_text)
+    unwaived = [f for f in findings if f.waived is None]
+    waived = [f for f in findings if f.waived is not None]
+
+    fixture_result = None
+    if fixtures:
+        expected, actual, ok = scan_fixtures(fixtures)
+        fixture_result = {
+            "root": fixtures,
+            "expected": len(expected),
+            "actual": len(actual),
+            "matched": ok,
+        }
+        if not ok:
+            missing = [e for e in expected if e not in actual]
+            surplus = [a for a in actual if a not in expected]
+            for e in missing:
+                sys.stderr.write("fixture MISSING %s:%d %s\n" % e)
+            for s in surplus:
+                sys.stderr.write("fixture SURPLUS %s:%d %s\n" % s)
+
+    if not quiet:
+        for f in findings:
+            tag = "waived(%s)" % f.waived if f.waived else "DENY"
+            print("%s:%d [%s] %s %s" % (f.file, f.line, f.rule, f.message, tag))
+        print(
+            "lint: %d file(s), %d fn(s), %d finding(s) (%d waived, %d unwaived)"
+            % (
+                len(files),
+                sum(len(fm.fns) for fm in files),
+                len(findings),
+                len(waived),
+                len(unwaived),
+            )
+        )
+        if fixture_result:
+            print("fixtures: %s" % ("ok" if fixture_result["matched"] else "MISMATCH"))
+
+    if json_out:
+        waiver_inventory = []
+        for fm in files:
+            for d in fm.directives:
+                if d.kind == "allow" and d.used:
+                    waiver_inventory.append({
+                        "file": fm.path,
+                        "line": d.line,
+                        "rules": d.rules,
+                        "reason": d.reason,
+                    })
+        report = {
+            "version": 1,
+            "generator": "python/neargraph_lint.py",
+            "src": src,
+            "files_scanned": len(files),
+            "fns_scanned": sum(len(fm.fns) for fm in files),
+            "findings_unwaived": len(unwaived),
+            "waiver_count": len(waiver_inventory),
+            "waivers": waiver_inventory,
+            "findings": [f.as_json() for f in findings],
+        }
+        if fixture_result:
+            report["fixtures"] = fixture_result
+        with open(json_out, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=False)
+            fh.write("\n")
+
+    bad = bool(unwaived) or (fixture_result and not fixture_result["matched"])
+    if deny and bad:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -17,7 +17,7 @@
 use crate::graph::EdgeList;
 use crate::metric::euclidean::{dot, sq_dist};
 use crate::points::{DenseMatrix, PointSet};
-use crate::util::Rng;
+use crate::util::{fmax, Rng};
 
 /// SNN build parameters.
 #[derive(Clone, Copy, Debug)]
@@ -89,7 +89,7 @@ impl Snn {
             }
             let lambda = normalize(&mut w);
             v = w;
-            if (lambda - prev_lambda).abs() <= params.tol * lambda.abs().max(1.0) {
+            if (lambda - prev_lambda).abs() <= params.tol * fmax(lambda.abs(), 1.0) {
                 break;
             }
             prev_lambda = lambda;

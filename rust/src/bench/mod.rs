@@ -7,7 +7,7 @@ use crate::data::registry::{DatasetSpec, Generated};
 use crate::data::{calibrate_eps, registry};
 use crate::metric::{Euclidean, Hamming};
 use crate::points::{DenseMatrix, HammingCodes};
-use crate::util::{Rng, Stopwatch};
+use crate::util::{fmin, Rng, Stopwatch};
 use std::io::Write;
 
 /// A materialized workload: a dataset analog plus its calibrated ε sweep.
@@ -51,7 +51,7 @@ pub fn build_workload(spec: &'static DatasetSpec, n: usize, seed: u64) -> Worklo
             let eps = registry::DEGREE_SWEEP
                 .iter()
                 .map(|&deg| {
-                    calibrate_eps(&pts, &Euclidean, deg.min(n as f64 - 1.0), samples, &mut rng)
+                    calibrate_eps(&pts, &Euclidean, fmin(deg, n as f64 - 1.0), samples, &mut rng)
                 })
                 .collect();
             Workload::Dense { spec, pts, eps }
@@ -60,7 +60,7 @@ pub fn build_workload(spec: &'static DatasetSpec, n: usize, seed: u64) -> Worklo
             let eps = registry::DEGREE_SWEEP
                 .iter()
                 .map(|&deg| {
-                    calibrate_eps(&codes, &Hamming, deg.min(n as f64 - 1.0), samples, &mut rng)
+                    calibrate_eps(&codes, &Hamming, fmin(deg, n as f64 - 1.0), samples, &mut rng)
                 })
                 .collect();
             Workload::Hamming { spec, codes, eps }

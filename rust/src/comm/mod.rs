@@ -30,6 +30,7 @@ pub use faults::{
 pub use stats::{CommStats, PhaseTimes};
 pub use world::{makespan, run_world, run_world_with, RankOutput};
 
+use crate::util::fmax;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -193,7 +194,7 @@ impl Comm {
     /// Charge CPU time since the last mark to the current phase as compute.
     fn absorb_compute(&mut self) {
         let now = crate::util::thread_cpu_time();
-        let dt = (now - self.cpu_mark).max(0.0);
+        let dt = fmax(now - self.cpu_mark, 0.0);
         self.cpu_mark = now;
         self.vt += dt;
         self.stats.add_compute(dt);
@@ -201,7 +202,7 @@ impl Comm {
 
     /// Charge `dt` seconds of modeled communication time.
     fn charge_comm(&mut self, dt: f64) {
-        let dt = dt.max(0.0);
+        let dt = fmax(dt, 0.0);
         self.vt += dt;
         self.stats.add_comm(dt);
     }
@@ -364,7 +365,7 @@ impl Comm {
             let cpu0 = crate::util::thread_cpu_time();
             let out = compute();
             let cpu1 = crate::util::thread_cpu_time();
-            let c = (cpu1 - cpu0).max(0.0);
+            let c = fmax(cpu1 - cpu0, 0.0);
             self.cpu_mark = cpu1;
             self.vt += c;
             self.stats.add_compute(c);
@@ -382,14 +383,14 @@ impl Comm {
         let cpu0 = crate::util::thread_cpu_time();
         let out = compute();
         let cpu1 = crate::util::thread_cpu_time();
-        let c = (cpu1 - cpu0).max(0.0);
+        let c = fmax(cpu1 - cpu0, 0.0);
         self.cpu_mark = cpu1;
         self.stats.add_compute(c);
 
         let msg = self.take_matching(from, tag as u64);
         // Step ends when both the compute and the incoming transfer finish.
-        let end = (start + c).max(msg.arrival_vt).max(start + self.cost.p2p(bytes));
-        self.stats.add_comm((end - start - c).max(0.0));
+        let end = fmax(fmax(start + c, msg.arrival_vt), start + self.cost.p2p(bytes));
+        self.stats.add_comm(fmax(end - start - c, 0.0));
         self.vt = end;
         (out, msg.payload)
     }
@@ -583,8 +584,8 @@ impl Comm {
         let vals = all.iter().map(|b| f64::from_le_bytes(b[..8].try_into().unwrap()));
         match op {
             ReduceOp::Sum => vals.sum(),
-            ReduceOp::Max => vals.fold(f64::NEG_INFINITY, f64::max),
-            ReduceOp::Min => vals.fold(f64::INFINITY, f64::min),
+            ReduceOp::Max => vals.fold(f64::NEG_INFINITY, fmax),
+            ReduceOp::Min => vals.fold(f64::INFINITY, fmin),
         }
     }
 

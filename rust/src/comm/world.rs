@@ -2,6 +2,7 @@
 
 use super::faults::{self, FaultPlan};
 use super::{Comm, CommStats, CostModel, Msg};
+use crate::util::fmax;
 use std::sync::atomic::AtomicBool;
 use std::sync::{mpsc, Arc};
 
@@ -43,7 +44,7 @@ pub(crate) fn spawn_comms(n: usize, cost: CostModel, plan: Option<&FaultPlan>) -
 /// collect every rank's result, final virtual time and statistics.
 ///
 /// The returned vector is indexed by rank. The *makespan* of the simulated
-/// job is `outputs.iter().map(|o| o.virtual_time).fold(0.0, f64::max)`.
+/// job is `outputs.iter().map(|o| o.virtual_time).fold(0.0, fmax)`.
 pub fn run_world<T, F>(n: usize, cost: CostModel, f: F) -> Vec<RankOutput<T>>
 where
     T: Send,
@@ -99,7 +100,7 @@ where
 
 /// Makespan of a finished world (max rank virtual time).
 pub fn makespan<T>(outputs: &[RankOutput<T>]) -> f64 {
-    outputs.iter().map(|o| o.virtual_time).fold(0.0, f64::max)
+    outputs.iter().map(|o| o.virtual_time).fold(0.0, fmax)
 }
 
 #[cfg(test)]

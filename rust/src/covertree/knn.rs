@@ -45,6 +45,7 @@ use super::scratch::{Cand, Frontier};
 use super::{CoverTree, QueryScratch};
 use crate::metric::Metric;
 use crate::points::PointSet;
+use crate::util::fmax;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -67,6 +68,7 @@ impl<P: PointSet> CoverTree<P> {
     /// work shrinks with the cap. May return fewer than `k` entries when
     /// fewer tree points lie within `cap`. A NaN or negative `cap` yields
     /// an empty result.
+    // lint: cold
     pub fn knn_within<M: Metric<P>>(
         &self,
         metric: &M,
@@ -105,7 +107,7 @@ impl<P: PointSet> CoverTree<P> {
         frontier.clear();
         let root = flat.root();
         let d = metric.dist(query, self.points().point(flat.point(root) as usize));
-        let rb = (d - flat.radius(root)).max(0.0);
+        let rb = fmax(d - flat.radius(root), 0.0);
         if rb <= cap {
             frontier.push(Frontier { bound: rb, node: root, dist: d });
         }
@@ -138,7 +140,7 @@ impl<P: PointSet> CoverTree<P> {
                 } else {
                     metric.dist(query, self.points().point(cp as usize))
                 };
-                let cb = (dc - flat.radius(c)).max(0.0);
+                let cb = fmax(dc - flat.radius(c), 0.0);
                 if cb > cap {
                     continue;
                 }

@@ -54,6 +54,7 @@ impl FlatTree {
     /// layout). Every node must be reachable from `root` (true for every
     /// builder output); an empty tree (`root == NIL`) yields the empty
     /// layout.
+    // lint: cold
     pub(crate) fn from_arena(nodes: &[Node], children: &[u32], root: u32) -> Self {
         if root == NIL || nodes.is_empty() {
             return FlatTree::default();

@@ -98,6 +98,7 @@ impl<P: PointSet> CoverTree<P> {
 
     /// [`CoverTree::query_weighted`] without the distances — kept for
     /// callers that only need the id set.
+    // lint: cold
     pub fn query<M: Metric<P>>(&self, metric: &M, query: P::Point<'_>, eps: f64, out: &mut Vec<u32>) {
         let mut weighted = Vec::new();
         self.query_weighted(metric, query, eps, &mut weighted);
@@ -105,6 +106,7 @@ impl<P: PointSet> CoverTree<P> {
     }
 
     /// Convenience wrapper returning a fresh vector of ids.
+    // lint: cold
     pub fn query_vec<M: Metric<P>>(&self, metric: &M, query: P::Point<'_>, eps: f64) -> Vec<u32> {
         let mut out = Vec::new();
         self.query(metric, query, eps, &mut out);
@@ -325,6 +327,7 @@ impl<P: PointSet> CoverTree<P> {
                     let lo = (base + w) * PAR_QUERY_CHUNK;
                     let hi = (lo + PAR_QUERY_CHUNK).min(n);
                     let sub = queries.slice(lo, hi);
+                    // lint: allow(no-alloc-hot-path) reason="per-chunk result buffer of one parallel wave, amortized over PAR_QUERY_CHUNK queries"
                     let mut out: Vec<(u32, u32, f64)> = Vec::new();
                     self.query_batch_with(metric, &sub, eps, sc, |qi, gid, d| {
                         out.push(((lo + qi) as u32, gid, d));
@@ -432,6 +435,7 @@ impl<P: PointSet> CoverTree<P> {
     /// [`CoverTree::query_batch`] over the build-order node arena (the
     /// pre-flat traversal, allocating its arena and stack per call). Same
     /// emitted sequence; kept as a perf/equivalence comparator.
+    // lint: cold
     pub fn query_batch_legacy<M, F>(&self, metric: &M, queries: &P, eps: f64, mut emit: F)
     where
         M: Metric<P>,

@@ -40,7 +40,8 @@
 use super::layout::FlatTree;
 use super::{CoverTree, Node, NIL};
 use crate::points::{
-    put_u64, try_get_u64, try_take, DenseMatrix, HammingCodes, PointSet, StringSet, WireError,
+    le_i32, le_u32, le_u64, put_u64, try_get_u64, try_get_u8, try_take, DenseMatrix, HammingCodes,
+    PointSet, StringSet, WireError,
 };
 use std::any::TypeId;
 
@@ -113,10 +114,10 @@ pub fn peek_point_tag(bytes: &[u8]) -> Result<u8, WireError> {
     let _checksum = try_get_u64(bytes, &mut off, "snapshot checksum")?;
     let len = try_get_u64(bytes, &mut off, "snapshot payload length")? as usize;
     let payload = try_take(bytes, &mut off, len, "snapshot payload")?;
-    if payload.is_empty() {
-        return Err(WireError::Corrupt { what: "empty snapshot payload" });
+    match payload.first() {
+        Some(&tag) => Ok(tag),
+        None => Err(WireError::Corrupt { what: "empty snapshot payload" }),
     }
-    Ok(payload[0])
 }
 
 impl<P: PointSet> CoverTree<P> {
@@ -191,7 +192,7 @@ impl<P: PointSet> CoverTree<P> {
         }
 
         let mut off = 0usize;
-        let tag = try_take(payload, &mut off, 1, "snapshot point tag")?[0];
+        let tag = try_get_u8(payload, &mut off, "snapshot point tag")?;
         if point_tag::<P>() != Some(tag) {
             return Err(WireError::Corrupt { what: "snapshot point tag does not match container" });
         }
@@ -203,8 +204,7 @@ impl<P: PointSet> CoverTree<P> {
             return Err(WireError::Corrupt { what: "snapshot id count != point count" });
         }
         let id_bytes = try_take(payload, &mut off, n.saturating_mul(4), "snapshot ids")?;
-        let ids: Vec<u32> =
-            id_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let ids: Vec<u32> = id_bytes.chunks_exact(4).map(le_u32).collect();
 
         let n_nodes = try_get_u64(payload, &mut off, "snapshot node count")? as usize;
         let node_bytes =
@@ -218,11 +218,15 @@ impl<P: PointSet> CoverTree<P> {
 
         let mut nodes = Vec::with_capacity(n_nodes);
         for rec in node_bytes.chunks_exact(NODE_BYTES) {
-            let point = u32::from_le_bytes(rec[0..4].try_into().unwrap());
-            let radius = f64::from_bits(u64::from_le_bytes(rec[4..12].try_into().unwrap()));
-            let level = i32::from_le_bytes(rec[12..16].try_into().unwrap());
-            let child_off = u32::from_le_bytes(rec[16..20].try_into().unwrap());
-            let child_len = u32::from_le_bytes(rec[20..24].try_into().unwrap());
+            let (point_b, rest) = rec.split_at(4);
+            let (radius_b, rest) = rest.split_at(8);
+            let (level_b, rest) = rest.split_at(4);
+            let (child_off_b, child_len_b) = rest.split_at(4);
+            let point = le_u32(point_b);
+            let radius = f64::from_bits(le_u64(radius_b));
+            let level = le_i32(level_b);
+            let child_off = le_u32(child_off_b);
+            let child_len = le_u32(child_len_b);
             if point as usize >= n {
                 return Err(WireError::Corrupt { what: "snapshot node point out of range" });
             }
@@ -235,8 +239,7 @@ impl<P: PointSet> CoverTree<P> {
             }
             nodes.push(Node { point, radius, level, child_off, child_len });
         }
-        let children: Vec<u32> =
-            child_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let children: Vec<u32> = child_bytes.chunks_exact(4).map(le_u32).collect();
         for &c in &children {
             if c as usize >= n_nodes {
                 return Err(WireError::Corrupt { what: "snapshot child id out of range" });
@@ -263,13 +266,21 @@ impl<P: PointSet> CoverTree<P> {
             let mut stack = vec![root];
             let mut visited = 0usize;
             while let Some(u) = stack.pop() {
-                if std::mem::replace(&mut seen[u as usize], true) {
-                    return Err(WireError::Corrupt { what: "snapshot arena is not a tree" });
+                match seen.get_mut(u as usize) {
+                    Some(s) if !*s => *s = true,
+                    _ => return Err(WireError::Corrupt { what: "snapshot arena is not a tree" }),
                 }
                 visited += 1;
-                let nd = &nodes[u as usize];
-                let lo = nd.child_off as usize;
-                stack.extend_from_slice(&children[lo..lo + nd.child_len as usize]);
+                // Child ranges were bounds-checked per node above; a range
+                // that still fails to borrow drops its children and is then
+                // caught by the visited-count check below.
+                let (lo, len) = match nodes.get(u as usize) {
+                    Some(nd) => (nd.child_off as usize, nd.child_len as usize),
+                    None => {
+                        return Err(WireError::Corrupt { what: "snapshot arena is not a tree" })
+                    }
+                };
+                stack.extend_from_slice(children.get(lo..lo.saturating_add(len)).unwrap_or(&[]));
             }
             if visited != n_nodes {
                 return Err(WireError::Corrupt { what: "snapshot has unreachable nodes" });

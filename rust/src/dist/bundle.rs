@@ -18,7 +18,7 @@
 //! typed [`WireError`], never a blind slice panic.
 
 use crate::graph::WeightedEdgeList;
-use crate::points::{put_u64, try_get_u64, try_take, PointSet, WireError};
+use crate::points::{le_f64, le_u32, put_u64, try_get_u64, try_take, PointSet, WireError};
 
 /// A batch of points with optional per-point metadata, movable between
 /// ranks through the simulated MPI layer.
@@ -109,16 +109,13 @@ impl<P: PointSet> Bundle<P> {
         let pts = P::try_from_bytes(try_take(bytes, &mut off, pn, "bundle point payload")?)?;
         let ng = try_get_u64(bytes, &mut off, "bundle gid count")? as usize;
         let gbytes = try_take(bytes, &mut off, ng.saturating_mul(4), "bundle gids")?;
-        let gids: Vec<u32> =
-            gbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let gids: Vec<u32> = gbytes.chunks_exact(4).map(le_u32).collect();
         let nc = try_get_u64(bytes, &mut off, "bundle cell count")? as usize;
         let cbytes = try_take(bytes, &mut off, nc.saturating_mul(4), "bundle cells")?;
-        let cells: Vec<u32> =
-            cbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let cells: Vec<u32> = cbytes.chunks_exact(4).map(le_u32).collect();
         let nd = try_get_u64(bytes, &mut off, "bundle dpc count")? as usize;
         let dbytes = try_take(bytes, &mut off, nd.saturating_mul(8), "bundle dpc")?;
-        let dpc: Vec<f64> =
-            dbytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        let dpc: Vec<f64> = dbytes.chunks_exact(8).map(le_f64).collect();
         if off != bytes.len() {
             return Err(WireError::Corrupt { what: "trailing bytes after bundle payload" });
         }
@@ -169,7 +166,7 @@ impl EdgeBundle {
     pub fn from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
         let mut off = 0usize;
         let src = try_take(bytes, &mut off, 4, "edge-bundle source rank")?;
-        let source = u32::from_le_bytes(src.try_into().unwrap());
+        let source = le_u32(src);
         let pn = try_get_u64(bytes, &mut off, "edge-bundle payload length")? as usize;
         let payload = try_take(bytes, &mut off, pn, "edge-bundle payload")?;
         if off != bytes.len() {
@@ -323,7 +320,7 @@ impl<P: PointSet> KnnBundle<P> {
     pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
         let mut off = 0usize;
         let kb = try_take(bytes, &mut off, 4, "knn-bundle k")?;
-        let k = u32::from_le_bytes(kb.try_into().unwrap());
+        let k = le_u32(kb);
         let pn = try_get_u64(bytes, &mut off, "knn-bundle point-bytes length")? as usize;
         let pts = P::try_from_bytes(try_take(bytes, &mut off, pn, "knn-bundle point payload")?)?;
         let gids = take_u32s(bytes, &mut off, "knn-bundle gids")?;
@@ -343,9 +340,9 @@ impl<P: PointSet> KnnBundle<P> {
             return Err(WireError::Corrupt { what: "knn bundle array lengths disagree" });
         }
         if cand_off.len() != m + 1
-            || cand_off[0] != 0
-            || cand_off.windows(2).any(|p| p[0] > p[1])
-            || *cand_off.last().unwrap() as usize != cand_ids.len()
+            || cand_off.first().copied() != Some(0)
+            || cand_off.iter().zip(cand_off.iter().skip(1)).any(|(a, b)| a > b)
+            || cand_off.last().map(|&v| v as usize) != Some(cand_ids.len())
             || cand_ids.len() != cand_dists.len()
         {
             return Err(WireError::Corrupt { what: "knn bundle row offsets inconsistent" });
@@ -359,21 +356,30 @@ impl<P: PointSet> KnnBundle<P> {
         if cand_dists.iter().any(|d| !d.is_finite() || *d < 0.0) {
             return Err(WireError::Corrupt { what: "non-finite or negative candidate distance" });
         }
-        for i in 0..m {
-            let (lo, hi) = (cand_off[i] as usize, cand_off[i + 1] as usize);
-            if hi - lo > k as usize {
+        let mut lo = 0usize;
+        for (i, &end) in cand_off.iter().skip(1).enumerate() {
+            let hi = end as usize;
+            if hi.saturating_sub(lo) > k as usize {
                 return Err(WireError::Corrupt { what: "candidate row wider than k" });
             }
-            for w in lo..hi.saturating_sub(1) {
-                if (cand_dists[w], cand_ids[w]) >= (cand_dists[w + 1], cand_ids[w + 1]) {
-                    return Err(WireError::Corrupt {
-                        what: "candidate row not strictly ascending by (distance, id)",
-                    });
+            // Row offsets were just validated monotone with last == len, so
+            // these range borrows always succeed; `.get` keeps the decoder
+            // free of panicking slices all the same.
+            let row_d = cand_dists.get(lo..hi).unwrap_or(&[]);
+            let row_i = cand_ids.get(lo..hi).unwrap_or(&[]);
+            let pairs = row_d.iter().zip(row_i.iter());
+            let nexts = row_d.iter().zip(row_i.iter()).skip(1);
+            if pairs.zip(nexts).any(|(a, b)| a >= b) {
+                return Err(WireError::Corrupt {
+                    what: "candidate row not strictly ascending by (distance, id)",
+                });
+            }
+            if let Some(cap) = caps.get(i) {
+                if row_d.iter().any(|d| d > cap) {
+                    return Err(WireError::Corrupt { what: "candidate beyond its radius cap" });
                 }
             }
-            if !caps.is_empty() && (lo..hi).any(|w| cand_dists[w] > caps[i]) {
-                return Err(WireError::Corrupt { what: "candidate beyond its radius cap" });
-            }
+            lo = hi;
         }
         Ok(KnnBundle { k, pts, gids, dpc, caps, cand_off, cand_ids, cand_dists })
     }
@@ -391,13 +397,13 @@ impl<P: PointSet> KnnBundle<P> {
 fn take_u32s(bytes: &[u8], off: &mut usize, what: &'static str) -> Result<Vec<u32>, WireError> {
     let n = try_get_u64(bytes, off, what)? as usize;
     let payload = try_take(bytes, off, n.saturating_mul(4), what)?;
-    Ok(payload.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    Ok(payload.chunks_exact(4).map(le_u32).collect())
 }
 
 fn take_f64s(bytes: &[u8], off: &mut usize, what: &'static str) -> Result<Vec<f64>, WireError> {
     let n = try_get_u64(bytes, off, what)? as usize;
     let payload = try_take(bytes, off, n.saturating_mul(8), what)?;
-    Ok(payload.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    Ok(payload.chunks_exact(8).map(le_f64).collect())
 }
 
 #[cfg(test)]

@@ -20,7 +20,7 @@
 //! truncated, oversized or internally inconsistent bytes, never panics.
 
 use super::{GraphSink, NearGraph, WeightedEdgeList};
-use crate::points::{put_u64, try_get_u64, try_take, WireError};
+use crate::points::{le_f64, le_u32, le_u64, put_u64, try_get_u64, try_take, WireError};
 
 /// Magic prefix of the binary `.knn` graph file format.
 const KNNGRAPH_MAGIC: &[u8; 8] = b"NGK-KNN1";
@@ -171,36 +171,36 @@ impl KnnGraph {
         if off != bytes.len() {
             return Err(WireError::Corrupt { what: "trailing bytes after knn payload" });
         }
-        let offsets: Vec<usize> = off_bytes
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-            .collect();
+        let offsets: Vec<usize> = off_bytes.chunks_exact(8).map(|c| le_u64(c) as usize).collect();
         let want = k.min(n.saturating_sub(1));
         if offsets.first() != Some(&0)
             || offsets.last() != Some(&nnz)
-            || offsets.windows(2).any(|p| p[1] != p[0].saturating_add(want))
+            || offsets
+                .iter()
+                .zip(offsets.iter().skip(1))
+                .any(|(a, b)| *b != a.saturating_add(want))
         {
             return Err(WireError::Corrupt { what: "knn offsets not uniform rows of min(k, n-1)" });
         }
-        let neighbors: Vec<u32> =
-            nbr_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
-        let dists: Vec<f64> =
-            dist_bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        let neighbors: Vec<u32> = nbr_bytes.chunks_exact(4).map(le_u32).collect();
+        let dists: Vec<f64> = dist_bytes.chunks_exact(8).map(le_f64).collect();
         if dists.iter().any(|d| !d.is_finite() || *d < 0.0) {
             return Err(WireError::Corrupt { what: "non-finite or negative knn distance" });
         }
-        for v in 0..n {
-            let row = &neighbors[offsets[v]..offsets[v + 1]];
-            let rd = &dists[offsets[v]..offsets[v + 1]];
-            if row.iter().any(|&j| j as usize >= n || j as usize == v) {
+        for ((&lo, &hi), v) in offsets.iter().zip(offsets.iter().skip(1)).zip(0u32..) {
+            // Offsets were just validated as uniform rows covering [0, nnz],
+            // so the `.get` borrows always succeed — kept panic-free anyway.
+            let row = neighbors.get(lo..hi).unwrap_or(&[]);
+            let rd = dists.get(lo..hi).unwrap_or(&[]);
+            if row.iter().any(|&j| j as usize >= n || j == v) {
                 return Err(WireError::Corrupt { what: "knn arc out of range or self-arc" });
             }
-            for w in 0..row.len().saturating_sub(1) {
-                if (rd[w], row[w]) >= (rd[w + 1], row[w + 1]) {
-                    return Err(WireError::Corrupt {
-                        what: "knn row not strictly ascending by (distance, id)",
-                    });
-                }
+            let pairs = rd.iter().zip(row.iter());
+            let nexts = rd.iter().zip(row.iter()).skip(1);
+            if pairs.zip(nexts).any(|(a, b)| a >= b) {
+                return Err(WireError::Corrupt {
+                    what: "knn row not strictly ascending by (distance, id)",
+                });
             }
         }
         Ok(KnnGraph { k, offsets, neighbors, dists })

@@ -93,9 +93,8 @@ impl EdgeList {
         }
         let mut edges = Vec::with_capacity(n);
         for rec in payload.chunks_exact(8) {
-            let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
-            let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
-            edges.push((u, v));
+            let (ub, vb) = rec.split_at(4);
+            edges.push((crate::points::le_u32(ub), crate::points::le_u32(vb)));
         }
         Ok(EdgeList { edges })
     }

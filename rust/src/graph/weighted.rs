@@ -36,7 +36,7 @@
 //! corrupt.
 
 use super::{Csr, EdgeList};
-use crate::points::{put_u64, try_get_u64, try_take, WireError};
+use crate::points::{le_f32, le_u32, le_u64, put_u64, try_get_u64, try_take, WireError};
 
 /// Stated tolerance for weight comparisons across construction paths
 /// (relative, via `|a − b| ≤ tol · (1 + max(a, b))`). See the module docs
@@ -99,7 +99,7 @@ impl WeightedEdgeList {
             debug_assert!(false, "non-finite edge weight {w} on ({u}, {v}) — broken metric?");
             return;
         }
-        let w = w.max(0.0) as f32;
+        let w = (if w < 0.0 { 0.0 } else { w }) as f32;
         self.edges.push(if u < v { (u, v, w) } else { (v, u, w) });
     }
 
@@ -161,9 +161,9 @@ impl WeightedEdgeList {
         }
         let mut edges = Vec::with_capacity(n);
         for rec in payload.chunks_exact(12) {
-            let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
-            let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
-            let w = f32::from_le_bytes(rec[8..12].try_into().unwrap());
+            let (ub, rest) = rec.split_at(4);
+            let (vb, wb) = rest.split_at(4);
+            let (u, v, w) = (le_u32(ub), le_u32(vb), le_f32(wb));
             if u == v || w.is_nan() || w < 0.0 {
                 return Err(WireError::Corrupt { what: "invalid weighted edge record" });
             }
@@ -378,49 +378,52 @@ impl NearGraph {
         if off != bytes.len() {
             return Err(WireError::Corrupt { what: "trailing bytes after graph payload" });
         }
-        let offsets: Vec<usize> = off_bytes
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-            .collect();
+        let offsets: Vec<usize> = off_bytes.chunks_exact(8).map(|c| le_u64(c) as usize).collect();
         if offsets.first() != Some(&0)
             || offsets.last() != Some(&nnz)
-            || offsets.windows(2).any(|p| p[0] > p[1])
+            || offsets.iter().zip(offsets.iter().skip(1)).any(|(a, b)| a > b)
         {
             return Err(WireError::Corrupt { what: "offsets not monotone over [0, nnz]" });
         }
-        let neighbors: Vec<u32> =
-            nbr_bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let neighbors: Vec<u32> = nbr_bytes.chunks_exact(4).map(le_u32).collect();
         if neighbors.iter().any(|&v| v as usize >= n) {
             return Err(WireError::Corrupt { what: "neighbor id out of range" });
         }
-        let dists: Vec<f32> =
-            dist_bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        let dists: Vec<f32> = dist_bytes.chunks_exact(4).map(le_f32).collect();
         if dists.iter().any(|d| d.is_nan() || *d < 0.0) {
             return Err(WireError::Corrupt { what: "negative or NaN distance" });
         }
         // Structural invariants (the struct docs promise these hold for
         // any decoded graph): sorted self-loop-free rows, and each edge
-        // present in both directions with the identical weight bits.
-        for v in 0..n {
-            let row = &neighbors[offsets[v]..offsets[v + 1]];
-            if row.windows(2).any(|p| p[0] >= p[1]) {
+        // present in both directions with the identical weight bits. The
+        // row borrows go through `.get` even though the offsets were just
+        // validated monotone over [0, nnz] — decoders stay panic-free by
+        // construction, not by proof.
+        for ((&lo, &hi), v) in offsets.iter().zip(offsets.iter().skip(1)).zip(0u32..) {
+            let row = neighbors.get(lo..hi).unwrap_or(&[]);
+            if row.iter().zip(row.iter().skip(1)).any(|(a, b)| a >= b) {
                 return Err(WireError::Corrupt { what: "adjacency row not strictly ascending" });
             }
-            if row.binary_search(&(v as u32)).is_ok() {
+            if row.binary_search(&v).is_ok() {
                 return Err(WireError::Corrupt { what: "self-loop in adjacency" });
             }
         }
-        for v in 0..n {
-            for k in offsets[v]..offsets[v + 1] {
-                let u = neighbors[k] as usize;
-                let urow = &neighbors[offsets[u]..offsets[u + 1]];
-                match urow.binary_search(&(v as u32)) {
-                    Ok(pos) if dists[offsets[u] + pos].to_bits() == dists[k].to_bits() => {}
-                    _ => {
-                        return Err(WireError::Corrupt {
-                            what: "asymmetric adjacency or unpaired weight",
-                        })
-                    }
+        for ((&lo, &hi), v) in offsets.iter().zip(offsets.iter().skip(1)).zip(0u32..) {
+            let row = neighbors.get(lo..hi).unwrap_or(&[]);
+            let drow = dists.get(lo..hi).unwrap_or(&[]);
+            for (&u, &d) in row.iter().zip(drow.iter()) {
+                let ulo = offsets.get(u as usize).copied().unwrap_or(0);
+                let uhi = offsets.get(u as usize + 1).copied().unwrap_or(0);
+                let urow = neighbors.get(ulo..uhi).unwrap_or(&[]);
+                let udists = dists.get(ulo..uhi).unwrap_or(&[]);
+                let paired = match urow.binary_search(&v) {
+                    Ok(pos) => udists.get(pos).map(|x| x.to_bits()) == Some(d.to_bits()),
+                    Err(_) => false,
+                };
+                if !paired {
+                    return Err(WireError::Corrupt {
+                        what: "asymmetric adjacency or unpaired weight",
+                    });
                 }
             }
         }

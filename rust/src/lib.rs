@@ -80,6 +80,7 @@ pub mod data;
 pub mod dist;
 pub mod graph;
 pub mod index;
+pub mod lint;
 pub mod metric;
 pub mod points;
 pub mod runtime;

@@ -1,0 +1,514 @@
+//! `neargraph::lint` — a zero-dependency source-level invariant checker.
+//!
+//! The crate's hot-path, ordering, and wire-safety disciplines are easy to
+//! state and easy to erode: one `.max(0.0)` on a distance reintroduces the
+//! NaN-absorbing IEEE semantics the traversal code was debugged away from,
+//! one `.unwrap()` in a decoder turns adversarial bytes into a panic, and a
+//! decoder that never gets registered in the adversarial harness is an
+//! untested attack surface. This module scans `rust/src` at the token level
+//! (comment- and string-aware — no regexes over raw text) and enforces five
+//! rules (DESIGN.md §12):
+//!
+//! * `no-alloc-hot-path` — bans `Vec::new` / `vec!` / `.collect` / `.to_vec`
+//!   / `.clone` / `String::from` / `format!` / `Box::new` inside the hot
+//!   modules (`covertree/{query,layout,scratch,knn}.rs`, `metric/*`,
+//!   `serve/engine.rs`) except in fns marked `// lint: cold`.
+//! * `total-ordering` — bans `.partial_cmp`, `f32/f64::max|min` paths, and
+//!   `.max(..)`/`.min(..)` with float-looking arguments, crate-wide.
+//! * `panic-free-decode` — bans `.unwrap`/`.expect`/panic-family macros in
+//!   any fn returning `Result<_, WireError>` and in `serve/{protocol,
+//!   server}.rs`; the `WireError` fns additionally ban assert-family macros
+//!   and `[`-indexing.
+//! * `harness-registration` — every wire decoder must be exercised by
+//!   `tests/wire_adversarial.rs` (impl-type ident and method ident).
+//! * `config-doc-parity` — every `"key" =>` match arm in `config/` must be
+//!   documented word-bounded in README.md or DESIGN.md.
+//!
+//! Violations are waived in place with
+//! `// lint: allow(<rules>) reason="..."` — trailing on the offending line,
+//! standalone above it, or standalone above a fn header (fn-wide scope).
+//! Malformed or unused directives are themselves findings (rule
+//! `lint-directive`) so waiver creep shows up in review.
+//!
+//! `python/neargraph_lint.py` is the executable mirror that runs in the
+//! toolchain-free growth container and produced the committed
+//! `LINT_REPORT.json`; this module is its line-for-line Rust port and
+//! `tests/lint_selftest.rs` holds the two equivalent over the shared
+//! fixture corpus in `tests/lint_fixtures/`.
+
+pub mod parse;
+pub mod rules;
+pub mod tokenize;
+
+use std::collections::HashSet;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use parse::{parse_file, DirKind, FileModel};
+use rules::{
+    apply_waivers, r1_hot_alloc, r2_total_ordering, r3_panic_free, r4_registration, r5_config_docs,
+};
+use tokenize::{tokenize, TokKind};
+
+/// Rule names a waiver may reference.
+pub const KNOWN_RULES: [&str; 5] = [
+    "no-alloc-hot-path",
+    "total-ordering",
+    "panic-free-decode",
+    "harness-registration",
+    "config-doc-parity",
+];
+
+/// Files where `no-alloc-hot-path` applies (paths relative to the scan
+/// root), plus prefix-matched directories.
+pub const HOT_FILES: [&str; 5] = [
+    "covertree/query.rs",
+    "covertree/layout.rs",
+    "covertree/scratch.rs",
+    "covertree/knn.rs",
+    "serve/engine.rs",
+];
+pub const HOT_PREFIXES: [&str; 1] = ["metric/"];
+
+/// Files where `panic-free-decode` applies to every fn, not just the
+/// `WireError`-returning ones.
+pub const R3_FILES: [&str; 2] = ["serve/protocol.rs", "serve/server.rs"];
+
+/// One rule violation (or directive problem), with the waiver reason when a
+/// matching `lint: allow` covered it.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    pub waived: Option<String>,
+}
+
+impl Finding {
+    pub(crate) fn new(rule: &'static str, file: &str, line: u32, message: String) -> Self {
+        Finding { rule, file: file.to_string(), line, message, waived: None }
+    }
+}
+
+/// A used waiver, inventoried into the JSON report (and checked against the
+/// committed report by `perf_driver`).
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub file: String,
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+pub fn used_waivers(files: &[FileModel]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for fm in files {
+        for d in &fm.directives {
+            if d.kind == DirKind::Allow && d.used {
+                out.push(Waiver {
+                    file: fm.path.clone(),
+                    line: d.line,
+                    rules: d.rules.clone(),
+                    reason: d.reason.clone(),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Tree scanning
+// ---------------------------------------------------------------------------
+
+/// Collect `.rs` files under `root` in the mirror's deterministic order:
+/// each directory's files sorted, then its subdirectories sorted,
+/// recursively.
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(root)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            dirs.push(path);
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            files.push(path);
+        }
+    }
+    files.sort();
+    dirs.sort();
+    out.extend(files);
+    for d in dirs {
+        collect_rs(&d, out)?;
+    }
+    Ok(())
+}
+
+fn registry_idents_from(text: &str) -> HashSet<String> {
+    let (toks, _) = tokenize(text);
+    toks.into_iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text).collect()
+}
+
+fn run_rules(
+    files: &mut [FileModel],
+    registry_idents: &HashSet<String>,
+    docs_text: &str,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for fm in files.iter() {
+        r1_hot_alloc(fm, &mut findings);
+        r2_total_ordering(fm, &mut findings);
+        r3_panic_free(fm, &mut findings);
+        r5_config_docs(fm, docs_text, &mut findings);
+    }
+    r4_registration(files, registry_idents, &mut findings);
+    for fm in files.iter_mut() {
+        apply_waivers(fm, &mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    findings
+}
+
+/// Scan every `.rs` file under `src_root` and return the parsed models plus
+/// the sorted findings (waivers already applied).
+pub fn scan_tree(
+    src_root: &Path,
+    registry_path: Option<&Path>,
+    docs_text: &str,
+) -> io::Result<(Vec<FileModel>, Vec<Finding>)> {
+    let mut paths = Vec::new();
+    collect_rs(src_root, &mut paths)?;
+    let mut files = Vec::new();
+    for path in &paths {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let text = std::fs::read_to_string(path)?;
+        files.push(parse_file(&rel, &text));
+    }
+    let registry_idents = match registry_path {
+        Some(rp) if rp.exists() => registry_idents_from(&std::fs::read_to_string(rp)?),
+        _ => HashSet::new(),
+    };
+    let findings = run_rules(&mut files, &registry_idents, docs_text);
+    Ok((files, findings))
+}
+
+// ---------------------------------------------------------------------------
+// Fixture corpus
+// ---------------------------------------------------------------------------
+
+/// First-line `// lint-fixture: virtual=<path>` header of a fixture file.
+pub fn fixture_virtual_path(text: &str) -> Option<String> {
+    for raw in text.lines() {
+        let line = raw.trim();
+        if let Some(stripped) = line.strip_prefix("//") {
+            let body = stripped.trim_start_matches('/').trim_start_matches('!').trim();
+            if let Some(rest) = body.strip_prefix("lint-fixture:") {
+                if let Some(v) = rest.trim().strip_prefix("virtual=") {
+                    return Some(v.trim().to_string());
+                }
+            }
+        } else if !line.is_empty() {
+            break;
+        }
+    }
+    None
+}
+
+/// `//~ rule-a, rule-b` trailing expectation comments in a fixture.
+pub fn fixture_expectations(fm: &FileModel) -> Vec<(String, u32, String)> {
+    let mut exp = Vec::new();
+    for cm in &fm.comments {
+        if let Some(rest) = cm.text.strip_prefix('~') {
+            for nm in rest.split(',') {
+                let nm = nm.trim();
+                if !nm.is_empty() {
+                    exp.push((fm.path.clone(), cm.line, nm.to_string()));
+                }
+            }
+        }
+    }
+    exp
+}
+
+#[derive(Debug)]
+pub struct FixtureOutcome {
+    pub expected: Vec<(String, u32, String)>,
+    pub actual: Vec<(String, u32, String)>,
+    pub ok: bool,
+}
+
+/// Run the rules over the fixture corpus: each `.rs` carries a
+/// `// lint-fixture: virtual=<path>` header naming the path it plays;
+/// `DOCS.md` is the doc corpus; the file playing
+/// `tests/wire_adversarial.rs` is the registry. The unwaived findings must
+/// equal the `//~` expectations exactly.
+pub fn scan_fixtures(fixture_root: &Path) -> io::Result<FixtureOutcome> {
+    let docs_path = fixture_root.join("DOCS.md");
+    let docs_text = if docs_path.exists() {
+        std::fs::read_to_string(&docs_path)?
+    } else {
+        String::new()
+    };
+    let mut paths = Vec::new();
+    collect_rs(fixture_root, &mut paths)?;
+    let mut files = Vec::new();
+    let mut registry_idents = HashSet::new();
+    let mut expected = Vec::new();
+    for path in &paths {
+        let text = std::fs::read_to_string(path)?;
+        let virtual_path = fixture_virtual_path(&text).unwrap_or_else(|| {
+            path.file_name().map(|f| f.to_string_lossy().into_owned()).unwrap_or_default()
+        });
+        if virtual_path == "tests/wire_adversarial.rs" {
+            registry_idents = registry_idents_from(&text);
+            continue;
+        }
+        let fm = parse_file(&virtual_path, &text);
+        expected.extend(fixture_expectations(&fm));
+        files.push(fm);
+    }
+    let findings = run_rules(&mut files, &registry_idents, &docs_text);
+    let mut actual: Vec<(String, u32, String)> = findings
+        .iter()
+        .filter(|f| f.waived.is_none())
+        .map(|f| (f.file.clone(), f.line, f.rule.to_string()))
+        .collect();
+    actual.sort();
+    expected.sort();
+    expected.dedup();
+    let ok = expected == actual;
+    Ok(FixtureOutcome { expected, actual, ok })
+}
+
+// ---------------------------------------------------------------------------
+// JSON report
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the machine-readable report (same schema as the committed
+/// `LINT_REPORT.json`, which the Python mirror generates).
+pub fn render_report(
+    src: &str,
+    files: &[FileModel],
+    findings: &[Finding],
+    fixtures: Option<&FixtureOutcome>,
+) -> String {
+    let unwaived = findings.iter().filter(|f| f.waived.is_none()).count();
+    let waivers = used_waivers(files);
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str("  \"generator\": \"rust/src/lint\",\n");
+    out.push_str(&format!("  \"src\": \"{}\",\n", json_escape(src)));
+    out.push_str(&format!("  \"files_scanned\": {},\n", files.len()));
+    out.push_str(&format!(
+        "  \"fns_scanned\": {},\n",
+        files.iter().map(|fm| fm.fns.len()).sum::<usize>()
+    ));
+    out.push_str(&format!("  \"findings_unwaived\": {unwaived},\n"));
+    out.push_str(&format!("  \"waiver_count\": {},\n", waivers.len()));
+    out.push_str("  \"waivers\": [");
+    for (i, w) in waivers.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let rules: Vec<String> =
+            w.rules.iter().map(|r| format!("\"{}\"", json_escape(r))).collect();
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rules\": [{}], \"reason\": \"{}\"}}",
+            json_escape(&w.file),
+            w.line,
+            rules.join(", "),
+            json_escape(&w.reason)
+        ));
+    }
+    out.push_str(if waivers.is_empty() { "],\n" } else { "\n  ],\n" });
+    out.push_str("  \"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let waived = match &f.waived {
+            Some(r) => format!("\"{}\"", json_escape(r)),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\", \"waived\": {}}}",
+            json_escape(f.rule),
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.message),
+            waived
+        ));
+    }
+    out.push_str(if findings.is_empty() { "]" } else { "\n  ]" });
+    if let Some(fx) = fixtures {
+        out.push_str(&format!(
+            ",\n  \"fixtures\": {{\"expected\": {}, \"actual\": {}, \"matched\": {}}}",
+            fx.expected.len(),
+            fx.actual.len(),
+            fx.ok
+        ));
+    }
+    out.push_str("\n}\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// CLI driver (shared by `neargraph lint` and `examples/lint_driver.rs`)
+// ---------------------------------------------------------------------------
+
+pub const LINT_USAGE: &str = "usage: lint [--src rust/src] [--registry <file>] \
+[--docs <file>]... [--json <out>] [--fixtures <dir>] [--deny-warnings] [--quiet]";
+
+/// Parse the mirror's CLI flags and run. Returns the process exit code:
+/// 0 clean, 1 when `--deny-warnings` and there are unwaived findings or a
+/// fixture mismatch, 2 on a bad flag.
+pub fn main_from_args(args: &[String]) -> io::Result<i32> {
+    let mut src = "rust/src".to_string();
+    let mut registry: Option<PathBuf> = None;
+    let mut docs: Vec<PathBuf> = Vec::new();
+    let mut json_out: Option<PathBuf> = None;
+    let mut fixtures: Option<PathBuf> = None;
+    let mut deny = false;
+    let mut quiet = false;
+    let mut i = 0usize;
+    while i < args.len() {
+        let a = args[i].as_str();
+        let take = |i: &mut usize| -> Option<String> {
+            *i += 1;
+            args.get(*i).cloned()
+        };
+        match a {
+            "--src" => match take(&mut i) {
+                Some(v) => src = v,
+                None => return missing_value(a),
+            },
+            "--registry" => match take(&mut i) {
+                Some(v) => registry = Some(PathBuf::from(v)),
+                None => return missing_value(a),
+            },
+            "--docs" => match take(&mut i) {
+                Some(v) => docs.push(PathBuf::from(v)),
+                None => return missing_value(a),
+            },
+            "--json" => match take(&mut i) {
+                Some(v) => json_out = Some(PathBuf::from(v)),
+                None => return missing_value(a),
+            },
+            "--fixtures" => match take(&mut i) {
+                Some(v) => fixtures = Some(PathBuf::from(v)),
+                None => return missing_value(a),
+            },
+            "--deny-warnings" => deny = true,
+            "--quiet" => quiet = true,
+            other => {
+                eprintln!("unknown arg {other}\n{LINT_USAGE}");
+                return Ok(2);
+            }
+        }
+        i += 1;
+    }
+
+    let src_abs = if Path::new(&src).is_absolute() {
+        PathBuf::from(&src)
+    } else {
+        std::env::current_dir()?.join(&src)
+    };
+    let crate_root = src_abs.parent().map(Path::to_path_buf).unwrap_or_else(|| src_abs.clone());
+    let repo_root =
+        crate_root.parent().map(Path::to_path_buf).unwrap_or_else(|| crate_root.clone());
+    let registry =
+        registry.unwrap_or_else(|| crate_root.join("tests").join("wire_adversarial.rs"));
+    if docs.is_empty() {
+        docs.push(repo_root.join("README.md"));
+        docs.push(repo_root.join("DESIGN.md"));
+    }
+    let mut docs_text = String::new();
+    for d in &docs {
+        if d.exists() {
+            docs_text.push_str(&std::fs::read_to_string(d)?);
+            docs_text.push('\n');
+        }
+    }
+
+    let (files, findings) = scan_tree(&src_abs, Some(&registry), &docs_text)?;
+    let unwaived = findings.iter().filter(|f| f.waived.is_none()).count();
+    let waived = findings.len() - unwaived;
+
+    let fixture_outcome = match &fixtures {
+        Some(root) => {
+            let fx = scan_fixtures(root)?;
+            if !fx.ok {
+                for e in fx.expected.iter().filter(|e| !fx.actual.contains(e)) {
+                    eprintln!("fixture MISSING {}:{} {}", e.0, e.1, e.2);
+                }
+                for s in fx.actual.iter().filter(|a| !fx.expected.contains(a)) {
+                    eprintln!("fixture SURPLUS {}:{} {}", s.0, s.1, s.2);
+                }
+            }
+            Some(fx)
+        }
+        None => None,
+    };
+
+    if !quiet {
+        for f in &findings {
+            let tag = match &f.waived {
+                Some(r) => format!("waived({r})"),
+                None => "DENY".to_string(),
+            };
+            println!("{}:{} [{}] {} {}", f.file, f.line, f.rule, f.message, tag);
+        }
+        println!(
+            "lint: {} file(s), {} fn(s), {} finding(s) ({} waived, {} unwaived)",
+            files.len(),
+            files.iter().map(|fm| fm.fns.len()).sum::<usize>(),
+            findings.len(),
+            waived,
+            unwaived
+        );
+        if let Some(fx) = &fixture_outcome {
+            println!("fixtures: {}", if fx.ok { "ok" } else { "MISMATCH" });
+        }
+    }
+
+    if let Some(out_path) = &json_out {
+        let report = render_report(&src, &files, &findings, fixture_outcome.as_ref());
+        std::fs::write(out_path, report)?;
+    }
+
+    let bad = unwaived > 0 || fixture_outcome.as_ref().map(|fx| !fx.ok).unwrap_or(false);
+    if deny && bad {
+        return Ok(1);
+    }
+    Ok(0)
+}
+
+fn missing_value(flag: &str) -> io::Result<i32> {
+    eprintln!("{flag} expects a value\n{LINT_USAGE}");
+    Ok(2)
+}

@@ -1,0 +1,516 @@
+//! Source model for `neargraph::lint`: directives, functions with their
+//! impl/trait context, and `#[cfg(test)]` line regions.
+//!
+//! Like the tokenizer, this is a port of the corresponding section of
+//! `python/neargraph_lint.py` and must stay semantically identical to it.
+
+use std::collections::HashSet;
+
+use super::tokenize::{tokenize, Comment, Tok, TokKind};
+use super::KNOWN_RULES;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DirKind {
+    Cold,
+    Allow,
+    Bad,
+}
+
+/// A parsed `// lint: ...` directive. Malformed ones keep `kind: Bad` and
+/// carry the diagnostic in `error`; the waiver pass turns those (and any
+/// directive that never matched a finding) into `lint-directive` findings
+/// so waiver creep stays visible in review.
+#[derive(Clone, Debug)]
+pub struct Directive {
+    pub kind: DirKind,
+    pub rules: Vec<String>,
+    pub reason: String,
+    pub line: u32,
+    pub standalone: bool,
+    pub next_tok: isize,
+    pub used: bool,
+    pub error: String,
+}
+
+pub fn parse_directives(comments: &[Comment]) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for cm in comments {
+        let t = cm.text.as_str();
+        if !t.starts_with("lint:") {
+            continue;
+        }
+        let body = t[5..].trim();
+        let mut d = Directive {
+            kind: DirKind::Bad,
+            rules: Vec::new(),
+            reason: String::new(),
+            line: cm.line,
+            standalone: cm.standalone,
+            next_tok: cm.next_tok,
+            used: false,
+            error: String::new(),
+        };
+        if body == "cold" {
+            d.kind = DirKind::Cold;
+        } else if let Some(after) = body.strip_prefix("allow") {
+            let rest = after.trim_start();
+            if !rest.starts_with('(') {
+                d.error = "expected '(' after allow".to_string();
+            } else {
+                match rest.find(')') {
+                    None => d.error = "unclosed allow(...)".to_string(),
+                    Some(close) => {
+                        let names: Vec<String> = rest[1..close]
+                            .split(',')
+                            .map(str::trim)
+                            .filter(|nm| !nm.is_empty())
+                            .map(str::to_string)
+                            .collect();
+                        let bad = names.iter().find(|nm| !KNOWN_RULES.contains(&nm.as_str()));
+                        let tail = rest[close + 1..].trim();
+                        if names.is_empty() {
+                            d.error = "allow() lists no rules".to_string();
+                        } else if let Some(b) = bad {
+                            d.error = format!("unknown rule '{b}'");
+                        } else if !tail.starts_with("reason=\"") {
+                            d.error = "waiver missing reason=\"...\"".to_string();
+                        } else {
+                            let endq = tail[8..].find('"').map(|p| p + 8);
+                            let reason = match endq {
+                                Some(e) if e > 8 => tail[8..e].to_string(),
+                                _ => String::new(),
+                            };
+                            if reason.trim().is_empty() {
+                                d.error = "waiver reason is empty".to_string();
+                            } else {
+                                d.kind = DirKind::Allow;
+                                d.rules = names;
+                                d.reason = reason;
+                            }
+                        }
+                    }
+                }
+            }
+        } else {
+            let first = body.split(' ').next().unwrap_or("");
+            d.error = format!("unknown lint directive '{first}'");
+        }
+        out.push(d);
+    }
+    out
+}
+
+/// A function item: name, impl/trait context, parameter and return-type
+/// tokens, and the token range of its body (`body_start == -1` for
+/// declaration-only trait methods).
+#[derive(Clone, Debug, Default)]
+pub struct FnModel {
+    pub name: String,
+    pub impl_type: Option<String>,
+    pub in_trait: bool,
+    pub is_test: bool,
+    pub is_cold: bool,
+    pub params: Vec<Tok>,
+    pub ret: Vec<String>,
+    pub item_start: usize,
+    pub fn_kw: usize,
+    pub body_start: isize,
+    pub body_end: usize,
+    pub sig_line: u32,
+    pub body_end_line: u32,
+}
+
+impl FnModel {
+    /// A fn the body rules scan: non-test, with a body.
+    pub fn is_scanned(&self) -> bool {
+        !self.is_test && self.body_start >= 0
+    }
+
+    /// Upper token bound for "a standalone directive anchored inside this
+    /// fn's header": the body brace when there is one, a short window past
+    /// the `fn` keyword for declaration-only methods.
+    pub fn header_end(&self) -> isize {
+        if self.body_start >= 0 {
+            self.body_start
+        } else {
+            self.fn_kw as isize + 4
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct FileModel {
+    /// Path relative to the scan root, '/'-separated (the rules key on it).
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub directives: Vec<Directive>,
+    pub fns: Vec<FnModel>,
+    /// Lines inside `#[cfg(test)] mod` bodies.
+    pub test_lines: HashSet<u32>,
+}
+
+/// `i` points at '{'; returns the index of the matching '}' (or the last
+/// token on unbalanced input).
+fn match_brace(toks: &[Tok], mut i: usize) -> usize {
+    let mut depth = 0i32;
+    let n = toks.len();
+    while i < n {
+        let t = toks[i].text.as_str();
+        if t == "{" {
+            depth += 1;
+        } else if t == "}" {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    n.saturating_sub(1)
+}
+
+/// `i` points at '<'; returns the index just past the matching '>'.
+fn skip_angles(toks: &[Tok], mut i: usize) -> usize {
+    let mut depth = 0i32;
+    let n = toks.len();
+    while i < n {
+        let t = toks[i].text.as_str();
+        if t == "<" {
+            depth += 1;
+        } else if t == ">" {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        } else if t == "{" || t == ";" {
+            return i; // malformed; bail
+        }
+        i += 1;
+    }
+    n
+}
+
+/// `i` points at '#'; returns (end index exclusive, identifiers inside the
+/// attribute brackets).
+fn attr_info(toks: &[Tok], i: usize) -> (usize, Vec<String>) {
+    let n = toks.len();
+    let mut j = i + 1;
+    if j < n && toks[j].text == "!" {
+        j += 1;
+    }
+    if j >= n || toks[j].text != "[" {
+        return (i + 1, Vec::new());
+    }
+    let mut depth = 0i32;
+    let mut idents = Vec::new();
+    while j < n {
+        let t = &toks[j];
+        if t.text == "[" {
+            depth += 1;
+        } else if t.text == "]" {
+            depth -= 1;
+            if depth == 0 {
+                return (j + 1, idents);
+            }
+        } else if t.kind == TokKind::Ident {
+            idents.push(t.text.clone());
+        }
+        j += 1;
+    }
+    (n, idents)
+}
+
+/// Walk back from the `fn` keyword over visibility/qualifiers/attributes to
+/// the first token of the item.
+fn item_start(toks: &[Tok], fn_kw: usize) -> usize {
+    let mut j = fn_kw as isize - 1;
+    while j >= 0 {
+        let ju = j as usize;
+        let t = toks[ju].text.as_str();
+        if matches!(t, "pub" | "unsafe" | "const" | "async" | "default" | "extern") {
+            j -= 1;
+        } else if toks[ju].kind == TokKind::Str && ju >= 1 && toks[ju - 1].text == "extern" {
+            j -= 1;
+        } else if t == ")" {
+            // pub(crate) / pub(in path)
+            let mut depth = 0i32;
+            let mut k = j;
+            while k >= 0 {
+                let kt = toks[k as usize].text.as_str();
+                if kt == ")" {
+                    depth += 1;
+                } else if kt == "(" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+            j = k - 1;
+        } else if t == "]" {
+            // attribute group
+            let mut depth = 0i32;
+            let mut k = j;
+            while k >= 0 {
+                let kt = toks[k as usize].text.as_str();
+                if kt == "]" {
+                    depth += 1;
+                } else if kt == "[" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+            if k >= 1 && toks[k as usize - 1].text == "#" {
+                j = k - 2;
+            } else {
+                break;
+            }
+        } else {
+            break;
+        }
+    }
+    (j + 1) as usize
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    Impl,
+    Trait,
+    Mod,
+    ModTest,
+    FnBody,
+}
+
+pub fn parse_file(path: &str, text: &str) -> FileModel {
+    let mut fm = FileModel { path: path.to_string(), ..FileModel::default() };
+    let (toks, comments) = tokenize(text);
+    fm.directives = parse_directives(&comments);
+    fm.comments = comments;
+    let n = toks.len();
+
+    // context stack: (kind, name, depth at open); depth counts '{'
+    let mut stack: Vec<(Scope, String, i32)> = Vec::new();
+    let mut depth = 0i32;
+    let mut pending_attrs: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        let txt = t.text.as_str();
+        if txt == "#" {
+            let (end, idents) = attr_info(&toks, i);
+            pending_attrs.extend(idents);
+            i = end;
+            continue;
+        }
+        if txt == "{" {
+            depth += 1;
+            pending_attrs.clear();
+            i += 1;
+            continue;
+        }
+        if txt == "}" {
+            depth -= 1;
+            while stack.last().map(|s| s.2 > depth).unwrap_or(false) {
+                stack.pop();
+            }
+            i += 1;
+            continue;
+        }
+        if txt == "impl" && t.kind == TokKind::Ident {
+            let mut j = i + 1;
+            if j < n && toks[j].text == "<" {
+                j = skip_angles(&toks, j);
+            }
+            // collect header tokens until '{' or ';' at angle depth 0
+            let mut run: Vec<usize> = Vec::new();
+            let mut angle = 0i32;
+            while j < n {
+                let tt = toks[j].text.as_str();
+                if tt == "<" {
+                    angle += 1;
+                } else if tt == ">" {
+                    angle -= 1;
+                } else if angle == 0 && (tt == "{" || tt == ";" || tt == "where") {
+                    break;
+                }
+                run.push(j);
+                j += 1;
+            }
+            // skip a where clause
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                // type name: after the last top-level 'for' if present
+                let mut segs: &[usize] = &run;
+                for k in (0..run.len()).rev() {
+                    if toks[run[k]].text == "for" {
+                        segs = &run[k + 1..];
+                        break;
+                    }
+                }
+                let mut name: Option<String> = None;
+                for &ki in segs {
+                    let tk = &toks[ki];
+                    if tk.text == "<" {
+                        break;
+                    }
+                    if tk.kind == TokKind::Ident && tk.text != "dyn" && tk.text != "mut" {
+                        name = Some(tk.text.clone());
+                    }
+                }
+                stack.push((Scope::Impl, name.unwrap_or_else(|| "?".to_string()), depth + 1));
+                depth += 1;
+            }
+            i = j + 1;
+            pending_attrs.clear();
+            continue;
+        }
+        if txt == "trait" && t.kind == TokKind::Ident {
+            let mut j = i + 1;
+            let name = if j < n && toks[j].kind == TokKind::Ident {
+                toks[j].text.clone()
+            } else {
+                "?".to_string()
+            };
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                stack.push((Scope::Trait, name, depth + 1));
+                depth += 1;
+            }
+            i = j + 1;
+            pending_attrs.clear();
+            continue;
+        }
+        if txt == "mod" && t.kind == TokKind::Ident {
+            let mut j = i + 1;
+            let is_test_mod = pending_attrs.iter().any(|a| a == "cfg")
+                && pending_attrs.iter().any(|a| a == "test");
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                let in_test = is_test_mod || stack.iter().any(|s| s.0 == Scope::ModTest);
+                let kind = if in_test { Scope::ModTest } else { Scope::Mod };
+                if kind == Scope::ModTest {
+                    let close = match_brace(&toks, j);
+                    for ln in toks[j].line..=toks[close].line {
+                        fm.test_lines.insert(ln);
+                    }
+                }
+                stack.push((kind, String::new(), depth + 1));
+                depth += 1;
+            }
+            i = j + 1;
+            pending_attrs.clear();
+            continue;
+        }
+        if txt == "fn" && t.kind == TokKind::Ident {
+            let mut f = FnModel { fn_kw: i, body_start: -1, ..FnModel::default() };
+            f.item_start = item_start(&toks, i);
+            f.sig_line = toks[f.item_start].line;
+            let has_test = pending_attrs.iter().any(|a| a == "test");
+            let has_cfg = pending_attrs.iter().any(|a| a == "cfg");
+            f.is_test = (has_test && !has_cfg) || stack.iter().any(|s| s.0 == Scope::ModTest);
+            if has_cfg && has_test {
+                f.is_test = true;
+            }
+            for sc in stack.iter().rev() {
+                if sc.0 == Scope::Impl {
+                    f.impl_type = Some(sc.1.clone());
+                    break;
+                }
+                if sc.0 == Scope::Trait {
+                    f.in_trait = true;
+                    break;
+                }
+            }
+            let mut j = i + 1;
+            if j < n && toks[j].kind == TokKind::Ident {
+                f.name = toks[j].text.clone();
+                j += 1;
+            }
+            if j < n && toks[j].text == "<" {
+                j = skip_angles(&toks, j);
+            }
+            if j < n && toks[j].text == "(" {
+                let mut pd = 0i32;
+                let j0 = j;
+                while j < n {
+                    if toks[j].text == "(" {
+                        pd += 1;
+                    } else if toks[j].text == ")" {
+                        pd -= 1;
+                        if pd == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                f.params = toks[j0 + 1..j.min(n)].to_vec();
+                j += 1;
+            }
+            if j < n && toks[j].text == "->" {
+                j += 1;
+                let mut angle = 0i32;
+                while j < n {
+                    let tt = toks[j].text.as_str();
+                    if tt == "<" {
+                        angle += 1;
+                    } else if tt == ">" {
+                        angle -= 1;
+                    } else if angle <= 0 && (tt == "{" || tt == ";" || tt == "where") {
+                        break;
+                    }
+                    f.ret.push(tt.to_string());
+                    j += 1;
+                }
+            }
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                f.body_start = j as isize;
+                f.body_end = match_brace(&toks, j);
+                f.body_end_line = toks[f.body_end].line;
+                let fname = f.name.clone();
+                fm.fns.push(f);
+                // walk *into* the body (nested fns are parsed too)
+                depth += 1;
+                stack.push((Scope::FnBody, fname, depth));
+                i = j + 1;
+            } else {
+                f.body_end_line = toks[j.min(n - 1)].line;
+                fm.fns.push(f);
+                i = j + 1;
+            }
+            pending_attrs.clear();
+            continue;
+        }
+        pending_attrs.clear();
+        i += 1;
+    }
+    fm.toks = toks;
+
+    // attach cold markers
+    for d in fm.directives.iter_mut() {
+        if d.kind != DirKind::Cold {
+            continue;
+        }
+        for f in fm.fns.iter_mut() {
+            if f.item_start as isize <= d.next_tok && d.next_tok <= f.header_end() {
+                f.is_cold = true;
+                d.used = true;
+                break;
+            }
+        }
+    }
+    fm
+}

@@ -1,0 +1,411 @@
+//! The five invariant rules plus waiver application — the semantic core of
+//! `neargraph::lint` (DESIGN.md §12), ported from the Python mirror.
+
+use std::collections::HashSet;
+
+use super::parse::{DirKind, FileModel, FnModel};
+use super::tokenize::{Tok, TokKind};
+use super::{Finding, HOT_FILES, HOT_PREFIXES, KNOWN_RULES, R3_FILES};
+
+const ALLOC_CALLS: [&str; 3] = ["collect", "to_vec", "clone"];
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+const ASSERT_MACROS: [&str; 3] = ["assert", "assert_eq", "assert_ne"];
+
+fn tok_text(toks: &[Tok], i: usize) -> &str {
+    toks.get(i).map(|t| t.text.as_str()).unwrap_or("")
+}
+
+// ---- R1: no-alloc-hot-path ------------------------------------------------
+
+pub fn r1_hot_alloc(fm: &FileModel, findings: &mut Vec<Finding>) {
+    let rel = fm.path.as_str();
+    if !HOT_FILES.contains(&rel) && !HOT_PREFIXES.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    let toks = &fm.toks;
+    for f in &fm.fns {
+        if !f.is_scanned() || f.is_cold {
+            continue;
+        }
+        let mut i = f.body_start as usize;
+        while i <= f.body_end {
+            let t = &toks[i];
+            let nxt = tok_text(toks, i + 1);
+            let nx2 = tok_text(toks, i + 2);
+            let mut hit: Option<String> = None;
+            if t.kind == TokKind::Ident && t.text == "Vec" && nxt == "::" && nx2 == "new" {
+                hit = Some("Vec::new".to_string());
+            } else if t.kind == TokKind::Ident && t.text == "vec" && nxt == "!" {
+                hit = Some("vec!".to_string());
+            } else if t.kind == TokKind::Ident && t.text == "String" && nxt == "::" && nx2 == "from"
+            {
+                hit = Some("String::from".to_string());
+            } else if t.kind == TokKind::Ident && t.text == "format" && nxt == "!" {
+                hit = Some("format!".to_string());
+            } else if t.kind == TokKind::Ident && t.text == "Box" && nxt == "::" && nx2 == "new" {
+                hit = Some("Box::new".to_string());
+            } else if t.text == "." {
+                if let Some(nt) = toks.get(i + 1) {
+                    if nt.kind == TokKind::Ident && ALLOC_CALLS.contains(&nt.text.as_str()) {
+                        hit = Some(format!(".{}", nt.text));
+                    }
+                }
+            }
+            if let Some(h) = hit {
+                findings.push(Finding::new(
+                    "no-alloc-hot-path",
+                    rel,
+                    t.line,
+                    format!("{h} in hot fn `{}` (mark `// lint: cold` or waive)", f.name),
+                ));
+            }
+            i += 1;
+        }
+    }
+}
+
+// ---- R2: total-ordering ---------------------------------------------------
+
+/// `open_paren` indexes '('; true when the argument tokens contain a float
+/// literal or an .abs()/.sqrt() call — the distance-typed heuristic.
+fn call_args_float(toks: &[Tok], open_paren: usize) -> bool {
+    let mut depth = 0i32;
+    let mut i = open_paren;
+    let n = toks.len();
+    while i < n {
+        let t = &toks[i];
+        if t.text == "(" {
+            depth += 1;
+        } else if t.text == ")" {
+            depth -= 1;
+            if depth == 0 {
+                return false;
+            }
+        } else if t.kind == TokKind::FNum {
+            return true;
+        } else if t.text == "." && matches!(tok_text(toks, i + 1), "abs" | "sqrt") {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+pub fn r2_total_ordering(fm: &FileModel, findings: &mut Vec<Finding>) {
+    let toks = &fm.toks;
+    for f in &fm.fns {
+        if !f.is_scanned() {
+            continue;
+        }
+        let mut i = f.body_start as usize;
+        while i <= f.body_end {
+            let t = &toks[i];
+            let nxt = tok_text(toks, i + 1);
+            let nx2 = tok_text(toks, i + 2);
+            let nxt_is_ident = toks.get(i + 1).map(|n| n.kind == TokKind::Ident).unwrap_or(false);
+            if t.text == "." && nxt_is_ident {
+                if nxt == "partial_cmp" {
+                    findings.push(Finding::new(
+                        "total-ordering",
+                        &fm.path,
+                        t.line,
+                        ".partial_cmp on distances — use total_cmp".to_string(),
+                    ));
+                } else if (nxt == "max" || nxt == "min")
+                    && nx2 == "("
+                    && call_args_float(toks, i + 2)
+                {
+                    findings.push(Finding::new(
+                        "total-ordering",
+                        &fm.path,
+                        t.line,
+                        format!(".{nxt}(..) with float argument — use total_cmp selection"),
+                    ));
+                }
+            } else if t.kind == TokKind::Ident
+                && (t.text == "f32" || t.text == "f64")
+                && nxt == "::"
+                && (nx2 == "max" || nx2 == "min")
+            {
+                findings.push(Finding::new(
+                    "total-ordering",
+                    &fm.path,
+                    t.line,
+                    format!("{}::{nx2} as fn value — use total_cmp selection", t.text),
+                ));
+            }
+            i += 1;
+        }
+    }
+}
+
+// ---- R3: panic-free-decode ------------------------------------------------
+
+fn ret_is_wire_result(f: &FnModel) -> bool {
+    f.ret.iter().any(|t| t == "Result") && f.ret.iter().any(|t| t == "WireError")
+}
+
+pub fn r3_panic_free(fm: &FileModel, findings: &mut Vec<Finding>) {
+    let toks = &fm.toks;
+    let file_scope = R3_FILES.contains(&fm.path.as_str());
+    for f in &fm.fns {
+        if !f.is_scanned() {
+            continue;
+        }
+        let wire = ret_is_wire_result(f);
+        if !(wire || file_scope) {
+            continue;
+        }
+        let ctx = if wire { "WireError decoder" } else { "serve runtime" };
+        let mut i = f.body_start as usize;
+        while i <= f.body_end {
+            let t = &toks[i];
+            let nxt = tok_text(toks, i + 1);
+            let nxt_is_ident = toks.get(i + 1).map(|n| n.kind == TokKind::Ident).unwrap_or(false);
+            if t.text == "." && nxt_is_ident && (nxt == "unwrap" || nxt == "expect") {
+                findings.push(Finding::new(
+                    "panic-free-decode",
+                    &fm.path,
+                    t.line,
+                    format!(".{nxt} in {ctx} — return a typed error"),
+                ));
+            } else if t.kind == TokKind::Ident
+                && nxt == "!"
+                && (PANIC_MACROS.contains(&t.text.as_str())
+                    || (wire && ASSERT_MACROS.contains(&t.text.as_str())))
+            {
+                findings.push(Finding::new(
+                    "panic-free-decode",
+                    &fm.path,
+                    t.line,
+                    format!("{}! in {ctx} — return a typed error", t.text),
+                ));
+            } else if wire && t.text == "[" && i > f.body_start as usize {
+                let prev = &toks[i - 1];
+                if prev.kind == TokKind::Ident || prev.text == ")" || prev.text == "]" {
+                    findings.push(Finding::new(
+                        "panic-free-decode",
+                        &fm.path,
+                        t.line,
+                        "indexing in WireError decoder — use .get()/try_take".to_string(),
+                    ));
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+// ---- R4: harness-registration ---------------------------------------------
+
+const DECODER_EXACT: [&str; 3] = ["try_from_bytes", "from_bytes", "try_from_snapshot_bytes"];
+
+fn is_decoder(f: &FnModel) -> bool {
+    if f.in_trait || f.is_test {
+        return false;
+    }
+    let nm = f.name.as_str();
+    let named = DECODER_EXACT.contains(&nm)
+        || nm.ends_with("_from_bytes")
+        || (nm.starts_with("decode_") && ret_is_wire_result(f));
+    if !named {
+        return false;
+    }
+    // exactly one parameter, and it mentions u8 (i.e. &[u8]), not self
+    let mut depth = 0i32;
+    let mut commas = 0usize;
+    let mut has_any = false;
+    for t in &f.params {
+        has_any = true;
+        match t.text.as_str() {
+            "(" | "[" | "<" => depth += 1,
+            ")" | "]" | ">" => depth -= 1,
+            "," if depth == 0 => commas += 1,
+            _ => {}
+        }
+    }
+    if !has_any || commas != 0 {
+        return false;
+    }
+    if !f.params.iter().any(|t| t.text == "u8") {
+        return false;
+    }
+    if f.params.iter().any(|t| t.text == "self") {
+        return false;
+    }
+    true
+}
+
+pub fn r4_registration(
+    files: &[FileModel],
+    registry_idents: &HashSet<String>,
+    findings: &mut Vec<Finding>,
+) {
+    for fm in files {
+        for f in &fm.fns {
+            if f.body_start < 0 || !is_decoder(f) {
+                continue;
+            }
+            let name_ok = registry_idents.contains(&f.name);
+            let type_ok =
+                f.impl_type.as_ref().map(|t| registry_idents.contains(t)).unwrap_or(true);
+            if !(name_ok && type_ok) {
+                let who = match &f.impl_type {
+                    Some(t) => format!("{t}::{}", f.name),
+                    None => f.name.clone(),
+                };
+                findings.push(Finding::new(
+                    "harness-registration",
+                    &fm.path,
+                    f.sig_line,
+                    format!("decoder `{who}` is not exercised by tests/wire_adversarial.rs"),
+                ));
+            }
+        }
+    }
+}
+
+// ---- R5: config-doc-parity ------------------------------------------------
+
+fn is_config_key(s: &str) -> bool {
+    if s.is_empty() {
+        return false;
+    }
+    for part in s.split('.') {
+        let mut chars = part.chars();
+        match chars.next() {
+            Some(c) if c.is_ascii_lowercase() => {}
+            _ => return false,
+        }
+        if !part.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_') {
+            return false;
+        }
+    }
+    true
+}
+
+fn boundary_char(c: char) -> bool {
+    // Not ident-continuation and not '.': a dotted-key boundary.
+    !(c == '_' || c == '.' || c.is_ascii_alphanumeric())
+}
+
+fn word_bounded(doc: &str, key: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(off) = doc[start..].find(key) {
+        let idx = start + off;
+        let before = doc[..idx].chars().next_back().unwrap_or(' ');
+        let after = doc[idx + key.len()..].chars().next().unwrap_or(' ');
+        if boundary_char(before) && boundary_char(after) {
+            return true;
+        }
+        start = idx + 1;
+    }
+    false
+}
+
+pub fn r5_config_docs(fm: &FileModel, docs_text: &str, findings: &mut Vec<Finding>) {
+    if !fm.path.starts_with("config/") {
+        return;
+    }
+    let toks = &fm.toks;
+    for f in &fm.fns {
+        if !f.is_scanned() {
+            continue;
+        }
+        let mut i = f.body_start as usize;
+        while i <= f.body_end {
+            let t = &toks[i];
+            if t.kind == TokKind::Str && i + 1 <= f.body_end && toks[i + 1].text == "=>" {
+                let lit = t.text.as_str();
+                if lit.len() >= 2 && lit.starts_with('"') && lit.ends_with('"') {
+                    let key = &lit[1..lit.len() - 1];
+                    if is_config_key(key) && !word_bounded(docs_text, key) {
+                        findings.push(Finding::new(
+                            "config-doc-parity",
+                            &fm.path,
+                            t.line,
+                            format!("config key \"{key}\" is not documented in README.md/DESIGN.md"),
+                        ));
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+// ---- Waiver application ---------------------------------------------------
+
+/// Mark findings in `fm` waived per its directives; emit `lint-directive`
+/// findings for malformed or unused directives.
+pub fn apply_waivers(fm: &mut FileModel, findings: &mut Vec<Finding>) {
+    let mine: Vec<usize> = findings
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.file == fm.path && KNOWN_RULES.contains(&f.rule))
+        .map(|(i, _)| i)
+        .collect();
+    let mut extra: Vec<Finding> = Vec::new();
+    for d in fm.directives.iter_mut() {
+        if d.kind == DirKind::Bad {
+            extra.push(Finding::new("lint-directive", &fm.path, d.line, d.error.clone()));
+            continue;
+        }
+        if d.kind == DirKind::Cold {
+            if !d.used {
+                extra.push(Finding::new(
+                    "lint-directive",
+                    &fm.path,
+                    d.line,
+                    "`lint: cold` marker does not precede a fn".to_string(),
+                ));
+            }
+            continue;
+        }
+        // allow(...)
+        let mut scope_fn: Option<&FnModel> = None;
+        if d.standalone {
+            for f in &fm.fns {
+                if f.item_start as isize <= d.next_tok && d.next_tok <= f.header_end() {
+                    scope_fn = Some(f);
+                    break;
+                }
+            }
+        }
+        let lines: (i64, i64) = if let Some(f) = scope_fn {
+            (f.sig_line as i64, f.body_end_line as i64)
+        } else if d.standalone {
+            let nxt_line = if d.next_tok >= 0 && (d.next_tok as usize) < fm.toks.len() {
+                fm.toks[d.next_tok as usize].line as i64
+            } else {
+                -1
+            };
+            (nxt_line, nxt_line)
+        } else {
+            (d.line as i64, d.line as i64)
+        };
+        let mut hit = false;
+        for &idx in &mine {
+            let f = &mut findings[idx];
+            if f.waived.is_none()
+                && d.rules.iter().any(|r| r == f.rule)
+                && lines.0 <= f.line as i64
+                && (f.line as i64) <= lines.1
+            {
+                f.waived = Some(d.reason.clone());
+                hit = true;
+            }
+        }
+        if hit {
+            d.used = true;
+        } else {
+            extra.push(Finding::new(
+                "lint-directive",
+                &fm.path,
+                d.line,
+                format!("unused waiver for {} — remove it", d.rules.join(",")),
+            ));
+        }
+    }
+    findings.extend(extra);
+}

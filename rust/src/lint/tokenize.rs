@@ -1,0 +1,339 @@
+//! Comment- and string-aware tokenizer for `neargraph::lint`.
+//!
+//! A deliberately small lexer: it understands exactly as much Rust as the
+//! rules need — line and nested block comments, plain/raw/byte strings,
+//! char literals vs lifetimes, numbers with float classification, and
+//! identifiers — and emits everything else as single-char punctuation
+//! (merging only `::`, `->` and `=>`, which the rules match on).
+//!
+//! This file is a line-for-line port of the tokenizer in
+//! `python/neargraph_lint.py`, the executable mirror that runs in the
+//! toolchain-free growth container. Any behavioral divergence between the
+//! two is a bug; `tests/lint_selftest.rs` re-checks the shared fixture
+//! corpus under cargo to hold that equivalence.
+
+/// Token classification. `FNum` (a float-looking literal) is split from
+/// `Num` because the `total-ordering` rule keys on it to decide whether a
+/// `.max(..)` call is distance-typed.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Num,
+    FNum,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A comment, with its raw text (markers stripped), whether it stood alone
+/// on its line (no code token earlier on the same line), and the index of
+/// the next significant token after it (-1 when none follows).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+    pub standalone: bool,
+    pub next_tok: isize,
+}
+
+pub(crate) fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_ascii_alphabetic()
+}
+
+pub(crate) fn is_ident_cont(c: char) -> bool {
+    c == '_' || c.is_ascii_alphanumeric()
+}
+
+fn push(toks: &mut Vec<Tok>, kind: TokKind, text: String, ln: u32) {
+    // Merge '::' '->' '=>' from single punct chars.
+    if kind == TokKind::Punct {
+        if let Some(prev) = toks.last_mut() {
+            if prev.kind == TokKind::Punct && prev.line == ln {
+                let pair = format!("{}{}", prev.text, text);
+                if pair == "::" || pair == "->" || pair == "=>" {
+                    prev.text = pair;
+                    return;
+                }
+            }
+        }
+    }
+    toks.push(Tok { kind, text, line: ln });
+}
+
+fn settle(pending: &mut Vec<usize>, comments: &mut [Comment], toks: &[Tok]) {
+    for idx in pending.drain(..) {
+        comments[idx].next_tok = toks.len() as isize - 1;
+    }
+}
+
+fn slice(s: &[char], a: usize, b: usize) -> String {
+    let hi = b.min(s.len());
+    if a >= hi {
+        return String::new();
+    }
+    s[a..hi].iter().collect()
+}
+
+/// Tokenize `src`, returning the significant tokens and the comments.
+pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut pending: Vec<usize> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut last_tok_line: u32 = 0;
+
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Comments ----------------------------------------------------------
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i + 2;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            // strip '//', then one optional doc marker '/' or '!'
+            let mut t_start = i + 2;
+            if t_start < j && (s[t_start] == '/' || s[t_start] == '!') {
+                t_start += 1;
+            }
+            let text = slice(&s, t_start, j).trim().to_string();
+            comments.push(Comment { line, text, standalone: last_tok_line != line, next_tok: -1 });
+            pending.push(comments.len() - 1);
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1i32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let body_end = j.saturating_sub(2).max(i + 2);
+            let text = slice(&s, i + 2, body_end).trim().to_string();
+            comments.push(Comment {
+                line: start_line,
+                text,
+                standalone: last_tok_line != start_line,
+                next_tok: -1,
+            });
+            pending.push(comments.len() - 1);
+            i = j;
+            continue;
+        }
+        // Raw / byte strings ------------------------------------------------
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            let mut has_r = c == 'r';
+            if c == 'b' && j + 1 < n && s[j + 1] == 'r' {
+                has_r = true;
+                j += 1;
+            }
+            if c == 'r' && j + 1 < n && s[j + 1] == 'b' {
+                j += 1;
+            }
+            let mut k = j + 1;
+            let mut hashes = 0usize;
+            while k < n && s[k] == '#' {
+                hashes += 1;
+                k += 1;
+            }
+            if has_r && k < n && s[k] == '"' {
+                // raw string: ends at '"' followed by `hashes` '#'s
+                let close_len = 1 + hashes;
+                let mut end = n;
+                let mut p = k + 1;
+                while p + close_len <= n {
+                    if s[p] == '"' && s[p + 1..p + close_len].iter().all(|&h| h == '#') {
+                        end = p;
+                        break;
+                    }
+                    p += 1;
+                }
+                let text = slice(&s, i, end + close_len);
+                let ln = line;
+                line += text.matches('\n').count() as u32;
+                push(&mut toks, TokKind::Str, text, ln);
+                settle(&mut pending, &mut comments, &toks);
+                last_tok_line = ln;
+                i = end + close_len;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && s[i + 1] == '"' {
+                // byte string: token starts at the quote, like the mirror
+                i += 1;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && s[i + 1] == '\'' {
+                // byte char literal b'x'
+                let mut j = i + 2;
+                if j < n && s[j] == '\\' {
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                push(&mut toks, TokKind::Char, slice(&s, i, j + 1), line);
+                settle(&mut pending, &mut comments, &toks);
+                last_tok_line = line;
+                i = j + 1;
+                continue;
+            }
+            // otherwise fall through: 'r'/'b' starts a plain identifier
+        }
+        // Strings -----------------------------------------------------------
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if s[j] == '"' {
+                    break;
+                }
+                j += 1;
+            }
+            let text = slice(&s, i, j + 1);
+            let ln = line;
+            line += text.matches('\n').count() as u32;
+            push(&mut toks, TokKind::Str, text, ln);
+            settle(&mut pending, &mut comments, &toks);
+            last_tok_line = ln;
+            i = j + 1;
+            continue;
+        }
+        // Char literal vs lifetime ------------------------------------------
+        if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                let mut j = i + 3;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                push(&mut toks, TokKind::Char, slice(&s, i, j + 1), line);
+                i = j + 1;
+            } else if i + 2 < n && s[i + 2] == '\'' && s[i + 1] != '\'' {
+                push(&mut toks, TokKind::Char, slice(&s, i, i + 3), line);
+                i += 3;
+            } else {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(s[j]) {
+                    j += 1;
+                }
+                push(&mut toks, TokKind::Lifetime, slice(&s, i, j), line);
+                i = j;
+            }
+            settle(&mut pending, &mut comments, &toks);
+            last_tok_line = line;
+            continue;
+        }
+        // Numbers -----------------------------------------------------------
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut is_float = false;
+            let radix_prefix = c == '0'
+                && i + 1 < n
+                && (s[i + 1] == 'x' || s[i + 1] == 'b' || s[i + 1] == 'o');
+            if radix_prefix {
+                j = i + 2;
+                while j < n && is_ident_cont(s[j]) {
+                    j += 1;
+                }
+            } else {
+                while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+                    j += 1;
+                }
+                if j < n && s[j] == '.' && j + 1 < n && s[j + 1].is_ascii_digit() {
+                    is_float = true;
+                    j += 1;
+                    while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+                        j += 1;
+                    }
+                } else if j < n
+                    && s[j] == '.'
+                    && !(j + 1 < n && (s[j + 1] == '.' || is_ident_start(s[j + 1])))
+                {
+                    // trailing-dot float like `1.`
+                    is_float = true;
+                    j += 1;
+                }
+                if j < n
+                    && (s[j] == 'e' || s[j] == 'E')
+                    && j + 1 < n
+                    && (s[j + 1].is_ascii_digit() || s[j + 1] == '+' || s[j + 1] == '-')
+                {
+                    is_float = true;
+                    j += 2;
+                    while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+                        j += 1;
+                    }
+                }
+                // suffix (f32, u8, usize...)
+                let sfx = j;
+                while j < n && is_ident_cont(s[j]) {
+                    j += 1;
+                }
+                let suffix = slice(&s, sfx, j);
+                if suffix == "f32" || suffix == "f64" {
+                    is_float = true;
+                }
+            }
+            let kind = if is_float { TokKind::FNum } else { TokKind::Num };
+            push(&mut toks, kind, slice(&s, i, j), line);
+            settle(&mut pending, &mut comments, &toks);
+            last_tok_line = line;
+            i = j;
+            continue;
+        }
+        // Identifiers -------------------------------------------------------
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            push(&mut toks, TokKind::Ident, slice(&s, i, j), line);
+            settle(&mut pending, &mut comments, &toks);
+            last_tok_line = line;
+            i = j;
+            continue;
+        }
+        // Punctuation -------------------------------------------------------
+        push(&mut toks, TokKind::Punct, c.to_string(), line);
+        settle(&mut pending, &mut comments, &toks);
+        last_tok_line = line;
+        i += 1;
+    }
+    (toks, comments)
+}

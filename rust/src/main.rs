@@ -45,6 +45,7 @@ fn main() {
         Some("query") => cmd_query(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("selfcheck") => cmd_selfcheck(&args),
+        Some("lint") => cmd_lint(),
         Some(other) => Err(format!("unknown command {other:?}\n{USAGE}")),
         None => Err(USAGE.to_string()),
     };
@@ -53,7 +54,18 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck> [flags]
+const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck|lint> [flags]
+  lint flags (source invariant checker, DESIGN.md §12):
+    --src <dir>                  source tree to scan (default rust/src)
+    --registry <file>            adversarial harness for decoder
+                                 registration (default <src>/../tests/
+                                 wire_adversarial.rs)
+    --docs <file>                doc corpus for config-key parity
+                                 (repeatable; default README.md DESIGN.md)
+    --fixtures <dir>             also self-check on a fixture corpus
+    --json <file>                write the machine-readable report
+    --deny-warnings              exit 1 on any unwaived finding
+    --quiet                      suppress the per-finding lines
   serve flags (query daemon over a resident cover-tree index):
     --config <file.toml>         load [serve] keys (flags override)
     --addr <ip:port>             listen address (port 0 = ephemeral)
@@ -127,6 +139,17 @@ const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck> [flag
 fn fail(msg: &str) -> ! {
     eprintln!("error: {msg}");
     std::process::exit(2);
+}
+
+fn cmd_lint() -> Result<(), String> {
+    // The lint driver owns its flag grammar (repeatable --docs), so it
+    // parses the raw argv after the subcommand instead of using `Args`.
+    let argv: Vec<String> = std::env::args().skip(2).collect();
+    let code = neargraph::lint::main_from_args(&argv).map_err(|e| e.to_string())?;
+    if code != 0 {
+        std::process::exit(code);
+    }
+    Ok(())
 }
 
 fn cmd_datasets(args: &Args) -> Result<(), String> {
@@ -938,7 +961,8 @@ fn cmd_selfcheck(args: &Args) -> Result<(), String> {
             let q = pts.slice(0, 64);
             let a = engine.euclidean_tile(&q, &q);
             let b = NativeBackend.euclidean_tile(&q, &q);
-            let max_err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            let max_err =
+                a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, neargraph::util::fmax32);
             if max_err > 1e-2 {
                 return Err(format!("selfcheck failed: PJRT tile max err {max_err}"));
             }

@@ -30,6 +30,7 @@ pub fn levenshtein(a: &[u8], b: &[u8]) -> usize {
     if a.is_empty() {
         return b.len();
     }
+    // lint: allow(no-alloc-hot-path) reason="DP row allocation; reusable scratch needs a mutable metric API (ROADMAP item 2)"
     let mut row: Vec<usize> = (0..=a.len()).collect();
     for (j, &bc) in b.iter().enumerate() {
         let mut prev_diag = row[0];
@@ -65,7 +66,9 @@ pub fn levenshtein_bounded(a: &[u8], b: &[u8], k: usize) -> Option<usize> {
     let inf = usize::MAX / 2;
     // DP over a (2k+1)-wide band around the diagonal.
     let width = 2 * k + 1;
+    // lint: allow(no-alloc-hot-path) reason="banded DP rows; reusable scratch needs a mutable metric API (ROADMAP item 2)"
     let mut prev = vec![inf; width];
+    // lint: allow(no-alloc-hot-path) reason="banded DP rows; reusable scratch needs a mutable metric API (ROADMAP item 2)"
     let mut cur = vec![inf; width];
     // Band index w corresponds to j = i + (w as isize - k as isize).
     for (w, slot) in prev.iter_mut().enumerate() {

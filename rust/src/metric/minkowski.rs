@@ -4,6 +4,7 @@
 
 use super::Metric;
 use crate::points::DenseMatrix;
+use crate::util::fmax32;
 
 /// Manhattan (l1) metric.
 #[derive(Clone, Copy, Debug, Default)]
@@ -33,7 +34,7 @@ impl Metric<DenseMatrix> for Chebyshev {
     fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
         let mut s = 0.0f32;
         for i in 0..a.len() {
-            s = s.max((a[i] - b[i]).abs());
+            s = fmax32(s, (a[i] - b[i]).abs());
         }
         s as f64
     }

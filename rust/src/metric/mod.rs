@@ -131,6 +131,7 @@ impl<M> Counted<M> {
     }
 
     pub fn counter(&self) -> DistCounter {
+        // lint: allow(no-alloc-hot-path) reason="DistCounter is an Arc handle; clone copies a pointer, not point data"
         self.counter.clone()
     }
 

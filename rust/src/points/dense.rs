@@ -157,7 +157,7 @@ impl PointSet for DenseMatrix {
     }
 
     fn try_from_bytes(bytes: &[u8]) -> Result<Self, super::WireError> {
-        use super::{try_get_u64, try_take, WireError};
+        use super::{le_f32, try_get_u64, try_take, WireError};
         let mut off = 0usize;
         let dim = try_get_u64(bytes, &mut off, "dense dim")? as usize;
         let n = try_get_u64(bytes, &mut off, "dense point count")? as usize;
@@ -169,8 +169,7 @@ impl PointSet for DenseMatrix {
         if off != bytes.len() {
             return Err(WireError::Corrupt { what: "trailing bytes after dense rows" });
         }
-        let data: Vec<f32> =
-            payload.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        let data: Vec<f32> = payload.chunks_exact(4).map(le_f32).collect();
         Ok(DenseMatrix::from_flat(dim, data))
     }
 

@@ -143,7 +143,7 @@ impl PointSet for HammingCodes {
     }
 
     fn try_from_bytes(bytes: &[u8]) -> Result<Self, super::WireError> {
-        use super::{try_get_u64, try_take, WireError};
+        use super::{le_u64, try_get_u64, try_take, WireError};
         let mut off = 0usize;
         let bits = try_get_u64(bytes, &mut off, "hamming bits")? as usize;
         let n = try_get_u64(bytes, &mut off, "hamming code count")? as usize;
@@ -156,8 +156,7 @@ impl PointSet for HammingCodes {
         if off != bytes.len() {
             return Err(WireError::Corrupt { what: "trailing bytes after hamming words" });
         }
-        let data: Vec<u64> =
-            payload.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect();
+        let data: Vec<u64> = payload.chunks_exact(8).map(le_u64).collect();
         Ok(HammingCodes { bits, words_per_point: wpp, data })
     }
 

@@ -117,17 +117,57 @@ impl std::fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
+/// Little-endian reads over already-length-validated subslices. These are
+/// the panic-free building blocks `WireError` decoders use in place of the
+/// `try_into().unwrap()` idiom: a short slice is a caller bug surfaced by
+/// the debug assertion, and release builds zero-fill the missing high bytes
+/// instead of panicking — the downstream checksum/invariant checks then
+/// reject the value as corrupt.
+pub(crate) fn le_u64(b: &[u8]) -> u64 {
+    debug_assert!(b.len() >= 8, "le_u64 needs 8 bytes");
+    b.iter().take(8).rev().fold(0u64, |acc, &x| (acc << 8) | u64::from(x))
+}
+
+pub(crate) fn le_u32(b: &[u8]) -> u32 {
+    debug_assert!(b.len() >= 4, "le_u32 needs 4 bytes");
+    b.iter().take(4).rev().fold(0u32, |acc, &x| (acc << 8) | u32::from(x))
+}
+
+pub(crate) fn le_i32(b: &[u8]) -> i32 {
+    le_u32(b) as i32
+}
+
+pub(crate) fn le_f64(b: &[u8]) -> f64 {
+    f64::from_bits(le_u64(b))
+}
+
+pub(crate) fn le_f32(b: &[u8]) -> f32 {
+    f32::from_bits(le_u32(b))
+}
+
 /// Length-checked [`get_u64`].
 pub(crate) fn try_get_u64(
     bytes: &[u8],
     off: &mut usize,
     what: &'static str,
 ) -> Result<u64, WireError> {
-    let have = bytes.len().saturating_sub(*off);
-    if have < 8 {
-        return Err(WireError::Truncated { what, need: 8, have });
+    let b = try_take(bytes, off, 8, what)?;
+    Ok(le_u64(b))
+}
+
+/// Length-checked single-byte read (wire tags and flags).
+pub(crate) fn try_get_u8(
+    bytes: &[u8],
+    off: &mut usize,
+    what: &'static str,
+) -> Result<u8, WireError> {
+    match bytes.get(*off) {
+        Some(&v) => {
+            *off += 1;
+            Ok(v)
+        }
+        None => Err(WireError::Truncated { what, need: 1, have: 0 }),
     }
-    Ok(get_u64(bytes, off))
 }
 
 /// Borrow the next `len` bytes of `bytes`, or report how short the buffer
@@ -142,9 +182,13 @@ pub(crate) fn try_take<'a>(
     if have < len {
         return Err(WireError::Truncated { what, need: len, have });
     }
-    let out = &bytes[*off..*off + len];
-    *off += len;
-    Ok(out)
+    match bytes.get(*off..off.saturating_add(len)) {
+        Some(out) => {
+            *off += len;
+            Ok(out)
+        }
+        None => Err(WireError::Corrupt { what }),
+    }
 }
 
 #[cfg(test)]
@@ -162,5 +206,31 @@ mod tests {
         assert_eq!(get_u64(&buf, &mut off), u64::MAX);
         assert_eq!(get_u64(&buf, &mut off), 123456789);
         assert_eq!(off, buf.len());
+    }
+
+    #[test]
+    fn le_readers_match_std() {
+        let v64 = 0x0123_4567_89AB_CDEFu64;
+        let v32 = 0xDEAD_BEEFu32;
+        let vf = -1234.5678f64;
+        assert_eq!(le_u64(&v64.to_le_bytes()), v64);
+        assert_eq!(le_u32(&v32.to_le_bytes()), v32);
+        assert_eq!(le_i32(&(-7i32).to_le_bytes()), -7);
+        assert_eq!(le_f64(&vf.to_le_bytes()).to_bits(), vf.to_bits());
+        // Longer slices read only their prefix (chunks_exact callers pass
+        // exactly-sized chunks; offset callers pass the tail).
+        let mut long = v32.to_le_bytes().to_vec();
+        long.extend_from_slice(&[0xFF; 4]);
+        assert_eq!(le_u32(&long), v32);
+    }
+
+    #[test]
+    fn try_get_u8_reports_truncation() {
+        let mut off = 0;
+        assert_eq!(try_get_u8(&[7], &mut off, "tag"), Ok(7));
+        assert!(matches!(
+            try_get_u8(&[7], &mut off, "tag"),
+            Err(WireError::Truncated { what: "tag", .. })
+        ));
     }
 }

@@ -104,14 +104,12 @@ impl PointSet for StringSet {
     }
 
     fn try_from_bytes(bytes: &[u8]) -> Result<Self, super::WireError> {
-        use super::{try_get_u64, try_take, WireError};
+        use super::{le_u64, try_get_u64, try_take, WireError};
         let mut off = 0usize;
         let n = try_get_u64(bytes, &mut off, "string count")? as usize;
         let len_bytes = try_take(bytes, &mut off, n.saturating_mul(8), "string lengths")?;
-        let lens: Vec<usize> = len_bytes
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-            .collect();
+        let lens: Vec<usize> =
+            len_bytes.chunks_exact(8).map(|c| le_u64(c) as usize).collect();
         let mut out = StringSet::new();
         for l in lens {
             out.push(try_take(bytes, &mut off, l, "string bytes")?);

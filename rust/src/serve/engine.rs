@@ -47,6 +47,7 @@ pub struct QueryBatch<P: PointSet> {
 
 impl<P: PointSet> QueryBatch<P> {
     /// An empty batch shaped like `proto` (same dimension/width).
+    // lint: cold
     pub fn new_like(proto: &P) -> Self {
         QueryBatch { points: proto.empty_like(), ops: Vec::new() }
     }
@@ -151,6 +152,7 @@ pub struct ServeEngine<P: PointSet, M: Metric<P>> {
 
 impl<P: PointSet, M: Metric<P>> ServeEngine<P, M> {
     /// Wrap an index with a `threads`-worker lane pool (clamped to ≥ 1).
+    // lint: cold
     pub fn new(index: Box<dyn NearIndex<P, M>>, threads: usize) -> Self {
         let pool = Pool::new(threads);
         let lanes = (0..pool.threads()).map(|_| Mutex::new(Lane::default())).collect();

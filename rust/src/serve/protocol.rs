@@ -33,7 +33,9 @@
 //! payload — the same encoding the simulated MPI layer ships, so the
 //! point containers' hardened decoders are reused verbatim.
 
-use crate::points::{put_u64, try_get_u64, try_take, PointSet, WireError};
+use crate::points::{
+    le_u32, le_u64, put_u64, try_get_u64, try_get_u8, try_take, PointSet, WireError,
+};
 use std::io::{self, ErrorKind, Read, Write};
 
 /// Hard cap on a frame payload (16 MiB) — enforced before the receive
@@ -158,7 +160,7 @@ impl<P: PointSet> Request<P> {
     /// that does not hold exactly one point.
     pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
         let mut off = 0usize;
-        let op = try_take(bytes, &mut off, 1, "request opcode")?[0];
+        let op = try_get_u8(bytes, &mut off, "request opcode")?;
         let id = try_get_u64(bytes, &mut off, "request id")?;
         let req = match op {
             REQ_EPS => {
@@ -201,10 +203,9 @@ fn decode_one_point<P: PointSet>(bytes: &[u8], off: &mut usize) -> Result<P, Wir
 /// the error reply when the payload itself fails to decode (0 when even
 /// the id is unreadable).
 pub fn peek_request_id(bytes: &[u8]) -> u64 {
-    if bytes.len() >= 9 {
-        u64::from_le_bytes(bytes[1..9].try_into().unwrap())
-    } else {
-        0
+    match bytes.get(1..9) {
+        Some(b) => le_u64(b),
+        None => 0,
     }
 }
 
@@ -263,7 +264,7 @@ impl Response {
     /// error, not a silently wrong answer).
     pub fn try_from_bytes(bytes: &[u8]) -> Result<Self, WireError> {
         let mut off = 0usize;
-        let op = try_take(bytes, &mut off, 1, "response opcode")?[0];
+        let op = try_get_u8(bytes, &mut off, "response opcode")?;
         let id = try_get_u64(bytes, &mut off, "response id")?;
         let resp = match op {
             RESP_HITS => {
@@ -271,8 +272,9 @@ impl Response {
                 let body = try_take(bytes, &mut off, n.saturating_mul(12), "response hits")?;
                 let mut hits = Vec::with_capacity(n);
                 for rec in body.chunks_exact(12) {
-                    let gid = u32::from_le_bytes(rec[0..4].try_into().unwrap());
-                    let dist = f64::from_bits(u64::from_le_bytes(rec[4..12].try_into().unwrap()));
+                    let (gid_b, dist_b) = rec.split_at(4);
+                    let gid = le_u32(gid_b);
+                    let dist = f64::from_bits(le_u64(dist_b));
                     if !dist.is_finite() || dist < 0.0 {
                         return Err(WireError::Corrupt { what: "response hit not a distance" });
                     }
@@ -281,7 +283,7 @@ impl Response {
                 Response::Hits { id, hits }
             }
             RESP_ERROR => {
-                let c = try_take(bytes, &mut off, 1, "response error code")?[0];
+                let c = try_get_u8(bytes, &mut off, "response error code")?;
                 let code = ErrorCode::from_code(c)
                     .ok_or(WireError::Corrupt { what: "unknown response error code" })?;
                 Response::Error { id, code }

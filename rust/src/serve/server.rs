@@ -111,7 +111,10 @@ struct Outbox {
 
 impl ReplySink for Outbox {
     fn send(&self, payload: &[u8]) {
-        let mut s = self.stream.lock().unwrap();
+        // Recover the stream from a poisoned lock rather than panicking:
+        // a writer that panicked mid-frame already torched the connection,
+        // and the reader-side EOF handling cleans it up.
+        let mut s = self.stream.lock().unwrap_or_else(|p| p.into_inner());
         // A vanished client makes the write fail; the reader sees EOF and
         // cleans the connection up — nothing to do here.
         let _ = protocol::write_frame(&mut *s, payload);

@@ -15,6 +15,48 @@ pub use pool::{Pool, Worklist};
 pub use rng::Rng;
 pub use timer::{thread_cpu_time, Stopwatch};
 
+/// Total-order float max/min (crate rule R2, DESIGN.md §12): the crate
+/// never routes distance-typed values through the IEEE partial-ordered
+/// `f32/f64::max|min`, whose NaN-absorbing behavior is exactly how the
+/// PR 4/PR 5 traversal bugs hid. Under `total_cmp` a (positive) NaN sorts
+/// above +∞, so it *propagates* out of a fold instead of vanishing — for
+/// finite inputs the result is bit-identical to `max`/`min`.
+#[inline]
+pub fn fmax(a: f64, b: f64) -> f64 {
+    if a.total_cmp(&b).is_lt() {
+        b
+    } else {
+        a
+    }
+}
+
+#[inline]
+pub fn fmin(a: f64, b: f64) -> f64 {
+    if a.total_cmp(&b).is_gt() {
+        b
+    } else {
+        a
+    }
+}
+
+#[inline]
+pub fn fmax32(a: f32, b: f32) -> f32 {
+    if a.total_cmp(&b).is_lt() {
+        b
+    } else {
+        a
+    }
+}
+
+#[inline]
+pub fn fmin32(a: f32, b: f32) -> f32 {
+    if a.total_cmp(&b).is_gt() {
+        b
+    } else {
+        a
+    }
+}
+
 /// Integer ceiling division.
 #[inline]
 pub fn div_ceil(a: usize, b: usize) -> usize {

@@ -1,0 +1,16 @@
+// lint-fixture: virtual=config/mod.rs
+//! R5 fixture: `"key" =>` match arms in config/ must appear word-bounded
+//! in the doc corpus (DOCS.md here). `prefix` only occurs in DOCS.md as a
+//! substring of "prefixed", which must not count; `Mixed.Case` is not a
+//! config-key-shaped literal at all.
+
+pub fn apply(key: &str, cfg: &mut u32) -> Result<(), String> {
+    match key {
+        "documented.key" => *cfg = 1,
+        "undocumented.key" => *cfg = 2, //~ config-doc-parity
+        "prefix" => *cfg = 3, //~ config-doc-parity
+        "Mixed.Case" => *cfg = 4,
+        other => return Err(format!("unknown config key {other:?}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+// lint-fixture: virtual=points/frame.rs
+//! R3/R4 fixture: WireError decoders must be panic-free, index-free, and
+//! registered in the adversarial harness. `Frame::from_bytes` appears in
+//! the registry fixture; `Orphan::try_from_bytes` does not.
+
+pub struct WireError;
+
+pub struct Frame {
+    pub tag: u8,
+}
+
+impl Frame {
+    pub fn from_bytes(bytes: &[u8]) -> Result<Frame, WireError> {
+        let tag = bytes[0]; //~ panic-free-decode
+        assert!(bytes.len() > 1); //~ panic-free-decode
+        let _second = bytes.get(1).copied().unwrap(); //~ panic-free-decode
+        Ok(Frame { tag })
+    }
+
+    pub fn tag_from_bytes(&self, bytes: &[u8]) -> u8 {
+        // takes &self and two params: not a decoder, not scanned by R3
+        bytes.len() as u8
+    }
+}
+
+pub struct Orphan;
+
+impl Orphan {
+    pub fn try_from_bytes(bytes: &[u8]) -> Result<Orphan, WireError> { //~ harness-registration
+        match bytes.first() {
+            Some(_) => Ok(Orphan),
+            None => Err(WireError),
+        }
+    }
+}
+
+pub fn helper_len(bytes: &[u8]) -> usize {
+    // not a decoder name and no WireError return: unwrap_or is fine here
+    bytes.first().copied().map(|b| b as usize).unwrap_or(0)
+}

@@ -1,0 +1,35 @@
+// lint-fixture: virtual=covertree/query.rs
+//! R1 fixture: allocation idioms inside a hot module. Each flagged line
+//! carries a `//~` expectation; the cold fn and the test mod are exempt.
+
+pub fn hot_query(n: usize) -> usize {
+    let mut ids: Vec<u32> = Vec::new(); //~ no-alloc-hot-path
+    ids.reserve(n);
+    let copied = ids.to_vec(); //~ no-alloc-hot-path
+    let twin = copied.clone(); //~ no-alloc-hot-path
+    let boxed = Box::new(n); //~ no-alloc-hot-path
+    let label = String::from("q"); //~ no-alloc-hot-path
+    let row = vec![0u8; n]; //~ no-alloc-hot-path
+    let msg = format!("{n}"); //~ no-alloc-hot-path
+    twin.len() + row.len() + label.len() + msg.len() + *boxed
+}
+
+pub fn collected(n: usize) -> usize {
+    let sq: Vec<usize> = (0..n).map(|i| i * i).collect(); //~ no-alloc-hot-path
+    sq.len()
+}
+
+// lint: cold
+pub fn build_scratch(n: usize) -> Vec<f32> {
+    // cold fns may allocate freely
+    vec![0.0f32; n]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_fns_are_exempt() {
+        let v = vec![1, 2, 3];
+        assert_eq!(v.clone().len(), 3);
+    }
+}

@@ -1,0 +1,23 @@
+// lint-fixture: virtual=dist/refine.rs
+//! R2 fixture: float ordering idioms are banned crate-wide; integer
+//! clamps pass because the argument heuristic sees no float.
+
+pub fn fold_radius(ds: &[f64]) -> f64 {
+    ds.iter().copied().fold(0.0, f64::max) //~ total-ordering
+}
+
+pub fn clamp_low(d: f64) -> f64 {
+    d.max(0.0) //~ total-ordering
+}
+
+pub fn int_clamp(leaf: usize) -> usize {
+    leaf.max(1)
+}
+
+pub fn compare(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b).is_some() //~ total-ordering
+}
+
+pub fn mag_clamp(d: f64, lim: f64) -> f64 {
+    d.min(lim.abs()) //~ total-ordering
+}

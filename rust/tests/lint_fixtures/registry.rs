@@ -1,0 +1,9 @@
+// lint-fixture: virtual=tests/wire_adversarial.rs
+//! Registry fixture: the file playing the adversarial harness. A decoder
+//! counts as registered when its impl-type ident AND method ident both
+//! appear among this file's identifiers.
+
+fn exercise_frame() {
+    let frame = Frame::from_bytes(&[1, 2, 3]);
+    let _ = frame;
+}

@@ -1,0 +1,27 @@
+// lint-fixture: virtual=serve/server.rs
+//! R3 fixture, file scope: every fn in the serve runtime is panic-free,
+//! but indexing and asserts stay legal outside WireError decoders.
+
+pub fn reader_loop(input: Option<u32>) -> u32 {
+    input.unwrap() //~ panic-free-decode
+}
+
+pub fn no_panics(x: u32) -> u32 {
+    if x > 9000 {
+        panic!("too big"); //~ panic-free-decode
+    }
+    x
+}
+
+pub fn indexing_is_ok_here(buf: &[u8]) -> u8 {
+    // file-scope R3 bans panics, not indexing (that is decoder-only)
+    if buf.is_empty() {
+        0
+    } else {
+        buf[0]
+    }
+}
+
+pub fn asserts_allowed(x: u32) {
+    assert!(x < 10, "bound");
+}

@@ -1,0 +1,32 @@
+// lint-fixture: virtual=covertree/scratch.rs
+//! Waiver grammar fixture: every placement form (fn-scope, standalone
+//! line, trailing) plus the failure modes, which are findings themselves.
+
+// lint: allow(no-alloc-hot-path) reason="fn-scope waiver: setup allocations are amortized"
+pub fn fn_scope_waived(n: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    out.resize(n, 0);
+    out.clone()
+}
+
+pub fn line_scope(n: usize) -> usize {
+    // lint: allow(no-alloc-hot-path) reason="standalone waiver covers only the next line"
+    let held: Vec<u8> = vec![0; n];
+    let leaked = held.to_vec(); //~ no-alloc-hot-path
+    leaked.len() + held.len()
+}
+
+pub fn trailing(n: usize) -> usize {
+    let v = vec![1u8; n]; // lint: allow(no-alloc-hot-path) reason="trailing waiver"
+    v.len()
+}
+
+/* lint: allow(no-such-rule) reason="r" */ //~ lint-directive
+/* lint: allow(total-ordering) */ //~ lint-directive
+/* lint: frobnicate */ //~ lint-directive
+/* lint: allow(no-alloc-hot-path) reason="this waiver matches nothing" */ //~ lint-directive
+pub fn clean(n: usize) -> usize {
+    n + 1
+}
+
+/* lint: cold */ //~ lint-directive

@@ -1,0 +1,262 @@
+//! Self-test for `neargraph::lint` (DESIGN.md §12).
+//!
+//! Three layers: the shared fixture corpus in `tests/lint_fixtures/`
+//! (also run by `python/neargraph_lint.py`, holding the Rust engine and
+//! the in-container mirror equivalent), tokenizer edge cases, and the
+//! directive/waiver grammar.
+
+use std::path::Path;
+
+use neargraph::lint::parse::{parse_directives, parse_file, DirKind};
+use neargraph::lint::rules::{apply_waivers, r1_hot_alloc, r2_total_ordering, r3_panic_free};
+use neargraph::lint::tokenize::{tokenize, TokKind};
+use neargraph::lint::{render_report, scan_fixtures, scan_tree, Finding};
+
+// ---------------------------------------------------------------------------
+// Fixture corpus
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_corpus_matches_expectations() {
+    let fx = scan_fixtures(Path::new("tests/lint_fixtures")).expect("fixture scan");
+    assert!(
+        fx.ok,
+        "fixture mismatch\nexpected: {:?}\nactual:   {:?}",
+        fx.expected, fx.actual
+    );
+    // The corpus exercises every rule; an empty expectation list would mean
+    // the fixtures rotted away.
+    assert!(fx.expected.len() >= 15, "fixture corpus shrank: {:?}", fx.expected);
+    for rule in [
+        "no-alloc-hot-path",
+        "total-ordering",
+        "panic-free-decode",
+        "harness-registration",
+        "config-doc-parity",
+        "lint-directive",
+    ] {
+        assert!(
+            fx.expected.iter().any(|(_, _, r)| r == rule),
+            "no fixture expectation for rule {rule}"
+        );
+    }
+}
+
+#[test]
+fn real_tree_is_clean() {
+    // The committed source must lint clean: every finding waived with a
+    // reason. Runs from the crate root (cargo sets the test cwd there).
+    let docs = [Path::new("../README.md"), Path::new("../DESIGN.md")]
+        .iter()
+        .filter(|p| p.exists())
+        .map(|p| std::fs::read_to_string(p).expect("doc corpus"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    let registry = Path::new("tests/wire_adversarial.rs");
+    let (files, findings) =
+        scan_tree(Path::new("src"), Some(registry), &docs).expect("scan src tree");
+    assert!(files.len() > 50, "src scan found suspiciously few files: {}", files.len());
+    let unwaived: Vec<&Finding> = findings.iter().filter(|f| f.waived.is_none()).collect();
+    assert!(
+        unwaived.is_empty(),
+        "unwaived lint findings in src:\n{}",
+        unwaived
+            .iter()
+            .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Tokenizer edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tokenizer_nested_block_comments() {
+    let (toks, comments) = tokenize("/* a /* b */ c */ fn x() {}");
+    assert_eq!(comments.len(), 1);
+    assert_eq!(comments[0].text, "a /* b */ c");
+    assert!(comments[0].standalone);
+    assert_eq!(toks[0].text, "fn");
+}
+
+#[test]
+fn tokenizer_raw_and_byte_strings() {
+    let (toks, _) = tokenize(r###"let s = r#"quote " inside"#; let b = b"bytes";"###);
+    let strs: Vec<&str> =
+        toks.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.as_str()).collect();
+    assert_eq!(strs, vec![r##"r#"quote " inside"#"##, "\"bytes\""]);
+    // an identifier starting with 'r' is not a raw string
+    let (toks, _) = tokenize("let radius = 1;");
+    assert!(toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "radius"));
+}
+
+#[test]
+fn tokenizer_lifetime_vs_char() {
+    let (toks, _) = tokenize("fn f<'a>(x: &'a u8) -> char { 'x' }");
+    assert!(toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+    assert!(toks.iter().any(|t| t.kind == TokKind::Char && t.text == "'x'"));
+    let (toks, _) = tokenize("let c = '\\n'; let b = b'q';");
+    assert!(toks.iter().any(|t| t.kind == TokKind::Char && t.text == "'\\n'"));
+    assert!(toks.iter().any(|t| t.kind == TokKind::Char && t.text == "b'q'"));
+}
+
+#[test]
+fn tokenizer_float_classification() {
+    let cases: [(&str, TokKind); 7] = [
+        ("1.5", TokKind::FNum),
+        ("2.", TokKind::FNum),
+        ("1e9", TokKind::FNum),
+        ("3f64", TokKind::FNum),
+        ("7", TokKind::Num),
+        ("0x1f", TokKind::Num),
+        ("4u32", TokKind::Num),
+    ];
+    for (src, want) in cases {
+        let (toks, _) = tokenize(src);
+        assert_eq!(toks[0].kind, want, "literal {src:?}");
+    }
+    // `1..4` is a range of integers, not a trailing-dot float
+    let (toks, _) = tokenize("for i in 1..4 {}");
+    let one = toks.iter().find(|t| t.text == "1").expect("range start");
+    assert_eq!(one.kind, TokKind::Num);
+}
+
+#[test]
+fn tokenizer_comment_text_in_strings_is_inert() {
+    let (toks, comments) = tokenize("let s = \"// lint: cold\"; // real comment");
+    assert_eq!(comments.len(), 1);
+    assert_eq!(comments[0].text, "real comment");
+    assert!(!comments[0].standalone);
+    assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+}
+
+#[test]
+fn tokenizer_merges_fat_arrow_and_path_sep() {
+    let (toks, _) = tokenize("\"k\" => a::b");
+    let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+    assert_eq!(texts, vec!["\"k\"", "=>", "a", "::", "b"]);
+}
+
+// ---------------------------------------------------------------------------
+// Directive grammar
+// ---------------------------------------------------------------------------
+
+#[test]
+fn directive_parsing() {
+    let src = "\
+// lint: allow(total-ordering, panic-free-decode) reason=\"why not\"
+// lint: allow(nope) reason=\"x\"
+// lint: allow(total-ordering)
+// lint: allow(total-ordering) reason=\"\"
+// lint: cold
+// lint: frobnicate
+";
+    let (_, comments) = tokenize(src);
+    let ds = parse_directives(&comments);
+    assert_eq!(ds.len(), 6);
+    assert_eq!(ds[0].kind, DirKind::Allow);
+    assert_eq!(ds[0].rules, vec!["total-ordering", "panic-free-decode"]);
+    assert_eq!(ds[0].reason, "why not");
+    assert_eq!(ds[1].kind, DirKind::Bad);
+    assert!(ds[1].error.contains("unknown rule 'nope'"), "{}", ds[1].error);
+    assert_eq!(ds[2].kind, DirKind::Bad);
+    assert!(ds[2].error.contains("missing reason"), "{}", ds[2].error);
+    assert_eq!(ds[3].kind, DirKind::Bad);
+    assert!(ds[3].error.contains("empty"), "{}", ds[3].error);
+    assert_eq!(ds[4].kind, DirKind::Cold);
+    assert_eq!(ds[5].kind, DirKind::Bad);
+    assert!(ds[5].error.contains("unknown lint directive"), "{}", ds[5].error);
+}
+
+// ---------------------------------------------------------------------------
+// Rule + waiver behavior on inline sources
+// ---------------------------------------------------------------------------
+
+fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+    let mut fm = parse_file(path, src);
+    let mut findings = Vec::new();
+    r1_hot_alloc(&fm, &mut findings);
+    r2_total_ordering(&fm, &mut findings);
+    r3_panic_free(&fm, &mut findings);
+    apply_waivers(&mut fm, &mut findings);
+    findings
+}
+
+#[test]
+fn hot_path_rule_respects_cold_and_file_set() {
+    let src = "pub fn f() { let v = vec![1]; }";
+    assert_eq!(lint_one("covertree/query.rs", src).len(), 1);
+    assert_eq!(lint_one("metric/edit.rs", src).len(), 1);
+    // same code in a non-hot module: clean
+    assert_eq!(lint_one("dist/mod.rs", src).len(), 0);
+    // cold marker exempts the fn
+    let cold = "// lint: cold\npub fn f() { let v = vec![1]; }";
+    assert_eq!(lint_one("covertree/query.rs", cold).len(), 0);
+}
+
+#[test]
+fn ordering_rule_heuristic() {
+    let float_clamp = "fn f(d: f64) -> f64 { d.max(0.0) }";
+    let int_clamp = "fn f(n: usize) -> usize { n.max(1) }";
+    let abs_arg = "fn f(d: f64, t: f64) -> f64 { d.min(t.abs()) }";
+    assert_eq!(lint_one("any/mod.rs", float_clamp).len(), 1);
+    assert_eq!(lint_one("any/mod.rs", int_clamp).len(), 0);
+    assert_eq!(lint_one("any/mod.rs", abs_arg).len(), 1);
+}
+
+#[test]
+fn wire_decoder_rule_scopes() {
+    let wire = "fn d(b: &[u8]) -> Result<u8, WireError> { Ok(b[0]) }";
+    let plain = "fn d(b: &[u8]) -> u8 { b[0] }";
+    assert_eq!(lint_one("points/mod.rs", wire).len(), 1);
+    assert_eq!(lint_one("points/mod.rs", plain).len(), 0);
+    // serve files ban panics in every fn, but not indexing
+    let serve = "fn go(x: Option<u8>) -> u8 { x.unwrap() }";
+    assert_eq!(lint_one("serve/server.rs", serve).len(), 1);
+    assert_eq!(lint_one("serve/engine.rs", serve).len(), 0);
+}
+
+#[test]
+fn waiver_scopes_and_unused_waivers() {
+    // fn-scope waiver above the header covers the whole body
+    let fn_scope = "\
+// lint: allow(no-alloc-hot-path) reason=\"setup\"
+pub fn f() { let a = vec![1]; let b = a.clone(); }";
+    let fs = lint_one("covertree/query.rs", fn_scope);
+    assert!(fs.iter().all(|f| f.waived.is_some()), "{fs:?}");
+    assert_eq!(fs.len(), 2);
+
+    // trailing waiver covers its line only
+    let trailing = "\
+pub fn f() {
+    let a = vec![1]; // lint: allow(no-alloc-hot-path) reason=\"one line\"
+    let b = a.clone();
+}";
+    let tr = lint_one("covertree/query.rs", trailing);
+    assert_eq!(tr.iter().filter(|f| f.waived.is_some()).count(), 1);
+    assert_eq!(tr.iter().filter(|f| f.waived.is_none()).count(), 1);
+
+    // a waiver that matches nothing is itself a finding
+    let unused = "\
+// lint: allow(total-ordering) reason=\"matches nothing\"
+pub fn f() -> u32 { 7 }";
+    let un = lint_one("dist/mod.rs", unused);
+    assert_eq!(un.len(), 1);
+    assert_eq!(un[0].rule, "lint-directive");
+    assert!(un[0].message.contains("unused waiver"), "{}", un[0].message);
+}
+
+#[test]
+fn report_counts_waivers() {
+    let fx = scan_fixtures(Path::new("tests/lint_fixtures")).expect("fixture scan");
+    assert!(fx.ok);
+    let docs = std::fs::read_to_string("../README.md").unwrap_or_default();
+    let (files, findings) =
+        scan_tree(Path::new("src"), Some(Path::new("tests/wire_adversarial.rs")), &docs)
+            .expect("scan");
+    let report = render_report("src", &files, &findings, Some(&fx));
+    assert!(report.contains("\"waiver_count\""));
+    assert!(report.contains("\"matched\": true"));
+}

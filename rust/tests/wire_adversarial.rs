@@ -75,6 +75,18 @@ fn edge_bundle_mutations() {
 }
 
 #[test]
+fn edge_list_mutations() {
+    use neargraph::graph::EdgeList;
+    let mut edges = EdgeList::new();
+    edges.push(0, 5);
+    edges.push(3, 1);
+    edges.push(2, 2);
+    wire::check_wire_decoder("edge-list", &edges.to_bytes(), &EdgeList::from_bytes);
+    // The empty list is a legal wire value (a rank with no local edges).
+    wire::check_wire_decoder("edge-list/empty", &EdgeList::new().to_bytes(), &EdgeList::from_bytes);
+}
+
+#[test]
 fn weighted_edge_list_mutations() {
     let mut edges = WeightedEdgeList::new();
     for i in 0..10u32 {
