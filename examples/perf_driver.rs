@@ -12,14 +12,19 @@
 //! warmed engine batch path allocation-free, **plus** a chaos section
 //! (PR 7): a seeded fault-injected distributed run whose edge set must
 //! match its clean twin bit-for-bit, with the fault counters and the
-//! virtual-time cost of the retries landing in the JSON. Emits
-//! machine-readable `BENCH_pr7.json` so the perf trajectory accumulates
-//! across PRs.
+//! virtual-time cost of the retries landing in the JSON, **plus** a
+//! mutation section (PR 9): the mutable epoch-tree backend under rolling
+//! insert/delete churn, with the insert path's amortized allocation
+//! count gated (the children-`Vec` clone regression guard), compactions
+//! asserted to fire, and the warmed epoch read path — base, delta and
+//! tombstones all populated — proved allocation-free by the same
+//! counting allocator. Emits machine-readable `BENCH_pr9.json` so the
+//! perf trajectory accumulates across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
 //!     [--threads 1,2,4] [--target-degree 30] [--knn 16] \
-//!     [--out BENCH_pr7.json]
+//!     [--out BENCH_pr9.json]
 //! ```
 //!
 //! The driver asserts that every thread count — and every facade backend
@@ -30,11 +35,15 @@
 //! workload itself).
 
 use neargraph::comm::{FaultCounters, FaultPlan};
-use neargraph::covertree::{BuildParams, CoverTree, QueryScratch};
+use neargraph::covertree::{BuildParams, CoverTree, EpochParams, InsertCoverTree, QueryScratch};
 use neargraph::dist::{run_knn_graph, try_run_epsilon_graph, Algorithm, RunConfig};
 use neargraph::graph::{GraphSink, KnnGraph};
-use neargraph::index::{build_index_par, CoverTreeIndex, IndexKind, IndexParams, NearIndex};
+use neargraph::index::{
+    build_index_par, CoverTreeIndex, IndexKind, IndexParams, InsertCoverTreeIndex, MutableOps,
+    NearIndex,
+};
 use neargraph::metric::{Counted, Euclidean};
+use neargraph::points::PointSet;
 use neargraph::serve::{serve, BatchOutput, QueryBatch, QueryOp, ServeConfig, ServeEngine};
 use neargraph::testkit::serve_sim::{latencies_sorted, percentile, run_clients, ClientPlan, SimQuery};
 use neargraph::util::{Pool, Rng};
@@ -147,6 +156,21 @@ struct ChaosRun {
     counters: FaultCounters,
 }
 
+/// The PR 9 mutation point: the mutable epoch backend under rolling
+/// churn, with the insert-allocation regression guard and the warmed
+/// epoch read path's allocation gate.
+struct MutationRun {
+    base: usize,
+    insert_batch: usize,
+    insert_s: f64,
+    insert_allocs_per_point: f64,
+    churn_rounds: usize,
+    churn_s: f64,
+    churn_ops_per_s: f64,
+    compactions: u64,
+    epoch_steady_state_allocs: u64,
+}
+
 /// Order-independent fingerprint of a k-NN graph's (vertex, neighbor,
 /// distance-bits) arcs — identical iff the certified rows are identical.
 fn knn_fingerprint(g: &KnnGraph) -> u64 {
@@ -184,7 +208,7 @@ fn main() {
         args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
     let knn_k = args.get_usize("knn").unwrap_or_else(|e| fail(&e)).unwrap_or(0);
     let threads_arg = args.get_or("threads", "1,2,4").to_string();
-    let out_path = args.get_or("out", "BENCH_pr7.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr9.json").to_string();
     args.reject_unknown().unwrap_or_else(|e| fail(&e));
     let thread_list: Vec<usize> = threads_arg
         .split(',')
@@ -570,6 +594,119 @@ fn main() {
         }
     };
 
+    // ------------------------------------------------------------------
+    // Mutation section (PR 9): the mutable epoch-tree backend under
+    // churn, sequential on this thread (the allocator counter is
+    // global). Three gates ride the measurements: the insert path's
+    // amortized allocation count — the regression guard for the
+    // children-Vec clone the PR removed from the cover-set expansion —
+    // compactions actually firing under the rolling insert/delete mix,
+    // and the warmed epoch read path (ε and k-NN, with base, delta and
+    // tombstones all populated) touching the allocator zero times.
+    // ------------------------------------------------------------------
+    let mutation = {
+        let m_total = n.min(4_096);
+        let m_base = m_total - m_total / 4;
+        let base = pts.slice(0, m_base);
+
+        // Insert-allocation regression, on the bare structure the fix
+        // touched. The fixed descent allocates only the per-level cover
+        // vectors plus amortized container growth — ~5-7 allocations per
+        // insert on this workload — while the old `children.clone()`
+        // added one Vec clone per expanded node per insert, ~13/point
+        // here. The bound sits between the two with ~1.5x margin each
+        // way, so the clone creeping back fails this run.
+        let mut bare = InsertCoverTree::build(&base, &Euclidean);
+        let batch = pts.slice(m_base, m_total);
+        let alloc0 = allocations();
+        let t0 = Instant::now();
+        bare.insert_from(&Euclidean, &batch);
+        let insert_s = t0.elapsed().as_secs_f64();
+        let insert_allocs = allocations() - alloc0;
+        let insert_allocs_per_point = insert_allocs as f64 / batch.len().max(1) as f64;
+        eprintln!(
+            "[perf_driver] mutation insert: {} points in {insert_s:.4}s, \
+             {insert_allocs_per_point:.1} allocs/point",
+            batch.len()
+        );
+        assert!(
+            insert_allocs_per_point <= 10.0,
+            "insert allocations regressed ({insert_allocs_per_point:.1}/point): \
+             the cover-set expansion must not clone child lists"
+        );
+
+        // Facade churn through `MutableOps`: each round inserts one point
+        // and tombstones the previous round's insert, so the delta cap
+        // is crossed repeatedly and the loop ends back at the base live
+        // set (the conformance suite owns bit-equality; this measures).
+        let params = IndexParams {
+            epoch: EpochParams { delta_cap: 64, compact_frac: 0.25 },
+            ..IndexParams::default()
+        };
+        let index = InsertCoverTreeIndex::build(&base, Euclidean, &params);
+        let churn_rounds = m_base.min(1_024);
+        let mut prev: Option<u32> = None;
+        let t1 = Instant::now();
+        for i in 0..churn_rounds {
+            let row = (i * 13) % m_base;
+            let got = index.insert(&pts.slice(row, row + 1));
+            if let Some(gid) = prev.take() {
+                assert!(index.delete(gid), "churn delete missed gid {gid}");
+            }
+            prev = Some(got.start);
+        }
+        if let Some(gid) = prev.take() {
+            assert!(index.delete(gid));
+        }
+        let churn_s = t1.elapsed().as_secs_f64();
+        let compactions = index.epoch();
+        assert!(compactions > 0, "churn never crossed the compaction triggers");
+        assert_eq!(index.live(), m_base, "net-zero churn must end at the base live set");
+
+        // Epoch read gate, in the richest read state: a nonempty delta
+        // (below the cap, so no compaction elides it) plus tombstones in
+        // both base and delta. First pass warms the scratch stacks, the
+        // candidate heap and the output buffer; the second, identical
+        // pass must not allocate.
+        let fresh = index.insert(&pts.slice(0, 32.min(m_base)));
+        assert!(index.delete(fresh.start));
+        assert!(index.delete(0), "base gid 0 must still be live after net-zero churn");
+        assert!(index.tombstones() > 0, "the read gate must cover tombstone skipping");
+        let et = index.epoch_tree();
+        let mut scratch = QueryScratch::new();
+        let mut hits: Vec<(u32, f64)> = Vec::new();
+        et.eps_query_with(&Euclidean, pts.point(1), eps, &mut scratch, &mut hits);
+        et.knn_with(&Euclidean, pts.point(1), 8, &mut scratch, &mut hits);
+        hits.clear();
+        let alloc1 = allocations();
+        et.eps_query_with(&Euclidean, pts.point(1), eps, &mut scratch, &mut hits);
+        hits.clear();
+        et.knn_with(&Euclidean, pts.point(1), 8, &mut scratch, &mut hits);
+        let epoch_steady_state_allocs = allocations() - alloc1;
+        let run = MutationRun {
+            base: m_base,
+            insert_batch: batch.len(),
+            insert_s,
+            insert_allocs_per_point,
+            churn_rounds,
+            churn_s,
+            churn_ops_per_s: (2 * churn_rounds) as f64 / churn_s.max(1e-12),
+            compactions,
+            epoch_steady_state_allocs,
+        };
+        eprintln!(
+            "[perf_driver] mutation churn: {} rounds in {churn_s:.4}s \
+             ({:.0} ops/s, {compactions} compactions), \
+             {epoch_steady_state_allocs} steady-state epoch-read allocs",
+            run.churn_rounds, run.churn_ops_per_s
+        );
+        assert_eq!(
+            epoch_steady_state_allocs, 0,
+            "warmed epoch reads (base + delta + tombstones) must be allocation-free"
+        );
+        run
+    };
+
     lint_waiver_parity();
 
     let (seq_total, best) = summarize(&runs);
@@ -585,6 +722,7 @@ fn main() {
         &serve_runs,
         serve_steady_allocs,
         &chaos,
+        &mutation,
         seq_total,
         best,
     );
@@ -662,12 +800,13 @@ fn render_json(
     serve_runs: &[ServeRun],
     serve_steady_allocs: u64,
     chaos: &ChaosRun,
+    mutation: &MutationRun,
     seq_total: f64,
     best: &Run,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"bench\": \"pr7_fault_injection\",\n");
+    s.push_str("  \"bench\": \"pr9_mutable_epochs\",\n");
     s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
     s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
     s.push_str(&format!(
@@ -766,6 +905,21 @@ fn render_json(
         chaos.counters.dup_discards,
         chaos.counters.corrupt_discards,
         chaos.counters.delayed_us
+    ));
+    s.push_str(&format!(
+        "  \"mutation\": {{\"base\": {}, \"insert_batch\": {}, \"insert_s\": {:.6}, \
+         \"insert_allocs_per_point\": {:.2}, \"churn_rounds\": {}, \"churn_s\": {:.6}, \
+         \"churn_ops_per_s\": {:.1}, \"compactions\": {}, \
+         \"epoch_steady_state_allocs\": {}}},\n",
+        mutation.base,
+        mutation.insert_batch,
+        mutation.insert_s,
+        mutation.insert_allocs_per_point,
+        mutation.churn_rounds,
+        mutation.churn_s,
+        mutation.churn_ops_per_s,
+        mutation.compactions,
+        mutation.epoch_steady_state_allocs
     ));
     // Facade overhead: cover-tree facade total vs direct total at the same
     // thread count (same underlying traversals; the delta is dispatch +

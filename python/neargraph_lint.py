@@ -61,6 +61,7 @@ HOT_FILES = {
     "covertree/layout.rs",
     "covertree/scratch.rs",
     "covertree/knn.rs",
+    "covertree/epoch.rs",
     "serve/engine.rs",
 }
 HOT_PREFIXES = ("metric/",)

@@ -33,7 +33,8 @@ pub enum ConfigError {
     /// would run.
     NothingToRun,
     /// A `serve.*` key holds an unusable value (bad listen address, zero
-    /// batch cap, queue bound below the batch cap, oversized window).
+    /// batch cap, queue bound below the batch cap, oversized window,
+    /// zero delta cap, out-of-range compaction percentage).
     BadServe { key: &'static str, value: String, why: &'static str },
     /// A `run.fault_*` / `run.kill_*` key holds an unusable value (a
     /// probability outside [0, 1], lottery mass above 1, a kill rank
@@ -98,7 +99,8 @@ pub struct ExperimentConfig {
     pub run: RunConfig,
     /// Daemon settings consumed by the `serve` subcommand (config section
     /// `[serve]`, keys `addr`, `coalesce_us`, `max_batch`, `queue_cap`,
-    /// `threads`); other subcommands ignore them.
+    /// `threads`, `deadline_us`, `mutable`, `delta_cap`, `compact_pct`);
+    /// other subcommands ignore them.
     pub serve: ServeConfig,
 }
 
@@ -242,6 +244,17 @@ impl ExperimentConfig {
                     cfg.serve.deadline_us =
                         value.as_usize().ok_or("serve.deadline_us must be an integer")? as u64
                 }
+                "serve.mutable" => {
+                    cfg.serve.mutable = value.as_bool().ok_or("serve.mutable must be a boolean")?
+                }
+                "serve.delta_cap" => {
+                    cfg.serve.delta_cap =
+                        value.as_usize().ok_or("serve.delta_cap must be an integer")?
+                }
+                "serve.compact_pct" => {
+                    cfg.serve.compact_pct =
+                        value.as_usize().ok_or("serve.compact_pct must be an integer")? as u32
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -350,6 +363,20 @@ impl ExperimentConfig {
                 key: "coalesce_us",
                 value: s.coalesce_us.to_string(),
                 why: "coalescing windows above one second serve nobody; lower the window",
+            });
+        }
+        if s.delta_cap == 0 {
+            return Err(ConfigError::BadServe {
+                key: "delta_cap",
+                value: s.delta_cap.to_string(),
+                why: "the insert delta must hold at least one point before compaction",
+            });
+        }
+        if s.compact_pct < 1 || s.compact_pct > 100 {
+            return Err(ConfigError::BadServe {
+                key: "compact_pct",
+                value: s.compact_pct.to_string(),
+                why: "the tombstone threshold is a percentage of the base (1-100)",
             });
         }
         Ok(())
@@ -529,6 +556,17 @@ ghost = "all"
         assert_eq!(cfg.serve.max_batch, 64);
         assert_eq!(cfg.serve.queue_cap, 1024);
         assert_eq!(cfg.serve.threads, 4);
+        // Mutation keys parse into the same section.
+        let cfg = ExperimentConfig::from_toml(
+            "[serve]\nmutable = true\ndelta_cap = 512\ncompact_pct = 10\n",
+        )
+        .unwrap();
+        assert!(cfg.serve.mutable);
+        assert_eq!(cfg.serve.delta_cap, 512);
+        assert_eq!(cfg.serve.compact_pct, 10);
+        assert_eq!(cfg.serve.epoch_params().delta_cap, 512);
+        assert_eq!(cfg.serve.epoch_params().compact_frac, 0.10);
+        assert!(ExperimentConfig::from_toml("[serve]\nmutable = 1\n").is_err());
         // Defaults when the section is absent.
         let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
         assert_eq!(cfg.serve, crate::serve::ServeConfig::default());
@@ -637,6 +675,19 @@ ghost = "all"
             bad(&|c| c.serve.coalesce_us = 2_000_000),
             Err(ConfigError::BadServe { key: "coalesce_us", .. })
         ));
+        assert!(matches!(
+            bad(&|c| c.serve.delta_cap = 0),
+            Err(ConfigError::BadServe { key: "delta_cap", .. })
+        ));
+        for pct in [0, 101] {
+            assert!(
+                matches!(
+                    bad(&|c| c.serve.compact_pct = pct),
+                    Err(ConfigError::BadServe { key: "compact_pct", .. })
+                ),
+                "pct={pct}"
+            );
+        }
         // The defaults and an ephemeral-port override both pass.
         assert!(ExperimentConfig::default().validate_serve().is_ok());
         let mut cfg = ExperimentConfig::default();

@@ -1,0 +1,704 @@
+//! Epoch-snapshot mutation layer (DESIGN.md §13): a batch-built base tree
+//! that only changes at **compaction**, a bounded insert-tree delta, and
+//! tombstone bitsets — the structure behind the facade's mutable
+//! `insert-cover-tree` backend and the serve daemon's `--mutable` mode.
+//!
+//! The concurrency contract is *writer-publishes, readers-swap*:
+//!
+//! * **Readers** take the core read-lock for the duration of one query and
+//!   traverse the immutable [`FlatTree`](super::FlatTree) of the current
+//!   base epoch plus the (capacity-capped) delta tree, both through a
+//!   caller-owned [`QueryScratch`] — the steady-state read path performs
+//!   **zero heap allocations** (perf_driver keeps `steady_state_allocs ==
+//!   0` armed over this path).
+//! * **Writers** serialize on a dedicated mutex. Point mutations (insert
+//!   into the delta, tombstone in either layer) hold the core write-lock
+//!   only for the O(log n) marking itself. Compaction — triggered once the
+//!   delta reaches `delta_cap` points or tombstones exceed `compact_frac`
+//!   of the base — gathers the live points under a *read* lock, rebuilds a
+//!   fresh base through the batch builder ([`CoverTree::build_with_ids`])
+//!   with **no lock held**, then publishes the new epoch with one brief
+//!   write-lock swap. Readers keep answering on the previous epoch for the
+//!   whole rebuild: read throughput is independent of writer progress
+//!   (the SOLANET-style snapshot discipline, PAPERS.md).
+//!
+//! Ids are global and permanent: the build-time points get `0..n`, every
+//! insert gets the next id, and compaction *preserves* ids while dropping
+//! tombstoned points entirely — which is also why a snapshot saved through
+//! [`EpochTree::snapshot_bytes`] (compact-then-encode) carries no
+//! tombstones and round-trips through the ordinary `NGI-IDX1` codec.
+//!
+//! Conformance gate (`tests/mutation_conformance.rs`): after every prefix
+//! of a seeded insert/delete/query schedule, ε and k-NN answers are
+//! bit-equal to a brute-force rebuild over the live `(id, point)` set —
+//! across metrics, thread counts and compaction points.
+
+use super::incremental::InsertCoverTree;
+use super::knn::push_cand;
+use super::scratch::{Cand, Frontier};
+use super::snapshot::SnapshotError;
+use super::{BuildParams, CoverTree, QueryScratch};
+use crate::metric::Metric;
+use crate::points::PointSet;
+use crate::util::fmax;
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Compaction policy of an [`EpochTree`].
+#[derive(Clone, Copy, Debug)]
+pub struct EpochParams {
+    /// Compact once the delta tree holds this many points (inserts since
+    /// the last epoch). Also bounds the linear part of every query.
+    pub delta_cap: usize,
+    /// Compact once tombstones exceed this fraction of the base size.
+    pub compact_frac: f64,
+}
+
+impl Default for EpochParams {
+    fn default() -> Self {
+        EpochParams { delta_cap: 256, compact_frac: 0.25 }
+    }
+}
+
+/// One epoch of index state — everything a reader needs for one query.
+struct Core<P: PointSet> {
+    /// Monotone epoch counter, bumped by each compaction.
+    epoch: u64,
+    /// The batch-built base; immutable within an epoch. `Arc` so the
+    /// snapshot writer can encode it outside the lock.
+    base: Arc<CoverTree<P>>,
+    /// Base tombstones, by base-local point index.
+    base_dead: Vec<bool>,
+    base_dead_count: usize,
+    /// Whether `base.ids()` is ascending (always true for built or
+    /// compacted trees; a hand-crafted snapshot may disagree) — picks
+    /// binary vs. linear id lookup on delete.
+    base_sorted: bool,
+    /// Inserts since the last compaction; carries its own tombstones.
+    delta: InsertCoverTree<P>,
+    /// Global id of each delta-local point (ascending by construction).
+    delta_gids: Vec<u32>,
+    /// Next id to assign.
+    next_id: u32,
+    /// Live (non-tombstoned) points across both layers.
+    live: usize,
+}
+
+/// A mutable near-neighbor structure with epoch-snapshot reads — see the
+/// module docs for the concurrency contract. Metrics are passed per call
+/// (the crate's trees store no metric), so one `EpochTree` serves any
+/// metric its callers keep fixed.
+pub struct EpochTree<P: PointSet> {
+    build_params: BuildParams,
+    params: EpochParams,
+    /// Serializes all mutation (insert/delete/compact/save) so compaction
+    /// can rebuild outside the core lock without the world shifting.
+    writer: Mutex<()>,
+    core: RwLock<Core<P>>,
+}
+
+/// Poison-recovering lock helpers: a panicking writer leaves per-query
+/// state consistent (mutations mark-then-count under one guard), so the
+/// readers keep serving rather than cascading the panic — the same
+/// recovery idiom as the serve outbox.
+fn read_core<P: PointSet>(l: &RwLock<Core<P>>) -> RwLockReadGuard<'_, Core<P>> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn write_core<P: PointSet>(l: &RwLock<Core<P>>) -> RwLockWriteGuard<'_, Core<P>> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn lock_writer(l: &Mutex<()>) -> MutexGuard<'_, ()> {
+    match l.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn is_ascending(ids: &[u32]) -> bool {
+    ids.windows(2).all(|w| w[0] < w[1])
+}
+
+impl<P: PointSet> EpochTree<P> {
+    /// Build epoch 0 over `points` with global ids `0..n` through the
+    /// batch builder.
+    // lint: cold
+    pub fn build<M: Metric<P>>(
+        points: &P,
+        metric: &M,
+        build_params: &BuildParams,
+        params: EpochParams,
+    ) -> Self {
+        let n = points.len() as u32;
+        let ids: Vec<u32> = (0..n).collect();
+        let base = CoverTree::build_with_ids(points.clone(), ids, metric, build_params);
+        Self::from_tree(base, metric, build_params, params)
+    }
+
+    /// Wrap an already-built (e.g. snapshot-loaded) tree as epoch 0. Ids
+    /// are taken as-is; the next insert gets `max(id) + 1`.
+    // lint: cold
+    pub fn from_tree<M: Metric<P>>(
+        tree: CoverTree<P>,
+        metric: &M,
+        build_params: &BuildParams,
+        params: EpochParams,
+    ) -> Self {
+        let next_id = tree.ids().iter().copied().max().map_or(0, |m| m + 1);
+        let live = tree.num_points();
+        let base_sorted = is_ascending(tree.ids());
+        let delta = InsertCoverTree::build(&tree.points().empty_like(), metric);
+        EpochTree {
+            build_params: *build_params,
+            params,
+            writer: Mutex::new(()),
+            core: RwLock::new(Core {
+                epoch: 0,
+                base_dead: vec![false; live],
+                base_dead_count: 0,
+                base_sorted,
+                base: Arc::new(tree),
+                delta,
+                delta_gids: Vec::new(),
+                next_id,
+                live,
+            }),
+        }
+    }
+
+    /// Current epoch (compaction count since construction).
+    pub fn epoch(&self) -> u64 {
+        read_core(&self.core).epoch
+    }
+
+    /// Live (queryable) points.
+    pub fn live(&self) -> usize {
+        read_core(&self.core).live
+    }
+
+    /// Tombstoned points awaiting compaction, across base and delta.
+    pub fn tombstones(&self) -> usize {
+        let g = read_core(&self.core);
+        g.base_dead_count + g.delta.num_tombstones()
+    }
+
+    /// The id the next insert will be assigned.
+    pub fn next_id(&self) -> u32 {
+        read_core(&self.core).next_id
+    }
+
+    /// Insert every point of `batch` (same shape as the indexed points),
+    /// returning the contiguous global-id range assigned. May trigger a
+    /// compaction (after the inserts are visible to readers).
+    // lint: cold
+    pub fn insert_from<M: Metric<P>>(&self, metric: &M, batch: &P) -> std::ops::Range<u32> {
+        let _w = lock_writer(&self.writer);
+        let range = {
+            let mut g = write_core(&self.core);
+            g.delta.insert_from(metric, batch);
+            let lo = g.next_id;
+            let count = batch.len() as u32;
+            for off in 0..count {
+                let gid = lo + off;
+                g.delta_gids.push(gid);
+            }
+            g.next_id = lo + count;
+            g.live += batch.len();
+            lo..lo + count
+        };
+        self.maybe_compact(metric);
+        range
+    }
+
+    /// Tombstone global id `gid`. Returns `false` when the id was never
+    /// assigned, was already tombstoned, or was dropped by a compaction.
+    /// May trigger a compaction once the dead fraction crosses the
+    /// threshold.
+    // lint: cold
+    pub fn delete<M: Metric<P>>(&self, metric: &M, gid: u32) -> bool {
+        let _w = lock_writer(&self.writer);
+        let deleted = {
+            let mut g = write_core(&self.core);
+            let base_pos = if g.base_sorted {
+                g.base.ids().binary_search(&gid).ok()
+            } else {
+                g.base.ids().iter().position(|&x| x == gid)
+            };
+            if let Some(pos) = base_pos {
+                if g.base_dead[pos] {
+                    false
+                } else {
+                    g.base_dead[pos] = true;
+                    g.base_dead_count += 1;
+                    g.live -= 1;
+                    true
+                }
+            } else if let Ok(j) = g.delta_gids.binary_search(&gid) {
+                if g.delta.delete(j as u32) {
+                    g.live -= 1;
+                    true
+                } else {
+                    false
+                }
+            } else {
+                false
+            }
+        };
+        if deleted {
+            self.maybe_compact(metric);
+        }
+        deleted
+    }
+
+    /// Force a compaction: rebuild the base over exactly the live points
+    /// (ids preserved, tombstones dropped), clear the delta, and publish
+    /// the next epoch. Returns the new epoch number.
+    // lint: cold
+    pub fn compact<M: Metric<P>>(&self, metric: &M) -> u64 {
+        let _w = lock_writer(&self.writer);
+        self.compact_locked(metric)
+    }
+
+    /// Compact-then-encode: the saved `NGI-IDX1` snapshot holds exactly
+    /// the live points under their global ids — tombstones are elided by
+    /// construction, and the bytes load through the ordinary
+    /// [`CoverTree::try_from_snapshot_bytes`] /
+    /// [`EpochTree::from_tree`] path.
+    // lint: cold
+    pub fn snapshot_bytes<M: Metric<P>>(&self, metric: &M) -> Result<Vec<u8>, SnapshotError> {
+        let _w = lock_writer(&self.writer);
+        let dirty = {
+            let g = read_core(&self.core);
+            g.base_dead_count > 0 || g.delta.num_points() > 0
+        };
+        if dirty {
+            self.compact_locked(metric);
+        }
+        let base = {
+            let g = read_core(&self.core);
+            Arc::clone(&g.base)
+        };
+        base.to_snapshot_bytes()
+    }
+
+    // lint: cold
+    fn maybe_compact<M: Metric<P>>(&self, metric: &M) {
+        // Caller holds the writer mutex.
+        let (delta_n, dead, base_n) = {
+            let g = read_core(&self.core);
+            let dead = g.base_dead_count + g.delta.num_tombstones();
+            (g.delta.num_points(), dead, g.base.num_points())
+        };
+        let delta_full = delta_n >= self.params.delta_cap;
+        let too_dead = dead > 0 && (dead as f64) > self.params.compact_frac * (base_n as f64);
+        if delta_full || too_dead {
+            self.compact_locked(metric);
+        }
+    }
+
+    /// The compaction body; caller holds the writer mutex, which is what
+    /// licenses gathering under a read lock and rebuilding with no lock:
+    /// no other writer can move the world underneath the rebuild, and
+    /// readers keep serving the old epoch until the final swap.
+    // lint: cold
+    fn compact_locked<M: Metric<P>>(&self, metric: &M) -> u64 {
+        let (points, ids, next_epoch) = {
+            let g = read_core(&self.core);
+            let mut locals: Vec<usize> = Vec::with_capacity(g.live);
+            for i in 0..g.base.num_points() {
+                if !g.base_dead[i] {
+                    locals.push(i);
+                }
+            }
+            let mut pts = g.base.points().gather(&locals);
+            let mut ids: Vec<u32> = Vec::with_capacity(g.live);
+            for &i in &locals {
+                ids.push(g.base.ids()[i]);
+            }
+            locals.clear();
+            for j in 0..g.delta.num_points() {
+                if g.delta.is_live(j as u32) {
+                    locals.push(j);
+                }
+            }
+            pts.extend_from(&g.delta.points().gather(&locals));
+            for &j in &locals {
+                ids.push(g.delta_gids[j]);
+            }
+            (pts, ids, g.epoch + 1)
+        };
+        let tree = CoverTree::build_with_ids(points, ids, metric, &self.build_params);
+        let fresh_delta = InsertCoverTree::build(&tree.points().empty_like(), metric);
+        let n_live = tree.num_points();
+        let base_sorted = is_ascending(tree.ids());
+        let mut g = write_core(&self.core);
+        debug_assert_eq!(n_live, g.live, "compaction must keep exactly the live points");
+        g.base = Arc::new(tree);
+        g.base_dead.clear();
+        g.base_dead.resize(n_live, false);
+        g.base_dead_count = 0;
+        g.base_sorted = base_sorted;
+        g.delta = fresh_delta;
+        g.delta_gids.clear();
+        g.epoch = next_epoch;
+        g.epoch
+    }
+
+    /// ε-query over the live points: base traversal with tombstoned
+    /// points skipped at emission, then the delta tree (which skips its
+    /// own tombstones), with delta-local ids mapped to global ids in
+    /// place. Appends `(global_id, distance)` pairs; allocation-free once
+    /// `scratch` and `out` are warm.
+    pub fn eps_query_with<M: Metric<P>>(
+        &self,
+        metric: &M,
+        query: P::Point<'_>,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        let g = read_core(&self.core);
+        if !g.base.is_empty() {
+            let flat = g.base.flat();
+            let stack = &mut scratch.stack;
+            stack.clear();
+            let root = flat.root();
+            let root_pt = flat.point(root);
+            let d = metric.dist(query, g.base.points().point(root_pt as usize));
+            if flat.is_leaf(root) {
+                if d <= eps && !g.base_dead[root_pt as usize] {
+                    out.push((g.base.ids()[root_pt as usize], d));
+                }
+            } else {
+                if d <= flat.radius(root) + eps {
+                    stack.push((root, d));
+                }
+                while let Some((u, du)) = stack.pop() {
+                    let un_point = flat.point(u);
+                    for v in flat.children(u) {
+                        let vp = flat.point(v);
+                        // Nesting reuse: the child sharing the parent's
+                        // point is at the same distance.
+                        let dv = if vp == un_point {
+                            du
+                        } else {
+                            metric.dist(query, g.base.points().point(vp as usize))
+                        };
+                        if flat.is_leaf(v) {
+                            if dv <= eps && !g.base_dead[vp as usize] {
+                                out.push((g.base.ids()[vp as usize], dv));
+                            }
+                        } else if dv <= flat.radius(v) + eps {
+                            stack.push((v, dv));
+                        }
+                    }
+                }
+            }
+        }
+        let before = out.len();
+        g.delta.query_weighted_with(metric, query, eps, scratch, out);
+        for pair in out[before..].iter_mut() {
+            pair.0 = g.delta_gids[pair.0 as usize];
+        }
+    }
+
+    /// Tie-exact k-NN over the live points: a tombstone-aware mirror of
+    /// [`CoverTree::knn_within_with`]'s best-first traversal (dead leaves
+    /// never enter the candidate heap, so they cannot evict live
+    /// candidates), then the bounded delta folded into the same heap.
+    /// `out` is cleared and filled ascending by `(distance, id)` — the
+    /// same total order as every other k-NN path, so a brute-force
+    /// rebuild reproduces it bit for bit.
+    pub fn knn_with<M: Metric<P>>(
+        &self,
+        metric: &M,
+        query: P::Point<'_>,
+        k: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
+        if k == 0 {
+            return;
+        }
+        let g = read_core(&self.core);
+        let QueryScratch { best, frontier, .. } = scratch;
+        best.clear();
+        frontier.clear();
+        if !g.base.is_empty() {
+            let flat = g.base.flat();
+            let root = flat.root();
+            let d = metric.dist(query, g.base.points().point(flat.point(root) as usize));
+            let bound = fmax(d - flat.radius(root), 0.0);
+            frontier.push(Frontier { bound, node: root, dist: d });
+            while let Some(Frontier { bound, node, dist }) = frontier.pop() {
+                if best.len() == k {
+                    if let Some(top) = best.peek() {
+                        if bound > top.dist {
+                            break;
+                        }
+                    }
+                }
+                if flat.is_leaf(node) {
+                    let lp = flat.point(node) as usize;
+                    if !g.base_dead[lp] {
+                        push_cand(best, k, Cand { dist, gid: g.base.ids()[lp] });
+                    }
+                    continue;
+                }
+                let un_point = flat.point(node);
+                for c in flat.children(node) {
+                    let cp = flat.point(c);
+                    let dc = if cp == un_point {
+                        dist
+                    } else {
+                        metric.dist(query, g.base.points().point(cp as usize))
+                    };
+                    let cb = fmax(dc - flat.radius(c), 0.0);
+                    let admit =
+                        best.len() < k || matches!(best.peek(), Some(top) if cb <= top.dist);
+                    if admit {
+                        frontier.push(Frontier { bound: cb, node: c, dist: dc });
+                    }
+                }
+            }
+        }
+        // The delta holds at most `delta_cap` points: a live linear scan
+        // through the same k-bounded admission keeps the merged result
+        // tie-exact without a second traversal structure.
+        for j in 0..g.delta.num_points() {
+            if !g.delta.is_live(j as u32) {
+                continue;
+            }
+            let dj = metric.dist(query, g.delta.points().point(j));
+            push_cand(best, k, Cand { dist: dj, gid: g.delta_gids[j] });
+        }
+        while let Some(c) = best.pop() {
+            out.push((c.gid, c.dist));
+        }
+        out.reverse();
+        out.truncate(k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::{Euclidean, Hamming};
+    use crate::points::DenseMatrix;
+    use crate::util::Rng;
+
+    fn brute_eps(
+        live: &[(u32, Vec<f32>)],
+        q: &[f32],
+        eps: f64,
+    ) -> Vec<(u32, f64)> {
+        let mut out: Vec<(u32, f64)> = live
+            .iter()
+            .map(|(gid, p)| (*gid, crate::metric::Metric::dist(&Euclidean, q, &p[..])))
+            .filter(|&(_, d)| d <= eps)
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    fn brute_knn(live: &[(u32, Vec<f32>)], q: &[f32], k: usize) -> Vec<(u32, f64)> {
+        let mut all: Vec<(u32, f64)> = live
+            .iter()
+            .map(|(gid, p)| (*gid, crate::metric::Metric::dist(&Euclidean, q, &p[..])))
+            .collect();
+        all.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        all.truncate(k);
+        all
+    }
+
+    fn eps_sorted(t: &EpochTree<DenseMatrix>, q: &[f32], eps: f64) -> Vec<(u32, f64)> {
+        let mut scratch = QueryScratch::new();
+        let mut out = Vec::new();
+        t.eps_query_with(&Euclidean, q, eps, &mut scratch, &mut out);
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    #[test]
+    fn mutations_track_brute_force_through_compactions() {
+        let mut rng = Rng::new(900);
+        let all = crate::data::synthetic::gaussian_mixture(&mut rng, 400, 4, 4, 0.25);
+        let seed = all.slice(0, 120);
+        let params = EpochParams { delta_cap: 16, compact_frac: 0.2 };
+        let t = EpochTree::build(&seed, &Euclidean, &BuildParams { leaf_size: 4, root: 0 }, params);
+        let mut live: Vec<(u32, Vec<f32>)> =
+            (0..120).map(|i| (i as u32, seed.row(i).to_vec())).collect();
+        let mut next = 120usize;
+        let mut scratch = QueryScratch::new();
+        let mut out = Vec::new();
+        for step in 0..200 {
+            let coin = rng.next_u64() % 10;
+            if coin < 4 && next < all.len() {
+                // Insert one point from the reserve.
+                let batch = all.slice(next, next + 1);
+                let r = t.insert_from(&Euclidean, &batch);
+                live.push((r.start, all.row(next).to_vec()));
+                next += 1;
+            } else if coin < 7 && !live.is_empty() {
+                let victim = live[(rng.next_u64() as usize) % live.len()].0;
+                assert!(t.delete(&Euclidean, victim), "live id must delete");
+                live.retain(|&(gid, _)| gid != victim);
+                assert!(!t.delete(&Euclidean, victim), "second delete must be false");
+            } else if coin == 7 {
+                t.compact(&Euclidean);
+            }
+            assert_eq!(t.live(), live.len(), "step {step}");
+            // Every prefix bit-equal to brute force over the live set.
+            let q = all.row((step * 7) % all.len());
+            for eps in [0.15, 0.6] {
+                let want = brute_eps(&live, q, eps);
+                assert_eq!(eps_sorted(&t, q, eps), want, "step {step} eps {eps}");
+            }
+            t.knn_with(&Euclidean, q, 5, &mut scratch, &mut out);
+            assert_eq!(out, brute_knn(&live, q, 5), "step {step} knn");
+        }
+        assert!(t.epoch() > 0, "the schedule must have compacted at least once");
+    }
+
+    #[test]
+    fn delete_of_unknown_or_compacted_ids_is_false() {
+        let pts = crate::data::synthetic::uniform(&mut Rng::new(901), 40, 3, 1.0);
+        let t = EpochTree::build(
+            &pts,
+            &Euclidean,
+            &BuildParams::default(),
+            EpochParams::default(),
+        );
+        assert!(!t.delete(&Euclidean, 40), "never-assigned id");
+        assert!(t.delete(&Euclidean, 7));
+        t.compact(&Euclidean);
+        assert!(!t.delete(&Euclidean, 7), "compacted-away id");
+        assert_eq!(t.live(), 39);
+        assert_eq!(t.tombstones(), 0);
+    }
+
+    #[test]
+    fn snapshot_elides_tombstones_and_roundtrips() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(902), 90, 3, 3, 0.3);
+        let params = EpochParams { delta_cap: 64, compact_frac: 0.9 };
+        let bp = BuildParams { leaf_size: 4, root: 0 };
+        let t = EpochTree::build(&pts, &Euclidean, &bp, params);
+        for gid in [3u32, 4, 5, 50] {
+            assert!(t.delete(&Euclidean, gid));
+        }
+        let extra = pts.slice(0, 5);
+        let r = t.insert_from(&Euclidean, &extra);
+        assert_eq!(r, 90..95);
+        let bytes = t.snapshot_bytes(&Euclidean).expect("dense encodes");
+        let back = CoverTree::<DenseMatrix>::try_from_snapshot_bytes(&bytes).expect("decodes");
+        assert_eq!(back.num_points(), 90 - 4 + 5, "tombstones elided, inserts kept");
+        assert!(!back.ids().contains(&3), "dead ids dropped from the snapshot");
+        assert!(back.ids().contains(&94));
+        // Reload as a mutable tree: ids and answers carry over, and the
+        // next insert continues past the highest surviving id.
+        let t2 = EpochTree::from_tree(back, &Euclidean, &bp, params);
+        assert_eq!(t2.next_id(), 95);
+        assert_eq!(t2.live(), 91);
+        let q = pts.row(10);
+        assert_eq!(eps_sorted(&t2, q, 0.5), eps_sorted(&t, q, 0.5));
+    }
+
+    #[test]
+    fn hamming_epoch_tree_matches_brute_force() {
+        let codes = crate::data::synthetic::hamming_clusters(&mut Rng::new(903), 100, 64, 3, 0.1);
+        let t = EpochTree::build(
+            &codes,
+            &Hamming,
+            &BuildParams { leaf_size: 4, root: 0 },
+            EpochParams { delta_cap: 8, compact_frac: 0.25 },
+        );
+        for gid in 0..30u32 {
+            assert!(t.delete(&Hamming, gid * 3));
+        }
+        let extra = codes.slice(0, 10);
+        t.insert_from(&Hamming, &extra);
+        let mut scratch = QueryScratch::new();
+        let mut out = Vec::new();
+        for qi in [0usize, 13, 99] {
+            out.clear();
+            t.eps_query_with(&Hamming, codes.code(qi), 12.0, &mut scratch, &mut out);
+            out.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut want = Vec::new();
+            for i in 0..codes.len() as u32 {
+                if i < 90 && i % 3 == 0 && i / 3 < 30 {
+                    continue; // deleted
+                }
+                let d = Metric::dist(&Hamming, codes.code(qi), codes.code(i as usize));
+                if d <= 12.0 {
+                    want.push((i, d));
+                }
+            }
+            for (j, i) in (0..10u32).enumerate() {
+                let d =
+                    crate::metric::Metric::dist(&Hamming, codes.code(qi), codes.code(i as usize));
+                if d <= 12.0 {
+                    want.push((100 + j as u32, d));
+                }
+            }
+            want.sort_by(|a, b| a.0.cmp(&b.0));
+            assert_eq!(out, want, "qi={qi}");
+        }
+    }
+
+    #[test]
+    fn readers_keep_answering_while_a_writer_churns() {
+        // Read-while-write smoke: reader threads hammer queries while one
+        // writer inserts/deletes through several compactions; every read
+        // must come back internally consistent (no panic, every reported
+        // distance is within eps).
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(904), 300, 4, 4, 0.2);
+        let t = EpochTree::build(
+            &pts,
+            &Euclidean,
+            &BuildParams { leaf_size: 4, root: 0 },
+            EpochParams { delta_cap: 8, compact_frac: 0.1 },
+        );
+        std::thread::scope(|s| {
+            for r in 0..3usize {
+                let t = &t;
+                let pts = &pts;
+                s.spawn(move || {
+                    let mut scratch = QueryScratch::new();
+                    let mut out = Vec::new();
+                    for i in 0..400usize {
+                        let q = pts.row((i * (r + 2)) % pts.len());
+                        out.clear();
+                        t.eps_query_with(&Euclidean, q, 0.4, &mut scratch, &mut out);
+                        for &(_, d) in &out {
+                            assert!(d <= 0.4);
+                        }
+                        t.knn_with(&Euclidean, q, 3, &mut scratch, &mut out);
+                        assert!(out.len() <= 3);
+                    }
+                });
+            }
+            let writer = &t;
+            let pts = &pts;
+            s.spawn(move || {
+                let mut rng = Rng::new(905);
+                for i in 0..150usize {
+                    if i % 3 == 0 {
+                        let j = (rng.next_u64() as usize) % pts.len();
+                        writer.insert_from(&Euclidean, &pts.slice(j, j + 1));
+                    } else {
+                        let gid = (rng.next_u64() % writer.next_id() as u64) as u32;
+                        writer.delete(&Euclidean, gid);
+                    }
+                }
+            });
+        });
+        assert!(t.epoch() > 0);
+    }
+}

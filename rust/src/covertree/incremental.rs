@@ -10,6 +10,16 @@
 //! not the tighter triple radii of the batch tree, so its queries prune
 //! less — one of the two effects the paper's design exploits (the other
 //! being cache-friendly level-by-level partitioning).
+//!
+//! Since PR 9 the tree is also the crate's *mutable* structure
+//! (DESIGN.md §13): points can be appended after build
+//! ([`InsertCoverTree::insert_from`]) and removed by **tombstone**
+//! ([`InsertCoverTree::delete`]) — a deleted point keeps its node, so the
+//! covering invariants (and every other point's reachability) are
+//! untouched, and the query paths simply skip tombstoned points at
+//! emission. Reclaiming tombstones is the job of the epoch layer
+//! ([`super::epoch`]), which rebuilds through the batch builder once the
+//! dead fraction crosses a threshold.
 
 use super::QueryScratch;
 use crate::metric::Metric;
@@ -23,18 +33,28 @@ struct INode {
     children: Vec<u32>,
 }
 
-/// Cover tree built by consecutive single-point insertions.
+/// Cover tree built by consecutive single-point insertions, with
+/// tombstone deletion (PR 9).
 pub struct InsertCoverTree<P: PointSet> {
     points: P,
     nodes: Vec<INode>,
     root: Option<u32>,
+    /// Tombstones, indexed by point id: a dead point keeps its node (the
+    /// covering structure stays intact) but is skipped at query emission.
+    dead: Vec<bool>,
+    dead_count: usize,
 }
 
 impl<P: PointSet> InsertCoverTree<P> {
     /// Build by inserting `points` one at a time, in order.
     pub fn build<M: Metric<P>>(points: &P, metric: &M) -> Self {
-        let mut t =
-            InsertCoverTree { points: points.clone(), nodes: Vec::new(), root: None };
+        let mut t = InsertCoverTree {
+            points: points.clone(),
+            nodes: Vec::new(),
+            root: None,
+            dead: vec![false; points.len()],
+            dead_count: 0,
+        };
         for i in 0..points.len() {
             t.insert(metric, i as u32);
         }
@@ -49,9 +69,54 @@ impl<P: PointSet> InsertCoverTree<P> {
         self.nodes.len()
     }
 
-    /// The owned point set (insertion order; point index == id).
+    /// Points that are not tombstoned.
+    pub fn num_live(&self) -> usize {
+        self.points.len() - self.dead_count
+    }
+
+    /// Tombstoned points (nodes still present in the covering structure).
+    pub fn num_tombstones(&self) -> usize {
+        self.dead_count
+    }
+
+    /// Whether point `id` exists and is not tombstoned.
+    pub fn is_live(&self, id: u32) -> bool {
+        (id as usize) < self.points.len() && !self.dead[id as usize]
+    }
+
+    /// The owned point set (insertion order; point index == id). Includes
+    /// tombstoned points — liveness is [`InsertCoverTree::is_live`].
     pub fn points(&self) -> &P {
         &self.points
+    }
+
+    /// Append every point of `batch` (same shape) and insert each into
+    /// the covering structure, in order. Returns the id range assigned —
+    /// ids are insertion positions, continuing past the build-time set.
+    pub fn insert_from<M: Metric<P>>(&mut self, metric: &M, batch: &P) -> std::ops::Range<u32> {
+        let lo = self.points.len() as u32;
+        self.points.extend_from(batch);
+        self.dead.resize(self.points.len(), false);
+        let hi = self.points.len() as u32;
+        for i in lo..hi {
+            self.insert(metric, i);
+        }
+        lo..hi
+    }
+
+    /// Tombstone point `id`: it stops being reported by queries but its
+    /// node stays, so the covering invariants over the remaining points
+    /// are untouched. Returns `false` if `id` is out of range or already
+    /// tombstoned.
+    pub fn delete(&mut self, id: u32) -> bool {
+        match self.dead.get_mut(id as usize) {
+            Some(d) if !*d => {
+                *d = true;
+                self.dead_count += 1;
+                true
+            }
+            _ => false,
+        }
     }
 
     fn push_node(&mut self, point: u32, level: i32) -> u32 {
@@ -94,7 +159,15 @@ impl<P: PointSet> InsertCoverTree<P> {
                 if dq <= bound {
                     next.push((q, dq));
                 }
-                for &c in self.nodes[q as usize].children.clone().iter() {
+                // Iterate the child list by index: the only mutation inside
+                // the loop (the duplicate-attach push) returns immediately,
+                // so the indices stay valid and no per-expansion clone of
+                // the children Vec is needed (the PR 9 allocation fix —
+                // the old `children.clone()` allocated on every cover-set
+                // expansion of every insert).
+                let child_count = self.nodes[q as usize].children.len();
+                for ci in 0..child_count {
+                    let c = self.nodes[q as usize].children[ci];
                     let cn = &self.nodes[c as usize];
                     if cn.level != level - 1 {
                         continue;
@@ -166,7 +239,7 @@ impl<P: PointSet> InsertCoverTree<P> {
         while let Some(u) = stack.pop() {
             let n = &self.nodes[u as usize];
             let d = metric.dist(q, self.points.point(n.point as usize));
-            if d <= eps {
+            if d <= eps && !self.dead[n.point as usize] {
                 out.push((n.point, d));
             }
             // Descendants of a level-l node lie within 2^l + 2^{l-1} + …
@@ -184,8 +257,10 @@ impl<P: PointSet> InsertCoverTree<P> {
         out.extend(weighted.into_iter().map(|(i, _)| i));
     }
 
-    /// Structural sanity: every point appears exactly once; children obey
-    /// the 2^level covering bound relative to their parent.
+    /// Structural sanity: every point — tombstoned or not — appears
+    /// exactly once; children obey the 2^level covering bound relative to
+    /// their parent. Tombstones are emission-only state, so the covering
+    /// checks run over the full structure.
     pub fn check_invariants<M: Metric<P>>(&self, metric: &M) {
         let Some(root) = self.root else {
             assert_eq!(self.points.len(), 0);
@@ -303,6 +378,69 @@ mod tests {
             cb.count(),
             ci.count()
         );
+    }
+
+    #[test]
+    fn tombstone_delete_excludes_from_queries_but_keeps_structure() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(164), 150, 3, 3, 0.3);
+        let mut t = InsertCoverTree::build(&pts, &Euclidean);
+        // Tombstone every third point.
+        let mut gone = Vec::new();
+        for id in (0..pts.len() as u32).step_by(3) {
+            assert!(t.delete(id));
+            gone.push(id);
+        }
+        assert!(!t.delete(gone[0]), "double delete must report false");
+        assert!(!t.delete(pts.len() as u32), "out-of-range delete must report false");
+        assert_eq!(t.num_tombstones(), gone.len());
+        assert_eq!(t.num_live(), pts.len() - gone.len());
+        // Structure (including dead nodes) still satisfies the covering
+        // invariants; queries report exactly the live brute-force set.
+        t.check_invariants(&Euclidean);
+        for eps in [0.1, 0.5, 2.0] {
+            for qi in 0..10 {
+                let mut got = Vec::new();
+                t.query(&Euclidean, pts.row(qi), eps, &mut got);
+                got.sort_unstable();
+                let want: Vec<u32> = brute(&pts, &Euclidean, pts.row(qi), eps)
+                    .into_iter()
+                    .filter(|id| !gone.contains(id))
+                    .collect();
+                assert_eq!(got, want, "eps={eps} qi={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn insert_from_appends_and_queries_match_brute_force() {
+        let mut rng = Rng::new(165);
+        let all = crate::data::synthetic::gaussian_mixture(&mut rng, 180, 4, 4, 0.25);
+        let seed = all.slice(0, 100);
+        let extra = all.slice(100, 180);
+        let mut t = InsertCoverTree::build(&seed, &Euclidean);
+        let assigned = t.insert_from(&Euclidean, &extra);
+        assert_eq!(assigned, 100..180);
+        assert_eq!(t.num_points(), 180);
+        t.check_invariants(&Euclidean);
+        // Ids continue past the seed set, so the tree over seed + extra
+        // answers exactly like a build over the concatenation.
+        for eps in [0.1, 0.4] {
+            for qi in 0..12 {
+                let mut got = Vec::new();
+                t.query(&Euclidean, all.row(qi), eps, &mut got);
+                got.sort_unstable();
+                assert_eq!(got, brute(&all, &Euclidean, all.row(qi), eps), "eps={eps} qi={qi}");
+            }
+        }
+        // Interleave: delete a few originals, insert their twins again.
+        assert!(t.delete(5) && t.delete(6));
+        let twins = all.slice(5, 7);
+        let again = t.insert_from(&Euclidean, &twins);
+        assert_eq!(again, 180..182);
+        t.check_invariants(&Euclidean);
+        let mut got = Vec::new();
+        t.query(&Euclidean, all.row(5), 0.0, &mut got);
+        assert!(got.contains(&180) && !got.contains(&5));
     }
 
     #[test]

@@ -161,7 +161,9 @@ impl<P: PointSet> CoverTree<P> {
     }
 }
 
-fn push_cand(best: &mut BinaryHeap<Cand>, k: usize, c: Cand) {
+/// k-bounded heap admission under the `(distance, id)` total order —
+/// shared with the tombstone-aware epoch traversals ([`super::epoch`]).
+pub(crate) fn push_cand(best: &mut BinaryHeap<Cand>, k: usize, c: Cand) {
     if best.len() < k {
         best.push(c);
     } else if let Some(top) = best.peek() {

@@ -25,6 +25,7 @@
 
 mod build;
 mod dualtree;
+mod epoch;
 mod incremental;
 mod invariants;
 mod knn;
@@ -34,6 +35,7 @@ mod scratch;
 mod snapshot;
 
 pub use build::BuildParams;
+pub use epoch::{EpochParams, EpochTree};
 pub use incremental::InsertCoverTree;
 pub use invariants::check_invariants;
 pub use layout::FlatTree;

@@ -14,7 +14,7 @@
 //! |--------------------|----------------------------------------|-------|
 //! | `BruteForce`       | linear scan (the trait's default impls)| any metric |
 //! | `CoverTree`        | batch cover tree (Algorithms 1–3)      | any metric |
-//! | `InsertCoverTree`  | BKL-2006 insertion cover tree          | any metric |
+//! | `InsertCoverTree`  | mutable epoch tree (batch base + BKL-2006 insert delta) | any metric |
 //! | `Snn`              | sort-based SNN (Chen & Güttel 2024)    | dense × Euclidean only |
 //!
 //! Contracts every backend upholds (enforced by
@@ -35,7 +35,7 @@
 //! one-file plug-in — gets deterministic parallel batching for free.
 
 use crate::baseline::{Snn, SnnParams};
-use crate::covertree::{BuildParams, CoverTree, InsertCoverTree, QueryScratch};
+use crate::covertree::{BuildParams, CoverTree, EpochParams, EpochTree, QueryScratch};
 use crate::graph::{GraphSink, KnnGraph, NearGraph, WeightedEdgeList};
 use crate::metric::{Euclidean, Metric};
 use crate::points::{DenseMatrix, PointSet};
@@ -91,11 +91,14 @@ pub struct IndexParams {
     pub leaf_size: usize,
     /// SNN power-iteration parameters.
     pub snn: SnnParams,
+    /// Compaction policy of the mutable backend
+    /// ([`IndexKind::InsertCoverTree`]; the others ignore it).
+    pub epoch: EpochParams,
 }
 
 impl Default for IndexParams {
     fn default() -> Self {
-        IndexParams { leaf_size: 8, snn: SnnParams::default() }
+        IndexParams { leaf_size: 8, snn: SnnParams::default(), epoch: EpochParams::default() }
     }
 }
 
@@ -319,6 +322,14 @@ pub trait NearIndex<P: PointSet, M: Metric<P>>: Send + Sync {
         parts.into_iter().flatten().collect()
     }
 
+    /// The mutation interface, when this backend supports in-place
+    /// insert/delete/compact ([`MutableOps`]). `None` — the default — means
+    /// the index is immutable once built; the serve daemon maps that to a
+    /// `read-only` protocol error instead of a panic.
+    fn mutable(&self) -> Option<&dyn MutableOps<P>> {
+        None
+    }
+
     /// The exact directed k-NN graph of the indexed points: row `i` holds
     /// the `min(k, n − 1)` nearest *other* points of `i`, ascending by
     /// `(distance, id)` — the single-node counterpart of
@@ -342,6 +353,43 @@ pub trait NearIndex<P: PointSet, M: Metric<P>>: Send + Sync {
             .collect();
         KnnGraph::from_rows(n, k, rows)
     }
+}
+
+/// In-place mutation of a built index (PR 9, DESIGN.md §13). Ids are
+/// global and permanent: the build-time points own `0..n`, every insert
+/// gets the next id, and a delete retires its id forever — queries after
+/// any prefix of mutations are bit-equal to a brute-force rebuild over
+/// the live `(id, point)` set (`tests/mutation_conformance.rs`).
+///
+/// All methods take `&self`: the backend serializes writers internally and
+/// readers never block on a rebuild (the epoch-snapshot scheme of
+/// [`EpochTree`]).
+pub trait MutableOps<P: PointSet>: Send + Sync {
+    /// Insert every point of `batch` (same shape as the indexed points);
+    /// returns the contiguous id range assigned.
+    fn insert(&self, batch: &P) -> std::ops::Range<u32>;
+
+    /// Tombstone one id. `false` when the id was never assigned or is
+    /// already gone.
+    fn delete(&self, id: u32) -> bool;
+
+    /// Force a compaction (rebuild over the live points, dropping
+    /// tombstones); returns the new epoch number.
+    fn compact(&self) -> u64;
+
+    /// Compactions since build (0 until the first).
+    fn epoch(&self) -> u64;
+
+    /// Live (queryable) points.
+    fn live(&self) -> usize;
+
+    /// Tombstoned points awaiting compaction.
+    fn tombstones(&self) -> usize;
+
+    /// Compact, then encode the live points as an `NGI-IDX1` snapshot —
+    /// the saved bytes carry no tombstones and reload through the same
+    /// checksummed path as an immutable index.
+    fn snapshot_bytes(&self) -> Result<Vec<u8>, crate::covertree::SnapshotError>;
 }
 
 /// The ε-graph of an index's points: pooled weighted self-join,
@@ -538,13 +586,83 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for CoverTreeIndex<P, M> {
     }
 }
 
-/// Insertion-built cover tree behind the facade. Only the single-point
-/// query is overridden — batching, the self-join and the pooled variants
-/// all come from the trait's defaults, which closes its historical parity
-/// gap with [`CoverTree`] without new traversal code.
+/// The mutable backend: an [`EpochTree`] — batch-built base snapshots, an
+/// insertion-tree delta ([`crate::covertree::InsertCoverTree`]), tombstone deletes and
+/// epoch-publishing compaction (PR 9, DESIGN.md §13). The only facade
+/// backend whose [`NearIndex::mutable`] is `Some`.
+///
+/// [`NearIndex::points`] reports the *build-time* point set (identity
+/// ids), which is also what batch defaults and the serve daemon's shape
+/// checks consult; the live set — build-time points minus deletes plus
+/// inserts — lives inside the epoch tree and is what every query answers
+/// over ([`NearIndex::num_points`] counts it).
 pub struct InsertCoverTreeIndex<P: PointSet, M: Metric<P>> {
-    tree: InsertCoverTree<P>,
+    seed: P,
+    epoch: EpochTree<P>,
     metric: M,
+}
+
+impl<P: PointSet, M: Metric<P>> InsertCoverTreeIndex<P, M> {
+    /// Build epoch 0 over `pts` with identity ids.
+    pub fn build(pts: &P, metric: M, params: &IndexParams) -> Self {
+        let build = BuildParams { leaf_size: params.leaf_size.max(1), root: 0 };
+        let epoch = EpochTree::build(pts, &metric, &build, params.epoch);
+        InsertCoverTreeIndex { seed: pts.clone(), epoch, metric }
+    }
+
+    /// Wrap an already-built tree (the snapshot load path). Ids carry
+    /// over; the next insert continues past the highest surviving id.
+    pub fn from_tree(tree: CoverTree<P>, metric: M, params: &IndexParams) -> Self {
+        let build = BuildParams { leaf_size: params.leaf_size.max(1), root: 0 };
+        let seed = tree.points().clone();
+        let epoch = EpochTree::from_tree(tree, &metric, &build, params.epoch);
+        InsertCoverTreeIndex { seed, epoch, metric }
+    }
+
+    /// Load an `NGI-IDX1` snapshot into a serving-ready *mutable* index —
+    /// same checksummed format as [`CoverTreeIndex::from_snapshot_bytes`].
+    pub fn from_snapshot_bytes(
+        bytes: &[u8],
+        metric: M,
+        params: &IndexParams,
+    ) -> Result<Self, crate::points::WireError> {
+        Ok(Self::from_tree(CoverTree::try_from_snapshot_bytes(bytes)?, metric, params))
+    }
+
+    /// The epoch tree itself (tests and direct-path benches).
+    pub fn epoch_tree(&self) -> &EpochTree<P> {
+        &self.epoch
+    }
+}
+
+impl<P: PointSet, M: Metric<P>> MutableOps<P> for InsertCoverTreeIndex<P, M> {
+    fn insert(&self, batch: &P) -> std::ops::Range<u32> {
+        self.epoch.insert_from(&self.metric, batch)
+    }
+
+    fn delete(&self, id: u32) -> bool {
+        self.epoch.delete(&self.metric, id)
+    }
+
+    fn compact(&self) -> u64 {
+        self.epoch.compact(&self.metric)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch.epoch()
+    }
+
+    fn live(&self) -> usize {
+        self.epoch.live()
+    }
+
+    fn tombstones(&self) -> usize {
+        self.epoch.tombstones()
+    }
+
+    fn snapshot_bytes(&self) -> Result<Vec<u8>, crate::covertree::SnapshotError> {
+        self.epoch.snapshot_bytes(&self.metric)
+    }
 }
 
 impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for InsertCoverTreeIndex<P, M> {
@@ -553,15 +671,24 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for InsertCoverTreeIndex<P, M> {
     }
 
     fn points(&self) -> &P {
-        self.tree.points()
+        &self.seed
     }
 
     fn metric(&self) -> &M {
         &self.metric
     }
 
+    fn num_points(&self) -> usize {
+        self.epoch.live()
+    }
+
+    fn mutable(&self) -> Option<&dyn MutableOps<P>> {
+        Some(self)
+    }
+
     fn eps_query(&self, query: P::Point<'_>, eps: f64, out: &mut Vec<(u32, f64)>) {
-        self.tree.query_weighted(&self.metric, query, eps, out);
+        let mut scratch = QueryScratch::new();
+        self.epoch.eps_query_with(&self.metric, query, eps, &mut scratch, out);
     }
 
     fn eps_query_with(
@@ -571,7 +698,24 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for InsertCoverTreeIndex<P, M> {
         scratch: &mut QueryScratch,
         out: &mut Vec<(u32, f64)>,
     ) {
-        self.tree.query_weighted_with(&self.metric, query, eps, scratch, out);
+        self.epoch.eps_query_with(&self.metric, query, eps, scratch, out);
+    }
+
+    fn knn(&self, query: P::Point<'_>, k: usize) -> Vec<(u32, f64)> {
+        let mut scratch = QueryScratch::new();
+        let mut out = Vec::new();
+        self.epoch.knn_with(&self.metric, query, k, &mut scratch, &mut out);
+        out
+    }
+
+    fn knn_with(
+        &self,
+        query: P::Point<'_>,
+        k: usize,
+        scratch: &mut QueryScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        self.epoch.knn_with(&self.metric, query, k, scratch, out);
     }
 }
 
@@ -650,8 +794,7 @@ fn build_impl<P: PointSet, M: Metric<P>>(
             Ok(Box::new(CoverTreeIndex { tree, metric }))
         }
         IndexKind::InsertCoverTree => {
-            let tree = InsertCoverTree::build(pts, &metric);
-            Ok(Box::new(InsertCoverTreeIndex { tree, metric }))
+            Ok(Box::new(InsertCoverTreeIndex::build(pts, metric, params)))
         }
         IndexKind::Snn => {
             // SNN needs dense rows and Euclidean geometry; everything else
@@ -864,6 +1007,59 @@ mod tests {
             .unwrap();
         let g = idx.knn_graph(99, &Pool::new(2));
         assert_eq!(g.num_arcs(), 5 * 4);
+    }
+
+    #[test]
+    fn only_the_insert_backend_is_mutable() {
+        let mut rng = Rng::new(809);
+        let pts = synthetic::gaussian_mixture(&mut rng, 80, 3, 3, 0.2);
+        for kind in IndexKind::ALL {
+            let idx = build_index(kind, &pts, Euclidean, &IndexParams::default()).unwrap();
+            assert_eq!(
+                idx.mutable().is_some(),
+                kind == IndexKind::InsertCoverTree,
+                "{}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn facade_mutations_flow_through_queries_and_snapshots() {
+        let mut rng = Rng::new(810);
+        let all = synthetic::gaussian_mixture(&mut rng, 120, 4, 3, 0.2);
+        let seed = all.slice(0, 100);
+        let idx =
+            build_index(IndexKind::InsertCoverTree, &seed, Euclidean, &IndexParams::default())
+                .unwrap();
+        let m = idx.mutable().expect("insert backend is mutable");
+        assert_eq!(m.insert(&all.slice(100, 120)), 100..120);
+        assert!(m.delete(17));
+        assert!(!m.delete(17), "double delete");
+        assert_eq!(m.live(), 119);
+        assert_eq!(idx.num_points(), 119);
+        assert_eq!(m.tombstones(), 1);
+        // Queries see the mutated live set, with and without a scratch.
+        let mut out = Vec::new();
+        idx.eps_query(all.row(17), 0.0, &mut out);
+        assert!(out.iter().all(|&(gid, _)| gid != 17));
+        let knn = idx.knn(all.row(110), 3);
+        assert_eq!(knn.len(), 3);
+        assert!(knn.iter().any(|&(gid, d)| gid == 110 && d == 0.0));
+        // Snapshot: compacts (tombstones elided), reloads mutable, and the
+        // reloaded index answers identically.
+        let bytes = m.snapshot_bytes().expect("dense snapshot");
+        assert_eq!(m.tombstones(), 0, "save compacts first");
+        let back = InsertCoverTreeIndex::from_snapshot_bytes(
+            &bytes,
+            Euclidean,
+            &IndexParams::default(),
+        )
+        .expect("snapshot reloads");
+        assert_eq!(back.num_points(), 119);
+        assert_eq!(back.knn(all.row(110), 3), knn);
+        let bm = NearIndex::mutable(&back).expect("reload stays mutable");
+        assert_eq!(bm.insert(&all.slice(0, 1)), 120..121);
     }
 
     #[test]

@@ -96,7 +96,7 @@ pub mod prelude {
         Algorithm, AssignStrategy, CenterStrategy, GhostMode, KnnResult, RunConfig, RunResult,
     };
     pub use crate::graph::{Csr, EdgeList, GraphSink, KnnGraph, NearGraph, WeightedEdgeList};
-    pub use crate::index::{build_index, IndexKind, IndexParams, NearIndex};
+    pub use crate::index::{build_index, IndexKind, IndexParams, MutableOps, NearIndex};
     pub use crate::metric::{
         Chebyshev, Cosine, Counted, Euclidean, Hamming, Levenshtein, Manhattan, Metric,
     };

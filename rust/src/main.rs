@@ -82,6 +82,14 @@ const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck|lint> 
     --deadline-us <n>            per-request deadline from admission; a
                                  query waiting longer gets the typed
                                  deadline-exceeded error (0 = none)
+    --mutable                    accept Mutate frames (insert/tombstone-
+                                 delete) over the mutable epoch-tree
+                                 backend; read-only daemons answer the
+                                 typed read-only error (DESIGN.md §13)
+    --delta-cap <n>              mutable only: compact the insert delta
+                                 into a fresh base at this many points
+    --compact-pct <p>            mutable only: also compact once
+                                 tombstones exceed p% of the base (1-100)
   query flags (client for a running daemon):
     --addr <ip:port>             daemon address (required)
     --dataset/--scale/--points/--seed
@@ -96,6 +104,11 @@ const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck|lint> 
                                  from 100ms (default 1)
     --timeout <ms>               per-reply read deadline; a silent daemon
                                  is a typed error, not a hang (0 = none)
+    --churn <n>                  before querying, send n Mutate rounds
+                                 (insert one dataset row, delete the
+                                 previous round's insert) against a
+                                 --mutable daemon; net state is unchanged
+                                 so --verify still holds bit-exactly
   run flags:
     --config <file.toml>         load an experiment config
     --dataset <name>             Table-I analog (see `neargraph datasets`)
@@ -345,6 +358,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(v) = args.get_usize("deadline-us")? {
         cfg.serve.deadline_us = v as u64;
     }
+    if args.get_bool("mutable")? {
+        cfg.serve.mutable = true;
+    }
+    if let Some(v) = args.get_usize("delta-cap")? {
+        cfg.serve.delta_cap = v;
+    }
+    if let Some(v) = args.get_usize("compact-pct")? {
+        cfg.serve.compact_pct = v as u32;
+    }
     let snapshot = args.get("snapshot").map(str::to_string);
     let save = args.get("save-snapshot").map(str::to_string);
     args.reject_conflict("snapshot", "save-snapshot")?;
@@ -370,22 +392,45 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 /// decides both the point type and the metric the daemon answers with.
 fn serve_snapshot(bytes: &[u8], cfg: &ExperimentConfig) -> Result<(), String> {
     use neargraph::covertree::{peek_point_tag, point_tag};
-    use neargraph::index::CoverTreeIndex;
     let tag = peek_point_tag(bytes).map_err(|e| format!("snapshot: {e}"))?;
     if Some(tag) == point_tag::<DenseMatrix>() {
-        let idx = CoverTreeIndex::from_snapshot_bytes(bytes, Euclidean)
-            .map_err(|e| format!("snapshot: {e}"))?;
-        run_server(Box::new(idx), cfg)
+        serve_loaded::<DenseMatrix, _>(bytes, Euclidean, cfg)
     } else if Some(tag) == point_tag::<HammingCodes>() {
-        let idx = CoverTreeIndex::from_snapshot_bytes(bytes, Hamming)
-            .map_err(|e| format!("snapshot: {e}"))?;
-        run_server(Box::new(idx), cfg)
+        serve_loaded::<HammingCodes, _>(bytes, Hamming, cfg)
     } else if Some(tag) == point_tag::<StringSet>() {
-        let idx = CoverTreeIndex::from_snapshot_bytes(bytes, Levenshtein)
+        serve_loaded::<StringSet, _>(bytes, Levenshtein, cfg)
+    } else {
+        Err(format!("snapshot holds unknown point container tag {tag}"))
+    }
+}
+
+/// The effective index parameters for the serve subcommand (leaf size
+/// from `run.leaf_size`, compaction policy from the `serve.*` keys).
+fn serve_index_params(cfg: &ExperimentConfig) -> IndexParams {
+    IndexParams {
+        leaf_size: cfg.run.leaf_size.max(1),
+        epoch: cfg.serve.epoch_params(),
+        ..Default::default()
+    }
+}
+
+/// Snapshot load path: a `--mutable` daemon wraps the loaded tree in the
+/// epoch-tree backend (ids carry over; the next insert continues past the
+/// highest surviving id), a read-only one serves the tree directly.
+fn serve_loaded<P: PointSet, M: Metric<P>>(
+    bytes: &[u8],
+    metric: M,
+    cfg: &ExperimentConfig,
+) -> Result<(), String> {
+    use neargraph::index::{CoverTreeIndex, InsertCoverTreeIndex};
+    if cfg.serve.mutable {
+        let idx = InsertCoverTreeIndex::from_snapshot_bytes(bytes, metric, &serve_index_params(cfg))
             .map_err(|e| format!("snapshot: {e}"))?;
         run_server(Box::new(idx), cfg)
     } else {
-        Err(format!("snapshot holds unknown point container tag {tag}"))
+        let idx = CoverTreeIndex::from_snapshot_bytes(bytes, metric)
+            .map_err(|e| format!("snapshot: {e}"))?;
+        run_server(Box::new(idx), cfg)
     }
 }
 
@@ -396,7 +441,7 @@ fn serve_built<P: PointSet, M: Metric<P>>(
     save: Option<&str>,
 ) -> Result<(), String> {
     use neargraph::covertree::BuildParams;
-    use neargraph::index::CoverTreeIndex;
+    use neargraph::index::{CoverTreeIndex, InsertCoverTreeIndex};
     let tree = CoverTree::build(
         &pts,
         &metric,
@@ -410,7 +455,12 @@ fn serve_built<P: PointSet, M: Metric<P>>(
             .map_err(|e| format!("{path}: {e}"))?;
         println!("wrote snapshot ({} bytes) to {path}", bytes.len());
     }
-    run_server(Box::new(CoverTreeIndex::from_tree(tree, metric)), cfg)
+    if cfg.serve.mutable {
+        let idx = InsertCoverTreeIndex::from_tree(tree, metric, &serve_index_params(cfg));
+        run_server(Box::new(idx), cfg)
+    } else {
+        run_server(Box::new(CoverTreeIndex::from_tree(tree, metric)), cfg)
+    }
 }
 
 fn run_server<P: PointSet, M: Metric<P>>(
@@ -420,24 +470,26 @@ fn run_server<P: PointSet, M: Metric<P>>(
     let points = index.points().len();
     let server = neargraph::serve::serve(index, &cfg.serve).map_err(|e| e.to_string())?;
     println!(
-        "serving on {} ({points} points; window {}us, max batch {}, queue cap {}, {} threads)",
+        "serving on {} ({points} points; window {}us, max batch {}, queue cap {}, {} threads{})",
         server.local_addr(),
         cfg.serve.coalesce_us,
         cfg.serve.max_batch,
         cfg.serve.queue_cap,
-        cfg.serve.threads.max(1)
+        cfg.serve.threads.max(1),
+        if cfg.serve.mutable { ", mutable" } else { "" }
     );
     let stats = server.join();
     println!(
         "served {} queries in {} batches (mean batch {:.1}, max {}, overloads {}, bad frames {}, \
-         deadline misses {})",
+         deadline misses {}, mutations {})",
         stats.queries,
         stats.batches,
         stats.mean_batch(),
         stats.max_batch,
         stats.overloads,
         stats.bad_frames,
-        stats.deadline_misses
+        stats.deadline_misses,
+        stats.mutations
     );
     Ok(())
 }
@@ -469,6 +521,7 @@ fn cmd_query(args: &Args) -> Result<(), String> {
     let shutdown = args.get_bool("shutdown")?;
     let retries = args.get_usize("retry-connect")?.unwrap_or(1).max(1);
     let timeout_ms = args.get_usize("timeout")?.unwrap_or(0) as u64;
+    let churn = args.get_usize("churn")?.unwrap_or(0);
     args.reject_unknown()?;
     if eps.is_none() && knn.is_none() {
         return Err("query needs --eps <f> or --knn <k>".into());
@@ -480,13 +533,59 @@ fn cmd_query(args: &Args) -> Result<(), String> {
     match build_workload(spec, n, cfg.seed) {
         Workload::Dense { pts, .. } => query_one(
             &pts, Euclidean, &addr, count, pipeline, eps, knn, verify, shutdown, retries,
-            timeout_ms,
+            timeout_ms, churn,
         ),
         Workload::Hamming { codes, .. } => query_one(
             &codes, Hamming, &addr, count, pipeline, eps, knn, verify, shutdown, retries,
-            timeout_ms,
+            timeout_ms, churn,
         ),
     }
+}
+
+/// Drive `rounds` insert/delete rounds against a `--mutable` daemon: each
+/// round inserts one dataset row and tombstones the previous round's
+/// insert, and a final delete retires the last one — so the daemon ends
+/// bit-identical to its pre-churn state and `--verify` still holds.
+fn churn_rounds<P: PointSet>(addr: &str, pts: &P, rounds: usize) -> Result<(), String> {
+    use neargraph::serve::{Client, Response};
+    let mut client = Client::connect(addr).map_err(|e| format!("{addr}: {e}"))?;
+    let mut prev: Option<u32> = None;
+    let mut last_epoch = 0;
+    for i in 0..rounds {
+        let row = pts.slice(i % pts.len(), i % pts.len() + 1);
+        let deletes: Vec<u32> = prev.take().into_iter().collect();
+        client.send_mutate(i as u64, &row, &deletes).map_err(|e| e.to_string())?;
+        match client.recv().map_err(|e| e.to_string())? {
+            Response::Mutated { outcome, .. } => {
+                if outcome.inserted != 1 || outcome.deleted != deletes.len() as u64 {
+                    return Err(format!(
+                        "churn round {i}: daemon applied {}/{} of 1 insert + {} deletes",
+                        outcome.inserted,
+                        outcome.deleted,
+                        deletes.len()
+                    ));
+                }
+                prev = Some(outcome.first_gid as u32);
+                last_epoch = outcome.epoch;
+            }
+            Response::Error { code, .. } => {
+                return Err(format!(
+                    "churn round {i} rejected: {} (daemon not --mutable?)",
+                    code.name()
+                ))
+            }
+            other => return Err(format!("churn round {i}: unexpected reply {other:?}")),
+        }
+    }
+    if let Some(gid) = prev {
+        client.send_mutate(rounds as u64, &pts.empty_like(), &[gid]).map_err(|e| e.to_string())?;
+        match client.recv().map_err(|e| e.to_string())? {
+            Response::Mutated { outcome, .. } if outcome.deleted == 1 => last_epoch = outcome.epoch,
+            other => return Err(format!("churn cleanup: unexpected reply {other:?}")),
+        }
+    }
+    println!("churned {rounds} mutation rounds (daemon at epoch {last_epoch})");
+    Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -502,6 +601,7 @@ fn query_one<P: PointSet, M: Metric<P>>(
     shutdown: bool,
     retries: usize,
     timeout_ms: u64,
+    churn: usize,
 ) -> Result<(), String> {
     use neargraph::serve::{Client, Response};
     use neargraph::testkit::serve_sim::{self, ClientPlan, SimQuery};
@@ -512,6 +612,10 @@ fn query_one<P: PointSet, M: Metric<P>>(
     let probe = Client::connect_retry(addr, retries, std::time::Duration::from_millis(100))
         .map_err(|e| format!("{addr}: {e}"))?;
     drop(probe);
+
+    if churn > 0 {
+        churn_rounds(addr, pts, churn)?;
+    }
 
     let queries: Vec<SimQuery> = (0..count)
         .map(|i| {
@@ -542,6 +646,7 @@ fn query_one<P: PointSet, M: Metric<P>>(
             }
             Response::Bye { .. } => return Err("unexpected Bye reply".into()),
             Response::Health { .. } => return Err("unexpected Health reply".into()),
+            Response::Mutated { .. } => return Err("unexpected Mutated reply".into()),
         }
     }
     let lats = serve_sim::latencies_sorted(&reports);

@@ -133,6 +133,20 @@ impl PointSet for DenseMatrix {
         self.norms.extend_from_slice(&other.norms);
     }
 
+    fn extend_from_range(&mut self, other: &Self, lo: usize, hi: usize) {
+        assert_eq!(self.dim, other.dim, "dimension mismatch");
+        assert!(lo <= hi && hi <= other.len());
+        self.data.extend_from_slice(&other.data[lo * self.dim..hi * self.dim]);
+        self.norms.extend_from_slice(&other.norms[lo..hi]);
+    }
+
+    fn truncate(&mut self, n: usize) {
+        if n < self.len() {
+            self.data.truncate(n * self.dim);
+            self.norms.truncate(n);
+        }
+    }
+
     fn clear(&mut self) {
         self.data.clear();
         self.norms.clear();
@@ -256,6 +270,30 @@ mod tests {
         s.push(&[1.0, 1.0, 1.0]);
         expect(&s);
         expect(&DenseMatrix::from_bytes(&s.to_bytes()));
+    }
+
+    #[test]
+    fn extend_from_range_and_truncate_move_tails_exactly() {
+        let m = sample();
+        let mut dst = m.empty_like();
+        dst.extend_from_range(&m, 1, 3);
+        assert_eq!(dst.len(), 2);
+        assert_eq!(dst.row(0), m.row(1));
+        assert_eq!(dst.row(1), m.row(2));
+        assert_eq!(dst.sq_norms(), &m.sq_norms()[1..3]);
+        let mut t = sample();
+        t.truncate(1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.row(0), m.row(0));
+        t.truncate(5); // no-op past the end
+        assert_eq!(t.len(), 1);
+        // The coalescer split cycle: tail out, truncate, both stay valid.
+        let mut a = sample();
+        let mut b = a.empty_like();
+        b.extend_from_range(&a, 2, 3);
+        a.truncate(2);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.row(0), m.row(2));
     }
 
     #[test]

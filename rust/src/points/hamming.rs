@@ -120,6 +120,19 @@ impl PointSet for HammingCodes {
         self.data.extend_from_slice(&other.data);
     }
 
+    fn extend_from_range(&mut self, other: &Self, lo: usize, hi: usize) {
+        assert_eq!(self.bits, other.bits);
+        assert!(lo <= hi && hi <= other.len());
+        self.data
+            .extend_from_slice(&other.data[lo * self.words_per_point..hi * self.words_per_point]);
+    }
+
+    fn truncate(&mut self, n: usize) {
+        if n < self.len() {
+            self.data.truncate(n * self.words_per_point);
+        }
+    }
+
     fn clear(&mut self) {
         self.data.clear();
     }
@@ -228,6 +241,21 @@ mod tests {
         assert_eq!(e.len(), 0);
         assert!(e.is_empty());
         assert_eq!(HammingCodes::from_bytes(&e.to_bytes()).len(), 0);
+    }
+
+    #[test]
+    fn extend_from_range_and_truncate_on_packed_words() {
+        let h = sample();
+        let mut dst = h.empty_like();
+        dst.extend_from_range(&h, 1, 2);
+        assert_eq!(dst.len(), 1);
+        assert_eq!(dst.weight(0), 100);
+        let mut t = sample();
+        t.truncate(1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.weight(0), 3);
+        t.truncate(4);
+        assert_eq!(t.len(), 1);
     }
 
     #[test]

@@ -41,6 +41,18 @@ pub trait PointSet: Clone + Send + Sync + 'static {
     /// Append all points of `other` onto `self`.
     fn extend_from(&mut self, other: &Self);
 
+    /// Append points `[lo, hi)` of `other` onto `self` — the range form of
+    /// [`PointSet::extend_from`], implemented without a temporary
+    /// container so the serve coalescer's max-batch split stays
+    /// allocation-free once buffers are warm.
+    fn extend_from_range(&mut self, other: &Self, lo: usize, hi: usize);
+
+    /// Keep only the first `n` points, retaining buffer capacity (a no-op
+    /// when `n >= len`). Together with [`PointSet::extend_from_range`]
+    /// this lets a caller move a tail of points between two warmed
+    /// containers without allocating.
+    fn truncate(&mut self, n: usize);
+
     /// Remove every point, keeping the per-point shape **and the buffer
     /// capacity**. `clear()` + `extend_from` is the steady-state reuse
     /// cycle of the serve coalescer's batch double-buffer: once warmed,

@@ -79,6 +79,20 @@ impl PointSet for StringSet {
         }
     }
 
+    fn extend_from_range(&mut self, other: &Self, lo: usize, hi: usize) {
+        assert!(lo <= hi && hi <= other.len());
+        for i in lo..hi {
+            self.push(other.get(i));
+        }
+    }
+
+    fn truncate(&mut self, n: usize) {
+        if n < self.len() {
+            self.bytes.truncate(self.offsets[n]);
+            self.offsets.truncate(n + 1);
+        }
+    }
+
     fn clear(&mut self) {
         self.offsets.clear();
         self.offsets.push(0);
@@ -174,6 +188,25 @@ mod tests {
         let e = StringSet::new();
         assert!(e.is_empty());
         assert_eq!(StringSet::from_bytes(&e.to_bytes()).len(), 0);
+    }
+
+    #[test]
+    fn extend_from_range_and_truncate_respect_offsets() {
+        let s = sample();
+        let mut dst = StringSet::new();
+        dst.extend_from_range(&s, 1, 4);
+        assert_eq!(dst.len(), 3);
+        assert_eq!(dst.get(0), b"");
+        assert_eq!(dst.get(2), b"TTTTTTTT");
+        let mut t = sample();
+        t.truncate(2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(0), b"ACGT");
+        assert_eq!(t.get(1), b"");
+        t.push(b"ZZ");
+        assert_eq!(t.get(2), b"ZZ");
+        t.truncate(9);
+        assert_eq!(t.len(), 3);
     }
 
     #[test]

@@ -71,6 +71,23 @@ impl Client {
         self.send_request(&Request::Knn { id, k, point: point.clone() })
     }
 
+    /// Send a mutation: insert every point of `inserts` (zero or more)
+    /// and tombstone-delete each id in `deletes`. A `--mutable` daemon
+    /// answers `Mutated` with the assigned id range; a read-only daemon
+    /// answers the typed `read-only` error.
+    pub fn send_mutate<P: PointSet>(
+        &mut self,
+        id: u64,
+        inserts: &P,
+        deletes: &[u32],
+    ) -> io::Result<()> {
+        self.send_request(&Request::Mutate {
+            id,
+            inserts: inserts.clone(),
+            deletes: deletes.to_vec(),
+        })
+    }
+
     /// Ask for the daemon's health counters (answered out-of-band on the
     /// reader thread — works even when the query queue is full).
     pub fn send_health(&mut self, id: u64) -> io::Result<()> {

@@ -2,15 +2,21 @@
 //! readers and the batch dispatcher (DESIGN.md §10.2).
 //!
 //! Readers [`Coalescer::submit`] single queries; the dispatcher blocks in
-//! [`Coalescer::next_batch`] until a batch is *ripe* and then takes the
-//! whole pending batch in O(1) by swapping it against its own spare
-//! buffer (a double-buffer: both sides keep their warmed capacity, so the
-//! steady-state cycle allocates nothing). A pending batch ripens when
+//! [`Coalescer::next_batch`] until a batch is *ripe* and then takes **at
+//! most `max_batch`** pending queries, oldest first, by swapping the
+//! pending buffer against its own spare and handing any excess straight
+//! back (a double-buffer plus a tail split: all sides keep their warmed
+//! capacity, so the steady-state cycle allocates nothing). Queries beyond
+//! `max_batch` — the queue can legally hold up to `queue_cap` of them —
+//! stay pending with their original admission time, so their window
+//! accounting (and their deadline clocks) never reset. A pending batch
+//! ripens when
 //!
 //! * it reaches `max_batch` queries, **or**
 //! * `window` has elapsed since its *first* admission (a lone query waits
 //!   at most one window; the timer is not reset by later arrivals), **or**
-//! * the coalescer is closed (shutdown drains immediately).
+//! * the coalescer is closed (shutdown drains immediately, still in
+//!   `max_batch`-sized chunks).
 //!
 //! Backpressure is explicit and bounded: once `queue_cap` queries are
 //! pending, `submit` returns [`Admit::Overloaded`] and the reader sends
@@ -158,10 +164,15 @@ impl<P: PointSet> Coalescer<P> {
         Admit::Accepted
     }
 
-    /// Block until a batch is ripe, then swap it into `into` (which must
-    /// be empty; its buffers become the new pending buffers). Returns
-    /// `false` only when the coalescer is closed **and** drained — every
-    /// admitted query is handed out exactly once before that.
+    /// Block until a batch is ripe, then move up to `max_batch` of the
+    /// oldest pending queries into `into` (which must be empty; its
+    /// buffers become the new pending buffers). Returns `false` only when
+    /// the coalescer is closed **and** drained — every admitted query is
+    /// handed out exactly once before that, and no drained batch ever
+    /// exceeds `max_batch` (PR 9: the old code swapped out the *entire*
+    /// queue, up to `queue_cap` queries, blowing past the engine's sizing
+    /// and the per-request deadline accounting whenever the dispatcher
+    /// fell behind admissions).
     pub fn next_batch(&self, into: &mut PendingBatch<P>) -> bool {
         debug_assert!(into.is_empty(), "next_batch needs a cleared spare buffer");
         let mut g = self.state.lock().unwrap();
@@ -186,6 +197,16 @@ impl<P: PointSet> Coalescer<P> {
         }
         std::mem::swap(&mut g.pending, into);
         g.since = None;
+        let mb = self.params.max_batch;
+        if into.len() > mb {
+            // Hand the tail straight back (oldest stay in `into`): the
+            // remainder keeps its original order and its first query's
+            // admission time, so the window timer and deadline clocks
+            // behave as if those queries had simply not ripened yet.
+            into.batch.give_tail(&mut g.pending.batch, mb);
+            g.pending.tickets.extend(into.tickets.drain(mb..));
+            g.since = g.pending.tickets.first().map(|t| t.admit);
+        }
         true
     }
 
@@ -294,6 +315,60 @@ mod tests {
         assert_eq!(spare.len(), 5);
         spare.clear();
         assert!(!co.next_batch(&mut spare), "drained + closed reports exhaustion");
+    }
+
+    #[test]
+    fn drained_batches_never_exceed_max_batch() {
+        // Regression (PR 9): when admissions outran the dispatcher, the
+        // old next_batch swapped out the ENTIRE pending queue — up to
+        // queue_cap queries in one "batch". The cap must hold on every
+        // drain, the excess must stay queued in admission order, and the
+        // shutdown drain must chunk the same way.
+        let co = coalescer(60_000_000, 3, 16);
+        for i in 0..7u64 {
+            let admit = co.submit(&one_point(i as f32), QueryOp::Eps(0.1), ticket(i));
+            assert_eq!(admit, Admit::Accepted);
+        }
+        let mut spare = PendingBatch::new_like(&DenseMatrix::new(2));
+        assert!(co.next_batch(&mut spare));
+        assert_eq!(spare.len(), 3, "first drain capped at max_batch");
+        assert_eq!(spare.batch.len(), 3, "points split with the tickets");
+        assert_eq!(spare.tickets.iter().map(|t| t.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(co.pending_len(), 4, "excess stays queued");
+        spare.clear();
+        // The remainder is already over max_batch, so it ripens by size
+        // despite the enormous window.
+        assert!(co.next_batch(&mut spare));
+        assert_eq!(spare.tickets.iter().map(|t| t.id).collect::<Vec<_>>(), vec![3, 4, 5]);
+        // Points travel with their tickets through the split: query id 3
+        // was admitted with coordinates (3, -3).
+        assert_eq!(spare.batch.points().point(0), &[3.0f32, -3.0]);
+        spare.clear();
+        co.close();
+        assert!(co.next_batch(&mut spare), "shutdown drains the remainder");
+        assert_eq!(spare.tickets.iter().map(|t| t.id).collect::<Vec<_>>(), vec![6]);
+        spare.clear();
+        assert!(!co.next_batch(&mut spare));
+    }
+
+    #[test]
+    fn split_remainder_keeps_its_window_clock() {
+        // The tail handed back by a capped drain must ripen on its
+        // ORIGINAL admission time, not restart the window.
+        let co = coalescer(5_000, 2, 16);
+        for i in 0..3u64 {
+            co.submit(&one_point(i as f32), QueryOp::Eps(0.1), ticket(i));
+        }
+        let mut spare = PendingBatch::new_like(&DenseMatrix::new(2));
+        assert!(co.next_batch(&mut spare));
+        assert_eq!(spare.len(), 2);
+        spare.clear();
+        // Lone remainder: ripens within roughly one window of ITS
+        // admission (generous bound for slow CI), no new submissions.
+        let t0 = Instant::now();
+        assert!(co.next_batch(&mut spare));
+        assert_eq!(spare.tickets.iter().map(|t| t.id).collect::<Vec<_>>(), vec![2]);
+        assert!(t0.elapsed() < Duration::from_secs(10));
     }
 
     #[test]

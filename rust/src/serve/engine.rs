@@ -76,6 +76,18 @@ impl<P: PointSet> QueryBatch<P> {
         self.ops.push(op);
     }
 
+    /// Move queries `from..len` to the end of `dst`, keeping `0..from`
+    /// here — the coalescer's max-batch split (PR 9). Both sides keep
+    /// their warmed capacity, so the steady-state split cycle allocates
+    /// nothing ([`PointSet::extend_from_range`] + [`PointSet::truncate`]).
+    pub(crate) fn give_tail(&mut self, dst: &mut QueryBatch<P>, from: usize) {
+        debug_assert!(from <= self.len(), "split point past the batch end");
+        dst.points.extend_from_range(&self.points, from, self.len());
+        dst.ops.extend_from_slice(&self.ops[from..]);
+        self.points.truncate(from);
+        self.ops.truncate(from);
+    }
+
     /// The packed query points (parallel to [`QueryBatch::ops`]).
     pub fn points(&self) -> &P {
         &self.points

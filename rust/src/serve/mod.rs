@@ -13,6 +13,13 @@
 //! admission queue is bounded (`queue_cap`) and overload is a typed
 //! protocol reply, never unbounded buffering.
 //!
+//! A daemon started with `--mutable` over the `insert-cover-tree` backend
+//! additionally accepts `Mutate` frames (batched inserts + tombstone
+//! deletes), applied on the reader thread against the epoch tree's write
+//! side while in-flight query batches keep reading the previous epoch
+//! (DESIGN.md §13). Read-only daemons answer every Mutate with the typed
+//! `read-only` error.
+//!
 //! Pieces (each its own submodule):
 //!
 //! * [`protocol`] — length-prefixed frames with hardened, `WireError`-typed
@@ -55,7 +62,7 @@ mod server;
 pub use client::Client;
 pub use coalesce::{Admit, CoalesceParams, Coalescer, PendingBatch, ReplySink, Ticket};
 pub use engine::{BatchOutput, QueryBatch, QueryOp, ServeEngine};
-pub use protocol::{ErrorCode, Health, Request, Response, MAX_FRAME};
+pub use protocol::{ErrorCode, Health, MutateOutcome, Request, Response, MAX_FRAME};
 pub use server::{serve, Server, StatsSnapshot};
 
 /// Validated daemon settings (the `serve.*` config keys plus CLI
@@ -80,6 +87,31 @@ pub struct ServeConfig {
     /// typed `deadline-exceeded` error instead of a stale result — the
     /// graceful-degradation half of overload handling (0 ⇒ no deadline).
     pub deadline_us: u64,
+    /// Accept `Mutate` frames (`serve.mutable` / `--mutable`). Off by
+    /// default: a read-only daemon answers every Mutate with the typed
+    /// `read-only` error. Even when on, the resident index must expose
+    /// [`crate::index::MutableOps`] (the `insert-cover-tree` backend) or
+    /// mutates are still refused.
+    pub mutable: bool,
+    /// Mutable daemons only (`serve.delta_cap`): the epoch tree's insert
+    /// delta is compacted into a fresh batch-built base once it holds
+    /// this many points ([`crate::covertree::EpochParams::delta_cap`]).
+    pub delta_cap: usize,
+    /// Mutable daemons only (`serve.compact_pct`): compaction also
+    /// triggers once tombstones exceed this percentage of the base
+    /// (1–100; becomes [`crate::covertree::EpochParams::compact_frac`]).
+    pub compact_pct: u32,
+}
+
+impl ServeConfig {
+    /// The epoch-tree compaction policy these settings describe (used by
+    /// the CLI when it builds the resident mutable index).
+    pub fn epoch_params(&self) -> crate::covertree::EpochParams {
+        crate::covertree::EpochParams {
+            delta_cap: self.delta_cap.max(1),
+            compact_frac: f64::from(self.compact_pct.clamp(1, 100)) / 100.0,
+        }
+    }
 }
 
 impl Default for ServeConfig {
@@ -91,6 +123,9 @@ impl Default for ServeConfig {
             queue_cap: 4096,
             threads: 1,
             deadline_us: 0,
+            mutable: false,
+            delta_cap: 256,
+            compact_pct: 25,
         }
     }
 }
@@ -245,6 +280,94 @@ mod tests {
             .unwrap_err();
         assert_eq!(err, ServeError::BadAddr { addr: "not-an-addr".into() });
         assert!(format!("{err}").contains("not-an-addr"));
+    }
+
+    #[test]
+    fn mutable_daemon_applies_mutations_and_serves_the_new_points() {
+        let pts = scenario::dense_clusters(41, 90);
+        let extra = scenario::dense_clusters(42, 95); // same generator ⇒ same dim
+        let index = build_index(
+            IndexKind::InsertCoverTree,
+            &pts.slice(0, 90),
+            Euclidean,
+            &IndexParams::default(),
+        )
+        .unwrap();
+        let server = serve(
+            index,
+            &ServeConfig { addr: "127.0.0.1:0".into(), mutable: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+
+        // Insert 2 new points and delete gid 7 in one frame.
+        client.send_mutate(1, &extra.slice(90, 92), &[7, 9999]).unwrap();
+        match client.recv().unwrap() {
+            Response::Mutated { id, outcome } => {
+                assert_eq!(id, 1);
+                assert_eq!(outcome.first_gid, 90);
+                assert_eq!(outcome.inserted, 2);
+                assert_eq!(outcome.deleted, 1, "gid 9999 is a miss, not an error");
+                assert_eq!(outcome.live, 91);
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+
+        // The inserted point is now served, at distance 0 with its new gid.
+        client.send_eps(2, &extra.slice(90, 91), 1e-9).unwrap();
+        match client.recv().unwrap() {
+            Response::Hits { id, hits } => {
+                assert_eq!(id, 2);
+                assert!(hits.iter().any(|&(g, d)| g == 90 && d == 0.0), "hits: {hits:?}");
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+
+        // The tombstoned point never comes back.
+        client.send_eps(3, &pts.slice(7, 8), 1e-9).unwrap();
+        match client.recv().unwrap() {
+            Response::Hits { id, hits } => {
+                assert_eq!(id, 3);
+                assert!(hits.iter().all(|&(g, _)| g != 7), "hits: {hits:?}");
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+
+        // Wrong-dimension inserts get the typed bad-query reply.
+        let wrong = crate::points::DenseMatrix::from_flat(1, vec![0.5]);
+        client.send_mutate(4, &wrong, &[]).unwrap();
+        assert_eq!(client.recv().unwrap(), Response::Error { id: 4, code: ErrorCode::BadQuery });
+
+        let stats = server.shutdown_and_join();
+        assert_eq!(stats.mutations, 1);
+    }
+
+    #[test]
+    fn read_only_daemons_refuse_mutations_with_the_typed_error() {
+        let pts = scenario::dense_uniform(13, 50);
+        // Gate 1: mutable backend, but the operator did not pass --mutable.
+        let index =
+            build_index(IndexKind::InsertCoverTree, &pts, Euclidean, &IndexParams::default())
+                .unwrap();
+        let server = serve(index, &ephemeral(1, 0)).unwrap();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        client.send_mutate(1, &pts.slice(0, 1), &[]).unwrap();
+        assert_eq!(client.recv().unwrap(), Response::Error { id: 1, code: ErrorCode::ReadOnly });
+        let stats = server.shutdown_and_join();
+        assert_eq!(stats.mutations, 0);
+
+        // Gate 2: --mutable, but the resident backend has no MutableOps.
+        let index =
+            build_index(IndexKind::CoverTree, &pts, Euclidean, &IndexParams::default()).unwrap();
+        let server = serve(
+            index,
+            &ServeConfig { addr: "127.0.0.1:0".into(), mutable: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        client.send_mutate(2, &pts.slice(0, 1), &[3]).unwrap();
+        assert_eq!(client.recv().unwrap(), Response::Error { id: 2, code: ErrorCode::ReadOnly });
+        server.shutdown_and_join();
     }
 
     #[test]

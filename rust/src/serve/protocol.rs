@@ -17,15 +17,21 @@
 //! | 2 | k-NN query| `k` u64 (1 ..= u32::MAX), point-set length u64 + bytes (one point) |
 //! | 3 | shutdown  | — |
 //! | 4 | health    | — (answered on the spot, bypassing the batch queue) |
+//! | 5 | mutate    | point-set length u64 + bytes (0 or more inserts), `m` u64 + m × `gid` u32 deletes |
 //!
 //! Response payloads:
 //!
 //! | opcode | frame | body |
 //! |--------|-------|------|
-//! | 1 | hits   | `n` u64 + n × (`gid` u32, `dist` f64 bits; finite, ≥ 0) |
-//! | 2 | error  | [`ErrorCode`] u8 |
-//! | 3 | bye    | — (acknowledges a shutdown request) |
-//! | 4 | health | the seven [`Health`] counters, each u64 |
+//! | 1 | hits    | `n` u64 + n × (`gid` u32, `dist` f64 bits; finite, ≥ 0) |
+//! | 2 | error   | [`ErrorCode`] u8 |
+//! | 3 | bye     | — (acknowledges a shutdown request) |
+//! | 4 | health  | the seven [`Health`] counters, each u64 |
+//! | 5 | mutated | `first_gid`, `inserted`, `deleted`, `epoch`, `live` — each u64 |
+//!
+//! A mutate against a daemon launched without `--mutable` (or over a
+//! backend without [`crate::index::MutableOps`]) is answered with the
+//! typed [`ErrorCode::ReadOnly`], never a panic or a dropped connection.
 //!
 //! Responses echo the request id; the daemon may answer pipelined
 //! requests in any order, so clients match on the id, not on arrival
@@ -47,11 +53,13 @@ const REQ_EPS: u8 = 1;
 const REQ_KNN: u8 = 2;
 const REQ_SHUTDOWN: u8 = 3;
 const REQ_HEALTH: u8 = 4;
+const REQ_MUTATE: u8 = 5;
 
 const RESP_HITS: u8 = 1;
 const RESP_ERROR: u8 = 2;
 const RESP_BYE: u8 = 3;
 const RESP_HEALTH: u8 = 4;
+const RESP_MUTATED: u8 = 5;
 
 /// Typed overload/rejection reply codes (the explicit-backpressure half of
 /// the protocol: a daemon under pressure answers, it never buffers
@@ -71,6 +79,9 @@ pub enum ErrorCode {
     /// answer would have arrived too late to be useful, so it is replaced
     /// by this typed reply instead of silent tail latency.
     DeadlineExceeded,
+    /// A mutate request reached a daemon serving an immutable index (no
+    /// `--mutable`, or a backend without in-place mutation support).
+    ReadOnly,
 }
 
 impl ErrorCode {
@@ -81,6 +92,7 @@ impl ErrorCode {
             ErrorCode::Overloaded => 3,
             ErrorCode::ShuttingDown => 4,
             ErrorCode::DeadlineExceeded => 5,
+            ErrorCode::ReadOnly => 6,
         }
     }
 
@@ -91,6 +103,7 @@ impl ErrorCode {
             3 => Some(ErrorCode::Overloaded),
             4 => Some(ErrorCode::ShuttingDown),
             5 => Some(ErrorCode::DeadlineExceeded),
+            6 => Some(ErrorCode::ReadOnly),
             _ => None,
         }
     }
@@ -103,6 +116,7 @@ impl ErrorCode {
             ErrorCode::Overloaded => "overloaded",
             ErrorCode::ShuttingDown => "shutting-down",
             ErrorCode::DeadlineExceeded => "deadline-exceeded",
+            ErrorCode::ReadOnly => "read-only",
         }
     }
 }
@@ -120,6 +134,12 @@ pub enum Request<P: PointSet> {
     /// connection reader — it never enters the batch queue, so it stays
     /// responsive while the daemon is saturated.
     Health { id: u64 },
+    /// Mutate the served index: append every point of `inserts` (may be
+    /// empty), then tombstone each id of `deletes`. Applied in that order,
+    /// atomically with respect to concurrently answered queries (the
+    /// epoch-snapshot scheme of `covertree::epoch`). Requires a daemon in
+    /// `--mutable` mode; otherwise answered [`ErrorCode::ReadOnly`].
+    Mutate { id: u64, inserts: P, deletes: Vec<u32> },
 }
 
 impl<P: PointSet> Request<P> {
@@ -151,6 +171,17 @@ impl<P: PointSet> Request<P> {
                 buf.push(REQ_HEALTH);
                 put_u64(&mut buf, *id);
             }
+            Request::Mutate { id, inserts, deletes } => {
+                buf.push(REQ_MUTATE);
+                put_u64(&mut buf, *id);
+                let pb = inserts.to_bytes();
+                put_u64(&mut buf, pb.len() as u64);
+                buf.extend_from_slice(&pb);
+                put_u64(&mut buf, deletes.len() as u64);
+                for &gid in deletes {
+                    buf.extend_from_slice(&gid.to_le_bytes());
+                }
+            }
         }
         buf
     }
@@ -181,6 +212,19 @@ impl<P: PointSet> Request<P> {
             }
             REQ_SHUTDOWN => Request::Shutdown { id },
             REQ_HEALTH => Request::Health { id },
+            REQ_MUTATE => {
+                // Unlike the query opcodes, the carried point set may hold
+                // any number of points (including zero: a delete-only
+                // mutate), so it is decoded directly, not through
+                // `decode_one_point`.
+                let plen = try_get_u64(bytes, &mut off, "mutate inserts length")? as usize;
+                let body = try_take(bytes, &mut off, plen, "mutate inserts")?;
+                let inserts = P::try_from_bytes(body)?;
+                let m = try_get_u64(bytes, &mut off, "mutate delete count")? as usize;
+                let body = try_take(bytes, &mut off, m.saturating_mul(4), "mutate deletes")?;
+                let deletes: Vec<u32> = body.chunks_exact(4).map(le_u32).collect();
+                Request::Mutate { id, inserts, deletes }
+            }
             _ => return Err(WireError::Corrupt { what: "unknown request opcode" }),
         };
         if off != bytes.len() {
@@ -243,6 +287,26 @@ pub enum Response {
     Bye { id: u64 },
     /// Health counters (answers a `Health` request).
     Health { id: u64, health: Health },
+    /// A mutate was applied (answers a `Mutate` request).
+    Mutated { id: u64, outcome: MutateOutcome },
+}
+
+/// What a mutate request did, echoed back to the client. Fixed-size on
+/// the wire (five u64s), so the decode path needs no length arithmetic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MutateOutcome {
+    /// First global id assigned to the inserts (meaningless when
+    /// `inserted == 0`); the batch got `first_gid .. first_gid + inserted`.
+    pub first_gid: u64,
+    /// Points appended.
+    pub inserted: u64,
+    /// Delete ids that actually tombstoned a live point (a miss — unknown
+    /// or already-dead id — is not an error, just not counted).
+    pub deleted: u64,
+    /// The index epoch after the mutate (bumps on compaction).
+    pub epoch: u64,
+    /// Live points after the mutate.
+    pub live: u64,
 }
 
 impl Response {
@@ -255,6 +319,7 @@ impl Response {
             Response::Error { id, code } => encode_error_into(&mut buf, *id, *code),
             Response::Bye { id } => encode_bye_into(&mut buf, *id),
             Response::Health { id, health } => encode_health_into(&mut buf, *id, health),
+            Response::Mutated { id, outcome } => encode_mutated_into(&mut buf, *id, outcome),
         }
         buf
     }
@@ -302,6 +367,17 @@ impl Response {
                 };
                 Response::Health { id, health }
             }
+            RESP_MUTATED => {
+                let mut field = || try_get_u64(bytes, &mut off, "response mutate field");
+                let outcome = MutateOutcome {
+                    first_gid: field()?,
+                    inserted: field()?,
+                    deleted: field()?,
+                    epoch: field()?,
+                    live: field()?,
+                };
+                Response::Mutated { id, outcome }
+            }
             _ => return Err(WireError::Corrupt { what: "unknown response opcode" }),
         };
         if off != bytes.len() {
@@ -338,6 +414,18 @@ pub fn encode_bye_into(buf: &mut Vec<u8>, id: u64) {
     buf.clear();
     buf.push(RESP_BYE);
     put_u64(buf, id);
+}
+
+/// Encode a mutate acknowledgement into `buf` (cleared first).
+pub fn encode_mutated_into(buf: &mut Vec<u8>, id: u64, outcome: &MutateOutcome) {
+    buf.clear();
+    buf.push(RESP_MUTATED);
+    put_u64(buf, id);
+    put_u64(buf, outcome.first_gid);
+    put_u64(buf, outcome.inserted);
+    put_u64(buf, outcome.deleted);
+    put_u64(buf, outcome.epoch);
+    put_u64(buf, outcome.live);
 }
 
 /// Encode a health response into `buf` (cleared first).
@@ -457,6 +545,10 @@ mod tests {
             Request::Knn { id: u64::MAX, k: 12, point: one_dense() },
             Request::Shutdown { id: 3 },
             Request::Health { id: 4 },
+            Request::Mutate { id: 5, inserts: one_dense(), deletes: vec![0, 9, u32::MAX] },
+            // Delete-only (empty inserts) and insert-only mutates are legal.
+            Request::Mutate { id: 6, inserts: DenseMatrix::new(3), deletes: vec![2] },
+            Request::Mutate { id: 7, inserts: one_dense(), deletes: vec![] },
         ];
         for r in reqs {
             let b = r.to_bytes();
@@ -467,7 +559,8 @@ mod tests {
                     Request::Eps { id, .. }
                     | Request::Knn { id, .. }
                     | Request::Shutdown { id }
-                    | Request::Health { id } => id,
+                    | Request::Health { id }
+                    | Request::Mutate { id, .. } => id,
                 }
             );
         }
@@ -522,6 +615,16 @@ mod tests {
                     deadline_misses: 7,
                 },
             },
+            Response::Mutated {
+                id: 14,
+                outcome: MutateOutcome {
+                    first_gid: 1000,
+                    inserted: 3,
+                    deleted: 2,
+                    epoch: 5,
+                    live: 998,
+                },
+            },
         ];
         for r in resps {
             assert_eq!(Response::try_from_bytes(&r.to_bytes()), Ok(r.clone()));
@@ -532,6 +635,7 @@ mod tests {
             ErrorCode::Overloaded,
             ErrorCode::ShuttingDown,
             ErrorCode::DeadlineExceeded,
+            ErrorCode::ReadOnly,
         ] {
             let r = Response::Error { id: 1, code };
             assert_eq!(Response::try_from_bytes(&r.to_bytes()), Ok(r));
@@ -558,6 +662,33 @@ mod tests {
         assert_eq!(buf, Response::Error { id: 5, code: ErrorCode::BadQuery }.to_bytes());
         encode_bye_into(&mut buf, 6);
         assert_eq!(buf, Response::Bye { id: 6 }.to_bytes());
+        let outcome = MutateOutcome { first_gid: 9, inserted: 1, deleted: 0, epoch: 2, live: 10 };
+        encode_mutated_into(&mut buf, 7, &outcome);
+        assert_eq!(buf, Response::Mutated { id: 7, outcome }.to_bytes());
+    }
+
+    #[test]
+    fn mutate_rejects_truncation_and_trailing_bytes() {
+        let r = Request::Mutate { id: 1, inserts: one_dense(), deletes: vec![1, 2, 3] };
+        let b = r.to_bytes();
+        // Every strict prefix fails typed, never panics (the full battery
+        // lives in tests/wire_adversarial.rs; this is the smoke check).
+        for cut in 0..b.len() {
+            assert!(Request::<DenseMatrix>::try_from_bytes(&b[..cut]).is_err(), "cut={cut}");
+        }
+        let mut extra = b.clone();
+        extra.push(0);
+        assert_eq!(
+            Request::<DenseMatrix>::try_from_bytes(&extra),
+            Err(WireError::Corrupt { what: "trailing bytes after request" })
+        );
+        // A hostile delete count cannot over-allocate: saturating_mul
+        // turns it into a typed truncation error.
+        let mut hostile = Request::Mutate { id: 1, inserts: DenseMatrix::new(3), deletes: vec![] }
+            .to_bytes();
+        let n = hostile.len();
+        hostile[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Request::<DenseMatrix>::try_from_bytes(&hostile).is_err());
     }
 
     #[test]

@@ -55,6 +55,7 @@ struct Stats {
     connections: AtomicU64,
     max_batch: AtomicU64,
     deadline_misses: AtomicU64,
+    mutations: AtomicU64,
 }
 
 /// Counters observed over a daemon's lifetime (or so far, via
@@ -75,6 +76,9 @@ pub struct StatsSnapshot {
     pub max_batch: u64,
     /// Queries answered with the typed `deadline-exceeded` error.
     pub deadline_misses: u64,
+    /// Mutate frames applied (a `--mutable` daemon only; read-only
+    /// daemons answer `read-only` and never bump this).
+    pub mutations: u64,
 }
 
 impl StatsSnapshot {
@@ -99,6 +103,7 @@ impl Stats {
             connections: self.connections.load(Ordering::Relaxed),
             max_batch: self.max_batch.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            mutations: self.mutations.load(Ordering::Relaxed),
         }
     }
 }
@@ -217,6 +222,11 @@ pub fn serve<P: PointSet, M: Metric<P>>(
         std::thread::spawn(move || dispatch_loop(&engine, &coalescer, &stats, deadline))
     };
 
+    // Mutations are double-gated: the operator must opt in (`--mutable`)
+    // AND the resident index must actually expose `MutableOps` — either
+    // missing makes every Mutate frame a typed `read-only` reply.
+    let accept_mutations = cfg.mutable;
+
     let control = {
         let shutdown = shutdown.clone();
         let stats = stats.clone();
@@ -246,7 +256,15 @@ pub fn serve<P: PointSet, M: Metric<P>>(
                         let shutdown = shutdown.clone();
                         let stats = stats.clone();
                         readers.push(std::thread::spawn(move || {
-                            reader_loop(stream, addr, &engine, &coalescer, &shutdown, &stats)
+                            reader_loop(
+                                stream,
+                                addr,
+                                &engine,
+                                &coalescer,
+                                &shutdown,
+                                &stats,
+                                accept_mutations,
+                            )
                         }));
                     }
                     Err(_) => {
@@ -300,6 +318,7 @@ fn dispatch_loop<P: PointSet, M: Metric<P>>(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn reader_loop<P: PointSet, M: Metric<P>>(
     stream: TcpStream,
     addr: SocketAddr,
@@ -307,6 +326,7 @@ fn reader_loop<P: PointSet, M: Metric<P>>(
     coalescer: &Coalescer<P>,
     shutdown: &Arc<AtomicBool>,
     stats: &Stats,
+    accept_mutations: bool,
 ) {
     let _ = stream.set_read_timeout(Some(READ_POLL));
     let _ = stream.set_nodelay(true);
@@ -343,7 +363,17 @@ fn reader_loop<P: PointSet, M: Metric<P>>(
                     outbox.send(&reply);
                     break;
                 }
-                handle_frame(&frame, &outbox, addr, engine, coalescer, shutdown, stats, &mut reply)
+                handle_frame(
+                    &frame,
+                    &outbox,
+                    addr,
+                    engine,
+                    coalescer,
+                    shutdown,
+                    stats,
+                    accept_mutations,
+                    &mut reply,
+                )
             }
         }
     }
@@ -358,6 +388,7 @@ fn handle_frame<P: PointSet, M: Metric<P>>(
     coalescer: &Coalescer<P>,
     shutdown: &Arc<AtomicBool>,
     stats: &Stats,
+    accept_mutations: bool,
     reply: &mut Vec<u8>,
 ) {
     let (id, point, op) = match Request::<P>::try_from_bytes(frame) {
@@ -386,6 +417,41 @@ fn handle_frame<P: PointSet, M: Metric<P>>(
                 deadline_misses: stats.deadline_misses.load(Ordering::Relaxed),
             };
             protocol::encode_health_into(reply, id, &health);
+            outbox.send(reply);
+            return;
+        }
+        Ok(Request::Mutate { id, inserts, deletes }) => {
+            // Applied on the reader thread: the epoch tree serialises
+            // writers internally and readers traverse the previous
+            // snapshot, so in-flight query batches keep answering while
+            // this applies (DESIGN.md §13). Never touches the batch queue.
+            let mutable = if accept_mutations { engine.index().mutable() } else { None };
+            let Some(m) = mutable else {
+                protocol::encode_error_into(reply, id, ErrorCode::ReadOnly);
+                outbox.send(reply);
+                return;
+            };
+            if !inserts.is_empty() && !engine.shape_ok(&inserts) {
+                protocol::encode_error_into(reply, id, ErrorCode::BadQuery);
+                outbox.send(reply);
+                return;
+            }
+            let range = if inserts.is_empty() { 0..0 } else { m.insert(&inserts) };
+            let mut deleted = 0u64;
+            for gid in &deletes {
+                if m.delete(*gid) {
+                    deleted += 1;
+                }
+            }
+            let outcome = protocol::MutateOutcome {
+                first_gid: range.start as u64,
+                inserted: (range.end - range.start) as u64,
+                deleted,
+                epoch: m.epoch(),
+                live: m.live() as u64,
+            };
+            stats.mutations.fetch_add(1, Ordering::Relaxed);
+            protocol::encode_mutated_into(reply, id, &outcome);
             outbox.send(reply);
             return;
         }

@@ -97,7 +97,8 @@ fn run_one<P: PointSet>(
             Response::Hits { id, .. }
             | Response::Error { id, .. }
             | Response::Bye { id }
-            | Response::Health { id, .. } => *id,
+            | Response::Health { id, .. }
+            | Response::Mutated { id, .. } => *id,
         };
         assert_eq!(id >> 32, client, "reply routed to the wrong client");
         let seq = (id & u32::MAX as u64) as usize;

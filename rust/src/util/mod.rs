@@ -94,17 +94,45 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
-/// Crash-safe file write: write `bytes` to a `.tmp` sibling of `path`,
-/// then atomically rename over the target. A process killed mid-write
-/// can leave a stale `.tmp` behind but never a half-written target —
-/// the previous file at `path` stays intact and loadable (the snapshot
-/// and checkpoint writers both rely on this, DESIGN.md §11).
+/// Crash-safe file write: write `bytes` to a uniquely named `.tmp.*`
+/// sibling of `path`, `sync_all` it to stable storage, then atomically
+/// rename over the target. The tmp name carries the process id plus a
+/// process-wide counter, so concurrent writers (multi-rank checkpoints, a
+/// `--save-snapshot` racing a checkpoint) never clobber each other's
+/// in-flight bytes — last rename wins with a complete file either way.
+/// The fsync-before-rename closes the window where a machine crash after
+/// the rename could surface an empty or truncated target despite the
+/// durability claim DESIGN.md §11 leans on. A process killed mid-write
+/// can leave a stale `.tmp.*` sibling behind but never a half-written
+/// target — the previous file at `path` stays intact and loadable (the
+/// snapshot and checkpoint writers both rely on this).
 pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
     let mut tmp_name = path.as_os_str().to_os_string();
-    tmp_name.push(".tmp");
+    tmp_name.push(format!(
+        ".tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
     let tmp = std::path::PathBuf::from(tmp_name);
-    std::fs::write(&tmp, bytes)?;
-    std::fs::rename(&tmp, path)
+    let write_synced = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    })();
+    if let Err(e) = write_synced {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
 }
 
 /// Human-readable seconds (chooses between s / ms / µs).
@@ -171,12 +199,47 @@ mod tests {
         assert_eq!(std::fs::read(&target).unwrap(), b"generation one");
         write_atomic(&target, b"generation two").unwrap();
         assert_eq!(std::fs::read(&target).unwrap(), b"generation two");
-        // Simulate a kill mid-write: partial garbage lands in the .tmp
+        // Simulate a kill mid-write: partial garbage lands in a .tmp.*
         // sibling and the rename never happens — the target must still
         // hold the last complete generation.
-        let tmp = dir.join("file.bin.tmp");
+        let tmp = dir.join("file.bin.tmp.99999.0");
         std::fs::write(&tmp, b"gen").unwrap();
         assert_eq!(std::fs::read(&target).unwrap(), b"generation two");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_atomic_concurrent_writers_never_corrupt_the_target() {
+        // The PR 9 regression: the old implementation used one fixed
+        // `.tmp` sibling, so two in-flight writers interleaved bytes in
+        // the same tmp file and a rename could publish a torn mix. With
+        // per-writer unique tmp names every observable generation of the
+        // target is one writer's complete payload.
+        let dir = std::env::temp_dir()
+            .join(format!("neargraph-atomic-race-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("contended.bin");
+        let payload = |w: usize| vec![w as u8; 4096];
+        std::thread::scope(|s| {
+            for w in 0..4usize {
+                let target = &target;
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        write_atomic(target, &payload(w)).unwrap();
+                        let got = std::fs::read(target).unwrap();
+                        assert_eq!(got.len(), 4096, "torn write observed");
+                        assert!(
+                            got.iter().all(|&b| b == got[0]),
+                            "interleaved writer bytes observed"
+                        );
+                    }
+                });
+            }
+        });
+        // No writer failed, and the final target is one complete payload.
+        let got = std::fs::read(&target).unwrap();
+        assert_eq!(got.len(), 4096);
+        assert!(got.iter().all(|&b| b == got[0]));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,259 @@
+//! PR 9 gate: randomized insert/delete/query interleavings over the
+//! mutable epoch-tree backend must stay **bit-equal to a brute-force
+//! rebuild at every step** — through delta growth, tombstone accrual,
+//! threshold compactions and forced compactions — for every metric
+//! family and from both one and several concurrent reader threads.
+//!
+//! The model is a plain live list `(gid, pool_row)`: after every mutation
+//! step, ε answers (compared as id-sorted multisets with exact bits) and
+//! k-NN answers (compared in the facade's canonical `(dist, gid)` order,
+//! ties included) must match a scan of the live list. Satellite checks
+//! ride along: ids are permanent and never reused across compactions,
+//! deletes of unknown or already-dead ids report `false`, and a snapshot
+//! taken mid-life elides tombstones yet answers identically after reload.
+
+use neargraph::covertree::EpochParams;
+use neargraph::index::{
+    build_index, IndexKind, IndexParams, InsertCoverTreeIndex, MutableOps, NearIndex,
+};
+use neargraph::metric::{Euclidean, Hamming, Levenshtein, Metric};
+use neargraph::points::{DenseMatrix, HammingCodes, PointSet, StringSet};
+use neargraph::testkit::scenario;
+use neargraph::util::Rng;
+
+/// Compaction policy tightened so a modest schedule crosses both
+/// triggers (delta overflow and tombstone fraction) many times.
+fn tight_params() -> IndexParams {
+    IndexParams {
+        epoch: EpochParams { delta_cap: 12, compact_frac: 0.15 },
+        ..Default::default()
+    }
+}
+
+fn brute_eps<'a, P: PointSet, M: Metric<P>>(
+    pool: &'a P,
+    live: &[(u32, usize)],
+    metric: &M,
+    q: P::Point<'a>,
+    eps: f64,
+) -> Vec<(u32, f64)> {
+    let mut out: Vec<(u32, f64)> = live
+        .iter()
+        .map(|&(gid, row)| (gid, metric.dist(q, pool.point(row))))
+        .filter(|&(_, d)| d <= eps)
+        .collect();
+    out.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    out
+}
+
+fn brute_knn<'a, P: PointSet, M: Metric<P>>(
+    pool: &'a P,
+    live: &[(u32, usize)],
+    metric: &M,
+    q: P::Point<'a>,
+    k: usize,
+) -> Vec<(u32, f64)> {
+    let mut all: Vec<(u32, f64)> = live
+        .iter()
+        .map(|&(gid, row)| (gid, metric.dist(q, pool.point(row))))
+        .collect();
+    all.sort_unstable_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
+fn bits(pairs: &[(u32, f64)]) -> Vec<(u32, u64)> {
+    pairs.iter().map(|&(g, d)| (g, d.to_bits())).collect()
+}
+
+/// Verify one query point against the live-list model, ε and k-NN both.
+fn check_point<P: PointSet, M: Metric<P>>(
+    index: &dyn NearIndex<P, M>,
+    pool: &P,
+    live: &[(u32, usize)],
+    metric: &M,
+    row: usize,
+    eps: f64,
+    k: usize,
+    step: usize,
+) {
+    let q = pool.point(row);
+    let mut got = Vec::new();
+    index.eps_query(q, eps, &mut got);
+    got.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let want = brute_eps(pool, live, metric, q, eps);
+    assert_eq!(
+        bits(&got),
+        bits(&want),
+        "eps answer diverged from brute force at step {step} (query row {row}, eps {eps})"
+    );
+    let got_k = index.knn(q, k);
+    let want_k = brute_knn(pool, live, metric, q, k);
+    assert_eq!(
+        bits(&got_k),
+        bits(&want_k),
+        "knn answer diverged from brute force at step {step} (query row {row}, k {k})"
+    );
+}
+
+/// Run one seeded schedule. `pool` rows `0..start` seed the index (gids
+/// are the row numbers); later rows feed inserts in order, so a gid's
+/// coordinates are always `pool.point(row)` for a tracked `row`.
+#[allow(clippy::too_many_arguments)]
+fn run_schedule<P: PointSet, M: Metric<P>>(
+    pool: &P,
+    metric: M,
+    seed: u64,
+    start: usize,
+    steps: usize,
+    threads: usize,
+    eps_of: &dyn Fn(&mut Rng) -> f64,
+) {
+    let index = build_index(
+        IndexKind::InsertCoverTree,
+        &pool.slice(0, start),
+        metric.clone(),
+        &tight_params(),
+    )
+    .unwrap();
+    let index = index.as_ref();
+    let mutable = index.mutable().expect("the insert backend is mutable");
+
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<(u32, usize)> = (0..start).map(|row| (row as u32, row)).collect();
+    let mut dead: Vec<u32> = Vec::new();
+    let mut cursor = start; // next unused pool row
+    let mut next_gid = start as u32;
+
+    for step in 0..steps {
+        match rng.below(10) {
+            0..=4 => {
+                // Insert a small batch of fresh pool rows (ids must be
+                // assigned contiguously from the permanent counter).
+                let batch = 1 + rng.below(3).min(pool.len().saturating_sub(cursor));
+                if cursor + batch <= pool.len() {
+                    let got = mutable.insert(&pool.slice(cursor, cursor + batch));
+                    assert_eq!(
+                        (got.start, got.end),
+                        (next_gid, next_gid + batch as u32),
+                        "insert assigned unexpected ids at step {step}"
+                    );
+                    for j in 0..batch {
+                        live.push((next_gid + j as u32, cursor + j));
+                    }
+                    cursor += batch;
+                    next_gid += batch as u32;
+                }
+            }
+            5..=7 => {
+                if !live.is_empty() {
+                    let victim = live.swap_remove(rng.below(live.len()));
+                    assert!(
+                        mutable.delete(victim.0),
+                        "delete of live gid {} failed at step {step}",
+                        victim.0
+                    );
+                    dead.push(victim.0);
+                }
+            }
+            8 => {
+                mutable.compact();
+                assert_eq!(mutable.tombstones(), 0, "compaction left tombstones at step {step}");
+            }
+            _ => {
+                // Deletes of unknown or already-dead ids are misses, and
+                // misses must never perturb the live set.
+                assert!(!mutable.delete(next_gid + 1000));
+                if let Some(&gone) = dead.last() {
+                    assert!(!mutable.delete(gone), "double delete of gid {gone} at step {step}");
+                }
+            }
+        }
+        assert_eq!(mutable.live(), live.len(), "live count drifted at step {step}");
+
+        // Every step gets verified — compaction points included — from
+        // one or several concurrent reader threads.
+        let eps = eps_of(&mut rng);
+        let k = 1 + rng.below(6);
+        if threads <= 1 {
+            let row = rng.below(pool.len());
+            check_point(index, pool, &live, &metric, row, eps, k, step);
+        } else {
+            let rows: Vec<usize> = (0..threads).map(|_| rng.below(pool.len())).collect();
+            std::thread::scope(|s| {
+                for &row in &rows {
+                    let live = &live;
+                    let metric = &metric;
+                    s.spawn(move || check_point(index, pool, live, metric, row, eps, k, step));
+                }
+            });
+        }
+    }
+    assert!(mutable.epoch() > 0, "the schedule never compacted — tighten the triggers");
+}
+
+#[test]
+fn dense_schedules_stay_bit_equal_to_brute_force() {
+    let pool = scenario::dense_clusters(9100, 240);
+    for seed in [1u64, 2, 3] {
+        run_schedule(&pool, Euclidean, 0x9100 + seed, 120, 120, 1, &|rng| 0.1 + 0.6 * rng.f64());
+    }
+}
+
+#[test]
+fn dense_schedule_verifies_from_four_reader_threads() {
+    let pool = scenario::dense_clusters(9101, 200);
+    run_schedule(&pool, Euclidean, 0x9101, 100, 80, 4, &|rng| 0.1 + 0.6 * rng.f64());
+}
+
+#[test]
+fn hamming_schedules_stay_bit_equal_to_brute_force() {
+    let pool = scenario::hamming_codes(9102, 140);
+    run_schedule(&pool, Hamming, 0x9102, 70, 90, 1, &|rng| (6 + rng.below(26)) as f64);
+    run_schedule(&pool, Hamming, 0x9103, 70, 60, 4, &|rng| (6 + rng.below(26)) as f64);
+}
+
+#[test]
+fn levenshtein_schedules_stay_bit_equal_to_brute_force() {
+    let pool = scenario::string_pool(9104, 70);
+    run_schedule(&pool, Levenshtein, 0x9104, 35, 50, 1, &|rng| (1 + rng.below(6)) as f64);
+    run_schedule(&pool, Levenshtein, 0x9105, 35, 40, 4, &|rng| (1 + rng.below(6)) as f64);
+}
+
+#[test]
+fn snapshots_taken_mid_life_elide_tombstones_and_answer_identically() {
+    let pool = scenario::dense_clusters(9106, 160);
+    let params = tight_params();
+    let index = InsertCoverTreeIndex::build(&pool.slice(0, 120), Euclidean, &params);
+    let mut rng = Rng::new(0x9106);
+    let mut live: Vec<(u32, usize)> = (0..120).map(|row| (row as u32, row)).collect();
+    // Churn: 20 inserts, 30 deletes — leaves tombstones in both base and delta.
+    let got = index.insert(&pool.slice(120, 140));
+    assert_eq!((got.start, got.end), (120, 140));
+    live.extend((120..140).map(|row| (row as u32, row)));
+    for _ in 0..30 {
+        let victim = live.swap_remove(rng.below(live.len()));
+        assert!(index.delete(victim.0));
+    }
+
+    let bytes = index.snapshot_bytes().unwrap();
+    assert_eq!(index.tombstones(), 0, "snapshotting compacts first");
+    let back = InsertCoverTreeIndex::from_snapshot_bytes(&bytes, Euclidean, &params).unwrap();
+    assert_eq!(back.num_points(), live.len());
+
+    for row in 0..pool.len() {
+        let q = pool.point(row);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        index.eps_query(q, 0.45, &mut a);
+        back.eps_query(q, 0.45, &mut b);
+        a.sort_unstable_by(|x, y| x.0.cmp(&y.0).then(x.1.total_cmp(&y.1)));
+        b.sort_unstable_by(|x, y| x.0.cmp(&y.0).then(x.1.total_cmp(&y.1)));
+        assert_eq!(bits(&a), bits(&b), "reloaded snapshot diverged on row {row}");
+        assert_eq!(bits(&index.knn(q, 5)), bits(&back.knn(q, 5)));
+    }
+
+    // Ids keep advancing past the reload — never reused.
+    let more = back.mutable().unwrap().insert(&pool.slice(140, 141));
+    assert_eq!(more.start, 140);
+}

@@ -216,6 +216,35 @@ fn serve_health_mutations() {
     wire::check_wire_decoder("serve/resp-health", &resp.to_bytes(), &Response::try_from_bytes);
 }
 
+#[test]
+fn serve_mutate_mutations() {
+    let pts = scenario::dense_clusters(8613, 5);
+    let req = Request::Mutate {
+        id: 91,
+        inserts: pts.slice(0, 2),
+        deletes: vec![4, 17, u32::MAX],
+    };
+    wire::check_wire_decoder("serve/req-mutate", &req.to_bytes(), &|bytes| {
+        Request::<DenseMatrix>::try_from_bytes(bytes)
+    });
+    // Delete-only mutates carry an empty point set — still a legal frame.
+    let lean = Request::Mutate { id: 92, inserts: pts.slice(0, 0), deletes: vec![8] };
+    wire::check_wire_decoder("serve/req-mutate-lean", &lean.to_bytes(), &|bytes| {
+        Request::<DenseMatrix>::try_from_bytes(bytes)
+    });
+    let resp = Response::Mutated {
+        id: 93,
+        outcome: neargraph::serve::MutateOutcome {
+            first_gid: 500,
+            inserted: 2,
+            deleted: 1,
+            epoch: 9,
+            live: 501,
+        },
+    };
+    wire::check_wire_decoder("serve/resp-mutated", &resp.to_bytes(), &Response::try_from_bytes);
+}
+
 // ---- fault-layer envelopes and checkpoint frames (DESIGN.md §11) ---------
 
 #[test]
