@@ -18,13 +18,17 @@
 //! count gated (the children-`Vec` clone regression guard), compactions
 //! asserted to fire, and the warmed epoch read path — base, delta and
 //! tombstones all populated — proved allocation-free by the same
-//! counting allocator. Emits machine-readable `BENCH_pr9.json` so the
-//! perf trajectory accumulates across PRs.
+//! counting allocator, **plus** a kernel section (PR 10): the scalar
+//! per-pair leaf filter vs the K-lane SoA kernels on identical leaf
+//! visits (ns/pair per metric family, emission bits asserted equal) and
+//! the dual-tree self-join vs the batched join per thread count, with
+//! the cross-path edge-set fingerprint asserted. Emits machine-readable
+//! `BENCH_pr10.json` so the perf trajectory accumulates across PRs.
 //!
 //! ```text
 //! cargo run --release --example perf_driver -- [--n 50000] [--dim 16] \
 //!     [--threads 1,2,4] [--target-degree 30] [--knn 16] \
-//!     [--out BENCH_pr9.json]
+//!     [--out BENCH_pr10.json]
 //! ```
 //!
 //! The driver asserts that every thread count — and every facade backend
@@ -42,7 +46,7 @@ use neargraph::index::{
     build_index_par, CoverTreeIndex, IndexKind, IndexParams, InsertCoverTreeIndex, MutableOps,
     NearIndex,
 };
-use neargraph::metric::{Counted, Euclidean};
+use neargraph::metric::{Counted, Euclidean, Hamming, Levenshtein, Metric, SoaTile};
 use neargraph::points::PointSet;
 use neargraph::serve::{serve, BatchOutput, QueryBatch, QueryOp, ServeConfig, ServeEngine};
 use neargraph::testkit::serve_sim::{latencies_sorted, percentile, run_clients, ClientPlan, SimQuery};
@@ -156,6 +160,24 @@ struct ChaosRun {
     counters: FaultCounters,
 }
 
+/// One PR 10 kernel point: the scalar per-pair leaf filter vs the
+/// K-lane SoA kernel on identical leaf visits for one metric family,
+/// with the emission (ids and weight bits, in order) asserted equal.
+struct KernelRun {
+    metric: &'static str,
+    pairs: u64,
+    scalar_ns_per_pair: f64,
+    lane_ns_per_pair: f64,
+}
+
+/// One PR 10 self-join strategy point: batched vs dual-tree at one
+/// thread count, both asserted onto the single-thread edge fingerprint.
+struct DualRun {
+    threads: usize,
+    batched_s: f64,
+    dual_s: f64,
+}
+
 /// The PR 9 mutation point: the mutable epoch backend under rolling
 /// churn, with the insert-allocation regression guard and the warmed
 /// epoch read path's allocation gate.
@@ -208,7 +230,7 @@ fn main() {
         args.get_f64("target-degree").unwrap_or_else(|e| fail(&e)).unwrap_or(30.0);
     let knn_k = args.get_usize("knn").unwrap_or_else(|e| fail(&e)).unwrap_or(0);
     let threads_arg = args.get_or("threads", "1,2,4").to_string();
-    let out_path = args.get_or("out", "BENCH_pr9.json").to_string();
+    let out_path = args.get_or("out", "BENCH_pr10.json").to_string();
     args.reject_unknown().unwrap_or_else(|e| fail(&e));
     let thread_list: Vec<usize> = threads_arg
         .split(',')
@@ -335,6 +357,62 @@ fn main() {
             flat_dists,
             steady_state_allocs,
         }
+    };
+
+    // ------------------------------------------------------------------
+    // Kernel section (PR 10): scalar `Metric::leaf_filter` vs the K-lane
+    // SoA kernels (`Metric::leaf_filter_with`) on identical leaf visits,
+    // one point per metric family. Conformance rides the measurement:
+    // emission order, ids and weight bits must match exactly.
+    // ------------------------------------------------------------------
+    let kernel_runs = {
+        let mut krng = Rng::new(9);
+        let dense = pts.slice(0, n.min(1_024));
+        let codes = neargraph::data::synthetic::hamming_clusters(&mut krng, 1_024, 256, 16, 0.05);
+        let strs = neargraph::data::synthetic::reads(&mut krng, 256, 48, 8, 0.08);
+        vec![
+            bench_kernel("euclidean", &dense, &Euclidean, eps, 8),
+            bench_kernel("hamming", &codes, &Hamming, 28.0, 8),
+            bench_kernel("levenshtein", &strs, &Levenshtein, 8.0, 1),
+        ]
+    };
+
+    // ------------------------------------------------------------------
+    // Self-join strategy (PR 10): batched queries vs the dual-tree
+    // traversal on the same tree, per thread count. Both paths must
+    // reproduce the single-thread direct edge fingerprint exactly.
+    // ------------------------------------------------------------------
+    let dual_runs = {
+        let tree = CoverTree::build(&pts, &Euclidean, &params);
+        let mut out: Vec<DualRun> = Vec::new();
+        for &threads in &thread_list {
+            let pool = Pool::new(threads);
+            let mut batched = HashSink::default();
+            let t0 = Instant::now();
+            tree.eps_self_join_par(&Euclidean, eps, &pool, |a, b, d| batched.accept(a, b, d));
+            let batched_s = t0.elapsed().as_secs_f64();
+            let mut dual = HashSink::default();
+            let t1 = Instant::now();
+            tree.eps_self_join_dual_par(&Euclidean, eps, &pool, |a, b, d| dual.accept(a, b, d));
+            let dual_s = t1.elapsed().as_secs_f64();
+            eprintln!(
+                "[perf_driver] selfjoin threads={threads}: batched {batched_s:.3}s vs \
+                 dual {dual_s:.3}s, {} edges",
+                dual.edges
+            );
+            assert_eq!(
+                (batched.edges, batched.hash),
+                (base.edges, base.edge_hash),
+                "batched self-join drifted at threads={threads}"
+            );
+            assert_eq!(
+                (dual.edges, dual.hash),
+                (base.edges, base.edge_hash),
+                "dual-tree self-join drifted at threads={threads}"
+            );
+            out.push(DualRun { threads, batched_s, dual_s });
+        }
+        out
     };
 
     // ------------------------------------------------------------------
@@ -719,6 +797,8 @@ fn main() {
         &facade,
         &knn_runs,
         &traversal,
+        &kernel_runs,
+        &dual_runs,
         &serve_runs,
         serve_steady_allocs,
         &chaos,
@@ -778,6 +858,73 @@ fn lint_waiver_parity() {
     );
 }
 
+/// Time the scalar leaf filter vs the K-lane kernel over the same leaf
+/// visits (`active` queries against a sweep of reference rows `j`),
+/// asserting identical emission first. `reps` scales the timed loop so
+/// cheap metrics still measure above clock noise.
+fn bench_kernel<P: PointSet, M: Metric<P>>(
+    name: &'static str,
+    pts: &P,
+    metric: &M,
+    eps: f64,
+    reps: usize,
+) -> KernelRun {
+    let n = pts.len();
+    let active: Vec<(u32, f64)> = (0..n.min(256) as u32).map(|q| (q, 0.0)).collect();
+    let js: Vec<usize> = (0..n).step_by(7).take(64).collect();
+
+    // Conformance gate: ids and weight bits, in emission order.
+    let mut tile = SoaTile::new();
+    let mut scalar_hits: Vec<(u32, u64)> = Vec::new();
+    let mut lane_hits: Vec<(u32, u64)> = Vec::new();
+    for &j in &js {
+        metric.leaf_filter(pts, &active, pts, j, eps, &mut |q, d| {
+            scalar_hits.push((q, d.to_bits()))
+        });
+        metric.leaf_filter_with(pts, &active, pts, j, eps, &mut tile, &mut |q, d| {
+            lane_hits.push((q, d.to_bits()))
+        });
+    }
+    assert_eq!(
+        scalar_hits, lane_hits,
+        "{name}: K-lane kernel diverged from the scalar leaf filter"
+    );
+
+    let pairs = (active.len() * js.len() * reps) as u64;
+    let mut guard = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for &j in &js {
+            metric.leaf_filter(pts, &active, pts, j, eps, &mut |q, _| {
+                guard = guard.wrapping_add(q as u64)
+            });
+        }
+    }
+    let scalar_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for _ in 0..reps {
+        for &j in &js {
+            metric.leaf_filter_with(pts, &active, pts, j, eps, &mut tile, &mut |q, _| {
+                guard = guard.wrapping_add(q as u64)
+            });
+        }
+    }
+    let lane_s = t1.elapsed().as_secs_f64();
+    std::hint::black_box(guard);
+    let run = KernelRun {
+        metric: name,
+        pairs,
+        scalar_ns_per_pair: scalar_s * 1e9 / pairs.max(1) as f64,
+        lane_ns_per_pair: lane_s * 1e9 / pairs.max(1) as f64,
+    };
+    eprintln!(
+        "[perf_driver] kernel {name}: scalar {:.2} ns/pair vs K-lane {:.2} ns/pair \
+         ({pairs} pairs)",
+        run.scalar_ns_per_pair, run.lane_ns_per_pair
+    );
+    run
+}
+
 fn summarize(runs: &[Run]) -> (f64, &Run) {
     let seq_total = runs[0].build_s + runs[0].join_s;
     let best = runs
@@ -797,6 +944,8 @@ fn render_json(
     facade: &[FacadeRun],
     knn_runs: &[KnnRun],
     traversal: &TraversalRun,
+    kernel_runs: &[KernelRun],
+    dual_runs: &[DualRun],
     serve_runs: &[ServeRun],
     serve_steady_allocs: u64,
     chaos: &ChaosRun,
@@ -806,7 +955,7 @@ fn render_json(
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"bench\": \"pr9_mutable_epochs\",\n");
+    s.push_str("  \"bench\": \"pr10_kernel_dualtree\",\n");
     s.push_str(&format!("  \"dataset\": \"{dataset}\",\n"));
     s.push_str(&format!("  \"n\": {n},\n  \"dim\": {dim},\n  \"eps\": {eps},\n"));
     s.push_str(&format!(
@@ -849,6 +998,33 @@ fn render_json(
             r.edges,
             r.edge_hash,
             if i + 1 < facade.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"kernel_runs\": [\n");
+    for (i, r) in kernel_runs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"metric\": \"{}\", \"pairs\": {}, \"scalar_ns_per_pair\": {:.3}, \
+             \"lane_ns_per_pair\": {:.3}, \"lane_speedup\": {:.4}}}{}\n",
+            r.metric,
+            r.pairs,
+            r.scalar_ns_per_pair,
+            r.lane_ns_per_pair,
+            r.scalar_ns_per_pair / r.lane_ns_per_pair.max(1e-12),
+            if i + 1 < kernel_runs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"dualtree_runs\": [\n");
+    for (i, r) in dual_runs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"threads\": {}, \"batched_s\": {:.6}, \"dual_s\": {:.6}, \
+             \"dual_speedup\": {:.4}}}{}\n",
+            r.threads,
+            r.batched_s,
+            r.dual_s,
+            r.batched_s / r.dual_s.max(1e-12),
+            if i + 1 < dual_runs.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n");

@@ -62,6 +62,7 @@ HOT_FILES = {
     "covertree/scratch.rs",
     "covertree/knn.rs",
     "covertree/epoch.rs",
+    "covertree/dualtree.rs",
     "serve/engine.rs",
 }
 HOT_PREFIXES = ("metric/",)

@@ -206,7 +206,7 @@ fn main() {
         let counted = Counted::new(Euclidean);
         let (_n, s) = timed(|| {
             let mut n = 0u64;
-            tree.eps_self_join_dual(&counted, eps, |_, _| n += 1);
+            tree.eps_self_join_dual(&counted, eps, |_, _, _| n += 1);
             n
         });
         t6.row(&["dual-tree".into(), format!("{s:.3}"), counted.count().to_string()]);

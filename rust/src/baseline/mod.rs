@@ -65,6 +65,9 @@ pub fn brute_force_tiled(
     assert!(tile > 0);
     let n = pts.len();
     let mut edges = EdgeList::new();
+    // One distance buffer reused across every block — the `_into` tile
+    // contract keeps the sweep allocation-free once it's warm.
+    let mut t: Vec<f32> = Vec::new();
     let mut bi = 0;
     while bi < n {
         let qi_hi = (bi + tile).min(n);
@@ -73,7 +76,7 @@ pub fn brute_force_tiled(
         while bj < n {
             let rj_hi = (bj + tile).min(n);
             let r = pts.slice(bj, rj_hi);
-            let t = backend.euclidean_tile(&q, &r);
+            backend.euclidean_tile_into(&q, &r, &mut t);
             for (qi, rj) in tile_neighbors(&t, q.len(), r.len(), eps) {
                 let u = (bi + qi) as u32;
                 let v = (bj + rj) as u32;

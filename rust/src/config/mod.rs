@@ -96,6 +96,11 @@ pub struct ExperimentConfig {
     /// [`crate::index::NearIndex`] backend instead of the distributed
     /// driver (config key `index`, CLI `--index`).
     pub index: Option<IndexKind>,
+    /// Route cover-tree self-joins through the dual-tree traversal instead
+    /// of the batched per-point queries (config key `index.dualtree`, CLI
+    /// `--dualtree`). Same edge set and weight bits; backends other than
+    /// the cover tree ignore it.
+    pub dualtree: bool,
     pub run: RunConfig,
     /// Daemon settings consumed by the `serve` subcommand (config section
     /// `[serve]`, keys `addr`, `coalesce_us`, `max_batch`, `queue_cap`,
@@ -115,6 +120,7 @@ impl Default for ExperimentConfig {
             target_degree: 30.0,
             seed: 42,
             index: None,
+            dualtree: false,
             run: RunConfig::default(),
             serve: ServeConfig::default(),
         }
@@ -142,6 +148,10 @@ impl ExperimentConfig {
                     let s = value.as_str().ok_or("index must be a string")?;
                     cfg.index =
                         Some(IndexKind::parse(s).ok_or_else(|| format!("unknown index {s:?}"))?);
+                }
+                "index.dualtree" => {
+                    cfg.dualtree =
+                        value.as_bool().ok_or("index.dualtree must be a boolean")?
                 }
                 "run.ranks" => cfg.run.ranks = value.as_usize().ok_or("ranks must be an integer")?,
                 "run.threads" => {
@@ -477,6 +487,22 @@ ghost = "all"
             let text = format!("index = \"{}\"\n", kind.name());
             assert_eq!(ExperimentConfig::from_toml(&text).unwrap().index, Some(kind));
         }
+    }
+
+    #[test]
+    fn dualtree_key_parses_and_defaults_off() {
+        let cfg =
+            ExperimentConfig::from_toml("index = \"cover-tree\"\n[index]\ndualtree = true\n")
+                .unwrap();
+        assert_eq!(cfg.index, Some(IndexKind::CoverTree));
+        assert!(cfg.dualtree);
+        let cfg = ExperimentConfig::from_toml("[index]\ndualtree = false\n").unwrap();
+        assert!(!cfg.dualtree);
+        let cfg = ExperimentConfig::from_toml("dataset = \"deep\"\n").unwrap();
+        assert!(!cfg.dualtree);
+        // Type and typo errors are loud.
+        assert!(ExperimentConfig::from_toml("[index]\ndualtree = 1\n").is_err());
+        assert!(ExperimentConfig::from_toml("[index]\nbogus = true\n").is_err());
     }
 
     #[test]

@@ -4,88 +4,259 @@
 //! `d(p_u, p_v) > r_u + r_v + ε`.
 //!
 //! For self-joins this does strictly less work than querying every point
-//! against the tree whenever sibling subtrees are far apart; the
-//! `ablation` bench compares it against the batched self-join. The
-//! distributed algorithms keep the paper-faithful batched form as their
-//! default; `eps_self_join_dual` is opt-in.
+//! against the tree whenever sibling subtrees are far apart (the
+//! compressed-cover-tree analysis: pruning subtree *pairs* is where exact
+//! general-metric search wins); the `ablation` bench and the perf driver
+//! compare it against the batched self-join. The distributed algorithms
+//! keep the paper-faithful batched form as their default;
+//! `--dualtree` / `index.dualtree` opts the self-join path in through the
+//! facade ([`crate::index::NearIndex::eps_self_join`]).
+//!
+//! The traversal runs over the level-ordered [`FlatTree`] (contiguous
+//! child ranges, no arena chase) with the pair stack owned by
+//! [`QueryScratch`], so steady-state joins allocate nothing. Emitted
+//! weights are [`Metric::dist`] values — bit-identical to the batched
+//! self-join's weights, which the conformance gates
+//! (`tests/index_equivalence.rs`) pin edge-for-edge.
+//!
+//! The parallel form is deterministic by construction: a sequential
+//! breadth-first expansion (with pruning) grows the pair frontier on the
+//! calling thread until there is enough independent work, then each
+//! frontier seed's subtree-pair traversal runs on the pool and the
+//! per-seed buffers are replayed in frontier order. The emitted sequence
+//! therefore depends only on the tree and ε, never on the thread count.
 
-use super::CoverTree;
+use super::{CoverTree, FlatTree, QueryScratch};
 use crate::metric::Metric;
 use crate::points::PointSet;
 
 impl<P: PointSet> CoverTree<P> {
+    /// One dual-traversal step on the node pair `(u, v)`: emit (leaf-leaf
+    /// within ε), prune (`d > r_u + r_v + ε`), or push the expanded child
+    /// pairs. Shared by the sequential DFS and the parallel frontier
+    /// expansion, so both visit the identical pair tree.
+    #[inline]
+    fn dual_step<M, F, G>(
+        &self,
+        flat: &FlatTree,
+        metric: &M,
+        eps: f64,
+        u: u32,
+        v: u32,
+        push: &mut G,
+        emit: &mut F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+        G: FnMut(u32, u32),
+    {
+        if u == v {
+            // Self pair: every unordered child pair, including (a, a) —
+            // the recursion that eventually pairs points *within* the
+            // subtree.
+            if flat.is_leaf(u) {
+                return; // one point, no pair
+            }
+            let ch = flat.children(u);
+            let (start, end) = (ch.start, ch.end);
+            for a in start..end {
+                for b in a..end {
+                    push(a, b);
+                }
+            }
+            return;
+        }
+        let (pu, pv) = (flat.point(u), flat.point(v));
+        let (ru, rv) = (flat.radius(u), flat.radius(v));
+        let d = metric.dist(self.points().point(pu as usize), self.points().point(pv as usize));
+        // Prune: no descendant pair can be within eps.
+        if d > ru + rv + eps {
+            return;
+        }
+        match (flat.is_leaf(u), flat.is_leaf(v)) {
+            (true, true) => {
+                if d <= eps {
+                    let ga = self.global_id(pu as usize);
+                    let gb = self.global_id(pv as usize);
+                    if ga < gb {
+                        emit(ga, gb, d);
+                    } else if gb < ga {
+                        emit(gb, ga, d);
+                    }
+                    // ga == gb impossible: distinct leaves have distinct
+                    // local points, and ids are unique per point.
+                }
+            }
+            (false, true) => {
+                for c in flat.children(u) {
+                    push(c, v);
+                }
+            }
+            (true, false) => {
+                for c in flat.children(v) {
+                    push(u, c);
+                }
+            }
+            (false, false) => {
+                // Expand the larger-radius side (standard dual-tree
+                // heuristic: shrinks the pruning bound fastest).
+                if ru >= rv {
+                    for c in flat.children(u) {
+                        push(c, v);
+                    }
+                } else {
+                    for c in flat.children(v) {
+                        push(u, c);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Depth-first dual traversal of the whole subtree-pair tree rooted at
+    /// `seed`, over a caller-owned pair stack.
+    fn dual_traverse_from<M, F>(
+        &self,
+        flat: &FlatTree,
+        metric: &M,
+        eps: f64,
+        seed: (u32, u32),
+        stack: &mut Vec<(u32, u32)>,
+        emit: &mut F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+    {
+        stack.clear();
+        stack.push(seed);
+        while let Some((u, v)) = stack.pop() {
+            self.dual_step(flat, metric, eps, u, v, &mut |a, b| stack.push((a, b)), emit);
+        }
+    }
+
     /// All unordered pairs of tree points within `eps`, via dual-tree
-    /// traversal. Emits `(gid_a, gid_b)` with `gid_a < gid_b` exactly
-    /// once per pair.
-    pub fn eps_self_join_dual<M, F>(&self, metric: &M, eps: f64, mut emit: F)
+    /// traversal. Emits `(gid_a, gid_b, d)` with `gid_a < gid_b` exactly
+    /// once per pair; `d` is exactly [`Metric::dist`] for the pair — the
+    /// same weight bits as [`CoverTree::eps_self_join`]. Convenience
+    /// wrapper over [`CoverTree::eps_self_join_dual_with`] with a
+    /// throwaway scratch.
+    pub fn eps_self_join_dual<M, F>(&self, metric: &M, eps: f64, emit: F)
     where
         M: Metric<P>,
-        F: FnMut(u32, u32),
+        F: FnMut(u32, u32, f64),
+    {
+        let mut scratch = QueryScratch::new();
+        self.eps_self_join_dual_with(metric, eps, &mut scratch, emit);
+    }
+
+    /// [`CoverTree::eps_self_join_dual`] with caller-owned traversal state
+    /// (the pair stack lives in `scratch` and keeps its capacity across
+    /// calls).
+    pub fn eps_self_join_dual_with<M, F>(
+        &self,
+        metric: &M,
+        eps: f64,
+        scratch: &mut QueryScratch,
+        mut emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
     {
         if self.is_empty() {
             return;
         }
-        // Work stack of node pairs (u ≤ v by construction for self pairs).
-        let mut stack: Vec<(u32, u32)> = vec![(self.root(), self.root())];
-        while let Some((u, v)) = stack.pop() {
-            let (nu, nv) = (self.node(u), self.node(v));
-            if u == v {
-                // Self pair: all unordered child pairs + leaf handling.
-                if nu.is_leaf() {
-                    continue; // one point, no pair
-                }
-                let children = self.node_children(u);
-                for (i, &a) in children.iter().enumerate() {
-                    for &b in &children[i..] {
-                        stack.push((a, b));
-                    }
-                }
-                continue;
+        let flat = self.flat();
+        let seed = (flat.root(), flat.root());
+        self.dual_traverse_from(flat, metric, eps, seed, &mut scratch.pairs, &mut emit);
+    }
+
+    /// Parallel [`CoverTree::eps_self_join_dual`] on `pool` — the
+    /// identical weighted edge set, with an emission order that depends
+    /// only on the tree and ε (never the thread count ≥ 2; a one-thread
+    /// pool reproduces the sequential traversal verbatim). Convenience
+    /// wrapper over [`CoverTree::eps_self_join_dual_par_with`].
+    pub fn eps_self_join_dual_par<M, F>(
+        &self,
+        metric: &M,
+        eps: f64,
+        pool: &crate::util::Pool,
+        emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+    {
+        let mut scratch = QueryScratch::new();
+        self.eps_self_join_dual_par_with(metric, eps, pool, &mut scratch, emit);
+    }
+
+    /// [`CoverTree::eps_self_join_dual_par`] with a caller-owned scratch
+    /// for the sequential fall-through. The parallel route expands the
+    /// pair frontier breadth-first (with pruning; terminal leaf-leaf
+    /// pairs emit immediately) on the calling thread until it holds at
+    /// least `threads × 4` independent seeds, then runs each seed's
+    /// subtree-pair traversal on the pool in bounded waves and replays
+    /// the per-seed buffers in frontier order.
+    pub fn eps_self_join_dual_par_with<M, F>(
+        &self,
+        metric: &M,
+        eps: f64,
+        pool: &crate::util::Pool,
+        scratch: &mut QueryScratch,
+        mut emit: F,
+    ) where
+        M: Metric<P>,
+        F: FnMut(u32, u32, f64),
+    {
+        if pool.threads() <= 1 {
+            return self.eps_self_join_dual_with(metric, eps, scratch, emit);
+        }
+        if self.is_empty() {
+            return;
+        }
+        let flat = self.flat();
+        let target = pool.threads() * 4;
+        // Frontier expansion runs once per join over node pairs, not per
+        // point pair; the two ping-pong buffers are amortized across the
+        // whole traversal the way the batch path's wave buffers are.
+        // lint: allow(no-alloc-hot-path) reason="one frontier buffer per parallel join, amortized over the whole pair traversal"
+        let mut frontier: Vec<(u32, u32)> = vec![(flat.root(), flat.root())];
+        // lint: allow(no-alloc-hot-path) reason="one frontier buffer per parallel join, amortized over the whole pair traversal"
+        let mut next: Vec<(u32, u32)> = Vec::new();
+        while !frontier.is_empty() && frontier.len() < target {
+            next.clear();
+            for i in 0..frontier.len() {
+                let (u, v) = frontier[i];
+                self.dual_step(flat, metric, eps, u, v, &mut |a, b| next.push((a, b)), &mut emit);
             }
-            let pu = self.points().point(nu.point as usize);
-            let pv = self.points().point(nv.point as usize);
-            let d = metric.dist(pu, pv);
-            // Prune: no descendant pair can be within eps.
-            if d > nu.radius + nv.radius + eps {
-                continue;
-            }
-            match (nu.is_leaf(), nv.is_leaf()) {
-                (true, true) => {
-                    if d <= eps {
-                        let (ga, gb) = (self.global_id(nu.point as usize), self.global_id(nv.point as usize));
-                        if ga < gb {
-                            emit(ga, gb);
-                        } else if gb < ga {
-                            emit(gb, ga);
-                        }
-                        // ga == gb impossible: distinct leaves have distinct
-                        // local points, and ids are unique per point.
-                    }
-                }
-                (false, true) => {
-                    for &c in self.node_children(u) {
-                        stack.push((c, v));
-                    }
-                }
-                (true, false) => {
-                    for &c in self.node_children(v) {
-                        stack.push((u, c));
-                    }
-                }
-                (false, false) => {
-                    // Expand the larger-radius side (standard dual-tree
-                    // heuristic: shrinks the pruning bound fastest).
-                    if nu.radius >= nv.radius {
-                        for &c in self.node_children(u) {
-                            stack.push((c, v));
-                        }
-                    } else {
-                        for &c in self.node_children(v) {
-                            stack.push((u, c));
-                        }
-                    }
+            std::mem::swap(&mut frontier, &mut next);
+        }
+        // Each expansion step strictly deepens every surviving pair, so
+        // the loop terminates: either the frontier reaches the target
+        // width or the whole join finished sequentially above.
+        let wave = pool.threads() * 4;
+        let mut first = 0usize;
+        while first < frontier.len() {
+            let count = wave.min(frontier.len() - first);
+            let base = first;
+            let parts = pool.run_indexed_with(
+                count,
+                |_| QueryScratch::new(),
+                |sc, w| {
+                    let seed = frontier[base + w];
+                    // lint: allow(no-alloc-hot-path) reason="per-seed result buffer of one parallel wave, amortized over the seed's subtree pairs"
+                    let mut out: Vec<(u32, u32, f64)> = Vec::new();
+                    self.dual_traverse_from(flat, metric, eps, seed, &mut sc.pairs, &mut |a, b, d| {
+                        out.push((a, b, d));
+                    });
+                    out
+                },
+            );
+            for part in parts {
+                for (a, b, d) in part {
+                    emit(a, b, d);
                 }
             }
+            first += count;
         }
     }
 }
@@ -96,19 +267,31 @@ mod tests {
     use crate::covertree::BuildParams;
     use crate::metric::{Counted, Euclidean, Hamming, Levenshtein, Metric};
     use crate::points::{DenseMatrix, PointSet};
-    use crate::util::Rng;
+    use crate::util::{Pool, Rng};
 
     fn check_matches_batched<P: PointSet, M: Metric<P>>(pts: &P, metric: &M, eps: f64, leaf: usize) {
         let tree = CoverTree::build(pts, metric, &BuildParams { leaf_size: leaf, root: 0 });
-        let mut dual: Vec<(u32, u32)> = Vec::new();
-        tree.eps_self_join_dual(metric, eps, |a, b| dual.push((a, b)));
+        let mut dual: Vec<(u32, u32, u64)> = Vec::new();
+        tree.eps_self_join_dual(metric, eps, |a, b, d| dual.push((a, b, d.to_bits())));
         dual.sort_unstable();
         dual.dedup();
-        let mut batched: Vec<(u32, u32)> = Vec::new();
-        tree.eps_self_join(metric, eps, |a, b, _d| batched.push((a, b)));
+        let mut batched: Vec<(u32, u32, u64)> = Vec::new();
+        tree.eps_self_join(metric, eps, |a, b, d| batched.push((a, b, d.to_bits())));
         batched.sort_unstable();
         batched.dedup();
-        assert_eq!(dual, batched, "eps={eps} leaf={leaf}");
+        assert_eq!(dual, batched, "eps={eps} leaf={leaf} (edges AND weight bits)");
+        // The parallel dual join reproduces the same weighted edge set at
+        // every pool size.
+        for threads in [1usize, 3, 8] {
+            let pool = Pool::new(threads);
+            let mut par: Vec<(u32, u32, u64)> = Vec::new();
+            tree.eps_self_join_dual_par(metric, eps, &pool, |a, b, d| {
+                par.push((a, b, d.to_bits()));
+            });
+            par.sort_unstable();
+            par.dedup();
+            assert_eq!(par, batched, "eps={eps} leaf={leaf} threads={threads}");
+        }
     }
 
     #[test]
@@ -155,7 +338,7 @@ mod tests {
 
         let dual_counted = Counted::new(Euclidean);
         let mut n_dual = 0u64;
-        tree.eps_self_join_dual(&dual_counted, eps, |_, _| n_dual += 1);
+        tree.eps_self_join_dual(&dual_counted, eps, |_, _, _| n_dual += 1);
 
         let batch_counted = Counted::new(Euclidean);
         let mut n_batch = 0u64;
@@ -171,16 +354,62 @@ mod tests {
     }
 
     #[test]
+    fn dual_scratch_reuse_is_stable_across_calls() {
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(145), 180, 3, 4, 0.2);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
+        let mut scratch = QueryScratch::new();
+        for round in 0..3 {
+            for eps in [0.1, 0.4] {
+                let mut fresh: Vec<(u32, u32, u64)> = Vec::new();
+                tree.eps_self_join_dual(&Euclidean, eps, |a, b, d| {
+                    fresh.push((a, b, d.to_bits()));
+                });
+                let mut reused: Vec<(u32, u32, u64)> = Vec::new();
+                tree.eps_self_join_dual_with(&Euclidean, eps, &mut scratch, |a, b, d| {
+                    reused.push((a, b, d.to_bits()));
+                });
+                assert_eq!(reused, fresh, "round={round} eps={eps} (order-sensitive)");
+            }
+        }
+    }
+
+    #[test]
+    fn dual_par_emission_is_thread_count_independent() {
+        // The parallel join's emitted SEQUENCE (not just the sorted set)
+        // must be identical at every thread count ≥ 2: frontier expansion
+        // and replay order are decided on the calling thread.
+        let pts = crate::data::synthetic::gaussian_mixture(&mut Rng::new(146), 300, 4, 5, 0.12);
+        let tree = CoverTree::build(&pts, &Euclidean, &BuildParams { leaf_size: 4, root: 0 });
+        let eps = 0.3;
+        let mut want: Vec<(u32, u32, u64)> = Vec::new();
+        let pool2 = Pool::new(2);
+        tree.eps_self_join_dual_par(&Euclidean, eps, &pool2, |a, b, d| {
+            want.push((a, b, d.to_bits()));
+        });
+        for threads in [3usize, 4, 8] {
+            let pool = Pool::new(threads);
+            let mut got: Vec<(u32, u32, u64)> = Vec::new();
+            tree.eps_self_join_dual_par(&Euclidean, eps, &pool, |a, b, d| {
+                got.push((a, b, d.to_bits()));
+            });
+            assert_eq!(got, want, "threads={threads} (sequence-sensitive)");
+        }
+    }
+
+    #[test]
     fn dual_empty_and_singleton() {
         let empty = DenseMatrix::new(2);
         let t = CoverTree::build(&empty, &Euclidean, &BuildParams::default());
         let mut called = false;
-        t.eps_self_join_dual(&Euclidean, 1.0, |_, _| called = true);
+        t.eps_self_join_dual(&Euclidean, 1.0, |_, _, _| called = true);
+        let pool = Pool::new(4);
+        t.eps_self_join_dual_par(&Euclidean, 1.0, &pool, |_, _, _| called = true);
         assert!(!called);
 
         let one = DenseMatrix::from_flat(2, vec![1.0, 1.0]);
         let t1 = CoverTree::build(&one, &Euclidean, &BuildParams::default());
-        t1.eps_self_join_dual(&Euclidean, 1.0, |_, _| called = true);
+        t1.eps_self_join_dual(&Euclidean, 1.0, |_, _, _| called = true);
+        t1.eps_self_join_dual_par(&Euclidean, 1.0, &pool, |_, _, _| called = true);
         assert!(!called);
     }
 }

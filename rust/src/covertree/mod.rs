@@ -91,10 +91,10 @@ pub struct CoverTree<P: PointSet> {
     /// deterministically at the end of every build ([`FlatTree`]).
     ///
     /// The legacy arena is deliberately kept alongside (≈2× topology
-    /// memory): the dual-tree join, the invariant checker and the
-    /// `*_legacy` comparators still walk it. If that cost ever matters at
-    /// scale, gate the arena behind a feature and port those three
-    /// consumers to the flat layout.
+    /// memory): the invariant checker and the `*_legacy` comparators
+    /// still walk it (the dual-tree join moved to the flat layout). If
+    /// that cost ever matters at scale, gate the arena behind a feature
+    /// and port those two consumers to the flat layout.
     flat: layout::FlatTree,
 }
 

@@ -160,6 +160,7 @@ impl<P: PointSet> CoverTree<P> {
         // Arena of (query index, distance to current node's point).
         let arena = &mut scratch.arena;
         let stack = &mut scratch.range_stack;
+        let tile = &mut scratch.tile;
         arena.clear();
         stack.clear();
         let root_leaf = flat.is_leaf(root);
@@ -201,14 +202,17 @@ impl<P: PointSet> CoverTree<P> {
                             }
                         }
                     } else {
-                        // Leaf-block filter: dense metrics route this
-                        // through the norm-cached tile kernel.
-                        metric.leaf_filter(
+                        // Leaf-block filter through the scratch-owned SoA
+                        // tile: metrics with a K-lane kernel gather the
+                        // block into lanes; the rest fall through to the
+                        // scalar walk. Same decisions, same distance bits.
+                        metric.leaf_filter_with(
                             queries,
                             &arena[start..end],
                             self.points(),
                             vp as usize,
                             eps,
+                            tile,
                             &mut |q, d| emit(q as usize, gid, d),
                         );
                     }

@@ -96,6 +96,11 @@ pub struct QueryScratch {
     pub(crate) best: BinaryHeap<Cand>,
     /// k-NN frontier min-heap.
     pub(crate) frontier: BinaryHeap<Frontier>,
+    /// SoA gather tile + DP rows for the batched K-lane leaf kernels
+    /// ([`crate::metric::kernel`]); lazily grown like every other field.
+    pub(crate) tile: crate::metric::SoaTile,
+    /// Dual-tree node-pair stack (`eps_self_join_dual_with`).
+    pub(crate) pairs: Vec<(u32, u32)>,
 }
 
 impl QueryScratch {
@@ -152,5 +157,6 @@ mod tests {
         assert_eq!(s.arena.capacity(), 0);
         assert_eq!(s.range_stack.capacity(), 0);
         assert_eq!(s.nodes.capacity(), 0);
+        assert_eq!(s.pairs.capacity(), 0);
     }
 }

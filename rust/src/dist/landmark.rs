@@ -189,9 +189,15 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     let mut scratch = QueryScratch::new();
     // One tree per rank covers every intra-rank pair (same or different
     // cell) in a single self-join.
-    tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
-        edges.accept(a, b, d)
-    });
+    if cfg.dualtree {
+        tree.eps_self_join_dual_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+            edges.accept(a, b, d)
+        });
+    } else {
+        tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+            edges.accept(a, b, d)
+        });
+    }
     comm.charge_child_cpu(pool.drain_cpu());
     if let Some(ck) = ckpt {
         // Best-effort "selfjoin" partial checkpoint: every intra-rank

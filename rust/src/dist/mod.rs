@@ -180,6 +180,11 @@ pub struct RunConfig {
     pub algorithm: Algorithm,
     /// Cover-tree leaf size ζ.
     pub leaf_size: usize,
+    /// Route each rank's intra-block self-join through the dual-tree
+    /// traversal ([`crate::covertree::CoverTree::eps_self_join_dual_par_with`])
+    /// instead of the batched queries. Conformance-gated to the same edge
+    /// set and weight bits, so the run fingerprint is unchanged.
+    pub dualtree: bool,
     /// Number of Voronoi landmarks `m` (0 ⇒ auto: see
     /// [`RunConfig::resolved_centers`]).
     pub num_centers: usize,
@@ -219,6 +224,7 @@ impl Default for RunConfig {
             ranks: 4,
             algorithm: Algorithm::LandmarkColl,
             leaf_size: 8,
+            dualtree: false,
             num_centers: 0,
             centers: CenterStrategy::Random,
             assignment: AssignStrategy::Multiway,

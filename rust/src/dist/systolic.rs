@@ -60,9 +60,15 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
     // inline path; the pooled path keeps one scratch per worker instead).
     let mut scratch = QueryScratch::new();
     if p == 1 {
-        tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
-            edges.accept(a, b, d)
-        });
+        if cfg.dualtree {
+            tree.eps_self_join_dual_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+                edges.accept(a, b, d)
+            });
+        } else {
+            tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+                edges.accept(a, b, d)
+            });
+        }
         comm.charge_child_cpu(pool.drain_cpu());
         save_selfjoin(ckpt, rank, &edges);
         return edges;
@@ -77,9 +83,19 @@ pub(super) fn run<P: PointSet, M: Metric<P>>(
                 if s == 1 {
                     // First transfer window: the block in hand is our own —
                     // run the intra-block self-join.
-                    tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
-                        edges.accept(a, b, d)
-                    });
+                    if cfg.dualtree {
+                        tree.eps_self_join_dual_par_with(
+                            metric,
+                            eps,
+                            &pool,
+                            &mut scratch,
+                            |a, b, d| edges.accept(a, b, d),
+                        );
+                    } else {
+                        tree.eps_self_join_par_with(metric, eps, &pool, &mut scratch, |a, b, d| {
+                            edges.accept(a, b, d)
+                        });
+                    }
                 } else {
                     cross_query(&tree, metric, eps, &visiting, &pool, &mut scratch, &mut edges);
                 }

@@ -94,11 +94,21 @@ pub struct IndexParams {
     /// Compaction policy of the mutable backend
     /// ([`IndexKind::InsertCoverTree`]; the others ignore it).
     pub epoch: EpochParams,
+    /// Route the cover-tree self-join through the dual-tree traversal
+    /// ([`CoverTree::eps_self_join_dual`]) instead of the batched queries.
+    /// Same edge set and weight bits, different pruning strategy; only
+    /// [`IndexKind::CoverTree`] consults it.
+    pub dualtree: bool,
 }
 
 impl Default for IndexParams {
     fn default() -> Self {
-        IndexParams { leaf_size: 8, snn: SnnParams::default(), epoch: EpochParams::default() }
+        IndexParams {
+            leaf_size: 8,
+            snn: SnnParams::default(),
+            epoch: EpochParams::default(),
+            dualtree: false,
+        }
     }
 }
 
@@ -429,6 +439,10 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for BruteForceIndex<P, M> {
 pub struct CoverTreeIndex<P: PointSet, M: Metric<P>> {
     tree: CoverTree<P>,
     metric: M,
+    /// Self-join strategy: `true` routes [`NearIndex::eps_self_join`] (and
+    /// the `_par` form) through the dual-tree traversal. Conformance-gated
+    /// to emit the same edge set and weight bits as the batched join.
+    dualtree: bool,
 }
 
 impl<P: PointSet, M: Metric<P>> CoverTreeIndex<P, M> {
@@ -440,7 +454,14 @@ impl<P: PointSet, M: Metric<P>> CoverTreeIndex<P, M> {
     /// Wrap an already-built tree — the snapshot load path and the tests
     /// that build trees with non-default [`BuildParams`].
     pub fn from_tree(tree: CoverTree<P>, metric: M) -> Self {
-        CoverTreeIndex { tree, metric }
+        CoverTreeIndex { tree, metric, dualtree: false }
+    }
+
+    /// Select the self-join strategy ([`IndexParams::dualtree`]); builder
+    /// form so the snapshot/`from_tree` paths stay untouched.
+    pub fn with_dualtree(mut self, on: bool) -> Self {
+        self.dualtree = on;
+        self
     }
 
     /// Encode the underlying tree as an `NGI-IDX1` snapshot
@@ -457,7 +478,11 @@ impl<P: PointSet, M: Metric<P>> CoverTreeIndex<P, M> {
         bytes: &[u8],
         metric: M,
     ) -> Result<Self, crate::points::WireError> {
-        Ok(CoverTreeIndex { tree: CoverTree::try_from_snapshot_bytes(bytes)?, metric })
+        Ok(CoverTreeIndex {
+            tree: CoverTree::try_from_snapshot_bytes(bytes)?,
+            metric,
+            dualtree: false,
+        })
     }
 }
 
@@ -507,7 +532,11 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for CoverTreeIndex<P, M> {
     }
 
     fn eps_self_join(&self, eps: f64, sink: &mut dyn GraphSink) {
-        self.tree.eps_self_join(&self.metric, eps, |a, b, d| sink.accept(a, b, d));
+        if self.dualtree {
+            self.tree.eps_self_join_dual(&self.metric, eps, |a, b, d| sink.accept(a, b, d));
+        } else {
+            self.tree.eps_self_join(&self.metric, eps, |a, b, d| sink.accept(a, b, d));
+        }
     }
 
     fn knn(&self, query: P::Point<'_>, k: usize) -> Vec<(u32, f64)> {
@@ -582,7 +611,13 @@ impl<P: PointSet, M: Metric<P>> NearIndex<P, M> for CoverTreeIndex<P, M> {
     }
 
     fn eps_self_join_par(&self, eps: f64, pool: &Pool, sink: &mut dyn GraphSink) {
-        self.tree.eps_self_join_par(&self.metric, eps, pool, |a, b, d| sink.accept(a, b, d));
+        if self.dualtree {
+            self.tree.eps_self_join_dual_par(&self.metric, eps, pool, |a, b, d| {
+                sink.accept(a, b, d)
+            });
+        } else {
+            self.tree.eps_self_join_par(&self.metric, eps, pool, |a, b, d| sink.accept(a, b, d));
+        }
     }
 }
 
@@ -791,7 +826,7 @@ fn build_impl<P: PointSet, M: Metric<P>>(
                 Some(pool) => CoverTree::build_par(pts, &metric, &build, pool),
                 None => CoverTree::build(pts, &metric, &build),
             };
-            Ok(Box::new(CoverTreeIndex { tree, metric }))
+            Ok(Box::new(CoverTreeIndex::from_tree(tree, metric).with_dualtree(params.dualtree)))
         }
         IndexKind::InsertCoverTree => {
             Ok(Box::new(InsertCoverTreeIndex::build(pts, metric, params)))

@@ -61,12 +61,13 @@ pub const KNOWN_RULES: [&str; 5] = [
 
 /// Files where `no-alloc-hot-path` applies (paths relative to the scan
 /// root), plus prefix-matched directories.
-pub const HOT_FILES: [&str; 6] = [
+pub const HOT_FILES: [&str; 7] = [
     "covertree/query.rs",
     "covertree/layout.rs",
     "covertree/scratch.rs",
     "covertree/knn.rs",
     "covertree/epoch.rs",
+    "covertree/dualtree.rs",
     "serve/engine.rs",
 ];
 pub const HOT_PREFIXES: [&str; 1] = ["metric/"];

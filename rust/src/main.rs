@@ -128,6 +128,9 @@ const USAGE: &str = "usage: neargraph <run|serve|query|datasets|selfcheck|lint> 
                                  across ranks (0 = single-threaded ranks)
     --num-centers <m>            Voronoi landmarks (0 = auto)
     --leaf-size <z>              cover-tree leaf size
+    --dualtree                   route cover-tree self-joins through the
+                                 dual-tree traversal (same edges and
+                                 weight bits; config key index.dualtree)
     --seed <n>                   RNG seed
     --verify                     also run brute force and compare
     --phases                     print the per-rank phase breakdown
@@ -232,6 +235,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         cfg.index =
             Some(IndexKind::parse(k).ok_or_else(|| format!("unknown index kind {k:?}"))?);
     }
+    if args.get_bool("dualtree")? {
+        cfg.dualtree = true;
+    }
+    // The distributed driver joins per-rank trees itself; hand it the
+    // same strategy switch the facade gets.
+    cfg.run.dualtree = cfg.dualtree;
     if let Some(v) = args.get_f64("fault-drop")? {
         cfg.run.faults.get_or_insert_with(FaultPlan::default).drop = v;
     }
@@ -760,7 +769,11 @@ fn run_one<P: PointSet, M: Metric<P>>(
                 kind,
                 pts,
                 metric.clone(),
-                &IndexParams { leaf_size: cfg.run.leaf_size.max(1), ..Default::default() },
+                &IndexParams {
+                    leaf_size: cfg.run.leaf_size.max(1),
+                    dualtree: cfg.dualtree,
+                    ..Default::default()
+                },
                 &pool,
             )
             .map_err(|e| e.to_string())?;
@@ -906,7 +919,11 @@ fn run_knn_one<P: PointSet, M: Metric<P>>(
                 kind,
                 pts,
                 metric.clone(),
-                &IndexParams { leaf_size: cfg.run.leaf_size.max(1), ..Default::default() },
+                &IndexParams {
+                    leaf_size: cfg.run.leaf_size.max(1),
+                    dualtree: cfg.dualtree,
+                    ..Default::default()
+                },
                 &pool,
             )
             .map_err(|e| e.to_string())?;

@@ -30,7 +30,7 @@ pub fn levenshtein(a: &[u8], b: &[u8]) -> usize {
     if a.is_empty() {
         return b.len();
     }
-    // lint: allow(no-alloc-hot-path) reason="DP row allocation; reusable scratch needs a mutable metric API (ROADMAP item 2)"
+    // lint: allow(no-alloc-hot-path) reason="single DP row per scalar dist call; the batched leaf path threads caller scratch through leaf_filter_with instead"
     let mut row: Vec<usize> = (0..=a.len()).collect();
     for (j, &bc) in b.iter().enumerate() {
         let mut prev_diag = row[0];
@@ -52,7 +52,25 @@ pub fn levenshtein(a: &[u8], b: &[u8]) -> usize {
 /// exact distance is required by the cover tree's *pruning bound* (it
 /// compares against `radius + ε`, not ε), so this is an application-level
 /// accelerator rather than a drop-in `Metric`.
+// lint: cold
 pub fn levenshtein_bounded(a: &[u8], b: &[u8], k: usize) -> Option<usize> {
+    let mut prev = Vec::new();
+    let mut cur = Vec::new();
+    levenshtein_bounded_with(a, b, k, &mut prev, &mut cur)
+}
+
+/// [`levenshtein_bounded`] with caller-owned DP rows: the two band rows
+/// are `clear()`ed and `resize()`d in place, so a caller screening many
+/// candidate pairs (the Levenshtein leaf kernel in
+/// [`crate::metric::kernel`]) performs zero steady-state allocations once
+/// the rows have warmed to the widest band it uses.
+pub fn levenshtein_bounded_with(
+    a: &[u8],
+    b: &[u8],
+    k: usize,
+    prev: &mut Vec<usize>,
+    cur: &mut Vec<usize>,
+) -> Option<usize> {
     // Length difference is a lower bound on the distance.
     let (a, b) = if a.len() > b.len() { (b, a) } else { (a, b) };
     if b.len() - a.len() > k {
@@ -66,10 +84,10 @@ pub fn levenshtein_bounded(a: &[u8], b: &[u8], k: usize) -> Option<usize> {
     let inf = usize::MAX / 2;
     // DP over a (2k+1)-wide band around the diagonal.
     let width = 2 * k + 1;
-    // lint: allow(no-alloc-hot-path) reason="banded DP rows; reusable scratch needs a mutable metric API (ROADMAP item 2)"
-    let mut prev = vec![inf; width];
-    // lint: allow(no-alloc-hot-path) reason="banded DP rows; reusable scratch needs a mutable metric API (ROADMAP item 2)"
-    let mut cur = vec![inf; width];
+    prev.clear();
+    prev.resize(width, inf);
+    cur.clear();
+    cur.resize(width, inf);
     // Band index w corresponds to j = i + (w as isize - k as isize).
     for (w, slot) in prev.iter_mut().enumerate() {
         // Row i = 0: dp[0][j] = j for j in band.
@@ -97,7 +115,7 @@ pub fn levenshtein_bounded(a: &[u8], b: &[u8], k: usize) -> Option<usize> {
             let ins = if w > 0 { cur[w - 1] + 1 } else { inf };
             cur[w] = sub.min(del).min(ins);
         }
-        std::mem::swap(&mut prev, &mut cur);
+        std::mem::swap(prev, cur);
         if prev.iter().all(|&v| v > k) {
             return None; // the whole band exceeded k — early exit
         }
@@ -118,6 +136,23 @@ impl Metric<StringSet> for Levenshtein {
 
     fn name(&self) -> &'static str {
         "levenshtein"
+    }
+
+    // Batched leaf blocks run the banded DP with band k = ⌊ε⌋ over the
+    // tile's caller-owned rows; within the band the DP value equals the
+    // full Levenshtein DP, so decisions and weight bits are identical to
+    // the scalar default.
+    fn leaf_filter_with(
+        &self,
+        queries: &StringSet,
+        active: &[(u32, f64)],
+        refs: &StringSet,
+        j: usize,
+        eps: f64,
+        tile: &mut super::kernel::SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        super::kernel::DistKernel::leaf_filter_tile(self, queries, active, refs, j, eps, tile, yes);
     }
 }
 

@@ -19,18 +19,49 @@ use crate::points::{DenseMatrix, HammingCodes, PointSet};
 use crate::util::fmax32;
 
 /// A backend that can produce dense distance tiles.
+///
+/// The required methods write into a **caller-owned** buffer
+/// (`clear()` + `resize()`, capacity retained across calls), so a loop
+/// computing many tiles — the brute-force baseline's blocked sweep, the
+/// SNN block queries — performs zero steady-state allocations. The
+/// allocating `*_tile` forms are provided wrappers for one-shot callers
+/// (tests, benches, the self-check).
 pub trait TileBackend: Send + Sync {
-    /// Row-major `|q| × |r|` Euclidean distance tile.
-    fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32>;
+    /// Row-major `|q| × |r|` Euclidean distance tile into `out`.
+    fn euclidean_tile_into(&self, q: &DenseMatrix, r: &DenseMatrix, out: &mut Vec<f32>);
 
-    /// Row-major `|q| × |r|` Hamming distance tile.
-    fn hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Vec<f32>;
+    /// Row-major `|q| × |r|` Hamming distance tile into `out`.
+    fn hamming_tile_into(&self, q: &HammingCodes, r: &HammingCodes, out: &mut Vec<f32>);
 
-    /// Row-major `|q| × |r|` Manhattan (l1) distance tile.
-    fn manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32>;
+    /// Row-major `|q| × |r|` Manhattan (l1) distance tile into `out`.
+    fn manhattan_tile_into(&self, q: &DenseMatrix, r: &DenseMatrix, out: &mut Vec<f32>);
 
     /// Identifier for bench tables.
     fn name(&self) -> &'static str;
+
+    /// One-shot allocating form of [`TileBackend::euclidean_tile_into`].
+    // lint: cold
+    fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.euclidean_tile_into(q, r, &mut out);
+        out
+    }
+
+    /// One-shot allocating form of [`TileBackend::hamming_tile_into`].
+    // lint: cold
+    fn hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.hamming_tile_into(q, r, &mut out);
+        out
+    }
+
+    /// One-shot allocating form of [`TileBackend::manhattan_tile_into`].
+    // lint: cold
+    fn manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.manhattan_tile_into(q, r, &mut out);
+        out
+    }
 }
 
 /// Pure-Rust tile backend.
@@ -44,11 +75,11 @@ impl TileBackend for NativeBackend {
     // ε to guard-band against. The norm cache accelerates the paths that
     // decide `d ≤ ε` (see [`euclidean_leaf_filter`]) or already use the
     // matmul form (SNN, PJRT).
-    fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+    fn euclidean_tile_into(&self, q: &DenseMatrix, r: &DenseMatrix, out: &mut Vec<f32>) {
         assert_eq!(q.dim(), r.dim(), "dimension mismatch");
         let (nq, nr) = (q.len(), r.len());
-        // lint: allow(no-alloc-hot-path) reason="tile kernel returns one owned buffer per tile; the per-distance loop writes in place"
-        let mut out = vec![0.0f32; nq * nr];
+        out.clear();
+        out.resize(nq * nr, 0.0);
         for i in 0..nq {
             let qi = q.row(i);
             let row = &mut out[i * nr..(i + 1) * nr];
@@ -56,14 +87,13 @@ impl TileBackend for NativeBackend {
                 *slot = fmax32(super::euclidean::sq_dist(qi, r.row(j)), 0.0).sqrt();
             }
         }
-        out
     }
 
-    fn hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Vec<f32> {
+    fn hamming_tile_into(&self, q: &HammingCodes, r: &HammingCodes, out: &mut Vec<f32>) {
         assert_eq!(q.bits(), r.bits(), "code width mismatch");
         let (nq, nr) = (q.len(), r.len());
-        // lint: allow(no-alloc-hot-path) reason="tile kernel returns one owned buffer per tile; the per-distance loop writes in place"
-        let mut out = vec![0.0f32; nq * nr];
+        out.clear();
+        out.resize(nq * nr, 0.0);
         for i in 0..nq {
             let qi = q.code(i);
             let row = &mut out[i * nr..(i + 1) * nr];
@@ -71,14 +101,13 @@ impl TileBackend for NativeBackend {
                 *slot = super::hamming::hamming_words(qi, r.code(j)) as f32;
             }
         }
-        out
     }
 
-    fn manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
+    fn manhattan_tile_into(&self, q: &DenseMatrix, r: &DenseMatrix, out: &mut Vec<f32>) {
         assert_eq!(q.dim(), r.dim(), "dimension mismatch");
         let (nq, nr) = (q.len(), r.len());
-        // lint: allow(no-alloc-hot-path) reason="tile kernel returns one owned buffer per tile; the per-distance loop writes in place"
-        let mut out = vec![0.0f32; nq * nr];
+        out.clear();
+        out.resize(nq * nr, 0.0);
         for i in 0..nq {
             let qi = q.row(i);
             let row = &mut out[i * nr..(i + 1) * nr];
@@ -88,7 +117,6 @@ impl TileBackend for NativeBackend {
                 *slot = qi.iter().zip(r.row(j)).map(|(x, y)| (x - y).abs()).sum();
             }
         }
-        out
     }
 
     fn name(&self) -> &'static str {

@@ -86,6 +86,22 @@ impl Metric<DenseMatrix> for Euclidean {
     ) {
         super::engine::euclidean_leaf_filter(queries, active, refs, j, eps, yes);
     }
+
+    // With caller scratch available, gather the block into SoA lanes and
+    // run the K-lane kernel — same guard-band + exact-recheck policy, so
+    // decisions and weight bits match the scalar path and `leaf_filter`.
+    fn leaf_filter_with(
+        &self,
+        queries: &DenseMatrix,
+        active: &[(u32, f64)],
+        refs: &DenseMatrix,
+        j: usize,
+        eps: f64,
+        tile: &mut super::kernel::SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        super::kernel::DistKernel::leaf_filter_tile(self, queries, active, refs, j, eps, tile, yes);
+    }
 }
 
 #[cfg(test)]

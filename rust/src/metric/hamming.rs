@@ -27,6 +27,22 @@ impl Metric<HammingCodes> for Hamming {
     fn name(&self) -> &'static str {
         "hamming"
     }
+
+    // Batched leaf blocks go through the u64-word K-lane popcount kernel;
+    // the lane sums are exactly `hamming_words`, so decisions and weight
+    // bits are identical to the scalar default.
+    fn leaf_filter_with(
+        &self,
+        queries: &HammingCodes,
+        active: &[(u32, f64)],
+        refs: &HammingCodes,
+        j: usize,
+        eps: f64,
+        tile: &mut super::kernel::SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        super::kernel::DistKernel::leaf_filter_tile(self, queries, active, refs, j, eps, tile, yes);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,404 @@
+//! Batched K-lane SoA distance kernels — the unified leaf-block layer.
+//!
+//! The tree traversals reduce every candidate block to the same shape: one
+//! reference point `refs[j]` against a slice of `active` query rows. The
+//! scalar path walks that block through [`super::Metric::dist`] one pair at
+//! a time; the kernels here process it in lane groups of
+//! [`LANES`](crate::points::LANES) (K = 8) candidates gathered into a
+//! cache-line-aligned structure-of-arrays tile, with an inner loop written
+//! so LLVM's autovectorizer maps the eight independent lanes onto SIMD
+//! registers — no simd crates, the zero-dependency rule stands.
+//!
+//! Every kernel is **decision- and weight-bit-identical** to the scalar
+//! metric it batches:
+//!
+//! * **Euclidean** screens each lane with the norm-cached matmul form
+//!   `‖q‖² + ‖r‖² − 2⟨q,r⟩` and re-decides anything inside the guard band
+//!   around ε² with the exact [`sq_dist`](super::euclidean::sq_dist)
+//!   formula — the same band policy as
+//!   [`euclidean_leaf_filter`](super::engine::euclidean_leaf_filter), so
+//!   accepts always carry the exact scalar distance.
+//! * **Hamming** sums XOR-popcounts over u64-word lanes; integer addition
+//!   is order-independent, so the lane-transposed sum is *exactly*
+//!   [`hamming_words`](super::hamming::hamming_words).
+//! * **Levenshtein** runs the banded DP
+//!   ([`levenshtein_bounded_with`](super::edit::levenshtein_bounded_with))
+//!   with band k = ⌊ε⌋: for integer distances `d ≤ ε ⇔ d ≤ ⌊ε⌋`, and the
+//!   banded value equals the full DP whenever it is ≤ k — the same
+//!   "cheap screen, exact value on accept" contract as the guard band.
+//!
+//! All tile state lives in a caller-owned [`SoaTile`] (embedded in
+//! `QueryScratch`), so the steady state performs no allocation.
+
+use super::edit::levenshtein_bounded_with;
+use super::{Euclidean, Hamming, Levenshtein};
+use crate::points::{DenseMatrix, F32Lanes, HammingCodes, PointSet, StringSet, U64Lanes, LANES};
+
+/// Caller-owned scratch for the K-lane kernels: the gathered SoA lane
+/// buffers plus the banded-DP rows. Embedded in the traversal's
+/// `QueryScratch`; every buffer is lazily grown (`clear` + `resize`) and
+/// reused, so construction is free and the steady state allocation-free.
+#[derive(Debug, Default)]
+pub struct SoaTile {
+    /// Lane-major gathered f32 rows: `f32_lanes[c].0[l]` is coordinate `c`
+    /// of the `l`-th candidate in the current lane group.
+    pub(crate) f32_lanes: Vec<F32Lanes>,
+    /// Lane-major gathered u64 code words (Hamming).
+    pub(crate) u64_lanes: Vec<U64Lanes>,
+    /// Banded-DP rows for the Levenshtein kernel.
+    pub(crate) dp_prev: Vec<usize>,
+    pub(crate) dp_cur: Vec<usize>,
+}
+
+impl SoaTile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A metric with a batched leaf-block kernel.
+///
+/// `leaf_filter_tile` must make *identical* accept/reject decisions to the
+/// scalar walk (`Metric::dist(queries[q], refs[j]) ≤ eps`) **and report the
+/// identical distance bits**, emitting accepted entries in `active` order.
+/// [`Metric::leaf_filter_with`](super::Metric::leaf_filter_with) routes
+/// here for the metrics that implement it.
+pub trait DistKernel<P: PointSet> {
+    fn leaf_filter_tile(
+        &self,
+        queries: &P,
+        active: &[(u32, f64)],
+        refs: &P,
+        j: usize,
+        eps: f64,
+        tile: &mut SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    );
+}
+
+impl DistKernel<DenseMatrix> for Euclidean {
+    // Lane-transposed matmul-form screen + exact recheck. The screen's dot
+    // product accumulates per-lane sequentially over coordinates (vs the
+    // 8-wide chunked order of `euclidean::dot`); both orders are plain
+    // f32 sums of `dim` products, so the shared guard band
+    // `(‖q‖² + ‖r‖² + 1)·(dim + 8)·1e-6` (≥ 20× margin, see
+    // `engine::euclidean_leaf_filter`) covers either accumulation — and
+    // every survivor is re-decided with the exact scalar formula, which is
+    // what makes decisions and weights bit-identical on all paths.
+    fn leaf_filter_tile(
+        &self,
+        queries: &DenseMatrix,
+        active: &[(u32, f64)],
+        refs: &DenseMatrix,
+        j: usize,
+        eps: f64,
+        tile: &mut SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        let rj = refs.row(j);
+        let nj = refs.sq_norm(j);
+        let eps2 = eps * eps;
+        let dim_slack = (queries.dim() + 8) as f64 * 1e-6;
+        for group in active.chunks(LANES) {
+            let mut ids = [0u32; LANES];
+            for (slot, &(q, _)) in ids.iter_mut().zip(group) {
+                *slot = q;
+            }
+            queries.gather_lanes(&ids[..group.len()], &mut tile.f32_lanes);
+            // K-lane inner loop: one reference coordinate broadcast against
+            // eight gathered lanes per step — the shape the autovectorizer
+            // turns into a fused broadcast-multiply-accumulate.
+            let mut acc = [0.0f32; LANES];
+            for (lanes, &rc) in tile.f32_lanes.iter().zip(rj) {
+                for l in 0..LANES {
+                    acc[l] += lanes.0[l] * rc;
+                }
+            }
+            for (l, &(q, _)) in group.iter().enumerate() {
+                let ni = queries.sq_norm(q as usize);
+                let d2 = (ni + nj - 2.0 * acc[l]) as f64;
+                let band = (ni + nj + 1.0) as f64 * dim_slack;
+                if d2 >= eps2 + band {
+                    continue; // clear reject — the only case decided by the lanes
+                }
+                let d = super::euclidean::sq_dist(queries.row(q as usize), rj).sqrt() as f64;
+                if d <= eps {
+                    yes(q, d);
+                }
+            }
+        }
+    }
+}
+
+impl DistKernel<HammingCodes> for Hamming {
+    // Popcount over u64-word lanes. The per-lane sum visits the same words
+    // as `hamming_words` and integer addition commutes, so the result is
+    // exactly the scalar distance — no guard band needed.
+    fn leaf_filter_tile(
+        &self,
+        queries: &HammingCodes,
+        active: &[(u32, f64)],
+        refs: &HammingCodes,
+        j: usize,
+        eps: f64,
+        tile: &mut SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        let rj = refs.code(j);
+        for group in active.chunks(LANES) {
+            let mut ids = [0u32; LANES];
+            for (slot, &(q, _)) in ids.iter_mut().zip(group) {
+                *slot = q;
+            }
+            queries.gather_lanes(&ids[..group.len()], &mut tile.u64_lanes);
+            let mut acc = [0u32; LANES];
+            for (lanes, &rw) in tile.u64_lanes.iter().zip(rj) {
+                for l in 0..LANES {
+                    acc[l] += (lanes.0[l] ^ rw).count_ones();
+                }
+            }
+            for (l, &(q, _)) in group.iter().enumerate() {
+                let d = acc[l] as f64;
+                if d <= eps {
+                    yes(q, d);
+                }
+            }
+        }
+    }
+}
+
+impl DistKernel<StringSet> for Levenshtein {
+    // Banded DP with caller-owned rows. Distances are integers, so
+    // `d ≤ ε ⇔ d ≤ ⌊ε⌋`; the band is additionally clamped to
+    // `max(|a|,|b|)` (an upper bound on any edit distance) so a huge ε
+    // cannot inflate the band width past the strings themselves. Within
+    // the band the DP value equals the full Levenshtein DP, so accepted
+    // weights are bit-identical to `Levenshtein::dist`.
+    fn leaf_filter_tile(
+        &self,
+        queries: &StringSet,
+        active: &[(u32, f64)],
+        refs: &StringSet,
+        j: usize,
+        eps: f64,
+        tile: &mut SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        if eps < 0.0 {
+            return; // no non-negative distance can pass
+        }
+        let rj = refs.get(j);
+        let k_eps = eps.floor() as usize; // saturating cast: huge ε ⇒ huge k, then clamped
+        for &(q, _) in active {
+            let qa = queries.get(q as usize);
+            let k = k_eps.min(qa.len().max(rj.len()));
+            if let Some(d) = levenshtein_bounded_with(qa, rj, k, &mut tile.dp_prev, &mut tile.dp_cur)
+            {
+                yes(q, d as f64);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric::Metric;
+    use crate::util::Rng;
+
+    /// The scalar reference: walk the block through `Metric::dist`, keeping
+    /// emission order and exact weight bits.
+    fn scalar_walk<P: PointSet, M: Metric<P>>(
+        metric: &M,
+        queries: &P,
+        active: &[(u32, f64)],
+        refs: &P,
+        j: usize,
+        eps: f64,
+    ) -> Vec<(u32, u64)> {
+        let mut out = Vec::new();
+        for &(q, _) in active {
+            let d = metric.dist(queries.point(q as usize), refs.point(j));
+            if d <= eps {
+                out.push((q, d.to_bits()));
+            }
+        }
+        out
+    }
+
+    fn kernel_walk<P: PointSet, M: DistKernel<P>>(
+        metric: &M,
+        queries: &P,
+        active: &[(u32, f64)],
+        refs: &P,
+        j: usize,
+        eps: f64,
+        tile: &mut SoaTile,
+    ) -> Vec<(u32, u64)> {
+        let mut out = Vec::new();
+        metric.leaf_filter_tile(queries, active, refs, j, eps, tile, &mut |q, d| {
+            out.push((q, d.to_bits()));
+        });
+        out
+    }
+
+    /// Active lists that exercise full lane groups, the ragged tail
+    /// (n % K ≠ 0, including n < K), and duplicate candidate ids.
+    fn active_lists(n: usize) -> Vec<Vec<(u32, f64)>> {
+        let all: Vec<(u32, f64)> = (0..n as u32).map(|q| (q, 0.0)).collect();
+        let ragged: Vec<(u32, f64)> = (0..(n as u32).min(LANES as u32 + 3)).map(|q| (q, 0.0)).collect();
+        let tiny: Vec<(u32, f64)> = (0..3.min(n) as u32).map(|q| (q, 0.0)).collect();
+        let mut dups: Vec<(u32, f64)> = all.clone();
+        dups.extend_from_slice(&tiny); // repeated ids in one block
+        vec![all, ragged, tiny, dups, Vec::new()]
+    }
+
+    #[test]
+    fn euclidean_kernel_matches_scalar_bits() {
+        let mut rng = Rng::new(310);
+        let mut tile = SoaTile::new();
+        for (dim, scale, off) in [(3usize, 1.0f32, 0.0f32), (17, 100.0, 500.0), (64, 0.05, 0.0)] {
+            let mut pts = DenseMatrix::new(dim);
+            for _ in 0..37 {
+                let row: Vec<f32> = (0..dim).map(|_| rng.normal_f32() * scale + off).collect();
+                pts.push(&row);
+            }
+            let dup = pts.row(5).to_vec();
+            pts.push(&dup); // exact duplicate point → d = 0 boundary
+            for eps in [0.0, 0.4 * scale as f64, 2.0 * scale as f64] {
+                for j in [0usize, 5, 37] {
+                    for active in active_lists(pts.len()) {
+                        let want = scalar_walk(&Euclidean, &pts, &active, &pts, j, eps);
+                        let got = kernel_walk(&Euclidean, &pts, &active, &pts, j, eps, &mut tile);
+                        assert_eq!(got, want, "dim={dim} scale={scale} eps={eps} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn euclidean_kernel_guard_band_boundary() {
+        // Points engineered so d² sits exactly on / next to ε²: the screen
+        // must never flip a decision the exact formula would make.
+        let mut pts = DenseMatrix::new(2);
+        pts.push(&[0.0, 0.0]);
+        pts.push(&[3.0, 4.0]); // d = 5 exactly
+        pts.push(&[3.0, 4.0000005]); // just past
+        pts.push(&[2.9999995, 4.0]); // just inside
+        pts.push(&[0.0, 0.0]); // duplicate of query 0
+        let active: Vec<(u32, f64)> = (0..pts.len() as u32).map(|q| (q, 0.0)).collect();
+        let mut tile = SoaTile::new();
+        for eps in [5.0, 4.999999999, 5.000000001, 0.0] {
+            let want = scalar_walk(&Euclidean, &pts, &active, &pts, 0, eps);
+            let got = kernel_walk(&Euclidean, &pts, &active, &pts, 0, eps, &mut tile);
+            assert_eq!(got, want, "eps={eps}");
+        }
+    }
+
+    #[test]
+    fn hamming_kernel_matches_scalar_bits() {
+        let mut rng = Rng::new(311);
+        let mut tile = SoaTile::new();
+        for bits in [64usize, 100, 256] {
+            let mut codes = HammingCodes::new(bits);
+            for _ in 0..21 {
+                codes.push_bits(&(0..bits).map(|_| rng.bool(0.4)).collect::<Vec<_>>());
+            }
+            let dup: Vec<u64> = codes.code(2).to_vec();
+            codes.push_words(&dup);
+            for eps in [0.0, 3.0, bits as f64 * 0.4, bits as f64] {
+                for j in [0usize, 2, 21] {
+                    for active in active_lists(codes.len()) {
+                        let want = scalar_walk(&Hamming, &codes, &active, &codes, j, eps);
+                        let got = kernel_walk(&Hamming, &codes, &active, &codes, j, eps, &mut tile);
+                        assert_eq!(got, want, "bits={bits} eps={eps} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn levenshtein_kernel_matches_scalar_bits() {
+        let mut rng = Rng::new(312);
+        let mut tile = SoaTile::new();
+        let alphabet = b"ACGT";
+        let mut strs: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..19 {
+            let len = 4 + (rng.next_u64() % 20) as usize;
+            strs.push((0..len).map(|_| alphabet[(rng.next_u64() % 4) as usize]).collect());
+        }
+        strs.push(strs[4].clone()); // duplicate string → d = 0
+        strs.push(Vec::new()); // empty string edge case
+        let set = StringSet::from_strs(&strs);
+        // ε values: 0, fractional (⌊ε⌋ screen), mid, larger than any string
+        // (band-clamp path), and negative (nothing passes).
+        for eps in [0.0, 2.5, 6.0, 1000.0, -1.0] {
+            for j in [0usize, 4, 20] {
+                for active in active_lists(set.len()) {
+                    let want = scalar_walk(&Levenshtein, &set, &active, &set, j, eps);
+                    let got = kernel_walk(&Levenshtein, &set, &active, &set, j, eps, &mut tile);
+                    assert_eq!(got, want, "eps={eps} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_filter_with_routes_through_kernels() {
+        // The Metric-trait entry point must agree with the plain
+        // leaf_filter (which for Euclidean is the engine's matmul filter,
+        // and for the others the scalar default) — same decisions, same
+        // bits, same order.
+        let mut rng = Rng::new(313);
+        let mut pts = DenseMatrix::new(9);
+        for _ in 0..30 {
+            let row: Vec<f32> = (0..9).map(|_| rng.normal_f32()).collect();
+            pts.push(&row);
+        }
+        let active: Vec<(u32, f64)> = (0..pts.len() as u32).map(|q| (q, 0.0)).collect();
+        let mut tile = SoaTile::new();
+        for eps in [0.0, 1.2, 4.0] {
+            for j in [0usize, 17] {
+                let mut a = Vec::new();
+                Euclidean.leaf_filter(&pts, &active, &pts, j, eps, &mut |q, d| {
+                    a.push((q, d.to_bits()));
+                });
+                let mut b = Vec::new();
+                Euclidean.leaf_filter_with(&pts, &active, &pts, j, eps, &mut tile, &mut |q, d| {
+                    b.push((q, d.to_bits()));
+                });
+                assert_eq!(a, b, "eps={eps} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_construction_is_lazy() {
+        let t = SoaTile::new();
+        assert_eq!(t.f32_lanes.capacity(), 0);
+        assert_eq!(t.u64_lanes.capacity(), 0);
+        assert_eq!(t.dp_prev.capacity(), 0);
+        assert_eq!(t.dp_cur.capacity(), 0);
+    }
+
+    #[test]
+    fn gather_lanes_layout_and_padding() {
+        let m = DenseMatrix::from_flat(3, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let mut out = Vec::new();
+        m.gather_lanes(&[2, 0], &mut out);
+        assert_eq!(out.len(), 3);
+        for c in 0..3 {
+            assert_eq!(out[c].0[0], m.row(2)[c]);
+            assert_eq!(out[c].0[1], m.row(0)[c]);
+            for l in 2..LANES {
+                assert_eq!(out[c].0[l], 0.0, "unused lanes zero-filled");
+            }
+        }
+        // Lane groups start cache-line aligned.
+        assert_eq!(std::mem::align_of::<F32Lanes>(), 64);
+        assert_eq!(std::mem::align_of::<U64Lanes>(), 64);
+        assert_eq!(out.as_ptr() as usize % 64, 0);
+    }
+}

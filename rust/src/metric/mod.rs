@@ -12,12 +12,14 @@ mod edit;
 pub mod engine;
 pub mod euclidean;
 pub mod hamming;
+pub mod kernel;
 mod minkowski;
 
 pub use cosine::Cosine;
-pub use edit::{levenshtein_bounded, Levenshtein};
+pub use edit::{levenshtein_bounded, levenshtein_bounded_with, Levenshtein};
 pub use euclidean::Euclidean;
 pub use hamming::Hamming;
+pub use kernel::{DistKernel, SoaTile};
 pub use minkowski::{Chebyshev, Manhattan};
 
 use crate::points::PointSet;
@@ -78,6 +80,25 @@ pub trait Metric<P: PointSet>: Clone + Send + Sync + 'static {
                 yes(q, d);
             }
         }
+    }
+
+    /// [`Metric::leaf_filter`] with a caller-owned [`kernel::SoaTile`]:
+    /// the entry point the batched traversals call, so metrics with a
+    /// K-lane kernel ([`kernel::DistKernel`]) can gather the block into
+    /// SoA lanes without allocating. The default ignores the tile and
+    /// falls through to `leaf_filter`; overrides obey the same contract —
+    /// identical decisions, identical distance bits, `active` order.
+    fn leaf_filter_with(
+        &self,
+        queries: &P,
+        active: &[(u32, f64)],
+        refs: &P,
+        j: usize,
+        eps: f64,
+        _tile: &mut kernel::SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        self.leaf_filter(queries, active, refs, j, eps, yes);
     }
 }
 
@@ -165,6 +186,22 @@ impl<P: PointSet, M: Metric<P>> Metric<P> for Counted<M> {
     ) {
         self.counter.add(active.len() as u64);
         self.inner.leaf_filter(queries, active, refs, j, eps, yes);
+    }
+
+    // Same bulk-count contract for the tile entry point: one logical
+    // evaluation per active entry, then the inner metric's kernel.
+    fn leaf_filter_with(
+        &self,
+        queries: &P,
+        active: &[(u32, f64)],
+        refs: &P,
+        j: usize,
+        eps: f64,
+        tile: &mut kernel::SoaTile,
+        yes: &mut dyn FnMut(u32, f64),
+    ) {
+        self.counter.add(active.len() as u64);
+        self.inner.leaf_filter_with(queries, active, refs, j, eps, tile, yes);
     }
 }
 

@@ -94,6 +94,25 @@ impl DenseMatrix {
     pub fn row_sq_norms(&self) -> Vec<f32> {
         self.norms.clone()
     }
+
+    /// Gather up to [`LANES`](super::LANES) rows into the lane-major
+    /// (coordinate-major, lane-minor) SoA layout the K-lane kernels
+    /// consume: after the call, `out[c].0[l] == self.row(idx[l])[c]`.
+    /// Unused lanes (`idx.len() < LANES`) are zero-filled — the kernels
+    /// never emit from them, so the padding value is never observed.
+    /// `out` is caller-owned scratch; its capacity warms up to `dim` once
+    /// and the steady state performs no allocation.
+    #[inline]
+    pub fn gather_lanes(&self, idx: &[u32], out: &mut Vec<super::F32Lanes>) {
+        debug_assert!(idx.len() <= super::LANES);
+        out.clear();
+        out.resize(self.dim, super::F32Lanes::default());
+        for (l, &i) in idx.iter().enumerate() {
+            for (lanes, &x) in out.iter_mut().zip(self.row(i as usize)) {
+                lanes.0[l] = x;
+            }
+        }
+    }
 }
 
 impl PointSet for DenseMatrix {

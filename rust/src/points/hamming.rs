@@ -68,6 +68,23 @@ impl HammingCodes {
         self.code(i).iter().map(|w| w.count_ones()).sum()
     }
 
+    /// Gather up to [`LANES`](super::LANES) codes into the lane-major
+    /// (word-major, lane-minor) SoA layout of the K-lane popcount kernel:
+    /// after the call, `out[w].0[l] == self.code(idx[l])[w]`. Unused lanes
+    /// are zero-filled and never emitted from. `out` is caller-owned
+    /// scratch; steady state performs no allocation.
+    #[inline]
+    pub fn gather_lanes(&self, idx: &[u32], out: &mut Vec<super::U64Lanes>) {
+        debug_assert!(idx.len() <= super::LANES);
+        out.clear();
+        out.resize(self.words_per_point, super::U64Lanes::default());
+        for (l, &i) in idx.iter().enumerate() {
+            for (lanes, &w) in out.iter_mut().zip(self.code(i as usize)) {
+                lanes.0[l] = w;
+            }
+        }
+    }
+
     /// Unpack code `i` into ±0/1 f32s — the encoding the dense tile engine
     /// (L1 Pallas kernel) consumes.
     pub fn unpack_f32(&self, i: usize) -> Vec<f32> {

@@ -93,6 +93,25 @@ pub trait PointSet: Clone + Send + Sync + 'static {
     fn payload_bytes(&self) -> u64;
 }
 
+/// Number of interleaved candidates in one SoA lane group — the K of the
+/// K-lane distance kernels in [`crate::metric::kernel`]. Eight f32 lanes
+/// fill one AVX2 register; eight u64 popcount lanes fill one cache line.
+pub const LANES: usize = 8;
+
+/// One coordinate's eight f32 lanes, padded to a cache line so every lane
+/// group in a gathered tile starts 64-byte aligned (the K-lane inner loops
+/// load each group as one unit; alignment keeps those loads from
+/// straddling lines). The padding doubles the gather buffer — fine for a
+/// tile that lives in L1 and is bounded by the point dimension.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C, align(64))]
+pub struct F32Lanes(pub [f32; LANES]);
+
+/// One code word's eight u64 lanes — exactly one 64-byte cache line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[repr(C, align(64))]
+pub struct U64Lanes(pub [u64; LANES]);
+
 /// Little-endian framing helpers shared by the serializers.
 pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());

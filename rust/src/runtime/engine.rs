@@ -328,16 +328,20 @@ impl PjrtEngine {
 }
 
 impl TileBackend for PjrtEngine {
-    fn euclidean_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
-        self.try_euclidean_tile(q, r).expect("PJRT euclidean tile failed")
+    // The PJRT path already allocates per tile inside the XLA runtime
+    // (literals, device buffers); the `_into` contract is satisfied by
+    // moving the result into the caller's buffer so downstream reuse
+    // still works uniformly across backends.
+    fn euclidean_tile_into(&self, q: &DenseMatrix, r: &DenseMatrix, out: &mut Vec<f32>) {
+        *out = self.try_euclidean_tile(q, r).expect("PJRT euclidean tile failed");
     }
 
-    fn hamming_tile(&self, q: &HammingCodes, r: &HammingCodes) -> Vec<f32> {
-        self.try_hamming_tile(q, r).expect("PJRT hamming tile failed")
+    fn hamming_tile_into(&self, q: &HammingCodes, r: &HammingCodes, out: &mut Vec<f32>) {
+        *out = self.try_hamming_tile(q, r).expect("PJRT hamming tile failed");
     }
 
-    fn manhattan_tile(&self, q: &DenseMatrix, r: &DenseMatrix) -> Vec<f32> {
-        self.try_manhattan_tile(q, r).expect("PJRT manhattan tile failed")
+    fn manhattan_tile_into(&self, q: &DenseMatrix, r: &DenseMatrix, out: &mut Vec<f32>) {
+        *out = self.try_manhattan_tile(q, r).expect("PJRT manhattan tile failed");
     }
 
     fn name(&self) -> &'static str {

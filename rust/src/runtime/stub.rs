@@ -58,15 +58,15 @@ impl PjrtEngine {
 }
 
 impl TileBackend for PjrtEngine {
-    fn euclidean_tile(&self, _q: &DenseMatrix, _r: &DenseMatrix) -> Vec<f32> {
+    fn euclidean_tile_into(&self, _q: &DenseMatrix, _r: &DenseMatrix, _out: &mut Vec<f32>) {
         unreachable!("{}", STUB_MSG)
     }
 
-    fn hamming_tile(&self, _q: &HammingCodes, _r: &HammingCodes) -> Vec<f32> {
+    fn hamming_tile_into(&self, _q: &HammingCodes, _r: &HammingCodes, _out: &mut Vec<f32>) {
         unreachable!("{}", STUB_MSG)
     }
 
-    fn manhattan_tile(&self, _q: &DenseMatrix, _r: &DenseMatrix) -> Vec<f32> {
+    fn manhattan_tile_into(&self, _q: &DenseMatrix, _r: &DenseMatrix, _out: &mut Vec<f32>) {
         unreachable!("{}", STUB_MSG)
     }
 

@@ -86,6 +86,85 @@ fn levenshtein_backends_match_and_snn_is_rejected() {
     ));
 }
 
+/// Collects canonically-oriented `(u, v, weight_bits)` triples — the
+/// bit-exact comparison form the tolerance-based graph assert can't give.
+#[derive(Default)]
+struct BitSink(Vec<(u32, u32, u64)>);
+
+impl neargraph::graph::GraphSink for BitSink {
+    fn accept(&mut self, u: u32, v: u32, w: f64) {
+        if u != v {
+            self.0.push((u.min(v), u.max(v), w.to_bits()));
+        }
+    }
+}
+
+/// The dual-tree conformance gate: `index.dualtree` must emit exactly the
+/// batched self-join's edge set — weight bits included — on both the
+/// sequential and the pooled facade paths at every pool size.
+fn dual_sweep<P, M>(pts: &P, metric: M, eps: f64, what: &str)
+where
+    P: PointSet,
+    M: Metric<P>,
+{
+    let batched =
+        build_index(IndexKind::CoverTree, pts, metric.clone(), &IndexParams::default())
+            .unwrap_or_else(|e| panic!("{what}: batched build failed: {e}"));
+    let dual = build_index(
+        IndexKind::CoverTree,
+        pts,
+        metric.clone(),
+        &IndexParams { dualtree: true, ..Default::default() },
+    )
+    .unwrap_or_else(|e| panic!("{what}: dualtree build failed: {e}"));
+
+    let mut want = BitSink::default();
+    batched.eps_self_join(eps, &mut want);
+    want.0.sort_unstable();
+    want.0.dedup();
+
+    let mut got = BitSink::default();
+    dual.eps_self_join(eps, &mut got);
+    got.0.sort_unstable();
+    got.0.dedup();
+    assert_eq!(got.0, want.0, "{what}: sequential dual-tree edge set + weight bits");
+
+    for threads in POOL_SIZES {
+        let pool = Pool::new(threads);
+        let mut got = BitSink::default();
+        dual.eps_self_join_par(eps, &pool, &mut got);
+        got.0.sort_unstable();
+        got.0.dedup();
+        assert_eq!(
+            got.0, want.0,
+            "{what}/threads={threads}: parallel dual-tree edge set + weight bits"
+        );
+    }
+}
+
+#[test]
+fn dualtree_self_join_bit_equal_dense() {
+    let pts = scenario::dense_clusters(7011, 220);
+    for eps in [0.1, 0.35] {
+        dual_sweep(&pts, Euclidean, eps, "dense/dual");
+    }
+    let dups = scenario::dense_duplicates(7012, 90, 60);
+    dual_sweep(&dups, Euclidean, 0.15, "dense+dups/dual");
+    dual_sweep(&dups, Euclidean, 0.0, "dense+dups/dual eps=0");
+}
+
+#[test]
+fn dualtree_self_join_bit_equal_hamming_and_levenshtein() {
+    let codes = scenario::hamming_codes(7013, 180);
+    for eps in [10.0, 28.0] {
+        dual_sweep(&codes, Hamming, eps, "hamming/dual");
+    }
+    let reads = scenario::string_pool(7014, 100);
+    for eps in [2.0, 5.0] {
+        dual_sweep(&reads, Levenshtein, eps, "levenshtein/dual");
+    }
+}
+
 #[test]
 fn eps_batch_equivalent_on_external_queries() {
     // Batch queries against a foreign query set (not the self-join path).

@@ -7,6 +7,9 @@
 //!   partition), so bit-equality is anchored to a *valid* structure, not
 //!   just a reproducible one;
 //! * the parallel ε self-join must emit the **identical** edge set;
+//! * the dual-tree self-join (sequential and parallel) must emit the
+//!   identical edge set and weight bits as the batched join, and the
+//!   parallel form must be thread-count-independent;
 //!
 //! on all three metric families (dense Euclidean, bit-packed Hamming,
 //! Levenshtein over strings), including duplicate-heavy inputs. Datasets
@@ -53,7 +56,27 @@ where
             seq_edges, par_edges,
             "{what}: self-join edges differ at threads={threads} leaf={leaf_size}"
         );
+
+        // Dual-tree conformance: same edge set and weight bits as the
+        // batched join on both the sequential and the pooled traversal.
+        let mut dual_edges: Vec<(u32, u32, u64)> = Vec::new();
+        par.eps_self_join_dual_par(metric, eps, &pool, |a, b, d| {
+            dual_edges.push((a, b, d.to_bits()))
+        });
+        dual_edges.sort_unstable();
+        dual_edges.dedup();
+        assert_eq!(
+            seq_edges, dual_edges,
+            "{what}: dual-tree join differs at threads={threads} leaf={leaf_size}"
+        );
     }
+
+    // Sequential dual-tree against the batched reference once per dataset.
+    let mut dual_seq: Vec<(u32, u32, u64)> = Vec::new();
+    seq.eps_self_join_dual(metric, eps, |a, b, d| dual_seq.push((a, b, d.to_bits())));
+    dual_seq.sort_unstable();
+    dual_seq.dedup();
+    assert_eq!(seq_edges, dual_seq, "{what}: sequential dual-tree join differs");
 }
 
 #[test]
